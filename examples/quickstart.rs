@@ -1,0 +1,59 @@
+//! Quickstart: the library in ~60 lines.
+//!
+//! Quantizes a weight tensor with each of the paper's four data types at
+//! 4-bit / block-64, reports round-trip error and bits/parameter, then
+//! shows the paper's central trade-off on raw quantization error.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (no artifacts needed — this exercises the pure-Rust quant core).
+
+use kbitscale::quant::codebook::DataType;
+use kbitscale::quant::{bits_per_param, blockwise, QuantSpec};
+use kbitscale::util::rng::Rng;
+
+fn main() {
+    // A synthetic "weight matrix": near-normal with a few outliers, the
+    // shape real transformer projections have.
+    let mut rng = Rng::new(42);
+    let mut w = vec![0.0f32; 64 * 256];
+    rng.fill_normal(&mut w, 0.02);
+    for i in 0..8 {
+        w[i * 1000] *= 20.0; // emergent-outlier-style heavy entries
+    }
+
+    println!("quantizing a 64x256 weight with each data type (4-bit, block 64):\n");
+    println!("{:<10} {:>12} {:>12}", "dtype", "rms error", "bits/param");
+    for dtype in DataType::ALL {
+        let spec = QuantSpec::new(dtype, 4, Some(64));
+        let rms = blockwise::rms_error(&w, &spec);
+        println!("{:<10} {:>12.6} {:>12.2}", dtype.name(), rms, bits_per_param(&spec));
+    }
+
+    println!("\nblock size sweep (4-bit fp) — small blocks confine the outliers:\n");
+    println!("{:<12} {:>12} {:>12}", "block", "rms error", "bits/param");
+    for block in [None, Some(1024), Some(256), Some(64), Some(16)] {
+        let spec = QuantSpec::new(DataType::Fp, 4, block);
+        let label = block.map(|b| b.to_string()).unwrap_or_else(|| "tensor".into());
+        println!(
+            "{:<12} {:>12.6} {:>12.2}",
+            label,
+            blockwise::rms_error(&w, &spec),
+            bits_per_param(&spec)
+        );
+    }
+
+    println!("\nprecision sweep (fp, block 64) — the bit-level trade-off:\n");
+    println!("{:<8} {:>12} {:>12}", "bits", "rms error", "bits/param");
+    for bits in [8usize, 6, 5, 4, 3] {
+        let spec = QuantSpec::new(DataType::Fp, bits, Some(64));
+        println!(
+            "{:<8} {:>12.6} {:>12.2}",
+            bits,
+            blockwise::rms_error(&w, &spec),
+            bits_per_param(&spec)
+        );
+    }
+    println!("\nError halves per bit while storage shrinks linearly — the");
+    println!("accuracy-vs-bits race behind the paper's 4-bit optimum. Run the");
+    println!("`scaling_laws` example for the full model-level version.");
+}

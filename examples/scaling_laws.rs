@@ -1,0 +1,90 @@
+//! End-to-end driver: the full system on a real (small) workload.
+//!
+//! This is the repo's E2E validation (DESIGN.md, EXPERIMENTS.md §E2E):
+//!
+//! 1. generate the synthetic corpus,
+//! 2. **train** a family of transformers (t0..t2 by default) by driving
+//!    the AOT fused-Adam executable from Rust, logging the loss curve,
+//! 3. **quantize** each checkpoint at k ∈ {3, 4, 8, 16},
+//! 4. **evaluate** perplexity + the four zero-shot tasks through the AOT
+//!    forward executable,
+//! 5. fit bit-level scaling curves and report which precision wins at
+//!    matched total-bits budgets (the paper's Figure 1 question).
+//!
+//! Run: `make artifacts && cargo run --release --example scaling_laws`
+//! Append `-- full` for tiers t0..t3 and all four headline families.
+
+use kbitscale::bench_support::BenchEnv;
+use kbitscale::coordinator::GridBuilder;
+use kbitscale::report::figures::bit_curves;
+use kbitscale::scaling::{best_curve_at, win_counts};
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "full");
+    let env = BenchEnv::open()?;
+
+    let families: Vec<&'static str> =
+        if full { vec!["optlike", "pythialike", "gpt2like", "bloomlike"] } else { vec!["gpt2like"] };
+    let tiers: Vec<String> = if full {
+        kbitscale::bench_support::default_tiers()
+    } else {
+        ["t0", "t1", "t2"].iter().map(|s| s.to_string()).collect()
+    };
+
+    println!("== e2e: train → quantize → evaluate → scaling law ==");
+    println!("families: {families:?}, tiers: {tiers:?}\n");
+
+    // Steps 1-2: training (skipped for checkpoints that already exist).
+    env.ensure_trained(&families, &tiers)?;
+
+    // Steps 3-4: the quantization sweep (cached in runs/results.jsonl).
+    let gb = GridBuilder::new(families.clone(), tiers);
+    let cells = gb.bit_scaling(&[3, 4, 8, 16]);
+    let results = env.run_grid_timed("e2e", &cells)?;
+
+    // Step 5: scaling analysis.
+    println!("\nper-cell results:");
+    println!(
+        "{:<12} {:<4} {:>6} {:>9} {:>9} {:>8} {:>12}",
+        "family", "tier", "bits", "ce", "ppl", "zs_mean", "total_bits"
+    );
+    let mut sorted = results.clone();
+    sorted.sort_by(|a, b| {
+        (a.family.clone(), a.tier.clone(), a.bits_per_param.partial_cmp(&b.bits_per_param).unwrap())
+            .partial_cmp(&(b.family.clone(), b.tier.clone(), std::cmp::Ordering::Equal))
+            .unwrap()
+    });
+    for r in &sorted {
+        println!(
+            "{:<12} {:<4} {:>6.2} {:>9.4} {:>9.2} {:>8.3} {:>12.3e}",
+            r.family, r.tier, r.bits_per_param, r.ce, r.ppl, r.zs_mean, r.total_bits
+        );
+    }
+
+    for family in &families {
+        let curves = bit_curves(&results, Some(family));
+        if curves.len() < 2 {
+            continue;
+        }
+        println!(
+            "\n{}",
+            kbitscale::report::ascii_chart(
+                &format!("bit-level scaling — {family} (zero-shot vs total bits)"),
+                "total model bits",
+                "mean zero-shot accuracy",
+                &curves,
+                68,
+                14
+            )
+        );
+        let wins = win_counts(&curves, 30);
+        println!("precision wins across 30 matched bit budgets: {wins:?}");
+        if let Some((best, acc)) = best_curve_at(&curves, 2.0e6) {
+            println!("at a 2M-bit budget the best precision is {best} (acc {acc:.3})");
+        }
+    }
+
+    println!("\nE2E complete. Loss curves are in the training logs above (or");
+    println!("rerun with KBITSCALE_LOG=info); results cached in runs/results.jsonl.");
+    Ok(())
+}

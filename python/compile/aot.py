@@ -1,0 +1,178 @@
+"""AOT compiler: lower every Layer-1/2 graph to HLO text artifacts.
+
+Run via ``make artifacts`` (``python -m compile.aot --out-dir ../artifacts``).
+This is the **only** time Python executes; the Rust coordinator afterwards
+loads the emitted ``*.hlo.txt`` files through the PJRT C API and owns
+training, quantization, and evaluation end to end.
+
+Interchange format is **HLO text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted artifacts:
+
+  fwd_<tier>.hlo.txt     eval_scores graph per model scale
+  train_<tier>.hlo.txt   fused Adam train-step graph per model scale
+  dequant_matmul_u8.hlo.txt       fused Pallas dequant+matmul (uint8 idx)
+  dequant_matmul_packed4.hlo.txt  fused Pallas dequant+matmul (4-bit packed)
+  matmul_f32.hlo.txt              unquantized Pallas matmul baseline
+  manifest.json          shapes / argument order / kernel geometry for Rust
+  codebooks.json         golden codebook vectors for Rust parity tests
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model
+from compile.kernels import codebooks as cbm
+from compile.kernels import dequant_matmul as dmm
+
+# Fixed geometry for the standalone fused-kernel artifacts (E14 latency bench).
+KERNEL_M, KERNEL_K, KERNEL_N = 16, 512, 512
+KERNEL_QBLOCK = 64
+CODEBOOK_PAD = 256  # pad every codebook to 256 entries -> one HLO for all dtypes
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_model_graphs(out_dir: pathlib.Path, tiers) -> list[dict]:
+    entries = []
+    for cfg in tiers:
+        fwd = jax.jit(model.eval_scores(cfg)).lower(*model.eval_example_args(cfg))
+        (out_dir / f"fwd_{cfg.name}.hlo.txt").write_text(to_hlo_text(fwd))
+
+        step = jax.jit(model.train_step(cfg)).lower(*model.train_example_args(cfg))
+        (out_dir / f"train_{cfg.name}.hlo.txt").write_text(to_hlo_text(step))
+
+        acts = jax.jit(model.calibration_acts(cfg)).lower(*model.acts_example_args(cfg))
+        (out_dir / f"acts_{cfg.name}.hlo.txt").write_text(to_hlo_text(acts))
+
+        shapes = model.param_shapes(cfg)
+        entries.append(
+            {
+                "name": cfg.name,
+                "d_model": cfg.d_model,
+                "n_layer": cfg.n_layer,
+                "n_head": cfg.n_head,
+                "d_ff": cfg.d_ff,
+                "vocab": cfg.vocab,
+                "seq": cfg.seq,
+                "batch_train": model.BATCH_TRAIN,
+                "batch_eval": model.BATCH_EVAL,
+                "param_count": model.param_count(cfg),
+                "params": [
+                    {"name": nm, "shape": list(shapes[nm])} for nm in model.PARAM_NAMES
+                ],
+                "quantized_params": list(model.QUANTIZED_PARAMS),
+                "fwd_hlo": f"fwd_{cfg.name}.hlo.txt",
+                "train_hlo": f"train_{cfg.name}.hlo.txt",
+                "acts_hlo": f"acts_{cfg.name}.hlo.txt",
+            }
+        )
+        print(f"  lowered {cfg.name}: {model.param_count(cfg):,} params")
+    return entries
+
+
+def lower_kernels(out_dir: pathlib.Path) -> dict:
+    m, k, n, qb = KERNEL_M, KERNEL_K, KERNEL_N, KERNEL_QBLOCK
+    x = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    wq = jax.ShapeDtypeStruct((k, n), jnp.uint8)
+    wq4 = jax.ShapeDtypeStruct((k // 2, n), jnp.uint8)
+    amax = jax.ShapeDtypeStruct((k // qb, n), jnp.float32)
+    cb = jax.ShapeDtypeStruct((CODEBOOK_PAD,), jnp.float32)
+    w = jax.ShapeDtypeStruct((k, n), jnp.float32)
+
+    lowered = jax.jit(lambda *a: dmm.dequant_matmul_u8(*a, qblock=qb)).lower(x, wq, amax, cb)
+    (out_dir / "dequant_matmul_u8.hlo.txt").write_text(to_hlo_text(lowered))
+
+    lowered = jax.jit(lambda *a: dmm.dequant_matmul_packed4(*a, qblock=qb)).lower(
+        x, wq4, amax, cb
+    )
+    (out_dir / "dequant_matmul_packed4.hlo.txt").write_text(to_hlo_text(lowered))
+
+    lowered = jax.jit(dmm.matmul_f32).lower(x, w)
+    (out_dir / "matmul_f32.hlo.txt").write_text(to_hlo_text(lowered))
+
+    print(f"  lowered fused kernels ({m}x{k}x{n}, qblock={qb})")
+    return {
+        "m": m,
+        "k": k,
+        "n": n,
+        "qblock": qb,
+        "codebook_pad": CODEBOOK_PAD,
+        "tiles": list(dmm.DEFAULT_TILES),
+        "u8_hlo": "dequant_matmul_u8.hlo.txt",
+        "packed4_hlo": "dequant_matmul_packed4.hlo.txt",
+        "f32_hlo": "matmul_f32.hlo.txt",
+        "vmem_report_4bit": dmm.vmem_report(k, n, 4, qb),
+        "vmem_report_3bit": dmm.vmem_report(k, n, 3, qb),
+        "vmem_report_8bit": dmm.vmem_report(k, n, 8, qb),
+    }
+
+
+def dump_codebooks(out_dir: pathlib.Path) -> None:
+    """Golden codebook vectors: Rust `quant::codebook` tests assert parity."""
+    out: dict[str, list[float]] = {}
+    for k in range(2, 9):
+        out[f"int_{k}"] = cbm.int_codebook(k).tolist()
+    for k in range(3, 9):
+        for e in range(1, k - 1):
+            out[f"fp_{k}_e{e}"] = cbm.fp_codebook(k, e).tolist()
+        out[f"dynexp_{k}"] = cbm.dynexp_codebook(k).tolist()
+        out[f"quantile_{k}"] = cbm.make_codebook("quantile", k).tolist()
+    (out_dir / "codebooks.json").write_text(json.dumps(out))
+    print(f"  dumped {len(out)} golden codebooks")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument(
+        "--tiers",
+        default="all",
+        help="comma-separated tier names to lower (default: all)",
+    )
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    tiers = model.TIERS
+    if args.tiers != "all":
+        want = set(args.tiers.split(","))
+        tiers = [c for c in model.TIERS if c.name in want]
+
+    print("lowering model graphs...")
+    tier_entries = lower_model_graphs(out_dir, tiers)
+    print("lowering fused kernels...")
+    kernel_entry = lower_kernels(out_dir)
+    dump_codebooks(out_dir)
+
+    manifest = {
+        "version": 1,
+        "vocab": model.VOCAB,
+        "seq": model.SEQ,
+        "param_names": list(model.PARAM_NAMES),
+        "tiers": tier_entries,
+        "kernels": kernel_entry,
+    }
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote manifest with {len(tier_entries)} tiers to {out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,170 @@
+"""Quantization codebook construction for the four data types of the paper.
+
+A k-bit quantization data type is fully specified by its codebook: the set
+``F`` of ``2**k`` floating-point values in ``[-1, 1]`` that the k-bit integer
+indices map onto (Appendix A of the paper).  This module builds those
+codebooks for:
+
+  * ``int``     -- symmetric linear (uniform) quantization,
+  * ``fp``      -- ExMy floating point (FP8-style, no NaN/Inf patterns),
+  * ``dynexp``  -- dynamic-exponent data type (Dettmers, 2016),
+  * ``quantile``-- information-theoretically optimal quantile quantization
+                   (data dependent; estimated from an input sample).
+
+The same codebooks are re-implemented in Rust (``rust/src/quant/codebook.rs``)
+for the run-time hot path; ``aot.py`` dumps the vectors produced here to
+``artifacts/codebooks.json`` so the Rust unit tests can assert bit-exact
+parity with this reference implementation.
+
+All codebooks are returned **sorted ascending** and normalized so that
+``max(|F|) == 1`` (the paper's storage-domain convention), which lets the
+quantizer use ``searchsorted`` instead of an argmin over the whole set.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "int_codebook",
+    "fp_codebook",
+    "dynexp_codebook",
+    "quantile_codebook",
+    "make_codebook",
+    "default_exponent_bits",
+    "DTYPES",
+]
+
+DTYPES = ("int", "fp", "quantile", "dynexp")
+
+
+def int_codebook(k: int) -> np.ndarray:
+    """Symmetric linear integer codebook.
+
+    Follows the paper's convention of truncating the asymmetric two's
+    complement range to an equal number of positive and negative values
+    around zero: for Int8 the values are ``[-127, ..., 127] / 127``.  One of
+    the ``2**k`` bit patterns is therefore unused (the codebook has
+    ``2**k - 1`` entries).
+    """
+    if not 2 <= k <= 8:
+        raise ValueError(f"int codebook needs 2 <= k <= 8, got {k}")
+    m = 2 ** (k - 1) - 1
+    vals = np.arange(-m, m + 1, dtype=np.float64) / m
+    return vals.astype(np.float32)
+
+
+def default_exponent_bits(k: int) -> int:
+    """Paper heuristic (Appendix C.4): a 3-bit exponent for 4..8-bit floats
+    and a 2-bit exponent for 3-bit floats.  (The appendix notes a 2-bit
+    exponent also performs well across precisions; Figure 12 sweeps this.)
+    """
+    if k <= 3:
+        return 2
+    return 3
+
+
+def fp_codebook(k: int, exponent_bits: int | None = None) -> np.ndarray:
+    """ExMy floating-point codebook (FP8-style, Micikevicius et al. 2022).
+
+    Layout: 1 sign bit, ``E`` exponent bits, ``M = k - 1 - E`` mantissa bits.
+    Bias is ``2**(E-1)`` (paper Section 2.2).  No patterns are reserved for
+    NaN/Inf -- every bit pattern is a value.  Exponent field 0 encodes
+    subnormals.  The resulting set is normalized to ``[-1, 1]``.
+    """
+    if exponent_bits is None:
+        exponent_bits = default_exponent_bits(k)
+    e, m = exponent_bits, k - 1 - exponent_bits
+    if e < 1 or m < 0:
+        raise ValueError(f"invalid fp layout: k={k} exponent_bits={exponent_bits}")
+    bias = 2 ** (e - 1)
+    vals = set()
+    for sign in (1.0, -1.0):
+        for exp_field in range(2**e):
+            for man_field in range(2**m):
+                frac = man_field / (2**m)
+                if exp_field == 0:  # subnormal
+                    v = sign * (2.0 ** (1 - bias)) * frac
+                else:
+                    v = sign * (2.0 ** (exp_field - bias)) * (1.0 + frac)
+                vals.add(v)
+    arr = np.array(sorted(vals), dtype=np.float64)
+    arr /= np.abs(arr).max()
+    return arr.astype(np.float32)
+
+
+def dynexp_codebook(k: int) -> np.ndarray:
+    """Dynamic-exponent codebook (Dettmers, 2016; Dettmers et al., 2022b).
+
+    Bit layout: 1 sign bit, then a run of ``z`` zero bits whose length is the
+    base-10 exponent magnitude, then an indicator ``1`` bit, then the
+    remaining ``f = k - 2 - z`` bits as an unsigned linear fraction.  The
+    fraction bits bisect the interval ``(0.1, 0.9]`` into ``2**f`` equal
+    steps (the appendix's constructive definition); the value is
+    ``sign * 10**-z * frac``.  The all-zero pattern encodes exactly 0.
+    The set is normalized to ``[-1, 1]``.
+    """
+    if not 3 <= k <= 8:
+        raise ValueError(f"dynexp codebook needs 3 <= k <= 8, got {k}")
+    vals = {0.0}
+    for sign in (1.0, -1.0):
+        # z zero bits then an indicator bit leaves f = k - 2 - z fraction bits.
+        for z in range(0, k - 1):
+            f = k - 2 - z
+            n = 2**f
+            for i in range(n):
+                frac = 0.1 + (0.9 - 0.1) * (i + 1) / n
+                vals.add(sign * (10.0**-z) * frac)
+    arr = np.array(sorted(vals), dtype=np.float64)
+    arr /= np.abs(arr).max()
+    return arr.astype(np.float32)
+
+
+def quantile_codebook(k: int, sample: np.ndarray) -> np.ndarray:
+    """Quantile quantization codebook estimated from ``sample`` (Eq. 6).
+
+    ``q_i = (Q_X(i / (2**k + 1)) + Q_X((i+1) / (2**k + 1))) / 2`` where
+    ``Q_X`` is the empirical quantile function of the sample.  Following the
+    paper, an exact 0 is added to the set; to keep ``|F| == 2**k`` we replace
+    the entry closest to zero with 0 instead of growing the set.  Normalized
+    to ``[-1, 1]``.
+    """
+    if sample.size < 2**k:
+        raise ValueError(f"need at least {2**k} samples for a {k}-bit quantile codebook")
+    flat = np.asarray(sample, dtype=np.float64).ravel()
+    n = 2**k
+    probs_lo = np.arange(n) / (n + 1)
+    probs_hi = np.arange(1, n + 1) / (n + 1)
+    q = 0.5 * (np.quantile(flat, probs_lo) + np.quantile(flat, probs_hi))
+    q = np.sort(q)
+    # Anchor an exact zero on the entry nearest to it.
+    q[np.argmin(np.abs(q))] = 0.0
+    amax = np.abs(q).max()
+    if amax == 0.0:
+        raise ValueError("degenerate sample: all quantiles are zero")
+    q /= amax
+    return q.astype(np.float32)
+
+
+def make_codebook(
+    dtype: str,
+    k: int,
+    sample: np.ndarray | None = None,
+    exponent_bits: int | None = None,
+) -> np.ndarray:
+    """Dispatch helper used by the reference quantizer and by ``aot.py``."""
+    if dtype == "int":
+        return int_codebook(k)
+    if dtype == "fp":
+        return fp_codebook(k, exponent_bits)
+    if dtype == "dynexp":
+        return dynexp_codebook(k)
+    if dtype == "quantile":
+        if sample is None:
+            # Deterministic standard-normal sample: weights are near-normal,
+            # so this is the "generic" quantile codebook used when no tensor
+            # sample is supplied (Rust mirrors this with the same seed).
+            rng = np.random.default_rng(0x5EED)
+            sample = rng.standard_normal(65536)
+        return quantile_codebook(k, sample)
+    raise ValueError(f"unknown dtype {dtype!r}; expected one of {DTYPES}")

@@ -1,0 +1,198 @@
+"""Pallas fused block-wise dequantize + matmul kernels (Layer 1).
+
+The paper's latency argument (Section 2.1) is that small-batch inference is
+memory bound: the time to load ``W`` dominates, so storing ``W`` in k bits
+and dequantizing on the fly cuts latency roughly by ``16 / k``.  These
+kernels are the TPU-style instantiation of that idea (DESIGN.md Section 5):
+
+  * weights live in HBM as ``uint8`` codebook indices (or two 4-bit indices
+    per byte for the ``packed4`` variant),
+  * ``BlockSpec`` streams ``(bk, bn)`` weight tiles into VMEM; the
+    quantization block size divides ``bk`` so each tile carries exactly the
+    absmax rows it needs,
+  * the ≤256-entry codebook is VMEM-resident for the whole kernel -- the
+    gather that is awkward on GPUs (thread serialization through shared
+    memory, paper Section 7) is a plain VPU gather here,
+  * dequantized tiles feed the MXU via ``jnp.dot``.
+
+Kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot run
+Mosaic custom-calls, so interpret mode is the correctness path and real-TPU
+performance is estimated analytically (DESIGN.md Section 7, EXPERIMENTS.md
+Section Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "dequant_matmul_u8",
+    "dequant_matmul_packed4",
+    "matmul_f32",
+    "DEFAULT_TILES",
+]
+
+# (bm, bk, bn) tile shape. bk is the VMEM streaming dimension and must be a
+# multiple of the quantization block size.
+DEFAULT_TILES = (16, 64, 128)
+
+
+def _dequant_tile(idx_u8, amax_tile, cb, bk: int, qblock: int):
+    """Dequantize a ``(bk, bn)`` tile of codebook indices.
+
+    ``amax_tile`` is ``(bk // qblock, bn)``: one scale per quantization
+    block per column.  The gather ``cb[idx]`` is the VMEM codebook lookup.
+    """
+    w = cb[idx_u8]  # (bk, bn) gather from the VMEM-resident codebook
+    bn = w.shape[-1]
+    w = w.reshape(bk // qblock, qblock, bn) * amax_tile[:, None, :]
+    return w.reshape(bk, bn)
+
+
+def _u8_kernel(x_ref, wq_ref, amax_ref, cb_ref, o_ref, *, bk: int, qblock: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = _dequant_tile(wq_ref[...], amax_ref[...], cb_ref[...], bk, qblock)
+    o_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+def _packed4_kernel(x_ref, wq_ref, amax_ref, cb_ref, o_ref, *, bk: int, qblock: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    packed = wq_ref[...]  # (bk // 2, bn): two 4-bit indices per byte
+    bn = packed.shape[-1]
+    lo = packed & 0xF
+    hi = packed >> 4
+    # Row 2r is the low nibble, row 2r+1 the high nibble (ref.pack4 layout).
+    idx = jnp.stack([lo, hi], axis=1).reshape(bk, bn)
+    w = _dequant_tile(idx, amax_ref[...], cb_ref[...], bk, qblock)
+    o_ref[...] += jnp.dot(x_ref[...], w, preferred_element_type=jnp.float32)
+
+
+def _check(m, k, n, qblock, tiles):
+    bm, bk, bn = tiles
+    if m % bm or k % bk or n % bn:
+        raise ValueError(f"shape ({m},{k},{n}) not divisible by tiles {tiles}")
+    if bk % qblock:
+        raise ValueError(f"tile bk={bk} must be a multiple of qblock={qblock}")
+
+
+@functools.partial(jax.jit, static_argnames=("qblock", "tiles"))
+def dequant_matmul_u8(x, wq, amax, codebook, *, qblock: int = 64, tiles=DEFAULT_TILES):
+    """``x @ dequant(wq)`` with one ``uint8`` codebook index per weight.
+
+    Args:
+      x:        ``(M, K)`` float32 activations.
+      wq:       ``(K, N)`` uint8 codebook indices.
+      amax:     ``(K // qblock, N)`` float32 per-block absmax scales.
+      codebook: ``(C,)`` float32 sorted codebook, ``C <= 256``.
+    """
+    m, k = x.shape
+    _, n = wq.shape
+    _check(m, k, n, qblock, tiles)
+    bm, bk, bn = tiles
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_u8_kernel, bk=bk, qblock=qblock),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // qblock, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec(codebook.shape, lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, wq, amax, codebook)
+
+
+@functools.partial(jax.jit, static_argnames=("qblock", "tiles"))
+def dequant_matmul_packed4(x, wq_packed, amax, codebook, *, qblock: int = 64, tiles=DEFAULT_TILES):
+    """``x @ dequant(wq)`` with two 4-bit indices packed per byte along K.
+
+    ``wq_packed`` is ``(K // 2, N)`` uint8 -- the genuine 4x bits-loaded
+    reduction over an f32 weight (plus ``16 / qblock`` bits/param of absmax).
+    """
+    m, k = x.shape
+    n = wq_packed.shape[1]
+    if wq_packed.shape[0] * 2 != k:
+        raise ValueError(f"packed rows {wq_packed.shape[0]} != K/2 = {k // 2}")
+    _check(m, k, n, qblock, tiles)
+    bm, bk, bn = tiles
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        functools.partial(_packed4_kernel, bk=bk, qblock=qblock),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // qblock, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec(codebook.shape, lambda i, j, kk: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, wq_packed, amax, codebook)
+
+
+def _f32_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tiles",))
+def matmul_f32(x, w, *, tiles=DEFAULT_TILES):
+    """Unquantized Pallas matmul baseline for the latency benchmark (E14)."""
+    m, k = x.shape
+    _, n = w.shape
+    _check(m, k, n, tiles[1], tiles)
+    bm, bk, bn = tiles
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _f32_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def vmem_report(k: int, n: int, kbits: int, qblock: int = 64, tiles=DEFAULT_TILES) -> dict:
+    """Analytic VMEM-footprint / bits-loaded estimate for a (K, N) layer.
+
+    interpret=True gives no TPU wall-clock, so DESIGN.md Section 7 records
+    these structural numbers instead: VMEM bytes per tile residency and the
+    HBM bits-loaded ratio versus an f32 weight (the quantity the paper's
+    latency claim is proportional to).
+    """
+    bm, bk, bn = tiles
+    idx_bytes = bk * bn * (1 if kbits > 4 else 0.5 if kbits == 4 else kbits / 8)
+    amax_bytes = (bk // qblock) * bn * 4
+    cb_bytes = (2**kbits) * 4
+    x_bytes = bm * bk * 4
+    o_bytes = bm * bn * 4
+    vmem = idx_bytes + amax_bytes + cb_bytes + x_bytes + o_bytes
+    w_bits = k * n * (kbits + 16.0 / qblock)
+    f32_bits = k * n * 32.0
+    return {
+        "vmem_tile_bytes": int(vmem),
+        "bits_per_param": kbits + 16.0 / qblock,
+        "bits_loaded_ratio_vs_f32": f32_bits / w_bits,
+        "mxu_tile": (bm, bk, bn),
+    }

@@ -1,0 +1,151 @@
+"""Pure-jnp/numpy reference oracle for block-wise quantization.
+
+Two block layouts are implemented:
+
+  * **flat blocking** (``quantize_flat`` / ``dequantize_flat``) -- the
+    paper's Section 2.3 definition: the tensor is viewed as a 1-D sequence,
+    chunked into blocks of ``block`` values, and each block is quantized
+    independently against its own absmax.  This is the layout the Rust
+    run-time quant library implements; the pytest parity suite checks the
+    two against golden vectors.
+
+  * **column blocking** (``quantize_colblock`` / ``dequant_matmul_ref``) --
+    the layout the fused Pallas dequant-matmul kernel consumes: a weight
+    ``W`` of shape ``(K, N)`` is blocked along ``K`` within each column, so
+    the absmax tensor has shape ``(K // block, N)`` and one scale row is
+    loaded alongside each VMEM tile (DESIGN.md Section 5).
+
+Both layouts share the same index-assignment rule (Eq. 1): nearest codebook
+entry after normalizing the block into ``[-1, 1]``.  Codebooks are sorted,
+so assignment uses ``searchsorted`` + a one-step neighbour comparison rather
+than an argmin over the full set.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = [
+    "assign",
+    "quantize_flat",
+    "dequantize_flat",
+    "quantize_colblock",
+    "dequantize_colblock",
+    "dequant_matmul_ref",
+    "pack4",
+    "unpack4",
+]
+
+
+def assign(normalized: np.ndarray, codebook: np.ndarray) -> np.ndarray:
+    """Map each normalized value to the index of the nearest codebook entry.
+
+    ``codebook`` must be sorted ascending.  Ties break toward the lower
+    index (matches the Rust implementation).
+    """
+    cb = np.asarray(codebook, dtype=np.float32)
+    x = np.asarray(normalized, dtype=np.float32)
+    hi = np.searchsorted(cb, x, side="left").clip(1, len(cb) - 1)
+    lo = hi - 1
+    pick_hi = np.abs(cb[hi] - x) < np.abs(x - cb[lo])
+    return np.where(pick_hi, hi, lo).astype(np.uint8)
+
+
+def _absmax(blocks: np.ndarray) -> np.ndarray:
+    amax = np.abs(blocks).max(axis=-1)
+    # A zero block normalizes to zeros with any positive scale.
+    return np.where(amax == 0.0, 1.0, amax).astype(np.float32)
+
+
+def quantize_flat(x: np.ndarray, codebook: np.ndarray, block: int):
+    """Paper-layout block-wise quantization of an arbitrary tensor.
+
+    Returns ``(idx, absmax)`` where ``idx`` is ``uint8`` of ``x.size``
+    entries (padded blocks are trimmed) and ``absmax`` has one ``float32``
+    per block.  ``x.size`` does not need to divide ``block``; the trailing
+    partial block is quantized against its own absmax.
+    """
+    flat = np.asarray(x, dtype=np.float32).ravel()
+    n = flat.size
+    pad = (-n) % block
+    padded = np.pad(flat, (0, pad)).reshape(-1, block)
+    amax = _absmax(padded)
+    idx = assign(padded / amax[:, None], codebook).ravel()[:n]
+    return idx, amax
+
+
+def dequantize_flat(
+    idx: np.ndarray, absmax: np.ndarray, codebook: np.ndarray, shape, block: int
+) -> np.ndarray:
+    cb = np.asarray(codebook, dtype=np.float32)
+    flat = cb[idx.ravel()]
+    n = flat.size
+    pad = (-n) % block
+    padded = np.pad(flat, (0, pad)).reshape(-1, block)
+    out = (padded * absmax[:, None]).ravel()[:n]
+    return out.reshape(shape).astype(np.float32)
+
+
+def quantize_colblock(w: np.ndarray, codebook: np.ndarray, block: int):
+    """Kernel-layout quantization of a ``(K, N)`` weight.
+
+    Blocks run along ``K`` within each column; returns ``(idx, absmax)``
+    with ``idx`` shaped ``(K, N)`` uint8 and ``absmax`` shaped
+    ``(K // block, N)`` float32.  ``K`` must be a multiple of ``block``.
+    """
+    w = np.asarray(w, dtype=np.float32)
+    k, n = w.shape
+    if k % block != 0:
+        raise ValueError(f"K={k} not a multiple of block={block}")
+    blocks = w.reshape(k // block, block, n).transpose(0, 2, 1)  # (kb, N, block)
+    amax = _absmax(blocks)  # (kb, N)
+    idx = assign(blocks / amax[..., None], codebook)
+    idx = idx.transpose(0, 2, 1).reshape(k, n)
+    return idx, amax
+
+
+def dequantize_colblock(
+    idx: np.ndarray, absmax: np.ndarray, codebook: np.ndarray, block: int
+) -> np.ndarray:
+    cb = np.asarray(codebook, dtype=np.float32)
+    k, n = idx.shape
+    vals = cb[idx].reshape(k // block, block, n)
+    return (vals * absmax[:, None, :]).reshape(k, n).astype(np.float32)
+
+
+def dequant_matmul_ref(
+    x: np.ndarray,
+    idx: np.ndarray,
+    absmax: np.ndarray,
+    codebook: np.ndarray,
+    block: int,
+) -> np.ndarray:
+    """Oracle for the fused kernel: dequantize ``W`` then ``x @ W``."""
+    w = dequantize_colblock(idx, absmax, codebook, block)
+    return np.asarray(x, dtype=np.float32) @ w
+
+
+def pack4(idx: np.ndarray) -> np.ndarray:
+    """Pack 4-bit indices two-per-byte along ``K`` (rows).
+
+    Row ``2r`` goes to the low nibble and row ``2r + 1`` to the high nibble
+    of output row ``r`` -- the layout the ``packed4`` Pallas kernel unpacks.
+    """
+    idx = np.asarray(idx, dtype=np.uint8)
+    if idx.ndim != 2 or idx.shape[0] % 2 != 0:
+        raise ValueError(f"pack4 needs an even-row 2-D index tensor, got {idx.shape}")
+    if idx.max(initial=0) > 15:
+        raise ValueError("pack4 given indices wider than 4 bits")
+    lo = idx[0::2]
+    hi = idx[1::2]
+    return (lo | (hi << 4)).astype(np.uint8)
+
+
+def unpack4(packed: np.ndarray) -> np.ndarray:
+    """Inverse of :func:`pack4`."""
+    packed = np.asarray(packed, dtype=np.uint8)
+    k2, n = packed.shape
+    out = np.empty((k2 * 2, n), dtype=np.uint8)
+    out[0::2] = packed & 0xF
+    out[1::2] = packed >> 4
+    return out

@@ -1,0 +1,356 @@
+"""Layer 2: decoder-only transformer forward/backward graphs in JAX.
+
+These graphs are lowered **once** by ``aot.py`` to HLO text and executed
+from the Rust coordinator via PJRT; Python never runs at request time.
+Consequences for how this module is written:
+
+  * Parameters travel as a **flat tuple of 12 stacked tensors** in the fixed
+    order of :data:`PARAM_NAMES` -- per-layer weights are stacked along a
+    leading ``n_layer`` axis and consumed with ``lax.scan``, so the argument
+    list (and the Rust-side checkpoint layout) is depth independent.
+  * All shapes are static per :class:`ModelConfig`; the Rust side reads them
+    from ``artifacts/manifest.json``.
+  * The quantization study simulates k-bit weights by feeding
+    quantize->dequantize'd f32 parameters into the *same* forward
+    executable, exactly mirroring the paper's protocol (16-bit inputs,
+    k-bit weights, computation in high precision after dequantization).
+
+Two entry points are lowered per model scale:
+
+  * :func:`eval_scores`  -- masked negative-log-likelihood sums + greedy
+    top-1 hit counts, serving both perplexity and all four zero-shot tasks.
+  * :func:`train_step`   -- one fused Adam step (loss, grads, moment and
+    parameter updates) driven by the Rust training loop, which owns the
+    learning-rate schedule and data order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+__all__ = [
+    "ModelConfig",
+    "PARAM_NAMES",
+    "QUANTIZED_PARAMS",
+    "param_shapes",
+    "param_count",
+    "eval_scores",
+    "train_step",
+    "init_params",
+    "TIERS",
+    "VOCAB",
+    "SEQ",
+    "BATCH_TRAIN",
+    "BATCH_EVAL",
+]
+
+VOCAB = 512
+SEQ = 64
+BATCH_TRAIN = 8
+BATCH_EVAL = 16
+
+#: Fixed parameter order; index into the flat tuple == position in this list.
+PARAM_NAMES = (
+    "embed",  # (V, d)   token embedding, tied with the LM head
+    "pos",  # (S, d)   learned positional embedding
+    "qkv",  # (L, d, 3d) fused attention projection         [quantized]
+    "wo",  # (L, d, d)  attention output projection          [quantized]
+    "fc1",  # (L, d, f)  MLP up projection                   [quantized]
+    "fc2",  # (L, f, d)  MLP down projection                 [quantized]
+    "ln1_s",  # (L, d)
+    "ln1_b",  # (L, d)
+    "ln2_s",  # (L, d)
+    "ln2_b",  # (L, d)
+    "lnf_s",  # (d,)
+    "lnf_b",  # (d,)
+)
+
+#: Tensors the paper quantizes: FFN + attention projections only
+#: (Section 4: "Attention matrices are not quantized"; embeddings and
+#: LayerNorm stay 16-bit).
+QUANTIZED_PARAMS = ("qkv", "wo", "fc1", "fc2")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Static shape configuration for one model scale ("tier")."""
+
+    name: str
+    d_model: int
+    n_layer: int
+    n_head: int
+    vocab: int = VOCAB
+    seq: int = SEQ
+
+    @property
+    def d_ff(self) -> int:
+        return 4 * self.d_model
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_head == 0
+        return self.d_model // self.n_head
+
+
+#: The six scales of the synthetic families (DESIGN.md Section 1): ~45k to
+#: ~3.7M parameters, spanning almost two orders of magnitude.
+TIERS: Sequence[ModelConfig] = (
+    ModelConfig("t0", d_model=32, n_layer=2, n_head=2),
+    ModelConfig("t1", d_model=48, n_layer=3, n_head=3),
+    ModelConfig("t2", d_model=64, n_layer=4, n_head=4),
+    ModelConfig("t3", d_model=96, n_layer=5, n_head=6),
+    ModelConfig("t4", d_model=128, n_layer=6, n_head=8),
+    ModelConfig("t5", d_model=192, n_layer=8, n_head=12),
+)
+
+
+def param_shapes(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    d, f, L = cfg.d_model, cfg.d_ff, cfg.n_layer
+    return {
+        "embed": (cfg.vocab, d),
+        "pos": (cfg.seq, d),
+        "qkv": (L, d, 3 * d),
+        "wo": (L, d, d),
+        "fc1": (L, d, f),
+        "fc2": (L, f, d),
+        "ln1_s": (L, d),
+        "ln1_b": (L, d),
+        "ln2_s": (L, d),
+        "ln2_b": (L, d),
+        "lnf_s": (d,),
+        "lnf_b": (d,),
+    }
+
+
+def param_count(cfg: ModelConfig) -> int:
+    import math
+
+    return sum(math.prod(s) for s in param_shapes(cfg).values())
+
+
+def init_params(cfg: ModelConfig, key) -> tuple[jnp.ndarray, ...]:
+    """Reference initializer (scaled-normal), used by the pytest suite only.
+
+    The run-time initializer lives in Rust (``models::init``) so that family
+    recipes -- including emergent-outlier injection -- are applied without
+    Python.  Both use std ``0.02`` embeddings and ``0.02 / sqrt(2 L)``-scaled
+    residual projections (GPT-2 convention).
+    """
+    shapes = param_shapes(cfg)
+    keys = jax.random.split(key, len(PARAM_NAMES))
+    out = []
+    resid_scale = 0.02 / jnp.sqrt(2.0 * cfg.n_layer)
+    for k, name in zip(keys, PARAM_NAMES):
+        shape = shapes[name]
+        if name.endswith("_s"):
+            out.append(jnp.ones(shape, jnp.float32))
+        elif name.endswith("_b"):
+            out.append(jnp.zeros(shape, jnp.float32))
+        elif name in ("wo", "fc2"):
+            out.append(jax.random.normal(k, shape, jnp.float32) * resid_scale)
+        else:
+            out.append(jax.random.normal(k, shape, jnp.float32) * 0.02)
+    return tuple(out)
+
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * lax.rsqrt(var + eps) * scale + bias
+
+
+def _block(x, layer_params, cfg: ModelConfig):
+    """Pre-LN transformer block over ``x: (B, S, d)``."""
+    qkv_w, wo_w, fc1_w, fc2_w, ln1_s, ln1_b, ln2_s, ln2_b = layer_params
+    b, s, d = x.shape
+    h, hd = cfg.n_head, cfg.head_dim
+
+    y = _layernorm(x, ln1_s, ln1_b)
+    qkv = y @ qkv_w  # (B, S, 3d)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    att = jnp.where(causal[None, None], att, jnp.float32(-1e30))
+    att = jax.nn.softmax(att, axis=-1)
+    y = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d)
+    x = x + y @ wo_w
+
+    y = _layernorm(x, ln2_s, ln2_b)
+    y = jax.nn.gelu(y @ fc1_w)
+    x = x + y @ fc2_w
+    return x
+
+
+def _logits(params, tokens, cfg: ModelConfig):
+    """Forward pass to LM logits; scan over stacked per-layer parameters."""
+    (embed, pos, qkv, wo, fc1, fc2, l1s, l1b, l2s, l2b, lfs, lfb) = params
+    x = embed[tokens] + pos[None]
+
+    def step(carry, lp):
+        return _block(carry, lp, cfg), None
+
+    x, _ = lax.scan(step, x, (qkv, wo, fc1, fc2, l1s, l1b, l2s, l2b))
+    x = _layernorm(x, lfs, lfb)
+    return x @ embed.T  # tied LM head
+
+
+def _masked_nll(params, tokens, mask, cfg: ModelConfig):
+    """Per-sequence masked NLL sum and greedy top-1 hit count.
+
+    ``mask[b, s]`` weights the prediction of ``tokens[b, s]`` from position
+    ``s - 1``; position 0 is never a target (its mask entry is ignored).
+    """
+    logits = _logits(params, tokens, cfg)  # (B, S, V)
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)  # predicts tokens[:,1:]
+    targets = tokens[:, 1:]
+    m = mask[:, 1:]
+    tgt_logp = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    nll = -(tgt_logp * m).sum(axis=-1)  # (B,)
+    top1 = (jnp.argmax(logp, axis=-1) == targets).astype(jnp.float32)
+    hits = (top1 * m).sum(axis=-1)  # (B,)
+    return nll, hits
+
+
+def eval_scores(cfg: ModelConfig):
+    """Build the eval entry point ``f(*params, tokens, mask) -> (nll, hits)``.
+
+    One executable serves every metric in the study: perplexity (mask = 1 on
+    all real tokens) and the four zero-shot tasks (mask = 1 on the scored
+    continuation region; per-choice length normalization happens in Rust).
+    """
+
+    def f(*args):
+        params = args[: len(PARAM_NAMES)]
+        tokens, mask = args[len(PARAM_NAMES)], args[len(PARAM_NAMES) + 1]
+        return _masked_nll(params, tokens, mask, cfg)
+
+    return f
+
+
+def _block_with_taps(x, layer_params, cfg: ModelConfig):
+    """Like :func:`_block` but also returns the inputs of each projection —
+    the calibration activations GPTQ's Hessian is built from (one-shot
+    quantization, Frantar et al. 2022; used by E5/Table 1/Figure 5)."""
+    qkv_w, wo_w, fc1_w, fc2_w, ln1_s, ln1_b, ln2_s, ln2_b = layer_params
+    b, s, d = x.shape
+    h, hd = cfg.n_head, cfg.head_dim
+
+    y = _layernorm(x, ln1_s, ln1_b)
+    qkv_in = y
+    qkv = y @ qkv_w
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(jnp.float32(hd))
+    causal = jnp.tril(jnp.ones((s, s), jnp.bool_))
+    att = jnp.where(causal[None, None], att, jnp.float32(-1e30))
+    att = jax.nn.softmax(att, axis=-1)
+    y = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, d)
+    wo_in = y
+    x = x + y @ wo_w
+
+    y = _layernorm(x, ln2_s, ln2_b)
+    fc1_in = y
+    y = jax.nn.gelu(y @ fc1_w)
+    fc2_in = y
+    x = x + y @ fc2_w
+    return x, (qkv_in, wo_in, fc1_in, fc2_in)
+
+
+def calibration_acts(cfg: ModelConfig):
+    """Build ``f(*params, tokens) -> (qkv_in, wo_in, fc1_in, fc2_in)``,
+    each stacked ``(L, B, S, in_dim)`` — the per-layer projection inputs
+    for GPTQ calibration. Lowered once per tier as ``acts_<tier>.hlo.txt``.
+    """
+
+    def f(*args):
+        params = args[: len(PARAM_NAMES)]
+        tokens = args[len(PARAM_NAMES)]
+        (embed, pos, qkv, wo, fc1, fc2, l1s, l1b, l2s, l2b, lfs, lfb) = params
+        x = embed[tokens] + pos[None]
+
+        def step(carry, lp):
+            new_x, taps = _block_with_taps(carry, lp, cfg)
+            return new_x, taps
+
+        _, taps = lax.scan(step, x, (qkv, wo, fc1, fc2, l1s, l1b, l2s, l2b))
+        # Keep lnf_s/lnf_b alive: the stablehlo->XlaComputation conversion
+        # drops unused parameters, which would desync the Rust-side
+        # argument list (all graphs share the 12-param signature).
+        keep = jnp.float32(0.0) * (jnp.sum(lfs) + jnp.sum(lfb))
+        qkv_in, wo_in, fc1_in, fc2_in = taps
+        return (qkv_in + keep, wo_in, fc1_in, fc2_in)
+
+    return f
+
+
+def acts_example_args(cfg: ModelConfig, batch: int = BATCH_EVAL):
+    shapes = param_shapes(cfg)
+    params = [jax.ShapeDtypeStruct(shapes[nm], jnp.float32) for nm in PARAM_NAMES]
+    tokens = jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32)
+    return (*params, tokens)
+
+
+def _train_loss(params, tokens, cfg: ModelConfig):
+    mask = (tokens != 0).astype(jnp.float32)
+    nll, _ = _masked_nll(params, tokens, mask, cfg)
+    denom = jnp.maximum(mask[:, 1:].sum(), 1.0)
+    return nll.sum() / denom
+
+
+def train_step(cfg: ModelConfig, beta1=0.9, beta2=0.999, eps=1e-8):
+    """Build ``f(*params, *m, *v, tokens, lr, t) -> (*params', *m', *v', loss)``.
+
+    A single fused Adam step.  The Rust driver owns the schedule: it passes
+    the current learning rate and (1-based) step index ``t`` for bias
+    correction, and round-trips the optimizer state as plain tensors.
+    """
+    n = len(PARAM_NAMES)
+
+    def f(*args):
+        params = args[:n]
+        m = args[n : 2 * n]
+        v = args[2 * n : 3 * n]
+        tokens, lr, t = args[3 * n], args[3 * n + 1], args[3 * n + 2]
+
+        loss, grads = jax.value_and_grad(lambda p: _train_loss(p, tokens, cfg))(params)
+        c1 = 1.0 - beta1**t
+        c2 = 1.0 - beta2**t
+        new_p, new_m, new_v = [], [], []
+        for p, g, mi, vi in zip(params, grads, m, v):
+            mi = beta1 * mi + (1.0 - beta1) * g
+            vi = beta2 * vi + (1.0 - beta2) * jnp.square(g)
+            update = (mi / c1) / (jnp.sqrt(vi / c2) + eps)
+            new_p.append(p - lr * update)
+            new_m.append(mi)
+            new_v.append(vi)
+        return (*new_p, *new_m, *new_v, loss)
+
+    return f
+
+
+def eval_example_args(cfg: ModelConfig, batch: int = BATCH_EVAL):
+    shapes = param_shapes(cfg)
+    params = [jax.ShapeDtypeStruct(shapes[nm], jnp.float32) for nm in PARAM_NAMES]
+    tokens = jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32)
+    mask = jax.ShapeDtypeStruct((batch, cfg.seq), jnp.float32)
+    return (*params, tokens, mask)
+
+
+def train_example_args(cfg: ModelConfig, batch: int = BATCH_TRAIN):
+    shapes = param_shapes(cfg)
+    ps = [jax.ShapeDtypeStruct(shapes[nm], jnp.float32) for nm in PARAM_NAMES]
+    tokens = jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+    return (*ps, *ps, *ps, tokens, scalar, scalar)

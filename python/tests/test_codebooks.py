@@ -1,0 +1,75 @@
+"""Codebook construction properties (Appendix A data types)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import codebooks as cbm
+
+
+@pytest.mark.parametrize("k", range(2, 9))
+def test_int_codebook(k):
+    cb = cbm.int_codebook(k)
+    assert len(cb) == 2**k - 1  # symmetric truncation
+    assert cb[0] == -1.0 and cb[-1] == 1.0
+    assert 0.0 in cb
+    np.testing.assert_allclose(cb, -cb[::-1], atol=0)  # exactly symmetric
+
+
+@pytest.mark.parametrize("k", range(3, 9))
+def test_fp_codebook_all_exponents(k):
+    for e in range(1, k - 1):
+        cb = cbm.fp_codebook(k, e)
+        assert np.all(np.diff(cb) > 0), "sorted strictly"
+        assert np.abs(cb).max() == pytest.approx(1.0)
+        assert 0.0 in cb
+        # Set size: 2^k patterns minus the duplicated ±0.
+        assert 2**k - 2 <= len(cb) <= 2**k
+
+
+@pytest.mark.parametrize("k", range(3, 9))
+def test_dynexp_codebook(k):
+    cb = cbm.dynexp_codebook(k)
+    assert np.all(np.diff(cb) > 0)
+    assert 0.0 in cb
+    pos = cb[cb > 0]
+    # Smallest positive value is 10^-(k-2) after normalization.
+    assert pos.min() == pytest.approx(10.0 ** -(k - 2), rel=1e-3)
+
+
+def test_quantile_codebook_equal_mass():
+    rng = np.random.default_rng(7)
+    sample = rng.standard_normal(100_000).astype(np.float32)
+    cb = cbm.quantile_codebook(4, sample)
+    assert len(cb) == 16
+    assert 0.0 in cb
+    # Interior bins should hold roughly 1/16 of a fresh sample each. The
+    # two extreme entries are midpoints with the distribution tails, so
+    # their nearest-neighbour regions legitimately hold less mass.
+    fresh = rng.standard_normal(50_000)
+    fresh = fresh / np.abs(fresh).max()  # blockwise-style normalization
+    edges = (cb[1:] + cb[:-1]) / 2
+    counts = np.histogram(fresh, bins=np.concatenate([[-np.inf], edges, [np.inf]]))[0]
+    interior = counts[1:-1]
+    assert interior.min() > 50_000 / 16 / 4, counts
+    assert interior.max() < 50_000 / 16 * 3, counts
+
+
+def test_quantile_needs_enough_samples():
+    with pytest.raises(ValueError):
+        cbm.quantile_codebook(8, np.zeros(10))
+
+
+def test_default_exponent_heuristic():
+    assert cbm.default_exponent_bits(3) == 2
+    for k in range(4, 9):
+        assert cbm.default_exponent_bits(k) == 3
+
+
+@settings(max_examples=20, deadline=None)
+@given(dtype=st.sampled_from(cbm.DTYPES), k=st.integers(3, 8))
+def test_make_codebook_normalized_sorted(dtype, k):
+    cb = cbm.make_codebook(dtype, k)
+    assert np.abs(cb).max() == pytest.approx(1.0)
+    assert np.all(np.diff(cb) > 0)
+    assert len(cb) <= 2**k + 1

@@ -1,0 +1,92 @@
+"""Pallas fused dequant-matmul kernels vs the pure-jnp/numpy oracle —
+the core Layer-1 correctness signal, including hypothesis sweeps over
+shapes, data types, block sizes, and tile geometries."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import codebooks as cbm
+from compile.kernels import ref
+from compile.kernels.dequant_matmul import (
+    DEFAULT_TILES,
+    dequant_matmul_packed4,
+    dequant_matmul_u8,
+    matmul_f32,
+    vmem_report,
+)
+
+RNG = np.random.default_rng(0xBEEF)
+
+
+def quantize_case(dtype, k, K, N, block, scale=1.0):
+    w = (RNG.standard_normal((K, N)) * scale).astype(np.float32)
+    cb = cbm.make_codebook(dtype, k)
+    idx, amax = ref.quantize_colblock(w, cb, block)
+    return w, cb, idx, amax
+
+
+@pytest.mark.parametrize("dtype", cbm.DTYPES)
+def test_u8_kernel_matches_oracle(dtype):
+    x = RNG.standard_normal((16, 128)).astype(np.float32)
+    _, cb, idx, amax = quantize_case(dtype, 4, 128, 256, 64)
+    cbp = np.concatenate([cb, np.full(256 - len(cb), cb[-1], np.float32)])
+    got = np.asarray(dequant_matmul_u8(x, idx, amax, cbp, qblock=64))
+    want = ref.dequant_matmul_ref(x, idx, amax, cb, 64)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_packed4_kernel_matches_oracle():
+    x = RNG.standard_normal((16, 128)).astype(np.float32)
+    _, cb, idx, amax = quantize_case("fp", 4, 128, 256, 64)
+    packed = ref.pack4(idx)
+    cbp = np.concatenate([cb, np.zeros(256 - len(cb), np.float32)])
+    got = np.asarray(dequant_matmul_packed4(x, packed, amax, cbp, qblock=64))
+    want = ref.dequant_matmul_ref(x, idx, amax, cb, 64)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_f32_baseline_kernel():
+    x = RNG.standard_normal((16, 128)).astype(np.float32)
+    w = RNG.standard_normal((128, 256)).astype(np.float32)
+    got = np.asarray(matmul_f32(x, w))
+    np.testing.assert_allclose(got, x @ w, atol=1e-3, rtol=1e-4)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    dtype=st.sampled_from(cbm.DTYPES),
+    k=st.sampled_from([3, 4, 5, 8]),
+    qblock=st.sampled_from([16, 32, 64]),
+    mk=st.sampled_from([(16, 64, 128), (32, 128, 128), (16, 192, 256)]),
+    scale=st.sampled_from([1e-3, 1.0, 50.0]),
+)
+def test_u8_kernel_hypothesis(dtype, k, qblock, mk, scale):
+    m, K, N = mk
+    x = RNG.standard_normal((m, K)).astype(np.float32)
+    _, cb, idx, amax = quantize_case(dtype, k, K, N, qblock, scale)
+    cbp = np.concatenate([cb, np.full(256 - len(cb), cb[-1], np.float32)])
+    tiles = (16, 64, 128)
+    got = np.asarray(dequant_matmul_u8(x, idx, amax, cbp, qblock=qblock, tiles=tiles))
+    want = ref.dequant_matmul_ref(x, idx, amax, cb, qblock)
+    tol = max(1e-4, 2e-5 * scale * K)
+    np.testing.assert_allclose(got, want, atol=tol, rtol=1e-3)
+
+
+def test_kernel_rejects_bad_geometry():
+    x = np.zeros((16, 100), np.float32)  # K not divisible by bk
+    wq = np.zeros((100, 128), np.uint8)
+    amax = np.ones((2, 128), np.float32)
+    cb = np.zeros(256, np.float32)
+    with pytest.raises(ValueError):
+        dequant_matmul_u8(x, wq, amax, cb, qblock=50)
+
+
+def test_vmem_report_structure():
+    r = vmem_report(512, 512, 4, 64)
+    assert r["bits_per_param"] == 4.25
+    assert r["bits_loaded_ratio_vs_f32"] == pytest.approx(32 / 4.25)
+    bm, bk, bn = DEFAULT_TILES
+    # VMEM residency must stay under a sane TPU budget (16 MiB/core).
+    assert r["vmem_tile_bytes"] < 16 * 2**20
+    assert r["mxu_tile"] == (bm, bk, bn)

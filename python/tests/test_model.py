@@ -1,0 +1,91 @@
+"""Layer-2 model graph checks: shapes, masking semantics, training step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return model.ModelConfig("test", d_model=32, n_layer=2, n_head=2)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return model.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def test_param_shapes_and_count(cfg, params):
+    shapes = model.param_shapes(cfg)
+    assert list(shapes) == list(model.PARAM_NAMES)
+    for name, p in zip(model.PARAM_NAMES, params):
+        assert p.shape == shapes[name], name
+    assert model.param_count(cfg) == sum(int(np.prod(s)) for s in shapes.values())
+
+
+def test_eval_scores_masking(cfg, params):
+    f = model.eval_scores(cfg)
+    b, s = 4, cfg.seq
+    tokens = jnp.asarray(np.random.default_rng(0).integers(2, cfg.vocab, (b, s)), jnp.int32)
+    full = jnp.ones((b, s), jnp.float32)
+    half = full.at[:, s // 2 :].set(0.0)
+    nll_full, hits = f(*params, tokens, full)
+    nll_half, _ = f(*params, tokens, half)
+    assert nll_full.shape == (b,)
+    assert np.all(np.asarray(nll_half) < np.asarray(nll_full))
+    assert np.all(np.asarray(hits) >= 0)
+    # Untrained -> close to uniform log-loss per token.
+    per_tok = float(jnp.sum(nll_full)) / (b * (s - 1))
+    assert abs(per_tok - np.log(cfg.vocab)) < 1.0
+
+
+def test_position_zero_never_scored(cfg, params):
+    f = model.eval_scores(cfg)
+    b, s = 2, cfg.seq
+    tokens = jnp.asarray(np.random.default_rng(1).integers(2, cfg.vocab, (b, s)), jnp.int32)
+    only_bos = jnp.zeros((b, s), jnp.float32).at[:, 0].set(1.0)
+    nll, hits = f(*params, tokens, only_bos)
+    np.testing.assert_allclose(np.asarray(nll), 0.0)
+    np.testing.assert_allclose(np.asarray(hits), 0.0)
+
+
+def test_train_step_descends(cfg, params):
+    step_fn = jax.jit(model.train_step(cfg))
+    b = model.BATCH_TRAIN
+    rng = np.random.default_rng(2)
+    tokens = jnp.asarray(rng.integers(2, cfg.vocab, (b, cfg.seq)), jnp.int32)
+    n = len(model.PARAM_NAMES)
+    ps = list(params)
+    ms = [jnp.zeros_like(p) for p in ps]
+    vs = [jnp.zeros_like(p) for p in ps]
+    losses = []
+    for t in range(1, 21):
+        out = step_fn(*ps, *ms, *vs, tokens, jnp.float32(3e-3), jnp.float32(t))
+        ps, ms, vs = list(out[:n]), list(out[n : 2 * n]), list(out[2 * n : 3 * n])
+        losses.append(float(out[-1]))
+    # Overfitting one fixed batch must cut loss sharply.
+    assert losses[-1] < losses[0] - 1.0, losses[::5]
+
+
+def test_calibration_acts_shapes(cfg, params):
+    f = jax.jit(model.calibration_acts(cfg))
+    b = model.BATCH_EVAL
+    tokens = jnp.asarray(np.random.default_rng(3).integers(2, cfg.vocab, (b, cfg.seq)), jnp.int32)
+    qkv_in, wo_in, fc1_in, fc2_in = f(*params, tokens)
+    L, d, ff = cfg.n_layer, cfg.d_model, cfg.d_ff
+    assert qkv_in.shape == (L, b, cfg.seq, d)
+    assert wo_in.shape == (L, b, cfg.seq, d)
+    assert fc1_in.shape == (L, b, cfg.seq, d)
+    assert fc2_in.shape == (L, b, cfg.seq, ff)
+    # LayerNormed tap has ~unit rms.
+    rms = float(jnp.sqrt(jnp.mean(qkv_in**2)))
+    assert 0.3 < rms < 3.0
+
+
+def test_tiers_are_increasing():
+    counts = [model.param_count(c) for c in model.TIERS]
+    assert all(a < b for a, b in zip(counts, counts[1:]))
+    assert counts[-1] / counts[0] > 50  # >1.5 orders of magnitude

@@ -1,0 +1,80 @@
+"""Reference blockwise quantizer invariants + packing round trips."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import codebooks as cbm
+from compile.kernels import ref
+
+RNG = np.random.default_rng(5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 3000),
+    block=st.sampled_from([16, 64, 256, 1024]),
+    dtype=st.sampled_from(cbm.DTYPES),
+    k=st.sampled_from([3, 4, 8]),
+)
+def test_flat_roundtrip_bounded(n, block, dtype, k):
+    x = (RNG.standard_normal(n) * 0.1).astype(np.float32)
+    cb = cbm.make_codebook(dtype, k)
+    idx, amax = ref.quantize_flat(x, cb, block)
+    assert idx.shape == (n,)
+    assert len(amax) == -(-n // block)
+    back = ref.dequantize_flat(idx, amax, cb, (n,), block)
+    gaps = np.diff(cb)
+    worst = max(gaps.max() / 2, 1 - abs(cb[0]), 1 - abs(cb[-1]))
+    bound = np.repeat(amax, block)[:n] * (worst + 1e-5) + 1e-6
+    assert np.all(np.abs(x - back) <= bound)
+
+
+def test_zero_tensor_roundtrips_exactly():
+    cb = cbm.make_codebook("fp", 4)
+    x = np.zeros(200, np.float32)
+    idx, amax = ref.quantize_flat(x, cb, 64)
+    back = ref.dequantize_flat(idx, amax, cb, (200,), 64)
+    np.testing.assert_array_equal(back, x)
+
+
+def test_colblock_matches_flat_per_column():
+    # A (block, 1) column tensor: colblock == flat on that column.
+    cb = cbm.make_codebook("int", 4)
+    w = RNG.standard_normal((64, 1)).astype(np.float32)
+    ci, ca = ref.quantize_colblock(w, cb, 64)
+    fi, fa = ref.quantize_flat(w[:, 0], cb, 64)
+    np.testing.assert_array_equal(ci[:, 0], fi)
+    np.testing.assert_allclose(ca[0, 0], fa[0])
+
+
+def test_colblock_outlier_isolation():
+    cb = cbm.make_codebook("int", 4)
+    w = (RNG.standard_normal((128, 4)) * 0.05).astype(np.float32)
+    w[0, 0] = 50.0  # outlier in column 0, block 0
+    idx, amax = ref.quantize_colblock(w, cb, 64)
+    back = ref.dequantize_colblock(idx, amax, cb, 64)
+    # Column 1 and block 1 of column 0 are unaffected.
+    np.testing.assert_allclose(back[:, 1], w[:, 1], atol=0.02)
+    np.testing.assert_allclose(back[64:, 0], w[64:, 0], atol=0.02)
+
+
+@settings(max_examples=15, deadline=None)
+@given(k2=st.integers(1, 64), n=st.integers(1, 64))
+def test_pack4_roundtrip(k2, n):
+    idx = RNG.integers(0, 16, size=(k2 * 2, n)).astype(np.uint8)
+    np.testing.assert_array_equal(ref.unpack4(ref.pack4(idx)), idx)
+
+
+def test_pack4_validation():
+    with pytest.raises(ValueError):
+        ref.pack4(np.zeros((3, 2), np.uint8))  # odd rows
+    with pytest.raises(ValueError):
+        ref.pack4(np.full((2, 2), 16, np.uint8))  # > 4 bits
+
+
+def test_assign_ties_break_low():
+    cb = np.array([-1.0, 0.0, 1.0], np.float32)
+    # 0.5 is exactly between 0 and 1 -> lower index wins (rust parity).
+    assert ref.assign(np.array([0.5], np.float32), cb)[0] == 1
+    assert ref.assign(np.array([0.50001], np.float32), cb)[0] == 2

@@ -1,0 +1,59 @@
+//! E13 — Appendix B: distribution centering is ineffective for weights.
+//!
+//! Sweeps centering on/off across data types at 4-bit on real checkpoints
+//! (model-level CE) and on raw weight slices (RMS error), showing the
+//! negative result: no consistent gain, at +16/block bits/param cost.
+
+use kbitscale::bench_support::{default_tiers, BenchEnv};
+use kbitscale::coordinator::GridBuilder;
+use kbitscale::models::ModelId;
+use kbitscale::quant::centering::report as centering_report;
+use kbitscale::quant::codebook::DataType;
+use kbitscale::quant::QuantSpec;
+use kbitscale::report::TextTable;
+
+fn main() -> anyhow::Result<()> {
+    let env = BenchEnv::open()?;
+    let family = "gpt2like";
+    let gb = GridBuilder::new(vec![family], default_tiers());
+    let results = env.run_grid_timed("appb", &gb.centering_sweep(4))?;
+
+    let mut table = TextTable::new(&["tier", "dtype", "ce plain", "ce centered", "delta"]);
+    for tier in default_tiers() {
+        for dt in DataType::ALL {
+            let find = |centered: bool| {
+                results.iter().find(|r| {
+                    r.tier == tier
+                        && r.spec_key.starts_with(dt.name())
+                        && r.spec_key.contains(":c") == centered
+                })
+            };
+            if let (Some(p), Some(c)) = (find(false), find(true)) {
+                table.row(vec![
+                    tier.clone(),
+                    dt.name().into(),
+                    format!("{:.4}", p.ce),
+                    format!("{:.4}", c.ce),
+                    format!("{:+.4}", c.ce - p.ce),
+                ]);
+            }
+        }
+    }
+    println!("Appendix B analog: centering on/off, model-level CE ({family}):");
+    println!("{}", table.render());
+
+    // Weight-level view on a real checkpoint tensor.
+    let (params, _) = env.checkpoints.load(&ModelId::new(family, "t1"))?;
+    let fc1 = &params.iter().find(|(n, _)| n == "fc1").unwrap().1;
+    let spec = QuantSpec::new(DataType::Int, 4, Some(64));
+    let r = centering_report(fc1.data(), &spec);
+    println!(
+        "weight-level (fc1): plain rms {:.6}, centered rms {:.6} ({:+.1}%), cost +{:.2} bits/param",
+        r.plain_rms,
+        r.centered_rms,
+        r.rel_change * 100.0,
+        r.extra_bits_per_param
+    );
+    println!("paper shape: deltas hover around zero — centering does not help weights.");
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! E10 — Figure 12: float exponent-bit allocation across precisions
+//! (Appendix C.4). For each k ∈ 3..8, sweep every valid ExMy split with
+//! block-64 weights and report which exponent width wins.
+//!
+//! Expected shape: 2–3 exponent bits win ("exponent bits should make up
+//! at least half the bits rounded up" heuristic; 2-bit exponents do well
+//! across all precisions).
+
+use kbitscale::bench_support::{default_tiers, BenchEnv};
+use kbitscale::coordinator::GridBuilder;
+use kbitscale::report::figures::{build_curves, spec_bits, Metric};
+use kbitscale::report::{write_csv, TextTable};
+
+fn main() -> anyhow::Result<()> {
+    let env = BenchEnv::open()?;
+    let family = "gpt2like";
+    let ks = [3usize, 4, 5, 6, 7, 8];
+    let gb = GridBuilder::new(vec![family], default_tiers());
+    let results = env.run_grid_timed("fig12", &gb.exponent_sweep(&ks))?;
+
+    // Per (k, e): mean CE across tiers (lower is better).
+    let mut table = TextTable::new(&["k", "e1", "e2", "e3", "e4", "e5", "e6", "best"]);
+    for &k in &ks {
+        let mut cells = vec![k.to_string()];
+        let mut best = (String::from("-"), f64::INFINITY);
+        for e in 1..=6usize {
+            let scores: Vec<f64> = results
+                .iter()
+                .filter(|r| {
+                    spec_bits(&r.spec_key) == Some(k) && r.spec_key.contains(&format!(":e{e}"))
+                })
+                .map(|r| r.ce)
+                .collect();
+            if scores.is_empty() {
+                cells.push("-".into());
+                continue;
+            }
+            let mean = scores.iter().sum::<f64>() / scores.len() as f64;
+            cells.push(format!("{mean:.3}"));
+            if mean < best.1 {
+                best = (format!("e{e}"), mean);
+            }
+        }
+        cells.push(best.0);
+        table.row(cells);
+    }
+    println!("Figure 12 analog: mean CE loss by float exponent bits ({family}, block 64):");
+    println!("{}", table.render());
+    println!("paper shape: 2–3 exponent bits optimal at every precision.");
+
+    let curves = build_curves(&results, Metric::Ce, |r| {
+        let b = spec_bits(&r.spec_key)?;
+        let e = r.spec_key.split(":e").nth(1)?.to_string();
+        Some(format!("k{b}e{e}"))
+    });
+    write_csv(&env.paths().figures.join("fig12_exponent_bits.csv"), &curves)?;
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! E11 — Figures 13–15: perplexity-based (CE-loss) scaling laws — the
+//! appendix's preferred, lower-noise metric — for total bits, data types,
+//! and block sizes. Also verifies the §4 claim that perplexity and
+//! zero-shot rank methods consistently (E12's Pearson check comes from the
+//! same store via `kbitscale analyze --pearson`).
+
+use kbitscale::bench_support::{default_tiers, BenchEnv};
+use kbitscale::coordinator::GridBuilder;
+use kbitscale::report::figures::{build_curves, spec_bits, spec_block, spec_dtype, Metric};
+use kbitscale::report::{ascii_chart, write_csv};
+use kbitscale::scaling::pearson;
+
+fn main() -> anyhow::Result<()> {
+    let env = BenchEnv::open()?;
+    let families = vec!["optlike", "pythialike", "gpt2like", "bloomlike"];
+    let gb = GridBuilder::new(families.clone(), default_tiers());
+    let results = env.run_grid_timed("fig13_15", &gb.perplexity_scaling())?;
+
+    // Fig 13: CE vs total bits per precision (all families pooled).
+    let bits = build_curves(&results, Metric::Ce, |r| {
+        spec_bits(&r.spec_key).map(|b| format!("{b}-bit"))
+    });
+    println!(
+        "{}",
+        ascii_chart("Figure 13: CE-loss scaling by precision (all families)",
+            "total model bits", "CE loss (lower better)", &bits, 66, 14)
+    );
+    write_csv(&env.paths().figures.join("fig13_ce_bits.csv"), &bits)?;
+
+    // Fig 14: CE by data type at 4-bit.
+    let dtypes = build_curves(&results, Metric::Ce, |r| {
+        (spec_bits(&r.spec_key) == Some(4) && spec_block(&r.spec_key) == Some(64))
+            .then(|| spec_dtype(&r.spec_key).to_string())
+    });
+    println!(
+        "{}",
+        ascii_chart("Figure 14: CE-loss by data type (4-bit, block 64)",
+            "total model bits", "CE loss (lower better)", &dtypes, 66, 12)
+    );
+    write_csv(&env.paths().figures.join("fig14_ce_dtypes.csv"), &dtypes)?;
+
+    // Fig 15: CE by block size at 4-bit fp.
+    let blocks = build_curves(&results, Metric::Ce, |r| {
+        (spec_bits(&r.spec_key) == Some(4) && spec_dtype(&r.spec_key) == "fp").then(|| {
+            match spec_block(&r.spec_key) {
+                Some(b) => format!("block {b:>4}"),
+                None => "tensor-wise".into(),
+            }
+        })
+    });
+    println!(
+        "{}",
+        ascii_chart("Figure 15: CE-loss by block size (4-bit fp)",
+            "total model bits", "CE loss (lower better)", &blocks, 66, 12)
+    );
+    write_csv(&env.paths().figures.join("fig15_ce_blocks.csv"), &blocks)?;
+
+    // §4 cross-metric consistency on whatever zero-shot cells exist.
+    let pairs: Vec<(f64, f64)> = env
+        .results
+        .all()
+        .into_iter()
+        .filter(|r| r.zs_mean.is_finite())
+        .map(|r| (r.ce, r.zs_mean))
+        .collect();
+    if pairs.len() >= 8 {
+        let xs: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = pairs.iter().map(|p| p.1).collect();
+        println!(
+            "Pearson(CE, mean zero-shot) over {} cells: {:.3}  (paper: -0.94 vs ppl)",
+            pairs.len(),
+            pearson(&xs, &ys)
+        );
+    }
+    Ok(())
+}

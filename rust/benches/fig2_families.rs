@@ -1,0 +1,60 @@
+//! E2 — Figure 2 (and the Figure 7 full-precision variant via --full):
+//! bit-level scaling for all four headline families.
+//!
+//! Expected shape: 4-bit optimal for every family; OPT-like and
+//! Pythia-like (outlier families) unstable — near random — at 3-bit while
+//! GPT-2-like and BLOOM-like stay stable; curves near-parallel otherwise.
+
+use kbitscale::bench_support::{default_tiers, BenchEnv};
+use kbitscale::coordinator::GridBuilder;
+use kbitscale::data::tasks::suite_random_baseline;
+use kbitscale::report::figures::{bit_curves, spec_bits};
+use kbitscale::report::{ascii_chart, write_csv};
+use kbitscale::scaling::{slope_spread, win_counts};
+
+fn main() -> anyhow::Result<()> {
+    let full = std::env::args().any(|a| a == "--full");
+    let env = BenchEnv::open()?;
+    let families = vec!["optlike", "pythialike", "gpt2like", "bloomlike"];
+    let ks: &[usize] = if full { &[3, 4, 5, 6, 8, 16] } else { &[3, 4, 8, 16] };
+    let gb = GridBuilder::new(families.clone(), default_tiers());
+    let results = env.run_grid_timed("fig2", &gb.bit_scaling(ks))?;
+
+    let random = suite_random_baseline();
+    for family in &families {
+        let curves = bit_curves(&results, Some(family));
+        println!(
+            "{}",
+            ascii_chart(
+                &format!("Figure 2 panel: {family}"),
+                "total model bits",
+                "mean zero-shot accuracy",
+                &curves,
+                64,
+                13
+            )
+        );
+        write_csv(&env.paths().figures.join(format!("fig2_{family}.csv")), &curves)?;
+        let wins = win_counts(&curves, 30);
+        println!("  wins: {wins:?}");
+
+        // 3-bit instability check for outlier families.
+        let three_bit: Vec<f64> = results
+            .iter()
+            .filter(|r| r.family == *family && spec_bits(&r.spec_key) == Some(3))
+            .map(|r| r.zs_mean)
+            .collect();
+        if !three_bit.is_empty() {
+            let mean3 = three_bit.iter().sum::<f64>() / three_bit.len() as f64;
+            println!(
+                "  3-bit mean zero-shot: {mean3:.3} (random = {random:.3}) — {}\n",
+                if mean3 < random + 0.05 { "UNSTABLE (paper: OPT/Pythia)" } else { "stable" }
+            );
+        }
+    }
+    let all_curves = bit_curves(&results, None);
+    if let Some(spread) = slope_spread(&all_curves) {
+        println!("cross-precision slope spread {spread:.3} (paper: curves near-parallel)");
+    }
+    Ok(())
+}

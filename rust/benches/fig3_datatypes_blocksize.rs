@@ -1,0 +1,61 @@
+//! E3 — Figure 3: what improves 4-bit scaling for Pythia-like models —
+//! data types (left panel) and block sizes (right panel).
+//!
+//! Expected shape: quantile/float dominate int/dynexp; block 64 beats
+//! block 1024 by roughly the 4→5-bit improvement while costing only
+//! +0.25 bits/param.
+
+use kbitscale::bench_support::{default_tiers, BenchEnv};
+use kbitscale::coordinator::{dedupe, GridBuilder};
+use kbitscale::report::figures::{build_curves, spec_block, spec_bits, spec_dtype, Metric};
+use kbitscale::report::{ascii_chart, write_csv};
+
+fn main() -> anyhow::Result<()> {
+    let env = BenchEnv::open()?;
+    let gb = GridBuilder::new(vec!["pythialike"], default_tiers());
+    let mut cells = gb.datatype_sweep(4);
+    cells.extend(gb.blocksize_sweep(4, &[Some(16), Some(64), Some(256), Some(1024), None]));
+    let results = env.run_grid_timed("fig3", &dedupe(cells))?;
+
+    let dt = build_curves(&results, Metric::ZsMean, |r| {
+        (spec_bits(&r.spec_key) == Some(4) && spec_block(&r.spec_key) == Some(64))
+            .then(|| format!("4-bit {}", spec_dtype(&r.spec_key)))
+    });
+    println!(
+        "{}",
+        ascii_chart("Figure 3 (left): 4-bit Pythia-like data types", "total model bits",
+            "mean zero-shot accuracy", &dt, 64, 13)
+    );
+    write_csv(&env.paths().figures.join("fig3_datatypes.csv"), &dt)?;
+
+    let bs = build_curves(&results, Metric::ZsMean, |r| {
+        (spec_bits(&r.spec_key) == Some(4) && spec_dtype(&r.spec_key) == "fp").then(|| {
+            match spec_block(&r.spec_key) {
+                Some(b) => format!("block {b:>4}"),
+                None => "tensor-wise".to_string(),
+            }
+        })
+    });
+    println!(
+        "{}",
+        ascii_chart("Figure 3 (right): 4-bit Pythia-like block sizes", "total model bits",
+            "mean zero-shot accuracy", &bs, 64, 13)
+    );
+    write_csv(&env.paths().figures.join("fig3_blocksizes.csv"), &bs)?;
+
+    // Quantitative check of the paper's claims on the largest tier.
+    let last_tier = default_tiers().last().cloned().unwrap();
+    let at = |f: &dyn Fn(&kbitscale::coordinator::CellResult) -> bool| {
+        results
+            .iter()
+            .find(|r| r.tier == last_tier && f(r))
+            .map(|r| r.zs_mean)
+    };
+    if let (Some(b64), Some(b1024)) = (
+        at(&|r| spec_dtype(&r.spec_key) == "fp" && spec_block(&r.spec_key) == Some(64)),
+        at(&|r| spec_dtype(&r.spec_key) == "fp" && spec_block(&r.spec_key) == Some(1024)),
+    ) {
+        println!("block 64 vs 1024 on {last_tier}: {b64:.3} vs {b1024:.3} (paper: small blocks win)");
+    }
+    Ok(())
+}

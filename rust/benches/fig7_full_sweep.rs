@@ -1,0 +1,57 @@
+//! E6 — Figure 7: full 3–16-bit scaling for all families (the appendix
+//! superset of Figure 2, including the Pythia-5-bit ≈ 4-bit note and the
+//! BLOOM ≈ BLOOMZ fine-tuning observation from Appendix C.1).
+
+use kbitscale::bench_support::{default_tiers, BenchEnv};
+use kbitscale::coordinator::GridBuilder;
+use kbitscale::report::figures::bit_curves;
+use kbitscale::report::{ascii_chart, write_csv};
+use kbitscale::scaling::win_counts;
+
+fn main() -> anyhow::Result<()> {
+    let env = BenchEnv::open()?;
+    let families = vec!["optlike", "pythialike", "gpt2like", "bloomlike", "bloomzlike"];
+    let gb = GridBuilder::new(families.clone(), default_tiers());
+    let results = env.run_grid_timed("fig7", &gb.bit_scaling(&[3, 4, 5, 6, 8, 16]))?;
+
+    for family in &families {
+        let curves = bit_curves(&results, Some(family));
+        if curves.is_empty() {
+            continue;
+        }
+        println!(
+            "{}",
+            ascii_chart(&format!("Figure 7 panel: {family} (3–16 bit)"),
+                "total model bits", "mean zero-shot accuracy", &curves, 64, 13)
+        );
+        write_csv(&env.paths().figures.join(format!("fig7_{family}.csv")), &curves)?;
+        println!("  wins: {:?}\n", win_counts(&curves, 30));
+    }
+
+    // Appendix C.1 check: BLOOMZ-like (fine-tuned) quantizes like its parent.
+    let delta: Vec<(String, f64)> = results
+        .iter()
+        .filter(|r| r.family == "bloomlike")
+        .filter_map(|b| {
+            results
+                .iter()
+                .find(|z| {
+                    z.family == "bloomzlike" && z.tier == b.tier && z.spec_key == b.spec_key
+                })
+                .map(|z| {
+                    let d16 = |r: &kbitscale::coordinator::CellResult| r.zs_mean;
+                    (format!("{}/{}", b.tier, b.spec_key), d16(z) - d16(b))
+                })
+        })
+        .collect();
+    if !delta.is_empty() {
+        let mean_abs: f64 =
+            delta.iter().map(|(_, d)| d.abs()).sum::<f64>() / delta.len() as f64;
+        println!(
+            "BLOOM-like vs BLOOMZ-like mean |zero-shot delta| across {} matched cells: {mean_abs:.3}",
+            delta.len()
+        );
+        println!("paper (App. C.1): fine-tuning does not change quantization behaviour.");
+    }
+    Ok(())
+}

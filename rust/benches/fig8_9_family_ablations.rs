@@ -1,0 +1,49 @@
+//! E7/E8 — Figures 8 & 9: 4-bit block-size and data-type ablations for
+//! every family (the appendix generalization of Figure 3).
+//!
+//! Expected shape: small blocks and fp/quantile data types improve 4-bit
+//! scaling for most families at most scales; improvements are larger for
+//! the outlier families (emergent features, Appendix C.2).
+
+use kbitscale::bench_support::{default_tiers, BenchEnv};
+use kbitscale::coordinator::{dedupe, GridBuilder};
+use kbitscale::report::figures::{build_curves, spec_block, spec_dtype, Metric};
+use kbitscale::report::{ascii_chart, write_csv};
+
+fn main() -> anyhow::Result<()> {
+    let env = BenchEnv::open()?;
+    let families = vec!["optlike", "pythialike", "gpt2like", "bloomlike"];
+    let gb = GridBuilder::new(families.clone(), default_tiers());
+    let mut cells = gb.blocksize_sweep(4, &[Some(64), Some(256), Some(1024), None]);
+    cells.extend(gb.datatype_sweep(4));
+    let results = env.run_grid_timed("fig8_9", &dedupe(cells))?;
+
+    for family in &families {
+        let bs = build_curves(&results, Metric::ZsMean, |r| {
+            (r.family == *family && spec_dtype(&r.spec_key) == "fp").then(|| {
+                match spec_block(&r.spec_key) {
+                    Some(b) => format!("block {b:>4}"),
+                    None => "tensor-wise".into(),
+                }
+            })
+        });
+        println!(
+            "{}",
+            ascii_chart(&format!("Figure 8 panel: 4-bit block sizes, {family}"),
+                "total model bits", "mean zero-shot accuracy", &bs, 62, 11)
+        );
+        write_csv(&env.paths().figures.join(format!("fig8_{family}.csv")), &bs)?;
+
+        let dt = build_curves(&results, Metric::ZsMean, |r| {
+            (r.family == *family && spec_block(&r.spec_key) == Some(64))
+                .then(|| spec_dtype(&r.spec_key).to_string())
+        });
+        println!(
+            "{}",
+            ascii_chart(&format!("Figure 9 panel: 4-bit data types, {family}"),
+                "total model bits", "mean zero-shot accuracy", &dt, 62, 11)
+        );
+        write_csv(&env.paths().figures.join(format!("fig9_{family}.csv")), &dt)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,125 @@
+//! Shared harness for the `benches/` reproduction targets.
+//!
+//! Every figure/table bench needs the same setup: artifacts present, the
+//! relevant checkpoints trained, a coordinator over the shared results
+//! store. [`BenchEnv`] provides that, training missing checkpoints on
+//! first use (with the bench training profile) and caching everything
+//! under `runs/`, so `cargo bench` is incremental after the first run.
+//!
+//! The vendored crate set has no criterion; benches use
+//! `harness = false` mains and report wall-clock + the paper-shaped
+//! tables/series through this module.
+
+use anyhow::Result;
+
+use crate::cli::{Ctx, Paths};
+use crate::coordinator::{Cell, CellResult, Coordinator, ResultsStore};
+use crate::models::checkpoint::CheckpointStore;
+use crate::models::families::Family;
+use crate::models::ModelId;
+use crate::train::{train_model, TrainConfig};
+
+/// Training profile used by benches: enough steps for clear scale
+/// separation, small enough to run on the CPU backend.
+pub fn bench_train_config() -> TrainConfig {
+    TrainConfig { steps: 500, ..TrainConfig::default() }
+}
+
+/// The tiers benches sweep by default (t4/t5 join via --full runs).
+pub fn default_tiers() -> Vec<String> {
+    ["t0", "t1", "t2", "t3"].iter().map(|s| s.to_string()).collect()
+}
+
+pub struct BenchEnv {
+    pub ctx: Ctx,
+    pub checkpoints: CheckpointStore,
+    pub results: ResultsStore,
+}
+
+impl BenchEnv {
+    /// Open the environment rooted at the repo directory.
+    pub fn open() -> Result<BenchEnv> {
+        crate::util::progress::init_logging();
+        let root = std::env::var("KBITSCALE_ROOT").unwrap_or_else(|_| ".".to_string());
+        let ctx = Ctx::new(&root)?;
+        let checkpoints = CheckpointStore::new(&ctx.paths.checkpoints);
+        let results = ResultsStore::open(&ctx.paths.results)?;
+        Ok(BenchEnv { ctx, checkpoints, results })
+    }
+
+    pub fn paths(&self) -> &Paths {
+        &self.ctx.paths
+    }
+
+    /// Ensure checkpoints exist for `(families x tiers)`, training any
+    /// missing ones (fine-tune parents first).
+    pub fn ensure_trained(&self, families: &[&'static str], tiers: &[String]) -> Result<()> {
+        let mut fams: Vec<&'static Family> =
+            families.iter().map(|n| Family::get(n)).collect::<Result<_>>()?;
+        fams.sort_by_key(|f| f.finetune_of.is_some());
+        let cfg = bench_train_config();
+        for family in fams {
+            for tier_name in tiers {
+                let id = ModelId::new(family.name, tier_name);
+                if self.checkpoints.exists(&id) {
+                    continue;
+                }
+                let tier = self.ctx.manifest.tier(tier_name)?;
+                eprintln!("[bench-setup] training {id} ({} params)...", tier.param_count);
+                let rep = train_model(
+                    &self.ctx.rt,
+                    &self.ctx.manifest,
+                    tier,
+                    family,
+                    &self.ctx.corpus,
+                    &cfg,
+                    &self.checkpoints,
+                )?;
+                eprintln!(
+                    "[bench-setup] {id}: loss {:.3} in {:.0}s",
+                    rep.final_loss, rep.wall_s
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn coordinator(&self) -> Coordinator<'_> {
+        Coordinator::new(
+            &self.ctx.rt,
+            &self.ctx.manifest,
+            &self.ctx.corpus,
+            &self.checkpoints,
+            &self.results,
+        )
+    }
+
+    /// Run a grid with setup + timing; prints the standard bench footer.
+    pub fn run_grid_timed(&self, name: &str, cells: &[Cell]) -> Result<Vec<CellResult>> {
+        let mut families: Vec<&'static str> = cells.iter().map(|c| c.family).collect();
+        families.sort_unstable();
+        families.dedup();
+        let mut tiers: Vec<String> = cells.iter().map(|c| c.tier.clone()).collect();
+        tiers.sort();
+        tiers.dedup();
+        self.ensure_trained(&families, &tiers)?;
+        let t = std::time::Instant::now();
+        let out = self.coordinator().run_grid(cells)?;
+        eprintln!(
+            "[{name}] {} cells in {:.1}s (store now {} cells)",
+            out.len(),
+            t.elapsed().as_secs_f64(),
+            self.results.len()
+        );
+        Ok(out)
+    }
+}
+
+/// Format helper used by bench mains for paper-shape summaries.
+pub fn fmt_opt(v: f64) -> String {
+    if v.is_finite() {
+        format!("{v:.3}")
+    } else {
+        "-".to_string()
+    }
+}

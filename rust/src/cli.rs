@@ -1,0 +1,421 @@
+//! Command-line interface: the `kbitscale` binary's subcommands.
+//!
+//! ```text
+//! kbitscale train    --families optlike,... --tiers t0,...   # train the zoo
+//! kbitscale sweep    --grid headline|full|...                # populate results
+//! kbitscale figures  --fig all|1|2|...                       # regenerate paper artifacts
+//! kbitscale analyze  --pearson                               # cross-metric analyses
+//! kbitscale quantize --tier t2 --family gpt2like --bits 4    # one-off cell
+//! kbitscale demo     --tier t2                               # generate text, fp16 vs 4-bit
+//! kbitscale status                                           # what exists on disk
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::{Cell, Coordinator, GridBuilder, ResultsStore};
+use crate::data::corpus::{Corpus, CorpusConfig};
+use crate::data::vocabulary::Vocabulary;
+use crate::eval::EvalSuite;
+use crate::models::checkpoint::CheckpointStore;
+use crate::models::families::Family;
+use crate::models::manifest::Manifest;
+use crate::quant::codebook::DataType;
+use crate::quant::QuantSpec;
+use crate::runtime::Runtime;
+use crate::train::{train_model, TrainConfig};
+use crate::util::argparse::{ArgSpec, Args};
+
+/// Filesystem layout of a run directory.
+pub struct Paths {
+    pub artifacts: PathBuf,
+    pub checkpoints: PathBuf,
+    pub results: PathBuf,
+    pub figures: PathBuf,
+}
+
+impl Paths {
+    pub fn from_root(root: &str) -> Paths {
+        let root = PathBuf::from(root);
+        Paths {
+            artifacts: root.join("artifacts"),
+            checkpoints: root.join("runs/checkpoints"),
+            results: root.join("runs/results.jsonl"),
+            figures: root.join("results"),
+        }
+    }
+}
+
+/// Everything a subcommand needs.
+pub struct Ctx {
+    pub paths: Paths,
+    pub rt: Runtime,
+    pub manifest: Manifest,
+    pub corpus: Corpus,
+}
+
+impl Ctx {
+    pub fn new(root: &str) -> Result<Ctx> {
+        let paths = Paths::from_root(root);
+        let manifest = Manifest::load(&paths.artifacts)?;
+        let corpus = Corpus::new(CorpusConfig {
+            vocab: manifest.vocab,
+            seq: manifest.seq,
+            ..CorpusConfig::default()
+        });
+        Ok(Ctx { rt: Runtime::cpu()?, manifest, corpus, paths })
+    }
+
+    pub fn checkpoint_store(&self) -> CheckpointStore {
+        CheckpointStore::new(&self.paths.checkpoints)
+    }
+
+    pub fn results_store(&self) -> Result<ResultsStore> {
+        ResultsStore::open(&self.paths.results)
+    }
+}
+
+pub fn main_with_args(argv: Vec<String>) -> Result<()> {
+    crate::util::progress::init_logging();
+    let Some(cmd) = argv.first().cloned() else {
+        bail!("usage: kbitscale <train|sweep|figures|analyze|quantize|demo|serve|status> [options]\n(see README.md)");
+    };
+    let rest = argv[1..].to_vec();
+    match cmd.as_str() {
+        "train" => cmd_train(&rest),
+        "sweep" => cmd_sweep(&rest),
+        "figures" => cmd_figures(&rest),
+        "analyze" => cmd_analyze(&rest),
+        "quantize" => cmd_quantize(&rest),
+        "demo" => cmd_demo(&rest),
+        "serve" => cmd_serve(&rest),
+        "status" => cmd_status(&rest),
+        other => bail!("unknown subcommand {other:?}"),
+    }
+}
+
+fn root_opt(spec: ArgSpec) -> ArgSpec {
+    spec.opt("root", Some("."), "repo root (artifacts/, runs/ live under it)")
+}
+
+fn all_tier_names(ctx: &Ctx) -> Vec<String> {
+    ctx.manifest.tiers.iter().map(|t| t.name.clone()).collect()
+}
+
+fn parse_tiers(ctx: &Ctx, args: &Args) -> Result<Vec<String>> {
+    let t = args.get("tiers")?;
+    if t == "all" {
+        Ok(all_tier_names(ctx))
+    } else {
+        args.list("tiers")
+    }
+}
+
+fn parse_families(args: &Args) -> Result<Vec<&'static Family>> {
+    let f = args.get("families")?;
+    if f == "all" {
+        Ok(crate::models::families::FAMILIES.iter().collect())
+    } else if f == "headline" {
+        Ok(Family::headline())
+    } else {
+        args.list("families")?.iter().map(|n| Family::get(n)).collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+
+fn cmd_train(raw: &[String]) -> Result<()> {
+    let spec = root_opt(
+        ArgSpec::new("train", "train the model zoo via the AOT train-step executables")
+            .opt("families", Some("headline"), "families (csv | headline | all)")
+            .opt("tiers", Some("all"), "tiers (csv | all)")
+            .opt("steps", Some("300"), "training steps per model")
+            .flag("force", "retrain even if a checkpoint exists"),
+    );
+    let args = spec.parse(raw)?;
+    let ctx = Ctx::new(args.get("root")?)?;
+    let store = ctx.checkpoint_store();
+    let cfg = TrainConfig { steps: args.usize("steps")?, ..TrainConfig::default() };
+
+    // Fine-tune families must come after their parents.
+    let mut families = parse_families(&args)?;
+    families.sort_by_key(|f| f.finetune_of.is_some());
+
+    for family in families {
+        for tier_name in parse_tiers(&ctx, &args)? {
+            let tier = ctx.manifest.tier(&tier_name)?;
+            let id = crate::models::ModelId::new(family.name, &tier_name);
+            if store.exists(&id) && !args.flag("force") {
+                log::info!("{id}: checkpoint exists, skipping");
+                continue;
+            }
+            let rep = train_model(&ctx.rt, &ctx.manifest, tier, family, &ctx.corpus, &cfg, &store)?;
+            println!(
+                "{id}: {} steps, final loss {:.4}, {:.1}s ({:.1} steps/s)",
+                rep.steps,
+                rep.final_loss,
+                rep.wall_s,
+                rep.steps as f64 / rep.wall_s
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_sweep(raw: &[String]) -> Result<()> {
+    let spec = root_opt(
+        ArgSpec::new("sweep", "evaluate quantization grids into the results store")
+            .opt("grid", Some("headline"), "headline|datatypes|blocksizes|proxy|exponent|centering|perplexity")
+            .opt("families", Some("headline"), "families (csv | headline | all)")
+            .opt("tiers", Some("all"), "tiers (csv | all)")
+            .opt("ks", Some("3,4,8,16"), "bit widths for the headline grid")
+            .opt("threads", Some("2"), "sweep worker threads"),
+    );
+    let args = spec.parse(raw)?;
+    let ctx = Ctx::new(args.get("root")?)?;
+    let ckpt = ctx.checkpoint_store();
+    let results = ctx.results_store()?;
+    let mut coord = Coordinator::new(&ctx.rt, &ctx.manifest, &ctx.corpus, &ckpt, &results);
+    coord.threads = args.usize("threads")?;
+
+    let families: Vec<&'static str> = parse_families(&args)?.iter().map(|f| f.name).collect();
+    let gb = GridBuilder::new(families, parse_tiers(&ctx, &args)?);
+    let cells = match args.get("grid")? {
+        "headline" => gb.bit_scaling(&args.usize_list("ks")?),
+        "datatypes" => gb.datatype_sweep(4),
+        "blocksizes" => gb.blocksize_sweep(4, &[Some(16), Some(64), Some(256), Some(1024), None]),
+        "proxy" => gb.proxy_sweep(0.02),
+        "exponent" => gb.exponent_sweep(&[3, 4, 5, 6, 7, 8]),
+        "centering" => gb.centering_sweep(4),
+        "perplexity" => gb.perplexity_scaling(),
+        g => bail!("unknown grid {g:?}"),
+    };
+    let cells = crate::coordinator::dedupe(cells);
+    let t = std::time::Instant::now();
+    let out = coord.run_grid(&cells)?;
+    println!(
+        "swept {} cells in {:.1}s ({} total in store)",
+        out.len(),
+        t.elapsed().as_secs_f64(),
+        results.len()
+    );
+    Ok(())
+}
+
+fn cmd_figures(raw: &[String]) -> Result<()> {
+    let spec = root_opt(
+        ArgSpec::new("figures", "regenerate paper figures/tables from the results store")
+            .opt("fig", Some("all"), "all|1|2|3|4|7|13 (others via benches)"),
+    );
+    let args = spec.parse(raw)?;
+    let ctx = Ctx::new(args.get("root")?)?;
+    let results = ctx.results_store()?;
+    if results.is_empty() {
+        bail!("results store empty — run `kbitscale sweep` (or the benches) first");
+    }
+    let which = args.get("fig")?;
+    let figs = crate::report::figures::render_known(&results, &ctx.paths.figures, which)?;
+    for f in figs {
+        println!("{f}");
+    }
+    Ok(())
+}
+
+fn cmd_analyze(raw: &[String]) -> Result<()> {
+    let spec = root_opt(
+        ArgSpec::new("analyze", "cross-metric analyses over the results store")
+            .flag("pearson", "perplexity vs zero-shot Pearson correlation (paper: -0.94)")
+            .flag("wins", "4-bit win-rate across bit budgets"),
+    );
+    let args = spec.parse(raw)?;
+    let ctx = Ctx::new(args.get("root")?)?;
+    let results = ctx.results_store()?;
+    let all = results.all();
+    if args.flag("pearson") || !args.flag("wins") {
+        let pairs: Vec<(f64, f64)> = all
+            .iter()
+            .filter(|r| r.zs_mean.is_finite())
+            .map(|r| (r.ce, r.zs_mean))
+            .collect();
+        if pairs.len() < 3 {
+            bail!("not enough zero-shot cells for correlation ({}): sweep first", pairs.len());
+        }
+        let xs: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+        let ys: Vec<f64> = pairs.iter().map(|p| p.1).collect();
+        let r = crate::scaling::pearson(&xs, &ys);
+        println!(
+            "Pearson(CE loss, mean zero-shot) = {r:.3} over {} cells  (paper: -0.94 vs ppl)",
+            pairs.len()
+        );
+    }
+    if args.flag("wins") {
+        let curves = crate::report::figures::bit_curves(&all, None);
+        let wins = crate::scaling::win_counts(&curves, 50);
+        println!("win counts across 50 log-spaced bit budgets: {wins:?}");
+    }
+    Ok(())
+}
+
+fn cmd_quantize(raw: &[String]) -> Result<()> {
+    let spec = root_opt(
+        ArgSpec::new("quantize", "evaluate one quantization cell end to end")
+            .opt("family", Some("gpt2like"), "model family")
+            .opt("tier", Some("t0"), "model tier")
+            .opt("bits", Some("4"), "bit width (16 = baseline)")
+            .opt("dtype", Some("fp"), "int|fp|quantile|dynexp")
+            .opt("block", Some("64"), "block size (0 = tensor-wise)")
+            .flag("zero-shot", "also run the four zero-shot tasks"),
+    );
+    let args = spec.parse(raw)?;
+    let ctx = Ctx::new(args.get("root")?)?;
+    let ckpt = ctx.checkpoint_store();
+    let results = ctx.results_store()?;
+    let coord = Coordinator::new(&ctx.rt, &ctx.manifest, &ctx.corpus, &ckpt, &results);
+
+    let bits = args.usize("bits")?;
+    let block = match args.usize("block")? {
+        0 => None,
+        b => Some(b),
+    };
+    let qspec = if bits >= 16 {
+        QuantSpec::baseline16()
+    } else {
+        QuantSpec::new(DataType::parse(args.get("dtype")?)?, bits, block)
+    };
+    let suite = if args.flag("zero-shot") { EvalSuite::PplZeroShot } else { EvalSuite::Ppl };
+    let family = Family::get(args.get("family")?)?;
+    let cell = Cell::new(family.name, args.get("tier")?, qspec, suite);
+    let r = coord.run_cell(&cell)?;
+    println!(
+        "{}/{} {}: ce {:.4}  ppl {:.2}  zs_mean {}  bits/param {:.2}  total bits {:.3e}  ({:.2}s)",
+        r.family,
+        r.tier,
+        r.spec_key,
+        r.ce,
+        r.ppl,
+        if r.zs_mean.is_nan() { "-".to_string() } else { format!("{:.3}", r.zs_mean) },
+        r.bits_per_param,
+        r.total_bits,
+        r.wall_s
+    );
+    results.put(r)?;
+    Ok(())
+}
+
+fn cmd_demo(raw: &[String]) -> Result<()> {
+    let spec = root_opt(
+        ArgSpec::new("demo", "decode a held-out sequence and show fp16-vs-4bit token NLL")
+            .opt("family", Some("gpt2like"), "model family")
+            .opt("tier", Some("t0"), "model tier"),
+    );
+    let args = spec.parse(raw)?;
+    let ctx = Ctx::new(args.get("root")?)?;
+    let ckpt = ctx.checkpoint_store();
+    let family = Family::get(args.get("family")?)?;
+    let tier = ctx.manifest.tier(args.get("tier")?)?;
+    let id = crate::models::ModelId::new(family.name, &tier.name);
+    let (params, meta) = ckpt.load(&id)?;
+
+    let vocab = Vocabulary::new(ctx.manifest.vocab);
+    let seq = &ctx.corpus.eval_sequences(1)[0];
+    println!("model {id} (trained {} steps, loss {:.3})", meta.steps, meta.final_loss);
+    println!("held-out text: {}\n", vocab.decode(&seq[..24.min(seq.len())]));
+
+    let ev = crate::eval::Evaluator::new(&ctx.rt, &ctx.manifest, tier)?;
+    for (label, spec) in [
+        ("16-bit baseline", QuantSpec::baseline16()),
+        ("4-bit fp, block 64", QuantSpec::new(DataType::Fp, 4, Some(64))),
+        ("3-bit fp, block 64", QuantSpec::new(DataType::Fp, 3, Some(64))),
+    ] {
+        let q = crate::quant::quantize_checkpoint(&params, &tier.quantized_params, &spec);
+        let plits = ev.param_literals(&q)?;
+        let (ce, ppl, top1) = ev.perplexity(&plits, &ctx.corpus, 16)?;
+        println!("{label:<20} ce {ce:.4}  ppl {ppl:6.2}  greedy-acc {top1:.3}");
+    }
+    Ok(())
+}
+
+fn cmd_serve(raw: &[String]) -> Result<()> {
+    let spec = root_opt(
+        ArgSpec::new("serve", "serve a quantized model over JSON lines (stdin or TCP)")
+            .opt("family", Some("gpt2like"), "model family")
+            .opt("tier", Some("t0"), "model tier")
+            .opt("bits", Some("4"), "quantization bit width (16 = baseline)")
+            .opt("dtype", Some("fp"), "int|fp|quantile|dynexp")
+            .opt("block", Some("64"), "block size (0 = tensor-wise)")
+            .opt("tcp", None, "listen address (e.g. 127.0.0.1:7878); default stdin/stdout"),
+    );
+    let args = spec.parse(raw)?;
+    let ctx = Ctx::new(args.get("root")?)?;
+    let family = Family::get(args.get("family")?)?;
+    let tier = ctx.manifest.tier(args.get("tier")?)?;
+    let id = crate::models::ModelId::new(family.name, &tier.name);
+    let (params, _) = ctx.checkpoint_store().load(&id)?;
+    let bits = args.usize("bits")?;
+    let qspec = if bits >= 16 {
+        QuantSpec::baseline16()
+    } else {
+        let block = match args.usize("block")? { 0 => None, b => Some(b) };
+        QuantSpec::new(DataType::parse(args.get("dtype")?)?, bits, block)
+    };
+    let corpus = Corpus::new(CorpusConfig {
+        vocab: ctx.manifest.vocab,
+        seq: ctx.manifest.seq,
+        ..CorpusConfig::default()
+    });
+    let mut session = crate::server::Session::new(
+        &ctx.rt, &ctx.manifest, tier, &params, qspec, corpus, id.key(),
+    )?;
+    match args.opt_get("tcp") {
+        Some(addr) => crate::server::serve_tcp(&mut session, addr),
+        None => {
+            let stdin = std::io::stdin();
+            let n = crate::server::serve_lines(&mut session, stdin.lock(), std::io::stdout())?;
+            log::info!("served {n} requests");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_status(raw: &[String]) -> Result<()> {
+    let spec = root_opt(ArgSpec::new("status", "inventory of artifacts, checkpoints, results"));
+    let args = spec.parse(raw)?;
+    let paths = Paths::from_root(args.get("root")?);
+    match Manifest::load(&paths.artifacts) {
+        Ok(m) => println!(
+            "artifacts: {} tiers ({}), kernels {}x{}x{}",
+            m.tiers.len(),
+            m.tiers.iter().map(|t| t.name.as_str()).collect::<Vec<_>>().join(","),
+            m.kernels.m,
+            m.kernels.k,
+            m.kernels.n
+        ),
+        Err(e) => println!("artifacts: MISSING ({e:#})"),
+    }
+    let ckpts = CheckpointStore::new(&paths.checkpoints).list();
+    println!("checkpoints: {} ({})", ckpts.len(), ckpts.join(", "));
+    match ResultsStore::open(&paths.results) {
+        Ok(s) => println!("results: {} cells in {}", s.len(), paths.results.display()),
+        Err(e) => println!("results: unreadable ({e:#})"),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_subcommand_errors() {
+        assert!(main_with_args(vec!["frobnicate".into()]).is_err());
+        assert!(main_with_args(vec![]).is_err());
+    }
+
+    #[test]
+    fn paths_layout() {
+        let p = Paths::from_root("/x");
+        assert_eq!(p.artifacts, PathBuf::from("/x/artifacts"));
+        assert_eq!(p.results, PathBuf::from("/x/runs/results.jsonl"));
+    }
+}

@@ -1,0 +1,168 @@
+//! Run configuration files: a declarative alternative to CLI flags for
+//! training and sweep campaigns (`kbitscale sweep --config run.toml`).
+//!
+//! ```toml
+//! # configs/headline.toml
+//! [train]
+//! families = ["optlike", "pythialike", "gpt2like", "bloomlike"]
+//! tiers    = ["t0", "t1", "t2", "t3"]
+//! steps    = 500
+//! base_lr  = 3e-3
+//!
+//! [sweep]
+//! grid      = "headline"
+//! ks        = [3, 4, 8, 16]
+//! threads   = 2
+//! zero_shot = true
+//!
+//! [eval]
+//! ppl_sequences = 48
+//! zs_examples   = 48
+//! ```
+//!
+//! Missing sections/keys fall back to the same defaults the CLI uses, so
+//! a config file only needs to state what it changes.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::eval::EvalConfig;
+use crate::train::TrainConfig;
+use crate::util::json::Json;
+use crate::util::toml;
+
+/// Parsed run configuration.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub families: Vec<String>,
+    pub tiers: Vec<String>,
+    pub train: TrainConfig,
+    pub grid: String,
+    pub ks: Vec<usize>,
+    pub threads: usize,
+    pub eval: EvalConfig,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            families: vec![
+                "optlike".into(),
+                "pythialike".into(),
+                "gpt2like".into(),
+                "bloomlike".into(),
+            ],
+            tiers: vec!["t0".into(), "t1".into(), "t2".into(), "t3".into()],
+            train: TrainConfig::default(),
+            grid: "headline".into(),
+            ks: vec![3, 4, 8, 16],
+            threads: 2,
+            eval: EvalConfig::default(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn load(path: &Path) -> Result<RunConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        Self::from_toml(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn from_toml(text: &str) -> Result<RunConfig> {
+        let doc = toml::parse(text)?;
+        let mut cfg = RunConfig::default();
+
+        if let Some(train) = doc.opt("train") {
+            if let Some(v) = train.opt("families") {
+                cfg.families = strings(v)?;
+            }
+            if let Some(v) = train.opt("tiers") {
+                cfg.tiers = strings(v)?;
+            }
+            if let Some(v) = train.opt("steps") {
+                cfg.train.steps = v.as_usize()?;
+            }
+            if let Some(v) = train.opt("base_lr") {
+                cfg.train.base_lr = v.as_f64()?;
+            }
+            if let Some(v) = train.opt("warmup_steps") {
+                cfg.train.warmup_steps = v.as_usize()?;
+            }
+        }
+        if let Some(sweep) = doc.opt("sweep") {
+            if let Some(v) = sweep.opt("grid") {
+                cfg.grid = v.as_str()?.to_string();
+            }
+            if let Some(v) = sweep.opt("ks") {
+                cfg.ks = v.usizes()?;
+            }
+            if let Some(v) = sweep.opt("threads") {
+                cfg.threads = v.as_usize()?;
+            }
+        }
+        if let Some(eval) = doc.opt("eval") {
+            if let Some(v) = eval.opt("ppl_sequences") {
+                cfg.eval.ppl_sequences = v.as_usize()?;
+            }
+            if let Some(v) = eval.opt("zs_examples") {
+                cfg.eval.zs_examples = v.as_usize()?;
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+fn strings(v: &Json) -> Result<Vec<String>> {
+    v.as_arr()?
+        .iter()
+        .map(|x| Ok(x.as_str()?.to_string()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_when_empty() {
+        let c = RunConfig::from_toml("").unwrap();
+        assert_eq!(c.grid, "headline");
+        assert_eq!(c.train.steps, TrainConfig::default().steps);
+        assert_eq!(c.families.len(), 4);
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let c = RunConfig::from_toml(
+            r#"
+[train]
+families = ["gpt2like"]
+steps = 42
+base_lr = 1e-4
+[sweep]
+grid = "datatypes"
+ks = [4]
+threads = 8
+[eval]
+ppl_sequences = 16
+"#,
+        )
+        .unwrap();
+        assert_eq!(c.families, vec!["gpt2like"]);
+        assert_eq!(c.train.steps, 42);
+        assert!((c.train.base_lr - 1e-4).abs() < 1e-15);
+        assert_eq!(c.grid, "datatypes");
+        assert_eq!(c.ks, vec![4]);
+        assert_eq!(c.threads, 8);
+        assert_eq!(c.eval.ppl_sequences, 16);
+        // Unspecified keys keep defaults.
+        assert_eq!(c.eval.zs_examples, EvalConfig::default().zs_examples);
+    }
+
+    #[test]
+    fn bad_types_error() {
+        assert!(RunConfig::from_toml("[train]\nsteps = \"many\"").is_err());
+    }
+}

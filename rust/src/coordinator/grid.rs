@@ -1,0 +1,213 @@
+//! Sweep grids: declarative cell enumeration for every experiment.
+//!
+//! A [`Cell`] is one point of the paper's grid — (family, tier, quant
+//! spec, eval suite). Builders below produce the exact grids each figure
+//! needs; the runner dedupes against the results store, so overlapping
+//! grids (Fig 1 ⊂ Fig 7, etc.) cost nothing extra.
+
+use crate::eval::EvalSuite;
+use crate::quant::codebook::DataType;
+use crate::quant::QuantSpec;
+
+/// One sweep cell.
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub family: &'static str,
+    pub tier: String,
+    pub spec: QuantSpec,
+    pub suite: EvalSuite,
+}
+
+impl Cell {
+    pub fn new(family: &'static str, tier: &str, spec: QuantSpec, suite: EvalSuite) -> Self {
+        Cell { family, tier: tier.to_string(), spec, suite }
+    }
+}
+
+/// The paper's default method choice for headline bit-level plots:
+/// float data type with block size 64 for k < 16 (§7 recommendations),
+/// plain 16-bit baseline otherwise.
+pub fn headline_spec(bits: usize) -> QuantSpec {
+    if bits >= 16 {
+        QuantSpec::baseline16()
+    } else {
+        QuantSpec::new(DataType::Fp, bits, Some(64))
+    }
+}
+
+/// Grid builders, one per experiment family (DESIGN.md §4).
+pub struct GridBuilder {
+    pub tiers: Vec<String>,
+    pub families: Vec<&'static str>,
+}
+
+impl GridBuilder {
+    pub fn new(families: Vec<&'static str>, tiers: Vec<String>) -> Self {
+        GridBuilder { tiers, families }
+    }
+
+    fn cells(
+        &self,
+        specs: impl IntoIterator<Item = QuantSpec> + Clone,
+        suite: EvalSuite,
+    ) -> Vec<Cell> {
+        let mut out = Vec::new();
+        for family in &self.families {
+            for tier in &self.tiers {
+                for spec in specs.clone() {
+                    out.push(Cell::new(family, tier, spec, suite));
+                }
+            }
+        }
+        out
+    }
+
+    /// E1/E2/E6 (Figs 1, 2, 7): bit-level scaling, k ∈ given set,
+    /// headline method per k.
+    pub fn bit_scaling(&self, ks: &[usize]) -> Vec<Cell> {
+        self.cells(
+            ks.iter().map(|&k| headline_spec(k)).collect::<Vec<_>>(),
+            EvalSuite::PplZeroShot,
+        )
+    }
+
+    /// E3/E8 (Figs 3, 8): block-size sweep at fixed k.
+    pub fn blocksize_sweep(&self, k: usize, blocks: &[Option<usize>]) -> Vec<Cell> {
+        self.cells(
+            blocks
+                .iter()
+                .map(|&b| QuantSpec::new(DataType::Fp, k, b))
+                .collect::<Vec<_>>(),
+            EvalSuite::PplZeroShot,
+        )
+    }
+
+    /// E3/E9/E10 (Figs 3, 9, 10): data-type sweep at fixed k, block 64.
+    pub fn datatype_sweep(&self, k: usize) -> Vec<Cell> {
+        self.cells(
+            DataType::ALL
+                .iter()
+                .map(|&dt| QuantSpec::new(dt, k, Some(64)))
+                .collect::<Vec<_>>(),
+            EvalSuite::PplZeroShot,
+        )
+    }
+
+    /// E4 (Fig 4): proxy quantization on/off at k ∈ {3, 4}.
+    pub fn proxy_sweep(&self, pct: f64) -> Vec<Cell> {
+        let mut specs = Vec::new();
+        for k in [3usize, 4] {
+            specs.push(QuantSpec::new(DataType::Fp, k, Some(64)));
+            specs.push(QuantSpec::new(DataType::Fp, k, Some(64)).with_proxy(pct));
+        }
+        specs.push(QuantSpec::baseline16());
+        self.cells(specs, EvalSuite::PplZeroShot)
+    }
+
+    /// E10 (Fig 12): float exponent-bit sweep per precision, block 64.
+    pub fn exponent_sweep(&self, ks: &[usize]) -> Vec<Cell> {
+        let mut specs = Vec::new();
+        for &k in ks {
+            for e in 1..k.saturating_sub(1) {
+                specs.push(QuantSpec::new(DataType::Fp, k, Some(64)).with_exponent_bits(e));
+            }
+        }
+        self.cells(specs, EvalSuite::Ppl)
+    }
+
+    /// E13 (App. B): centering on/off across data types at fixed k.
+    pub fn centering_sweep(&self, k: usize) -> Vec<Cell> {
+        let mut specs = Vec::new();
+        for dt in DataType::ALL {
+            specs.push(QuantSpec::new(dt, k, Some(64)));
+            specs.push(QuantSpec::new(dt, k, Some(64)).with_centering());
+        }
+        self.cells(specs, EvalSuite::Ppl)
+    }
+
+    /// E11 (Figs 13–15): perplexity-based scaling (cheap suite) across
+    /// precisions, data types, and block sizes.
+    pub fn perplexity_scaling(&self) -> Vec<Cell> {
+        let mut specs = vec![QuantSpec::baseline16()];
+        for k in [3usize, 4, 5, 6, 8] {
+            specs.push(headline_spec(k));
+        }
+        for dt in DataType::ALL {
+            specs.push(QuantSpec::new(dt, 4, Some(64)));
+        }
+        for b in [Some(32), Some(256), Some(1024), None] {
+            specs.push(QuantSpec::new(DataType::Fp, 4, b));
+        }
+        specs.dedup_by_key(|s| s.key());
+        self.cells(specs, EvalSuite::Ppl)
+    }
+}
+
+/// Dedupe cells by their full configuration key, preferring the richer
+/// eval suite when both appear.
+pub fn dedupe(cells: Vec<Cell>) -> Vec<Cell> {
+    use std::collections::BTreeMap;
+    let mut by_key: BTreeMap<String, Cell> = BTreeMap::new();
+    for c in cells {
+        let key = format!("{}|{}|{}", c.family, c.tier, c.spec.key());
+        match by_key.get(&key) {
+            Some(prev) if prev.suite == EvalSuite::PplZeroShot => {}
+            _ => {
+                by_key.insert(key, c);
+            }
+        }
+    }
+    by_key.into_values().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gb() -> GridBuilder {
+        GridBuilder::new(vec!["optlike", "gpt2like"], vec!["t0".into(), "t1".into()])
+    }
+
+    #[test]
+    fn bit_scaling_grid_size() {
+        let cells = gb().bit_scaling(&[3, 4, 8, 16]);
+        assert_eq!(cells.len(), 2 * 2 * 4);
+        // 16-bit cells use the baseline spec.
+        assert!(cells.iter().any(|c| c.spec.is_baseline()));
+    }
+
+    #[test]
+    fn headline_spec_matches_recommendations() {
+        let s = headline_spec(4);
+        assert_eq!(s.dtype, DataType::Fp);
+        assert_eq!(s.block, Some(64));
+        assert!(headline_spec(16).is_baseline());
+    }
+
+    #[test]
+    fn exponent_sweep_covers_valid_layouts() {
+        let cells = gb().exponent_sweep(&[3, 4]);
+        // k=3: e=1; k=4: e∈{1,2} → 3 specs per (family, tier).
+        assert_eq!(cells.len(), 2 * 2 * 3);
+        for c in &cells {
+            assert!(c.spec.exponent_bits.is_some());
+        }
+    }
+
+    #[test]
+    fn dedupe_prefers_zero_shot_suite() {
+        let a = Cell::new("optlike", "t0", headline_spec(4), EvalSuite::Ppl);
+        let b = Cell::new("optlike", "t0", headline_spec(4), EvalSuite::PplZeroShot);
+        let out = dedupe(vec![a, b]);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].suite, EvalSuite::PplZeroShot);
+    }
+
+    #[test]
+    fn proxy_sweep_contains_on_off_pairs() {
+        let cells = gb().proxy_sweep(0.02);
+        let with: usize = cells.iter().filter(|c| c.spec.proxy_outlier_pct.is_some()).count();
+        let without = cells.len() - with;
+        assert!(with > 0 && without > 0);
+    }
+}

@@ -1,0 +1,236 @@
+//! The sweep coordinator — Layer 3's core loop.
+//!
+//! Orchestrates the paper's grid: for each [`grid::Cell`], load the
+//! trained checkpoint, apply the quantization spec (the Rust hot path),
+//! run the evaluation suite through the AOT forward executable, account
+//! total model bits, and persist to the [`store::ResultsStore`].
+//!
+//! Concurrency model: cells fan out across a worker pool
+//! (`util::pool::parallel_map`); each worker shares the process-wide PJRT
+//! runtime (thread-safe) and compiled-executable cache. Checkpoints are
+//! read-only and cached in memory per (family, tier). The store dedupes:
+//! already-evaluated cells are skipped, making every figure bench
+//! incremental.
+
+pub mod grid;
+pub mod store;
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::data::corpus::Corpus;
+use crate::eval::{EvalConfig, EvalSuite, Evaluator};
+use crate::models::checkpoint::CheckpointStore;
+use crate::models::manifest::Manifest;
+use crate::models::ModelId;
+use crate::quant;
+use crate::tensor::Tensor;
+use crate::util::pool;
+
+pub use grid::{dedupe, Cell, GridBuilder};
+pub use store::{cell_key, CellResult, ResultsStore};
+
+/// Workload bump this when corpus/eval semantics change incompatibly.
+pub const DATA_VERSION: u32 = 1;
+
+/// Shared context for a sweep run.
+pub struct Coordinator<'a> {
+    pub rt: &'a crate::runtime::Runtime,
+    pub manifest: &'a Manifest,
+    pub corpus: &'a Corpus,
+    pub checkpoints: &'a CheckpointStore,
+    pub results: &'a ResultsStore,
+    pub eval_cfg: EvalConfig,
+    pub threads: usize,
+    /// In-memory checkpoint cache (family_tier -> params).
+    param_cache: Mutex<HashMap<String, std::sync::Arc<Vec<(String, Tensor)>>>>,
+}
+
+impl<'a> Coordinator<'a> {
+    pub fn new(
+        rt: &'a crate::runtime::Runtime,
+        manifest: &'a Manifest,
+        corpus: &'a Corpus,
+        checkpoints: &'a CheckpointStore,
+        results: &'a ResultsStore,
+    ) -> Self {
+        Coordinator {
+            rt,
+            manifest,
+            corpus,
+            checkpoints,
+            results,
+            eval_cfg: EvalConfig::default(),
+            threads: 2, // PJRT CPU is itself multithreaded; 2 keeps it fed
+            param_cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn suite_name(suite: EvalSuite) -> &'static str {
+        match suite {
+            EvalSuite::Ppl => "ppl",
+            EvalSuite::PplZeroShot => "ppl_zs",
+        }
+    }
+
+    fn key_for(&self, cell: &Cell) -> String {
+        cell_key(
+            cell.family,
+            &cell.tier,
+            &cell.spec.key(),
+            Self::suite_name(cell.suite),
+            self.eval_cfg.ppl_sequences,
+            self.eval_cfg.zs_examples,
+            self.corpus.cfg.seed,
+            DATA_VERSION,
+        )
+    }
+
+    fn load_params(&self, cell: &Cell) -> Result<std::sync::Arc<Vec<(String, Tensor)>>> {
+        let id = ModelId::new(cell.family, cell.tier.clone());
+        let ck = id.key();
+        if let Some(hit) = self.param_cache.lock().unwrap().get(&ck) {
+            return Ok(hit.clone());
+        }
+        let (params, _) = self.checkpoints.load(&id)?;
+        let arc = std::sync::Arc::new(params);
+        self.param_cache.lock().unwrap().insert(ck, arc.clone());
+        Ok(arc)
+    }
+
+    /// Evaluate one cell (no store interaction).
+    pub fn run_cell(&self, cell: &Cell) -> Result<CellResult> {
+        let t0 = std::time::Instant::now();
+        let tier = self.manifest.tier(&cell.tier)?;
+        let params = self.load_params(cell)?;
+
+        // The hot path: quantize→dequantize the checkpoint under the spec.
+        let qparams =
+            quant::quantize_checkpoint(&params, &tier.quantized_params, &cell.spec);
+
+        let ev = Evaluator::new(self.rt, self.manifest, tier)?;
+        let r = ev.run(&qparams, self.corpus, cell.suite, &self.eval_cfg)?;
+
+        let bpp = quant::bits_per_param(&cell.spec);
+        let total_bits = quant::bitcost::total_model_bits(
+            &tier.param_sizes(),
+            &tier.quantized_params,
+            &cell.spec,
+        );
+
+        Ok(CellResult {
+            key: self.key_for(cell),
+            family: cell.family.to_string(),
+            tier: cell.tier.clone(),
+            spec_key: cell.spec.key(),
+            suite: Self::suite_name(cell.suite).to_string(),
+            ce: r.ce,
+            ppl: r.ppl,
+            zs_acc: r.zs_acc,
+            zs_mean: r.zs_mean,
+            top1: r.top1,
+            total_bits,
+            bits_per_param: bpp,
+            param_count: tier.param_count,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Run a whole grid with caching + worker pool. Returns results in the
+    /// input cell order.
+    pub fn run_grid(&self, cells: &[Cell]) -> Result<Vec<CellResult>> {
+        // Partition into cached / to-run.
+        let mut cached: Vec<Option<CellResult>> = Vec::with_capacity(cells.len());
+        let mut todo: Vec<usize> = Vec::new();
+        for (i, cell) in cells.iter().enumerate() {
+            match self.results.get(&self.key_for(cell)) {
+                Some(hit) => cached.push(Some(hit)),
+                None => {
+                    cached.push(None);
+                    todo.push(i);
+                }
+            }
+        }
+        if !todo.is_empty() {
+            log::info!(
+                "sweep: {} cells ({} cached, {} to run) on {} workers",
+                cells.len(),
+                cells.len() - todo.len(),
+                todo.len(),
+                self.threads
+            );
+            // Pre-compile each tier's forward executable serially: PJRT
+            // compilation is not profitably concurrent and this keeps
+            // worker wall-times flat.
+            let mut tiers: Vec<&str> = todo.iter().map(|&i| cells[i].tier.as_str()).collect();
+            tiers.sort_unstable();
+            tiers.dedup();
+            for t in tiers {
+                let tier = self.manifest.tier(t)?;
+                self.rt.load(&self.manifest.hlo_path(&tier.fwd_hlo))?;
+            }
+            let fresh = pool::parallel_map(todo.len(), self.threads, |j| {
+                let cell = &cells[todo[j]];
+                self.run_cell(cell)
+                    .with_context(|| format!("cell {}/{} {}", cell.family, cell.tier, cell.spec))
+            });
+            for (j, res) in fresh.into_iter().enumerate() {
+                let r = res?;
+                self.results.put(r.clone())?;
+                cached[todo[j]] = Some(r);
+            }
+        }
+        Ok(cached.into_iter().map(|c| c.unwrap()).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Grid/store logic is covered in `grid.rs`/`store.rs`; the full
+    //! coordinator path (PJRT + artifacts + checkpoints) is exercised by
+    //! `rust/tests/e2e_sweep.rs` and the figure benches.
+    use super::*;
+    use crate::prop_assert;
+    use crate::quant::codebook::DataType;
+    use crate::quant::QuantSpec;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn prop_grid_dedupe_idempotent_and_complete() {
+        check("grid-dedupe", 30, |rng, _| {
+            // Random grids with duplicates must dedupe to the set of
+            // distinct (family, tier, spec) triples and be idempotent.
+            let families = ["optlike", "gpt2like"];
+            let tiers = ["t0", "t1", "t2"];
+            let n = 1 + rng.below(40);
+            let mut cells = Vec::new();
+            for _ in 0..n {
+                let spec = QuantSpec::new(
+                    DataType::ALL[rng.below(4)],
+                    3 + rng.below(6),
+                    Some([32usize, 64, 128][rng.below(3)]),
+                );
+                let suite = if rng.below(2) == 0 { EvalSuite::Ppl } else { EvalSuite::PplZeroShot };
+                cells.push(Cell::new(
+                    families[rng.below(2)],
+                    tiers[rng.below(3)],
+                    spec,
+                    suite,
+                ));
+            }
+            let mut distinct: Vec<String> = cells
+                .iter()
+                .map(|c| format!("{}|{}|{}", c.family, c.tier, c.spec.key()))
+                .collect();
+            distinct.sort();
+            distinct.dedup();
+            let d1 = dedupe(cells);
+            prop_assert!(d1.len() == distinct.len(), "dedupe size {} != {}", d1.len(), distinct.len());
+            let d2 = dedupe(d1.clone());
+            prop_assert!(d2.len() == d1.len(), "dedupe not idempotent");
+            Ok(())
+        });
+    }
+}

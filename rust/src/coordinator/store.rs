@@ -1,0 +1,244 @@
+//! Results store: an append-only JSONL database of evaluated sweep cells.
+//!
+//! Every cell is keyed by a stable hash of its full configuration (model,
+//! quant spec, eval suite, workload sizes, data seed). Reruns and the
+//! per-figure benches share the store, so a cell is evaluated **once**
+//! across the whole reproduction — the same economics that let the paper
+//! amortize 35,000 experiments.
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::util::fnv1a;
+use crate::util::json::Json;
+
+/// Everything stored for one evaluated cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellResult {
+    pub key: String,
+    pub family: String,
+    pub tier: String,
+    pub spec_key: String,
+    pub suite: String,
+    /// Cross entropy (nats/token), perplexity (clamped at 100).
+    pub ce: f64,
+    pub ppl: f64,
+    /// Per-task zero-shot accuracy (may be empty for ppl-only cells).
+    pub zs_acc: Vec<f64>,
+    pub zs_mean: f64,
+    pub top1: f64,
+    /// Bits accounting for the x-axis.
+    pub total_bits: f64,
+    pub bits_per_param: f64,
+    pub param_count: usize,
+    pub wall_s: f64,
+}
+
+impl CellResult {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("key", Json::str(&self.key)),
+            ("family", Json::str(&self.family)),
+            ("tier", Json::str(&self.tier)),
+            ("spec", Json::str(&self.spec_key)),
+            ("suite", Json::str(&self.suite)),
+            ("ce", Json::num(self.ce)),
+            ("ppl", Json::num(self.ppl)),
+            ("zs_acc", Json::arr_f64(&self.zs_acc)),
+            ("zs_mean", Json::num(self.zs_mean)),
+            ("top1", Json::num(self.top1)),
+            ("total_bits", Json::num(self.total_bits)),
+            ("bits_per_param", Json::num(self.bits_per_param)),
+            ("param_count", Json::num(self.param_count as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<CellResult> {
+        Ok(CellResult {
+            key: j.get("key")?.as_str()?.to_string(),
+            family: j.get("family")?.as_str()?.to_string(),
+            tier: j.get("tier")?.as_str()?.to_string(),
+            spec_key: j.get("spec")?.as_str()?.to_string(),
+            suite: j.get("suite")?.as_str()?.to_string(),
+            ce: j.get("ce")?.as_f64()?,
+            ppl: j.get("ppl")?.as_f64()?,
+            zs_acc: j.get("zs_acc")?.f64s()?,
+            zs_mean: match j.get("zs_mean")? {
+                Json::Null => f64::NAN,
+                v => v.as_f64()?,
+            },
+            top1: j.get("top1")?.as_f64()?,
+            total_bits: j.get("total_bits")?.as_f64()?,
+            bits_per_param: j.get("bits_per_param")?.as_f64()?,
+            param_count: j.get("param_count")?.as_usize()?,
+            wall_s: j.get("wall_s")?.as_f64()?,
+        })
+    }
+}
+
+/// Build the stable cell key. `data_version` bumps when corpus/eval
+/// workloads change incompatibly.
+pub fn cell_key(
+    family: &str,
+    tier: &str,
+    spec_key: &str,
+    suite: &str,
+    ppl_sequences: usize,
+    zs_examples: usize,
+    corpus_seed: u64,
+    data_version: u32,
+) -> String {
+    let raw = format!(
+        "{family}|{tier}|{spec_key}|{suite}|p{ppl_sequences}|z{zs_examples}|s{corpus_seed}|v{data_version}"
+    );
+    format!("{:016x}", fnv1a(raw.as_bytes()))
+}
+
+/// JSONL-backed store with an in-memory index; thread safe.
+pub struct ResultsStore {
+    path: PathBuf,
+    inner: Mutex<HashMap<String, CellResult>>,
+}
+
+impl ResultsStore {
+    /// Open (or create) a store, loading all prior results.
+    pub fn open(path: impl Into<PathBuf>) -> Result<ResultsStore> {
+        let path = path.into();
+        let mut map = HashMap::new();
+        if path.exists() {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            for (lineno, line) in text.lines().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let j = Json::parse(line)
+                    .with_context(|| format!("{}:{}", path.display(), lineno + 1))?;
+                let r = CellResult::from_json(&j)?;
+                map.insert(r.key.clone(), r);
+            }
+        }
+        Ok(ResultsStore { path, inner: Mutex::new(map) })
+    }
+
+    pub fn get(&self, key: &str) -> Option<CellResult> {
+        self.inner.lock().unwrap().get(key).cloned()
+    }
+
+    /// A ppl-only result can be upgraded by a zero-shot run; the richer
+    /// record wins on key collision.
+    pub fn put(&self, r: CellResult) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.insert(r.key.clone(), r.clone());
+        if let Some(dir) = self.path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)?;
+        writeln!(f, "{}", r.to_json().dump())?;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Snapshot of all results (analysis passes iterate this).
+    pub fn all(&self) -> Vec<CellResult> {
+        self.inner.lock().unwrap().values().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("kbt_store_{tag}_{}.jsonl", std::process::id()))
+    }
+
+    fn sample(key: &str) -> CellResult {
+        CellResult {
+            key: key.to_string(),
+            family: "optlike".into(),
+            tier: "t0".into(),
+            spec_key: "int:4:b64".into(),
+            suite: "ppl_zs".into(),
+            ce: 1.5,
+            ppl: 4.48,
+            zs_acc: vec![0.5, 0.6, 0.4, 0.55],
+            zs_mean: 0.5125,
+            top1: 0.3,
+            total_bits: 1.0e6,
+            bits_per_param: 4.25,
+            param_count: 43328,
+            wall_s: 1.25,
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_reload() {
+        let path = tmp("rt");
+        std::fs::remove_file(&path).ok();
+        {
+            let s = ResultsStore::open(&path).unwrap();
+            s.put(sample("aaa")).unwrap();
+            s.put(sample("bbb")).unwrap();
+            assert_eq!(s.len(), 2);
+        }
+        let s2 = ResultsStore::open(&path).unwrap();
+        assert_eq!(s2.len(), 2);
+        assert_eq!(s2.get("aaa").unwrap(), sample("aaa"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn last_write_wins_on_rekey() {
+        let path = tmp("lww");
+        std::fs::remove_file(&path).ok();
+        let s = ResultsStore::open(&path).unwrap();
+        s.put(sample("k")).unwrap();
+        let mut richer = sample("k");
+        richer.zs_mean = 0.9;
+        s.put(richer.clone()).unwrap();
+        assert_eq!(s.get("k").unwrap().zs_mean, 0.9);
+        // Reload also favours the later line.
+        let s2 = ResultsStore::open(&path).unwrap();
+        assert_eq!(s2.get("k").unwrap().zs_mean, 0.9);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn nan_zs_mean_survives_roundtrip() {
+        let path = tmp("nan");
+        std::fs::remove_file(&path).ok();
+        let s = ResultsStore::open(&path).unwrap();
+        let mut r = sample("n");
+        r.zs_acc = vec![];
+        r.zs_mean = f64::NAN;
+        s.put(r).unwrap();
+        let s2 = ResultsStore::open(&path).unwrap();
+        assert!(s2.get("n").unwrap().zs_mean.is_nan());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn keys_are_stable_and_distinct() {
+        let a = cell_key("optlike", "t0", "int:4:b64", "ppl", 48, 48, 7, 1);
+        let b = cell_key("optlike", "t0", "int:4:b64", "ppl", 48, 48, 7, 1);
+        let c = cell_key("optlike", "t0", "fp:4:b64", "ppl", 48, 48, 7, 1);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+    }
+}

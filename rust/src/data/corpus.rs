@@ -1,0 +1,295 @@
+//! Topic-conditional Zipf–Markov corpus generator.
+//!
+//! Each sequence draws a latent **topic**; tokens then follow a mixture of
+//! (a) a topic-specific deterministic affine successor map
+//! `next = (a_t * cur + b_t) mod V'` and (b) a global Zipf unigram draw.
+//! The result has:
+//!
+//! * a Zipfian marginal (like natural text),
+//! * topic-conditional bigram structure a model must devote capacity to —
+//!   the component that separates model scales,
+//! * long-range dependency: the topic is only identifiable from context,
+//!   so better in-context inference (more layers/width) lowers loss,
+//! * planted **trigger→payload** pairs: token `TRIGGER` is followed by a
+//!   payload `x`, and near the end of the sequence the payload's image
+//!   `f_t(x)` reappears — the hook the LAMBADA-like task is built from.
+//!
+//! Entropy knobs are chosen so tier-t0 underfits and tier-t5 approaches
+//! the generator's conditional entropy, giving the scaling plots a slope.
+
+use crate::util::rng::{Rng, Zipf};
+
+use super::{BOS, CONTENT_BASE, PAD};
+
+/// Generator configuration. `vocab`/`seq` must match the AOT manifest.
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub vocab: usize,
+    pub seq: usize,
+    /// Number of latent topics.
+    pub topics: usize,
+    /// Probability of following the topic's deterministic successor map
+    /// (vs a Zipf unigram draw).
+    pub det_prob: f64,
+    /// Zipf exponent of the unigram component.
+    pub zipf_alpha: f64,
+    /// Probability of planting a trigger→payload pair in a sequence.
+    pub trigger_prob: f64,
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            vocab: 512,
+            seq: 64,
+            topics: 8,
+            det_prob: 0.75,
+            zipf_alpha: 1.1,
+            trigger_prob: 0.5,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// The reserved trigger token id.
+pub const TRIGGER: i32 = CONTENT_BASE;
+
+/// A generated corpus plus its generator (for on-demand eval batches).
+pub struct Corpus {
+    pub cfg: CorpusConfig,
+    gen: Generator,
+}
+
+/// The underlying stochastic process; shared by corpus and task generation.
+#[derive(Clone)]
+pub struct Generator {
+    cfg: CorpusConfig,
+    zipf: Zipf,
+    /// Per-topic affine successor maps `(a, b)` over the content range.
+    maps: Vec<(usize, usize)>,
+}
+
+impl Generator {
+    pub fn new(cfg: &CorpusConfig) -> Self {
+        let content = cfg.vocab - CONTENT_BASE as usize - 1; // exclude PAD/BOS/TRIGGER
+        let mut rng = Rng::new(cfg.seed ^ 0x9E37);
+        let maps = (0..cfg.topics)
+            .map(|_| {
+                // `a` odd and coprime-ish with content size for good mixing.
+                let a = 1 + 2 * (1 + rng.below(content / 2 - 1));
+                let b = rng.below(content);
+                (a, b)
+            })
+            .collect();
+        Generator { cfg: cfg.clone(), zipf: Zipf::new(content, cfg.zipf_alpha), maps }
+    }
+
+    fn content_size(&self) -> usize {
+        self.cfg.vocab - CONTENT_BASE as usize - 1
+    }
+
+    /// Map a content-relative token through topic `t`'s successor function.
+    pub fn successor(&self, t: usize, cur: usize) -> usize {
+        let (a, b) = self.maps[t % self.maps.len()];
+        (cur.wrapping_mul(a).wrapping_add(b)) % self.content_size()
+    }
+
+    fn to_token(&self, content_rel: usize) -> i32 {
+        CONTENT_BASE + 1 + content_rel as i32
+    }
+
+    fn from_token(&self, tok: i32) -> usize {
+        (tok - CONTENT_BASE - 1) as usize
+    }
+
+    /// Generate one full sequence: BOS, body, no padding (len == seq).
+    /// Returns `(tokens, topic)`.
+    pub fn sequence(&self, rng: &mut Rng) -> (Vec<i32>, usize) {
+        let topic = rng.below(self.cfg.topics);
+        let mut toks = Vec::with_capacity(self.cfg.seq);
+        toks.push(BOS);
+        let mut cur = self.zipf.sample(rng);
+        toks.push(self.to_token(cur));
+
+        // Optionally plant a trigger→payload at a random early position
+        // and remember to emit f_t(payload) near the end.
+        let plant = rng.f64() < self.cfg.trigger_prob;
+        let trig_pos = 4 + rng.below(self.cfg.seq / 3);
+        let mut payload: Option<usize> = None;
+
+        while toks.len() < self.cfg.seq {
+            if plant && toks.len() == trig_pos {
+                let p = self.zipf.sample(rng);
+                toks.push(TRIGGER);
+                if toks.len() < self.cfg.seq {
+                    toks.push(self.to_token(p));
+                }
+                payload = Some(p);
+                cur = p;
+                continue;
+            }
+            if let Some(p) = payload {
+                if toks.len() == self.cfg.seq - 1 {
+                    // Final token: the planted long-range completion.
+                    toks.push(self.to_token(self.successor(topic, p)));
+                    break;
+                }
+            }
+            cur = if rng.f64() < self.cfg.det_prob {
+                self.successor(topic, cur)
+            } else {
+                self.zipf.sample(rng)
+            };
+            toks.push(self.to_token(cur));
+        }
+        (toks, topic)
+    }
+
+    /// Continue `from` for `len` tokens under `topic` (used by the
+    /// multi-token choice tasks).
+    pub fn continuation(&self, rng: &mut Rng, from: i32, topic: usize, len: usize) -> Vec<i32> {
+        let mut cur = if from > CONTENT_BASE { self.from_token(from) } else { self.zipf.sample(rng) };
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            cur = if rng.f64() < self.cfg.det_prob {
+                self.successor(topic, cur)
+            } else {
+                self.zipf.sample(rng)
+            };
+            out.push(self.to_token(cur));
+        }
+        out
+    }
+}
+
+impl Corpus {
+    pub fn new(cfg: CorpusConfig) -> Self {
+        Corpus { gen: Generator::new(&cfg), cfg }
+    }
+
+    pub fn generator(&self) -> &Generator {
+        &self.gen
+    }
+
+    /// Deterministic batch of training sequences for step `step`
+    /// (`batch x seq` row-major i32, PAD-free).
+    pub fn train_batch(&self, step: usize, batch: usize) -> Vec<i32> {
+        let mut rng = Rng::new(self.cfg.seed ^ (step as u64).wrapping_mul(0x2545F4914F6CDD1D));
+        let mut out = Vec::with_capacity(batch * self.cfg.seq);
+        for _ in 0..batch {
+            let (toks, _) = self.gen.sequence(&mut rng);
+            out.extend_from_slice(&toks);
+        }
+        out
+    }
+
+    /// The held-out evaluation split: `n` sequences from a seed range the
+    /// training stream can never touch (different stream constant).
+    pub fn eval_sequences(&self, n: usize) -> Vec<Vec<i32>> {
+        let mut rng = Rng::new(self.cfg.seed ^ 0xEEAA_1234_5678_9ABC);
+        (0..n).map(|_| self.gen.sequence(&mut rng).0).collect()
+    }
+
+    /// Pad/trim a sequence to `seq` and produce its all-real-tokens mask.
+    pub fn pad_to_seq(&self, toks: &[i32]) -> (Vec<i32>, Vec<f32>) {
+        let mut t = toks.to_vec();
+        t.truncate(self.cfg.seq);
+        let real = t.len();
+        t.resize(self.cfg.seq, PAD);
+        let mut mask = vec![0.0f32; self.cfg.seq];
+        for m in mask.iter_mut().take(real).skip(1) {
+            *m = 1.0; // position 0 (BOS) is never a target
+        }
+        (t, mask)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg() -> CorpusConfig {
+        CorpusConfig { seed: 7, ..CorpusConfig::default() }
+    }
+
+    #[test]
+    fn sequences_are_deterministic_and_well_formed() {
+        let c1 = Corpus::new(small_cfg());
+        let c2 = Corpus::new(small_cfg());
+        let a = c1.train_batch(3, 4);
+        let b = c2.train_batch(3, 4);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4 * 64);
+        for &t in &a {
+            assert!((0..512).contains(&t), "token {t} out of vocab");
+        }
+        // Every sequence starts with BOS and contains no PAD.
+        for row in a.chunks(64) {
+            assert_eq!(row[0], BOS);
+            assert!(!row.contains(&PAD));
+        }
+    }
+
+    #[test]
+    fn train_and_eval_streams_differ() {
+        let c = Corpus::new(small_cfg());
+        let train = c.train_batch(0, 1);
+        let eval = &c.eval_sequences(1)[0];
+        assert_ne!(&train, eval);
+    }
+
+    #[test]
+    fn zipfian_marginal() {
+        let c = Corpus::new(small_cfg());
+        let mut counts = vec![0usize; 512];
+        for s in 0..200 {
+            for &t in &c.train_batch(s, 1) {
+                counts[t as usize] += 1;
+            }
+        }
+        // Head content tokens more frequent per token than tail ones (the
+        // deterministic topic maps flatten the marginal, but the Zipf
+        // component keeps a clear head/tail separation).
+        let head: usize = counts[3..40].iter().sum();
+        let tail: usize = counts[400..].iter().sum();
+        let head_rate = head as f64 / 37.0;
+        let tail_rate = tail as f64 / 112.0;
+        assert!(head_rate > tail_rate * 2.0, "head {head_rate:.1} vs tail {tail_rate:.1}");
+    }
+
+    #[test]
+    fn topics_change_statistics() {
+        let cfg = small_cfg();
+        let g = Generator::new(&cfg);
+        // Successor maps must differ between topics for some input.
+        let diffs = (0..100).filter(|&x| g.successor(0, x) != g.successor(1, x)).count();
+        assert!(diffs > 50);
+    }
+
+    #[test]
+    fn padding_and_mask() {
+        let c = Corpus::new(small_cfg());
+        let (toks, mask) = c.pad_to_seq(&[BOS, 5, 6]);
+        assert_eq!(toks.len(), 64);
+        assert_eq!(mask.len(), 64);
+        assert_eq!(&toks[..3], &[BOS, 5, 6]);
+        assert!(toks[3..].iter().all(|&t| t == PAD));
+        assert_eq!(mask[0], 0.0);
+        assert_eq!(mask[1], 1.0);
+        assert_eq!(mask[2], 1.0);
+        assert_eq!(mask[3], 0.0);
+    }
+
+    #[test]
+    fn planted_completion_is_topic_function_of_payload() {
+        let cfg = CorpusConfig { trigger_prob: 1.0, seed: 11, ..CorpusConfig::default() };
+        let g = Generator::new(&cfg);
+        let mut rng = Rng::new(1);
+        let (toks, topic) = g.sequence(&mut rng);
+        let tpos = toks.iter().position(|&t| t == TRIGGER).expect("trigger planted");
+        let payload = toks[tpos + 1];
+        let want = g.to_token(g.successor(topic, g.from_token(payload)));
+        assert_eq!(*toks.last().unwrap(), want);
+    }
+}

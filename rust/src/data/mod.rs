@@ -1,0 +1,28 @@
+//! Data substrate: synthetic corpus, tokenizer surface, zero-shot tasks.
+//!
+//! The paper evaluates on The Pile CommonCrawl (perplexity) and four
+//! LM-eval-harness tasks. Neither is available here (repro band 0/5), so
+//! this module implements the closest synthetic equivalents exercising the
+//! same code paths (DESIGN.md §1 substitution table):
+//!
+//! * [`corpus`] — a topic-conditional Zipf–Markov language with planted
+//!   long-range dependencies. Larger models fit it strictly better
+//!   (topic-conditional transition tables + in-context topic inference),
+//!   which is what gives the scaling-law plots their slope.
+//! * [`tasks`] — four zero-shot task generators mirroring the metric
+//!   structure of LAMBADA, PiQA, HellaSwag and Winogrande (2- and 4-way
+//!   choices, single- and multi-token continuations, length-normalized
+//!   log-likelihood scoring).
+//! * [`vocabulary`] — a tiny named-token surface so CLI demos can print
+//!   readable text; model I/O stays in token ids throughout.
+
+pub mod corpus;
+pub mod tasks;
+pub mod vocabulary;
+
+/// Token id conventions shared across the stack (and with `model.py`,
+/// which masks PAD in the training loss).
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+/// First id usable as a content token.
+pub const CONTENT_BASE: i32 = 2;

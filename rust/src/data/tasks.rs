@@ -1,0 +1,288 @@
+//! Synthetic zero-shot tasks mirroring the paper's evaluation suite.
+//!
+//! Four generators with the metric structure of the paper's tasks
+//! (Section 4): every example is a context plus `n` candidate
+//! continuations, scored by length-normalized log-likelihood exactly like
+//! the EleutherAI harness scores multiple-choice tasks. Random baselines:
+//! lambada-like 1/4, piqa-like 1/2, hellaswag-like 1/4, winogrande-like
+//! 1/2 → mean 0.375, close to the paper's ~35% "random" floor.
+
+use crate::util::rng::Rng;
+
+use super::corpus::{Corpus, Generator, TRIGGER};
+use super::BOS;
+
+/// One multiple-choice example: shared context, candidate continuations,
+/// index of the correct one.
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub context: Vec<i32>,
+    pub choices: Vec<Vec<i32>>,
+    pub answer: usize,
+}
+
+/// The four tasks of the suite.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    /// Long-range last-token prediction (LAMBADA-like): the planted
+    /// trigger→payload pair determines the final token; 4 single-token
+    /// choices.
+    Lambada,
+    /// 2-way multi-token continuation (PiQA-like): true-topic continuation
+    /// vs other-topic continuation.
+    Piqa,
+    /// 4-way longer continuation (HellaSwag-like).
+    Hellaswag,
+    /// 2-way single-token successor choice (Winogrande-like).
+    Winogrande,
+}
+
+impl Task {
+    pub const ALL: [Task; 4] = [Task::Lambada, Task::Piqa, Task::Hellaswag, Task::Winogrande];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Task::Lambada => "lambada",
+            Task::Piqa => "piqa",
+            Task::Hellaswag => "hellaswag",
+            Task::Winogrande => "winogrande",
+        }
+    }
+
+    pub fn n_choices(self) -> usize {
+        match self {
+            Task::Lambada | Task::Hellaswag => 4,
+            Task::Piqa | Task::Winogrande => 2,
+        }
+    }
+
+    pub fn random_baseline(self) -> f64 {
+        1.0 / self.n_choices() as f64
+    }
+}
+
+/// Mean random baseline across the suite (paper: ~35%).
+pub fn suite_random_baseline() -> f64 {
+    Task::ALL.iter().map(|t| t.random_baseline()).sum::<f64>() / Task::ALL.len() as f64
+}
+
+/// Deterministic task-set generator over a corpus.
+pub struct TaskSet {
+    corpus_seed: u64,
+}
+
+impl TaskSet {
+    pub fn new(corpus: &Corpus) -> Self {
+        TaskSet { corpus_seed: corpus.cfg.seed }
+    }
+
+    /// Generate `n` examples of `task`. Deterministic per (task, corpus).
+    pub fn examples(&self, gen: &Generator, task: Task, n: usize) -> Vec<Example> {
+        let mut rng = Rng::new(self.corpus_seed ^ 0x7A5C ^ (task as u64) << 32);
+        (0..n).map(|_| self.example(gen, task, &mut rng)).collect()
+    }
+
+    fn example(&self, gen: &Generator, task: Task, rng: &mut Rng) -> Example {
+        match task {
+            Task::Lambada => self.lambada(gen, rng),
+            Task::Piqa => self.choice_continuation(gen, rng, 2, 6),
+            Task::Hellaswag => self.choice_continuation(gen, rng, 4, 10),
+            Task::Winogrande => self.winogrande(gen, rng),
+        }
+    }
+
+    /// Context = sequence truncated before its planted final token;
+    /// choices = the true completion + 3 distractors (images of the payload
+    /// under other topics, falling back to random content tokens).
+    fn lambada(&self, gen: &Generator, rng: &mut Rng) -> Example {
+        loop {
+            let (toks, topic) = gen.sequence(rng);
+            let Some(tpos) = toks.iter().position(|&t| t == TRIGGER) else {
+                continue;
+            };
+            if tpos + 1 >= toks.len() - 1 {
+                continue;
+            }
+            let context = toks[..toks.len() - 1].to_vec();
+            let correct = *toks.last().unwrap();
+            let payload = toks[tpos + 1];
+            let mut choices = vec![vec![correct]];
+            let mut used = vec![correct];
+            let mut alt_topic = 0usize;
+            while choices.len() < 4 {
+                // Distractors: same payload through a different topic map,
+                // so they are plausible under the corpus marginal.
+                let cand = if alt_topic < 8 {
+                    let t = (topic + 1 + alt_topic) % 8;
+                    alt_topic += 1;
+                    let rel = (payload - super::CONTENT_BASE - 1).max(0) as usize;
+                    super::CONTENT_BASE + 1 + gen.successor(t, rel) as i32
+                } else {
+                    super::CONTENT_BASE + 1 + rng.below(256) as i32
+                };
+                if !used.contains(&cand) {
+                    used.push(cand);
+                    choices.push(vec![cand]);
+                }
+            }
+            let answer = self.shuffle_choices(&mut choices, rng);
+            return Example { context, choices, answer };
+        }
+    }
+
+    /// n-way continuation choice: correct = same-topic continuation,
+    /// distractors = continuations under other topics.
+    fn choice_continuation(
+        &self,
+        gen: &Generator,
+        rng: &mut Rng,
+        n: usize,
+        cont_len: usize,
+    ) -> Example {
+        let (toks, topic) = gen.sequence(rng);
+        let ctx_len = toks.len() * 2 / 3;
+        let context = toks[..ctx_len].to_vec();
+        let last = *context.last().unwrap();
+        let mut choices = vec![gen.continuation(rng, last, topic, cont_len)];
+        for i in 1..n {
+            let alt = (topic + i) % 8;
+            choices.push(gen.continuation(rng, last, alt, cont_len));
+        }
+        let answer = self.shuffle_choices(&mut choices, rng);
+        Example { context, choices, answer }
+    }
+
+    /// Single-token successor choice: correct = deterministic successor of
+    /// the last token under the sequence topic; distractor = successor
+    /// under a different topic.
+    fn winogrande(&self, gen: &Generator, rng: &mut Rng) -> Example {
+        let (toks, topic) = gen.sequence(rng);
+        let ctx_len = toks.len() - toks.len() / 4;
+        let context = toks[..ctx_len].to_vec();
+        let last = *context.last().unwrap();
+        let rel = (last - super::CONTENT_BASE - 1).max(0) as usize;
+        let correct = super::CONTENT_BASE + 1 + gen.successor(topic, rel) as i32;
+        let mut alt = correct;
+        let mut t = topic + 1;
+        while alt == correct {
+            alt = super::CONTENT_BASE + 1 + gen.successor(t % 8, rel) as i32;
+            t += 1;
+            if t > topic + 16 {
+                alt = super::CONTENT_BASE + 1 + rng.below(256) as i32;
+            }
+        }
+        let mut choices = vec![vec![correct], vec![alt]];
+        let answer = self.shuffle_choices(&mut choices, rng);
+        Example { context, choices, answer }
+    }
+
+    /// Shuffle in place; return the new index of the original choice 0.
+    fn shuffle_choices(&self, choices: &mut [Vec<i32>], rng: &mut Rng) -> usize {
+        let correct = choices[0].clone();
+        rng.shuffle(choices);
+        choices.iter().position(|c| *c == correct).unwrap()
+    }
+}
+
+/// Flatten an example into scoring rows `(tokens, mask, choice_len)` —
+/// one row per choice, mask over the continuation region. The caller pads
+/// to the model sequence length.
+pub fn scoring_rows(ex: &Example) -> Vec<(Vec<i32>, Vec<f32>, usize)> {
+    ex.choices
+        .iter()
+        .map(|choice| {
+            let mut toks = Vec::with_capacity(ex.context.len() + choice.len());
+            toks.push(BOS);
+            // Keep the tail of the context if it would overflow: the
+            // continuation tokens must always fit.
+            toks.extend_from_slice(&ex.context[1.min(ex.context.len())..]);
+            toks.extend_from_slice(choice);
+            let mut mask = vec![0.0f32; toks.len()];
+            let start = toks.len() - choice.len();
+            for m in mask.iter_mut().skip(start) {
+                *m = 1.0;
+            }
+            (toks, mask, choice.len())
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusConfig;
+
+    fn corpus() -> Corpus {
+        Corpus::new(CorpusConfig { seed: 21, trigger_prob: 1.0, ..CorpusConfig::default() })
+    }
+
+    #[test]
+    fn examples_are_deterministic() {
+        let c = corpus();
+        let ts = TaskSet::new(&c);
+        for task in Task::ALL {
+            let a = ts.examples(c.generator(), task, 5);
+            let b = ts.examples(c.generator(), task, 5);
+            assert_eq!(a.len(), 5);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.context, y.context, "{task:?}");
+                assert_eq!(x.choices, y.choices);
+                assert_eq!(x.answer, y.answer);
+            }
+        }
+    }
+
+    #[test]
+    fn choice_counts_match_task() {
+        let c = corpus();
+        let ts = TaskSet::new(&c);
+        for task in Task::ALL {
+            for ex in ts.examples(c.generator(), task, 8) {
+                assert_eq!(ex.choices.len(), task.n_choices(), "{task:?}");
+                assert!(ex.answer < ex.choices.len());
+                // All choices distinct (otherwise accuracy is ill-defined).
+                for i in 0..ex.choices.len() {
+                    for j in i + 1..ex.choices.len() {
+                        assert_ne!(ex.choices[i], ex.choices[j], "{task:?}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn answers_are_shuffled() {
+        let c = corpus();
+        let ts = TaskSet::new(&c);
+        let answers: Vec<usize> = ts
+            .examples(c.generator(), Task::Lambada, 40)
+            .iter()
+            .map(|e| e.answer)
+            .collect();
+        // Not all in the same slot.
+        assert!(answers.iter().any(|&a| a != answers[0]), "{answers:?}");
+    }
+
+    #[test]
+    fn scoring_rows_mask_exactly_the_choice() {
+        let c = corpus();
+        let ts = TaskSet::new(&c);
+        let ex = &ts.examples(c.generator(), Task::Piqa, 1)[0];
+        let rows = scoring_rows(ex);
+        assert_eq!(rows.len(), 2);
+        for (row, (toks, mask, clen)) in rows.iter().enumerate() {
+            assert_eq!(toks.len(), mask.len());
+            let masked: f32 = mask.iter().sum();
+            assert_eq!(masked as usize, *clen);
+            // Masked suffix equals the choice tokens.
+            let start = toks.len() - clen;
+            assert_eq!(&toks[start..], &ex.choices[row][..]);
+        }
+    }
+
+    #[test]
+    fn random_baseline_matches_paper_floor() {
+        let b = suite_random_baseline();
+        assert!((b - 0.375).abs() < 1e-12);
+    }
+}

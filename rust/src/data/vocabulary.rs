@@ -1,0 +1,94 @@
+//! Human-readable token surface for CLI demos and logs.
+//!
+//! The synthetic language is over integer ids; this module gives each id a
+//! stable pronounceable name (CV-syllable encoding of the id) so demo
+//! output reads like text instead of numbers, and provides the inverse
+//! mapping. It deliberately has no effect on modeling — the tokenizer the
+//! paper's models use is out of scope for weight-quantization behaviour.
+
+use std::collections::BTreeMap;
+
+use super::{BOS, PAD};
+use crate::data::corpus::TRIGGER;
+
+const ONSETS: [&str; 8] = ["b", "d", "f", "k", "l", "m", "n", "s"];
+const VOWELS: [&str; 8] = ["a", "e", "i", "o", "u", "ai", "ou", "ei"];
+
+/// Bidirectional id <-> surface-form mapping for a vocabulary size.
+pub struct Vocabulary {
+    names: Vec<String>,
+    ids: BTreeMap<String, i32>,
+}
+
+impl Vocabulary {
+    pub fn new(vocab: usize) -> Self {
+        let mut names = Vec::with_capacity(vocab);
+        let mut ids = BTreeMap::new();
+        for id in 0..vocab as i32 {
+            let name = match id {
+                x if x == PAD => "<pad>".to_string(),
+                x if x == BOS => "<bos>".to_string(),
+                x if x == TRIGGER => "<trig>".to_string(),
+                _ => Self::syllables(id as usize),
+            };
+            ids.insert(name.clone(), id);
+            names.push(name);
+        }
+        Vocabulary { names, ids }
+    }
+
+    /// Two-syllable CV name, bijective over ids (base-64 digits of the id).
+    fn syllables(id: usize) -> String {
+        let hi = id / 64;
+        let lo = id % 64;
+        let syl = |d: usize| format!("{}{}", ONSETS[d / 8], VOWELS[d % 8]);
+        format!("{}{}", syl(hi % 64), syl(lo))
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        tokens
+            .iter()
+            .map(|&t| self.names.get(t as usize).map(|s| s.as_str()).unwrap_or("<unk>"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        text.split_whitespace()
+            .filter_map(|w| self.ids.get(w).copied())
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_are_unique_and_roundtrip() {
+        let v = Vocabulary::new(512);
+        assert_eq!(v.len(), 512);
+        let mut seen = std::collections::BTreeSet::new();
+        for id in 0..512 {
+            assert!(seen.insert(v.names[id].clone()), "dup name {}", v.names[id]);
+        }
+        let toks = vec![1, 2, 100, 511];
+        let text = v.decode(&toks);
+        assert_eq!(v.encode(&text), toks);
+    }
+
+    #[test]
+    fn special_tokens_have_markers() {
+        let v = Vocabulary::new(512);
+        let s = v.decode(&[0, 1, 2]);
+        assert_eq!(s, "<pad> <bos> <trig>");
+    }
+}

@@ -1,0 +1,261 @@
+//! Evaluation harness: perplexity and the four zero-shot tasks.
+//!
+//! One AOT graph serves every metric: `fwd_<tier>.hlo.txt` maps
+//! `(params…, tokens, mask)` to per-row `(nll_sum, top1_hits)`.
+//! Perplexity masks all real tokens; zero-shot tasks mask the candidate
+//! continuation and compare **length-normalized** log-likelihood across
+//! choices (the EleutherAI harness's multiple-choice scoring rule).
+//!
+//! Parameter literals are built **once per quantization cell** and reused
+//! across all evaluation batches of that cell — the dominant cost saving
+//! of the sweep hot path (EXPERIMENTS.md §Perf).
+
+use anyhow::{bail, Result};
+
+use crate::data::corpus::Corpus;
+use crate::data::tasks::{scoring_rows, Task, TaskSet};
+use crate::models::manifest::{Manifest, TierManifest};
+use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Executable, Runtime};
+use crate::tensor::Tensor;
+
+use std::sync::Arc;
+
+/// How much evaluation a sweep cell requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum EvalSuite {
+    /// Perplexity only (cheap; the paper's own recommendation for
+    /// replication — Section 4).
+    Ppl,
+    /// Perplexity + all four zero-shot tasks.
+    PplZeroShot,
+}
+
+/// Evaluation workload sizes.
+#[derive(Debug, Clone)]
+pub struct EvalConfig {
+    /// Held-out sequences for perplexity.
+    pub ppl_sequences: usize,
+    /// Examples per zero-shot task.
+    pub zs_examples: usize,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        EvalConfig { ppl_sequences: 48, zs_examples: 48 }
+    }
+}
+
+/// Full metrics for one evaluated model/quantization cell.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    /// Cross-entropy (nats/token) on the held-out split.
+    pub ce: f64,
+    /// `exp(ce)` with the paper's instability clamp at 100.
+    pub ppl: f64,
+    /// Per-task accuracy, `Task::ALL` order (empty for `EvalSuite::Ppl`).
+    pub zs_acc: Vec<f64>,
+    /// Mean zero-shot accuracy (NaN when not evaluated).
+    pub zs_mean: f64,
+    /// Greedy next-token accuracy on the ppl split (a bonus diagnostic).
+    pub top1: f64,
+}
+
+/// The evaluator for one tier: holds the compiled graph + batch geometry.
+pub struct Evaluator<'rt> {
+    rt: &'rt Runtime,
+    exe: Arc<Executable>,
+    tier: TierManifest,
+}
+
+impl<'rt> Evaluator<'rt> {
+    pub fn new(rt: &'rt Runtime, manifest: &Manifest, tier: &TierManifest) -> Result<Self> {
+        let exe = rt.load(&manifest.hlo_path(&tier.fwd_hlo))?;
+        Ok(Evaluator { rt, exe, tier: tier.clone() })
+    }
+
+    /// Build the reusable parameter literals for a parameter set.
+    pub fn param_literals(&self, params: &[(String, Tensor)]) -> Result<Vec<xla::Literal>> {
+        if params.len() != self.tier.params.len() {
+            bail!("expected {} parameter tensors, got {}", self.tier.params.len(), params.len());
+        }
+        params.iter().map(|(_, t)| lit_f32(t)).collect()
+    }
+
+    /// Public scoring entry point used by the serving layer: rows must be
+    /// padded to the tier sequence length already.
+    pub fn score_padded_rows(
+        &self,
+        plits: &[xla::Literal],
+        rows: &[(Vec<i32>, Vec<f32>)],
+    ) -> Result<Vec<(f64, f64)>> {
+        self.score_rows(plits, rows)
+    }
+
+    /// Score a batch of `(tokens, mask)` rows (padded to `batch_eval`);
+    /// returns per-row `(nll_sum, hits)` for the first `rows.len()` rows.
+    fn score_rows(
+        &self,
+        plits: &[xla::Literal],
+        rows: &[(Vec<i32>, Vec<f32>)],
+    ) -> Result<Vec<(f64, f64)>> {
+        let b = self.tier.batch_eval;
+        let s = self.tier.seq;
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(b) {
+            let mut tokens = vec![0i32; b * s];
+            let mut mask = vec![0.0f32; b * s];
+            for (r, (t, m)) in chunk.iter().enumerate() {
+                assert_eq!(t.len(), s, "rows must be padded to seq");
+                tokens[r * s..(r + 1) * s].copy_from_slice(t);
+                mask[r * s..(r + 1) * s].copy_from_slice(m);
+            }
+            let tok_lit = lit_i32(&[b, s], &tokens)?;
+            let mask_lit = lit_f32(&Tensor::new(vec![b, s], mask))?;
+            // Parameter literals are borrowed: built once per cell, reused
+            // across every batch of the cell (the sweep's hot-path saving).
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(plits.len() + 2);
+            args.extend(plits.iter());
+            args.push(&tok_lit);
+            args.push(&mask_lit);
+            let res = self.rt.execute(&self.exe, &args)?;
+            if res.len() != 2 {
+                bail!("eval graph returned {} leaves, expected 2", res.len());
+            }
+            let nll = to_vec_f32(&res[0])?;
+            let hits = to_vec_f32(&res[1])?;
+            for r in 0..chunk.len() {
+                out.push((nll[r] as f64, hits[r] as f64));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Perplexity (and greedy accuracy) over held-out corpus sequences.
+    pub fn perplexity(
+        &self,
+        plits: &[xla::Literal],
+        corpus: &Corpus,
+        n_sequences: usize,
+    ) -> Result<(f64, f64, f64)> {
+        let seqs = corpus.eval_sequences(n_sequences);
+        let rows: Vec<(Vec<i32>, Vec<f32>)> =
+            seqs.iter().map(|sq| corpus.pad_to_seq(sq)).collect();
+        let scored = self.score_rows(plits, &rows)?;
+        let mut total_nll = 0.0;
+        let mut total_hits = 0.0;
+        let mut total_tok = 0.0;
+        for ((nll, hits), (_, mask)) in scored.iter().zip(&rows) {
+            total_nll += nll;
+            total_hits += hits;
+            total_tok += mask.iter().sum::<f32>() as f64;
+        }
+        let ce = total_nll / total_tok.max(1.0);
+        // Paper convention: clamp unstable perplexities at 100.
+        let ppl = ce.exp().min(100.0);
+        Ok((ce, ppl, total_hits / total_tok.max(1.0)))
+    }
+
+    /// Accuracy of one zero-shot task via length-normalized LL scoring.
+    pub fn zero_shot(
+        &self,
+        plits: &[xla::Literal],
+        corpus: &Corpus,
+        task: Task,
+        n_examples: usize,
+    ) -> Result<f64> {
+        let ts = TaskSet::new(corpus);
+        let examples = ts.examples(corpus.generator(), task, n_examples);
+        // Flatten every choice of every example into rows.
+        let mut rows: Vec<(Vec<i32>, Vec<f32>)> = Vec::new();
+        let mut lens: Vec<usize> = Vec::new();
+        let mut spans: Vec<(usize, usize)> = Vec::new(); // (start_row, n_choices)
+        for ex in &examples {
+            let start = rows.len();
+            for (toks, mask, clen) in scoring_rows(ex) {
+                let (t, m) = pad_row(&toks, &mask, self.tier.seq);
+                rows.push((t, m));
+                lens.push(clen);
+            }
+            spans.push((start, ex.choices.len()));
+        }
+        let scored = self.score_rows(plits, &rows)?;
+        let mut correct = 0usize;
+        for (ex, &(start, n)) in examples.iter().zip(&spans) {
+            // argmax over -nll/len (higher normalized LL wins).
+            let best = (0..n)
+                .max_by(|&a, &b| {
+                    let sa = -scored[start + a].0 / lens[start + a].max(1) as f64;
+                    let sb = -scored[start + b].0 / lens[start + b].max(1) as f64;
+                    sa.partial_cmp(&sb).unwrap()
+                })
+                .unwrap();
+            if best == ex.answer {
+                correct += 1;
+            }
+        }
+        Ok(correct as f64 / examples.len().max(1) as f64)
+    }
+
+    /// Run a full suite for one parameter set.
+    pub fn run(
+        &self,
+        params: &[(String, Tensor)],
+        corpus: &Corpus,
+        suite: EvalSuite,
+        cfg: &EvalConfig,
+    ) -> Result<EvalResult> {
+        let plits = self.param_literals(params)?;
+        let (ce, ppl, top1) = self.perplexity(&plits, corpus, cfg.ppl_sequences)?;
+        let mut zs_acc = Vec::new();
+        if suite == EvalSuite::PplZeroShot {
+            for task in Task::ALL {
+                zs_acc.push(self.zero_shot(&plits, corpus, task, cfg.zs_examples)?);
+            }
+        }
+        let zs_mean = if zs_acc.is_empty() {
+            f64::NAN
+        } else {
+            zs_acc.iter().sum::<f64>() / zs_acc.len() as f64
+        };
+        Ok(EvalResult { ce, ppl, zs_acc, zs_mean, top1 })
+    }
+}
+
+/// Pad/trim a scoring row to the model sequence length, keeping the
+/// **tail** (the continuation must survive; early context is droppable).
+fn pad_row(toks: &[i32], mask: &[f32], seq: usize) -> (Vec<i32>, Vec<f32>) {
+    let mut t: Vec<i32>;
+    let mut m: Vec<f32>;
+    if toks.len() > seq {
+        let cut = toks.len() - seq;
+        t = toks[cut..].to_vec();
+        m = mask[cut..].to_vec();
+    } else {
+        t = toks.to_vec();
+        m = mask.to_vec();
+        t.resize(seq, crate::data::PAD);
+        m.resize(seq, 0.0);
+    }
+    (t, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_row_keeps_tail() {
+        let toks: Vec<i32> = (0..100).collect();
+        let mut mask = vec![0.0f32; 100];
+        mask[95..].fill(1.0);
+        let (t, m) = pad_row(&toks, &mask, 64);
+        assert_eq!(t.len(), 64);
+        assert_eq!(*t.last().unwrap(), 99);
+        assert_eq!(m.iter().sum::<f32>(), 5.0);
+        // Short rows pad with PAD/0.
+        let (t2, m2) = pad_row(&[1, 2], &[0.0, 1.0], 8);
+        assert_eq!(t2, vec![1, 2, 0, 0, 0, 0, 0, 0]);
+        assert_eq!(m2[1], 1.0);
+        assert_eq!(m2[2..].iter().sum::<f32>(), 0.0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Dense linear-algebra substrate for GPTQ: Cholesky factorization and
+//! triangular inversion over row-major `f64` matrices. Sizes here are the
+//! input dimensions of transformer projections (≤ a few thousand), so a
+//! cache-friendly textbook implementation is plenty; no BLAS dependency.
+
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor `L` of a symmetric positive-definite
+/// `n x n` matrix `a` (row-major). `a = L Lᵀ`.
+pub fn cholesky(a: &[f64], n: usize) -> Result<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("matrix not positive definite at pivot {i} (sum={sum})");
+                }
+                l[i * n + j] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Inverse of a lower-triangular matrix (forward substitution per column).
+pub fn lower_triangular_inverse(l: &[f64], n: usize) -> Result<Vec<f64>> {
+    assert_eq!(l.len(), n * n);
+    let mut inv = vec![0.0f64; n * n];
+    for col in 0..n {
+        // Solve L x = e_col.
+        for i in col..n {
+            let mut sum = if i == col { 1.0 } else { 0.0 };
+            for k in col..i {
+                sum -= l[i * n + k] * inv[k * n + col];
+            }
+            let d = l[i * n + i];
+            if d == 0.0 {
+                bail!("singular triangular matrix at {i}");
+            }
+            inv[i * n + col] = sum / d;
+        }
+    }
+    Ok(inv)
+}
+
+/// `C = A Bᵀ` for row-major `A (m x k)`, `B (n x k)` → `C (m x n)`.
+/// Used by tests to validate factorizations.
+pub fn matmul_nt(a: &[f64], b: &[f64], m: usize, k: usize, n: usize) -> Vec<f64> {
+    let mut c = vec![0.0f64; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0;
+            for p in 0..k {
+                s += a[i * k + p] * b[j * k + p];
+            }
+            c[i * n + j] = s;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut g = vec![0.0f64; n * n];
+        for v in g.iter_mut() {
+            *v = rng.normal();
+        }
+        // A = G Gᵀ + n * I is SPD.
+        let mut a = matmul_nt(&g, &g, n, n, n);
+        for i in 0..n {
+            a[i * n + i] += n as f64;
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        for n in [1usize, 2, 5, 16, 33] {
+            let a = random_spd(n, n as u64);
+            let l = cholesky(&a, n).unwrap();
+            let back = matmul_nt(&l, &l, n, n, n);
+            for i in 0..n * n {
+                assert!((a[i] - back[i]).abs() < 1e-8, "n={n} i={i}");
+            }
+            // L is lower triangular.
+            for i in 0..n {
+                for j in i + 1..n {
+                    assert_eq!(l[i * n + j], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = vec![1.0, 2.0, 2.0, 1.0]; // eigenvalues 3, -1
+        assert!(cholesky(&a, 2).is_err());
+    }
+
+    #[test]
+    fn triangular_inverse_is_inverse() {
+        for n in [1usize, 3, 8, 20] {
+            let a = random_spd(n, 100 + n as u64);
+            let l = cholesky(&a, n).unwrap();
+            let linv = lower_triangular_inverse(&l, n).unwrap();
+            // L * Linv = I (multiply row-major: L (n x n) x Linv (n x n)).
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for k in 0..n {
+                        s += l[i * n + k] * linv[k * n + j];
+                    }
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((s - want).abs() < 1e-9, "n={n} ({i},{j}) = {s}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,324 @@
+//! One-shot GPTQ quantization (Frantar et al., 2022) — the paper's
+//! comparison point for Table 1 and Figure 5.
+//!
+//! GPTQ quantizes a weight matrix column-group by column-group while
+//! compensating the not-yet-quantized weights for the error introduced so
+//! far, using the Hessian of the layerwise reconstruction objective
+//! `H = 2 X Xᵀ` estimated from a calibration mini-batch. This is the
+//! "one-shot" (needs data) counterpart to the paper's zero-shot methods;
+//! the paper shows GPTQ *with blocking* beats zero-shot 3-bit float
+//! (Table 1) while GPTQ *without blocking* scales poorly at 3-bit (Fig 5).
+//!
+//! The implementation follows the standard Cholesky formulation:
+//!
+//! 1. `H = 2 X Xᵀ + λI` (dampened),
+//! 2. `Hinv = (cholesky(H))⁻¹` upper-triangular inverse,
+//! 3. process columns left→right; each weight is rounded to the nearest
+//!    codebook value (block-wise absmax normalized, like the zero-shot
+//!    path, so GPTQ composes with every data type and block size in this
+//!    repo), and the residual is propagated into later columns via the
+//!    Hinv row.
+//!
+//! [`linalg`] provides the dense Cholesky / triangular-inverse substrate.
+
+pub mod linalg;
+pub mod model;
+
+use anyhow::{bail, Result};
+
+use crate::quant::codebook::Codebook;
+use crate::quant::spec::QuantSpec;
+use crate::tensor::Tensor;
+
+/// GPTQ configuration knobs.
+#[derive(Debug, Clone)]
+pub struct GptqConfig {
+    /// Relative Hessian dampening `λ = damp * mean(diag(H))`.
+    pub damp: f64,
+    /// Columns processed per lazy-update group (perf only).
+    pub group_cols: usize,
+}
+
+impl Default for GptqConfig {
+    fn default() -> Self {
+        GptqConfig { damp: 0.01, group_cols: 32 }
+    }
+}
+
+/// Quantize `w` (shape `(in_dim, out_dim)`, inputs on rows — so the
+/// reconstruction objective is over `x @ w`) with GPTQ against calibration
+/// activations `x` (shape `(samples, in_dim)`).
+///
+/// `spec.block` applies along the **input** dimension of each output
+/// column, matching the fused-kernel layout, so the returned blocking is
+/// directly storable. Returns the dequantized (simulated) weight.
+pub fn gptq_quantize(
+    w: &Tensor,
+    x: &Tensor,
+    spec: &QuantSpec,
+    cfg: &GptqConfig,
+) -> Result<Tensor> {
+    let (in_dim, out_dim) = w.dims2()?;
+    let (samples, xc) = x.dims2()?;
+    if xc != in_dim {
+        bail!("calibration width {xc} != weight input dim {in_dim}");
+    }
+    if samples == 0 {
+        bail!("empty calibration batch");
+    }
+    let codebook = spec.codebook()?;
+    let block = spec.block.unwrap_or(in_dim);
+
+    // H = 2/n * XᵀX  (in_dim x in_dim), dampened.
+    let mut h = vec![0.0f64; in_dim * in_dim];
+    for s in 0..samples {
+        let row = &x.data()[s * in_dim..(s + 1) * in_dim];
+        for i in 0..in_dim {
+            let xi = row[i] as f64;
+            if xi == 0.0 {
+                continue;
+            }
+            for j in i..in_dim {
+                h[i * in_dim + j] += xi * row[j] as f64;
+            }
+        }
+    }
+    let scale = 2.0 / samples as f64;
+    for i in 0..in_dim {
+        for j in i..in_dim {
+            let v = h[i * in_dim + j] * scale;
+            h[i * in_dim + j] = v;
+            h[j * in_dim + i] = v;
+        }
+    }
+    let mean_diag = (0..in_dim).map(|i| h[i * in_dim + i]).sum::<f64>() / in_dim as f64;
+    let lambda = cfg.damp * mean_diag.max(1e-12);
+    for i in 0..in_dim {
+        h[i * in_dim + i] += lambda;
+    }
+
+    // Hinv via Cholesky: H = L Lᵀ, Hinv = L⁻ᵀ L⁻¹; we need the upper
+    // Cholesky factor of Hinv, which is exactly L⁻ᵀ scaled — the standard
+    // GPTQ trick: work with U = chol(Hinv)ᵀ (upper). Diagonal entries of
+    // U drive the error feedback.
+    // GPTQ needs U = chol(H⁻¹)ᵀ-style upper factor with H⁻¹ = Uᵀ U:
+    // diagonal entries drive the error feedback, row i the propagation.
+    //   H = L Lᵀ             (lower Cholesky)
+    //   H⁻¹ = L⁻ᵀ L⁻¹        (explicit inverse via triangular inverse)
+    //   H⁻¹ = Lb Lbᵀ         (second Cholesky of the inverse)
+    //   U := Lbᵀ  ⇒  Uᵀ U = Lb Lbᵀ = H⁻¹, U upper triangular.
+    let l = linalg::cholesky(&h, in_dim)?;
+    let linv = linalg::lower_triangular_inverse(&l, in_dim)?;
+    // B = H⁻¹ = Linvᵀ · Linv (symmetric; fill both halves).
+    let mut b_inv = vec![0.0f64; in_dim * in_dim];
+    for i in 0..in_dim {
+        for j in i..in_dim {
+            // (Linvᵀ Linv)[i,j] = Σ_k Linv[k,i] · Linv[k,j]; Linv is lower,
+            // so only k >= max(i, j) contributes.
+            let mut s = 0.0;
+            for k in j..in_dim {
+                s += linv[k * in_dim + i] * linv[k * in_dim + j];
+            }
+            b_inv[i * in_dim + j] = s;
+            b_inv[j * in_dim + i] = s;
+        }
+    }
+    let lb = linalg::cholesky(&b_inv, in_dim)?;
+    let mut u = vec![0.0f64; in_dim * in_dim];
+    for i in 0..in_dim {
+        for j in i..in_dim {
+            u[i * in_dim + j] = lb[j * in_dim + i]; // U = Lbᵀ
+        }
+    }
+
+    // Work on W transposed per-column? Keep row-major (in_dim rows).
+    let mut wq = w.data().to_vec(); // mutated in place, becomes dequantized weight
+
+    // Process input dims sequentially with error feedback.
+    // Quantization scales: per (block, out-col) absmax, computed lazily per
+    // block from the *current* (error-compensated) weights, matching GPTQ
+    // implementations that derive scales group-wise during the pass.
+    let nblocks = in_dim.div_ceil(block);
+    for b in 0..nblocks {
+        let lo = b * block;
+        let hi = ((b + 1) * block).min(in_dim);
+        // Per-column absmax over this block of input dims.
+        let mut amax = vec![0.0f32; out_dim];
+        for i in lo..hi {
+            for c in 0..out_dim {
+                amax[c] = amax[c].max(wq[i * out_dim + c].abs());
+            }
+        }
+        for a in amax.iter_mut() {
+            if *a == 0.0 {
+                *a = 1.0;
+            }
+        }
+        for i in lo..hi {
+            let d = u[i * in_dim + i];
+            if d.abs() < 1e-30 {
+                bail!("singular Hessian factor at dim {i}");
+            }
+            // Quantize row i across all output columns; accumulate errors.
+            let mut err = vec![0.0f64; out_dim];
+            for c in 0..out_dim {
+                let wv = wq[i * out_dim + c];
+                let qv = codebook.value(codebook.assign(wv / amax[c])) * amax[c];
+                err[c] = (wv - qv) as f64 / d;
+                wq[i * out_dim + c] = qv;
+            }
+            // Propagate into the remaining (unquantized) input dims.
+            for j in (i + 1)..in_dim {
+                let uij = u[i * in_dim + j];
+                if uij == 0.0 {
+                    continue;
+                }
+                for c in 0..out_dim {
+                    wq[j * out_dim + c] -= (uij * err[c]) as f32;
+                }
+            }
+        }
+    }
+
+    Ok(Tensor::new(vec![in_dim, out_dim], wq))
+}
+
+/// Round-to-nearest baseline under the same blocking layout (input-dim
+/// blocks per output column) for controlled GPTQ-vs-RTN comparisons.
+pub fn rtn_quantize(w: &Tensor, spec: &QuantSpec) -> Result<Tensor> {
+    let (in_dim, out_dim) = w.dims2()?;
+    let codebook: Codebook = spec.codebook()?;
+    let block = spec.block.unwrap_or(in_dim);
+    let mut out = w.data().to_vec();
+    let nblocks = in_dim.div_ceil(block);
+    for b in 0..nblocks {
+        let lo = b * block;
+        let hi = ((b + 1) * block).min(in_dim);
+        for c in 0..out_dim {
+            let mut amax = 0.0f32;
+            for i in lo..hi {
+                amax = amax.max(out[i * out_dim + c].abs());
+            }
+            if amax == 0.0 {
+                amax = 1.0;
+            }
+            for i in lo..hi {
+                let v = out[i * out_dim + c];
+                out[i * out_dim + c] = codebook.value(codebook.assign(v / amax)) * amax;
+            }
+        }
+    }
+    Ok(Tensor::new(vec![in_dim, out_dim], out))
+}
+
+/// Layerwise reconstruction error `||x(w - wq)||² / ||x w||²` — the
+/// objective GPTQ minimizes; used by tests and the E5 bench.
+pub fn reconstruction_error(w: &Tensor, wq: &Tensor, x: &Tensor) -> Result<f64> {
+    let (in_dim, out_dim) = w.dims2()?;
+    let (samples, _) = x.dims2()?;
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for s in 0..samples {
+        let row = &x.data()[s * in_dim..(s + 1) * in_dim];
+        for c in 0..out_dim {
+            let mut y = 0.0f64;
+            let mut yq = 0.0f64;
+            for i in 0..in_dim {
+                y += row[i] as f64 * w.data()[i * out_dim + c] as f64;
+                yq += row[i] as f64 * wq.data()[i * out_dim + c] as f64;
+            }
+            num += (y - yq) * (y - yq);
+            den += y * y;
+        }
+    }
+    Ok(num / den.max(1e-30))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::codebook::DataType;
+    use crate::util::rng::Rng;
+
+    fn randn(shape: Vec<usize>, seed: u64, std: f32) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n = shape.iter().product();
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, std);
+        Tensor::new(shape, v)
+    }
+
+    /// Calibration with correlated features — the regime where GPTQ's
+    /// error compensation matters.
+    fn correlated_x(samples: usize, dim: usize, seed: u64) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let mut data = vec![0.0f32; samples * dim];
+        for s in 0..samples {
+            let base = rng.normal() as f32;
+            for i in 0..dim {
+                data[s * dim + i] = 0.7 * base + 0.3 * rng.normal() as f32;
+            }
+        }
+        Tensor::new(vec![samples, dim], data)
+    }
+
+    #[test]
+    fn gptq_beats_rtn_at_low_bits() {
+        let w = randn(vec![32, 16], 1, 0.1);
+        let x = correlated_x(128, 32, 2);
+        let spec = QuantSpec::new(DataType::Int, 3, Some(16));
+        let g = gptq_quantize(&w, &x, &spec, &GptqConfig::default()).unwrap();
+        let r = rtn_quantize(&w, &spec).unwrap();
+        let eg = reconstruction_error(&w, &g, &x).unwrap();
+        let er = reconstruction_error(&w, &r, &x).unwrap();
+        assert!(eg < er, "gptq {eg} !< rtn {er}");
+    }
+
+    #[test]
+    fn gptq_blocking_beats_no_blocking() {
+        // Table 1's mechanism: with outliers present, blocked GPTQ wins.
+        let mut w = randn(vec![64, 16], 3, 0.05);
+        for c in 0..16 {
+            w.data_mut()[5 * 16 + c] *= 25.0; // outlier input dim
+        }
+        let x = correlated_x(128, 64, 4);
+        let blocked = QuantSpec::new(DataType::Int, 2, Some(16));
+        let unblocked = QuantSpec::new(DataType::Int, 2, None);
+        let gb = gptq_quantize(&w, &x, &blocked, &GptqConfig::default()).unwrap();
+        let gu = gptq_quantize(&w, &x, &unblocked, &GptqConfig::default()).unwrap();
+        let eb = reconstruction_error(&w, &gb, &x).unwrap();
+        let eu = reconstruction_error(&w, &gu, &x).unwrap();
+        assert!(eb < eu, "blocked {eb} !< unblocked {eu}");
+    }
+
+    #[test]
+    fn gptq_high_bits_nearly_lossless() {
+        let w = randn(vec![16, 8], 5, 0.1);
+        let x = correlated_x(64, 16, 6);
+        let spec = QuantSpec::new(DataType::Int, 8, Some(16));
+        let g = gptq_quantize(&w, &x, &spec, &GptqConfig::default()).unwrap();
+        let e = reconstruction_error(&w, &g, &x).unwrap();
+        assert!(e < 1e-4, "8-bit error {e}");
+    }
+
+    #[test]
+    fn shape_validation() {
+        let w = randn(vec![8, 4], 7, 0.1);
+        let bad_x = randn(vec![16, 6], 8, 1.0);
+        assert!(gptq_quantize(&w, &bad_x, &QuantSpec::new(DataType::Int, 4, None), &GptqConfig::default()).is_err());
+    }
+
+    #[test]
+    fn rtn_matches_expected_blocking() {
+        // A single outlier column block should not disturb other blocks.
+        let mut w = randn(vec![32, 4], 9, 0.05);
+        w.data_mut()[0] = 10.0;
+        let spec = QuantSpec::new(DataType::Int, 4, Some(8));
+        let r = rtn_quantize(&w, &spec).unwrap();
+        // Error in rows 8.. of column 0 unaffected by the outlier at row 0.
+        for i in 8..32 {
+            let d = (r.data()[i * 4] - w.data()[i * 4]).abs();
+            assert!(d < 0.05, "row {i} err {d}");
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Model-level GPTQ: one-shot quantization of a whole checkpoint against
+//! real calibration activations.
+//!
+//! The AOT graph `acts_<tier>.hlo.txt` returns each projection's input
+//! activations — stacked `(L, B, S, in_dim)` for `qkv`, `wo`, `fc1`,
+//! `fc2` — on a calibration batch of corpus sequences. Each layer's matrix
+//! is then GPTQ-quantized independently (exactly how per-layer one-shot
+//! quantization is defined), producing a dequantized checkpoint that runs
+//! through the same forward executable as the zero-shot specs, so Figure 5
+//! and Table 1 compare the two method families on equal footing.
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::corpus::Corpus;
+use crate::models::manifest::{Manifest, TierManifest};
+use crate::quant::QuantSpec;
+use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Runtime};
+use crate::tensor::Tensor;
+
+use super::{gptq_quantize, GptqConfig};
+
+/// The four GPTQ-quantized projections, in `acts` graph output order.
+const TARGETS: [&str; 4] = ["qkv", "wo", "fc1", "fc2"];
+
+/// Collect calibration activations for every projection of every layer.
+///
+/// Returns, per target tensor name, a vec of per-layer activation
+/// matrices `(B*S, in_dim)`.
+pub fn collect_activations(
+    rt: &Runtime,
+    manifest: &Manifest,
+    tier: &TierManifest,
+    params: &[(String, Tensor)],
+    corpus: &Corpus,
+) -> Result<Vec<(String, Vec<Tensor>)>> {
+    let acts_hlo = tier
+        .acts_hlo
+        .as_ref()
+        .context("manifest has no acts graph; rerun `make artifacts`")?;
+    let exe = rt.load(&manifest.hlo_path(acts_hlo))?;
+
+    // Calibration batch: held-out-adjacent stream (distinct seed path).
+    let b = tier.batch_eval;
+    let s = tier.seq;
+    let tokens = corpus.train_batch(usize::MAX / 2, b); // far from training steps
+    let mut args: Vec<xla::Literal> = Vec::with_capacity(params.len() + 1);
+    for (_, t) in params {
+        args.push(lit_f32(t)?);
+    }
+    args.push(lit_i32(&[b, s], &tokens)?);
+    let out = rt.execute(&exe, &args)?;
+    if out.len() != 4 {
+        bail!("acts graph returned {} leaves, expected 4", out.len());
+    }
+
+    let l = tier.n_layer;
+    let rows = b * s;
+    let mut result = Vec::with_capacity(4);
+    for (ti, name) in TARGETS.iter().enumerate() {
+        let in_dim = match *name {
+            "fc2" => tier.d_ff,
+            _ => tier.d_model,
+        };
+        let flat = to_vec_f32(&out[ti])?;
+        if flat.len() != l * rows * in_dim {
+            bail!("{name} acts: got {} values, expected {}", flat.len(), l * rows * in_dim);
+        }
+        let per = rows * in_dim;
+        let layers: Vec<Tensor> = (0..l)
+            .map(|li| Tensor::new(vec![rows, in_dim], flat[li * per..(li + 1) * per].to_vec()))
+            .collect();
+        result.push((name.to_string(), layers));
+    }
+    Ok(result)
+}
+
+/// GPTQ-quantize a checkpoint under `spec` (dtype/bits/block reused from
+/// the zero-shot spec vocabulary; blocking runs along input dims).
+pub fn quantize_checkpoint_gptq(
+    rt: &Runtime,
+    manifest: &Manifest,
+    tier: &TierManifest,
+    params: &[(String, Tensor)],
+    corpus: &Corpus,
+    spec: &QuantSpec,
+    cfg: &GptqConfig,
+) -> Result<Vec<(String, Tensor)>> {
+    let acts = collect_activations(rt, manifest, tier, params, corpus)?;
+    let acts_by: std::collections::BTreeMap<&str, &Vec<Tensor>> =
+        acts.iter().map(|(n, v)| (n.as_str(), v)).collect();
+
+    let mut out = Vec::with_capacity(params.len());
+    for (name, t) in params {
+        let Some(layer_acts) = acts_by.get(name.as_str()) else {
+            out.push((name.clone(), t.clone()));
+            continue;
+        };
+        let shape = t.shape().to_vec(); // (L, in, out)
+        let (l, rows, cols) = (shape[0], shape[1], shape[2]);
+        let per = rows * cols;
+        let mut data = vec![0.0f32; t.len()];
+        for li in 0..l {
+            let w = Tensor::new(vec![rows, cols], t.data()[li * per..(li + 1) * per].to_vec());
+            let q = gptq_quantize(&w, &layer_acts[li], spec, cfg)
+                .with_context(|| format!("gptq on {name}[{li}]"))?;
+            data[li * per..(li + 1) * per].copy_from_slice(q.data());
+        }
+        out.push((name.clone(), Tensor::new(shape, data)));
+    }
+    Ok(out)
+}

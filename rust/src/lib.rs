@@ -1,0 +1,59 @@
+//! # kbitscale
+//!
+//! A production-grade reproduction of *"The case for 4-bit precision: k-bit
+//! Inference Scaling Laws"* (Dettmers & Zettlemoyer, ICML 2023) as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`): Pallas fused block-wise
+//!   dequantize+matmul kernels, validated against a pure-jnp oracle.
+//! * **Layer 2** (`python/compile/model.py`): JAX transformer forward and
+//!   fused-Adam train-step graphs, AOT-lowered once to HLO text.
+//! * **Layer 3** (this crate): the experiment coordinator — everything that
+//!   runs at request time. It owns corpus generation, model training (by
+//!   driving the AOT train-step via PJRT), the native quantization library
+//!   (the hot path of the study), the evaluation harness, the sweep
+//!   scheduler, scaling-law fitting, and figure/table regeneration.
+//!
+//! Python never runs after `make artifacts`; the binary is self-contained.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | from-scratch substrates: JSON, RNG, thread pool, CLI, property testing |
+//! | [`tensor`] | dense f32 tensors + binary serialization |
+//! | [`quant`] | codebooks, block-wise quantization, packing, centering, proxy quantization |
+//! | [`gptq`] | one-shot GPTQ (Hessian/Cholesky sequential rounding) |
+//! | [`data`] | synthetic Zipf–Markov corpus + four zero-shot task generators |
+//! | [`models`] | model zoo: families, tiers, init (incl. outlier injection), checkpoints |
+//! | [`runtime`] | PJRT client wrapper: HLO-text loading, executable cache, literal conversion |
+//! | [`train`] | training driver over the AOT train-step executable |
+//! | [`eval`] | perplexity + zero-shot evaluation harness |
+//! | [`coordinator`] | sweep grid, scheduler, worker pool, results store |
+//! | [`scaling`] | scaling curves, Pareto frontiers, bit-level optimality, correlations |
+//! | [`report`] | ASCII figures and CSV emission for every paper table/figure |
+//! | [`bench_support`] | shared harness for the `benches/` reproduction binaries |
+//!
+//! The image's vendored crate set has no serde/clap/tokio/criterion, so the
+//! JSON codec, CLI parser, thread pool, bench harness, and property-testing
+//! helper are implemented in [`util`] from scratch (DESIGN.md §3).
+
+pub mod util;
+pub mod config;
+pub mod tensor;
+pub mod quant;
+pub mod gptq;
+pub mod data;
+pub mod models;
+pub mod runtime;
+pub mod server;
+pub mod train;
+pub mod eval;
+pub mod coordinator;
+pub mod scaling;
+pub mod report;
+pub mod bench_support;
+pub mod cli;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,12 @@
+//! `kbitscale` — leader binary of the k-bit inference scaling-law stack.
+//!
+//! Thin wrapper over [`kbitscale::cli`]; see `kbitscale <cmd> --help` and
+//! README.md for usage.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = kbitscale::cli::main_with_args(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

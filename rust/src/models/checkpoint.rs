@@ -1,0 +1,130 @@
+//! Checkpoint store: trained parameters on disk, keyed by [`ModelId`].
+//!
+//! Uses the `tensor::save_tensors` binary container. Checkpoints carry
+//! their training metadata in a JSON sidecar so sweep results can record
+//! provenance (steps, final loss, corpus seed).
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::tensor::{load_tensors, save_tensors, Tensor};
+use crate::util::json::Json;
+
+use super::ModelId;
+
+/// Training provenance stored next to each checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointMeta {
+    pub steps: usize,
+    pub final_loss: f64,
+    pub corpus_seed: u64,
+}
+
+/// Directory-backed checkpoint store.
+pub struct CheckpointStore {
+    dir: PathBuf,
+}
+
+impl CheckpointStore {
+    pub fn new(dir: impl Into<PathBuf>) -> Self {
+        CheckpointStore { dir: dir.into() }
+    }
+
+    pub fn path(&self, id: &ModelId) -> PathBuf {
+        self.dir.join(format!("{}.bin", id.key()))
+    }
+
+    fn meta_path(&self, id: &ModelId) -> PathBuf {
+        self.dir.join(format!("{}.meta.json", id.key()))
+    }
+
+    pub fn exists(&self, id: &ModelId) -> bool {
+        self.path(id).exists() && self.meta_path(id).exists()
+    }
+
+    pub fn save(
+        &self,
+        id: &ModelId,
+        params: &[(String, Tensor)],
+        meta: &CheckpointMeta,
+    ) -> Result<()> {
+        let named: Vec<(&str, &Tensor)> =
+            params.iter().map(|(n, t)| (n.as_str(), t)).collect();
+        save_tensors(&self.path(id), &named)?;
+        let j = Json::obj(vec![
+            ("steps", Json::num(meta.steps as f64)),
+            ("final_loss", Json::num(meta.final_loss)),
+            ("corpus_seed", Json::num(meta.corpus_seed as f64)),
+        ]);
+        std::fs::write(self.meta_path(id), j.dump())?;
+        Ok(())
+    }
+
+    pub fn load(&self, id: &ModelId) -> Result<(Vec<(String, Tensor)>, CheckpointMeta)> {
+        let params = load_tensors(&self.path(id)).with_context(|| {
+            format!("loading checkpoint for {id} (run `kbitscale train` first)")
+        })?;
+        let meta_text = std::fs::read_to_string(self.meta_path(id))?;
+        let j = Json::parse(&meta_text)?;
+        let meta = CheckpointMeta {
+            steps: j.get("steps")?.as_usize()?,
+            final_loss: j.get("final_loss")?.as_f64()?,
+            corpus_seed: j.get("corpus_seed")?.as_f64()? as u64,
+        };
+        Ok((params, meta))
+    }
+
+    /// All checkpoint ids present on disk (for `kbitscale status`).
+    pub fn list(&self) -> Vec<String> {
+        let Ok(entries) = std::fs::read_dir(&self.dir) else {
+            return Vec::new();
+        };
+        let mut out: Vec<String> = entries
+            .filter_map(|e| e.ok())
+            .filter_map(|e| {
+                let name = e.file_name().to_string_lossy().into_owned();
+                name.strip_suffix(".bin").map(str::to_string)
+            })
+            .collect();
+        out.sort();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> (CheckpointStore, PathBuf) {
+        let dir = std::env::temp_dir().join(format!("kbt_ckpt_{}_{:?}", std::process::id(), std::thread::current().id()));
+        (CheckpointStore::new(&dir), dir)
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let (s, dir) = store();
+        let id = ModelId::new("gpt2like", "t0");
+        let params = vec![
+            ("embed".to_string(), Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.])),
+            ("lnf_s".to_string(), Tensor::ones(vec![3])),
+        ];
+        let meta = CheckpointMeta { steps: 100, final_loss: 3.25, corpus_seed: 7 };
+        assert!(!s.exists(&id));
+        s.save(&id, &params, &meta).unwrap();
+        assert!(s.exists(&id));
+        let (loaded, lmeta) = s.load(&id).unwrap();
+        assert_eq!(loaded, params);
+        assert_eq!(lmeta, meta);
+        assert_eq!(s.list(), vec!["gpt2like_t0"]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn load_missing_mentions_train() {
+        let (s, dir) = store();
+        let err = s.load(&ModelId::new("optlike", "t5")).unwrap_err();
+        assert!(format!("{err:#}").contains("train"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,131 @@
+//! The five synthetic model families.
+//!
+//! The paper's families (OPT, Pythia, GPT-2, BLOOM, BLOOMZ) differ, for
+//! quantization purposes, in whether they develop **emergent outlier
+//! features**: OPT and Pythia do (and are unstable at 3-bit), GPT-2 and
+//! BLOOM are comparatively stable (Figure 2), and BLOOMZ is a fine-tune of
+//! BLOOM with essentially identical quantization behaviour (Appendix C.1).
+//!
+//! We reproduce that split mechanically: each family fixes a training
+//! seed, a learning-rate scale, and an outlier-injection recipe applied at
+//! initialization and (through training dynamics) persisting in the
+//! residual-writing weights — a few hidden dimensions whose weights are
+//! `outlier_scale`x larger, scaling with width like real emergent outliers
+//! (Dettmers et al., 2022a).
+
+/// Outlier-injection recipe (see `init::inject_outliers`).
+#[derive(Debug, Clone, Copy)]
+pub struct OutlierRecipe {
+    /// Number of outlier dims as a fraction of `d_model` (rounded up,
+    /// minimum 1 when fraction > 0).
+    pub dim_fraction: f64,
+    /// Multiplier on those dims' weights (paper §3 observes up to 20x).
+    pub scale: f32,
+}
+
+/// A family: training recipe + outlier behaviour.
+#[derive(Debug, Clone, Copy)]
+pub struct Family {
+    pub name: &'static str,
+    pub seed: u64,
+    /// Multiplier on the base learning rate.
+    pub lr_scale: f64,
+    /// `None` = no emergent outliers (GPT-2/BLOOM-like).
+    pub outliers: Option<OutlierRecipe>,
+    /// Fine-tuned from this family's checkpoint instead of trained from
+    /// scratch (BLOOMZ-like).
+    pub finetune_of: Option<&'static str>,
+}
+
+/// The family zoo. Names are suffixed "-like": these are synthetic models
+/// with the *quantization-relevant* traits of their namesakes, not
+/// replicas (DESIGN.md §1).
+pub const FAMILIES: [Family; 5] = [
+    Family {
+        name: "optlike",
+        seed: 101,
+        lr_scale: 1.0,
+        outliers: Some(OutlierRecipe { dim_fraction: 0.05, scale: 25.0 }),
+        finetune_of: None,
+    },
+    Family {
+        name: "pythialike",
+        seed: 202,
+        lr_scale: 1.0,
+        outliers: Some(OutlierRecipe { dim_fraction: 0.04, scale: 15.0 }),
+        finetune_of: None,
+    },
+    Family {
+        name: "gpt2like",
+        seed: 303,
+        lr_scale: 1.0,
+        outliers: None,
+        finetune_of: None,
+    },
+    Family {
+        name: "bloomlike",
+        seed: 404,
+        lr_scale: 0.8,
+        outliers: None,
+        finetune_of: None,
+    },
+    Family {
+        name: "bloomzlike",
+        seed: 505,
+        lr_scale: 0.3,
+        outliers: None,
+        finetune_of: Some("bloomlike"),
+    },
+];
+
+impl Family {
+    pub fn get(name: &str) -> anyhow::Result<&'static Family> {
+        FAMILIES
+            .iter()
+            .find(|f| f.name == name)
+            .ok_or_else(|| anyhow::anyhow!(
+                "unknown family {name:?} (have: {:?})",
+                FAMILIES.iter().map(|f| f.name).collect::<Vec<_>>()
+            ))
+    }
+
+    /// The four from-scratch families of the headline figures.
+    pub fn headline() -> Vec<&'static Family> {
+        FAMILIES.iter().filter(|f| f.finetune_of.is_none()).collect()
+    }
+
+    pub fn has_outliers(&self) -> bool {
+        self.outliers.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_shape() {
+        assert_eq!(FAMILIES.len(), 5);
+        assert_eq!(Family::headline().len(), 4);
+        assert!(Family::get("optlike").unwrap().has_outliers());
+        assert!(!Family::get("gpt2like").unwrap().has_outliers());
+        assert!(Family::get("nope").is_err());
+    }
+
+    #[test]
+    fn seeds_are_distinct() {
+        let mut seeds: Vec<u64> = FAMILIES.iter().map(|f| f.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), FAMILIES.len());
+    }
+
+    #[test]
+    fn finetune_parent_exists() {
+        for f in FAMILIES.iter() {
+            if let Some(parent) = f.finetune_of {
+                assert!(Family::get(parent).is_ok(), "{} -> {parent}", f.name);
+            }
+        }
+    }
+}

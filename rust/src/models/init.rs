@@ -1,0 +1,194 @@
+//! Parameter initialization, including emergent-outlier injection.
+//!
+//! Mirrors `model.init_params` on the python side (GPT-2 convention:
+//! std-0.02 normals, residual projections scaled by `1 / sqrt(2 L)`,
+//! LayerNorm scale 1 / bias 0), then applies the family's outlier recipe:
+//! a deterministic set of residual dimensions has its weights multiplied
+//! in the residual-writing matrices (`wo`, `fc2` output columns and the
+//! embedding), seeding the outlier features that make OPT/Pythia-like
+//! models fragile at 3-bit. The same dims are amplified at every layer —
+//! matching the observation that real outlier features occupy the *same*
+//! hidden dimensions across layers (Dettmers et al., 2022a).
+
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+use super::families::Family;
+use super::manifest::TierManifest;
+
+/// Initialize all parameters for `(family, tier)` in manifest order.
+pub fn init_params(tier: &TierManifest, family: &Family) -> Vec<(String, Tensor)> {
+    let mut rng = Rng::new(family.seed ^ crate::util::fnv1a(tier.name.as_bytes()));
+    let resid_scale = 0.02 / (2.0 * tier.n_layer as f64).sqrt();
+
+    let mut params: Vec<(String, Tensor)> = tier
+        .params
+        .iter()
+        .map(|p| {
+            let mut stream = rng.fork(crate::util::fnv1a(p.name.as_bytes()));
+            let mut t = Tensor::zeros(p.shape.clone());
+            if p.name.ends_with("_s") {
+                t = Tensor::ones(p.shape.clone());
+            } else if p.name.ends_with("_b") {
+                // zeros already
+            } else if p.name == "wo" || p.name == "fc2" {
+                stream.fill_normal(t.data_mut(), resid_scale as f32);
+            } else {
+                stream.fill_normal(t.data_mut(), 0.02);
+            }
+            (p.name.clone(), t)
+        })
+        .collect();
+
+    if let Some(recipe) = family.outliers {
+        let dims = outlier_dims(tier.d_model, recipe.dim_fraction, family.seed);
+        inject_outliers(&mut params, &dims, recipe.scale, tier);
+    }
+    params
+}
+
+/// The deterministic outlier dimension set for a family at width `d`.
+pub fn outlier_dims(d_model: usize, fraction: f64, seed: u64) -> Vec<usize> {
+    let n = ((d_model as f64 * fraction).ceil() as usize).clamp(1, d_model);
+    let mut rng = Rng::new(seed ^ 0x0DD5);
+    rng.sample_indices(d_model, n)
+}
+
+/// Amplify `dims` of the residual stream in every residual writer.
+///
+/// * `embed` — columns `dims` scaled (the stream starts hot there),
+/// * `wo`, `fc2` — output columns `dims` scaled in every layer.
+pub fn inject_outliers(
+    params: &mut [(String, Tensor)],
+    dims: &[usize],
+    scale: f32,
+    tier: &TierManifest,
+) {
+    let d = tier.d_model;
+    for (name, t) in params.iter_mut() {
+        match name.as_str() {
+            // NOTE: embed columns are deliberately NOT scaled — amplifying
+            // the input stream destabilizes training; weight-side outliers
+            // in the residual writers reproduce the quantization fragility
+            // without hurting trainability.
+            "wo" | "fc2" => {
+                let shape = t.shape().to_vec();
+                let (l, rows, cols) = (shape[0], shape[1], shape[2]);
+                assert_eq!(cols, d);
+                let data = t.data_mut();
+                for li in 0..l {
+                    for r in 0..rows {
+                        let base = li * rows * cols + r * cols;
+                        for &c in dims {
+                            data[base + c] *= scale;
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::manifest::ParamInfo;
+
+    fn tiny_tier() -> TierManifest {
+        let d = 16;
+        let l = 2;
+        let f = 4 * d;
+        TierManifest {
+            name: "tt".into(),
+            d_model: d,
+            n_layer: l,
+            n_head: 2,
+            d_ff: f,
+            vocab: 64,
+            seq: 16,
+            batch_train: 2,
+            batch_eval: 2,
+            param_count: 0,
+            params: vec![
+                ParamInfo { name: "embed".into(), shape: vec![64, d] },
+                ParamInfo { name: "pos".into(), shape: vec![16, d] },
+                ParamInfo { name: "qkv".into(), shape: vec![l, d, 3 * d] },
+                ParamInfo { name: "wo".into(), shape: vec![l, d, d] },
+                ParamInfo { name: "fc1".into(), shape: vec![l, d, f] },
+                ParamInfo { name: "fc2".into(), shape: vec![l, f, d] },
+                ParamInfo { name: "ln1_s".into(), shape: vec![l, d] },
+                ParamInfo { name: "ln1_b".into(), shape: vec![l, d] },
+                ParamInfo { name: "ln2_s".into(), shape: vec![l, d] },
+                ParamInfo { name: "ln2_b".into(), shape: vec![l, d] },
+                ParamInfo { name: "lnf_s".into(), shape: vec![d] },
+                ParamInfo { name: "lnf_b".into(), shape: vec![d] },
+            ],
+            quantized_params: ["qkv", "wo", "fc1", "fc2"].iter().map(|s| s.to_string()).collect(),
+            fwd_hlo: "x".into(),
+            train_hlo: "y".into(),
+            acts_hlo: None,
+        }
+    }
+
+    #[test]
+    fn init_is_deterministic_per_family() {
+        let tier = tiny_tier();
+        let f = Family::get("gpt2like").unwrap();
+        let a = init_params(&tier, f);
+        let b = init_params(&tier, f);
+        for ((n1, t1), (_, t2)) in a.iter().zip(&b) {
+            assert_eq!(t1, t2, "{n1}");
+        }
+        // Different family -> different init.
+        let c = init_params(&tier, Family::get("bloomlike").unwrap());
+        assert!(a[0].1.max_abs_diff(&c[0].1) > 0.0);
+    }
+
+    #[test]
+    fn layernorm_init_is_identity() {
+        let params = init_params(&tiny_tier(), Family::get("gpt2like").unwrap());
+        let by: std::collections::BTreeMap<_, _> =
+            params.iter().map(|(n, t)| (n.as_str(), t)).collect();
+        assert!(by["ln1_s"].data().iter().all(|&x| x == 1.0));
+        assert!(by["ln1_b"].data().iter().all(|&x| x == 0.0));
+        assert!(by["lnf_s"].data().iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn outlier_family_has_hot_columns() {
+        let tier = tiny_tier();
+        let opt = init_params(&tier, Family::get("optlike").unwrap());
+        let by: std::collections::BTreeMap<_, _> =
+            opt.iter().map(|(n, t)| (n.as_str(), t)).collect();
+        let wo = by["wo"];
+        // Column stds must be strongly bimodal: max/median > half the scale.
+        let stds = crate::quant::proxy::column_stds(&wo.data()[..16 * 16], 16, 16);
+        let mut sorted = stds.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let median = sorted[8];
+        let max = sorted[15];
+        assert!(max / median > 5.0, "max {max} median {median}");
+    }
+
+    #[test]
+    fn outlier_dims_stable_and_sized() {
+        let a = outlier_dims(128, 0.04, 42);
+        let b = outlier_dims(128, 0.04, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 6); // ceil(128 * 0.04)
+        assert!(outlier_dims(16, 0.01, 1).len() == 1); // minimum 1
+    }
+
+    #[test]
+    fn stable_family_has_no_hot_columns() {
+        let tier = tiny_tier();
+        let g = init_params(&tier, Family::get("gpt2like").unwrap());
+        let by: std::collections::BTreeMap<_, _> =
+            g.iter().map(|(n, t)| (n.as_str(), t)).collect();
+        let stds = crate::quant::proxy::column_stds(&by["wo"].data()[..16 * 16], 16, 16);
+        let mut sorted = stds.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!(sorted[15] / sorted[8] < 3.0, "unexpected outlier in stable family");
+    }
+}

@@ -1,0 +1,246 @@
+//! Parser for `artifacts/manifest.json` — the contract between the AOT
+//! compiler (`python/compile/aot.py`) and the Rust runtime. Shapes,
+//! argument order, and kernel geometry all come from here; nothing about
+//! tensor layout is hard-coded on the Rust side.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One parameter tensor's name and shape, in executable argument order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamInfo {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Static description of one model scale.
+#[derive(Debug, Clone)]
+pub struct TierManifest {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch_train: usize,
+    pub batch_eval: usize,
+    pub param_count: usize,
+    pub params: Vec<ParamInfo>,
+    pub quantized_params: Vec<String>,
+    pub fwd_hlo: String,
+    pub train_hlo: String,
+    /// GPTQ calibration-activation graph (absent in pre-v2 manifests).
+    pub acts_hlo: Option<String>,
+}
+
+impl TierManifest {
+    /// `(name, numel)` pairs for total-bits accounting.
+    pub fn param_sizes(&self) -> Vec<(String, usize)> {
+        self.params.iter().map(|p| (p.name.clone(), p.numel())).collect()
+    }
+}
+
+/// Geometry of the standalone fused-kernel artifacts.
+#[derive(Debug, Clone)]
+pub struct KernelManifest {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub qblock: usize,
+    pub codebook_pad: usize,
+    pub u8_hlo: String,
+    pub packed4_hlo: String,
+    pub f32_hlo: String,
+}
+
+/// The full artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub vocab: usize,
+    pub seq: usize,
+    pub param_names: Vec<String>,
+    pub tiers: Vec<TierManifest>,
+    pub kernels: KernelManifest,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let tiers = j
+            .get("tiers")?
+            .as_arr()?
+            .iter()
+            .map(parse_tier)
+            .collect::<Result<Vec<_>>>()?;
+        if tiers.is_empty() {
+            bail!("manifest has no tiers");
+        }
+
+        let k = j.get("kernels")?;
+        let kernels = KernelManifest {
+            m: k.get("m")?.as_usize()?,
+            k: k.get("k")?.as_usize()?,
+            n: k.get("n")?.as_usize()?,
+            qblock: k.get("qblock")?.as_usize()?,
+            codebook_pad: k.get("codebook_pad")?.as_usize()?,
+            u8_hlo: k.get("u8_hlo")?.as_str()?.to_string(),
+            packed4_hlo: k.get("packed4_hlo")?.as_str()?.to_string(),
+            f32_hlo: k.get("f32_hlo")?.as_str()?.to_string(),
+        };
+
+        Ok(Manifest {
+            dir: artifacts_dir.to_path_buf(),
+            vocab: j.get("vocab")?.as_usize()?,
+            seq: j.get("seq")?.as_usize()?,
+            param_names: j
+                .get("param_names")?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+            tiers,
+            kernels,
+        })
+    }
+
+    pub fn tier(&self, name: &str) -> Result<&TierManifest> {
+        self.tiers
+            .iter()
+            .find(|t| t.name == name)
+            .with_context(|| format!("tier {name:?} not in manifest (have: {:?})",
+                self.tiers.iter().map(|t| &t.name).collect::<Vec<_>>()))
+    }
+
+    pub fn hlo_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+fn parse_tier(j: &Json) -> Result<TierManifest> {
+    Ok(TierManifest {
+        name: j.get("name")?.as_str()?.to_string(),
+        d_model: j.get("d_model")?.as_usize()?,
+        n_layer: j.get("n_layer")?.as_usize()?,
+        n_head: j.get("n_head")?.as_usize()?,
+        d_ff: j.get("d_ff")?.as_usize()?,
+        vocab: j.get("vocab")?.as_usize()?,
+        seq: j.get("seq")?.as_usize()?,
+        batch_train: j.get("batch_train")?.as_usize()?,
+        batch_eval: j.get("batch_eval")?.as_usize()?,
+        param_count: j.get("param_count")?.as_usize()?,
+        params: j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                Ok(ParamInfo {
+                    name: p.get("name")?.as_str()?.to_string(),
+                    shape: p.get("shape")?.usizes()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?,
+        quantized_params: j
+            .get("quantized_params")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_str()?.to_string()))
+            .collect::<Result<Vec<_>>>()?,
+        fwd_hlo: j.get("fwd_hlo")?.as_str()?.to_string(),
+        train_hlo: j.get("train_hlo")?.as_str()?.to_string(),
+        acts_hlo: j.opt("acts_hlo").and_then(|v| v.as_str().ok().map(str::to_string)),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a minimal manifest JSON fixture in a temp dir.
+    fn fixture() -> (tempdir::TempDirGuard, Manifest) {
+        let dir = tempdir::guard("manifest_test");
+        let json = r#"{
+            "version": 1, "vocab": 512, "seq": 64,
+            "param_names": ["embed", "qkv"],
+            "tiers": [{
+                "name": "t0", "d_model": 32, "n_layer": 2, "n_head": 2,
+                "d_ff": 128, "vocab": 512, "seq": 64,
+                "batch_train": 8, "batch_eval": 16, "param_count": 43328,
+                "params": [
+                    {"name": "embed", "shape": [512, 32]},
+                    {"name": "qkv", "shape": [2, 32, 96]}
+                ],
+                "quantized_params": ["qkv"],
+                "fwd_hlo": "fwd_t0.hlo.txt", "train_hlo": "train_t0.hlo.txt"
+            }],
+            "kernels": {
+                "m": 16, "k": 512, "n": 512, "qblock": 64, "codebook_pad": 256,
+                "u8_hlo": "a.hlo.txt", "packed4_hlo": "b.hlo.txt", "f32_hlo": "c.hlo.txt"
+            }
+        }"#;
+        std::fs::write(dir.path.join("manifest.json"), json).unwrap();
+        let m = Manifest::load(&dir.path).unwrap();
+        (dir, m)
+    }
+
+    mod tempdir {
+        use std::path::PathBuf;
+
+        pub struct TempDirGuard {
+            pub path: PathBuf,
+        }
+
+        impl Drop for TempDirGuard {
+            fn drop(&mut self) {
+                std::fs::remove_dir_all(&self.path).ok();
+            }
+        }
+
+        pub fn guard(tag: &str) -> TempDirGuard {
+            let path = std::env::temp_dir().join(format!("kbt_{tag}_{}", std::process::id()));
+            std::fs::create_dir_all(&path).unwrap();
+            TempDirGuard { path }
+        }
+    }
+
+    #[test]
+    fn parses_fixture() {
+        let (_g, m) = fixture();
+        assert_eq!(m.vocab, 512);
+        assert_eq!(m.tiers.len(), 1);
+        let t = m.tier("t0").unwrap();
+        assert_eq!(t.params[1].shape, vec![2, 32, 96]);
+        assert_eq!(t.params[1].numel(), 2 * 32 * 96);
+        assert_eq!(t.quantized_params, vec!["qkv"]);
+        assert_eq!(m.kernels.qblock, 64);
+        assert!(m.tier("t9").is_err());
+    }
+
+    #[test]
+    fn param_sizes_sum() {
+        let (_g, m) = fixture();
+        let sizes = m.tier("t0").unwrap().param_sizes();
+        let total: usize = sizes.iter().map(|(_, n)| n).sum();
+        assert_eq!(total, 512 * 32 + 2 * 32 * 96);
+    }
+
+    #[test]
+    fn missing_manifest_is_actionable() {
+        let err = Manifest::load(Path::new("/nonexistent")).unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

@@ -1,0 +1,42 @@
+//! Model zoo: AOT manifest, synthetic families, initialization, and
+//! checkpoint storage.
+//!
+//! The study spans **families × tiers**: a tier fixes the architecture
+//! shapes (read from `artifacts/manifest.json`, the single source of truth
+//! shared with the AOT compiler), a family fixes the training recipe —
+//! seed, learning-rate scale, and most importantly the **emergent-outlier
+//! injection** that makes OPT-like and Pythia-like models unstable at
+//! 3-bit, reproducing the paper's Figure 2/4 family split (DESIGN.md §1).
+
+pub mod checkpoint;
+pub mod families;
+pub mod init;
+pub mod manifest;
+
+pub use checkpoint::CheckpointStore;
+pub use families::{Family, FAMILIES};
+pub use manifest::{Manifest, TierManifest};
+
+/// A fully-identified model in the zoo.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ModelId {
+    pub family: &'static str,
+    pub tier: String,
+}
+
+impl ModelId {
+    pub fn new(family: &'static str, tier: impl Into<String>) -> Self {
+        ModelId { family, tier: tier.into() }
+    }
+
+    /// Stable key used for checkpoints and the results store.
+    pub fn key(&self) -> String {
+        format!("{}_{}", self.family, self.tier)
+    }
+}
+
+impl std::fmt::Display for ModelId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.family, self.tier)
+    }
+}

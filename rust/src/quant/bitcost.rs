@@ -1,0 +1,101 @@
+//! Bits-per-parameter accounting — the x-axis of every scaling plot.
+//!
+//! Section 5.2 of the paper: a block size `B` with 16-bit normalization
+//! constants costs `16 / B` extra bits per parameter; centering adds
+//! another `16 / B`; proxy quantization with outlier fraction `p` costs
+//! `p * (16 - k)` extra bits. Unquantized tensors (embeddings, LayerNorm)
+//! count at 16 bits per parameter.
+
+use super::spec::QuantSpec;
+
+/// Effective bits per parameter of `spec` applied to a weight tensor.
+pub fn bits_per_param(spec: &QuantSpec) -> f64 {
+    if spec.is_baseline() {
+        return 16.0;
+    }
+    let mut bits = spec.bits as f64;
+    if let Some(b) = spec.block {
+        bits += 16.0 / b as f64; // absmax constant
+        if spec.centering {
+            bits += 16.0 / b as f64; // per-block mean
+        }
+    } else if spec.centering {
+        // Tensor-wise constants amortize to ~0 for any real tensor size;
+        // keep a tiny epsilon so centering is never free on paper.
+        bits += 1e-6;
+    }
+    if let Some(p) = spec.proxy_outlier_pct {
+        bits += p * (16.0 - spec.bits as f64);
+    }
+    bits
+}
+
+/// Total model bits for a checkpoint: quantized tensors at
+/// `bits_per_param(spec)`, everything else at 16.
+pub fn total_model_bits(
+    param_sizes: &[(String, usize)],
+    quantized_names: &[String],
+    spec: &QuantSpec,
+) -> f64 {
+    let bpp = bits_per_param(spec);
+    param_sizes
+        .iter()
+        .map(|(name, n)| {
+            if quantized_names.iter().any(|q| q == name) {
+                bpp * *n as f64
+            } else {
+                16.0 * *n as f64
+            }
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::codebook::DataType;
+
+    #[test]
+    fn paper_examples() {
+        // "a block size of 64 ... 16/64 = 0.25 additional bits" (§5.2)
+        let s = QuantSpec::new(DataType::Fp, 4, Some(64));
+        assert!((bits_per_param(&s) - 4.25).abs() < 1e-12);
+        // "for p=0.02 and k=4, the additional memory footprint is 0.24 bits"
+        let s = QuantSpec::new(DataType::Fp, 4, None).with_proxy(0.02);
+        assert!((bits_per_param(&s) - 4.24).abs() < 1e-12);
+        // Both combined.
+        let s = QuantSpec::new(DataType::Fp, 4, Some(64)).with_proxy(0.02);
+        assert!((bits_per_param(&s) - 4.49).abs() < 1e-12);
+    }
+
+    #[test]
+    fn baseline_is_16() {
+        assert_eq!(bits_per_param(&QuantSpec::baseline16()), 16.0);
+    }
+
+    #[test]
+    fn centering_doubles_block_overhead() {
+        let plain = QuantSpec::new(DataType::Int, 4, Some(64));
+        let centered = plain.clone().with_centering();
+        assert!((bits_per_param(&centered) - bits_per_param(&plain) - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn blocksize_ordering() {
+        // Smaller blocks -> more bits, monotone (Figure 3's x-offsets).
+        let mut prev = f64::INFINITY;
+        for b in [16usize, 64, 128, 256, 1024] {
+            let bits = bits_per_param(&QuantSpec::new(DataType::Int, 4, Some(b)));
+            assert!(bits < prev);
+            prev = bits;
+        }
+    }
+
+    #[test]
+    fn total_bits_mixes_quantized_and_not() {
+        let sizes = vec![("embed".to_string(), 100usize), ("qkv".to_string(), 100)];
+        let spec = QuantSpec::new(DataType::Int, 4, Some(64));
+        let total = total_model_bits(&sizes, &["qkv".to_string()], &spec);
+        assert!((total - (16.0 * 100.0 + 4.25 * 100.0)).abs() < 1e-9);
+    }
+}

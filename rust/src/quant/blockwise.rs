@@ -1,0 +1,296 @@
+//! Block-wise quantization (Section 2.3, Eq. 1) — the hot path.
+//!
+//! The tensor is viewed as a 1-D sequence split into blocks of `block`
+//! values; each block is normalized by its own absmax and every value maps
+//! to the nearest codebook entry. Small blocks confine outliers and cost
+//! `16 / block` extra bits/parameter for the f32-stored-as-16-bit
+//! normalization constant (the paper's accounting; see `bitcost`).
+//!
+//! Performance notes (EXPERIMENTS.md §Perf): assignment is a linear
+//! boundary scan for k ≤ 4 codebooks and a branchless binary search above;
+//! both avoid the per-value argmin of the naive formulation. The sweep
+//! coordinator additionally parallelizes across parameter tensors.
+
+use super::codebook::Codebook;
+use super::spec::QuantSpec;
+
+/// Process-wide codebook cache: specs are reused across thousands of
+/// sweep cells and tensors, and quantile construction sorts a 64k sample —
+/// rebuilding per tensor cost ~25% of quantize() (§Perf L3 step 6).
+fn cached_codebook(spec: &QuantSpec) -> Codebook {
+    use std::collections::HashMap;
+    use std::sync::Mutex;
+    static CACHE: Mutex<Option<HashMap<(u8, u8, u8), Codebook>>> = Mutex::new(None);
+    let key = (
+        spec.dtype.name().as_bytes()[0],
+        spec.bits as u8,
+        spec.exponent_bits.map(|e| e as u8 + 1).unwrap_or(0),
+    );
+    let mut guard = CACHE.lock().unwrap();
+    let map = guard.get_or_insert_with(HashMap::new);
+    map.entry(key)
+        .or_insert_with(|| spec.codebook().expect("invalid quant spec"))
+        .clone()
+}
+
+/// A quantized tensor in the paper's flat-block layout.
+#[derive(Debug, Clone)]
+pub struct QuantizedTensor {
+    /// One codebook index per value (stored unpacked; `packing` produces
+    /// the k-bit wire format when storage is the point).
+    pub idx: Vec<u8>,
+    /// One absmax per block.
+    pub absmax: Vec<f32>,
+    /// Per-block means when distribution centering is enabled (App. B).
+    pub means: Option<Vec<f32>>,
+    pub block: usize,
+    pub codebook: Codebook,
+    pub bits: usize,
+}
+
+/// Quantize `data` under `spec` (flat block layout).
+///
+/// Tensor-wise quantization (`spec.block == None`) is a single block the
+/// size of the tensor.
+pub fn quantize(data: &[f32], spec: &QuantSpec) -> QuantizedTensor {
+    let codebook = cached_codebook(spec);
+    // Int codebooks are uniform grids: `m` levels per sign, value i maps
+    // to (i - m) / m. Enables the arithmetic fast path below.
+    let int_levels = (spec.dtype == crate::quant::codebook::DataType::Int)
+        .then(|| (1i32 << (spec.bits - 1)) - 1);
+    let block = spec.block.unwrap_or(data.len().max(1));
+    let nblocks = data.len().div_ceil(block);
+    let mut idx = vec![0u8; data.len()];
+    let mut absmax = vec![0.0f32; nblocks];
+    let mut means = spec.centering.then(|| vec![0.0f32; nblocks]);
+
+    for b in 0..nblocks {
+        let lo = b * block;
+        let hi = (lo + block).min(data.len());
+        let chunk = &data[lo..hi];
+        let mean = if let Some(ms) = means.as_mut() {
+            let m = chunk.iter().sum::<f32>() / chunk.len() as f32;
+            ms[b] = m;
+            m
+        } else {
+            0.0
+        };
+        let mut amax = 0.0f32;
+        for &x in chunk {
+            amax = amax.max((x - mean).abs());
+        }
+        // A zero block quantizes to zeros with any positive scale.
+        let amax = if amax == 0.0 { 1.0 } else { amax };
+        absmax[b] = amax;
+        let inv = 1.0 / amax;
+        let out = &mut idx[lo..hi];
+        if let Some(m) = int_levels {
+            // Perf fast path (EXPERIMENTS.md §Perf L3 step 4): the Int
+            // codebook is uniform, so nearest-value assignment is a single
+            // scale+round instead of a boundary scan — ~8x throughput.
+            let mf = m as f32;
+            for (o, &x) in out.iter_mut().zip(chunk) {
+                let v = ((x - mean) * inv).clamp(-1.0, 1.0);
+                // +0.5 then truncate == round-to-nearest for the
+                // non-negative shifted value; avoids the libm round call
+                // and autovectorizes (§Perf L3 step 5).
+                *o = (v * mf + mf + 0.5) as u8;
+            }
+        } else {
+            for (o, &x) in out.iter_mut().zip(chunk) {
+                *o = codebook.assign((x - mean) * inv);
+            }
+        }
+    }
+
+    QuantizedTensor { idx, absmax, means, block, codebook, bits: spec.bits }
+}
+
+/// Dequantize into `out` (must have the original length).
+pub fn dequantize(q: &QuantizedTensor, out: &mut [f32]) {
+    assert_eq!(out.len(), q.idx.len());
+    let values = q.codebook.values();
+    for b in 0..q.absmax.len() {
+        let lo = b * q.block;
+        let hi = (lo + q.block).min(out.len());
+        let amax = q.absmax[b];
+        let mean = q.means.as_ref().map_or(0.0, |m| m[b]);
+        for (o, &i) in out[lo..hi].iter_mut().zip(&q.idx[lo..hi]) {
+            *o = values[i as usize] * amax + mean;
+        }
+    }
+}
+
+/// Round-trip helper: quantize then dequantize into a fresh vector.
+pub fn simulate_slice(data: &[f32], spec: &QuantSpec) -> Vec<f32> {
+    let q = quantize(data, spec);
+    let mut out = vec![0.0f32; data.len()];
+    dequantize(&q, &mut out);
+    out
+}
+
+/// Root-mean-square quantization error of a spec on a slice — used by the
+/// ablation benches and tests to compare configurations cheaply.
+pub fn rms_error(data: &[f32], spec: &QuantSpec) -> f64 {
+    let back = simulate_slice(data, spec);
+    let se: f64 = data
+        .iter()
+        .zip(&back)
+        .map(|(a, b)| {
+            let d = (*a - *b) as f64;
+            d * d
+        })
+        .sum();
+    (se / data.len().max(1) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::quant::codebook::DataType;
+    use crate::util::proptest::{check, gen};
+    use crate::util::rng::Rng;
+
+    fn randn(n: usize, seed: u64, std: f32) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, std);
+        v
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_half_bin() {
+        // For int quantization the worst-case error after normalization is
+        // half the bin width times the block absmax.
+        let data = randn(4096, 1, 0.1);
+        for &k in &[3usize, 4, 8] {
+            let spec = QuantSpec::new(DataType::Int, k, Some(64));
+            let q = quantize(&data, &spec);
+            let mut back = vec![0.0; data.len()];
+            dequantize(&q, &mut back);
+            let bin = 1.0 / ((1usize << (k - 1)) - 1) as f32;
+            for b in 0..q.absmax.len() {
+                let lo = b * 64;
+                let hi = (lo + 64).min(data.len());
+                let bound = 0.5 * bin * q.absmax[b] + 1e-6;
+                for i in lo..hi {
+                    assert!(
+                        (data[i] - back[i]).abs() <= bound,
+                        "k={k} i={i}: |{} - {}| > {bound}",
+                        data[i],
+                        back[i]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_block_roundtrips_exactly() {
+        let data = vec![0.0f32; 128];
+        let spec = QuantSpec::new(DataType::Fp, 4, Some(64));
+        assert_eq!(simulate_slice(&data, &spec), data);
+    }
+
+    #[test]
+    fn partial_trailing_block() {
+        let data = randn(100, 2, 1.0); // 100 = 64 + 36
+        let spec = QuantSpec::new(DataType::Int, 8, Some(64));
+        let q = quantize(&data, &spec);
+        assert_eq!(q.absmax.len(), 2);
+        let mut back = vec![0.0; 100];
+        dequantize(&q, &mut back);
+        let rms = rms_error(&data, &spec);
+        assert!(rms < 0.02, "rms {rms}");
+    }
+
+    #[test]
+    fn small_blocks_confine_outliers() {
+        // One huge outlier; with tensor-wise quantization everything else
+        // collapses, with block-64 only the outlier's block suffers. This
+        // is the mechanism behind Figure 3.
+        let mut data = randn(1024, 3, 0.05);
+        data[0] = 50.0;
+        let spec_t = QuantSpec::new(DataType::Int, 4, None);
+        let spec_b = QuantSpec::new(DataType::Int, 4, Some(64));
+        let rms_t = rms_error(&data[64..], &spec_t.clone()); // unaffected region only
+        // Compare the error over the non-outlier region under each scheme.
+        let back_t = simulate_slice(&data, &spec_t);
+        let back_b = simulate_slice(&data, &spec_b);
+        let err_t: f64 = data[64..].iter().zip(&back_t[64..]).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        let err_b: f64 = data[64..].iter().zip(&back_b[64..]).map(|(a, b)| ((a - b) as f64).powi(2)).sum();
+        assert!(err_b * 10.0 < err_t, "blocked {err_b} vs tensorwise {err_t} (rms_t={rms_t})");
+    }
+
+    #[test]
+    fn centering_helps_shifted_distributions() {
+        let mut rng = Rng::new(4);
+        // Strongly asymmetric data (ReLU-ish): all positive around 1.0.
+        let data: Vec<f32> = (0..2048).map(|_| 1.0 + rng.normal().abs() as f32 * 0.1).collect();
+        let plain = QuantSpec::new(DataType::Int, 4, Some(64));
+        let centered = plain.clone().with_centering();
+        assert!(rms_error(&data, &centered) < rms_error(&data, &plain));
+    }
+
+    #[test]
+    fn prop_roundtrip_error_below_bin_width() {
+        check("quantize-roundtrip-bounded", 60, |rng, _| {
+            let data = gen::weights(rng, 512);
+            let block = gen::block(rng);
+            let bits = 3 + rng.below(6);
+            let dtype = DataType::ALL[rng.below(4)];
+            let spec = QuantSpec::new(dtype, bits, Some(block));
+            let q = quantize(&data, &spec);
+            let mut back = vec![0.0; data.len()];
+            dequantize(&q, &mut back);
+            // Generic bound: interior error <= max adjacent gap / 2; at the
+            // edges an asymmetric codebook (quantile) may not reach ±1, so
+            // the clamp error can be up to 1 - |extreme value|.
+            let vals = q.codebook.values();
+            let max_gap = vals.windows(2).map(|w| w[1] - w[0]).fold(0.0f32, f32::max);
+            let lo_clamp = (1.0 - vals[0].abs()).max(0.0);
+            let hi_clamp = (1.0 - vals.last().unwrap().abs()).max(0.0);
+            let worst = (max_gap * 0.5).max(lo_clamp).max(hi_clamp);
+            for b in 0..q.absmax.len() {
+                let lo = b * block;
+                let hi = (lo + block).min(data.len());
+                let bound = q.absmax[b] * worst + q.absmax[b] * 1e-5 + 1e-6;
+                for i in lo..hi {
+                    prop_assert!(
+                        (data[i] - back[i]).abs() <= bound,
+                        "{dtype:?} k={bits} block={block} i={i}: |{} - {}| > {bound}",
+                        data[i],
+                        back[i]
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_indices_within_codebook() {
+        check("indices-in-range", 40, |rng, _| {
+            let data = gen::weights(rng, 300);
+            let spec = QuantSpec::new(DataType::ALL[rng.below(4)], gen::bits(rng).max(3), Some(gen::block(rng)));
+            let q = quantize(&data, &spec);
+            let n = q.codebook.len();
+            prop_assert!(q.idx.iter().all(|&i| (i as usize) < n), "index out of range");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_dequantize_deterministic() {
+        check("roundtrip-deterministic", 20, |rng, _| {
+            let data = gen::weights(rng, 256);
+            let spec = QuantSpec::new(DataType::Fp, 4, Some(64));
+            prop_assert!(
+                simulate_slice(&data, &spec) == simulate_slice(&data, &spec),
+                "nondeterministic round trip"
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,79 @@
+//! Distribution centering (Appendix B) — a documented negative result.
+//!
+//! Centering subtracts the per-block mean before quantization (Eq. 7) and
+//! adds it back on dequantization (Eq. 8). The mechanism is folded into
+//! `blockwise::quantize` via `QuantSpec::centering`; this module carries
+//! the standalone analysis utilities the Appendix-B ablation bench (E13)
+//! uses to show the effect is a wash for near-symmetric weight
+//! distributions while costing an extra 16/B bits per parameter.
+
+use super::blockwise::rms_error;
+use super::spec::QuantSpec;
+
+/// Compare quantization RMS error with and without centering on one slice.
+/// Returns `(plain_rms, centered_rms)`.
+pub fn centering_ablation(data: &[f32], spec: &QuantSpec) -> (f64, f64) {
+    let plain = QuantSpec { centering: false, ..spec.clone() };
+    let centered = QuantSpec { centering: true, ..spec.clone() };
+    (rms_error(data, &plain), rms_error(data, &centered))
+}
+
+/// Summary statistic for the E13 bench: relative RMS change from centering
+/// (< 0 means centering helped) and the bits/param it cost.
+pub struct CenteringReport {
+    pub plain_rms: f64,
+    pub centered_rms: f64,
+    pub rel_change: f64,
+    pub extra_bits_per_param: f64,
+}
+
+pub fn report(data: &[f32], spec: &QuantSpec) -> CenteringReport {
+    let (plain_rms, centered_rms) = centering_ablation(data, spec);
+    let block = spec.block.unwrap_or(data.len().max(1)) as f64;
+    CenteringReport {
+        plain_rms,
+        centered_rms,
+        rel_change: (centered_rms - plain_rms) / plain_rms.max(1e-30),
+        extra_bits_per_param: 16.0 / block,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::codebook::DataType;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn centering_is_a_wash_on_symmetric_weights() {
+        // Near-zero-mean weights (what transformer projections look like):
+        // centering changes error by only a small relative amount — the
+        // Appendix-B negative result.
+        let mut rng = Rng::new(8);
+        let data: Vec<f32> = (0..8192).map(|_| rng.normal() as f32 * 0.02).collect();
+        let spec = QuantSpec::new(DataType::Int, 4, Some(64));
+        let r = report(&data, &spec);
+        assert!(
+            r.rel_change.abs() < 0.15,
+            "centering changed symmetric-data RMS by {:.1}%",
+            r.rel_change * 100.0
+        );
+    }
+
+    #[test]
+    fn centering_helps_asymmetric_activations() {
+        // The case centering was designed for (ReLU-style outputs).
+        let mut rng = Rng::new(9);
+        let data: Vec<f32> = (0..8192).map(|_| 2.0 + rng.normal().abs() as f32).collect();
+        let spec = QuantSpec::new(DataType::Int, 4, Some(64));
+        let r = report(&data, &spec);
+        assert!(r.centered_rms < r.plain_rms, "{} !< {}", r.centered_rms, r.plain_rms);
+    }
+
+    #[test]
+    fn report_accounts_extra_bits() {
+        let spec = QuantSpec::new(DataType::Int, 4, Some(64));
+        let r = report(&[0.5, -0.25, 0.125, 1.0], &spec);
+        assert!((r.extra_bits_per_param - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,403 @@
+//! Quantization data types as codebooks (Appendix A of the paper).
+//!
+//! A k-bit data type is the sorted set `F` of `2^k` values in `[-1, 1]`
+//! that integer indices map onto. This module mirrors
+//! `python/compile/kernels/codebooks.py` exactly — the pytest/cargo parity
+//! suite asserts bit-identical vectors via `artifacts/codebooks.json`.
+//!
+//! Assignment (Eq. 1/3: nearest codebook value) is the innermost loop of
+//! the whole study, so a [`Codebook`] precomputes the **decision
+//! boundaries** (midpoints between adjacent entries): assignment becomes a
+//! branchless binary search over boundaries instead of an argmin over the
+//! set, and for the common k ≤ 5 sizes a linear SIMD-friendly scan.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// The four data types studied by the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataType {
+    /// Symmetric linear integer quantization.
+    Int,
+    /// ExMy floating point (FP8-style, no NaN/Inf patterns).
+    Fp,
+    /// Information-theoretically optimal quantile quantization.
+    Quantile,
+    /// Dynamic-exponent data type (Dettmers, 2016).
+    DynExp,
+}
+
+impl DataType {
+    pub fn name(self) -> &'static str {
+        match self {
+            DataType::Int => "int",
+            DataType::Fp => "fp",
+            DataType::Quantile => "quantile",
+            DataType::DynExp => "dynexp",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "int" => DataType::Int,
+            "fp" | "float" => DataType::Fp,
+            "quantile" => DataType::Quantile,
+            "dynexp" | "dynamic" => DataType::DynExp,
+            _ => bail!("unknown data type {s:?} (int|fp|quantile|dynexp)"),
+        })
+    }
+
+    pub const ALL: [DataType; 4] = [DataType::Int, DataType::Fp, DataType::Quantile, DataType::DynExp];
+}
+
+/// Paper heuristic (Appendix C.4): 3-bit exponent for k in 4..8, 2-bit for
+/// k = 3.
+pub fn default_exponent_bits(k: usize) -> usize {
+    if k <= 3 {
+        2
+    } else {
+        3
+    }
+}
+
+/// A sorted codebook with precomputed assignment boundaries.
+#[derive(Debug, Clone)]
+pub struct Codebook {
+    values: Vec<f32>,
+    /// `boundaries[i]` = midpoint between `values[i]` and `values[i+1]`;
+    /// a normalized input `x` maps to index `partition_point(b < x)`.
+    boundaries: Vec<f32>,
+}
+
+impl Codebook {
+    pub fn from_values(mut values: Vec<f32>) -> Self {
+        values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        values.dedup();
+        assert!(values.len() >= 2, "codebook needs at least 2 values");
+        let boundaries = values
+            .windows(2)
+            .map(|w| 0.5 * (w[0] + w[1]))
+            .collect();
+        Codebook { values, boundaries }
+    }
+
+    /// Build the codebook for a data type at `k` bits.
+    ///
+    /// `exponent_bits` applies to `Fp` only (None = paper default).
+    /// `Quantile` uses the same fixed standard-normal sample (seed
+    /// `0x5EED`, 65536 draws) as the python side, making the "generic"
+    /// quantile data type deterministic and input independent.
+    pub fn build(dtype: DataType, k: usize, exponent_bits: Option<usize>) -> Result<Self> {
+        let values = match dtype {
+            DataType::Int => int_values(k)?,
+            DataType::Fp => fp_values(k, exponent_bits.unwrap_or(default_exponent_bits(k)))?,
+            DataType::DynExp => dynexp_values(k)?,
+            DataType::Quantile => quantile_values(k, &normal_sample())?,
+        };
+        Ok(Codebook::from_values(values))
+    }
+
+    /// Data-dependent quantile codebook estimated from `sample` (Eq. 6).
+    pub fn quantile_from_sample(k: usize, sample: &[f32]) -> Result<Self> {
+        Ok(Codebook::from_values(quantile_values(k, sample)?))
+    }
+
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    pub fn len(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        false
+    }
+
+    /// Nearest-value index for a normalized input in `[-1, 1]`.
+    ///
+    /// Boundary semantics match the python oracle: values exactly on a
+    /// midpoint take the lower index (strict `<` comparison).
+    #[inline]
+    pub fn assign(&self, x: f32) -> u8 {
+        if self.boundaries.len() <= 16 {
+            // Linear scan beats binary search for tiny codebooks and
+            // autovectorizes; this covers k <= 4 plus int5.
+            let mut idx = 0usize;
+            for &b in &self.boundaries {
+                idx += (b < x) as usize;
+            }
+            idx as u8
+        } else {
+            self.boundaries.partition_point(|&b| b < x) as u8
+        }
+    }
+
+    #[inline]
+    pub fn value(&self, idx: u8) -> f32 {
+        self.values[idx as usize]
+    }
+
+    /// Padded copy of the values for the fused-kernel artifact (codebook
+    /// argument is fixed at 256 entries; padding repeats the max value and
+    /// is never indexed).
+    pub fn padded_values(&self, pad_to: usize) -> Vec<f32> {
+        let mut v = self.values.clone();
+        let last = *v.last().unwrap();
+        v.resize(pad_to, last);
+        v
+    }
+}
+
+fn int_values(k: usize) -> Result<Vec<f32>> {
+    if !(2..=8).contains(&k) {
+        bail!("int codebook needs 2 <= k <= 8, got {k}");
+    }
+    let m = (1i32 << (k - 1)) - 1;
+    Ok((-m..=m).map(|i| i as f32 / m as f32).collect())
+}
+
+fn fp_values(k: usize, e: usize) -> Result<Vec<f32>> {
+    let m_bits = k.checked_sub(1 + e).filter(|_| e >= 1);
+    let Some(m_bits) = m_bits else {
+        bail!("invalid fp layout: k={k} exponent_bits={e}");
+    };
+    let bias = 1i32 << (e - 1);
+    let mut vals: Vec<f64> = Vec::new();
+    for sign in [1.0f64, -1.0] {
+        for exp_field in 0..(1u32 << e) {
+            for man_field in 0..(1u32 << m_bits) {
+                let frac = man_field as f64 / (1u64 << m_bits) as f64;
+                let v = if exp_field == 0 {
+                    sign * 2f64.powi(1 - bias) * frac
+                } else {
+                    sign * 2f64.powi(exp_field as i32 - bias) * (1.0 + frac)
+                };
+                vals.push(v);
+            }
+        }
+    }
+    sort_dedup_normalize(vals)
+}
+
+fn dynexp_values(k: usize) -> Result<Vec<f32>> {
+    if !(3..=8).contains(&k) {
+        bail!("dynexp codebook needs 3 <= k <= 8, got {k}");
+    }
+    let mut vals: Vec<f64> = vec![0.0];
+    for sign in [1.0f64, -1.0] {
+        for z in 0..(k - 1) {
+            let f = k - 2 - z;
+            let n = 1usize << f;
+            for i in 0..n {
+                let frac = 0.1 + (0.9 - 0.1) * (i + 1) as f64 / n as f64;
+                vals.push(sign * 10f64.powi(-(z as i32)) * frac);
+            }
+        }
+    }
+    sort_dedup_normalize(vals)
+}
+
+fn quantile_values(k: usize, sample: &[f32]) -> Result<Vec<f32>> {
+    let n = 1usize << k;
+    if sample.len() < n {
+        bail!("need at least {n} samples for a {k}-bit quantile codebook");
+    }
+    let mut sorted: Vec<f64> = sample.iter().map(|&x| x as f64).collect();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mut q: Vec<f64> = (0..n)
+        .map(|i| {
+            let lo = quantile_interp(&sorted, i as f64 / (n + 1) as f64);
+            let hi = quantile_interp(&sorted, (i + 1) as f64 / (n + 1) as f64);
+            0.5 * (lo + hi)
+        })
+        .collect();
+    q.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Anchor an exact zero on the entry nearest to it (python parity).
+    let zi = q
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.abs().partial_cmp(&b.1.abs()).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    q[zi] = 0.0;
+    let amax = q.iter().fold(0.0f64, |acc, &v| acc.max(v.abs()));
+    if amax == 0.0 {
+        bail!("degenerate sample: all quantiles are zero");
+    }
+    Ok(q.into_iter().map(|v| (v / amax) as f32).collect())
+}
+
+/// Linear-interpolation quantile matching `numpy.quantile`'s default.
+fn quantile_interp(sorted: &[f64], p: f64) -> f64 {
+    let n = sorted.len();
+    let h = p * (n - 1) as f64;
+    let lo = h.floor() as usize;
+    let hi = h.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        sorted[lo] + (h - lo as f64) * (sorted[hi] - sorted[lo])
+    }
+}
+
+fn sort_dedup_normalize(mut vals: Vec<f64>) -> Result<Vec<f32>> {
+    vals.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    vals.dedup();
+    let amax = vals.iter().fold(0.0f64, |acc, &v| acc.max(v.abs()));
+    if amax == 0.0 {
+        bail!("degenerate codebook");
+    }
+    Ok(vals.into_iter().map(|v| (v / amax) as f32).collect())
+}
+
+/// The fixed standard-normal sample shared with the python side for the
+/// generic quantile data type. Seed and count must match
+/// `codebooks.make_codebook` — but note the *sampler* differs (numpy
+/// Philox vs xoshiro), so parity for quantile codebooks is asserted at the
+/// distribution level (golden test tolerance) rather than bit level.
+fn normal_sample() -> Vec<f32> {
+    let mut rng = Rng::new(0x5EED);
+    let mut v = vec![0.0f32; 65536];
+    rng.fill_normal(&mut v, 1.0);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_sorted_symmetric(cb: &Codebook, tol: f32) {
+        let v = cb.values();
+        for w in v.windows(2) {
+            assert!(w[0] < w[1], "not strictly sorted: {w:?}");
+        }
+        // Max |v| is 1 and the set is ~symmetric around 0.
+        let amax = v.iter().fold(0.0f32, |a, &x| a.max(x.abs()));
+        assert!((amax - 1.0).abs() < 1e-6);
+        let min = v[0];
+        let max = *v.last().unwrap();
+        assert!((min + max).abs() <= tol, "asymmetric: min={min} max={max}");
+    }
+
+    #[test]
+    fn int_codebook_matches_formula() {
+        let cb = Codebook::build(DataType::Int, 4, None).unwrap();
+        assert_eq!(cb.len(), 15); // 2^4 - 1 (symmetric truncation)
+        assert_eq!(cb.value(7), 0.0);
+        assert_eq!(cb.value(14), 1.0);
+        assert_eq!(cb.value(0), -1.0);
+        assert_sorted_symmetric(&cb, 0.0);
+    }
+
+    #[test]
+    fn fp_codebook_properties() {
+        for k in 3..=8 {
+            for e in 1..k - 1 {
+                let cb = Codebook::build(DataType::Fp, k, Some(e)).unwrap();
+                assert_sorted_symmetric(&cb, 1e-6);
+                assert!(cb.values().contains(&0.0), "fp k={k} e={e} missing zero");
+                // Dedup removes the double-counted ±0 pattern.
+                assert!(cb.len() <= (1 << k) && cb.len() >= (1 << k) - 2);
+            }
+        }
+    }
+
+    #[test]
+    fn dynexp_codebook_properties() {
+        for k in 3..=8 {
+            let cb = Codebook::build(DataType::DynExp, k, None).unwrap();
+            assert_sorted_symmetric(&cb, 1e-6);
+            assert!(cb.values().contains(&0.0));
+            // Spans k-2 decades: smallest positive value is 10^-(k-2)
+            // (the all-exponent pattern's fraction, normalized by 0.9).
+            let smallest_nonzero = cb
+                .values()
+                .iter()
+                .filter(|v| **v > 0.0)
+                .fold(f32::INFINITY, |a, &b| a.min(b));
+            let want = 10f32.powi(-(k as i32 - 2));
+            assert!(
+                (smallest_nonzero - want).abs() < want * 0.01,
+                "k={k}: {smallest_nonzero} vs {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn quantile_codebook_equalizes_mass() {
+        let cb = Codebook::build(DataType::Quantile, 4, None).unwrap();
+        assert_eq!(cb.len(), 16);
+        assert!(cb.values().contains(&0.0));
+        // Each bin should hold roughly equal mass of a fresh normal sample.
+        let mut rng = Rng::new(99);
+        let mut counts = vec![0usize; cb.len()];
+        let n = 100_000;
+        for _ in 0..n {
+            // normalize by ~max|sample| the way blockwise would
+            let x = (rng.normal() / 4.5) as f32;
+            counts[cb.assign(x) as usize] += 1;
+        }
+        let expect = n / cb.len();
+        let within = counts.iter().filter(|&&c| c > expect / 3 && c < expect * 3).count();
+        assert!(within >= cb.len() - 2, "counts too skewed: {counts:?}");
+    }
+
+    #[test]
+    fn assign_picks_nearest() {
+        let cb = Codebook::from_values(vec![-1.0, -0.25, 0.0, 0.5, 1.0]);
+        assert_eq!(cb.assign(-2.0), 0);
+        // midpoint(-1.0, -0.25) = -0.625; -0.6 is above it -> index 1
+        assert_eq!(cb.value(cb.assign(-0.6)), -0.25);
+        assert_eq!(cb.value(cb.assign(-0.7)), -1.0);
+        assert_eq!(cb.value(cb.assign(0.24)), 0.0);
+        assert_eq!(cb.value(cb.assign(0.26)), 0.5);
+        assert_eq!(cb.assign(2.0), 4);
+    }
+
+    #[test]
+    fn assign_matches_argmin_for_all_dtypes() {
+        let mut rng = Rng::new(5);
+        for dtype in DataType::ALL {
+            for k in 3..=8 {
+                let cb = Codebook::build(dtype, k, None).unwrap();
+                for _ in 0..500 {
+                    let x = (rng.f64() * 2.2 - 1.1) as f32;
+                    let fast = cb.assign(x) as usize;
+                    let brute = cb
+                        .values()
+                        .iter()
+                        .enumerate()
+                        .min_by(|a, b| {
+                            (a.1 - x).abs().partial_cmp(&(b.1 - x).abs()).unwrap()
+                        })
+                        .unwrap()
+                        .0;
+                    let d_fast = (cb.values()[fast] - x).abs();
+                    let d_brute = (cb.values()[brute] - x).abs();
+                    assert!(
+                        (d_fast - d_brute).abs() < 1e-7,
+                        "{dtype:?} k={k} x={x}: fast={fast} brute={brute}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn padded_values_never_change_prefix() {
+        let cb = Codebook::build(DataType::Fp, 4, None).unwrap();
+        let p = cb.padded_values(256);
+        assert_eq!(p.len(), 256);
+        assert_eq!(&p[..cb.len()], cb.values());
+    }
+
+    #[test]
+    fn exponent_heuristic() {
+        assert_eq!(default_exponent_bits(3), 2);
+        for k in 4..=8 {
+            assert_eq!(default_exponent_bits(k), 3);
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! k-bit index packing: the storage wire format.
+//!
+//! The scaling-law sweep uses simulated quantization (indices stay
+//! unpacked), but the *bits on the x-axis* and the fused-kernel latency
+//! path are about real storage: this module packs k-bit codebook indices
+//! (3 ≤ k ≤ 8) into a dense little-endian `u32` bitstream and back, plus
+//! the two-nibbles-per-byte layout the `packed4` Pallas kernel consumes.
+
+use anyhow::{bail, Result};
+
+/// Densely pack `k`-bit values into a `u32` bitstream (little-endian bit
+/// order within and across words).
+pub fn pack_bits(idx: &[u8], k: usize) -> Result<Vec<u32>> {
+    if !(1..=8).contains(&k) {
+        bail!("pack_bits supports 1..=8 bits, got {k}");
+    }
+    let limit = if k == 8 { 255u16 } else { (1u16 << k) - 1 };
+    let words = (idx.len() * k).div_ceil(32);
+    let mut out = vec![0u32; words];
+    let mut bitpos = 0usize;
+    for &v in idx {
+        if v as u16 > limit {
+            bail!("index {v} does not fit in {k} bits");
+        }
+        let word = bitpos / 32;
+        let off = bitpos % 32;
+        out[word] |= (v as u32) << off;
+        let spill = off + k;
+        if spill > 32 {
+            out[word + 1] |= (v as u32) >> (32 - off);
+        }
+        bitpos += k;
+    }
+    Ok(out)
+}
+
+/// Inverse of [`pack_bits`]; `n` is the original element count.
+pub fn unpack_bits(packed: &[u32], k: usize, n: usize) -> Result<Vec<u8>> {
+    if !(1..=8).contains(&k) {
+        bail!("unpack_bits supports 1..=8 bits, got {k}");
+    }
+    if packed.len() * 32 < n * k {
+        bail!("packed stream too short: {} words for {n} x {k}-bit", packed.len());
+    }
+    let mask = if k == 8 { 0xFFu32 } else { (1u32 << k) - 1 };
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let word = bitpos / 32;
+        let off = bitpos % 32;
+        let mut v = packed[word] >> off;
+        if off + k > 32 {
+            v |= packed[word + 1] << (32 - off);
+        }
+        out.push((v & mask) as u8);
+        bitpos += k;
+    }
+    Ok(out)
+}
+
+/// Pack 4-bit indices two-per-byte along rows of a `(K, N)` index matrix:
+/// row `2r` → low nibble, row `2r+1` → high nibble of output row `r`.
+/// Mirrors `ref.pack4` for the `packed4` fused kernel.
+pub fn pack4_rows(idx: &[u8], rows: usize, cols: usize) -> Result<Vec<u8>> {
+    if rows % 2 != 0 || idx.len() != rows * cols {
+        bail!("pack4_rows needs even rows ({rows}) and matching len");
+    }
+    if idx.iter().any(|&v| v > 15) {
+        bail!("pack4_rows given indices wider than 4 bits");
+    }
+    let mut out = vec![0u8; rows / 2 * cols];
+    for r in 0..rows / 2 {
+        for c in 0..cols {
+            let lo = idx[(2 * r) * cols + c];
+            let hi = idx[(2 * r + 1) * cols + c];
+            out[r * cols + c] = lo | (hi << 4);
+        }
+    }
+    Ok(out)
+}
+
+/// Inverse of [`pack4_rows`].
+pub fn unpack4_rows(packed: &[u8], half_rows: usize, cols: usize) -> Result<Vec<u8>> {
+    if packed.len() != half_rows * cols {
+        bail!("unpack4_rows length mismatch");
+    }
+    let mut out = vec![0u8; half_rows * 2 * cols];
+    for r in 0..half_rows {
+        for c in 0..cols {
+            let b = packed[r * cols + c];
+            out[(2 * r) * cols + c] = b & 0xF;
+            out[(2 * r + 1) * cols + c] = b >> 4;
+        }
+    }
+    Ok(out)
+}
+
+/// Exact storage size in bytes of a packed k-bit stream of `n` indices.
+pub fn packed_bytes(n: usize, k: usize) -> usize {
+    (n * k).div_ceil(32) * 4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::proptest::check;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        for k in 1..=8usize {
+            let limit = (1u16 << k).min(256) as usize;
+            let idx: Vec<u8> = (0..1000).map(|i| (i % limit) as u8).collect();
+            let packed = pack_bits(&idx, k).unwrap();
+            assert_eq!(packed.len(), (1000 * k).div_ceil(32));
+            let back = unpack_bits(&packed, k, 1000).unwrap();
+            assert_eq!(back, idx, "k={k}");
+        }
+    }
+
+    #[test]
+    fn pack_rejects_overwide_values() {
+        assert!(pack_bits(&[8], 3).is_err());
+        assert!(pack_bits(&[7], 3).is_ok());
+    }
+
+    #[test]
+    fn unpack_rejects_short_streams() {
+        assert!(unpack_bits(&[0u32], 8, 5).is_err());
+    }
+
+    #[test]
+    fn pack4_rows_matches_python_layout() {
+        // 4x2 matrix, distinct nibbles.
+        let idx = [1u8, 2, 3, 4, 5, 6, 7, 8];
+        let packed = pack4_rows(&idx, 4, 2).unwrap();
+        // row0=[1,2] row1=[3,4] -> out row0 = [1|3<<4, 2|4<<4]
+        assert_eq!(packed, vec![0x31, 0x42, 0x75, 0x86]);
+        assert_eq!(unpack4_rows(&packed, 2, 2).unwrap(), idx);
+    }
+
+    #[test]
+    fn prop_roundtrip_random_streams() {
+        check("pack-roundtrip", 50, |rng, _| {
+            let k = 1 + rng.below(8);
+            let n = 1 + rng.below(2000);
+            let limit = (1usize << k).min(256);
+            let idx: Vec<u8> = (0..n).map(|_| rng.below(limit) as u8).collect();
+            let back = unpack_bits(&pack_bits(&idx, k).unwrap(), k, n).unwrap();
+            prop_assert!(back == idx, "k={k} n={n} roundtrip mismatch");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_bytes_accounting() {
+        assert_eq!(packed_bytes(64, 4), 32);
+        assert_eq!(packed_bytes(64, 3), 24);
+        assert_eq!(packed_bytes(1, 3), 4); // word granularity
+    }
+}

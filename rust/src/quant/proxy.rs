@@ -1,0 +1,319 @@
+//! Outlier-dependent quantization through **proxy quantization** (§3).
+//!
+//! Emergent outlier features make some hidden dimensions carry values up
+//! to 20x larger than the rest; at 3-bit they destroy the quantization of
+//! every block they touch. Proxy quantization is the paper's
+//! input-independent fix: use the **standard deviation of each hidden
+//! unit's weights in the previous layer** (Eq. 2) as a proxy for which
+//! *input* dimensions of the next layer host outlier features, and keep
+//! the top `p`% of those input rows in 16-bit while quantizing the rest to
+//! k-bit. Cost: `p * (16 - k)` extra bits/param (`bitcost`).
+//!
+//! Wiring for this repo's stacked parameter layout (per transformer block,
+//! residual width `d`, FFN width `f = 4d`):
+//!
+//! * `qkv[l]`, `fc1[l]` read the residual stream → proxy stds come from
+//!   the previous block's residual writers (`wo[l-1]`, `fc2[l-1]` column
+//!   stds, elementwise max), or the embedding column stds for block 0.
+//! * `wo[l]` reads the attention context → proxy stds from the
+//!   V-projection columns of `qkv[l]`.
+//! * `fc2[l]` reads the FFN activation → proxy stds from `fc1[l]` columns.
+
+use std::collections::BTreeMap;
+
+use crate::tensor::Tensor;
+
+use super::blockwise::{dequantize, quantize};
+use super::spec::QuantSpec;
+
+/// Per-column standard deviation of a row-major `(rows, cols)` matrix.
+pub fn column_stds(data: &[f32], rows: usize, cols: usize) -> Vec<f64> {
+    assert_eq!(data.len(), rows * cols);
+    let mut mean = vec![0.0f64; cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            mean[c] += data[r * cols + c] as f64;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= rows as f64;
+    }
+    let mut var = vec![0.0f64; cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            let d = data[r * cols + c] as f64 - mean[c];
+            var[c] += d * d;
+        }
+    }
+    var.into_iter().map(|v| (v / rows as f64).sqrt()).collect()
+}
+
+/// Indices of the top `ceil(pct * n)` entries by value.
+pub fn top_pct_indices(scores: &[f64], pct: f64) -> Vec<usize> {
+    let k = ((scores.len() as f64 * pct).ceil() as usize).min(scores.len());
+    if k == 0 {
+        return Vec::new();
+    }
+    let mut order: Vec<usize> = (0..scores.len()).collect();
+    order.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    let mut out = order[..k].to_vec();
+    out.sort_unstable();
+    out
+}
+
+/// Standalone-tensor fallback: flag the top `pct` input rows by the
+/// tensor's own column std mapped back onto rows via magnitude. Used when
+/// a tensor is quantized outside a checkpoint context.
+pub fn column_outliers_by_std(t: &Tensor, pct: f64) -> Vec<usize> {
+    let shape = t.shape();
+    let (rows, cols) = match shape.len() {
+        2 => (shape[0], shape[1]),
+        3 => (shape[1], shape[2]),
+        _ => return Vec::new(),
+    };
+    // Row scores: per-row max |w| (a row hosting outliers has large values).
+    let data = &t.data()[..rows * cols];
+    let scores: Vec<f64> = (0..rows)
+        .map(|r| {
+            data[r * cols..(r + 1) * cols]
+                .iter()
+                .fold(0.0f64, |acc, &x| acc.max(x.abs() as f64))
+        })
+        .collect();
+    top_pct_indices(&scores, pct)
+}
+
+/// Quantize a `(rows, cols)` matrix slice keeping `outlier_rows` in 16-bit.
+///
+/// Outlier rows are excluded from the quantization path entirely (they do
+/// not pollute block absmax values) and restored verbatim afterwards —
+/// the "quantize weights to higher precision for outlier dimensions"
+/// mechanism of §3.
+pub fn simulate_mixed_slice(
+    data: &[f32],
+    _rows: usize,
+    cols: usize,
+    spec: &QuantSpec,
+    outlier_rows: &[usize],
+) -> Vec<f32> {
+    let mut masked = data.to_vec();
+    for &r in outlier_rows {
+        masked[r * cols..(r + 1) * cols].fill(0.0);
+    }
+    let base = QuantSpec { proxy_outlier_pct: None, ..spec.clone() };
+    let q = quantize(&masked, &base);
+    let mut out = vec![0.0f32; data.len()];
+    dequantize(&q, &mut out);
+    for &r in outlier_rows {
+        out[r * cols..(r + 1) * cols].copy_from_slice(&data[r * cols..(r + 1) * cols]);
+    }
+    out
+}
+
+/// [`simulate_mixed_slice`] over a whole tensor (rank 2, or rank 3 with
+/// the same outlier set per layer slice).
+pub fn simulate_mixed(t: &Tensor, spec: &QuantSpec, outlier_rows: &[usize]) -> Tensor {
+    let shape = t.shape().to_vec();
+    match shape.len() {
+        2 => {
+            let out = simulate_mixed_slice(t.data(), shape[0], shape[1], spec, outlier_rows);
+            Tensor::new(shape, out)
+        }
+        3 => {
+            let (l, r, c) = (shape[0], shape[1], shape[2]);
+            let per = r * c;
+            let mut out = vec![0.0f32; t.len()];
+            for li in 0..l {
+                let s = simulate_mixed_slice(&t.data()[li * per..(li + 1) * per], r, c, spec, outlier_rows);
+                out[li * per..(li + 1) * per].copy_from_slice(&s);
+            }
+            Tensor::new(shape, out)
+        }
+        _ => t.clone(),
+    }
+}
+
+/// Full checkpoint proxy quantization with the §3 wiring described in the
+/// module docs. `quantized_names` must include the four projections.
+pub fn quantize_checkpoint_proxy(
+    params: &[(String, Tensor)],
+    quantized_names: &[String],
+    spec: &QuantSpec,
+) -> Vec<(String, Tensor)> {
+    let pct = spec.proxy_outlier_pct.unwrap_or(0.0);
+    let by_name: BTreeMap<&str, &Tensor> =
+        params.iter().map(|(n, t)| (n.as_str(), t)).collect();
+
+    // Fall back to per-tensor magnitude proxies if the checkpoint does not
+    // carry the expected transformer layout.
+    let (Some(embed), Some(qkv), Some(wo), Some(fc1), Some(fc2)) = (
+        by_name.get("embed"),
+        by_name.get("qkv"),
+        by_name.get("wo"),
+        by_name.get("fc1"),
+        by_name.get("fc2"),
+    ) else {
+        return params
+            .iter()
+            .map(|(name, t)| {
+                if quantized_names.iter().any(|q| q == name) {
+                    let idx = column_outliers_by_std(t, pct);
+                    (name.clone(), simulate_mixed(t, spec, &idx))
+                } else {
+                    (name.clone(), t.clone())
+                }
+            })
+            .collect();
+    };
+
+    let l = qkv.shape()[0];
+    let d = qkv.shape()[1];
+    let f = fc1.shape()[2];
+    let (vocab, _) = embed.dims2().expect("embed is rank 2");
+
+    // Residual-stream outlier dims per block boundary.
+    let embed_stds = column_stds(embed.data(), vocab, d);
+    let mut resid_outliers: Vec<Vec<usize>> = Vec::with_capacity(l);
+    for li in 0..l {
+        let stds = if li == 0 {
+            embed_stds.clone()
+        } else {
+            let per_wo = d * d;
+            let per_fc2 = f * d;
+            let wo_stds = column_stds(&wo.data()[(li - 1) * per_wo..li * per_wo], d, d);
+            let fc2_stds = column_stds(&fc2.data()[(li - 1) * per_fc2..li * per_fc2], f, d);
+            wo_stds
+                .iter()
+                .zip(&fc2_stds)
+                .map(|(a, b)| a.max(*b))
+                .collect()
+        };
+        resid_outliers.push(top_pct_indices(&stds, pct));
+    }
+
+    let mut out = Vec::with_capacity(params.len());
+    for (name, t) in params {
+        if !quantized_names.iter().any(|q| q == name) {
+            out.push((name.clone(), t.clone()));
+            continue;
+        }
+        let shape = t.shape().to_vec();
+        let per = shape[1] * shape[2];
+        let mut data = vec![0.0f32; t.len()];
+        for li in 0..l {
+            let slice = &t.data()[li * per..(li + 1) * per];
+            let rows_set: Vec<usize> = match name.as_str() {
+                "qkv" | "fc1" => resid_outliers[li].clone(),
+                "wo" => {
+                    // V-projection columns of qkv[l] are cols 2d..3d.
+                    let per_qkv = d * 3 * d;
+                    let stds = column_stds(&qkv.data()[li * per_qkv..(li + 1) * per_qkv], d, 3 * d);
+                    top_pct_indices(&stds[2 * d..3 * d], pct)
+                }
+                "fc2" => {
+                    let per_fc1 = d * f;
+                    let stds = column_stds(&fc1.data()[li * per_fc1..(li + 1) * per_fc1], d, f);
+                    top_pct_indices(&stds, pct)
+                }
+                _ => Vec::new(),
+            };
+            let s = simulate_mixed_slice(slice, shape[1], shape[2], spec, &rows_set);
+            data[li * per..(li + 1) * per].copy_from_slice(&s);
+        }
+        out.push((name.clone(), Tensor::new(shape, data)));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::codebook::DataType;
+    use crate::util::rng::Rng;
+
+    fn randn(shape: Vec<usize>, seed: u64, std: f32) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let n = shape.iter().product();
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, std);
+        Tensor::new(shape, v)
+    }
+
+    #[test]
+    fn column_stds_detects_planted_outlier_unit() {
+        let mut t = randn(vec![32, 16], 1, 0.02);
+        // Hidden unit 5 has 20x std (the paper's §3 observation).
+        for r in 0..32 {
+            t.data_mut()[r * 16 + 5] *= 20.0;
+        }
+        let stds = column_stds(t.data(), 32, 16);
+        let top = top_pct_indices(&stds, 0.07); // top ~7% of 16 = 2 dims
+        assert!(top.contains(&5), "top dims {top:?} missing planted outlier");
+    }
+
+    #[test]
+    fn top_pct_edge_cases() {
+        let s = vec![1.0, 3.0, 2.0];
+        assert!(top_pct_indices(&s, 0.0).is_empty());
+        assert_eq!(top_pct_indices(&s, 0.4), vec![1, 2]); // ceil(1.2)=2 -> idx 1,2
+        assert_eq!(top_pct_indices(&s, 1.0), vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn mixed_quantization_protects_outlier_rows() {
+        let mut t = randn(vec![64, 32], 2, 0.02);
+        for c in 0..32 {
+            t.data_mut()[7 * 32 + c] = 2.0; // huge outlier row
+        }
+        // Block 64 spans two rows, so the outlier row shares blocks with
+        // its neighbours — the pollution case proxy quantization fixes.
+        let spec = QuantSpec::new(DataType::Int, 3, Some(64)).with_proxy(0.02);
+        let out = simulate_mixed(&t, &spec, &[7]);
+        // Outlier row survives exactly.
+        for c in 0..32 {
+            assert_eq!(out.data()[7 * 32 + c], 2.0);
+        }
+        // And its magnitude no longer pollutes neighbours: compare error
+        // against quantizing with the outlier in-band.
+        let naive = crate::quant::simulate(&t, &QuantSpec::new(DataType::Int, 3, Some(64)));
+        let err_mixed: f32 = (0..t.len())
+            .filter(|i| i / 32 != 7)
+            .map(|i| (out.data()[i] - t.data()[i]).abs())
+            .fold(0.0, f32::max);
+        let err_naive: f32 = (0..t.len())
+            .filter(|i| i / 32 != 7)
+            .map(|i| (naive.data()[i] - t.data()[i]).abs())
+            .fold(0.0, f32::max);
+        assert!(err_mixed < err_naive, "{err_mixed} !< {err_naive}");
+    }
+
+    #[test]
+    fn checkpoint_proxy_runs_on_transformer_layout() {
+        let (l, d, f, v) = (2usize, 8usize, 32usize, 64usize);
+        let params = vec![
+            ("embed".to_string(), randn(vec![v, d], 3, 0.02)),
+            ("qkv".to_string(), randn(vec![l, d, 3 * d], 4, 0.02)),
+            ("wo".to_string(), randn(vec![l, d, d], 5, 0.02)),
+            ("fc1".to_string(), randn(vec![l, d, f], 6, 0.02)),
+            ("fc2".to_string(), randn(vec![l, f, d], 7, 0.02)),
+        ];
+        let qn: Vec<String> = ["qkv", "wo", "fc1", "fc2"].iter().map(|s| s.to_string()).collect();
+        let spec = QuantSpec::new(DataType::Int, 3, Some(32)).with_proxy(0.05);
+        let out = quantize_checkpoint_proxy(&params, &qn, &spec);
+        assert_eq!(out.len(), params.len());
+        assert_eq!(out[0].1, params[0].1, "embed untouched");
+        for i in 1..5 {
+            assert_eq!(out[i].1.shape(), params[i].1.shape());
+            assert!(out[i].1.max_abs_diff(&params[i].1) > 0.0, "{} unchanged", out[i].0);
+        }
+    }
+
+    #[test]
+    fn proxy_pct_zero_equals_plain_quantization() {
+        let t = randn(vec![32, 16], 8, 0.05);
+        let spec = QuantSpec::new(DataType::Int, 4, Some(16));
+        let mixed = simulate_mixed(&t, &spec.clone().with_proxy(0.0), &[]);
+        let plain = crate::quant::simulate(&t, &spec);
+        assert_eq!(mixed, plain);
+    }
+}

@@ -1,0 +1,123 @@
+//! [`QuantSpec`]: the full description of one quantization configuration —
+//! one cell of the paper's 35,000-experiment grid.
+
+use anyhow::Result;
+
+use super::codebook::{Codebook, DataType};
+
+/// Everything the paper varies about zero-shot quantization.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QuantSpec {
+    pub dtype: DataType,
+    /// Bit width `k` (3..=8). `16` means the unquantized baseline.
+    pub bits: usize,
+    /// Block size for block-wise quantization; `None` = tensor-wise (one
+    /// absmax for the whole tensor, the paper's "no blocking" case).
+    pub block: Option<usize>,
+    /// Float exponent bits (Fp only; `None` = paper default heuristic).
+    pub exponent_bits: Option<usize>,
+    /// Distribution centering (Appendix B; a negative result).
+    pub centering: bool,
+    /// Outlier-dependent proxy quantization: keep this fraction of input
+    /// dimensions in 16-bit, selected by previous-layer weight std (Eq. 2).
+    pub proxy_outlier_pct: Option<f64>,
+}
+
+impl QuantSpec {
+    pub fn new(dtype: DataType, bits: usize, block: Option<usize>) -> Self {
+        QuantSpec {
+            dtype,
+            bits,
+            block,
+            exponent_bits: None,
+            centering: false,
+            proxy_outlier_pct: None,
+        }
+    }
+
+    /// The unquantized 16-bit reference point of every scaling plot.
+    pub fn baseline16() -> Self {
+        QuantSpec::new(DataType::Fp, 16, None)
+    }
+
+    pub fn with_exponent_bits(mut self, e: usize) -> Self {
+        self.exponent_bits = Some(e);
+        self
+    }
+
+    pub fn with_centering(mut self) -> Self {
+        self.centering = true;
+        self
+    }
+
+    pub fn with_proxy(mut self, pct: f64) -> Self {
+        self.proxy_outlier_pct = Some(pct);
+        self
+    }
+
+    pub fn is_baseline(&self) -> bool {
+        self.bits >= 16
+    }
+
+    pub fn codebook(&self) -> Result<Codebook> {
+        Codebook::build(self.dtype, self.bits, self.exponent_bits)
+    }
+
+    /// Stable cell-key string; the results store hashes this (together with
+    /// model identity) to cache sweep cells across benches and reruns.
+    pub fn key(&self) -> String {
+        let block = self.block.map(|b| b.to_string()).unwrap_or_else(|| "none".into());
+        let mut s = format!("{}:{}:b{}", self.dtype.name(), self.bits, block);
+        if let Some(e) = self.exponent_bits {
+            s.push_str(&format!(":e{e}"));
+        }
+        if self.centering {
+            s.push_str(":c");
+        }
+        if let Some(p) = self.proxy_outlier_pct {
+            s.push_str(&format!(":p{p}"));
+        }
+        s
+    }
+}
+
+impl std::fmt::Display for QuantSpec {
+    /// `Display` == `key()`: the stable cell-key is also the human-readable
+    /// form used in logs and figure legends.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.key())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keys_are_unique_per_config() {
+        let a = QuantSpec::new(DataType::Int, 4, Some(64));
+        let b = QuantSpec::new(DataType::Fp, 4, Some(64));
+        let c = QuantSpec::new(DataType::Int, 4, Some(128));
+        let d = QuantSpec::new(DataType::Int, 4, None);
+        let e = QuantSpec::new(DataType::Int, 4, Some(64)).with_centering();
+        let f = QuantSpec::new(DataType::Int, 4, Some(64)).with_proxy(0.02);
+        let g = QuantSpec::new(DataType::Fp, 4, Some(64)).with_exponent_bits(2);
+        let keys: Vec<String> = [a, b, c, d, e, f, g].iter().map(|s| s.key()).collect();
+        let mut dedup = keys.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), keys.len(), "{keys:?}");
+    }
+
+    #[test]
+    fn baseline_detection() {
+        assert!(QuantSpec::baseline16().is_baseline());
+        assert!(!QuantSpec::new(DataType::Int, 8, None).is_baseline());
+    }
+
+    #[test]
+    fn display_matches_key() {
+        let s = QuantSpec::new(DataType::Quantile, 3, Some(64)).with_proxy(0.02);
+        assert_eq!(format!("{s}"), s.key());
+    }
+}

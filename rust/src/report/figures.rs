@@ -1,0 +1,254 @@
+//! Figure assembly: results store → scaling curves → ASCII/CSV artifacts.
+//!
+//! Shared by the `figures` CLI subcommand and the `benches/` reproduction
+//! targets, so every rendering of "Figure N" comes from the same code.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::coordinator::CellResult;
+use crate::scaling::{Curve, Point};
+
+use super::{ascii_chart, write_csv};
+
+/// Parse the bit width out of a spec key (`fp:4:b64` → 4, `fp:16:bnone` → 16).
+pub fn spec_bits(spec_key: &str) -> Option<usize> {
+    spec_key.split(':').nth(1)?.parse().ok()
+}
+
+/// Parse the data type out of a spec key.
+pub fn spec_dtype(spec_key: &str) -> &str {
+    spec_key.split(':').next().unwrap_or("?")
+}
+
+/// Parse the block size (`b64` → Some(64), `bnone` → None).
+pub fn spec_block(spec_key: &str) -> Option<usize> {
+    spec_key
+        .split(':')
+        .nth(2)
+        .and_then(|b| b.strip_prefix('b'))
+        .and_then(|b| b.parse().ok())
+}
+
+pub fn spec_has_proxy(spec_key: &str) -> bool {
+    spec_key.split(':').any(|p| p.starts_with('p') && p[1..].parse::<f64>().is_ok())
+}
+
+/// Metric selector for curve building.
+#[derive(Clone, Copy)]
+pub enum Metric {
+    ZsMean,
+    Ce,
+}
+
+impl Metric {
+    fn get(self, r: &CellResult) -> Option<f64> {
+        match self {
+            Metric::ZsMean => r.zs_mean.is_finite().then_some(r.zs_mean),
+            Metric::Ce => r.ce.is_finite().then_some(r.ce),
+        }
+    }
+    pub fn label(self) -> &'static str {
+        match self {
+            Metric::ZsMean => "mean zero-shot accuracy",
+            Metric::Ce => "CE loss (nats/token)",
+        }
+    }
+}
+
+/// Group results into curves: `label_of` names the curve a result belongs
+/// to (None = excluded); x = total bits, y = metric.
+pub fn build_curves<F>(results: &[CellResult], metric: Metric, label_of: F) -> Vec<Curve>
+where
+    F: Fn(&CellResult) -> Option<String>,
+{
+    use std::collections::BTreeMap;
+    let mut by: BTreeMap<String, Vec<Point>> = BTreeMap::new();
+    for r in results {
+        let Some(label) = label_of(r) else { continue };
+        let Some(y) = metric.get(r) else { continue };
+        by.entry(label).or_default().push(Point { bits: r.total_bits, metric: y });
+    }
+    by.into_iter()
+        .filter(|(_, pts)| pts.len() >= 2)
+        .map(|(label, pts)| Curve::new(label, pts))
+        .collect()
+}
+
+/// Per-precision curves (the headline-figure grouping). Optionally filter
+/// to one family.
+pub fn bit_curves(results: &[CellResult], family: Option<&str>) -> Vec<Curve> {
+    build_curves(results, Metric::ZsMean, |r| {
+        if let Some(f) = family {
+            if r.family != f {
+                return None;
+            }
+        }
+        if spec_has_proxy(&r.spec_key) {
+            return None;
+        }
+        spec_bits(&r.spec_key).map(|b| format!("{b}-bit"))
+    })
+}
+
+/// Render a named figure set from the store. `which` = "all" or a number.
+/// Returns rendered text blocks (also written as CSV under `out_dir`).
+pub fn render_known(
+    store: &crate::coordinator::ResultsStore,
+    out_dir: &Path,
+    which: &str,
+) -> Result<Vec<String>> {
+    let all = store.all();
+    let mut out = Vec::new();
+    let want = |n: &str| which == "all" || which == n;
+
+    if want("1") {
+        let curves = bit_curves(&all, Some("optlike"));
+        out.push(render_one(out_dir, "fig1_optlike_bit_scaling",
+            "Figure 1: bit-level scaling, OPT-like family (mean zero-shot vs total bits)",
+            Metric::ZsMean, curves)?);
+    }
+    if want("2") || want("7") {
+        for family in ["optlike", "pythialike", "gpt2like", "bloomlike"] {
+            let curves = bit_curves(&all, Some(family));
+            if curves.is_empty() {
+                continue;
+            }
+            out.push(render_one(out_dir, &format!("fig2_{family}"),
+                &format!("Figure 2/7 panel: bit-level scaling, {family}"),
+                Metric::ZsMean, curves)?);
+        }
+    }
+    if want("3") {
+        let dt = build_curves(&all, Metric::ZsMean, |r| {
+            (r.family == "pythialike" && spec_bits(&r.spec_key) == Some(4)
+                && spec_block(&r.spec_key) == Some(64) && !spec_has_proxy(&r.spec_key))
+                .then(|| format!("4-bit {}", spec_dtype(&r.spec_key)))
+        });
+        out.push(render_one(out_dir, "fig3_datatypes",
+            "Figure 3 (left): 4-bit Pythia-like data types", Metric::ZsMean, dt)?);
+        let bs = build_curves(&all, Metric::ZsMean, |r| {
+            (r.family == "pythialike" && spec_bits(&r.spec_key) == Some(4)
+                && spec_dtype(&r.spec_key) == "fp" && !spec_has_proxy(&r.spec_key))
+                .then(|| match spec_block(&r.spec_key) {
+                    Some(b) => format!("block {b}"),
+                    None => "no blocking".to_string(),
+                })
+        });
+        out.push(render_one(out_dir, "fig3_blocksizes",
+            "Figure 3 (right): 4-bit Pythia-like block sizes", Metric::ZsMean, bs)?);
+    }
+    if want("4") {
+        for family in ["optlike", "pythialike"] {
+            let curves = build_curves(&all, Metric::ZsMean, |r| {
+                if r.family != family {
+                    return None;
+                }
+                let bits = spec_bits(&r.spec_key)?;
+                if bits != 3 && bits != 4 && bits != 16 {
+                    return None;
+                }
+                let proxy = if spec_has_proxy(&r.spec_key) { "+proxy" } else { "" };
+                Some(format!("{bits}-bit{proxy}"))
+            });
+            if !curves.is_empty() {
+                out.push(render_one(out_dir, &format!("fig4_proxy_{family}"),
+                    &format!("Figure 4: proxy quantization, {family}"), Metric::ZsMean, curves)?);
+            }
+        }
+    }
+    if want("13") {
+        let curves = build_curves(&all, Metric::Ce, |r| {
+            if spec_has_proxy(&r.spec_key) {
+                return None;
+            }
+            spec_bits(&r.spec_key).map(|b| format!("{b}-bit"))
+        });
+        out.push(render_one(out_dir, "fig13_ce_scaling",
+            "Figure 13: CE-loss scaling across all families", Metric::Ce, curves)?);
+    }
+    if out.is_empty() {
+        anyhow::bail!("no figure data for {which:?} — run the matching sweep first");
+    }
+    Ok(out)
+}
+
+fn render_one(
+    out_dir: &Path,
+    stem: &str,
+    title: &str,
+    metric: Metric,
+    curves: Vec<Curve>,
+) -> Result<String> {
+    write_csv(&out_dir.join(format!("{stem}.csv")), &curves)?;
+    Ok(ascii_chart(title, "total model bits", metric.label(), &curves, 68, 16))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(family: &str, spec: &str, bits: f64, zs: f64, ce: f64) -> CellResult {
+        CellResult {
+            key: format!("{family}|{spec}|{bits}"),
+            family: family.into(),
+            tier: "t0".into(),
+            spec_key: spec.into(),
+            suite: "ppl_zs".into(),
+            ce,
+            ppl: ce.exp(),
+            zs_acc: vec![zs; 4],
+            zs_mean: zs,
+            top1: 0.1,
+            total_bits: bits,
+            bits_per_param: 4.25,
+            param_count: 1000,
+            wall_s: 0.1,
+        }
+    }
+
+    #[test]
+    fn spec_parsing() {
+        assert_eq!(spec_bits("fp:4:b64"), Some(4));
+        assert_eq!(spec_bits("fp:16:bnone"), Some(16));
+        assert_eq!(spec_dtype("quantile:3:b64"), "quantile");
+        assert_eq!(spec_block("fp:4:b64"), Some(64));
+        assert_eq!(spec_block("fp:4:bnone"), None);
+        assert!(spec_has_proxy("fp:4:b64:p0.02"));
+        assert!(!spec_has_proxy("fp:4:b64"));
+    }
+
+    #[test]
+    fn curves_group_by_precision() {
+        let rs = vec![
+            result("optlike", "fp:4:b64", 1e6, 0.5, 2.0),
+            result("optlike", "fp:4:b64", 1e7, 0.6, 1.8),
+            result("optlike", "fp:3:b64", 8e5, 0.4, 2.5),
+            result("optlike", "fp:3:b64", 8e6, 0.5, 2.2),
+            result("gpt2like", "fp:4:b64", 1e6, 0.9, 1.0), // filtered out
+        ];
+        let curves = bit_curves(&rs, Some("optlike"));
+        assert_eq!(curves.len(), 2);
+        let labels: Vec<&str> = curves.iter().map(|c| c.label.as_str()).collect();
+        assert!(labels.contains(&"4-bit") && labels.contains(&"3-bit"));
+        for c in &curves {
+            assert_eq!(c.points().len(), 2);
+        }
+    }
+
+    #[test]
+    fn singleton_groups_are_dropped() {
+        let rs = vec![result("optlike", "fp:4:b64", 1e6, 0.5, 2.0)];
+        assert!(bit_curves(&rs, None).is_empty());
+    }
+
+    #[test]
+    fn proxy_results_excluded_from_bit_curves() {
+        let rs = vec![
+            result("optlike", "fp:3:b64:p0.02", 1e6, 0.5, 2.0),
+            result("optlike", "fp:3:b64:p0.02", 1e7, 0.6, 1.8),
+        ];
+        assert!(bit_curves(&rs, None).is_empty());
+    }
+}

@@ -1,0 +1,219 @@
+//! Figure and table rendering: ASCII plots for the terminal, CSV sidecars
+//! for external plotting. Every `benches/` target and the `figures` CLI
+//! subcommand emit through this module so output formats stay uniform.
+
+pub mod figures;
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::scaling::Curve;
+
+/// Render multiple curves as an ASCII scatter/line chart in (log10 x, y).
+///
+/// Each curve gets a distinct glyph; a legend follows the grid. This is
+/// the terminal rendition of the paper's matplotlib panels.
+pub fn ascii_chart(
+    title: &str,
+    xlabel: &str,
+    ylabel: &str,
+    curves: &[Curve],
+    width: usize,
+    height: usize,
+) -> String {
+    const GLYPHS: [char; 10] = ['o', '+', 'x', '*', '#', '@', '%', '&', '=', '~'];
+    let mut out = String::new();
+    let _ = writeln!(out, "{title}");
+
+    let pts: Vec<(f64, f64)> = curves
+        .iter()
+        .flat_map(|c| c.points().iter().map(|p| (p.bits.log10(), p.metric)))
+        .collect();
+    if pts.is_empty() {
+        out.push_str("  (no data)\n");
+        return out;
+    }
+    let (mut x0, mut x1, mut y0, mut y1) = (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+    for &(x, y) in &pts {
+        x0 = x0.min(x);
+        x1 = x1.max(x);
+        y0 = y0.min(y);
+        y1 = y1.max(y);
+    }
+    if (x1 - x0).abs() < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if (y1 - y0).abs() < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    let pad = (y1 - y0) * 0.05;
+    y0 -= pad;
+    y1 += pad;
+
+    let mut grid = vec![vec![' '; width]; height];
+    for (ci, c) in curves.iter().enumerate() {
+        let glyph = GLYPHS[ci % GLYPHS.len()];
+        // Plot interpolated line plus the actual points.
+        for col in 0..width {
+            let x = x0 + (x1 - x0) * col as f64 / (width - 1) as f64;
+            if let Some(y) = c.interpolate(10f64.powf(x)) {
+                let lo = c.points().first().unwrap().bits.log10();
+                let hi = c.points().last().unwrap().bits.log10();
+                if x < lo - 1e-9 || x > hi + 1e-9 {
+                    continue;
+                }
+                let row = ((y1 - y) / (y1 - y0) * (height - 1) as f64).round() as usize;
+                let row = row.min(height - 1);
+                if grid[row][col] == ' ' {
+                    grid[row][col] = '.';
+                }
+            }
+        }
+        for p in c.points() {
+            let col = (((p.bits.log10() - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize;
+            let row = ((y1 - p.metric) / (y1 - y0) * (height - 1) as f64).round() as usize;
+            grid[row.min(height - 1)][col.min(width - 1)] = glyph;
+        }
+    }
+
+    for (r, row) in grid.iter().enumerate() {
+        let ytick = y1 - (y1 - y0) * r as f64 / (height - 1) as f64;
+        let _ = writeln!(out, "{ytick:>8.3} |{}", row.iter().collect::<String>());
+    }
+    let _ = writeln!(out, "{:>8} +{}", "", "-".repeat(width));
+    let _ = writeln!(
+        out,
+        "{:>8}  {:<w$.3}{:>w2$.3}  ({xlabel}, log10)",
+        "",
+        x0,
+        x1,
+        w = width / 2,
+        w2 = width - width / 2
+    );
+    let _ = writeln!(out, "  y: {ylabel}");
+    for (ci, c) in curves.iter().enumerate() {
+        let _ = writeln!(out, "    {} {}", GLYPHS[ci % GLYPHS.len()], c.label);
+    }
+    out
+}
+
+/// Write curves to CSV: `label,bits,metric` rows.
+pub fn write_csv(path: &Path, curves: &[Curve]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut s = String::from("label,bits,metric\n");
+    for c in curves {
+        for p in c.points() {
+            let _ = writeln!(s, "{},{},{}", c.label, p.bits, p.metric);
+        }
+    }
+    std::fs::write(path, s)?;
+    Ok(())
+}
+
+/// Fixed-width table formatting (Table 1 and friends).
+pub struct TextTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TextTable {
+    pub fn new(header: &[&str]) -> Self {
+        TextTable { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncol {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .zip(widths)
+                .map(|(c, w)| format!("{c:>w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", fmt_row(&self.header, &widths));
+        let _ = writeln!(out, "{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", fmt_row(row, &widths));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scaling::Point;
+
+    fn curve(label: &str) -> Curve {
+        Curve::new(
+            label,
+            vec![
+                Point { bits: 1e6, metric: 0.4 },
+                Point { bits: 1e7, metric: 0.6 },
+                Point { bits: 1e8, metric: 0.7 },
+            ],
+        )
+    }
+
+    #[test]
+    fn chart_contains_structure() {
+        let s = ascii_chart("Fig X", "total bits", "acc", &[curve("4-bit"), curve("8-bit")], 60, 12);
+        assert!(s.contains("Fig X"));
+        assert!(s.contains("4-bit") && s.contains("8-bit"));
+        assert!(s.contains('o') && s.contains('+'));
+        assert!(s.lines().count() > 12);
+    }
+
+    #[test]
+    fn chart_empty_is_graceful() {
+        let s = ascii_chart("empty", "x", "y", &[], 40, 8);
+        assert!(s.contains("no data"));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let dir = std::env::temp_dir().join(format!("kbt_csv_{}", std::process::id()));
+        let path = dir.join("fig.csv");
+        write_csv(&path, &[curve("c1")]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 4); // header + 3 points
+        assert!(text.starts_with("label,bits,metric"));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut t = TextTable::new(&["Blocksize", "2-bit GPTQ", "3-bit Float"]);
+        t.row(vec!["1024".into(), "11.84".into(), "13.26".into()]);
+        t.row(vec!["64".into(), "9.18".into(), "9.99".into()]);
+        let s = t.render();
+        assert!(s.contains("Blocksize"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert_eq!(lines[1].matches('-').count(), lines[0].len() - 4); // separators
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = TextTable::new(&["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

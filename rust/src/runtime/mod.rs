@@ -1,0 +1,188 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (xla_extension 0.5.1, PJRT C API):
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. HLO **text** is the interchange format —
+//! jax ≥ 0.5 emits serialized protos with 64-bit instruction ids that this
+//! XLA rejects, while the text parser reassigns ids (see
+//! /opt/xla-example/README.md and DESIGN.md §2).
+//!
+//! Compiled executables are cached per artifact path: every sweep cell of
+//! a tier reuses one compilation. All graphs are lowered with
+//! `return_tuple=True`, so execution unwraps a single tuple literal into
+//! its leaves.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::tensor::Tensor;
+
+/// Compiled-executable handle, shareable across worker threads.
+///
+/// SAFETY: the PJRT CPU client is internally synchronized and its
+/// executables are immutable after compilation; the `xla` crate just
+/// doesn't mark the FFI handles Send/Sync. Execution from multiple threads
+/// is the documented PJRT usage model.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub path: PathBuf,
+}
+
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+/// The process-wide runtime: one PJRT CPU client + executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
+}
+
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Create the CPU runtime. One per process is the intended pattern
+    /// (the compilation cache lives here).
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact (cached).
+    pub fn load(&self, path: &Path) -> Result<Arc<Executable>> {
+        if let Some(hit) = self.cache.lock().unwrap().get(path) {
+            return Ok(hit.clone());
+        }
+        let t = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        log::info!("compiled {} in {:.2}s", path.display(), t.elapsed().as_secs_f64());
+        let arc = Arc::new(Executable { exe, path: path.to_path_buf() });
+        self.cache.lock().unwrap().insert(path.to_path_buf(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Execute with literal arguments (owned or borrowed — parameter
+    /// literals are typically built once per cell and passed by reference
+    /// across batches); returns the tuple leaves.
+    pub fn execute<L: std::borrow::Borrow<xla::Literal>>(
+        &self,
+        exe: &Executable,
+        args: &[L],
+    ) -> Result<Vec<xla::Literal>> {
+        let buffers = exe
+            .exe
+            .execute::<L>(args)
+            .with_context(|| format!("executing {}", exe.path.display()))?;
+        let result = buffers[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // All our graphs are lowered with return_tuple=True.
+        let leaves = result.to_tuple().context("untupling result")?;
+        Ok(leaves)
+    }
+
+    pub fn cached_executables(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal conversion helpers
+// ---------------------------------------------------------------------------
+
+fn dims_i64(shape: &[usize]) -> Vec<i64> {
+    shape.iter().map(|&d| d as i64).collect()
+}
+
+/// f32 tensor → literal (reshaped to the tensor's shape).
+pub fn lit_f32(t: &Tensor) -> Result<xla::Literal> {
+    let flat = xla::Literal::vec1(t.data());
+    Ok(flat.reshape(&dims_i64(t.shape()))?)
+}
+
+/// i32 data → literal of `shape`.
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    anyhow::ensure!(shape.iter().product::<usize>() == data.len(), "shape/data mismatch");
+    let flat = xla::Literal::vec1(data);
+    Ok(flat.reshape(&dims_i64(shape))?)
+}
+
+/// u8 data → literal of `shape` (the crate has no `vec1` for u8; build
+/// from untyped bytes instead).
+pub fn lit_u8(shape: &[usize], data: &[u8]) -> Result<xla::Literal> {
+    anyhow::ensure!(shape.iter().product::<usize>() == data.len(), "shape/data mismatch");
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::U8,
+        shape,
+        data,
+    )?)
+}
+
+/// Scalar f32 literal.
+pub fn lit_scalar(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Literal → owned f32 vector.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Literal → Tensor with the caller-known shape.
+pub fn to_tensor(lit: &xla::Literal, shape: Vec<usize>) -> Result<Tensor> {
+    let data = to_vec_f32(lit)?;
+    Ok(Tensor::new(shape, data))
+}
+
+#[cfg(test)]
+mod tests {
+    //! Executable loading/execution is covered by the integration suite
+    //! (`rust/tests/`), which requires built artifacts. The literal
+    //! helpers are unit-testable standalone.
+    use super::*;
+
+    #[test]
+    fn literal_f32_roundtrip() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let lit = lit_f32(&t).unwrap();
+        let back = to_tensor(&lit, vec![2, 3]).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn literal_i32_shape_validation() {
+        assert!(lit_i32(&[2, 2], &[1, 2, 3]).is_err());
+        let l = lit_i32(&[2, 2], &[1, 2, 3, 4]).unwrap();
+        assert_eq!(l.to_vec::<i32>().unwrap(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn literal_u8_roundtrip() {
+        let l = lit_u8(&[4], &[7, 0, 255, 3]).unwrap();
+        assert_eq!(l.to_vec::<u8>().unwrap(), vec![7, 0, 255, 3]);
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let l = lit_scalar(2.5);
+        assert_eq!(l.to_vec::<f32>().unwrap(), vec![2.5]);
+    }
+}

@@ -1,0 +1,271 @@
+//! Scaling-law analysis: curves, Pareto frontiers, bit-level optimality.
+//!
+//! The paper fits **linear interpolations** over (log total-bits, metric)
+//! points per bit precision — bivariate power laws fit poorly but the
+//! per-precision curves are near-parallel (Section 4, "Scaling laws").
+//! This module provides exactly those tools plus the analyses quoted in
+//! the text: the Pareto frontier over total bits, the per-bit-budget
+//! optimal precision, curve-parallelism diagnostics, and the
+//! perplexity↔zero-shot Pearson correlation (paper: −0.94).
+
+use std::collections::BTreeMap;
+
+/// One evaluated point of a scaling curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Point {
+    /// Total model bits (the x-axis; plotted in log10).
+    pub bits: f64,
+    /// The metric (mean zero-shot accuracy, or CE loss for Figs 13-15).
+    pub metric: f64,
+}
+
+/// A scaling curve for one configuration group (e.g. "4-bit float"),
+/// sorted by bits: piecewise-linear in (log10 bits, metric).
+#[derive(Debug, Clone)]
+pub struct Curve {
+    pub label: String,
+    points: Vec<Point>,
+}
+
+impl Curve {
+    pub fn new(label: impl Into<String>, mut points: Vec<Point>) -> Self {
+        points.sort_by(|a, b| a.bits.partial_cmp(&b.bits).unwrap());
+        Curve { label: label.into(), points }
+    }
+
+    pub fn points(&self) -> &[Point] {
+        &self.points
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Linear interpolation in log10-bits space; clamped at the ends.
+    pub fn interpolate(&self, bits: f64) -> Option<f64> {
+        if self.points.is_empty() {
+            return None;
+        }
+        let x = bits.log10();
+        let xs: Vec<f64> = self.points.iter().map(|p| p.bits.log10()).collect();
+        if x <= xs[0] {
+            return Some(self.points[0].metric);
+        }
+        if x >= *xs.last().unwrap() {
+            return Some(self.points.last().unwrap().metric);
+        }
+        let i = xs.partition_point(|&v| v < x);
+        let (x0, x1) = (xs[i - 1], xs[i]);
+        let (y0, y1) = (self.points[i - 1].metric, self.points[i].metric);
+        Some(y0 + (y1 - y0) * (x - x0) / (x1 - x0))
+    }
+
+    /// Mean slope in (log10 bits → metric) space; curves of different
+    /// precisions being near-parallel is the paper's justification for the
+    /// linear-interpolation representation.
+    pub fn mean_slope(&self) -> Option<f64> {
+        if self.points.len() < 2 {
+            return None;
+        }
+        let first = self.points.first().unwrap();
+        let last = self.points.last().unwrap();
+        Some((last.metric - first.metric) / (last.bits.log10() - first.bits.log10()))
+    }
+}
+
+/// Pareto frontier for metric **maximization** (zero-shot accuracy):
+/// the subset of points not dominated by any point with fewer-or-equal
+/// bits and strictly higher metric. Input: `(bits, metric, tag)` triples.
+pub fn pareto_frontier<T: Clone>(points: &[(f64, f64, T)]) -> Vec<(f64, f64, T)> {
+    let mut sorted: Vec<&(f64, f64, T)> = points.iter().collect();
+    sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut out: Vec<(f64, f64, T)> = Vec::new();
+    let mut best = f64::NEG_INFINITY;
+    for p in sorted {
+        if p.1 > best {
+            best = p.1;
+            out.push(p.clone());
+        }
+    }
+    out
+}
+
+/// For each curve, the metric it achieves at a given bit budget; returns
+/// the best curve label per budget — the "which precision wins at fixed
+/// total bits" question of Figure 1.
+pub fn best_curve_at(curves: &[Curve], bits_budget: f64) -> Option<(String, f64)> {
+    curves
+        .iter()
+        .filter_map(|c| c.interpolate(bits_budget).map(|m| (c.label.clone(), m)))
+        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+}
+
+/// Count how often each curve wins across a log-spaced sweep of budgets
+/// spanning the shared range — the quantitative form of "4-bit is almost
+/// universally optimal".
+pub fn win_counts(curves: &[Curve], n_budgets: usize) -> BTreeMap<String, usize> {
+    let mut lo = f64::INFINITY;
+    let mut hi = f64::NEG_INFINITY;
+    for c in curves {
+        for p in c.points() {
+            lo = lo.min(p.bits);
+            hi = hi.max(p.bits);
+        }
+    }
+    let mut wins: BTreeMap<String, usize> = BTreeMap::new();
+    if !lo.is_finite() || !hi.is_finite() || n_budgets == 0 {
+        return wins;
+    }
+    // Interior budgets only: at the extremes every curve is clamped and
+    // comparisons are degenerate.
+    for i in 0..n_budgets {
+        let f = (i as f64 + 0.5) / n_budgets as f64;
+        let budget = 10f64.powf(lo.log10() + f * (hi.log10() - lo.log10()));
+        if let Some((label, _)) = best_curve_at(curves, budget) {
+            *wins.entry(label).or_default() += 1;
+        }
+    }
+    wins
+}
+
+/// Pearson correlation coefficient.
+pub fn pearson(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if n < 2.0 {
+        return f64::NAN;
+    }
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    let mut syy = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        let dx = x - mx;
+        let dy = y - my;
+        sxy += dx * dy;
+        sxx += dx * dx;
+        syy += dy * dy;
+    }
+    sxy / (sxx.sqrt() * syy.sqrt()).max(1e-300)
+}
+
+/// Ordinary least squares fit `y = a + b x`; returns `(a, b, r2)`.
+pub fn linfit(xs: &[f64], ys: &[f64]) -> (f64, f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let mut sxy = 0.0;
+    let mut sxx = 0.0;
+    for (x, y) in xs.iter().zip(ys) {
+        sxy += (x - mx) * (y - my);
+        sxx += (x - mx) * (x - mx);
+    }
+    let b = sxy / sxx.max(1e-300);
+    let a = my - b * mx;
+    let r = pearson(xs, ys);
+    (a, b, r * r)
+}
+
+/// Parallelism diagnostic: relative spread of mean slopes across curves
+/// (small = near-parallel, the paper's observation).
+pub fn slope_spread(curves: &[Curve]) -> Option<f64> {
+    let slopes: Vec<f64> = curves.iter().filter_map(Curve::mean_slope).collect();
+    if slopes.len() < 2 {
+        return None;
+    }
+    let mean = slopes.iter().sum::<f64>() / slopes.len() as f64;
+    let var = slopes.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / slopes.len() as f64;
+    Some(var.sqrt() / mean.abs().max(1e-300))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(label: &str, pts: &[(f64, f64)]) -> Curve {
+        Curve::new(label, pts.iter().map(|&(b, m)| Point { bits: b, metric: m }).collect())
+    }
+
+    #[test]
+    fn interpolation_log_space() {
+        let c = mk("c", &[(100.0, 0.4), (10_000.0, 0.8)]);
+        assert_eq!(c.interpolate(100.0), Some(0.4));
+        assert_eq!(c.interpolate(10_000.0), Some(0.8));
+        // Midpoint in log space is 1000.
+        assert!((c.interpolate(1000.0).unwrap() - 0.6).abs() < 1e-12);
+        // Clamped outside.
+        assert_eq!(c.interpolate(1.0), Some(0.4));
+        assert_eq!(c.interpolate(1e9), Some(0.8));
+    }
+
+    #[test]
+    fn pareto_keeps_only_improvements() {
+        let pts = vec![
+            (100.0, 0.5, "a"),
+            (200.0, 0.4, "dominated"),
+            (300.0, 0.7, "b"),
+            (400.0, 0.7, "tie-dominated"),
+            (500.0, 0.9, "c"),
+        ];
+        let front = pareto_frontier(&pts);
+        let tags: Vec<&str> = front.iter().map(|p| p.2).collect();
+        assert_eq!(tags, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn four_bit_wins_in_synthetic_geometry() {
+        // Construct the paper's geometry: same accuracy-vs-params family,
+        // shifted left by bits/param; 4-bit strictly better than 8/16,
+        // 3-bit degraded by quantization error.
+        let params = [1e6, 3e6, 1e7, 3e7];
+        let acc = |p: f64| 0.4 + 0.1 * (p.log10() - 6.0);
+        let curve = |label: &str, bits: f64, penalty: f64| {
+            mk(
+                label,
+                &params
+                    .iter()
+                    .map(|&p| (p * bits, acc(p) - penalty))
+                    .collect::<Vec<_>>(),
+            )
+        };
+        let curves = vec![
+            curve("16", 16.0, 0.0),
+            curve("8", 8.0, 0.002),
+            curve("4", 4.0, 0.01),
+            curve("3", 3.0, 0.08),
+        ];
+        let wins = win_counts(&curves, 40);
+        let four = wins.get("4").copied().unwrap_or(0);
+        let total: usize = wins.values().sum();
+        assert!(four * 2 > total, "4-bit wins {four}/{total}: {wins:?}");
+    }
+
+    #[test]
+    fn pearson_known_values() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert!((pearson(&x, &x) - 1.0).abs() < 1e-12);
+        let neg: Vec<f64> = x.iter().map(|v| -v).collect();
+        assert!((pearson(&x, &neg) + 1.0).abs() < 1e-12);
+        let flat = vec![1.0, 1.0, 1.0, 1.0];
+        assert!(pearson(&x, &flat).abs() < 1e-6);
+    }
+
+    #[test]
+    fn linfit_recovers_line() {
+        let xs: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 + 3.0 * x).collect();
+        let (a, b, r2) = linfit(&xs, &ys);
+        assert!((a - 2.0).abs() < 1e-9 && (b - 3.0).abs() < 1e-9 && (r2 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slope_spread_detects_parallelism() {
+        let a = mk("a", &[(1e6, 0.4), (1e7, 0.6)]);
+        let b = mk("b", &[(2e6, 0.35), (2e7, 0.55)]); // parallel
+        let c = mk("c", &[(1e6, 0.6), (1e7, 0.3)]); // anti-parallel
+        assert!(slope_spread(&[a.clone(), b.clone()]).unwrap() < 0.05);
+        assert!(slope_spread(&[a, c]).unwrap() > 1.0);
+    }
+}

@@ -1,0 +1,209 @@
+//! Inference scoring server: quantized models behind a line-oriented
+//! JSON-over-TCP protocol.
+//!
+//! The paper's motivation is cheap small-batch *inference*; this module
+//! is the deployment face of that claim: load a checkpoint, quantize it
+//! once under a [`QuantSpec`] (4-bit fp/b64 by default, the paper's
+//! recommendation), keep the parameter literals resident, and serve
+//! scoring requests through the AOT forward executable — Python-free,
+//! one process, warm PJRT state.
+//!
+//! Protocol (one JSON object per line, response per line):
+//!
+//! ```text
+//! → {"op":"score", "tokens":[1,5,9,...]}               sequence NLL + ppl
+//! → {"op":"choose", "context":[...], "choices":[[..],[..]]}
+//!                                       length-normalized best choice
+//! → {"op":"info"}                       model + quantization metadata
+//! ```
+//!
+//! A [`Session`] owns the request loop and is transport-agnostic (tested
+//! in-memory; `serve_tcp` binds it to a listener; the CLI's `serve`
+//! subcommand wires stdin/stdout for shell use).
+
+use std::io::{BufRead, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::corpus::Corpus;
+use crate::eval::Evaluator;
+use crate::models::manifest::{Manifest, TierManifest};
+use crate::quant::{bits_per_param, quantize_checkpoint, QuantSpec};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// A ready-to-serve quantized model session.
+pub struct Session<'rt> {
+    ev: Evaluator<'rt>,
+    plits: Vec<xla::Literal>,
+    corpus: Corpus,
+    tier: TierManifest,
+    spec: QuantSpec,
+    model_key: String,
+    requests: u64,
+}
+
+impl<'rt> Session<'rt> {
+    pub fn new(
+        rt: &'rt Runtime,
+        manifest: &Manifest,
+        tier: &TierManifest,
+        params: &[(String, Tensor)],
+        spec: QuantSpec,
+        corpus: Corpus,
+        model_key: String,
+    ) -> Result<Self> {
+        let q = quantize_checkpoint(params, &tier.quantized_params, &spec);
+        let ev = Evaluator::new(rt, manifest, tier)?;
+        let plits = ev.param_literals(&q)?;
+        Ok(Session { ev, plits, corpus, tier: tier.clone(), spec, model_key, requests: 0 })
+    }
+
+    /// Handle one request object; returns the response object.
+    pub fn handle(&mut self, req: &Json) -> Json {
+        self.requests += 1;
+        match self.try_handle(req) {
+            Ok(resp) => resp,
+            Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+        }
+    }
+
+    fn try_handle(&mut self, req: &Json) -> Result<Json> {
+        match req.get("op")?.as_str()? {
+            "info" => Ok(Json::obj(vec![
+                ("model", Json::str(&self.model_key)),
+                ("tier", Json::str(&self.tier.name)),
+                ("params", Json::num(self.tier.param_count as f64)),
+                ("quant", Json::str(self.spec.key())),
+                ("bits_per_param", Json::num(bits_per_param(&self.spec))),
+                ("requests", Json::num(self.requests as f64)),
+            ])),
+            "score" => {
+                let tokens = tokens_of(req.get("tokens")?)?;
+                if tokens.is_empty() {
+                    bail!("empty token list");
+                }
+                let (row, mask) = self.corpus.pad_to_seq(&tokens);
+                let scored = self.score_rows(&[(row, mask.clone())])?;
+                let (nll, hits) = scored[0];
+                let ntok = mask.iter().sum::<f32>() as f64;
+                Ok(Json::obj(vec![
+                    ("nll", Json::num(nll)),
+                    ("tokens_scored", Json::num(ntok)),
+                    ("ce", Json::num(nll / ntok.max(1.0))),
+                    ("ppl", Json::num((nll / ntok.max(1.0)).exp().min(1e6))),
+                    ("greedy_hits", Json::num(hits)),
+                ]))
+            }
+            "choose" => {
+                let context = tokens_of(req.get("context")?)?;
+                let choices: Vec<Vec<i32>> = req
+                    .get("choices")?
+                    .as_arr()?
+                    .iter()
+                    .map(tokens_of)
+                    .collect::<Result<_>>()?;
+                if choices.is_empty() {
+                    bail!("no choices given");
+                }
+                let ex = crate::data::tasks::Example { context, choices, answer: 0 };
+                let rows_raw = crate::data::tasks::scoring_rows(&ex);
+                let seq = self.tier.seq;
+                let mut rows = Vec::new();
+                let mut lens = Vec::new();
+                for (toks, mask, clen) in rows_raw {
+                    let (t, m) = fit_row(&toks, &mask, seq);
+                    rows.push((t, m));
+                    lens.push(clen.max(1));
+                }
+                let scored = self.score_rows(&rows)?;
+                let norm: Vec<f64> = scored
+                    .iter()
+                    .zip(&lens)
+                    .map(|((nll, _), &l)| -nll / l as f64)
+                    .collect();
+                let best = norm
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap();
+                Ok(Json::obj(vec![
+                    ("best", Json::num(best as f64)),
+                    ("scores", Json::arr_f64(&norm)),
+                ]))
+            }
+            op => bail!("unknown op {op:?} (info|score|choose)"),
+        }
+    }
+
+    fn score_rows(&self, rows: &[(Vec<i32>, Vec<f32>)]) -> Result<Vec<(f64, f64)>> {
+        self.ev.score_padded_rows(&self.plits, rows)
+    }
+}
+
+fn tokens_of(v: &Json) -> Result<Vec<i32>> {
+    v.as_arr()?
+        .iter()
+        .map(|x| {
+            let n = x.as_f64()?;
+            if n < 0.0 || n.fract() != 0.0 {
+                bail!("token {n} is not a non-negative integer");
+            }
+            Ok(n as i32)
+        })
+        .collect()
+}
+
+fn fit_row(toks: &[i32], mask: &[f32], seq: usize) -> (Vec<i32>, Vec<f32>) {
+    if toks.len() > seq {
+        let cut = toks.len() - seq;
+        (toks[cut..].to_vec(), mask[cut..].to_vec())
+    } else {
+        let mut t = toks.to_vec();
+        let mut m = mask.to_vec();
+        t.resize(seq, crate::data::PAD);
+        m.resize(seq, 0.0);
+        (t, m)
+    }
+}
+
+/// Drive a session over any line-based transport until EOF.
+pub fn serve_lines<R: BufRead, W: Write>(
+    session: &mut Session<'_>,
+    reader: R,
+    mut writer: W,
+) -> Result<u64> {
+    let mut served = 0;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match Json::parse(&line) {
+            Ok(req) => session.handle(&req),
+            Err(e) => Json::obj(vec![("error", Json::str(format!("bad request: {e:#}")))]),
+        };
+        writeln!(writer, "{}", resp.dump())?;
+        writer.flush()?;
+        served += 1;
+    }
+    Ok(served)
+}
+
+/// Bind a TCP listener and serve clients sequentially (the PJRT executable
+/// is shared; batching across clients is future work noted in DESIGN.md).
+pub fn serve_tcp(session: &mut Session<'_>, addr: &str) -> Result<()> {
+    let listener = std::net::TcpListener::bind(addr)
+        .with_context(|| format!("binding {addr}"))?;
+    log::info!("serving on {addr}");
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+        let reader = std::io::BufReader::new(stream.try_clone()?);
+        let n = serve_lines(session, reader, stream)?;
+        log::info!("client {peer}: {n} requests");
+    }
+    Ok(())
+}

@@ -1,0 +1,240 @@
+//! Dense row-major f32 tensors and their binary serialization.
+//!
+//! Parameters, optimizer state, and calibration activations all live in
+//! [`Tensor`]s on the Rust side; the runtime converts them to/from PJRT
+//! literals at the executable boundary. Kept deliberately small: the heavy
+//! math happens inside XLA, and the Rust-side hot path (quantization)
+//! operates on raw `&[f32]` slices.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// A dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} does not match {} elements",
+            data.len()
+        );
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn ones(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![1.0; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// 2-D accessor `(rows, cols)`; errors on other ranks.
+    pub fn dims2(&self) -> Result<(usize, usize)> {
+        match self.shape.as_slice() {
+            [r, c] => Ok((*r, *c)),
+            s => bail!("expected rank-2 tensor, got shape {s:?}"),
+        }
+    }
+
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        let cols = self.shape[self.shape.len() - 1];
+        self.data[r * cols + c]
+    }
+
+    /// Frobenius norm (diagnostics / perf assertions).
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Reinterpret with a new shape of identical element count.
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Result<Tensor> {
+        if shape.iter().product::<usize>() != self.data.len() {
+            bail!("cannot reshape {:?} ({} elems) to {:?}", self.shape, self.data.len(), shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+}
+
+/// Magic bytes of the checkpoint container format (`KBT1`).
+const MAGIC: &[u8; 4] = b"KBT1";
+
+/// Write a named list of tensors as a single binary checkpoint.
+///
+/// Layout: magic, u32 count, then per tensor: u32 name-len, name bytes,
+/// u32 rank, u64 dims…, f32 data (little endian). Simple, versioned via the
+/// magic, and memory-mappable in spirit (contiguous payloads).
+pub fn save_tensors(path: &Path, named: &[(&str, &Tensor)]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    w.write_all(MAGIC)?;
+    w.write_all(&(named.len() as u32).to_le_bytes())?;
+    for (name, t) in named {
+        let nb = name.as_bytes();
+        w.write_all(&(nb.len() as u32).to_le_bytes())?;
+        w.write_all(nb)?;
+        w.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        // Safe little-endian serialization of the payload.
+        let mut buf = Vec::with_capacity(t.data.len() * 4);
+        for &x in &t.data {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+/// Read a checkpoint written by [`save_tensors`].
+pub fn load_tensors(path: &Path) -> Result<Vec<(String, Tensor)>> {
+    let mut r = std::io::BufReader::new(
+        std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?,
+    );
+    let mut magic = [0u8; 4];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("{} is not a kbitscale checkpoint (bad magic)", path.display());
+    }
+    let count = read_u32(&mut r)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut r)? as usize;
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let rank = read_u32(&mut r)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            let mut b = [0u8; 8];
+            r.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut buf = vec![0u8; n * 4];
+        r.read_exact(&mut buf)?;
+        let data: Vec<f32> = buf
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        out.push((String::from_utf8(name)?, Tensor::new(shape, data)));
+    }
+    Ok(out)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_accounting() {
+        let t = Tensor::zeros(vec![3, 4]);
+        assert_eq!(t.len(), 12);
+        assert_eq!(t.dims2().unwrap(), (3, 4));
+        assert!(Tensor::zeros(vec![2, 2, 2]).dims2().is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn mismatched_shape_panics() {
+        Tensor::new(vec![2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn reshape_checks_count() {
+        let t = Tensor::zeros(vec![6]);
+        assert!(t.clone().reshaped(vec![2, 3]).is_ok());
+        assert!(t.reshaped(vec![4, 2]).is_err());
+    }
+
+    #[test]
+    fn at2_row_major() {
+        let t = Tensor::new(vec![2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.at2(0, 2), 2.0);
+        assert_eq!(t.at2(1, 0), 3.0);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("kbt_test_{}", std::process::id()));
+        let path = dir.join("ckpt.bin");
+        let a = Tensor::new(vec![2, 2], vec![1.0, -2.5, 3.25, 0.0]);
+        let b = Tensor::new(vec![3], vec![f32::MIN, 0.0, f32::MAX]);
+        let s = Tensor::scalar(7.0);
+        save_tensors(&path, &[("a", &a), ("b", &b), ("s", &s)]).unwrap();
+        let loaded = load_tensors(&path).unwrap();
+        assert_eq!(loaded.len(), 3);
+        assert_eq!(loaded[0], ("a".to_string(), a));
+        assert_eq!(loaded[1], ("b".to_string(), b));
+        assert_eq!(loaded[2].1.shape(), &[] as &[usize]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("kbt_badmagic_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.bin");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(load_tensors(&path).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,179 @@
+//! Training driver: the Rust loop around the AOT fused-Adam train-step.
+//!
+//! Rust owns everything the paper's authors did with a training framework:
+//! initialization (family recipes + outlier injection), the data order,
+//! the learning-rate schedule (linear warmup → cosine decay), loss
+//! logging, and checkpointing. The numerical step itself is one PJRT
+//! execution of `train_<tier>.hlo.txt`: parameters, Adam moments, a token
+//! batch, `lr` and step index go in; updated state and the loss come out.
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::corpus::Corpus;
+use crate::models::checkpoint::{CheckpointMeta, CheckpointStore};
+use crate::models::families::Family;
+use crate::models::init::init_params;
+use crate::models::manifest::{Manifest, TierManifest};
+use crate::models::ModelId;
+use crate::runtime::{lit_f32, lit_i32, lit_scalar, to_tensor, to_vec_f32, Runtime};
+use crate::tensor::Tensor;
+
+/// Training hyperparameters (shared across families; families modulate
+/// `lr` via `Family::lr_scale`).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub base_lr: f64,
+    pub warmup_steps: usize,
+    /// Cosine floor as a fraction of peak LR.
+    pub min_lr_frac: f64,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { steps: 300, base_lr: 3e-3, warmup_steps: 30, min_lr_frac: 0.1, log_every: 50 }
+    }
+}
+
+/// Linear warmup then cosine decay to `min_lr_frac * peak`.
+pub fn lr_at(cfg: &TrainConfig, family: &Family, step: usize) -> f64 {
+    let peak = cfg.base_lr * family.lr_scale;
+    if step < cfg.warmup_steps {
+        return peak * (step + 1) as f64 / cfg.warmup_steps as f64;
+    }
+    let t = (step - cfg.warmup_steps) as f64 / (cfg.steps - cfg.warmup_steps).max(1) as f64;
+    let floor = peak * cfg.min_lr_frac;
+    floor + 0.5 * (peak - floor) * (1.0 + (std::f64::consts::PI * t).cos())
+}
+
+/// Loss trace of a completed run.
+pub struct TrainReport {
+    pub id: ModelId,
+    pub losses: Vec<f64>,
+    pub final_loss: f64,
+    pub steps: usize,
+    pub wall_s: f64,
+}
+
+/// Train one `(family, tier)` model and store its checkpoint.
+///
+/// Fine-tune families (`Family::finetune_of`) resume from the parent's
+/// checkpoint, which must exist.
+pub fn train_model(
+    rt: &Runtime,
+    manifest: &Manifest,
+    tier: &TierManifest,
+    family: &Family,
+    corpus: &Corpus,
+    cfg: &TrainConfig,
+    store: &CheckpointStore,
+) -> Result<TrainReport> {
+    let id = ModelId::new(family.name, tier.name.clone());
+    let exe = rt.load(&manifest.hlo_path(&tier.train_hlo))?;
+
+    // Initial state: fresh init or parent checkpoint.
+    let mut params: Vec<Tensor> = if let Some(parent) = family.finetune_of {
+        let pid = ModelId::new(parent, tier.name.clone());
+        let (loaded, _) = store
+            .load(&pid)
+            .with_context(|| format!("fine-tune parent {pid} missing; train it first"))?;
+        if loaded.len() != tier.params.len() {
+            bail!("parent checkpoint has {} tensors, expected {}", loaded.len(), tier.params.len());
+        }
+        loaded.into_iter().map(|(_, t)| t).collect()
+    } else {
+        init_params(tier, family).into_iter().map(|(_, t)| t).collect()
+    };
+    let mut m: Vec<Tensor> = tier.params.iter().map(|p| Tensor::zeros(p.shape.clone())).collect();
+    let mut v: Vec<Tensor> = tier.params.iter().map(|p| Tensor::zeros(p.shape.clone())).collect();
+
+    let timer = std::time::Instant::now();
+    let mut losses = Vec::with_capacity(cfg.steps);
+    let batch_shape = [tier.batch_train, tier.seq];
+    let n = tier.params.len();
+
+    for step in 0..cfg.steps {
+        // Data order is derived from the family seed so each family sees
+        // its own stream (like training different models on shuffles).
+        let tokens = corpus.train_batch(step.wrapping_add(family.seed as usize * 100_003), tier.batch_train);
+
+        let mut args = Vec::with_capacity(3 * n + 3);
+        for t in params.iter().chain(m.iter()).chain(v.iter()) {
+            args.push(lit_f32(t)?);
+        }
+        args.push(lit_i32(&batch_shape, &tokens)?);
+        args.push(lit_scalar(lr_at(cfg, family, step) as f32));
+        args.push(lit_scalar((step + 1) as f32));
+
+        let out = rt.execute(&exe, &args)?;
+        if out.len() != 3 * n + 1 {
+            bail!("train step returned {} leaves, expected {}", out.len(), 3 * n + 1);
+        }
+        for (i, p) in tier.params.iter().enumerate() {
+            params[i] = to_tensor(&out[i], p.shape.clone())?;
+            m[i] = to_tensor(&out[n + i], p.shape.clone())?;
+            v[i] = to_tensor(&out[2 * n + i], p.shape.clone())?;
+        }
+        let loss = to_vec_f32(&out[3 * n])?[0] as f64;
+        if !loss.is_finite() {
+            bail!("loss diverged (step {step}: {loss})");
+        }
+        losses.push(loss);
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            log::info!("{id} step {step:>4} loss {loss:.4} lr {:.2e}", lr_at(cfg, family, step));
+        }
+    }
+
+    // Smoothed final loss (mean of last 10 steps) for reporting stability.
+    let tail = &losses[losses.len().saturating_sub(10)..];
+    let final_loss = tail.iter().sum::<f64>() / tail.len() as f64;
+
+    let named: Vec<(String, Tensor)> = tier
+        .params
+        .iter()
+        .map(|p| p.name.clone())
+        .zip(params)
+        .collect();
+    store.save(
+        &id,
+        &named,
+        &CheckpointMeta { steps: cfg.steps, final_loss, corpus_seed: corpus.cfg.seed },
+    )?;
+
+    Ok(TrainReport { id, final_loss, steps: cfg.steps, wall_s: timer.elapsed().as_secs_f64(), losses })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TrainConfig {
+        TrainConfig { steps: 100, base_lr: 1e-3, warmup_steps: 10, min_lr_frac: 0.1, log_every: 1000 }
+    }
+
+    #[test]
+    fn lr_schedule_shape() {
+        let c = cfg();
+        let f = Family::get("gpt2like").unwrap();
+        // Warmup is increasing.
+        assert!(lr_at(&c, f, 0) < lr_at(&c, f, 5));
+        assert!(lr_at(&c, f, 5) < lr_at(&c, f, 9));
+        // Peak at end of warmup.
+        let peak = lr_at(&c, f, 10);
+        assert!((peak - 1e-3).abs() < 1e-9);
+        // Decays after.
+        assert!(lr_at(&c, f, 50) < peak);
+        assert!(lr_at(&c, f, 99) < lr_at(&c, f, 50));
+        // Floor respected.
+        assert!(lr_at(&c, f, 99) >= 1e-4 - 1e-12);
+    }
+
+    #[test]
+    fn family_lr_scale_applies() {
+        let c = cfg();
+        let bloomz = Family::get("bloomzlike").unwrap();
+        let gpt2 = Family::get("gpt2like").unwrap();
+        assert!(lr_at(&c, bloomz, 20) < lr_at(&c, gpt2, 20));
+    }
+}

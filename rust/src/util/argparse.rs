@@ -1,0 +1,198 @@
+//! Tiny declarative CLI argument parser (clap is not in the vendored set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments, with typed accessors, defaults, and generated `--help` text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Declarative option spec for one subcommand.
+pub struct ArgSpec {
+    name: &'static str,
+    about: &'static str,
+    opts: Vec<OptDef>,
+}
+
+struct OptDef {
+    key: &'static str,
+    help: &'static str,
+    default: Option<&'static str>,
+    is_flag: bool,
+}
+
+/// Parsed arguments.
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        ArgSpec { name, about, opts: Vec::new() }
+    }
+
+    /// `--key <value>` option with an optional default.
+    pub fn opt(mut self, key: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.opts.push(OptDef { key, help, default, is_flag: false });
+        self
+    }
+
+    /// Boolean `--key` flag.
+    pub fn flag(mut self, key: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptDef { key, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let kind = if o.is_flag { "" } else { " <value>" };
+            let dft = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            s.push_str(&format!("  --{}{}\n      {}{}\n", o.key, kind, o.help, dft));
+        }
+        s
+    }
+
+    /// Parse a raw argument list (not including the program/subcommand name).
+    pub fn parse(&self, raw: &[String]) -> Result<Args> {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.insert(o.key.to_string(), d.to_string());
+            }
+        }
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline) = match stripped.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (stripped, None),
+                };
+                let def = self
+                    .opts
+                    .iter()
+                    .find(|o| o.key == key)
+                    .ok_or_else(|| anyhow!("unknown option --{key}\n\n{}", self.usage()))?;
+                if def.is_flag {
+                    if inline.is_some() {
+                        bail!("flag --{key} takes no value");
+                    }
+                    flags.push(key.to_string());
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow!("--{key} requires a value"))?
+                            .clone(),
+                    };
+                    values.insert(key.to_string(), v);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Ok(Args { values, flags, positional })
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Result<&str> {
+        self.values
+            .get(key)
+            .map(|s| s.as_str())
+            .with_context(|| format!("missing required option --{key}"))
+    }
+
+    pub fn opt_get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, key: &str) -> Result<usize> {
+        self.get(key)?.parse().with_context(|| format!("--{key} must be an integer"))
+    }
+
+    pub fn f64(&self, key: &str) -> Result<f64> {
+        self.get(key)?.parse().with_context(|| format!("--{key} must be a number"))
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Comma-separated list helper: `--tiers t0,t1,t2`.
+    pub fn list(&self, key: &str) -> Result<Vec<String>> {
+        Ok(self
+            .get(key)?
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().to_string())
+            .collect())
+    }
+
+    pub fn usize_list(&self, key: &str) -> Result<Vec<usize>> {
+        self.list(key)?
+            .iter()
+            .map(|s| s.parse::<usize>().with_context(|| format!("--{key}: bad integer {s:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("test", "test command")
+            .opt("bits", Some("4"), "precision")
+            .opt("dtype", None, "data type")
+            .flag("verbose", "chatty")
+    }
+
+    fn raw(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_and_overrides() {
+        let a = spec().parse(&raw(&[])).unwrap();
+        assert_eq!(a.usize("bits").unwrap(), 4);
+        let a = spec().parse(&raw(&["--bits", "8"])).unwrap();
+        assert_eq!(a.usize("bits").unwrap(), 8);
+        let a = spec().parse(&raw(&["--bits=3"])).unwrap();
+        assert_eq!(a.usize("bits").unwrap(), 3);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = spec().parse(&raw(&["--verbose", "pos1", "pos2"])).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["pos1", "pos2"]);
+        assert!(!spec().parse(&raw(&[])).unwrap().flag("verbose"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(spec().parse(&raw(&["--nope"])).is_err());
+        assert!(spec().parse(&raw(&["--bits"])).is_err());
+        assert!(spec().parse(&raw(&["--verbose=1"])).is_err());
+        let a = spec().parse(&raw(&[])).unwrap();
+        assert!(a.get("dtype").is_err()); // required, no default
+    }
+
+    #[test]
+    fn lists() {
+        let s = ArgSpec::new("t", "t").opt("tiers", Some("t0,t1"), "");
+        let a = s.parse(&raw(&[])).unwrap();
+        assert_eq!(a.list("tiers").unwrap(), vec!["t0", "t1"]);
+        let s2 = ArgSpec::new("t", "t").opt("ks", Some("3,4,8"), "");
+        assert_eq!(s2.parse(&raw(&[])).unwrap().usize_list("ks").unwrap(), vec![3, 4, 8]);
+    }
+}

@@ -1,0 +1,49 @@
+//! From-scratch infrastructure substrates.
+//!
+//! The build image vendors only the crates the `xla` FFI needs, so the
+//! pieces a production framework would normally pull from crates.io are
+//! implemented here instead (and unit-tested like any other module):
+//!
+//! * [`json`] — a strict JSON parser/serializer (manifest, results store,
+//!   golden vectors).
+//! * [`rng`] — a deterministic xoshiro256++ PRNG with normal/Zipf sampling;
+//!   every experiment is seeded and replayable.
+//! * [`pool`] — a fixed-size scoped thread pool used by the sweep
+//!   coordinator and the quantization hot path.
+//! * [`argparse`] — a small declarative CLI argument parser.
+//! * [`proptest`] — a minimal property-based testing harness (seeded case
+//!   generation + shrinking-free failure reporting) used across the quant
+//!   and coordinator invariants.
+//! * [`progress`] — wall-clock scoped timers and rate reporting.
+
+pub mod argparse;
+pub mod json;
+pub mod pool;
+pub mod progress;
+pub mod proptest;
+pub mod rng;
+pub mod toml;
+
+/// Simple stable 64-bit FNV-1a hash, used for config-keyed caching in the
+/// results store (stable across runs and platforms, unlike `DefaultHasher`).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a_stable_known_vectors() {
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        // Distinct inputs hash apart.
+        assert_ne!(fnv1a(b"int:4:64"), fnv1a(b"fp:4:64"));
+    }
+}

@@ -1,0 +1,186 @@
+//! Fixed-size scoped worker pool.
+//!
+//! The sweep coordinator fans quantize+eval cells across workers and the
+//! quant hot path parallelizes across tensors. With no tokio/rayon in the
+//! vendored crate set, this is a small work-stealing-free pool built on
+//! `std::thread::scope` + a locked deque: tasks are coarse (milliseconds to
+//! seconds), so a single contended queue is nowhere near the bottleneck.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+
+/// Run `f(i)` for every `i in 0..n` across up to `threads` workers and
+/// collect results in index order. Panics in tasks propagate.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = f(i);
+                **slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    drop(slots);
+    out.into_iter().map(|x| x.expect("worker dropped a slot")).collect()
+}
+
+/// Default worker count: physical parallelism, capped to keep the PJRT CPU
+/// backend (itself multithreaded) from oversubscription.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(1, 16)
+}
+
+/// A bounded MPMC channel used by the coordinator for work distribution
+/// with backpressure (producers block when `cap` items are queued).
+pub struct BoundedQueue<T> {
+    inner: Mutex<QueueState<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+struct QueueState<T> {
+    items: std::collections::VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> BoundedQueue<T> {
+    pub fn new(cap: usize) -> Self {
+        BoundedQueue {
+            inner: Mutex::new(QueueState { items: std::collections::VecDeque::new(), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap: cap.max(1),
+        }
+    }
+
+    /// Blocking push; returns `false` if the queue is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.inner.lock().unwrap();
+        while st.items.len() >= self.cap && !st.closed {
+            st = self.not_full.wait(st).unwrap();
+        }
+        if st.closed {
+            return false;
+        }
+        st.items.push_back(item);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Blocking pop; returns `None` once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if let Some(x) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(x);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Close the queue: producers fail, consumers drain the remainder.
+    pub fn close(&self) {
+        let mut st = self.inner.lock().unwrap();
+        st.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let got = parallel_map(100, 8, |i| i * i);
+        let want: Vec<usize> = (0..100).map(|i| i * i).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn parallel_map_runs_every_task_once() {
+        let count = AtomicU64::new(0);
+        let _ = parallel_map(1000, 8, |_| count.fetch_add(1, Ordering::Relaxed));
+        assert_eq!(count.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn parallel_map_handles_empty_and_single() {
+        assert_eq!(parallel_map(0, 4, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(1, 4, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn bounded_queue_roundtrip() {
+        let q = BoundedQueue::new(4);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                for i in 0..100 {
+                    assert!(q.push(i));
+                }
+                q.close();
+            });
+            let mut got = Vec::new();
+            while let Some(x) = q.pop() {
+                got.push(x);
+            }
+            assert_eq!(got, (0..100).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn closed_queue_rejects_push() {
+        let q = BoundedQueue::new(2);
+        q.close();
+        assert!(!q.push(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn queue_applies_backpressure() {
+        let q = BoundedQueue::new(2);
+        assert!(q.push(1));
+        assert!(q.push(2));
+        assert_eq!(q.len(), 2);
+        // Third push would block; drain one first from another thread.
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                assert_eq!(q.pop(), Some(1));
+            });
+            assert!(q.push(3)); // unblocks once the consumer pops
+        });
+        assert_eq!(q.pop(), Some(2));
+        assert_eq!(q.pop(), Some(3));
+    }
+}

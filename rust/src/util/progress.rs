@@ -1,0 +1,133 @@
+//! Scoped wall-clock timers and lightweight run metrics.
+//!
+//! The coordinator reports cell throughput and per-phase timings through
+//! these helpers; the perf pass (EXPERIMENTS.md §Perf) reads the same
+//! numbers, so measurement code is shared between production and benches.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Wall-clock timer with split reporting.
+pub struct Timer {
+    start: Instant,
+    label: String,
+}
+
+impl Timer {
+    pub fn start(label: impl Into<String>) -> Self {
+        Timer { start: Instant::now(), label: label.into() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Log the elapsed time (info level) and return it.
+    pub fn finish(self) -> f64 {
+        let dt = self.elapsed_s();
+        log::info!("{}: {:.3}s", self.label, dt);
+        dt
+    }
+}
+
+/// Measure the best-of-`reps` wall time of `f` (after `warmup` calls), the
+/// convention all `benches/` targets use for latency numbers.
+pub fn bench_best<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut best = f64::INFINITY;
+    for _ in 0..reps.max(1) {
+        let t = Instant::now();
+        f();
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    best
+}
+
+/// Shared atomic counters for coarse run accounting (cells done, PJRT
+/// executions, bytes quantized). Cheap enough to leave on everywhere.
+#[derive(Default)]
+pub struct Counters {
+    pub cells: AtomicU64,
+    pub executions: AtomicU64,
+    pub bytes_quantized: AtomicU64,
+}
+
+impl Counters {
+    pub fn bump_cells(&self) {
+        self.cells.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn bump_exec(&self) {
+        self.executions.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add_bytes(&self, n: u64) {
+        self.bytes_quantized.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn snapshot(&self) -> (u64, u64, u64) {
+        (
+            self.cells.load(Ordering::Relaxed),
+            self.executions.load(Ordering::Relaxed),
+            self.bytes_quantized.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// Simple stderr logger (the `log` facade has no backend in the vendored
+/// set). Level comes from `KBITSCALE_LOG` (error|warn|info|debug|trace).
+pub fn init_logging() {
+    static INIT: std::sync::Once = std::sync::Once::new();
+    INIT.call_once(|| {
+        let level = match std::env::var("KBITSCALE_LOG").as_deref() {
+            Ok("error") => log::LevelFilter::Error,
+            Ok("warn") => log::LevelFilter::Warn,
+            Ok("debug") => log::LevelFilter::Debug,
+            Ok("trace") => log::LevelFilter::Trace,
+            _ => log::LevelFilter::Info,
+        };
+        let _ = log::set_boxed_logger(Box::new(StderrLogger));
+        log::set_max_level(level);
+    });
+}
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+    fn log(&self, record: &log::Record) {
+        if self.enabled(record.metadata()) {
+            eprintln!("[{:5}] {}", record.level(), record.args());
+        }
+    }
+    fn flush(&self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_elapsed() {
+        let t = Timer::start("test");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        assert!(t.elapsed_s() >= 0.009);
+    }
+
+    #[test]
+    fn bench_best_returns_minimum() {
+        let dt = bench_best(1, 3, || std::thread::sleep(std::time::Duration::from_millis(2)));
+        assert!(dt >= 0.001 && dt < 0.5);
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let c = Counters::default();
+        c.bump_cells();
+        c.bump_cells();
+        c.bump_exec();
+        c.add_bytes(128);
+        assert_eq!(c.snapshot(), (2, 1, 128));
+    }
+}

@@ -1,0 +1,106 @@
+//! Minimal property-based testing harness.
+//!
+//! The vendored crate set has no `proptest`, so invariants are checked with
+//! this seeded-case generator instead: run a property over `n` random cases
+//! drawn from explicit generators; on failure, report the case index and
+//! seed so the exact input reproduces deterministically. (No shrinking —
+//! generators here produce small cases by construction.)
+
+use crate::util::rng::Rng;
+
+/// Run `prop(rng, case_index)` for `cases` seeded cases; panic with a
+/// reproducible seed on the first failure message returned.
+pub fn check<F>(name: &str, cases: usize, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    for case in 0..cases {
+        let seed = 0xABCD_0000 + case as u64;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng, case) {
+            panic!("property {name:?} failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Assert helper producing `Result<(), String>` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+/// Generators for common test inputs.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// A random tensor-ish f32 vector: mixed scales, occasional outliers,
+    /// zeros and exact-negatives — the shapes quantizers must survive.
+    pub fn weights(rng: &mut Rng, max_len: usize) -> Vec<f32> {
+        let n = 1 + rng.below(max_len);
+        let std = 10f64.powf(rng.range_f64(-3.0, 1.0));
+        (0..n)
+            .map(|_| {
+                let roll = rng.f64();
+                if roll < 0.02 {
+                    0.0
+                } else if roll < 0.05 {
+                    // outlier, ~20x the bulk std (paper §3)
+                    (rng.normal() * std * 20.0) as f32
+                } else {
+                    (rng.normal() * std) as f32
+                }
+            })
+            .collect()
+    }
+
+    /// Random quantization block size from the paper's sweep range.
+    pub fn block(rng: &mut Rng) -> usize {
+        [16, 32, 64, 128, 256, 512, 1024][rng.below(7)]
+    }
+
+    /// Random bit width 2..=8.
+    pub fn bits(rng: &mut Rng) -> usize {
+        2 + rng.below(7)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes_good_property() {
+        check("tautology", 50, |rng, _| {
+            let x = rng.f64();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "always-fails")]
+    fn check_reports_failures() {
+        check("always-fails", 5, |_, _| Err("always-fails".into()));
+    }
+
+    #[test]
+    fn weight_gen_produces_varied_cases() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let mut saw_zero = false;
+        let mut saw_large = false;
+        for _ in 0..100 {
+            let w = gen::weights(&mut rng, 256);
+            assert!(!w.is_empty() && w.len() <= 256);
+            saw_zero |= w.iter().any(|&x| x == 0.0);
+            saw_large |= w.iter().any(|&x| x.abs() > 1.0);
+        }
+        assert!(saw_zero && saw_large);
+    }
+}

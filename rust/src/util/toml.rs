@@ -1,0 +1,168 @@
+//! Minimal TOML-subset parser for run configuration files.
+//!
+//! Supports the subset the repo's configs use: `[section]` headers,
+//! `key = value` with string / integer / float / bool / array-of-scalar
+//! values, `#` comments, and bare keys. Produces the same [`Json`] value
+//! tree as the JSON parser so downstream code has one access API.
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
+
+/// Parse TOML-subset text into a nested [`Json::Obj`]:
+/// top-level keys plus one object per `[section]`.
+pub fn parse(text: &str) -> Result<Json> {
+    let mut root = std::collections::BTreeMap::new();
+    let mut section: Option<String> = None;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim().to_string();
+        if line.is_empty() {
+            continue;
+        }
+        let ctx = || format!("line {}: {raw:?}", lineno + 1);
+        if let Some(name) = line.strip_prefix('[') {
+            let name = name.strip_suffix(']').with_context(ctx)?.trim();
+            if name.is_empty() {
+                bail!("empty section name at {}", ctx());
+            }
+            root.entry(name.to_string())
+                .or_insert_with(|| Json::Obj(Default::default()));
+            section = Some(name.to_string());
+            continue;
+        }
+        let (key, value) = line.split_once('=').with_context(ctx)?;
+        let key = key.trim().to_string();
+        let value = parse_value(value.trim()).with_context(ctx)?;
+        match &section {
+            None => {
+                root.insert(key, value);
+            }
+            Some(s) => {
+                let Json::Obj(m) = root.get_mut(s).unwrap() else {
+                    unreachable!()
+                };
+                m.insert(key, value);
+            }
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a double-quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Json> {
+    if s.is_empty() {
+        bail!("missing value");
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').context("unterminated string")?;
+        return Ok(Json::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').context("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Json::Arr(vec![]));
+        }
+        return Ok(Json::Arr(
+            split_top_level(inner)
+                .iter()
+                .map(|p| parse_value(p.trim()))
+                .collect::<Result<_>>()?,
+        ));
+    }
+    s.parse::<f64>()
+        .map(Json::Num)
+        .with_context(|| format!("unparseable value {s:?}"))
+}
+
+/// Split on commas that are not inside quotes.
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_scalars() {
+        let t = parse(
+            r#"
+# run config
+name = "fig2"          # inline comment
+threads = 4
+[sweep]
+ks = [3, 4, 8, 16]
+families = ["optlike", "gpt2like"]
+zero_shot = true
+lr = 3e-3
+"#,
+        )
+        .unwrap();
+        assert_eq!(t.get("name").unwrap().as_str().unwrap(), "fig2");
+        assert_eq!(t.get("threads").unwrap().as_usize().unwrap(), 4);
+        let sweep = t.get("sweep").unwrap();
+        assert_eq!(sweep.get("ks").unwrap().usizes().unwrap(), vec![3, 4, 8, 16]);
+        assert_eq!(
+            sweep.get("families").unwrap().as_arr().unwrap()[1].as_str().unwrap(),
+            "gpt2like"
+        );
+        assert!(sweep.get("zero_shot").unwrap().as_bool().unwrap());
+        assert!((sweep.get("lr").unwrap().as_f64().unwrap() - 3e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let t = parse("tag = \"a#b\"").unwrap();
+        assert_eq!(t.get("tag").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue =").is_err());
+        assert!(parse("bare line").is_err());
+        assert!(parse("x = [1, 2").is_err());
+    }
+
+    #[test]
+    fn empty_and_comment_only_ok() {
+        let t = parse("# nothing\n\n").unwrap();
+        assert!(t.as_obj().unwrap().is_empty());
+    }
+}

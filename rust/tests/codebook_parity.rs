@@ -1,0 +1,59 @@
+//! Cross-language golden test: Rust codebooks must match the python
+//! reference vectors dumped to `artifacts/codebooks.json` by `aot.py`.
+//!
+//! Int/fp/dynexp are deterministic constructions → bit-exact equality.
+//! Quantile codebooks are estimated from RNG samples whose generators
+//! differ across languages → distribution-level tolerance instead.
+
+use kbitscale::quant::codebook::{Codebook, DataType};
+use kbitscale::util::json::Json;
+
+fn golden() -> Json {
+    let text = std::fs::read_to_string("artifacts/codebooks.json")
+        .expect("run `make artifacts` first");
+    Json::parse(&text).unwrap()
+}
+
+#[test]
+fn int_fp_dynexp_bit_exact() {
+    let g = golden();
+    for k in 3..=8usize {
+        for (name, dtype, ebits) in [
+            (format!("int_{k}"), DataType::Int, None),
+            (format!("dynexp_{k}"), DataType::DynExp, None),
+        ] {
+            let want = g.get(&name).unwrap().f32s().unwrap();
+            let got = Codebook::build(dtype, k, ebits).unwrap();
+            assert_eq!(got.values(), &want[..], "{name}");
+        }
+        for e in 1..k - 1 {
+            let name = format!("fp_{k}_e{e}");
+            let want = g.get(&name).unwrap().f32s().unwrap();
+            let got = Codebook::build(DataType::Fp, k, Some(e)).unwrap();
+            assert_eq!(got.values().len(), want.len(), "{name} size");
+            for (a, b) in got.values().iter().zip(&want) {
+                assert!((a - b).abs() <= f32::EPSILON * 4.0, "{name}: {a} vs {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn quantile_distribution_level_parity() {
+    let g = golden();
+    for k in 3..=8usize {
+        let want = g.get(&format!("quantile_{k}")).unwrap().f32s().unwrap();
+        let got = Codebook::build(DataType::Quantile, k, None).unwrap();
+        assert_eq!(got.values().len(), want.len(), "k={k} size");
+        // Same construction over equally-sized standard-normal samples:
+        // entries agree to a few percent of the full range.
+        for (i, (a, b)) in got.values().iter().zip(&want).enumerate() {
+            assert!(
+                (a - b).abs() < 0.06,
+                "quantile_{k}[{i}]: rust {a} vs python {b}"
+            );
+        }
+        // Both contain an exact zero and are normalized.
+        assert!(got.values().contains(&0.0) && want.contains(&0.0));
+    }
+}

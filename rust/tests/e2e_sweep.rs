@@ -1,0 +1,89 @@
+//! End-to-end integration: train → checkpoint → coordinator sweep →
+//! results store → scaling analysis, all through the public API, in a
+//! temp run directory (does not touch `runs/`).
+//!
+//! Needs `make artifacts`. Kept small (one tiny model, ~30s) so it runs
+//! in the default `cargo test` gate.
+
+use std::path::PathBuf;
+
+use kbitscale::coordinator::{Cell, Coordinator, ResultsStore};
+use kbitscale::data::corpus::{Corpus, CorpusConfig};
+use kbitscale::eval::EvalSuite;
+use kbitscale::models::checkpoint::CheckpointStore;
+use kbitscale::models::families::Family;
+use kbitscale::models::manifest::Manifest;
+use kbitscale::models::ModelId;
+use kbitscale::quant::codebook::DataType;
+use kbitscale::quant::QuantSpec;
+use kbitscale::runtime::Runtime;
+use kbitscale::train::{train_model, TrainConfig};
+
+struct TempRun(PathBuf);
+impl Drop for TempRun {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.0).ok();
+    }
+}
+
+#[test]
+fn full_pipeline_on_t0() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))
+        .expect("run `make artifacts` first");
+    let rt = Runtime::cpu().unwrap();
+    let corpus = Corpus::new(CorpusConfig {
+        vocab: manifest.vocab,
+        seq: manifest.seq,
+        ..CorpusConfig::default()
+    });
+    let dir = std::env::temp_dir().join(format!("kbt_e2e_{}", std::process::id()));
+    let _guard = TempRun(dir.clone());
+    let ckpts = CheckpointStore::new(dir.join("ckpt"));
+    let results = ResultsStore::open(dir.join("results.jsonl")).unwrap();
+
+    // 1. Train a tiny model briefly.
+    let family = Family::get("gpt2like").unwrap();
+    let tier = manifest.tier("t0").unwrap();
+    let cfg = TrainConfig { steps: 120, log_every: 1000, ..TrainConfig::default() };
+    let rep = train_model(&rt, &manifest, tier, family, &corpus, &cfg, &ckpts).unwrap();
+    assert!(rep.final_loss < rep.losses[0], "training must reduce loss");
+    assert!(ckpts.exists(&ModelId::new("gpt2like", "t0")));
+
+    // 2. Sweep three precisions through the coordinator.
+    let coord = Coordinator::new(&rt, &manifest, &corpus, &ckpts, &results);
+    let cells = vec![
+        Cell::new("gpt2like", "t0", QuantSpec::baseline16(), EvalSuite::PplZeroShot),
+        Cell::new("gpt2like", "t0", QuantSpec::new(DataType::Fp, 4, Some(64)), EvalSuite::PplZeroShot),
+        Cell::new("gpt2like", "t0", QuantSpec::new(DataType::Int, 3, None), EvalSuite::Ppl),
+    ];
+    let out = coord.run_grid(&cells).unwrap();
+    assert_eq!(out.len(), 3);
+    assert_eq!(results.len(), 3);
+
+    // 3. Monotonicity + accounting invariants.
+    let base = &out[0];
+    let fp4 = &out[1];
+    let int3 = &out[2];
+    assert!(base.ce.is_finite() && base.ce > 0.0);
+    // Quantization can only hurt (or match) CE, and more bits hurt less.
+    assert!(fp4.ce >= base.ce - 0.05, "4-bit ce {} << baseline {}", fp4.ce, base.ce);
+    assert!(int3.ce >= fp4.ce - 0.05, "3-bit tensor-wise should be worst");
+    assert!(base.total_bits > fp4.total_bits);
+    assert!((fp4.bits_per_param - 4.25).abs() < 1e-9);
+    assert!(base.zs_mean.is_finite());
+    assert!(int3.zs_mean.is_nan(), "ppl-only suite has no zero-shot");
+
+    // 4. Cache hit: re-running the grid must be instant and identical.
+    let t = std::time::Instant::now();
+    let again = coord.run_grid(&cells).unwrap();
+    assert!(t.elapsed().as_secs_f64() < 0.5, "cache miss on rerun");
+    for (a, b) in out.iter().zip(&again) {
+        assert_eq!(a.key, b.key);
+        assert_eq!(a.ce, b.ce);
+    }
+
+    // 5. Store survives reopen (resume path).
+    drop(results);
+    let reopened = ResultsStore::open(dir.join("results.jsonl")).unwrap();
+    assert_eq!(reopened.len(), 3);
+}

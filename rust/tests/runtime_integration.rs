@@ -1,0 +1,200 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These need `make artifacts` to have run; they are the cross-layer
+//! correctness gate (L2 graphs behave as the Rust side assumes: argument
+//! order, output arity, masking semantics, kernel numerics).
+
+use std::path::Path;
+
+use kbitscale::data::corpus::{Corpus, CorpusConfig};
+use kbitscale::models::families::Family;
+use kbitscale::models::init::init_params;
+use kbitscale::models::manifest::Manifest;
+use kbitscale::quant::codebook::{Codebook, DataType};
+use kbitscale::runtime::{lit_f32, lit_i32, lit_u8, to_vec_f32, Runtime};
+use kbitscale::tensor::Tensor;
+use kbitscale::util::rng::Rng;
+
+fn setup() -> (Manifest, Runtime) {
+    let manifest = Manifest::load(Path::new("artifacts"))
+        .expect("artifacts missing — run `make artifacts` before `cargo test`");
+    (manifest, Runtime::cpu().unwrap())
+}
+
+fn corpus(m: &Manifest) -> Corpus {
+    Corpus::new(CorpusConfig { vocab: m.vocab, seq: m.seq, ..CorpusConfig::default() })
+}
+
+#[test]
+fn fwd_graph_shapes_and_masking() {
+    let (m, rt) = setup();
+    let tier = m.tier("t0").unwrap();
+    let exe = rt.load(&m.hlo_path(&tier.fwd_hlo)).unwrap();
+    let params = init_params(tier, Family::get("gpt2like").unwrap());
+
+    let b = tier.batch_eval;
+    let s = tier.seq;
+    let c = corpus(&m);
+    let tokens = c.train_batch(0, b);
+
+    // Full mask vs half mask: NLL must shrink accordingly and stay finite.
+    let mut full = vec![1.0f32; b * s];
+    for r in 0..b {
+        full[r * s] = 0.0; // BOS is never a target
+    }
+    let mut half = full.clone();
+    for r in 0..b {
+        for i in s / 2..s {
+            half[r * s + i] = 0.0;
+        }
+    }
+    let run = |mask: &[f32]| {
+        let mut args: Vec<xla::Literal> = params.iter().map(|(_, t)| lit_f32(t).unwrap()).collect();
+        args.push(lit_i32(&[b, s], &tokens).unwrap());
+        args.push(lit_f32(&Tensor::new(vec![b, s], mask.to_vec())).unwrap());
+        let out = rt.execute(&exe, &args).unwrap();
+        assert_eq!(out.len(), 2);
+        (to_vec_f32(&out[0]).unwrap(), to_vec_f32(&out[1]).unwrap())
+    };
+    let (nll_full, hits_full) = run(&full);
+    let (nll_half, _) = run(&half);
+    assert_eq!(nll_full.len(), b);
+    for r in 0..b {
+        assert!(nll_full[r].is_finite() && nll_full[r] > 0.0);
+        assert!(nll_half[r] < nll_full[r], "masking must reduce NLL sum");
+        assert!(hits_full[r] >= 0.0 && hits_full[r] <= (s - 1) as f32);
+    }
+    // Untrained model ≈ uniform: per-token NLL near ln(V).
+    let per_tok = nll_full.iter().sum::<f32>() / (b * (s - 1)) as f32;
+    let uniform = (m.vocab as f32).ln();
+    assert!((per_tok - uniform).abs() < 1.0, "per-token NLL {per_tok} vs ln V {uniform}");
+}
+
+#[test]
+fn train_graph_reduces_loss() {
+    let (m, rt) = setup();
+    let tier = m.tier("t0").unwrap();
+    let exe = rt.load(&m.hlo_path(&tier.train_hlo)).unwrap();
+    let family = Family::get("gpt2like").unwrap();
+    let mut params: Vec<Tensor> =
+        init_params(tier, family).into_iter().map(|(_, t)| t).collect();
+    let mut mstate: Vec<Tensor> =
+        tier.params.iter().map(|p| Tensor::zeros(p.shape.clone())).collect();
+    let mut vstate = mstate.clone();
+    let c = corpus(&m);
+    let n = tier.params.len();
+
+    let mut first = None;
+    let mut last = 0.0f32;
+    for step in 0..30 {
+        let tokens = c.train_batch(step, tier.batch_train);
+        let mut args: Vec<xla::Literal> = Vec::new();
+        for t in params.iter().chain(&mstate).chain(&vstate) {
+            args.push(lit_f32(t).unwrap());
+        }
+        args.push(lit_i32(&[tier.batch_train, tier.seq], &tokens).unwrap());
+        args.push(xla::Literal::scalar(3e-3f32));
+        args.push(xla::Literal::scalar((step + 1) as f32));
+        let out = rt.execute(&exe, &args).unwrap();
+        assert_eq!(out.len(), 3 * n + 1);
+        for (i, p) in tier.params.iter().enumerate() {
+            params[i] = Tensor::new(p.shape.clone(), to_vec_f32(&out[i]).unwrap());
+            mstate[i] = Tensor::new(p.shape.clone(), to_vec_f32(&out[n + i]).unwrap());
+            vstate[i] = Tensor::new(p.shape.clone(), to_vec_f32(&out[2 * n + i]).unwrap());
+        }
+        last = to_vec_f32(&out[3 * n]).unwrap()[0];
+        assert!(last.is_finite());
+        first.get_or_insert(last);
+    }
+    let first = first.unwrap();
+    assert!(last < first - 0.05, "loss did not fall: {first} -> {last}");
+}
+
+#[test]
+fn fused_dequant_kernel_matches_rust_reference() {
+    let (m, rt) = setup();
+    let km = &m.kernels;
+    let (mm, k, n, qb) = (km.m, km.k, km.n, km.qblock);
+    let mut rng = Rng::new(9);
+    let mut x = vec![0.0f32; mm * k];
+    let mut w = vec![0.0f32; k * n];
+    rng.fill_normal(&mut x, 1.0);
+    rng.fill_normal(&mut w, 0.1);
+
+    for dtype in [DataType::Int, DataType::Fp, DataType::Quantile, DataType::DynExp] {
+        let cb = Codebook::build(dtype, 4, None).unwrap();
+        let mut idx = vec![0u8; k * n];
+        let mut amax = vec![0.0f32; (k / qb) * n];
+        for c in 0..n {
+            for b in 0..k / qb {
+                let mut a = 0.0f32;
+                for r in b * qb..(b + 1) * qb {
+                    a = a.max(w[r * n + c].abs());
+                }
+                let a = if a == 0.0 { 1.0 } else { a };
+                amax[b * n + c] = a;
+                for r in b * qb..(b + 1) * qb {
+                    idx[r * n + c] = cb.assign(w[r * n + c] / a);
+                }
+            }
+        }
+        let exe = rt.load(&m.hlo_path(&km.u8_hlo)).unwrap();
+        let args = vec![
+            lit_f32(&Tensor::new(vec![mm, k], x.clone())).unwrap(),
+            lit_u8(&[k, n], &idx).unwrap(),
+            lit_f32(&Tensor::new(vec![k / qb, n], amax.clone())).unwrap(),
+            lit_f32(&Tensor::new(vec![km.codebook_pad], cb.padded_values(km.codebook_pad)))
+                .unwrap(),
+        ];
+        let got = to_vec_f32(&rt.execute(&exe, &args).unwrap()[0]).unwrap();
+        // Rust-side reference dequant + matmul (f64 accumulation).
+        let mut max_err = 0.0f32;
+        for i in 0..mm {
+            for c in 0..n {
+                let mut acc = 0.0f64;
+                for r in 0..k {
+                    let dq = cb.value(idx[r * n + c]) * amax[(r / qb) * n + c];
+                    acc += x[i * k + r] as f64 * dq as f64;
+                }
+                max_err = max_err.max((got[i * n + c] - acc as f32).abs());
+            }
+        }
+        assert!(max_err < 2e-2, "{dtype:?}: fused kernel err {max_err}");
+    }
+}
+
+#[test]
+fn acts_graph_returns_layer_inputs() {
+    let (m, rt) = setup();
+    let tier = m.tier("t0").unwrap();
+    let Some(acts_hlo) = tier.acts_hlo.as_ref() else {
+        panic!("manifest missing acts graph; rerun make artifacts");
+    };
+    let exe = rt.load(&m.hlo_path(acts_hlo)).unwrap();
+    let params = init_params(tier, Family::get("gpt2like").unwrap());
+    let c = corpus(&m);
+    let tokens = c.train_batch(1, tier.batch_eval);
+    let mut args: Vec<xla::Literal> = params.iter().map(|(_, t)| lit_f32(t).unwrap()).collect();
+    args.push(lit_i32(&[tier.batch_eval, tier.seq], &tokens).unwrap());
+    let out = rt.execute(&exe, &args).unwrap();
+    assert_eq!(out.len(), 4);
+    let rows = tier.batch_eval * tier.seq;
+    let want = [
+        tier.n_layer * rows * tier.d_model, // qkv_in
+        tier.n_layer * rows * tier.d_model, // wo_in
+        tier.n_layer * rows * tier.d_model, // fc1_in
+        tier.n_layer * rows * tier.d_ff,    // fc2_in
+    ];
+    for (i, leaf) in out.iter().enumerate() {
+        let v = to_vec_f32(leaf).unwrap();
+        assert_eq!(v.len(), want[i], "acts output {i}");
+        assert!(v.iter().all(|x| x.is_finite()));
+        // LayerNormed inputs have ~unit scale.
+        if i == 0 {
+            let rms = (v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>()
+                / v.len() as f64)
+                .sqrt();
+            assert!(rms > 0.3 && rms < 3.0, "qkv_in rms {rms}");
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Serving-layer integration: a quantized model behind the JSON-lines
+//! protocol, exercised in memory (no sockets needed).
+
+use kbitscale::data::corpus::{Corpus, CorpusConfig};
+use kbitscale::models::families::Family;
+use kbitscale::models::init::init_params;
+use kbitscale::models::manifest::Manifest;
+use kbitscale::quant::codebook::DataType;
+use kbitscale::quant::QuantSpec;
+use kbitscale::runtime::Runtime;
+use kbitscale::server::{serve_lines, Session};
+use kbitscale::util::json::Json;
+
+fn session<'a>(rt: &'a Runtime, manifest: &'a Manifest) -> Session<'a> {
+    let tier = manifest.tier("t0").unwrap();
+    // Init-only params are fine: the protocol is exercised, not accuracy.
+    let params = init_params(tier, Family::get("gpt2like").unwrap());
+    let corpus = Corpus::new(CorpusConfig {
+        vocab: manifest.vocab,
+        seq: manifest.seq,
+        ..CorpusConfig::default()
+    });
+    Session::new(
+        rt,
+        manifest,
+        tier,
+        &params,
+        QuantSpec::new(DataType::Fp, 4, Some(64)),
+        corpus,
+        "gpt2like_t0".into(),
+    )
+    .unwrap()
+}
+
+#[test]
+fn protocol_roundtrip() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))
+        .expect("run `make artifacts` first");
+    let rt = Runtime::cpu().unwrap();
+    let mut s = session(&rt, &manifest);
+
+    // info
+    let info = s.handle(&Json::parse(r#"{"op":"info"}"#).unwrap());
+    assert_eq!(info.get("tier").unwrap().as_str().unwrap(), "t0");
+    assert_eq!(info.get("quant").unwrap().as_str().unwrap(), "fp:4:b64");
+    assert!((info.get("bits_per_param").unwrap().as_f64().unwrap() - 4.25).abs() < 1e-9);
+
+    // score
+    let score = s.handle(&Json::parse(r#"{"op":"score","tokens":[1,5,9,12,200,3]}"#).unwrap());
+    let ce = score.get("ce").unwrap().as_f64().unwrap();
+    assert!(ce.is_finite() && ce > 0.0, "{score:?}");
+    assert_eq!(score.get("tokens_scored").unwrap().as_f64().unwrap(), 5.0);
+
+    // choose: identical choices tie -> still a valid index; distinct ones work
+    let choose = s.handle(
+        &Json::parse(r#"{"op":"choose","context":[1,5,9],"choices":[[7],[300,301]]}"#).unwrap(),
+    );
+    let best = choose.get("best").unwrap().as_usize().unwrap();
+    assert!(best < 2);
+    assert_eq!(choose.get("scores").unwrap().as_arr().unwrap().len(), 2);
+
+    // errors are structured, not panics
+    let err = s.handle(&Json::parse(r#"{"op":"nope"}"#).unwrap());
+    assert!(err.get("error").unwrap().as_str().unwrap().contains("unknown op"));
+    let err2 = s.handle(&Json::parse(r#"{"op":"score","tokens":[]}"#).unwrap());
+    assert!(err2.opt("error").is_some());
+}
+
+#[test]
+fn serve_lines_transport() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mut s = session(&rt, &manifest);
+
+    let input = b"{\"op\":\"info\"}\nnot json\n{\"op\":\"score\",\"tokens\":[1,2,3]}\n";
+    let mut out = Vec::new();
+    let served = serve_lines(&mut s, &input[..], &mut out).unwrap();
+    assert_eq!(served, 3);
+    let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().trim().lines().collect();
+    assert_eq!(lines.len(), 3);
+    assert!(Json::parse(lines[0]).unwrap().opt("model").is_some());
+    assert!(Json::parse(lines[1]).unwrap().opt("error").is_some());
+    assert!(Json::parse(lines[2]).unwrap().opt("ce").is_some());
+}

@@ -1,0 +1,139 @@
+//! Serving throughput: requests/sec and p50/p95 latency for 1, 4, and 16
+//! concurrent TCP clients, with micro-batching on (threaded workers +
+//! cross-client coalescing) vs off (single worker, direct execution — the
+//! pre-registry sequential serving path), plus the packed-vs-f32 resident
+//! weight footprint of every variant hosted by the registry.
+//!
+//! Init-only parameters are used (throughput does not depend on training),
+//! so this bench needs artifacts but no checkpoints.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::time::{Duration, Instant};
+
+use kbitscale::models::families::Family;
+use kbitscale::models::init::init_params;
+use kbitscale::models::manifest::Manifest;
+use kbitscale::quant::codebook::DataType;
+use kbitscale::quant::QuantSpec;
+use kbitscale::runtime::Runtime;
+use kbitscale::server::{serve_listener, ModelRegistry, ParamLoader, ServeOpts};
+
+const REQS_PER_CLIENT: usize = 40;
+
+fn main() -> anyhow::Result<()> {
+    kbitscale::util::progress::init_logging();
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
+    let rt = Runtime::cpu()?;
+    let mref = manifest.clone();
+    let loader: ParamLoader<'static> = Box::new(move |family: &str, tier: &str| {
+        Ok(init_params(mref.tier(tier)?, Family::get(family)?))
+    });
+    let registry = ModelRegistry::new(&rt, &manifest, loader);
+    let h0 = registry.load("gpt2like", "t0", QuantSpec::new(DataType::Fp, 4, Some(64)))?;
+    // A second resident (tier x spec) variant: multi-model hosting in one
+    // process is part of what is being measured.
+    let h1 = registry.load("gpt2like", "t0", QuantSpec::new(DataType::Int, 3, Some(32)))?;
+
+    println!("resident variants ({} in registry):", registry.len());
+    for h in [&h0, &h1] {
+        println!(
+            "  {:<28} packed {:>10} B   f32 {:>10} B   ({:.2}x smaller)",
+            h.key(),
+            h.resident_bytes(),
+            h.quantized_f32_bytes(),
+            h.quantized_f32_bytes() as f64 / h.resident_bytes().max(1) as f64
+        );
+    }
+
+    println!();
+    println!(
+        "{:<8} {:>9} {:>10} {:>10} {:>10}",
+        "clients", "batching", "req/s", "p50 ms", "p95 ms"
+    );
+    let mut seq_1 = 0.0f64;
+    let mut batched_4 = 0.0f64;
+    for &clients in &[1usize, 4, 16] {
+        for &batching in &[false, true] {
+            let (rps, p50, p95) = run_trial(&registry, clients, batching)?;
+            if clients == 1 && !batching {
+                seq_1 = rps;
+            }
+            if clients == 4 && batching {
+                batched_4 = rps;
+            }
+            println!(
+                "{clients:<8} {:>9} {rps:>10.1} {p50:>10.2} {p95:>10.2}",
+                if batching { "on" } else { "off" }
+            );
+        }
+    }
+    println!();
+    println!(
+        "batched 4-client throughput vs sequential path: {:.2}x (target >= 2x)",
+        batched_4 / seq_1.max(1e-9)
+    );
+    Ok(())
+}
+
+/// One trial: spin up the server for exactly `clients` connections, run
+/// the clients concurrently, and collect per-request latencies.
+fn run_trial(
+    registry: &ModelRegistry<'_>,
+    clients: usize,
+    batching: bool,
+) -> anyhow::Result<(f64, f64, f64)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let opts = ServeOpts {
+        // Batching off = the pre-registry sequential serving path: one
+        // worker, each row its own forward execution.
+        workers: if batching { clients } else { 1 },
+        flush: Duration::from_millis(2),
+        batching,
+        max_conns: Some(clients as u64),
+    };
+    let mut lats: Vec<f64> = Vec::new();
+    let t0 = Instant::now();
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        let server = s.spawn(|| serve_listener(registry, listener, &opts));
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            joins.push(s.spawn(move || client_run(addr, c)));
+        }
+        for j in joins {
+            lats.extend(j.join().expect("client thread panicked")?);
+        }
+        server.join().expect("server thread panicked")?;
+        Ok(())
+    })?;
+    let wall = t0.elapsed().as_secs_f64();
+    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| lats[((lats.len() - 1) as f64 * q).round() as usize] * 1e3;
+    Ok(((clients * REQS_PER_CLIENT) as f64 / wall, pct(0.50), pct(0.95)))
+}
+
+fn client_run(addr: SocketAddr, c: usize) -> anyhow::Result<Vec<f64>> {
+    let stream = TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream;
+    let mut lats = Vec::with_capacity(REQS_PER_CLIENT);
+    for i in 0..REQS_PER_CLIENT {
+        let t = Instant::now();
+        writeln!(
+            writer,
+            "{{\"op\":\"score\",\"tokens\":[1,{},9,{},3,7]}}",
+            2 + (c + i) % 200,
+            5 + i % 100
+        )?;
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            anyhow::bail!("server hung up after {i} requests");
+        }
+        if line.contains("\"error\"") {
+            anyhow::bail!("server error: {line}");
+        }
+        lats.push(t.elapsed().as_secs_f64());
+    }
+    Ok(lats)
+}

@@ -338,40 +338,66 @@ fn cmd_demo(raw: &[String]) -> Result<()> {
 
 fn cmd_serve(raw: &[String]) -> Result<()> {
     let spec = root_opt(
-        ArgSpec::new("serve", "serve a quantized model over JSON lines (stdin or TCP)")
-            .opt("family", Some("gpt2like"), "model family")
-            .opt("tier", Some("t0"), "model tier")
+        ArgSpec::new("serve", "serve quantized models over JSON lines (stdin or TCP)")
+            .opt("family", Some("gpt2like"), "default model family")
+            .opt("tier", Some("t0"), "default model tier")
             .opt("bits", Some("4"), "quantization bit width (16 = baseline)")
             .opt("dtype", Some("fp"), "int|fp|quantile|dynexp")
             .opt("block", Some("64"), "block size (0 = tensor-wise)")
+            .opt("preload", None, "extra variants, csv of family:tier[:bits[:dtype[:block]]]")
+            .opt("workers", Some("0"), "connection worker threads (0 = auto)")
+            .opt("flush-ms", Some("2"), "micro-batch flush window in milliseconds")
+            .flag("no-batch", "disable cross-client micro-batching")
             .opt("tcp", None, "listen address (e.g. 127.0.0.1:7878); default stdin/stdout"),
     );
     let args = spec.parse(raw)?;
     let ctx = Ctx::new(args.get("root")?)?;
     let family = Family::get(args.get("family")?)?;
-    let tier = ctx.manifest.tier(args.get("tier")?)?;
-    let id = crate::models::ModelId::new(family.name, &tier.name);
-    let (params, _) = ctx.checkpoint_store().load(&id)?;
-    let bits = args.usize("bits")?;
-    let qspec = if bits >= 16 {
-        QuantSpec::baseline16()
-    } else {
-        let block = match args.usize("block")? { 0 => None, b => Some(b) };
-        QuantSpec::new(DataType::parse(args.get("dtype")?)?, bits, block)
+    let block = match args.usize("block")? {
+        0 => None,
+        b => Some(b),
     };
-    let corpus = Corpus::new(CorpusConfig {
-        vocab: ctx.manifest.vocab,
-        seq: ctx.manifest.seq,
-        ..CorpusConfig::default()
-    });
-    let mut session = crate::server::Session::new(
-        &ctx.rt, &ctx.manifest, tier, &params, qspec, corpus, id.key(),
+    let qspec = crate::server::registry::spec_from_parts(
+        args.usize("bits")?,
+        DataType::parse(args.get("dtype")?)?,
+        block,
     )?;
+    // The registry pulls checkpoints on demand — at startup for the
+    // default + preloads, later via `{"op":"load"}` from clients.
+    let store = ctx.checkpoint_store();
+    let loader: crate::server::ParamLoader<'static> = Box::new(move |family: &str, tier: &str| {
+        let fam = Family::get(family)?;
+        let id = crate::models::ModelId::new(fam.name, tier);
+        Ok(store.load(&id)?.0)
+    });
+    let registry = crate::server::ModelRegistry::new(&ctx.rt, &ctx.manifest, loader);
+    let default = registry.load(family.name, args.get("tier")?, qspec)?;
+    log::info!(
+        "resident {}: {} packed bytes",
+        default.key(),
+        default.resident_bytes()
+    );
+    if let Some(pre) = args.opt_get("preload") {
+        for part in pre.split(',').filter(|p| !p.is_empty()) {
+            let req = crate::server::ModelSpecReq::parse(part)?;
+            let h = registry.load(&req.family, &req.tier, req.spec)?;
+            log::info!("resident {}: {} packed bytes", h.key(), h.resident_bytes());
+        }
+    }
+
     match args.opt_get("tcp") {
-        Some(addr) => crate::server::serve_tcp(&mut session, addr),
+        Some(addr) => {
+            let mut opts = crate::server::ServeOpts::default();
+            match args.usize("workers")? {
+                0 => {}
+                w => opts.workers = w,
+            }
+            opts.flush = std::time::Duration::from_millis(args.usize("flush-ms")? as u64);
+            opts.batching = !args.flag("no-batch");
+            crate::server::serve_tcp(&registry, addr, &opts)
+        }
         None => {
-            let stdin = std::io::stdin();
-            let n = crate::server::serve_lines(&mut session, stdin.lock(), std::io::stdout())?;
+            let n = crate::server::serve_stdin(&registry)?;
             log::info!("served {n} requests");
             Ok(())
         }

@@ -107,8 +107,11 @@ impl<'a> Coordinator<'a> {
         let params = self.load_params(cell)?;
 
         // The hot path: quantize→dequantize the checkpoint under the spec.
+        // The Cow variant borrows pass-through tensors (embeddings,
+        // LayerNorm), so workers never hold a second f32 copy of the
+        // unquantized majority of small-tier checkpoints.
         let qparams =
-            quant::quantize_checkpoint(&params, &tier.quantized_params, &cell.spec);
+            quant::quantize_checkpoint_cow(&params, &tier.quantized_params, &cell.spec);
 
         let ev = Evaluator::new(self.rt, self.manifest, tier)?;
         let r = ev.run(&qparams, self.corpus, cell.suite, &self.eval_cfg)?;

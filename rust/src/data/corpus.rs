@@ -193,16 +193,24 @@ impl Corpus {
 
     /// Pad/trim a sequence to `seq` and produce its all-real-tokens mask.
     pub fn pad_to_seq(&self, toks: &[i32]) -> (Vec<i32>, Vec<f32>) {
-        let mut t = toks.to_vec();
-        t.truncate(self.cfg.seq);
-        let real = t.len();
-        t.resize(self.cfg.seq, PAD);
-        let mut mask = vec![0.0f32; self.cfg.seq];
-        for m in mask.iter_mut().take(real).skip(1) {
-            *m = 1.0; // position 0 (BOS) is never a target
-        }
-        (t, mask)
+        pad_score_row(toks, self.cfg.seq)
     }
+}
+
+/// The perplexity row-shaping rule, shared by the corpus and the serving
+/// layer (which pads to the addressed tier's `seq`): head-truncate to
+/// `seq`, pad with [`PAD`], mask every real token as a target except
+/// position 0 (BOS is never a target).
+pub fn pad_score_row(toks: &[i32], seq: usize) -> (Vec<i32>, Vec<f32>) {
+    let mut t = toks.to_vec();
+    t.truncate(seq);
+    let real = t.len();
+    t.resize(seq, PAD);
+    let mut mask = vec![0.0f32; seq];
+    for m in mask.iter_mut().take(real).skip(1) {
+        *m = 1.0;
+    }
+    (t, mask)
 }
 
 #[cfg(test)]

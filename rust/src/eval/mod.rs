@@ -73,12 +73,17 @@ impl<'rt> Evaluator<'rt> {
         Ok(Evaluator { rt, exe, tier: tier.clone() })
     }
 
-    /// Build the reusable parameter literals for a parameter set.
-    pub fn param_literals(&self, params: &[(String, Tensor)]) -> Result<Vec<xla::Literal>> {
+    /// Build the reusable parameter literals for a parameter set. Generic
+    /// over `Borrow<Tensor>` so borrowed (`Cow`) checkpoints from
+    /// [`crate::quant::quantize_checkpoint_cow`] avoid f32 copies.
+    pub fn param_literals<T: std::borrow::Borrow<Tensor>>(
+        &self,
+        params: &[(String, T)],
+    ) -> Result<Vec<xla::Literal>> {
         if params.len() != self.tier.params.len() {
             bail!("expected {} parameter tensors, got {}", self.tier.params.len(), params.len());
         }
-        params.iter().map(|(_, t)| lit_f32(t)).collect()
+        params.iter().map(|(_, t)| lit_f32(t.borrow())).collect()
     }
 
     /// Public scoring entry point used by the serving layer: rows must be
@@ -197,9 +202,9 @@ impl<'rt> Evaluator<'rt> {
     }
 
     /// Run a full suite for one parameter set.
-    pub fn run(
+    pub fn run<T: std::borrow::Borrow<Tensor>>(
         &self,
-        params: &[(String, Tensor)],
+        params: &[(String, T)],
         corpus: &Corpus,
         suite: EvalSuite,
         cfg: &EvalConfig,
@@ -223,7 +228,9 @@ impl<'rt> Evaluator<'rt> {
 
 /// Pad/trim a scoring row to the model sequence length, keeping the
 /// **tail** (the continuation must survive; early context is droppable).
-fn pad_row(toks: &[i32], mask: &[f32], seq: usize) -> (Vec<i32>, Vec<f32>) {
+/// Public because the serving layer shapes `choose` rows with the same
+/// rule.
+pub fn pad_row(toks: &[i32], mask: &[f32], seq: usize) -> (Vec<i32>, Vec<f32>) {
     let mut t: Vec<i32>;
     let mut m: Vec<f32>;
     if toks.len() > seq {

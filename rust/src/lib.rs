@@ -20,9 +20,9 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`util`] | from-scratch substrates: JSON, RNG, thread pool, CLI, property testing |
+//! | [`util`] | from-scratch substrates: JSON, RNG, thread pool + bounded queue, CLI, property testing |
 //! | [`tensor`] | dense f32 tensors + binary serialization |
-//! | [`quant`] | codebooks, block-wise quantization, packing, centering, proxy quantization |
+//! | [`quant`] | codebooks, block-wise quantization, packed k-bit residency, centering, proxy quantization |
 //! | [`gptq`] | one-shot GPTQ (Hessian/Cholesky sequential rounding) |
 //! | [`data`] | synthetic Zipf–Markov corpus + four zero-shot task generators |
 //! | [`models`] | model zoo: families, tiers, init (incl. outlier injection), checkpoints |
@@ -30,6 +30,7 @@
 //! | [`train`] | training driver over the AOT train-step executable |
 //! | [`eval`] | perplexity + zero-shot evaluation harness |
 //! | [`coordinator`] | sweep grid, scheduler, worker pool, results store |
+//! | [`server`] | packed-model registry + concurrent micro-batched JSON-lines serving |
 //! | [`scaling`] | scaling curves, Pareto frontiers, bit-level optimality, correlations |
 //! | [`report`] | ASCII figures and CSV emission for every paper table/figure |
 //! | [`bench_support`] | shared harness for the `benches/` reproduction binaries |

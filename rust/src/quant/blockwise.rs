@@ -11,26 +11,38 @@
 //! both avoid the per-value argmin of the naive formulation. The sweep
 //! coordinator additionally parallelizes across parameter tensors.
 
-use super::codebook::Codebook;
+use super::codebook::{Codebook, DataType};
 use super::spec::QuantSpec;
+
+/// The codebook-defining subset of a [`QuantSpec`]: data type, bit width,
+/// and exponent split. Block size, centering, and proxy settings do not
+/// change the codebook, so they are deliberately absent.
+type CodebookKey = (DataType, usize, Option<usize>);
 
 /// Process-wide codebook cache: specs are reused across thousands of
 /// sweep cells and tensors, and quantile construction sorts a 64k sample —
 /// rebuilding per tensor cost ~25% of quantize() (§Perf L3 step 6).
+/// Keyed on the full [`CodebookKey`] so new dtypes can never silently
+/// collide (the old key truncated the dtype to its first letter).
 fn cached_codebook(spec: &QuantSpec) -> Codebook {
     use std::collections::HashMap;
     use std::sync::Mutex;
-    static CACHE: Mutex<Option<HashMap<(u8, u8, u8), Codebook>>> = Mutex::new(None);
-    let key = (
-        spec.dtype.name().as_bytes()[0],
-        spec.bits as u8,
-        spec.exponent_bits.map(|e| e as u8 + 1).unwrap_or(0),
-    );
-    let mut guard = CACHE.lock().unwrap();
-    let map = guard.get_or_insert_with(HashMap::new);
-    map.entry(key)
-        .or_insert_with(|| spec.codebook().expect("invalid quant spec"))
-        .clone()
+    static CACHE: Mutex<Option<HashMap<CodebookKey, Codebook>>> = Mutex::new(None);
+    let key: CodebookKey = (spec.dtype, spec.bits, spec.exponent_bits);
+    if let Some(hit) = CACHE.lock().unwrap().as_ref().and_then(|m| m.get(&key).cloned()) {
+        return hit;
+    }
+    // Build outside the lock: a panic on an invalid spec (callers validate
+    // at their boundaries) must not poison the process-wide cache, and
+    // quantile construction sorts a 64k sample — no reason to serialize it.
+    let cb = spec.codebook().expect("invalid quant spec");
+    CACHE
+        .lock()
+        .unwrap()
+        .get_or_insert_with(HashMap::new)
+        .entry(key)
+        .or_insert_with(|| cb.clone());
+    cb
 }
 
 /// A quantized tensor in the paper's flat-block layout.
@@ -56,8 +68,7 @@ pub fn quantize(data: &[f32], spec: &QuantSpec) -> QuantizedTensor {
     let codebook = cached_codebook(spec);
     // Int codebooks are uniform grids: `m` levels per sign, value i maps
     // to (i - m) / m. Enables the arithmetic fast path below.
-    let int_levels = (spec.dtype == crate::quant::codebook::DataType::Int)
-        .then(|| (1i32 << (spec.bits - 1)) - 1);
+    let int_levels = (spec.dtype == DataType::Int).then(|| (1i32 << (spec.bits - 1)) - 1);
     let block = spec.block.unwrap_or(data.len().max(1));
     let nblocks = data.len().div_ceil(block);
     let mut idx = vec![0u8; data.len()];
@@ -104,6 +115,13 @@ pub fn quantize(data: &[f32], spec: &QuantSpec) -> QuantizedTensor {
     }
 
     QuantizedTensor { idx, absmax, means, block, codebook, bits: spec.bits }
+}
+
+impl QuantizedTensor {
+    /// Convert to the packed k-bit residency form (`quant::packing`).
+    pub fn pack(&self) -> anyhow::Result<super::packing::PackedTensor> {
+        super::packing::PackedTensor::from_quantized(self)
+    }
 }
 
 /// Dequantize into `out` (must have the original length).
@@ -279,6 +297,24 @@ mod tests {
             prop_assert!(q.idx.iter().all(|&i| (i as usize) < n), "index out of range");
             Ok(())
         });
+    }
+
+    #[test]
+    fn codebook_cache_distinguishes_specs() {
+        // Same bits, different dtype / exponent split must yield distinct
+        // codebooks out of the process-wide cache.
+        let fp_e2 = QuantSpec::new(DataType::Fp, 4, Some(64)).with_exponent_bits(2);
+        let fp_e3 = QuantSpec::new(DataType::Fp, 4, Some(64)).with_exponent_bits(3);
+        let int4 = QuantSpec::new(DataType::Int, 4, Some(64));
+        let data = randn(256, 9, 0.1);
+        let a = quantize(&data, &fp_e2);
+        let b = quantize(&data, &fp_e3);
+        let c = quantize(&data, &int4);
+        assert_ne!(a.codebook.values(), b.codebook.values(), "exponent split ignored");
+        assert_ne!(a.codebook.values(), c.codebook.values(), "dtype ignored");
+        // And the cache is stable: same spec twice -> identical values.
+        let a2 = quantize(&data, &fp_e2);
+        assert_eq!(a.codebook.values(), a2.codebook.values());
     }
 
     #[test]

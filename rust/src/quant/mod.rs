@@ -12,7 +12,10 @@
 //!
 //! [`packing`] provides the storage-layer bit packing used by the fused
 //! kernel path and the bits-accounting ([`bitcost`]) that the scaling-law
-//! x-axis ("total model bits") is built from.
+//! x-axis ("total model bits") is built from. Its [`packing::PackedTensor`]
+//! is the k-bit **residency** format ([`PackedParam`] lifts it to whole
+//! checkpoint tensors) that the serving stack keeps resident instead of
+//! f32 weight copies.
 
 pub mod bitcost;
 pub mod blockwise;
@@ -25,7 +28,12 @@ pub mod spec;
 pub use bitcost::bits_per_param;
 pub use blockwise::{dequantize, quantize, QuantizedTensor};
 pub use codebook::{Codebook, DataType};
+pub use packing::PackedTensor;
 pub use spec::QuantSpec;
+
+use std::borrow::Cow;
+
+use anyhow::Result;
 
 use crate::tensor::Tensor;
 
@@ -59,11 +67,31 @@ pub fn quantize_checkpoint(
     quantized_names: &[String],
     spec: &QuantSpec,
 ) -> Vec<(String, Tensor)> {
+    quantize_checkpoint_cow(params, quantized_names, spec)
+        .into_iter()
+        .map(|(name, t)| (name, t.into_owned()))
+        .collect()
+}
+
+/// Copy-avoiding variant of [`quantize_checkpoint`]: pass-through tensors
+/// (embeddings, LayerNorm — the bulk of small-tier checkpoints) are
+/// borrowed instead of cloned, so the sweep hot path never holds a second
+/// f32 copy of unquantized weights. The evaluator accepts any
+/// `Borrow<Tensor>`, so the result feeds [`crate::eval::Evaluator::run`]
+/// directly.
+pub fn quantize_checkpoint_cow<'p>(
+    params: &'p [(String, Tensor)],
+    quantized_names: &[String],
+    spec: &QuantSpec,
+) -> Vec<(String, Cow<'p, Tensor>)> {
     if spec.is_baseline() {
-        return params.to_vec();
+        return params.iter().map(|(n, t)| (n.clone(), Cow::Borrowed(t))).collect();
     }
     if spec.proxy_outlier_pct.is_some() {
-        return proxy::quantize_checkpoint_proxy(params, quantized_names, spec);
+        return proxy::quantize_checkpoint_proxy(params, quantized_names, spec)
+            .into_iter()
+            .map(|(n, t)| (n, Cow::Owned(t)))
+            .collect();
     }
     params
         .iter()
@@ -72,12 +100,69 @@ pub fn quantize_checkpoint(
                 // Stacked per-layer tensors (L, r, c): each layer's matrix
                 // is quantized independently, like the paper treats each
                 // linear layer separately.
-                (name.clone(), simulate_stacked(t, spec))
+                (name.clone(), Cow::Owned(simulate_stacked(t, spec)))
             } else {
-                (name.clone(), t.clone())
+                (name.clone(), Cow::Borrowed(t))
             }
         })
         .collect()
+}
+
+/// A checkpoint tensor in packed k-bit residency form. Stacked `(L, r, c)`
+/// tensors pack each leading-axis slice independently, mirroring
+/// [`simulate_stacked`]'s per-layer treatment, so the dequantized weights
+/// are bit-identical to the simulated-quantization evaluation path.
+#[derive(Debug, Clone)]
+pub struct PackedParam {
+    pub shape: Vec<usize>,
+    pub slices: Vec<PackedTensor>,
+}
+
+impl PackedParam {
+    /// Quantize a tensor under `spec` straight into packed residency.
+    pub fn quantize(t: &Tensor, spec: &QuantSpec) -> Result<PackedParam> {
+        let slices = if t.shape().len() == 3 {
+            let l = t.shape()[0];
+            let per = t.len() / l.max(1);
+            (0..l)
+                .map(|li| PackedTensor::quantize(&t.data()[li * per..(li + 1) * per], spec))
+                .collect::<Result<Vec<_>>>()?
+        } else {
+            vec![PackedTensor::quantize(t.data(), spec)?]
+        };
+        Ok(PackedParam { shape: t.shape().to_vec(), slices })
+    }
+
+    /// Total element count across slices.
+    pub fn len(&self) -> usize {
+        self.slices.iter().map(|s| s.n).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Streaming dequantize of the whole tensor into `out` (length must
+    /// equal [`PackedParam::len`]); slices land in leading-axis order.
+    pub fn dequantize_into(&self, out: &mut [f32]) -> Result<()> {
+        anyhow::ensure!(
+            out.len() == self.len(),
+            "dequantize_into: buffer {} != packed elements {}",
+            out.len(),
+            self.len()
+        );
+        let mut off = 0;
+        for s in &self.slices {
+            s.dequantize_into(&mut out[off..off + s.n])?;
+            off += s.n;
+        }
+        Ok(())
+    }
+
+    /// Host-resident bytes: packed indices + per-block constants.
+    pub fn resident_bytes(&self) -> usize {
+        self.slices.iter().map(|s| s.resident_bytes()).sum()
+    }
 }
 
 /// Quantize each leading-axis slice of a stacked (L, ...) tensor
@@ -137,6 +222,38 @@ mod tests {
         let out = quantize_checkpoint(&params, &["qkv".to_string()], &spec);
         assert_eq!(out[0].1, params[0].1, "embed must pass through");
         assert!(out[1].1.max_abs_diff(&params[1].1) > 0.0, "qkv must change");
+    }
+
+    #[test]
+    fn packed_param_matches_simulated_path() {
+        // The serving residency format must dequantize bit-identically to
+        // the sweep's simulate_stacked path, including stacked tensors.
+        for shape in [vec![64, 24], vec![3, 16, 24]] {
+            let t = randn(shape, 7);
+            let spec = QuantSpec::new(DataType::Fp, 4, Some(64));
+            let sim = simulate_stacked(&t, &spec);
+            let p = PackedParam::quantize(&t, &spec).unwrap();
+            assert_eq!(p.len(), t.len());
+            let mut out = vec![0.0f32; t.len()];
+            p.dequantize_into(&mut out).unwrap();
+            assert_eq!(out, sim.data(), "shape {:?}", t.shape());
+            assert!(p.resident_bytes() < t.len() * 4, "packed not smaller than f32");
+        }
+    }
+
+    #[test]
+    fn cow_checkpoint_borrows_passthrough_tensors() {
+        let params = vec![
+            ("embed".to_string(), randn(vec![16, 8], 11)),
+            ("qkv".to_string(), randn(vec![2, 8, 24], 12)),
+        ];
+        let spec = QuantSpec::new(DataType::Int, 4, Some(16));
+        let out = quantize_checkpoint_cow(&params, &["qkv".to_string()], &spec);
+        assert!(matches!(out[0].1, std::borrow::Cow::Borrowed(_)), "embed must borrow");
+        assert!(matches!(out[1].1, std::borrow::Cow::Owned(_)), "qkv must own");
+        // Baseline borrows everything.
+        let base = quantize_checkpoint_cow(&params, &["qkv".to_string()], &QuantSpec::baseline16());
+        assert!(base.iter().all(|(_, t)| matches!(t, std::borrow::Cow::Borrowed(_))));
     }
 
     #[test]

@@ -1,12 +1,24 @@
-//! k-bit index packing: the storage wire format.
+//! k-bit index packing: the storage wire format and residency layer.
 //!
 //! The scaling-law sweep uses simulated quantization (indices stay
-//! unpacked), but the *bits on the x-axis* and the fused-kernel latency
-//! path are about real storage: this module packs k-bit codebook indices
+//! unpacked), but the *bits on the x-axis* and the serving/latency paths
+//! are about real storage: this module packs k-bit codebook indices
 //! (3 ≤ k ≤ 8) into a dense little-endian `u32` bitstream and back, plus
 //! the two-nibbles-per-byte layout the `packed4` Pallas kernel consumes.
+//!
+//! [`PackedTensor`] is the first-class **residency format** built on that
+//! bitstream: a quantized tensor held as packed indices plus per-block
+//! absmax (and means, when centering is on). It converts to/from
+//! [`QuantizedTensor`] losslessly, and [`PackedTensor::dequantize_into`]
+//! streams f32 weights straight out of the packed words into a
+//! caller-owned scratch buffer — the serving layer never materializes an
+//! unpacked `Vec<u8>` index copy or keeps duplicate f32 weights alive.
 
 use anyhow::{bail, Result};
+
+use super::blockwise::QuantizedTensor;
+use super::codebook::Codebook;
+use super::spec::QuantSpec;
 
 /// Densely pack `k`-bit values into a `u32` bitstream (little-endian bit
 /// order within and across words).
@@ -100,6 +112,116 @@ pub fn packed_bytes(n: usize, k: usize) -> usize {
     (n * k).div_ceil(32) * 4
 }
 
+/// A quantized tensor in packed k-bit residency form — what a server keeps
+/// resident instead of unpacked `u8` indices or dequantized f32 weights.
+///
+/// Layout mirrors [`QuantizedTensor`] block-for-block; only the index
+/// storage differs (dense [`pack_bits`] stream vs one byte per value), so
+/// conversion in either direction is exact.
+#[derive(Debug, Clone)]
+pub struct PackedTensor {
+    /// k-bit indices, densely packed little-endian into `u32` words.
+    pub packed: Vec<u32>,
+    /// Logical element count of the packed stream.
+    pub n: usize,
+    /// One absmax per block.
+    pub absmax: Vec<f32>,
+    /// Per-block means when distribution centering is enabled (App. B).
+    pub means: Option<Vec<f32>>,
+    pub block: usize,
+    pub codebook: Codebook,
+    pub bits: usize,
+}
+
+impl PackedTensor {
+    /// Quantize a slice under `spec` directly into packed residency form.
+    /// The intermediate unpacked index vector is dropped before returning.
+    pub fn quantize(data: &[f32], spec: &QuantSpec) -> Result<PackedTensor> {
+        if spec.is_baseline() {
+            bail!("baseline (>=16-bit) specs have no packed representation");
+        }
+        PackedTensor::from_quantized(&super::blockwise::quantize(data, spec))
+    }
+
+    /// Pack an unpacked [`QuantizedTensor`].
+    pub fn from_quantized(q: &QuantizedTensor) -> Result<PackedTensor> {
+        Ok(PackedTensor {
+            packed: pack_bits(&q.idx, q.bits)?,
+            n: q.idx.len(),
+            absmax: q.absmax.clone(),
+            means: q.means.clone(),
+            block: q.block,
+            codebook: q.codebook.clone(),
+            bits: q.bits,
+        })
+    }
+
+    /// Inverse of [`PackedTensor::from_quantized`]; exact.
+    pub fn unpack(&self) -> Result<QuantizedTensor> {
+        Ok(QuantizedTensor {
+            idx: unpack_bits(&self.packed, self.bits, self.n)?,
+            absmax: self.absmax.clone(),
+            means: self.means.clone(),
+            block: self.block,
+            codebook: self.codebook.clone(),
+            bits: self.bits,
+        })
+    }
+
+    /// Streaming dequantize: decode k-bit indices word-by-word straight
+    /// into `out` (length must equal `self.n`) without materializing the
+    /// unpacked index vector. `out` is typically a reusable scratch buffer
+    /// owned by the caller.
+    pub fn dequantize_into(&self, out: &mut [f32]) -> Result<()> {
+        if out.len() != self.n {
+            bail!("dequantize_into: buffer len {} != element count {}", out.len(), self.n);
+        }
+        if self.packed.len() * 32 < self.n * self.bits {
+            bail!(
+                "packed stream too short: {} words for {} x {}-bit",
+                self.packed.len(),
+                self.n,
+                self.bits
+            );
+        }
+        let values = self.codebook.values();
+        let k = self.bits;
+        let mask = if k >= 8 { 0xFFu32 } else { (1u32 << k) - 1 };
+        let mut bitpos = 0usize;
+        for b in 0..self.absmax.len() {
+            let lo = b * self.block;
+            let hi = (lo + self.block).min(self.n);
+            let amax = self.absmax[b];
+            let mean = self.means.as_ref().map_or(0.0, |m| m[b]);
+            for o in out[lo..hi].iter_mut() {
+                let word = bitpos / 32;
+                let off = bitpos % 32;
+                let mut v = self.packed[word] >> off;
+                if off + k > 32 {
+                    v |= self.packed[word + 1] << (32 - off);
+                }
+                *o = values[(v & mask) as usize] * amax + mean;
+                bitpos += k;
+            }
+        }
+        Ok(())
+    }
+
+    /// Bytes of the packed index stream alone (word granularity).
+    pub fn packed_index_bytes(&self) -> usize {
+        self.packed.len() * 4
+    }
+
+    /// Total resident bytes: packed indices + per-block constants. This is
+    /// the quantity `{"op":"info"}` reports and the serve bench compares
+    /// against the f32 footprint.
+    pub fn resident_bytes(&self) -> usize {
+        self.packed_index_bytes()
+            + self.absmax.len() * 4
+            + self.means.as_ref().map_or(0, |m| m.len() * 4)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,5 +279,61 @@ mod tests {
         assert_eq!(packed_bytes(64, 4), 32);
         assert_eq!(packed_bytes(64, 3), 24);
         assert_eq!(packed_bytes(1, 3), 4); // word granularity
+    }
+
+    #[test]
+    fn prop_packed_tensor_roundtrip_exact() {
+        use crate::quant::blockwise::{dequantize, quantize};
+        use crate::quant::codebook::DataType;
+        use crate::quant::spec::QuantSpec;
+        use crate::util::proptest::gen;
+
+        // Exhaustive (bits 3..=8) x (block 32|64|4096|None) grid, two
+        // random lengths per combination so ragged tail blocks (n not a
+        // multiple of the block) and sub-block tensors are both hit.
+        const BLOCKS: [Option<usize>; 4] = [Some(32), Some(64), Some(4096), None];
+        check("packed-tensor-roundtrip", 48, |rng, case| {
+            let bits = 3 + case % 6;
+            let block = BLOCKS[(case / 6) % 4];
+            let data = gen::weights(rng, 9000);
+            let n = data.len();
+            let mut spec = QuantSpec::new(DataType::ALL[rng.below(4)], bits, block);
+            if rng.below(2) == 0 {
+                spec = spec.with_centering();
+            }
+            let q = quantize(&data, &spec);
+            let p = q.pack().map_err(|e| format!("pack: {e:#}"))?;
+            let back = p.unpack().map_err(|e| format!("unpack: {e:#}"))?;
+            prop_assert!(
+                back.idx == q.idx && back.absmax == q.absmax && back.means == q.means,
+                "bits={bits} block={block:?} n={n}: pack→unpack not exact"
+            );
+            let mut d_ref = vec![0.0f32; n];
+            dequantize(&q, &mut d_ref);
+            let mut d_packed = vec![0.0f32; n];
+            p.dequantize_into(&mut d_packed).map_err(|e| format!("dequantize_into: {e:#}"))?;
+            prop_assert!(
+                d_ref == d_packed,
+                "bits={bits} block={block:?} n={n}: streaming dequant != reference"
+            );
+            prop_assert!(
+                p.packed_index_bytes() == packed_bytes(n, bits),
+                "bits={bits} n={n}: packed byte accounting off"
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn packed_tensor_rejects_baseline_and_bad_buffers() {
+        use crate::quant::blockwise::quantize;
+        use crate::quant::codebook::DataType;
+        use crate::quant::spec::QuantSpec;
+
+        assert!(PackedTensor::quantize(&[1.0, 2.0], &QuantSpec::baseline16()).is_err());
+        let spec = QuantSpec::new(DataType::Int, 4, Some(64));
+        let p = PackedTensor::from_quantized(&quantize(&[1.0f32; 100], &spec)).unwrap();
+        let mut short = vec![0.0f32; 99];
+        assert!(p.dequantize_into(&mut short).is_err());
     }
 }

@@ -114,9 +114,29 @@ fn dims_i64(shape: &[usize]) -> Vec<i64> {
 
 /// f32 tensor → literal (reshaped to the tensor's shape).
 pub fn lit_f32(t: &Tensor) -> Result<xla::Literal> {
-    let flat = xla::Literal::vec1(t.data());
-    Ok(flat.reshape(&dims_i64(t.shape()))?)
+    lit_f32_slice(t.shape(), t.data())
 }
+
+/// f32 slice + shape → literal, with no intermediate `Tensor`. The serving
+/// path streams packed weights through one reusable scratch buffer and
+/// builds each parameter literal straight from it.
+pub fn lit_f32_slice(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    anyhow::ensure!(shape.iter().product::<usize>() == data.len(), "shape/data mismatch");
+    let flat = xla::Literal::vec1(data);
+    Ok(flat.reshape(&dims_i64(shape))?)
+}
+
+/// The resident parameter literals of one loaded model, shareable across
+/// serving threads.
+///
+/// SAFETY: same argument as [`Executable`] — the literals are immutable
+/// after construction, execution only reads them, and the PJRT CPU client
+/// is internally synchronized; the `xla` crate just doesn't mark the FFI
+/// handles Send/Sync.
+pub struct ParamLiterals(pub Vec<xla::Literal>);
+
+unsafe impl Send for ParamLiterals {}
+unsafe impl Sync for ParamLiterals {}
 
 /// i32 data → literal of `shape`.
 pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
@@ -184,5 +204,20 @@ mod tests {
     fn scalar_literal() {
         let l = lit_scalar(2.5);
         assert_eq!(l.to_vec::<f32>().unwrap(), vec![2.5]);
+    }
+
+    #[test]
+    fn slice_literal_matches_tensor_literal() {
+        let t = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let a = lit_f32(&t).unwrap();
+        let b = lit_f32_slice(&[2, 2], &[1., 2., 3., 4.]).unwrap();
+        assert_eq!(a.to_vec::<f32>().unwrap(), b.to_vec::<f32>().unwrap());
+        assert!(lit_f32_slice(&[2, 2], &[1., 2., 3.]).is_err());
+    }
+
+    #[test]
+    fn param_literals_are_shareable() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<ParamLiterals>();
     }
 }

@@ -1,0 +1,157 @@
+//! Cross-client micro-batching.
+//!
+//! The AOT forward graph always executes a full `batch_eval × seq` batch;
+//! a single-row request wastes `(B-1)/B` of every forward pass. The
+//! [`Batcher`] closes that gap: connection threads submit scoring rows
+//! into a shared [`BoundedQueue`] and block on a response channel; one
+//! dispatcher thread drains the queue, coalescing rows **across clients**
+//! up to the model's batch size within a latency-bound flush window, then
+//! runs a single forward execution per (model, batch) group and fans the
+//! per-row results back out.
+//!
+//! Requests for different resident models can land in the same drain; the
+//! dispatcher groups by registry key and executes the groups back to
+//! back, so a multi-model registry never mixes rows across executables.
+//!
+//! [`BoundedQueue`]: crate::util::pool::BoundedQueue
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::registry::ModelHandle;
+use crate::util::pool::BoundedQueue;
+
+/// One client's scoring work: rows to score against a resident model,
+/// plus the channel its connection thread is blocked on.
+struct ScoreJob<'rt> {
+    handle: Arc<ModelHandle<'rt>>,
+    rows: Vec<(Vec<i32>, Vec<f32>)>,
+    tx: mpsc::Sender<Result<Vec<(f64, f64)>>>,
+}
+
+/// The micro-batching queue + dispatcher state.
+pub struct Batcher<'rt> {
+    queue: BoundedQueue<ScoreJob<'rt>>,
+    /// How long the dispatcher waits for co-batchable rows once it holds
+    /// work. Zero disables coalescing beyond what is already queued.
+    pub flush: Duration,
+}
+
+impl<'rt> Batcher<'rt> {
+    pub fn new(flush: Duration) -> Self {
+        // Queue capacity bounds how far clients can run ahead of the
+        // dispatcher; past it, submitters block (backpressure).
+        Batcher { queue: BoundedQueue::new(256), flush }
+    }
+
+    /// Submit rows and block until the dispatcher returns their scores.
+    /// Called from connection worker threads.
+    pub fn submit(
+        &self,
+        handle: Arc<ModelHandle<'rt>>,
+        rows: Vec<(Vec<i32>, Vec<f32>)>,
+    ) -> Result<Vec<(f64, f64)>> {
+        let (tx, rx) = mpsc::channel();
+        if !self.queue.push(ScoreJob { handle, rows, tx }) {
+            anyhow::bail!("server is shutting down");
+        }
+        rx.recv().context("batch dispatcher exited")?
+    }
+
+    /// Dispatcher loop: runs until [`Batcher::shutdown`] closes the queue
+    /// and the backlog drains. Intended for one dedicated thread.
+    pub fn run(&self) {
+        // If the dispatcher dies (a panic unwinding out of this loop),
+        // submitters must not block forever on their response channels:
+        // close the queue against new work and drop the queued jobs so
+        // their senders disconnect and every pending `submit` errors.
+        struct PanicGuard<'g, 'rt>(&'g Batcher<'rt>);
+        impl Drop for PanicGuard<'_, '_> {
+            fn drop(&mut self) {
+                if std::thread::panicking() {
+                    self.0.queue.close();
+                    while self.0.queue.pop_timeout(Duration::ZERO).is_some() {}
+                }
+            }
+        }
+        let _guard = PanicGuard(self);
+
+        // A job popped past the batch cap is carried into the next round
+        // instead of forcing an extra mostly-padding forward execution.
+        let mut carry: Option<ScoreJob<'rt>> = None;
+        loop {
+            let Some(first) = carry.take().or_else(|| self.queue.pop()) else {
+                break;
+            };
+            // Greedily coalesce more jobs up to the first model's batch
+            // size, waiting at most `flush` past the first arrival.
+            let cap = first.handle.tier.batch_eval.max(1);
+            let deadline = Instant::now() + self.flush;
+            let mut nrows = first.rows.len();
+            let mut batch = vec![first];
+            while nrows < cap {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match self.queue.pop_timeout(deadline - now) {
+                    Some(job) => {
+                        if nrows + job.rows.len() > cap {
+                            carry = Some(job);
+                            break;
+                        }
+                        nrows += job.rows.len();
+                        batch.push(job);
+                    }
+                    None => break,
+                }
+            }
+            // Group by resident model (arrival order preserved) and run
+            // one forward execution per group. Same variant == same Arc
+            // from the registry, so pointer identity is the group key.
+            while !batch.is_empty() {
+                let lead = batch[0].handle.clone();
+                let (group, rest): (Vec<ScoreJob>, Vec<ScoreJob>) = batch
+                    .into_iter()
+                    .partition(|j| Arc::ptr_eq(&j.handle, &lead));
+                batch = rest;
+                execute_group(group);
+            }
+        }
+    }
+
+    /// Close the queue: pending jobs still drain, new submissions fail.
+    pub fn shutdown(&self) {
+        self.queue.close();
+    }
+}
+
+/// Run one coalesced forward for jobs that share a model and fan results
+/// back to each submitter. Channel sends ignore disconnects (a client may
+/// have hung up mid-flight; that is its problem, not the dispatcher's).
+fn execute_group(mut jobs: Vec<ScoreJob<'_>>) {
+    let handle = jobs[0].handle.clone();
+    // Move the rows out of the jobs (remembering each job's share) rather
+    // than cloning seq-length token/mask vectors on the hot path.
+    let lens: Vec<usize> = jobs.iter().map(|j| j.rows.len()).collect();
+    let rows: Vec<(Vec<i32>, Vec<f32>)> =
+        jobs.iter_mut().flat_map(|j| j.rows.drain(..)).collect();
+    match handle.score_rows(&rows) {
+        Ok(scored) => {
+            let mut off = 0;
+            for (job, n) in jobs.into_iter().zip(lens) {
+                let _ = job.tx.send(Ok(scored[off..off + n].to_vec()));
+                off += n;
+            }
+        }
+        Err(e) => {
+            let msg = format!("batched execution failed: {e:#}");
+            for job in jobs {
+                let _ = job.tx.send(Err(anyhow!("{msg}")));
+            }
+        }
+    }
+}

@@ -1,145 +1,317 @@
-//! Inference scoring server: quantized models behind a line-oriented
-//! JSON-over-TCP protocol.
+//! Inference scoring server: packed quantized models behind a
+//! line-oriented JSON-over-TCP protocol.
 //!
-//! The paper's motivation is cheap small-batch *inference*; this module
-//! is the deployment face of that claim: load a checkpoint, quantize it
-//! once under a [`QuantSpec`] (4-bit fp/b64 by default, the paper's
-//! recommendation), keep the parameter literals resident, and serve
-//! scoring requests through the AOT forward executable — Python-free,
-//! one process, warm PJRT state.
+//! The paper's motivation is cheap small-batch *inference*; this module is
+//! the deployment face of that claim: quantize checkpoints once under a
+//! [`QuantSpec`] (4-bit fp/b64 by default, the paper's recommendation),
+//! keep them resident in **packed k-bit form**, and serve scoring
+//! requests from many concurrent clients through the AOT forward
+//! executable — Python-free, one process, warm PJRT state.
 //!
-//! Protocol (one JSON object per line, response per line):
+//! # Serving architecture
+//!
+//! Three layers, smallest state on top:
+//!
+//! * [`registry::ModelRegistry`] — the shared residency layer. Hosts any
+//!   number of (family × tier × spec) variants in one process; each
+//!   [`registry::ModelHandle`] is immutable and `Arc`-shared, holding the
+//!   compiled evaluator, the resident PJRT parameter literals, and the
+//!   packed k-bit weights (`quant::packing::PackedTensor`) that are the
+//!   only host-side weight copy — no unpacked index vectors, no duplicate
+//!   f32 tensors.
+//! * [`batch::Batcher`] — cross-client micro-batching. Connection threads
+//!   submit scoring rows into a bounded queue; one dispatcher coalesces
+//!   rows from concurrent clients up to the tier's `batch_eval` within a
+//!   latency-bound flush window and runs a single forward per group.
+//! * [`Connection`] — thin per-client state: a current-model key and a
+//!   request counter. [`serve_listener`] runs a fixed worker pool
+//!   (`util::pool::BoundedQueue` of accepted sockets), so one slow or
+//!   broken client never blocks the accept loop, and per-connection I/O
+//!   errors are logged without tearing the server down.
+//!
+//! # Protocol (one JSON object per line, response per line)
 //!
 //! ```text
 //! → {"op":"score", "tokens":[1,5,9,...]}               sequence NLL + ppl
 //! → {"op":"choose", "context":[...], "choices":[[..],[..]]}
 //!                                       length-normalized best choice
-//! → {"op":"info"}                       model + quantization metadata
+//! → {"op":"info"}                       model + residency metadata
+//! → {"op":"models"}                     all resident variants
+//! → {"op":"load", "family":"gpt2like", "tier":"t1", "bits":4,
+//!    "dtype":"fp", "block":64}          make a variant resident
 //! ```
 //!
-//! A [`Session`] owns the request loop and is transport-agnostic (tested
-//! in-memory; `serve_tcp` binds it to a listener; the CLI's `serve`
-//! subcommand wires stdin/stdout for shell use).
+//! `score`/`choose`/`info` accept an optional `"model"` field (a registry
+//! key from `models`/`load`) to route per request; otherwise the
+//! connection's current model (set by `load`) or the registry default is
+//! used.
+//!
+//! [`Session`] wraps a single-model registry behind the original
+//! in-memory API (tested without sockets; the CLI's `serve` subcommand
+//! still wires stdin/stdout through it for shell use).
+
+pub mod batch;
+pub mod registry;
+
+pub use batch::Batcher;
+pub use registry::{ModelHandle, ModelRegistry, ModelSpecReq, ParamLoader};
 
 use std::io::{BufRead, Write};
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use crate::data::corpus::Corpus;
-use crate::eval::Evaluator;
 use crate::models::manifest::{Manifest, TierManifest};
-use crate::quant::{bits_per_param, quantize_checkpoint, QuantSpec};
+use crate::quant::{bits_per_param, DataType, QuantSpec};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
+use crate::util::pool;
 
-/// A ready-to-serve quantized model session.
-pub struct Session<'rt> {
-    ev: Evaluator<'rt>,
-    plits: Vec<xla::Literal>,
-    corpus: Corpus,
-    tier: TierManifest,
-    spec: QuantSpec,
-    model_key: String,
+/// Per-connection mutable state — everything that is *not* shared.
+#[derive(Default)]
+struct ConnCore {
+    /// Registry key selected by this connection's last `load` (requests
+    /// may still route per-request via `"model"`).
+    current: Option<String>,
     requests: u64,
 }
 
+/// A live client connection bound to a shared registry, optionally
+/// scoring through the micro-batcher.
+pub struct Connection<'a, 'rt> {
+    registry: &'a ModelRegistry<'rt>,
+    batcher: Option<&'a Batcher<'rt>>,
+    core: ConnCore,
+}
+
+impl<'a, 'rt> Connection<'a, 'rt> {
+    pub fn new(registry: &'a ModelRegistry<'rt>, batcher: Option<&'a Batcher<'rt>>) -> Self {
+        Connection { registry, batcher, core: ConnCore::default() }
+    }
+
+    /// Handle one request object; returns the response object.
+    pub fn handle(&mut self, req: &Json) -> Json {
+        handle_request(self.registry, self.batcher, &mut self.core, req)
+    }
+}
+
+/// A ready-to-serve single-model session — the original serving API,
+/// now a thin wrapper over a one-entry [`ModelRegistry`].
+pub struct Session<'rt> {
+    registry: ModelRegistry<'rt>,
+    core: ConnCore,
+}
+
 impl<'rt> Session<'rt> {
+    /// `_corpus` is kept for call-site compatibility; scoring rows are
+    /// padded tier-aware by the request handler, so the session itself
+    /// no longer consults the corpus.
     pub fn new(
         rt: &'rt Runtime,
         manifest: &Manifest,
         tier: &TierManifest,
         params: &[(String, Tensor)],
         spec: QuantSpec,
-        corpus: Corpus,
+        _corpus: Corpus,
         model_key: String,
     ) -> Result<Self> {
-        let q = quantize_checkpoint(params, &tier.quantized_params, &spec);
-        let ev = Evaluator::new(rt, manifest, tier)?;
-        let plits = ev.param_literals(&q)?;
-        Ok(Session { ev, plits, corpus, tier: tier.clone(), spec, model_key, requests: 0 })
+        let registry = ModelRegistry::new(
+            rt,
+            manifest,
+            Box::new(|family: &str, tier: &str| {
+                bail!("session has no checkpoint loader (cannot load {family}:{tier})")
+            }),
+        );
+        let handle = ModelHandle::new(rt, manifest, tier, params, spec, model_key)?;
+        registry.insert(handle);
+        Ok(Session { registry, core: ConnCore::default() })
     }
 
     /// Handle one request object; returns the response object.
     pub fn handle(&mut self, req: &Json) -> Json {
-        self.requests += 1;
-        match self.try_handle(req) {
-            Ok(resp) => resp,
-            Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
-        }
+        handle_request(&self.registry, None, &mut self.core, req)
     }
 
-    fn try_handle(&mut self, req: &Json) -> Result<Json> {
-        match req.get("op")?.as_str()? {
-            "info" => Ok(Json::obj(vec![
-                ("model", Json::str(&self.model_key)),
-                ("tier", Json::str(&self.tier.name)),
-                ("params", Json::num(self.tier.param_count as f64)),
-                ("quant", Json::str(self.spec.key())),
-                ("bits_per_param", Json::num(bits_per_param(&self.spec))),
-                ("requests", Json::num(self.requests as f64)),
-            ])),
-            "score" => {
-                let tokens = tokens_of(req.get("tokens")?)?;
-                if tokens.is_empty() {
-                    bail!("empty token list");
-                }
-                let (row, mask) = self.corpus.pad_to_seq(&tokens);
-                let scored = self.score_rows(&[(row, mask.clone())])?;
-                let (nll, hits) = scored[0];
-                let ntok = mask.iter().sum::<f32>() as f64;
-                Ok(Json::obj(vec![
-                    ("nll", Json::num(nll)),
-                    ("tokens_scored", Json::num(ntok)),
-                    ("ce", Json::num(nll / ntok.max(1.0))),
-                    ("ppl", Json::num((nll / ntok.max(1.0)).exp().min(1e6))),
-                    ("greedy_hits", Json::num(hits)),
-                ]))
-            }
-            "choose" => {
-                let context = tokens_of(req.get("context")?)?;
-                let choices: Vec<Vec<i32>> = req
-                    .get("choices")?
-                    .as_arr()?
-                    .iter()
-                    .map(tokens_of)
-                    .collect::<Result<_>>()?;
-                if choices.is_empty() {
-                    bail!("no choices given");
-                }
-                let ex = crate::data::tasks::Example { context, choices, answer: 0 };
-                let rows_raw = crate::data::tasks::scoring_rows(&ex);
-                let seq = self.tier.seq;
-                let mut rows = Vec::new();
-                let mut lens = Vec::new();
-                for (toks, mask, clen) in rows_raw {
-                    let (t, m) = fit_row(&toks, &mask, seq);
-                    rows.push((t, m));
-                    lens.push(clen.max(1));
-                }
-                let scored = self.score_rows(&rows)?;
-                let norm: Vec<f64> = scored
-                    .iter()
-                    .zip(&lens)
-                    .map(|((nll, _), &l)| -nll / l as f64)
-                    .collect();
-                let best = norm
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i)
-                    .unwrap();
-                Ok(Json::obj(vec![
-                    ("best", Json::num(best as f64)),
-                    ("scores", Json::arr_f64(&norm)),
-                ]))
-            }
-            op => bail!("unknown op {op:?} (info|score|choose)"),
-        }
+    /// The underlying registry (e.g. to preload more variants).
+    pub fn registry(&self) -> &ModelRegistry<'rt> {
+        &self.registry
     }
+}
 
-    fn score_rows(&self, rows: &[(Vec<i32>, Vec<f32>)]) -> Result<Vec<(f64, f64)>> {
-        self.ev.score_padded_rows(&self.plits, rows)
+// ---------------------------------------------------------------------------
+// Request handling
+// ---------------------------------------------------------------------------
+
+fn handle_request<'rt>(
+    registry: &ModelRegistry<'rt>,
+    batcher: Option<&Batcher<'rt>>,
+    core: &mut ConnCore,
+    req: &Json,
+) -> Json {
+    core.requests += 1;
+    match try_handle(registry, batcher, core, req) {
+        Ok(resp) => resp,
+        Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+    }
+}
+
+/// Resolve the model a request addresses: explicit `"model"` field, then
+/// the connection's current model, then the registry default.
+fn resolve<'rt>(
+    registry: &ModelRegistry<'rt>,
+    core: &ConnCore,
+    req: &Json,
+) -> Result<Arc<ModelHandle<'rt>>> {
+    let explicit = match req.opt("model") {
+        Some(v) => Some(v.as_str()?),
+        None => None,
+    };
+    registry.get(explicit.or(core.current.as_deref()))
+}
+
+fn score_via<'rt>(
+    batcher: Option<&Batcher<'rt>>,
+    handle: &Arc<ModelHandle<'rt>>,
+    rows: Vec<(Vec<i32>, Vec<f32>)>,
+) -> Result<Vec<(f64, f64)>> {
+    match batcher {
+        Some(b) => b.submit(handle.clone(), rows),
+        None => handle.score_rows(&rows),
+    }
+}
+
+fn try_handle<'rt>(
+    registry: &ModelRegistry<'rt>,
+    batcher: Option<&Batcher<'rt>>,
+    core: &mut ConnCore,
+    req: &Json,
+) -> Result<Json> {
+    match req.get("op")?.as_str()? {
+        "info" => {
+            let h = resolve(registry, core, req)?;
+            Ok(Json::obj(vec![
+                ("model", Json::str(&h.model_key)),
+                ("tier", Json::str(&h.tier.name)),
+                ("params", Json::num(h.tier.param_count as f64)),
+                ("quant", Json::str(h.spec.key())),
+                ("bits_per_param", Json::num(bits_per_param(&h.spec))),
+                ("requests", Json::num(core.requests as f64)),
+                // Residency accounting: packed host bytes vs what a
+                // dequantized f32 copy of the same tensors would cost,
+                // plus the paper's analytic total (bitcost).
+                ("resident_bytes", Json::num(h.resident_bytes() as f64)),
+                ("quantized_f32_bytes", Json::num(h.quantized_f32_bytes() as f64)),
+                ("total_bits", Json::num(h.ideal_total_bits())),
+                ("models", Json::num(registry.len() as f64)),
+                ("batched", Json::Bool(batcher.is_some())),
+            ]))
+        }
+        "models" => {
+            let entries: Vec<Json> = registry
+                .keys()
+                .into_iter()
+                .map(|k| {
+                    let h = registry.get(Some(k.as_str()))?;
+                    Ok(Json::obj(vec![
+                        ("key", Json::str(k)),
+                        ("tier", Json::str(&h.tier.name)),
+                        ("quant", Json::str(h.spec.key())),
+                        ("resident_bytes", Json::num(h.resident_bytes() as f64)),
+                    ]))
+                })
+                .collect::<Result<_>>()?;
+            Ok(Json::obj(vec![("models", Json::Arr(entries))]))
+        }
+        "load" => {
+            let family = req.get("family")?.as_str()?;
+            let tier = req.get("tier")?.as_str()?;
+            let bits = match req.opt("bits") {
+                Some(v) => v.as_usize()?,
+                None => 4,
+            };
+            let dtype = match req.opt("dtype") {
+                Some(v) => DataType::parse(v.as_str()?)?,
+                None => DataType::Fp,
+            };
+            let block = match req.opt("block") {
+                Some(v) => match v.as_usize()? {
+                    0 => None,
+                    b => Some(b),
+                },
+                None => Some(64),
+            };
+            let spec = registry::spec_from_parts(bits, dtype, block)?;
+            let h = registry.load(family, tier, spec)?;
+            core.current = Some(h.key());
+            Ok(Json::obj(vec![
+                ("model", Json::str(h.key())),
+                ("models", Json::num(registry.len() as f64)),
+                ("resident_bytes", Json::num(h.resident_bytes() as f64)),
+            ]))
+        }
+        "score" => {
+            let h = resolve(registry, core, req)?;
+            let tokens = tokens_of(req.get("tokens")?)?;
+            if tokens.is_empty() {
+                bail!("empty token list");
+            }
+            // Pad to the **addressed tier's** seq: a registry hosting
+            // tiers with different sequence lengths scores each against
+            // its own geometry.
+            let (row, mask) = crate::data::corpus::pad_score_row(&tokens, h.tier.seq);
+            let ntok = mask.iter().sum::<f32>() as f64;
+            let scored = score_via(batcher, &h, vec![(row, mask)])?;
+            let (nll, hits) = scored[0];
+            Ok(Json::obj(vec![
+                ("nll", Json::num(nll)),
+                ("tokens_scored", Json::num(ntok)),
+                ("ce", Json::num(nll / ntok.max(1.0))),
+                ("ppl", Json::num((nll / ntok.max(1.0)).exp().min(1e6))),
+                ("greedy_hits", Json::num(hits)),
+            ]))
+        }
+        "choose" => {
+            let h = resolve(registry, core, req)?;
+            let context = tokens_of(req.get("context")?)?;
+            let choices: Vec<Vec<i32>> = req
+                .get("choices")?
+                .as_arr()?
+                .iter()
+                .map(tokens_of)
+                .collect::<Result<_>>()?;
+            if choices.is_empty() {
+                bail!("no choices given");
+            }
+            let ex = crate::data::tasks::Example { context, choices, answer: 0 };
+            let rows_raw = crate::data::tasks::scoring_rows(&ex);
+            let seq = h.tier.seq;
+            let mut rows = Vec::new();
+            let mut lens = Vec::new();
+            for (toks, mask, clen) in rows_raw {
+                rows.push(crate::eval::pad_row(&toks, &mask, seq));
+                lens.push(clen.max(1));
+            }
+            let scored = score_via(batcher, &h, rows)?;
+            let norm: Vec<f64> = scored
+                .iter()
+                .zip(&lens)
+                .map(|((nll, _), &l)| -nll / l as f64)
+                .collect();
+            let best = norm
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap();
+            Ok(Json::obj(vec![
+                ("best", Json::num(best as f64)),
+                ("scores", Json::arr_f64(&norm)),
+            ]))
+        }
+        op => bail!("unknown op {op:?} (info|models|load|score|choose)"),
     }
 }
 
@@ -156,22 +328,13 @@ fn tokens_of(v: &Json) -> Result<Vec<i32>> {
         .collect()
 }
 
-fn fit_row(toks: &[i32], mask: &[f32], seq: usize) -> (Vec<i32>, Vec<f32>) {
-    if toks.len() > seq {
-        let cut = toks.len() - seq;
-        (toks[cut..].to_vec(), mask[cut..].to_vec())
-    } else {
-        let mut t = toks.to_vec();
-        let mut m = mask.to_vec();
-        t.resize(seq, crate::data::PAD);
-        m.resize(seq, 0.0);
-        (t, m)
-    }
-}
+// ---------------------------------------------------------------------------
+// Transports
+// ---------------------------------------------------------------------------
 
-/// Drive a session over any line-based transport until EOF.
-pub fn serve_lines<R: BufRead, W: Write>(
-    session: &mut Session<'_>,
+/// Pump one line-based transport through a request handler until EOF.
+fn pump<R: BufRead, W: Write>(
+    mut handle: impl FnMut(&Json) -> Json,
     reader: R,
     mut writer: W,
 ) -> Result<u64> {
@@ -182,7 +345,7 @@ pub fn serve_lines<R: BufRead, W: Write>(
             continue;
         }
         let resp = match Json::parse(&line) {
-            Ok(req) => session.handle(&req),
+            Ok(req) => handle(&req),
             Err(e) => Json::obj(vec![("error", Json::str(format!("bad request: {e:#}")))]),
         };
         writeln!(writer, "{}", resp.dump())?;
@@ -192,18 +355,149 @@ pub fn serve_lines<R: BufRead, W: Write>(
     Ok(served)
 }
 
-/// Bind a TCP listener and serve clients sequentially (the PJRT executable
-/// is shared; batching across clients is future work noted in DESIGN.md).
-pub fn serve_tcp(session: &mut Session<'_>, addr: &str) -> Result<()> {
-    let listener = std::net::TcpListener::bind(addr)
-        .with_context(|| format!("binding {addr}"))?;
-    log::info!("serving on {addr}");
-    for stream in listener.incoming() {
-        let stream = stream?;
-        let peer = stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
-        let reader = std::io::BufReader::new(stream.try_clone()?);
-        let n = serve_lines(session, reader, stream)?;
-        log::info!("client {peer}: {n} requests");
+/// Drive a single-model session over any line-based transport until EOF.
+pub fn serve_lines<R: BufRead, W: Write>(
+    session: &mut Session<'_>,
+    reader: R,
+    writer: W,
+) -> Result<u64> {
+    pump(|req| session.handle(req), reader, writer)
+}
+
+/// Serve a registry over stdin/stdout (the CLI's non-TCP mode; direct
+/// scoring, no batcher — there is only one client).
+pub fn serve_stdin(registry: &ModelRegistry<'_>) -> Result<u64> {
+    let mut conn = Connection::new(registry, None);
+    let stdin = std::io::stdin();
+    pump(|req| conn.handle(req), stdin.lock(), std::io::stdout())
+}
+
+/// Concurrency/batching knobs for the TCP server.
+pub struct ServeOpts {
+    /// Connection worker threads (each serves one client at a time).
+    pub workers: usize,
+    /// Micro-batch flush window; how long the dispatcher waits for
+    /// co-batchable rows from other clients once it holds work.
+    pub flush: Duration,
+    /// Cross-client micro-batching on/off (off = each worker executes
+    /// directly, the pre-registry behavior).
+    pub batching: bool,
+    /// Stop accepting after this many connections (tests and benches;
+    /// `None` = serve forever).
+    pub max_conns: Option<u64>,
+}
+
+impl Default for ServeOpts {
+    fn default() -> Self {
+        ServeOpts {
+            workers: pool::default_threads().min(8),
+            flush: Duration::from_millis(2),
+            batching: true,
+            max_conns: None,
+        }
     }
-    Ok(())
+}
+
+/// Bind a TCP listener and serve clients concurrently.
+pub fn serve_tcp(registry: &ModelRegistry<'_>, addr: &str, opts: &ServeOpts) -> Result<()> {
+    let listener =
+        std::net::TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    log::info!(
+        "serving {} model(s) on {addr} ({} workers, batching {})",
+        registry.len(),
+        opts.workers.max(1),
+        if opts.batching { "on" } else { "off" }
+    );
+    serve_listener(registry, listener, opts)
+}
+
+/// Serve an already-bound listener: a fixed worker pool consumes accepted
+/// sockets from a bounded queue while the accept loop stays free, and all
+/// workers score through one shared micro-batcher.
+///
+/// Fault isolation: a failed accept or a per-connection I/O error is
+/// logged and the server keeps accepting — a single broken client can no
+/// longer tear down the listener loop.
+pub fn serve_listener(
+    registry: &ModelRegistry<'_>,
+    listener: std::net::TcpListener,
+    opts: &ServeOpts,
+) -> Result<()> {
+    // Persistent accept failures (e.g. EMFILE under fd exhaustion) must
+    // not become a 100%-CPU busy loop: back off per error and give up
+    // after this many consecutive failures.
+    const MAX_CONSECUTIVE_ACCEPT_ERRORS: u32 = 32;
+    let workers = opts.workers.max(1);
+    let batcher = Batcher::new(opts.flush);
+    let conns: pool::BoundedQueue<std::net::TcpStream> = pool::BoundedQueue::new(workers * 2);
+    let accept_err = std::thread::scope(|s| {
+        let dispatcher = opts.batching.then(|| s.spawn(|| batcher.run()));
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            handles.push(s.spawn(|| {
+                while let Some(stream) = conns.pop() {
+                    let peer =
+                        stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+                    let served = serve_stream(registry, opts.batching.then_some(&batcher), stream);
+                    match served {
+                        Ok(n) => log::info!("client {peer}: {n} requests"),
+                        Err(e) => log::warn!("client {peer}: connection error: {e:#}"),
+                    }
+                }
+            }));
+        }
+        let mut accepted = 0u64;
+        let mut consecutive_errors = 0u32;
+        let mut accept_err: Option<anyhow::Error> = None;
+        for stream in listener.incoming() {
+            match stream {
+                Ok(stm) => {
+                    consecutive_errors = 0;
+                    if !conns.push(stm) {
+                        break;
+                    }
+                    accepted += 1;
+                }
+                Err(e) => {
+                    consecutive_errors += 1;
+                    log::warn!("accept error ({consecutive_errors} consecutive): {e:#}");
+                    if consecutive_errors >= MAX_CONSECUTIVE_ACCEPT_ERRORS {
+                        accept_err = Some(anyhow::Error::new(e).context(format!(
+                            "{consecutive_errors} consecutive accept failures; shutting down"
+                        )));
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                    continue;
+                }
+            }
+            if opts.max_conns.is_some_and(|m| accepted >= m) {
+                break;
+            }
+        }
+        conns.close();
+        for h in handles {
+            let _ = h.join();
+        }
+        batcher.shutdown();
+        if let Some(d) = dispatcher {
+            let _ = d.join();
+        }
+        accept_err
+    });
+    match accept_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Serve one accepted socket until the client hangs up.
+fn serve_stream<'rt>(
+    registry: &ModelRegistry<'rt>,
+    batcher: Option<&Batcher<'rt>>,
+    stream: std::net::TcpStream,
+) -> Result<u64> {
+    let mut conn = Connection::new(registry, batcher);
+    let reader = std::io::BufReader::new(stream.try_clone()?);
+    pump(|req| conn.handle(req), reader, stream)
 }

@@ -1,0 +1,355 @@
+//! The packed-model registry: shared, immutable model residency.
+//!
+//! A [`ModelHandle`] is everything one (model × quantization spec) variant
+//! needs to serve: the compiled forward evaluator, the resident PJRT
+//! parameter literals, and the **packed k-bit weights** that are the
+//! model's storage-format residency (`quant::packing`). Handles are
+//! immutable after construction and shared via `Arc`, so any number of
+//! connections and the batch dispatcher can score against the same model
+//! concurrently with no per-request copying.
+//!
+//! A [`ModelRegistry`] hosts many variants in one process, keyed
+//! `"{family}_{tier}@{spec}"`. Checkpoints come through a caller-supplied
+//! [`ParamLoader`], so the CLI wires the on-disk [`CheckpointStore`] while
+//! tests and benches inject init-only parameters.
+//!
+//! [`CheckpointStore`]: crate::models::checkpoint::CheckpointStore
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::eval::Evaluator;
+use crate::models::manifest::{Manifest, TierManifest};
+use crate::quant::{self, PackedParam, QuantSpec};
+use crate::runtime::{lit_f32, lit_f32_slice, ParamLiterals, Runtime};
+use crate::tensor::Tensor;
+
+/// Produces the checkpoint parameters for `(family, tier)` on demand.
+pub type ParamLoader<'a> =
+    Box<dyn Fn(&str, &str) -> Result<Vec<(String, Tensor)>> + Send + Sync + 'a>;
+
+/// One resident model variant: immutable, `Arc`-shared across connections.
+pub struct ModelHandle<'rt> {
+    /// Human identity, e.g. `gpt2like_t0`.
+    pub model_key: String,
+    pub tier: TierManifest,
+    pub spec: QuantSpec,
+    ev: Evaluator<'rt>,
+    plits: ParamLiterals,
+    /// Packed k-bit residency of every quantized tensor, in manifest
+    /// order. Empty for baseline and proxy specs (the former has nothing
+    /// to pack; the latter is mixed-precision and stays simulated).
+    pub packed: Vec<(String, PackedParam)>,
+}
+
+impl<'rt> ModelHandle<'rt> {
+    /// Quantize `params` under `spec` and build the resident state.
+    ///
+    /// Quantized tensors stream through **one reusable scratch buffer**:
+    /// quantize → pack → `dequantize_into(scratch)` → parameter literal.
+    /// Neither the unpacked index vector nor a dequantized f32 `Tensor`
+    /// survives construction — the packed form is the only host-side
+    /// weight residency.
+    pub fn new(
+        rt: &'rt Runtime,
+        manifest: &Manifest,
+        tier: &TierManifest,
+        params: &[(String, Tensor)],
+        spec: QuantSpec,
+        model_key: String,
+    ) -> Result<Self> {
+        let ev = Evaluator::new(rt, manifest, tier)?;
+        if params.len() != tier.params.len() {
+            bail!("expected {} parameter tensors, got {}", tier.params.len(), params.len());
+        }
+        let simulate_only = spec.is_baseline() || spec.proxy_outlier_pct.is_some();
+        if simulate_only {
+            // Proxy quantization is mixed-precision (16-bit outlier columns
+            // inside k-bit tensors) and has no pure packed form; baseline
+            // has nothing to pack. Both fall back to the simulated path.
+            let q = quant::quantize_checkpoint_cow(params, &tier.quantized_params, &spec);
+            let plits = ParamLiterals(ev.param_literals(&q)?);
+            return Ok(ModelHandle {
+                model_key,
+                tier: tier.clone(),
+                spec,
+                ev,
+                plits,
+                packed: Vec::new(),
+            });
+        }
+        let mut plits = Vec::with_capacity(params.len());
+        let mut packed = Vec::new();
+        let mut scratch: Vec<f32> = Vec::new();
+        for (name, t) in params {
+            if tier.quantized_params.iter().any(|q| q == name) {
+                let pp = PackedParam::quantize(t, &spec)?;
+                scratch.clear();
+                scratch.resize(t.len(), 0.0);
+                pp.dequantize_into(&mut scratch)?;
+                plits.push(lit_f32_slice(t.shape(), &scratch)?);
+                packed.push((name.clone(), pp));
+            } else {
+                plits.push(lit_f32(t)?);
+            }
+        }
+        Ok(ModelHandle {
+            model_key,
+            tier: tier.clone(),
+            spec,
+            ev,
+            plits: ParamLiterals(plits),
+            packed,
+        })
+    }
+
+    /// Registry key of this variant.
+    pub fn key(&self) -> String {
+        format!("{}@{}", self.model_key, self.spec.key())
+    }
+
+    /// Score padded `(tokens, mask)` rows through the resident literals.
+    pub fn score_rows(&self, rows: &[(Vec<i32>, Vec<f32>)]) -> Result<Vec<(f64, f64)>> {
+        self.ev.score_padded_rows(&self.plits.0, rows)
+    }
+
+    /// Host-resident weight bytes in packed form (indices + per-block
+    /// constants). Zero for baseline/proxy specs, which keep no packed
+    /// store.
+    pub fn resident_bytes(&self) -> usize {
+        self.packed.iter().map(|(_, p)| p.resident_bytes()).sum()
+    }
+
+    /// What a dequantized f32 copy of the quantized tensors would cost —
+    /// the residency saving the paper's x-axis is about.
+    pub fn quantized_f32_bytes(&self) -> usize {
+        self.packed.iter().map(|(_, p)| p.len() * 4).sum()
+    }
+
+    /// The paper's analytic bit accounting for this model under this spec
+    /// (`bitcost::total_model_bits`). `resident_bytes * 8` matches the
+    /// quantized share of this within the absmax-overhead term (we store
+    /// block constants as f32 where the paper accounts 16-bit) plus u32
+    /// word-padding.
+    pub fn ideal_total_bits(&self) -> f64 {
+        quant::bitcost::total_model_bits(
+            &self.tier.param_sizes(),
+            &self.tier.quantized_params,
+            &self.spec,
+        )
+    }
+}
+
+/// A process-wide collection of resident model variants.
+pub struct ModelRegistry<'rt> {
+    rt: &'rt Runtime,
+    pub manifest: Manifest,
+    loader: ParamLoader<'rt>,
+    models: Mutex<HashMap<String, Arc<ModelHandle<'rt>>>>,
+    default_key: Mutex<Option<String>>,
+}
+
+impl<'rt> ModelRegistry<'rt> {
+    pub fn new(rt: &'rt Runtime, manifest: &Manifest, loader: ParamLoader<'rt>) -> Self {
+        ModelRegistry {
+            rt,
+            manifest: manifest.clone(),
+            loader,
+            models: Mutex::new(HashMap::new()),
+            default_key: Mutex::new(None),
+        }
+    }
+
+    /// Insert an already-built handle; the first insert becomes the
+    /// default model for connections that don't route explicitly. If the
+    /// variant is already resident (two clients racing the same `load`),
+    /// the existing handle wins and the new one is dropped, so shared
+    /// `Arc`s never dangle off a silently replaced entry.
+    pub fn insert(&self, handle: ModelHandle<'rt>) -> Arc<ModelHandle<'rt>> {
+        let key = handle.key();
+        let arc = self
+            .models
+            .lock()
+            .unwrap()
+            .entry(key.clone())
+            .or_insert_with(|| Arc::new(handle))
+            .clone();
+        let mut def = self.default_key.lock().unwrap();
+        if def.is_none() {
+            *def = Some(key);
+        }
+        arc
+    }
+
+    /// Load (or return the already-resident) `(family, tier, spec)`
+    /// variant via the attached checkpoint loader.
+    pub fn load(
+        &self,
+        family: &str,
+        tier_name: &str,
+        spec: QuantSpec,
+    ) -> Result<Arc<ModelHandle<'rt>>> {
+        let model_key = format!("{family}_{tier_name}");
+        let key = format!("{}@{}", model_key, spec.key());
+        if let Some(hit) = self.models.lock().unwrap().get(&key) {
+            return Ok(hit.clone());
+        }
+        let tier = self.manifest.tier(tier_name)?;
+        let params = (self.loader)(family, tier_name)
+            .with_context(|| format!("loading checkpoint {model_key}"))?;
+        let handle =
+            ModelHandle::new(self.rt, &self.manifest, tier, &params, spec, model_key)?;
+        Ok(self.insert(handle))
+    }
+
+    /// Resolve a request's model reference: `None` → the default model; a
+    /// full registry key, or a bare model key when exactly one variant of
+    /// it is resident.
+    pub fn get(&self, key: Option<&str>) -> Result<Arc<ModelHandle<'rt>>> {
+        let models = self.models.lock().unwrap();
+        let key = match key {
+            Some(k) => k.to_string(),
+            None => self
+                .default_key
+                .lock()
+                .unwrap()
+                .clone()
+                .ok_or_else(|| anyhow!("registry has no models loaded"))?,
+        };
+        if let Some(hit) = models.get(&key) {
+            return Ok(hit.clone());
+        }
+        let matching: Vec<&Arc<ModelHandle<'rt>>> =
+            models.values().filter(|h| h.model_key == key).collect();
+        match matching.len() {
+            1 => Ok(matching[0].clone()),
+            0 => bail!("model {key:?} not resident (have: {:?})", {
+                let mut ks: Vec<&String> = models.keys().collect();
+                ks.sort();
+                ks
+            }),
+            n => bail!(
+                "model {key:?} is ambiguous ({n} quantization variants resident); \
+                 use the full key"
+            ),
+        }
+    }
+
+    pub fn keys(&self) -> Vec<String> {
+        let mut ks: Vec<String> = self.models.lock().unwrap().keys().cloned().collect();
+        ks.sort();
+        ks
+    }
+
+    pub fn len(&self) -> usize {
+        self.models.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total packed weight bytes resident across all variants.
+    pub fn resident_bytes_total(&self) -> usize {
+        self.models.lock().unwrap().values().map(|h| h.resident_bytes()).sum()
+    }
+}
+
+/// The serving layer's one spec-defaulting rule: 4-bit fp/b64 (the
+/// paper's recommendation) unless overridden; block `0` means
+/// tensor-wise; bits ≥ 16 is the unquantized baseline. Shared by the
+/// `{"op":"load"}` handler, the CLI flags, and [`ModelSpecReq::parse`] so
+/// the three request formats can never diverge.
+///
+/// Validates the configuration here — network input must come back as an
+/// error response, not hit the quantizer's `expect` from a worker thread.
+/// Bits are capped at 8 (codebook indices are `u8`; packing is 1..=8)
+/// and the dtype/bit/exponent combination must build a codebook.
+pub fn spec_from_parts(
+    bits: usize,
+    dtype: crate::quant::DataType,
+    block: Option<usize>,
+) -> Result<QuantSpec> {
+    if bits >= 16 {
+        return Ok(QuantSpec::baseline16());
+    }
+    if !(1..=8).contains(&bits) {
+        bail!("unsupported bit width {bits} (1..=8, or >=16 for the baseline)");
+    }
+    let spec = QuantSpec::new(dtype, bits, block);
+    spec.codebook()
+        .with_context(|| format!("unsupported quantization config {}", spec.key()))?;
+    Ok(spec)
+}
+
+/// A `family:tier[:bits[:dtype[:block]]]` model request, e.g.
+/// `gpt2like:t0:4:fp:64` (the CLI `--preload` format). Block `0` or
+/// `none` means tensor-wise; bits ≥ 16 is the baseline.
+#[derive(Debug, Clone)]
+pub struct ModelSpecReq {
+    pub family: String,
+    pub tier: String,
+    pub spec: QuantSpec,
+}
+
+impl ModelSpecReq {
+    pub fn parse(s: &str) -> Result<ModelSpecReq> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() < 2 || parts.len() > 5 || parts[0].is_empty() || parts[1].is_empty() {
+            bail!("bad model spec {s:?} (want family:tier[:bits[:dtype[:block]]])");
+        }
+        let bits: usize = match parts.get(2) {
+            Some(b) => b.parse().map_err(|_| anyhow!("bad bits in {s:?}"))?,
+            None => 4,
+        };
+        let dtype = match parts.get(3) {
+            Some(d) => crate::quant::DataType::parse(d)?,
+            None => crate::quant::DataType::Fp,
+        };
+        let block = match parts.get(4) {
+            Some(&"none") | Some(&"0") => None,
+            Some(b) => Some(b.parse().map_err(|_| anyhow!("bad block in {s:?}"))?),
+            None => Some(64),
+        };
+        Ok(ModelSpecReq {
+            family: parts[0].to_string(),
+            tier: parts[1].to_string(),
+            spec: spec_from_parts(bits, dtype, block)?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::DataType;
+
+    #[test]
+    fn model_spec_req_parses_all_arities() {
+        let m = ModelSpecReq::parse("gpt2like:t0").unwrap();
+        assert_eq!((m.family.as_str(), m.tier.as_str()), ("gpt2like", "t0"));
+        assert_eq!(m.spec.key(), "fp:4:b64");
+        let m = ModelSpecReq::parse("optlike:t2:3:int:32").unwrap();
+        assert_eq!(m.spec, QuantSpec::new(DataType::Int, 3, Some(32)));
+        let m = ModelSpecReq::parse("optlike:t2:4:quantile:none").unwrap();
+        assert_eq!(m.spec.block, None);
+        let m = ModelSpecReq::parse("optlike:t2:16").unwrap();
+        assert!(m.spec.is_baseline());
+        assert!(ModelSpecReq::parse("justfamily").is_err());
+        assert!(ModelSpecReq::parse("f:t:x").is_err());
+        assert!(ModelSpecReq::parse("f:t:4:fp:64:extra").is_err());
+    }
+
+    #[test]
+    fn spec_from_parts_rejects_unbuildable_configs() {
+        // Out-of-range bits must be an error at the serving boundary, not
+        // a panic inside the quantizer (codebook indices are u8).
+        assert!(spec_from_parts(9, DataType::Int, Some(64)).is_err());
+        assert!(spec_from_parts(0, DataType::Fp, Some(64)).is_err());
+        assert!(spec_from_parts(2, DataType::DynExp, Some(64)).is_err(), "dynexp needs k >= 3");
+        assert!(spec_from_parts(4, DataType::Fp, Some(64)).is_ok());
+        assert!(spec_from_parts(16, DataType::Int, None).unwrap().is_baseline());
+    }
+}

@@ -98,6 +98,29 @@ impl<T> BoundedQueue<T> {
         }
     }
 
+    /// Blocking pop with a deadline: returns `None` once `dur` elapses
+    /// with nothing available, or once the queue is closed and drained.
+    /// The server's micro-batch dispatcher uses this for its
+    /// latency-bound flush window.
+    pub fn pop_timeout(&self, dur: std::time::Duration) -> Option<T> {
+        let deadline = std::time::Instant::now() + dur;
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if let Some(x) = st.items.pop_front() {
+                self.not_full.notify_one();
+                return Some(x);
+            }
+            if st.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            st = self.not_empty.wait_timeout(st, deadline - now).unwrap().0;
+        }
+    }
+
     /// Close the queue: producers fail, consumers drain the remainder.
     pub fn close(&self) {
         let mut st = self.inner.lock().unwrap();
@@ -164,6 +187,19 @@ mod tests {
         q.close();
         assert!(!q.push(1));
         assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn pop_timeout_times_out_and_delivers() {
+        use std::time::Duration;
+        let q: BoundedQueue<u32> = BoundedQueue::new(4);
+        let t = std::time::Instant::now();
+        assert_eq!(q.pop_timeout(Duration::from_millis(30)), None);
+        assert!(t.elapsed() >= Duration::from_millis(25));
+        assert!(q.push(7));
+        assert_eq!(q.pop_timeout(Duration::from_millis(30)), Some(7));
+        q.close();
+        assert_eq!(q.pop_timeout(Duration::from_millis(30)), None);
     }
 
     #[test]

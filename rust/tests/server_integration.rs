@@ -1,5 +1,11 @@
-//! Serving-layer integration: a quantized model behind the JSON-lines
-//! protocol, exercised in memory (no sockets needed).
+//! Serving-layer integration: quantized models behind the JSON-lines
+//! protocol — the single-model [`Session`] API in memory (no sockets),
+//! and the packed-model registry + concurrent batched TCP stack.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Barrier;
+use std::time::Duration;
 
 use kbitscale::data::corpus::{Corpus, CorpusConfig};
 use kbitscale::models::families::Family;
@@ -8,7 +14,9 @@ use kbitscale::models::manifest::Manifest;
 use kbitscale::quant::codebook::DataType;
 use kbitscale::quant::QuantSpec;
 use kbitscale::runtime::Runtime;
-use kbitscale::server::{serve_lines, Session};
+use kbitscale::server::{
+    serve_lines, serve_listener, Connection, ModelRegistry, ParamLoader, ServeOpts, Session,
+};
 use kbitscale::util::json::Json;
 
 fn session<'a>(rt: &'a Runtime, manifest: &'a Manifest) -> Session<'a> {
@@ -81,4 +89,151 @@ fn serve_lines_transport() {
     assert!(Json::parse(lines[0]).unwrap().opt("model").is_some());
     assert!(Json::parse(lines[1]).unwrap().opt("error").is_some());
     assert!(Json::parse(lines[2]).unwrap().opt("ce").is_some());
+}
+
+// ---------------------------------------------------------------------------
+// Registry / concurrency / residency
+// ---------------------------------------------------------------------------
+
+fn registry<'a>(rt: &'a Runtime, manifest: &'a Manifest) -> ModelRegistry<'a> {
+    let mref = manifest.clone();
+    let loader: ParamLoader<'static> = Box::new(move |family: &str, tier: &str| {
+        Ok(init_params(mref.tier(tier)?, Family::get(family)?))
+    });
+    ModelRegistry::new(rt, manifest, loader)
+}
+
+#[test]
+fn registry_serves_concurrent_clients_from_multiple_models() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let reg = registry(&rt, &manifest);
+    let k1 = reg.load("gpt2like", "t0", QuantSpec::new(DataType::Fp, 4, Some(64))).unwrap().key();
+    let k2 = reg.load("gpt2like", "t0", QuantSpec::new(DataType::Int, 3, Some(32))).unwrap().key();
+    assert_eq!(reg.len(), 2);
+    assert_ne!(k1, k2);
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOpts {
+        workers: 2,
+        flush: Duration::from_millis(3),
+        batching: true,
+        max_conns: Some(2),
+    };
+    let barrier_owned = Barrier::new(2);
+    let barrier = &barrier_owned;
+    std::thread::scope(|s| {
+        let server = s.spawn(|| serve_listener(&reg, listener, &opts));
+        let mut joins = Vec::new();
+        for key in [k1.clone(), k2.clone()] {
+            joins.push(s.spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(stream.try_clone().unwrap());
+                let mut writer = stream;
+                // Both clients hold open connections before either sends:
+                // the old sequential accept loop would deadlock here.
+                barrier.wait();
+                for i in 0..5 {
+                    writeln!(
+                        writer,
+                        "{{\"op\":\"score\",\"model\":\"{key}\",\"tokens\":[1,5,{},12,3]}}",
+                        9 + i
+                    )
+                    .unwrap();
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    let resp = Json::parse(line.trim()).unwrap();
+                    assert!(resp.opt("ce").is_some(), "client for {key}: {resp:?}");
+                }
+                writeln!(writer, "{{\"op\":\"info\",\"model\":\"{key}\"}}").unwrap();
+                let mut line = String::new();
+                reader.read_line(&mut line).unwrap();
+                let info = Json::parse(line.trim()).unwrap();
+                assert_eq!(info.get("models").unwrap().as_usize().unwrap(), 2);
+                assert!(info.get("batched").unwrap().as_bool().unwrap());
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        server.join().unwrap().unwrap();
+    });
+}
+
+#[test]
+fn packed_residency_matches_bitcost_accounting() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let reg = registry(&rt, &manifest);
+    let (bits, block) = (4usize, 64usize);
+    let h = reg.load("gpt2like", "t0", QuantSpec::new(DataType::Fp, bits, Some(block))).unwrap();
+    let tier = manifest.tier("t0").unwrap();
+
+    // The handle keeps a packed entry for every quantized tensor and
+    // nothing else (no f32 weight copies — enforced by construction).
+    assert_eq!(h.packed.len(), tier.quantized_params.len());
+    let nq: usize = tier
+        .param_sizes()
+        .iter()
+        .filter(|(n, _)| tier.quantized_params.contains(n))
+        .map(|(_, s)| *s)
+        .sum();
+    let resident_bits = (h.resident_bytes() * 8) as f64;
+    // Lower bound: the k-bit payload itself. Upper bound: the paper's
+    // analytic accounting (k + 16/block bits/param) plus the slack of
+    // storing block constants as f32 instead of 16-bit, plus one u32 of
+    // word padding per packed slice.
+    let ideal = nq as f64 * (bits as f64 + 16.0 / block as f64);
+    let slices: usize = h.packed.iter().map(|(_, p)| p.slices.len()).sum();
+    let slack = nq as f64 * (16.0 / block as f64) + (slices * 32) as f64;
+    assert!(resident_bits >= (nq * bits) as f64, "{resident_bits} < k-bit payload");
+    assert!(
+        resident_bits <= ideal + slack,
+        "resident {resident_bits} bits exceeds ideal {ideal} + slack {slack}"
+    );
+    // Packed residency beats a dequantized f32 copy by ~32/(k+overhead).
+    assert!(h.resident_bytes() * 6 < h.quantized_f32_bytes());
+
+    // The info op reports the same numbers.
+    let mut conn = Connection::new(&reg, None);
+    let req = format!("{{\"op\":\"info\",\"model\":\"{}\"}}", h.key());
+    let info = conn.handle(&Json::parse(&req).unwrap());
+    assert_eq!(
+        info.get("resident_bytes").unwrap().as_usize().unwrap(),
+        h.resident_bytes()
+    );
+    assert!((info.get("total_bits").unwrap().as_f64().unwrap() - h.ideal_total_bits()).abs() < 1e-6);
+}
+
+#[test]
+fn load_op_makes_variants_resident_and_routes() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let reg = registry(&rt, &manifest);
+    let mut conn = Connection::new(&reg, None);
+
+    // Nothing resident yet: scoring errors, loading succeeds.
+    let err = conn.handle(&Json::parse(r#"{"op":"score","tokens":[1,2,3]}"#).unwrap());
+    assert!(err.opt("error").is_some());
+    let loaded = conn.handle(
+        &Json::parse(r#"{"op":"load","family":"gpt2like","tier":"t0","bits":3,"dtype":"int","block":32}"#)
+            .unwrap(),
+    );
+    let key = loaded.get("model").unwrap().as_str().unwrap().to_string();
+    assert!(key.ends_with("int:3:b32"), "{key}");
+    assert_eq!(loaded.get("models").unwrap().as_usize().unwrap(), 1);
+
+    // The connection now routes to the loaded variant implicitly.
+    let score = conn.handle(&Json::parse(r#"{"op":"score","tokens":[1,2,3,4]}"#).unwrap());
+    assert!(score.opt("ce").is_some(), "{score:?}");
+    let models = conn.handle(&Json::parse(r#"{"op":"models"}"#).unwrap());
+    assert_eq!(models.get("models").unwrap().as_arr().unwrap().len(), 1);
+
+    // Loading the same variant again is idempotent.
+    let again = conn.handle(
+        &Json::parse(r#"{"op":"load","family":"gpt2like","tier":"t0","bits":3,"dtype":"int","block":32}"#)
+            .unwrap(),
+    );
+    assert_eq!(again.get("models").unwrap().as_usize().unwrap(), 1);
 }

@@ -4,6 +4,15 @@
 //! pre-registry sequential serving path), plus the packed-vs-f32 resident
 //! weight footprint of every variant hosted by the registry.
 //!
+//! Two governance sections follow the throughput table:
+//!
+//! * **score cache** — repeat traffic (every client resends the same row)
+//!   against a cache-enabled vs cache-disabled registry; cached rows skip
+//!   the forward pass entirely, target ≥ 5× the uncached rate.
+//! * **eviction churn** — a registry whose `--max-resident-bytes` budget
+//!   holds ~one variant, loaded round-robin with three variants: every
+//!   load past the budget evicts the LRU resident and pays a rebuild.
+//!
 //! Init-only parameters are used (throughput does not depend on training),
 //! so this bench needs artifacts but no checkpoints.
 
@@ -21,15 +30,20 @@ use kbitscale::server::{serve_listener, ModelRegistry, ParamLoader, ServeOpts};
 
 const REQS_PER_CLIENT: usize = 40;
 
+fn make_loader(manifest: &Manifest) -> ParamLoader<'static> {
+    let mref = manifest.clone();
+    Box::new(move |family: &str, tier: &str| {
+        Ok(init_params(mref.tier(tier)?, Family::get(family)?))
+    })
+}
+
 fn main() -> anyhow::Result<()> {
     kbitscale::util::progress::init_logging();
     let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
     let rt = Runtime::cpu()?;
-    let mref = manifest.clone();
-    let loader: ParamLoader<'static> = Box::new(move |family: &str, tier: &str| {
-        Ok(init_params(mref.tier(tier)?, Family::get(family)?))
-    });
-    let registry = ModelRegistry::new(&rt, &manifest, loader);
+    // No score cache on the main registry: the throughput table measures
+    // the forward-execution serving path, not cache lookups.
+    let registry = ModelRegistry::new(&rt, &manifest, make_loader(&manifest));
     let h0 = registry.load("gpt2like", "t0", QuantSpec::new(DataType::Fp, 4, Some(64)))?;
     // A second resident (tier x spec) variant: multi-model hosting in one
     // process is part of what is being measured.
@@ -55,7 +69,7 @@ fn main() -> anyhow::Result<()> {
     let mut batched_4 = 0.0f64;
     for &clients in &[1usize, 4, 16] {
         for &batching in &[false, true] {
-            let (rps, p50, p95) = run_trial(&registry, clients, batching)?;
+            let (rps, p50, p95) = run_trial(&registry, clients, batching, false)?;
             if clients == 1 && !batching {
                 seq_1 = rps;
             }
@@ -73,15 +87,57 @@ fn main() -> anyhow::Result<()> {
         "batched 4-client throughput vs sequential path: {:.2}x (target >= 2x)",
         batched_4 / seq_1.max(1e-9)
     );
+
+    // --- score cache: repeat traffic, cache on vs off -------------------
+    println!();
+    let cached = ModelRegistry::new(&rt, &manifest, make_loader(&manifest)).with_score_cache(4096);
+    cached.load("gpt2like", "t0", QuantSpec::new(DataType::Fp, 4, Some(64)))?;
+    let (uncached_rps, _, _) = run_trial(&registry, 4, true, true)?;
+    let (cached_rps, cp50, _) = run_trial(&cached, 4, true, true)?;
+    println!(
+        "repeat traffic, 4 clients: uncached {uncached_rps:.1} req/s | cached {cached_rps:.1} req/s \
+         (p50 {cp50:.3} ms) | {:.1}x (target >= 5x)",
+        cached_rps / uncached_rps.max(1e-9)
+    );
+
+    // --- eviction churn: budget holds ~one variant ----------------------
+    println!();
+    let budget = h0.resident_bytes() + h0.resident_bytes() / 4;
+    let churn = ModelRegistry::new(&rt, &manifest, make_loader(&manifest))
+        .with_memory_budget(Some(budget));
+    let specs = [
+        QuantSpec::new(DataType::Fp, 4, Some(64)),
+        QuantSpec::new(DataType::Int, 3, Some(32)),
+        QuantSpec::new(DataType::Int, 4, Some(64)),
+    ];
+    let t = Instant::now();
+    let mut loads = 0usize;
+    for _ in 0..2 {
+        for spec in &specs {
+            churn.load("gpt2like", "t0", spec.clone())?;
+            loads += 1;
+        }
+    }
+    println!(
+        "eviction churn: budget {budget} B, {loads} loads -> {} evictions, {} resident \
+         ({} B), {:.2}s total rebuild cost",
+        churn.evictions(),
+        churn.len(),
+        churn.resident_bytes_total(),
+        t.elapsed().as_secs_f64()
+    );
     Ok(())
 }
 
 /// One trial: spin up the server for exactly `clients` connections, run
-/// the clients concurrently, and collect per-request latencies.
+/// the clients concurrently, and collect per-request latencies. With
+/// `repeat`, every client sends the same row every time (the cache's best
+/// case); otherwise rows vary per client and request.
 fn run_trial(
     registry: &ModelRegistry<'_>,
     clients: usize,
     batching: bool,
+    repeat: bool,
 ) -> anyhow::Result<(f64, f64, f64)> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
@@ -99,7 +155,7 @@ fn run_trial(
         let server = s.spawn(|| serve_listener(registry, listener, &opts));
         let mut joins = Vec::new();
         for c in 0..clients {
-            joins.push(s.spawn(move || client_run(addr, c)));
+            joins.push(s.spawn(move || client_run(addr, c, repeat)));
         }
         for j in joins {
             lats.extend(j.join().expect("client thread panicked")?);
@@ -108,24 +164,30 @@ fn run_trial(
         Ok(())
     })?;
     let wall = t0.elapsed().as_secs_f64();
-    lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lats.sort_by(|a, b| a.total_cmp(b));
     let pct = |q: f64| lats[((lats.len() - 1) as f64 * q).round() as usize] * 1e3;
     Ok(((clients * REQS_PER_CLIENT) as f64 / wall, pct(0.50), pct(0.95)))
 }
 
-fn client_run(addr: SocketAddr, c: usize) -> anyhow::Result<Vec<f64>> {
+fn client_run(addr: SocketAddr, c: usize, repeat: bool) -> anyhow::Result<Vec<f64>> {
     let stream = TcpStream::connect(addr)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
     let mut lats = Vec::with_capacity(REQS_PER_CLIENT);
     for i in 0..REQS_PER_CLIENT {
         let t = Instant::now();
-        writeln!(
-            writer,
-            "{{\"op\":\"score\",\"tokens\":[1,{},9,{},3,7]}}",
-            2 + (c + i) % 200,
-            5 + i % 100
-        )?;
+        if repeat {
+            // Identical row across all clients and requests: after the
+            // first forward, every request is a cache hit (when enabled).
+            writeln!(writer, "{{\"op\":\"score\",\"tokens\":[1,2,9,5,3,7]}}")?;
+        } else {
+            writeln!(
+                writer,
+                "{{\"op\":\"score\",\"tokens\":[1,{},9,{},3,7]}}",
+                2 + (c + i) % 200,
+                5 + i % 100
+            )?;
+        }
         let mut line = String::new();
         if reader.read_line(&mut line)? == 0 {
             anyhow::bail!("server hung up after {i} requests");

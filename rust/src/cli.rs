@@ -348,6 +348,9 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             .opt("workers", Some("0"), "connection worker threads (0 = auto)")
             .opt("flush-ms", Some("2"), "micro-batch flush window in milliseconds")
             .flag("no-batch", "disable cross-client micro-batching")
+            .opt("max-resident-bytes", Some("0"), "evict LRU variants past this packed-byte budget (0 = unbounded)")
+            .opt("ttl-secs", Some("0"), "evict variants idle longer than this (0 = no TTL)")
+            .opt("cache-rows", Some("4096"), "score cache capacity in rows (0 = disabled)")
             .opt("tcp", None, "listen address (e.g. 127.0.0.1:7878); default stdin/stdout"),
     );
     let args = spec.parse(raw)?;
@@ -370,13 +373,25 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         let id = crate::models::ModelId::new(fam.name, tier);
         Ok(store.load(&id)?.0)
     });
-    let registry = crate::server::ModelRegistry::new(&ctx.rt, &ctx.manifest, loader);
+    let registry = crate::server::ModelRegistry::new(&ctx.rt, &ctx.manifest, loader)
+        .with_memory_budget(match args.usize("max-resident-bytes")? {
+            0 => None,
+            b => Some(b),
+        })
+        .with_ttl(match args.usize("ttl-secs")? {
+            0 => None,
+            s => Some(std::time::Duration::from_secs(s as u64)),
+        })
+        .with_score_cache(args.usize("cache-rows")?);
     let default = registry.load(family.name, args.get("tier")?, qspec)?;
     log::info!(
         "resident {}: {} packed bytes",
         default.key(),
         default.resident_bytes()
     );
+    // Only needed for the log line: holding the Arc for the whole serve
+    // lifetime would report the default variant as pinned in `stats`.
+    drop(default);
     if let Some(pre) = args.opt_get("preload") {
         for part in pre.split(',').filter(|p| !p.is_empty()) {
             let req = crate::server::ModelSpecReq::parse(part)?;

@@ -186,14 +186,17 @@ impl<'rt> Evaluator<'rt> {
         let scored = self.score_rows(plits, &rows)?;
         let mut correct = 0usize;
         for (ex, &(start, n)) in examples.iter().zip(&spans) {
-            // argmax over -nll/len (higher normalized LL wins).
+            // argmax over -nll/len (higher normalized LL wins). NaN-last:
+            // a NaN NLL from the executable must not panic the worker; if
+            // every choice is NaN the example is unanswerable and that is
+            // an error, not a silent guess.
+            let norm = |i: usize| -scored[start + i].0 / lens[start + i].max(1) as f64;
             let best = (0..n)
-                .max_by(|&a, &b| {
-                    let sa = -scored[start + a].0 / lens[start + a].max(1) as f64;
-                    let sb = -scored[start + b].0 / lens[start + b].max(1) as f64;
-                    sa.partial_cmp(&sb).unwrap()
-                })
+                .max_by(|&a, &b| crate::util::order::nan_last_cmp(norm(a), norm(b)))
                 .unwrap();
+            if norm(best).is_nan() {
+                bail!("non-finite NLL for every choice of a {task:?} example");
+            }
             if best == ex.answer {
                 correct += 1;
             }

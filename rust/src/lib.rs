@@ -30,7 +30,7 @@
 //! | [`train`] | training driver over the AOT train-step executable |
 //! | [`eval`] | perplexity + zero-shot evaluation harness |
 //! | [`coordinator`] | sweep grid, scheduler, worker pool, results store |
-//! | [`server`] | packed-model registry + concurrent micro-batched JSON-lines serving |
+//! | [`server`] | LRU/TTL-governed packed-model registry + sharded score cache + concurrent micro-batched JSON-lines serving |
 //! | [`scaling`] | scaling curves, Pareto frontiers, bit-level optimality, correlations |
 //! | [`report`] | ASCII figures and CSV emission for every paper table/figure |
 //! | [`bench_support`] | shared harness for the `benches/` reproduction binaries |

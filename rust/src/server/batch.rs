@@ -5,13 +5,24 @@
 //! [`Batcher`] closes that gap: connection threads submit scoring rows
 //! into a shared [`BoundedQueue`] and block on a response channel; one
 //! dispatcher thread drains the queue, coalescing rows **across clients**
-//! up to the model's batch size within a latency-bound flush window, then
-//! runs a single forward execution per (model, batch) group and fans the
-//! per-row results back out.
+//! within a latency-bound flush window, then runs a single forward
+//! execution per (model, batch) group and fans the per-row results back
+//! out.
 //!
 //! Requests for different resident models can land in the same drain; the
 //! dispatcher groups by registry key and executes the groups back to
 //! back, so a multi-model registry never mixes rows across executables.
+//! Batch caps are **per model**: rows destined for one model never count
+//! against (or prematurely close) another model's `batch_eval` cap. A job
+//! that would overflow its model's group is carried into the next round
+//! and flushed with **zero additional wait** — it already waited a full
+//! flush window, so it coalesces only with whatever is queued at that
+//! moment.
+//!
+//! When the registry has a score cache, the dispatcher re-probes it at
+//! execution time (rows whose identical twin completed while this row was
+//! queued become hits) and inserts every freshly scored row, so repeated
+//! rows skip the forward on both the direct and the batched path.
 //!
 //! [`BoundedQueue`]: crate::util::pool::BoundedQueue
 
@@ -21,6 +32,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
+use super::cache::ScoreCache;
 use super::registry::ModelHandle;
 use crate::util::pool::BoundedQueue;
 
@@ -38,13 +50,22 @@ pub struct Batcher<'rt> {
     /// How long the dispatcher waits for co-batchable rows once it holds
     /// work. Zero disables coalescing beyond what is already queued.
     pub flush: Duration,
+    /// Shared score cache (the registry's), probed at execution time.
+    cache: Option<Arc<ScoreCache>>,
 }
 
 impl<'rt> Batcher<'rt> {
     pub fn new(flush: Duration) -> Self {
         // Queue capacity bounds how far clients can run ahead of the
         // dispatcher; past it, submitters block (backpressure).
-        Batcher { queue: BoundedQueue::new(256), flush }
+        Batcher { queue: BoundedQueue::new(256), flush, cache: None }
+    }
+
+    /// Attach the registry's score cache so scored rows are published and
+    /// queued duplicates short-circuit.
+    pub fn with_cache(mut self, cache: Option<Arc<ScoreCache>>) -> Self {
+        self.cache = cache;
+        self
     }
 
     /// Submit rows and block until the dispatcher returns their scores.
@@ -79,46 +100,53 @@ impl<'rt> Batcher<'rt> {
         }
         let _guard = PanicGuard(self);
 
-        // A job popped past the batch cap is carried into the next round
-        // instead of forcing an extra mostly-padding forward execution.
+        // A job popped past its model's cap is carried into the next
+        // round instead of forcing an extra mostly-padding forward.
         let mut carry: Option<ScoreJob<'rt>> = None;
         loop {
+            let carried = carry.is_some();
             let Some(first) = carry.take().or_else(|| self.queue.pop()) else {
                 break;
             };
-            // Greedily coalesce more jobs up to the first model's batch
-            // size, waiting at most `flush` past the first arrival.
-            let cap = first.handle.tier.batch_eval.max(1);
-            let deadline = Instant::now() + self.flush;
-            let mut nrows = first.rows.len();
+            // A carried job already waited one full flush window: flush
+            // it with whatever is queued *right now* (zero extra wait);
+            // fresh work gets the usual coalescing window.
+            let deadline = if carried {
+                Instant::now()
+            } else {
+                Instant::now() + self.flush
+            };
+            let lead = first.handle.clone();
+            let lead_cap = lead.tier.batch_eval.max(1);
             let mut batch = vec![first];
-            while nrows < cap {
-                let now = Instant::now();
-                if now >= deadline {
+            while rows_for(&batch, &lead) < lead_cap {
+                let wait = deadline.saturating_duration_since(Instant::now());
+                // With `wait` elapsed this still drains already-queued
+                // jobs (pop_timeout delivers queued items before its
+                // deadline check) and stops once the queue is empty.
+                let Some(job) = self.queue.pop_timeout(wait) else {
+                    break;
+                };
+                let cap = job.handle.tier.batch_eval.max(1);
+                let have = rows_for(&batch, &job.handle);
+                // Per-model cap: only this job's own model group can
+                // reject it. A job bigger than its cap on its own is
+                // still accepted (score_rows chunks internally).
+                if have > 0 && have + job.rows.len() > cap {
+                    carry = Some(job);
                     break;
                 }
-                match self.queue.pop_timeout(deadline - now) {
-                    Some(job) => {
-                        if nrows + job.rows.len() > cap {
-                            carry = Some(job);
-                            break;
-                        }
-                        nrows += job.rows.len();
-                        batch.push(job);
-                    }
-                    None => break,
-                }
+                batch.push(job);
             }
             // Group by resident model (arrival order preserved) and run
             // one forward execution per group. Same variant == same Arc
             // from the registry, so pointer identity is the group key.
             while !batch.is_empty() {
-                let lead = batch[0].handle.clone();
-                let (group, rest): (Vec<ScoreJob>, Vec<ScoreJob>) = batch
-                    .into_iter()
-                    .partition(|j| Arc::ptr_eq(&j.handle, &lead));
+                let g = batch[0].handle.clone();
+                let (group, rest): (Vec<ScoreJob>, Vec<ScoreJob>) =
+                    batch.into_iter().partition(|j| Arc::ptr_eq(&j.handle, &g));
                 batch = rest;
-                execute_group(group);
+                execute_group(group, self.cache.as_deref());
             }
         }
     }
@@ -129,29 +157,79 @@ impl<'rt> Batcher<'rt> {
     }
 }
 
+/// Rows already batched for `handle`'s model (Arc pointer identity).
+fn rows_for<'rt>(batch: &[ScoreJob<'rt>], handle: &Arc<ModelHandle<'rt>>) -> usize {
+    batch
+        .iter()
+        .filter(|j| Arc::ptr_eq(&j.handle, handle))
+        .map(|j| j.rows.len())
+        .sum()
+}
+
 /// Run one coalesced forward for jobs that share a model and fan results
-/// back to each submitter. Channel sends ignore disconnects (a client may
-/// have hung up mid-flight; that is its problem, not the dispatcher's).
-fn execute_group(mut jobs: Vec<ScoreJob<'_>>) {
+/// back to each submitter. Cached rows are served without touching the
+/// executable; freshly scored rows are published to the cache. Channel
+/// sends ignore disconnects (a client may have hung up mid-flight; that
+/// is its problem, not the dispatcher's).
+fn execute_group(mut jobs: Vec<ScoreJob<'_>>, cache: Option<&ScoreCache>) {
     let handle = jobs[0].handle.clone();
+    let key = handle.key();
     // Move the rows out of the jobs (remembering each job's share) rather
     // than cloning seq-length token/mask vectors on the hot path.
     let lens: Vec<usize> = jobs.iter().map(|j| j.rows.len()).collect();
-    let rows: Vec<(Vec<i32>, Vec<f32>)> =
+    let mut rows: Vec<(Vec<i32>, Vec<f32>)> =
         jobs.iter_mut().flat_map(|j| j.rows.drain(..)).collect();
-    match handle.score_rows(&rows) {
-        Ok(scored) => {
-            let mut off = 0;
-            for (job, n) in jobs.into_iter().zip(lens) {
-                let _ = job.tx.send(Ok(scored[off..off + n].to_vec()));
-                off += n;
+    let mut vals: Vec<Option<(f64, f64)>> = rows
+        .iter()
+        .map(|r| cache.and_then(|c| c.probe(&key, r)))
+        .collect();
+    let miss_idx: Vec<usize> = vals
+        .iter()
+        .enumerate()
+        .filter_map(|(i, v)| v.is_none().then_some(i))
+        .collect();
+    if !miss_idx.is_empty() {
+        let miss_rows: Vec<(Vec<i32>, Vec<f32>)> =
+            miss_idx.iter().map(|&i| std::mem::take(&mut rows[i])).collect();
+        match handle.score_rows(&miss_rows) {
+            Ok(scored) => {
+                if let Some(c) = cache {
+                    for (row, val) in miss_rows.iter().zip(&scored) {
+                        c.put(&key, row, *val);
+                    }
+                }
+                for (&i, val) in miss_idx.iter().zip(&scored) {
+                    vals[i] = Some(*val);
+                }
+            }
+            Err(e) => {
+                // Fail only the jobs that needed the forward; a job whose
+                // rows were all cache hits already has its scores in
+                // `vals` and must not inherit a stranger's fault.
+                let msg = format!("batched execution failed: {e:#}");
+                let mut off = 0;
+                for (job, n) in jobs.into_iter().zip(lens) {
+                    let span = &vals[off..off + n];
+                    if span.iter().all(|v| v.is_some()) {
+                        let out: Vec<(f64, f64)> =
+                            span.iter().map(|v| v.expect("all hits")).collect();
+                        let _ = job.tx.send(Ok(out));
+                    } else {
+                        let _ = job.tx.send(Err(anyhow!("{msg}")));
+                    }
+                    off += n;
+                }
+                return;
             }
         }
-        Err(e) => {
-            let msg = format!("batched execution failed: {e:#}");
-            for job in jobs {
-                let _ = job.tx.send(Err(anyhow!("{msg}")));
-            }
-        }
+    }
+    let mut off = 0;
+    for (job, n) in jobs.into_iter().zip(lens) {
+        let out: Vec<(f64, f64)> = vals[off..off + n]
+            .iter()
+            .map(|v| v.expect("every row is cached or scored"))
+            .collect();
+        let _ = job.tx.send(Ok(out));
+        off += n;
     }
 }

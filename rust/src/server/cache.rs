@@ -1,0 +1,239 @@
+//! Sharded score cache: `(registry key, token row) → (nll, hits)`.
+//!
+//! Scoring is deterministic — a resident variant is immutable and the
+//! forward executable is a pure function of `(params, tokens, mask)` — so
+//! a repeated `score`/`choose` row can skip the forward pass entirely.
+//! The cache is consulted twice on the serving path:
+//!
+//! 1. in the request handler (`server::score_via`), where hits bypass
+//!    both the batcher and the executable and the hit/miss counters are
+//!    maintained, and
+//! 2. in the batch dispatcher ([`super::batch`]), a silent last-moment
+//!    [`ScoreCache::probe`] that catches rows whose identical twin
+//!    completed between submit and flush (two clients sending the same
+//!    row concurrently land in the same drain).
+//!
+//! Shards are mutex-striped by row hash so concurrent connection workers
+//! do not serialize on one lock. Entries verify the full
+//! `(model, tokens, mask)` key on lookup — the 64-bit FNV row hash only
+//! picks the slot, it is never trusted for equality — so a hash collision
+//! degrades to a miss/overwrite, never a wrong score. Per-shard capacity
+//! is enforced FIFO; non-finite scores are not cached so a transient
+//! numeric fault can be retried.
+//!
+//! Entries are keyed by the registry key, so evicting and re-loading a
+//! variant revalidates against the same entries (same spec → same packed
+//! weights → same scores); no invalidation hook is needed.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Default `--cache-rows` capacity (total rows across shards).
+pub const DEFAULT_CACHE_ROWS: usize = 4096;
+
+const SHARDS: usize = 16;
+
+/// One cached row: the full key for collision verification plus the
+/// `(nll_sum, greedy_hits)` pair `score_rows` produced for it.
+struct Entry {
+    model: String,
+    tokens: Vec<i32>,
+    mask_bits: Vec<u32>,
+    val: (f64, f64),
+}
+
+impl Entry {
+    fn matches(&self, model: &str, row: &(Vec<i32>, Vec<f32>)) -> bool {
+        self.model == model
+            && self.tokens == row.0
+            && self.mask_bits.len() == row.1.len()
+            && self.mask_bits.iter().zip(&row.1).all(|(b, m)| *b == m.to_bits())
+    }
+}
+
+struct Shard {
+    map: HashMap<u64, Entry>,
+    /// Insertion order for FIFO eviction once the shard is full.
+    order: VecDeque<u64>,
+}
+
+/// A fixed-capacity, mutex-striped map from scoring rows to their scores.
+pub struct ScoreCache {
+    shards: Vec<Mutex<Shard>>,
+    cap_per_shard: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl ScoreCache {
+    /// `capacity` is the total row budget, split evenly across shards.
+    pub fn new(capacity: usize) -> ScoreCache {
+        let cap_per_shard = capacity.max(1).div_ceil(SHARDS);
+        ScoreCache {
+            shards: (0..SHARDS)
+                .map(|_| {
+                    Mutex::new(Shard { map: HashMap::new(), order: VecDeque::new() })
+                })
+                .collect(),
+            cap_per_shard: cap_per_shard.max(1),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Counted lookup: the request-level view. Bumps the hit or miss
+    /// counter surfaced by `{"op":"info"}`/`{"op":"stats"}`.
+    pub fn get(&self, model: &str, row: &(Vec<i32>, Vec<f32>)) -> Option<(f64, f64)> {
+        match self.probe(model, row) {
+            Some(v) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(v)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Silent lookup (no counter update) — the batch dispatcher's
+    /// last-moment re-check, which would otherwise double-count rows the
+    /// request handler already counted as misses.
+    pub fn probe(&self, model: &str, row: &(Vec<i32>, Vec<f32>)) -> Option<(f64, f64)> {
+        let h = row_hash(model, row);
+        let shard = self.shards[(h as usize) % self.shards.len()].lock().unwrap();
+        match shard.map.get(&h) {
+            Some(e) if e.matches(model, row) => Some(e.val),
+            _ => None,
+        }
+    }
+
+    /// Insert a scored row. Non-finite scores are dropped (never cached)
+    /// so a transient numeric fault does not become permanent.
+    pub fn put(&self, model: &str, row: &(Vec<i32>, Vec<f32>), val: (f64, f64)) {
+        if !val.0.is_finite() || !val.1.is_finite() {
+            return;
+        }
+        let h = row_hash(model, row);
+        let mut shard = self.shards[(h as usize) % self.shards.len()].lock().unwrap();
+        if !shard.map.contains_key(&h) {
+            while shard.map.len() >= self.cap_per_shard {
+                match shard.order.pop_front() {
+                    Some(old) => {
+                        shard.map.remove(&old);
+                    }
+                    None => break,
+                }
+            }
+            shard.order.push_back(h);
+        }
+        let entry = Entry {
+            model: model.to_string(),
+            tokens: row.0.clone(),
+            mask_bits: row.1.iter().map(|m| m.to_bits()).collect(),
+            val,
+        };
+        shard.map.insert(h, entry);
+    }
+
+    /// `(hits, misses)` as counted by [`ScoreCache::get`].
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Rows currently cached across all shards.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Streaming FNV-1a ([`crate::util::fnv1a_fold`]) over the full row key:
+/// model key, token count, tokens, mask bits. Stable across platforms.
+fn row_hash(model: &str, row: &(Vec<i32>, Vec<f32>)) -> u64 {
+    use crate::util::{fnv1a_fold, FNV1A_OFFSET};
+    let mut h = fnv1a_fold(FNV1A_OFFSET, model.as_bytes());
+    h = fnv1a_fold(h, &(row.0.len() as u64).to_le_bytes());
+    for &t in &row.0 {
+        h = fnv1a_fold(h, &t.to_le_bytes());
+    }
+    for &m in &row.1 {
+        h = fnv1a_fold(h, &m.to_bits().to_le_bytes());
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn row(toks: &[i32]) -> (Vec<i32>, Vec<f32>) {
+        (toks.to_vec(), toks.iter().map(|_| 1.0).collect())
+    }
+
+    #[test]
+    fn roundtrip_and_counters() {
+        let c = ScoreCache::new(64);
+        let r = row(&[1, 2, 3]);
+        assert_eq!(c.get("m@fp:4:b64", &r), None);
+        c.put("m@fp:4:b64", &r, (2.5, 1.0));
+        assert_eq!(c.get("m@fp:4:b64", &r), Some((2.5, 1.0)));
+        // Same row under a different registry key is a distinct entry.
+        assert_eq!(c.get("m@int:3:b32", &r), None);
+        assert_eq!(c.counters(), (1, 2));
+        assert_eq!(c.len(), 1);
+    }
+
+    #[test]
+    fn probe_is_silent() {
+        let c = ScoreCache::new(64);
+        let r = row(&[4, 5]);
+        assert_eq!(c.probe("m", &r), None);
+        c.put("m", &r, (1.0, 0.0));
+        assert_eq!(c.probe("m", &r), Some((1.0, 0.0)));
+        assert_eq!(c.counters(), (0, 0));
+    }
+
+    #[test]
+    fn mask_is_part_of_the_key() {
+        let c = ScoreCache::new(64);
+        let a = (vec![1, 2, 3], vec![1.0, 1.0, 1.0]);
+        let b = (vec![1, 2, 3], vec![0.0, 1.0, 1.0]);
+        c.put("m", &a, (9.0, 2.0));
+        assert_eq!(c.get("m", &b), None, "different mask must not hit");
+        assert_eq!(c.get("m", &a), Some((9.0, 2.0)));
+    }
+
+    #[test]
+    fn capacity_is_bounded() {
+        let c = ScoreCache::new(32);
+        for i in 0..1000 {
+            c.put("m", &row(&[i, i + 1]), (i as f64, 0.0));
+        }
+        assert!(c.len() <= 2 * 32, "len {} exceeds capacity slack", c.len());
+        assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn non_finite_scores_are_not_cached() {
+        let c = ScoreCache::new(16);
+        let r = row(&[7]);
+        c.put("m", &r, (f64::NAN, 0.0));
+        c.put("m", &r, (f64::INFINITY, 0.0));
+        assert_eq!(c.get("m", &r), None);
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn overwrite_keeps_len_stable() {
+        let c = ScoreCache::new(16);
+        let r = row(&[1]);
+        c.put("m", &r, (1.0, 0.0));
+        c.put("m", &r, (1.0, 0.0));
+        assert_eq!(c.len(), 1);
+    }
+}

@@ -10,7 +10,7 @@
 //!
 //! # Serving architecture
 //!
-//! Three layers, smallest state on top:
+//! Four layers, smallest state on top:
 //!
 //! * [`registry::ModelRegistry`] — the shared residency layer. Hosts any
 //!   number of (family × tier × spec) variants in one process; each
@@ -18,16 +18,29 @@
 //!   compiled evaluator, the resident PJRT parameter literals, and the
 //!   packed k-bit weights (`quant::packing::PackedTensor`) that are the
 //!   only host-side weight copy — no unpacked index vectors, no duplicate
-//!   f32 tensors.
+//!   f32 tensors. Residency is governed: an optional packed-byte budget
+//!   evicts least-recently-used variants (in-flight `Arc`s pin them until
+//!   the last reference drops), an optional TTL evicts idle ones, and
+//!   concurrent `load`s of one variant build it exactly once
+//!   (single-flight).
+//! * [`cache::ScoreCache`] — a sharded `(registry key, token row) →
+//!   score` cache. Scoring is deterministic, so repeated `score`/`choose`
+//!   rows skip the forward pass entirely; it is consulted both here in
+//!   the request handler and again inside the batch dispatcher.
 //! * [`batch::Batcher`] — cross-client micro-batching. Connection threads
 //!   submit scoring rows into a bounded queue; one dispatcher coalesces
-//!   rows from concurrent clients up to the tier's `batch_eval` within a
-//!   latency-bound flush window and runs a single forward per group.
+//!   rows from concurrent clients up to each model's `batch_eval` (caps
+//!   are per model) within a latency-bound flush window and runs a single
+//!   forward per group; overflow jobs carry over and flush with zero
+//!   extra wait.
 //! * [`Connection`] — thin per-client state: a current-model key and a
 //!   request counter. [`serve_listener`] runs a fixed worker pool
 //!   (`util::pool::BoundedQueue` of accepted sockets), so one slow or
 //!   broken client never blocks the accept loop, and per-connection I/O
-//!   errors are logged without tearing the server down.
+//!   errors are logged without tearing the server down. Request lines are
+//!   capped at [`MAX_REQUEST_LINE`] bytes — an over-long line gets an
+//!   error response and is discarded without buffering, so a client
+//!   streaming one giant line cannot OOM a worker.
 //!
 //! # Protocol (one JSON object per line, response per line)
 //!
@@ -35,26 +48,39 @@
 //! → {"op":"score", "tokens":[1,5,9,...]}               sequence NLL + ppl
 //! → {"op":"choose", "context":[...], "choices":[[..],[..]]}
 //!                                       length-normalized best choice
-//! → {"op":"info"}                       model + residency metadata
+//! → {"op":"info"}                       model + residency + cache counters
 //! → {"op":"models"}                     all resident variants
 //! → {"op":"load", "family":"gpt2like", "tier":"t1", "bits":4,
 //!    "dtype":"fp", "block":64}          make a variant resident
+//! → {"op":"unload", "model":"gpt2like_t1@fp:4:b64"}
+//!                                       drop a variant (in-flight work
+//!                                       pins it until finished)
+//! → {"op":"stats"}                      governance: per-variant resident
+//!                                       bytes / hits / idle / pinned,
+//!                                       budget, evictions, cache counters
 //! ```
 //!
 //! `score`/`choose`/`info` accept an optional `"model"` field (a registry
 //! key from `models`/`load`) to route per request; otherwise the
 //! connection's current model (set by `load`) or the registry default is
-//! used.
+//! used. Token values are validated against the addressed tier's vocab;
+//! out-of-range tokens are an error response, never a silently saturated
+//! cast. Cache semantics: hits return the exact scores the forward would
+//! produce (entries are verified against the full row, and variants are
+//! immutable); `info`'s `cache_hits`/`cache_misses` count request-level
+//! lookups.
 //!
 //! [`Session`] wraps a single-model registry behind the original
 //! in-memory API (tested without sockets; the CLI's `serve` subcommand
 //! still wires stdin/stdout through it for shell use).
 
 pub mod batch;
+pub mod cache;
 pub mod registry;
 
 pub use batch::Batcher;
-pub use registry::{ModelHandle, ModelRegistry, ModelSpecReq, ParamLoader};
+pub use cache::{ScoreCache, DEFAULT_CACHE_ROWS};
+pub use registry::{ModelHandle, ModelRegistry, ModelSpecReq, ParamLoader, VariantStats};
 
 use std::io::{BufRead, Write};
 use std::sync::Arc;
@@ -124,7 +150,8 @@ impl<'rt> Session<'rt> {
             Box::new(|family: &str, tier: &str| {
                 bail!("session has no checkpoint loader (cannot load {family}:{tier})")
             }),
-        );
+        )
+        .with_score_cache(cache::DEFAULT_CACHE_ROWS);
         let handle = ModelHandle::new(rt, manifest, tier, params, spec, model_key)?;
         registry.insert(handle);
         Ok(Session { registry, core: ConnCore::default() })
@@ -159,28 +186,81 @@ fn handle_request<'rt>(
 }
 
 /// Resolve the model a request addresses: explicit `"model"` field, then
-/// the connection's current model, then the registry default.
+/// the connection's current model, then the registry default. `touch`
+/// marks the resolution as a use (LRU + hit count) — scoring ops touch,
+/// metadata reads (`info`) peek, so polling cannot defeat TTL eviction.
 fn resolve<'rt>(
     registry: &ModelRegistry<'rt>,
     core: &ConnCore,
     req: &Json,
+    touch: bool,
 ) -> Result<Arc<ModelHandle<'rt>>> {
     let explicit = match req.opt("model") {
         Some(v) => Some(v.as_str()?),
         None => None,
     };
-    registry.get(explicit.or(core.current.as_deref()))
+    let key = explicit.or(core.current.as_deref());
+    if touch {
+        registry.get(key)
+    } else {
+        registry.peek(key)
+    }
 }
 
+/// `(enabled, hits, misses, rows)` — the score-cache counter fields the
+/// `info` and `stats` ops both report.
+fn cache_counters(registry: &ModelRegistry<'_>) -> (bool, u64, u64, usize) {
+    match registry.score_cache() {
+        Some(c) => {
+            let (hits, misses) = c.counters();
+            (true, hits, misses, c.len())
+        }
+        None => (false, 0, 0, 0),
+    }
+}
+
+/// Score rows through the cache → batcher → executable stack: cached rows
+/// skip the forward entirely; only misses are submitted (batched path
+/// publishes results to the cache inside the dispatcher, the direct path
+/// publishes here).
 fn score_via<'rt>(
+    cache: Option<&ScoreCache>,
     batcher: Option<&Batcher<'rt>>,
     handle: &Arc<ModelHandle<'rt>>,
     rows: Vec<(Vec<i32>, Vec<f32>)>,
 ) -> Result<Vec<(f64, f64)>> {
-    match batcher {
-        Some(b) => b.submit(handle.clone(), rows),
-        None => handle.score_rows(&rows),
+    let Some(cache) = cache else {
+        return match batcher {
+            Some(b) => b.submit(handle.clone(), rows),
+            None => handle.score_rows(&rows),
+        };
+    };
+    let key = handle.key();
+    let mut rows = rows;
+    let mut out: Vec<Option<(f64, f64)>> = rows.iter().map(|r| cache.get(&key, r)).collect();
+    let miss_idx: Vec<usize> = out
+        .iter()
+        .enumerate()
+        .filter_map(|(i, v)| v.is_none().then_some(i))
+        .collect();
+    if !miss_idx.is_empty() {
+        let miss_rows: Vec<(Vec<i32>, Vec<f32>)> =
+            miss_idx.iter().map(|&i| std::mem::take(&mut rows[i])).collect();
+        let scored = match batcher {
+            Some(b) => b.submit(handle.clone(), miss_rows)?,
+            None => {
+                let scored = handle.score_rows(&miss_rows)?;
+                for (row, val) in miss_rows.iter().zip(&scored) {
+                    cache.put(&key, row, *val);
+                }
+                scored
+            }
+        };
+        for (&i, val) in miss_idx.iter().zip(&scored) {
+            out[i] = Some(*val);
+        }
     }
+    Ok(out.into_iter().map(|v| v.expect("every row cached or scored")).collect())
 }
 
 fn try_handle<'rt>(
@@ -191,7 +271,10 @@ fn try_handle<'rt>(
 ) -> Result<Json> {
     match req.get("op")?.as_str()? {
         "info" => {
-            let h = resolve(registry, core, req)?;
+            // Peek, not get: metadata polling must not refresh LRU/TTL
+            // state or count as a hit (matching `models`/`stats`).
+            let h = resolve(registry, core, req, false)?;
+            let (cached, cache_hits, cache_misses, cache_rows) = cache_counters(registry);
             Ok(Json::obj(vec![
                 ("model", Json::str(&h.model_key)),
                 ("tier", Json::str(&h.tier.name)),
@@ -207,23 +290,77 @@ fn try_handle<'rt>(
                 ("total_bits", Json::num(h.ideal_total_bits())),
                 ("models", Json::num(registry.len() as f64)),
                 ("batched", Json::Bool(batcher.is_some())),
+                ("cached", Json::Bool(cached)),
+                ("cache_hits", Json::num(cache_hits as f64)),
+                ("cache_misses", Json::num(cache_misses as f64)),
+                ("cache_rows", Json::num(cache_rows as f64)),
             ]))
         }
         "models" => {
+            // `list` takes no LRU touch: enumerating the registry must
+            // not make every variant look recently used to eviction.
             let entries: Vec<Json> = registry
-                .keys()
+                .list()
                 .into_iter()
-                .map(|k| {
-                    let h = registry.get(Some(k.as_str()))?;
-                    Ok(Json::obj(vec![
+                .map(|(k, h)| {
+                    Json::obj(vec![
                         ("key", Json::str(k)),
                         ("tier", Json::str(&h.tier.name)),
                         ("quant", Json::str(h.spec.key())),
                         ("resident_bytes", Json::num(h.resident_bytes() as f64)),
-                    ]))
+                    ])
                 })
-                .collect::<Result<_>>()?;
+                .collect();
             Ok(Json::obj(vec![("models", Json::Arr(entries))]))
+        }
+        "stats" => {
+            let variants: Vec<Json> = registry
+                .stats()
+                .into_iter()
+                .map(|v| {
+                    Json::obj(vec![
+                        ("key", Json::str(v.key)),
+                        ("resident_bytes", Json::num(v.resident_bytes as f64)),
+                        ("hits", Json::num(v.hits as f64)),
+                        ("idle_ms", Json::num(v.idle.as_secs_f64() * 1e3)),
+                        ("pinned", Json::Bool(v.pinned)),
+                    ])
+                })
+                .collect();
+            let (_, cache_hits, cache_misses, cache_rows) = cache_counters(registry);
+            Ok(Json::obj(vec![
+                ("models", Json::Arr(variants)),
+                ("resident_bytes_total", Json::num(registry.resident_bytes_total() as f64)),
+                (
+                    "budget_bytes",
+                    match registry.memory_budget() {
+                        Some(b) => Json::num(b as f64),
+                        None => Json::Null,
+                    },
+                ),
+                (
+                    "ttl_secs",
+                    match registry.ttl() {
+                        Some(t) => Json::num(t.as_secs_f64()),
+                        None => Json::Null,
+                    },
+                ),
+                ("evictions", Json::num(registry.evictions() as f64)),
+                ("cache_hits", Json::num(cache_hits as f64)),
+                ("cache_misses", Json::num(cache_misses as f64)),
+                ("cache_rows", Json::num(cache_rows as f64)),
+            ]))
+        }
+        "unload" => {
+            let key = req.get("model")?.as_str()?;
+            let full = registry.unload(key)?;
+            if core.current.as_deref() == Some(full.as_str()) {
+                core.current = None;
+            }
+            Ok(Json::obj(vec![
+                ("unloaded", Json::str(full)),
+                ("models", Json::num(registry.len() as f64)),
+            ]))
         }
         "load" => {
             let family = req.get("family")?.as_str()?;
@@ -253,8 +390,8 @@ fn try_handle<'rt>(
             ]))
         }
         "score" => {
-            let h = resolve(registry, core, req)?;
-            let tokens = tokens_of(req.get("tokens")?)?;
+            let h = resolve(registry, core, req, true)?;
+            let tokens = tokens_of(req.get("tokens")?, h.tier.vocab)?;
             if tokens.is_empty() {
                 bail!("empty token list");
             }
@@ -263,7 +400,8 @@ fn try_handle<'rt>(
             // its own geometry.
             let (row, mask) = crate::data::corpus::pad_score_row(&tokens, h.tier.seq);
             let ntok = mask.iter().sum::<f32>() as f64;
-            let scored = score_via(batcher, &h, vec![(row, mask)])?;
+            let cache = registry.score_cache();
+            let scored = score_via(cache.as_deref(), batcher, &h, vec![(row, mask)])?;
             let (nll, hits) = scored[0];
             Ok(Json::obj(vec![
                 ("nll", Json::num(nll)),
@@ -274,13 +412,13 @@ fn try_handle<'rt>(
             ]))
         }
         "choose" => {
-            let h = resolve(registry, core, req)?;
-            let context = tokens_of(req.get("context")?)?;
+            let h = resolve(registry, core, req, true)?;
+            let context = tokens_of(req.get("context")?, h.tier.vocab)?;
             let choices: Vec<Vec<i32>> = req
                 .get("choices")?
                 .as_arr()?
                 .iter()
-                .map(tokens_of)
+                .map(|c| tokens_of(c, h.tier.vocab))
                 .collect::<Result<_>>()?;
             if choices.is_empty() {
                 bail!("no choices given");
@@ -294,34 +432,48 @@ fn try_handle<'rt>(
                 rows.push(crate::eval::pad_row(&toks, &mask, seq));
                 lens.push(clen.max(1));
             }
-            let scored = score_via(batcher, &h, rows)?;
+            let cache = registry.score_cache();
+            let scored = score_via(cache.as_deref(), batcher, &h, rows)?;
             let norm: Vec<f64> = scored
                 .iter()
                 .zip(&lens)
                 .map(|((nll, _), &l)| -nll / l as f64)
                 .collect();
+            // NaN-last argmax: a NaN NLL from the executable must become
+            // an error response, not a worker-thread panic.
             let best = norm
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .max_by(|a, b| crate::util::order::nan_last_cmp(*a.1, *b.1))
                 .map(|(i, _)| i)
                 .unwrap();
+            if norm[best].is_nan() {
+                bail!("model produced non-finite scores for every choice");
+            }
             Ok(Json::obj(vec![
                 ("best", Json::num(best as f64)),
                 ("scores", Json::arr_f64(&norm)),
             ]))
         }
-        op => bail!("unknown op {op:?} (info|models|load|score|choose)"),
+        op => bail!("unknown op {op:?} (info|models|stats|load|unload|score|choose)"),
     }
 }
 
-fn tokens_of(v: &Json) -> Result<Vec<i32>> {
+/// Parse a token array, validating every value against the addressed
+/// tier's vocabulary. An unchecked `f64 as i32` cast would silently
+/// saturate (`3e9` → `i32::MAX`) and score garbage; out-of-vocab tokens
+/// are an error response instead.
+fn tokens_of(v: &Json, vocab: usize) -> Result<Vec<i32>> {
     v.as_arr()?
         .iter()
         .map(|x| {
             let n = x.as_f64()?;
+            // NaN/±inf fail the fract test (`inf.fract()` is NaN).
             if n < 0.0 || n.fract() != 0.0 {
                 bail!("token {n} is not a non-negative integer");
+            }
+            if n >= vocab as f64 {
+                bail!("token {n} out of range for vocab {vocab}");
             }
             Ok(n as i32)
         })
@@ -332,21 +484,99 @@ fn tokens_of(v: &Json) -> Result<Vec<i32>> {
 // Transports
 // ---------------------------------------------------------------------------
 
+/// Upper bound on one request line. A client streaming a single giant
+/// line gets an error response and the line is discarded **without
+/// buffering it**, so it cannot OOM a connection worker.
+pub const MAX_REQUEST_LINE: usize = 1 << 20;
+
+enum LineRead {
+    Eof,
+    Line,
+    Oversized,
+}
+
+/// Read one `\n`-terminated line into `buf`, never holding more than
+/// `max` bytes: once a line crosses the cap, its remaining bytes are
+/// consumed chunk by chunk without buffering and `Oversized` is returned
+/// when the terminating newline (or EOF) arrives.
+fn read_line_capped<R: BufRead>(
+    r: &mut R,
+    buf: &mut Vec<u8>,
+    max: usize,
+) -> std::io::Result<LineRead> {
+    let mut overflowed = false;
+    loop {
+        // (bytes to consume, Some(hit_eof) once the line is complete)
+        let (consumed, done) = {
+            let chunk = r.fill_buf()?;
+            if chunk.is_empty() {
+                (0usize, Some(true))
+            } else {
+                match chunk.iter().position(|&b| b == b'\n') {
+                    Some(pos) => {
+                        if !overflowed && buf.len() + pos <= max {
+                            buf.extend_from_slice(&chunk[..pos]);
+                        } else {
+                            overflowed = true;
+                        }
+                        (pos + 1, Some(false))
+                    }
+                    None => {
+                        if !overflowed && buf.len() + chunk.len() <= max {
+                            buf.extend_from_slice(chunk);
+                        } else {
+                            overflowed = true;
+                        }
+                        (chunk.len(), None)
+                    }
+                }
+            }
+        };
+        r.consume(consumed);
+        if let Some(eof) = done {
+            if overflowed {
+                return Ok(LineRead::Oversized);
+            }
+            if eof && buf.is_empty() {
+                return Ok(LineRead::Eof);
+            }
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            return Ok(LineRead::Line);
+        }
+    }
+}
+
 /// Pump one line-based transport through a request handler until EOF.
+/// Request lines are capped at [`MAX_REQUEST_LINE`] bytes.
 fn pump<R: BufRead, W: Write>(
     mut handle: impl FnMut(&Json) -> Json,
-    reader: R,
+    mut reader: R,
     mut writer: W,
 ) -> Result<u64> {
     let mut served = 0;
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let resp = match Json::parse(&line) {
-            Ok(req) => handle(&req),
-            Err(e) => Json::obj(vec![("error", Json::str(format!("bad request: {e:#}")))]),
+    let mut buf: Vec<u8> = Vec::new();
+    loop {
+        buf.clear();
+        let resp = match read_line_capped(&mut reader, &mut buf, MAX_REQUEST_LINE)? {
+            LineRead::Eof => break,
+            LineRead::Oversized => Json::obj(vec![(
+                "error",
+                Json::str(format!("request line exceeds {MAX_REQUEST_LINE} bytes")),
+            )]),
+            LineRead::Line => match std::str::from_utf8(&buf) {
+                Ok(line) if line.trim().is_empty() => continue,
+                Ok(line) => match Json::parse(line) {
+                    Ok(req) => handle(&req),
+                    Err(e) => {
+                        Json::obj(vec![("error", Json::str(format!("bad request: {e:#}")))])
+                    }
+                },
+                Err(e) => {
+                    Json::obj(vec![("error", Json::str(format!("bad request: {e:#}")))])
+                }
+            },
         };
         writeln!(writer, "{}", resp.dump())?;
         writer.flush()?;
@@ -428,7 +658,7 @@ pub fn serve_listener(
     // after this many consecutive failures.
     const MAX_CONSECUTIVE_ACCEPT_ERRORS: u32 = 32;
     let workers = opts.workers.max(1);
-    let batcher = Batcher::new(opts.flush);
+    let batcher = Batcher::new(opts.flush).with_cache(registry.score_cache());
     let conns: pool::BoundedQueue<std::net::TcpStream> = pool::BoundedQueue::new(workers * 2);
     let accept_err = std::thread::scope(|s| {
         let dispatcher = opts.batching.then(|| s.spawn(|| batcher.run()));

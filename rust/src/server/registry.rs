@@ -13,13 +13,34 @@
 //! [`ParamLoader`], so the CLI wires the on-disk [`CheckpointStore`] while
 //! tests and benches inject init-only parameters.
 //!
+//! # Memory governance
+//!
+//! Residency is budgeted, not unbounded. The registry can be configured
+//! with a packed-byte budget ([`ModelRegistry::with_memory_budget`], the
+//! CLI's `--max-resident-bytes`) and an idle TTL
+//! ([`ModelRegistry::with_ttl`]): past the budget, least-recently-used
+//! variants are **evicted** — dropped from the registry map. Handles are
+//! `Arc`-shared, so eviction never invalidates in-flight work: a
+//! connection or the batch dispatcher holding a handle pins the variant's
+//! memory until its last reference drops, at which point the packed
+//! weights and PJRT literals are freed. The variant being inserted or
+//! resolved is always protected from its own eviction pass, so a single
+//! variant larger than the budget still serves.
+//!
+//! Loading is **single-flight**: concurrent `load`s of the same variant
+//! build (quantize + compile) it exactly once; the losers of the race
+//! block until the winner's handle is resident and share it.
+//!
 //! [`CheckpointStore`]: crate::models::checkpoint::CheckpointStore
 
-use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use super::cache::ScoreCache;
 use crate::eval::Evaluator;
 use crate::models::manifest::{Manifest, TierManifest};
 use crate::quant::{self, PackedParam, QuantSpec};
@@ -142,16 +163,53 @@ impl<'rt> ModelHandle<'rt> {
     }
 }
 
-/// A process-wide collection of resident model variants.
+/// Registry-internal residency record: the shared handle plus the
+/// governance metadata (`{"op":"stats"}` reports exactly these fields).
+struct Resident<'rt> {
+    handle: Arc<ModelHandle<'rt>>,
+    /// Cached `handle.resident_bytes()` (immutable after construction).
+    bytes: usize,
+    /// Times this variant was resolved (`load` fast path, `get`).
+    hits: u64,
+    last_use: Instant,
+}
+
+/// One variant's governance snapshot, as reported by `{"op":"stats"}`.
+#[derive(Debug, Clone)]
+pub struct VariantStats {
+    pub key: String,
+    pub resident_bytes: usize,
+    pub hits: u64,
+    /// Time since the variant was last resolved.
+    pub idle: Duration,
+    /// Whether `Arc` references beyond the registry's own exist —
+    /// in-flight scoring pins an evicted variant until these drop.
+    pub pinned: bool,
+}
+
+/// A process-wide collection of resident model variants with LRU/TTL
+/// memory governance and an optional shared score cache.
 pub struct ModelRegistry<'rt> {
     rt: &'rt Runtime,
     pub manifest: Manifest,
     loader: ParamLoader<'rt>,
-    models: Mutex<HashMap<String, Arc<ModelHandle<'rt>>>>,
+    models: Mutex<HashMap<String, Resident<'rt>>>,
     default_key: Mutex<Option<String>>,
+    /// Packed-byte residency budget; `None` = unbounded.
+    max_resident_bytes: Option<usize>,
+    /// Idle eviction deadline; `None` = no TTL.
+    ttl: Option<Duration>,
+    evictions: AtomicU64,
+    /// Keys some thread is currently building (single-flight loading).
+    loading: Mutex<HashSet<String>>,
+    loaded_cv: Condvar,
+    /// Shared score cache; `None` = caching disabled.
+    cache: Option<Arc<ScoreCache>>,
 }
 
 impl<'rt> ModelRegistry<'rt> {
+    /// An ungoverned registry: no byte budget, no TTL, no score cache.
+    /// Chain the `with_*` builders to opt in (the CLI always does).
     pub fn new(rt: &'rt Runtime, manifest: &Manifest, loader: ParamLoader<'rt>) -> Self {
         ModelRegistry {
             rt,
@@ -159,7 +217,40 @@ impl<'rt> ModelRegistry<'rt> {
             loader,
             models: Mutex::new(HashMap::new()),
             default_key: Mutex::new(None),
+            max_resident_bytes: None,
+            ttl: None,
+            evictions: AtomicU64::new(0),
+            loading: Mutex::new(HashSet::new()),
+            loaded_cv: Condvar::new(),
+            cache: None,
         }
+    }
+
+    /// Evict least-recently-used variants once total packed bytes exceed
+    /// `max_bytes` (`None` = unbounded). The variant being inserted or
+    /// resolved is never evicted by its own enforcement pass.
+    pub fn with_memory_budget(mut self, max_bytes: Option<usize>) -> Self {
+        self.max_resident_bytes = max_bytes;
+        self
+    }
+
+    /// Evict variants idle (not resolved) for longer than `ttl`.
+    pub fn with_ttl(mut self, ttl: Option<Duration>) -> Self {
+        self.ttl = ttl;
+        self
+    }
+
+    /// Attach a score cache holding up to `rows` scored rows (`0`
+    /// disables caching).
+    pub fn with_score_cache(mut self, rows: usize) -> Self {
+        self.cache = (rows > 0).then(|| Arc::new(ScoreCache::new(rows)));
+        self
+    }
+
+    /// The shared score cache, if enabled (the batch dispatcher holds a
+    /// second reference).
+    pub fn score_cache(&self) -> Option<Arc<ScoreCache>> {
+        self.cache.clone()
     }
 
     /// Insert an already-built handle; the first insert becomes the
@@ -169,22 +260,40 @@ impl<'rt> ModelRegistry<'rt> {
     /// `Arc`s never dangle off a silently replaced entry.
     pub fn insert(&self, handle: ModelHandle<'rt>) -> Arc<ModelHandle<'rt>> {
         let key = handle.key();
-        let arc = self
-            .models
-            .lock()
-            .unwrap()
-            .entry(key.clone())
-            .or_insert_with(|| Arc::new(handle))
-            .clone();
-        let mut def = self.default_key.lock().unwrap();
-        if def.is_none() {
-            *def = Some(key);
+        let mut map = self.models.lock().unwrap();
+        let arc = match map.entry(key.clone()) {
+            std::collections::hash_map::Entry::Occupied(mut e) => {
+                let r = e.get_mut();
+                r.hits += 1;
+                r.last_use = Instant::now();
+                r.handle.clone()
+            }
+            std::collections::hash_map::Entry::Vacant(e) => {
+                let bytes = handle.resident_bytes();
+                let arc = Arc::new(handle);
+                e.insert(Resident {
+                    handle: arc.clone(),
+                    bytes,
+                    hits: 0,
+                    last_use: Instant::now(),
+                });
+                arc
+            }
+        };
+        {
+            let mut def = self.default_key.lock().unwrap();
+            if def.is_none() {
+                *def = Some(key.clone());
+            }
         }
+        self.enforce_policy(&mut map, Some(&key));
         arc
     }
 
     /// Load (or return the already-resident) `(family, tier, spec)`
-    /// variant via the attached checkpoint loader.
+    /// variant via the attached checkpoint loader. Racing `load`s of the
+    /// same key build it once: one caller quantizes + compiles, the rest
+    /// wait and share the winner's handle.
     pub fn load(
         &self,
         family: &str,
@@ -193,8 +302,41 @@ impl<'rt> ModelRegistry<'rt> {
     ) -> Result<Arc<ModelHandle<'rt>>> {
         let model_key = format!("{family}_{tier_name}");
         let key = format!("{}@{}", model_key, spec.key());
-        if let Some(hit) = self.models.lock().unwrap().get(&key) {
-            return Ok(hit.clone());
+        loop {
+            if let Some(hit) = self.touch(&key) {
+                return Ok(hit);
+            }
+            // Claim the build, or wait for the thread that holds it.
+            {
+                let mut loading = self.loading.lock().unwrap();
+                if !loading.contains(&key) {
+                    loading.insert(key.clone());
+                    break;
+                }
+                while loading.contains(&key) {
+                    loading = self.loaded_cv.wait(loading).unwrap();
+                }
+            }
+            // The builder finished (or failed): re-check residency; on
+            // failure this thread claims the build and retries it.
+        }
+        // Release the claim on every exit path, including build errors,
+        // so waiters never block on a dead flight.
+        struct FlightGuard<'g, 'rt> {
+            reg: &'g ModelRegistry<'rt>,
+            key: &'g str,
+        }
+        impl Drop for FlightGuard<'_, '_> {
+            fn drop(&mut self) {
+                self.reg.loading.lock().unwrap().remove(self.key);
+                self.reg.loaded_cv.notify_all();
+            }
+        }
+        let _flight = FlightGuard { reg: self, key: &key };
+        // A winner may have inserted between our residency check and the
+        // claim; one more look avoids a redundant build.
+        if let Some(hit) = self.touch(&key) {
+            return Ok(hit);
         }
         let tier = self.manifest.tier(tier_name)?;
         let params = (self.loader)(family, tier_name)
@@ -204,11 +346,21 @@ impl<'rt> ModelRegistry<'rt> {
         Ok(self.insert(handle))
     }
 
+    /// Fast-path residency check that also records the use (LRU + hit
+    /// count).
+    fn touch(&self, key: &str) -> Option<Arc<ModelHandle<'rt>>> {
+        let mut map = self.models.lock().unwrap();
+        let r = map.get_mut(key)?;
+        r.hits += 1;
+        r.last_use = Instant::now();
+        Some(r.handle.clone())
+    }
+
     /// Resolve a request's model reference: `None` → the default model; a
     /// full registry key, or a bare model key when exactly one variant of
-    /// it is resident.
+    /// it is resident. Resolution counts as a use (LRU touch + hit).
     pub fn get(&self, key: Option<&str>) -> Result<Arc<ModelHandle<'rt>>> {
-        let models = self.models.lock().unwrap();
+        let mut map = self.models.lock().unwrap();
         let key = match key {
             Some(k) => k.to_string(),
             None => self
@@ -218,15 +370,67 @@ impl<'rt> ModelRegistry<'rt> {
                 .clone()
                 .ok_or_else(|| anyhow!("registry has no models loaded"))?,
         };
-        if let Some(hit) = models.get(&key) {
-            return Ok(hit.clone());
+        let full = Self::resolve_full_key(&map, &key)?;
+        let r = map.get_mut(&full).expect("resolved key is resident");
+        r.hits += 1;
+        r.last_use = Instant::now();
+        let handle = r.handle.clone();
+        // Opportunistic TTL sweep — no background thread needed; the
+        // just-resolved variant is protected. The byte budget is enforced
+        // at insert time only (resolution never grows residency).
+        if self.ttl.is_some() {
+            self.sweep_ttl(&mut map, Some(&full));
+            self.repair_default(&map);
         }
-        let matching: Vec<&Arc<ModelHandle<'rt>>> =
-            models.values().filter(|h| h.model_key == key).collect();
+        Ok(handle)
+    }
+
+    /// Resolve like [`ModelRegistry::get`] but **without** the LRU touch
+    /// or hit count: metadata reads (the `info` op) must not keep an
+    /// otherwise-idle variant warm against TTL eviction or inflate its
+    /// hit counter.
+    pub fn peek(&self, key: Option<&str>) -> Result<Arc<ModelHandle<'rt>>> {
+        let map = self.models.lock().unwrap();
+        let key = match key {
+            Some(k) => k.to_string(),
+            None => self
+                .default_key
+                .lock()
+                .unwrap()
+                .clone()
+                .ok_or_else(|| anyhow!("registry has no models loaded"))?,
+        };
+        let full = Self::resolve_full_key(&map, &key)?;
+        Ok(map[&full].handle.clone())
+    }
+
+    /// Drop a resident variant (resolved like [`ModelRegistry::get`]:
+    /// full key or unambiguous bare model key). In-flight `Arc`s keep the
+    /// memory alive until they drop; the registry forgets the variant
+    /// immediately. Returns the full key that was unloaded.
+    pub fn unload(&self, key: &str) -> Result<String> {
+        let mut map = self.models.lock().unwrap();
+        let full = Self::resolve_full_key(&map, key)?;
+        map.remove(&full);
+        self.repair_default(&map);
+        Ok(full)
+    }
+
+    /// Resolve a full registry key from a full key or an unambiguous bare
+    /// model key — the one resolution rule shared by `get` and `unload`.
+    fn resolve_full_key(map: &HashMap<String, Resident<'rt>>, key: &str) -> Result<String> {
+        if map.contains_key(key) {
+            return Ok(key.to_string());
+        }
+        let matching: Vec<String> = map
+            .iter()
+            .filter(|(_, r)| r.handle.model_key == key)
+            .map(|(k, _)| k.clone())
+            .collect();
         match matching.len() {
-            1 => Ok(matching[0].clone()),
+            1 => Ok(matching.into_iter().next().unwrap()),
             0 => bail!("model {key:?} not resident (have: {:?})", {
-                let mut ks: Vec<&String> = models.keys().collect();
+                let mut ks: Vec<&String> = map.keys().collect();
                 ks.sort();
                 ks
             }),
@@ -237,10 +441,53 @@ impl<'rt> ModelRegistry<'rt> {
         }
     }
 
-    pub fn keys(&self) -> Vec<String> {
-        let mut ks: Vec<String> = self.models.lock().unwrap().keys().cloned().collect();
-        ks.sort();
-        ks
+    /// Governance snapshot for `{"op":"stats"}`: runs a TTL sweep, then
+    /// reports every resident variant (key-sorted) without touching LRU
+    /// state.
+    pub fn stats(&self) -> Vec<VariantStats> {
+        let mut map = self.models.lock().unwrap();
+        // TTL only: the byte budget is enforced at insert time, and a
+        // read-only stats call must never evict an over-budget variant
+        // that insert deliberately protected (it may be the only one).
+        self.sweep_ttl(&mut map, None);
+        self.repair_default(&map);
+        let now = Instant::now();
+        let mut v: Vec<VariantStats> = map
+            .iter()
+            .map(|(k, r)| VariantStats {
+                key: k.clone(),
+                resident_bytes: r.bytes,
+                hits: r.hits,
+                idle: now.duration_since(r.last_use),
+                pinned: Arc::strong_count(&r.handle) > 1,
+            })
+            .collect();
+        v.sort_by(|a, b| a.key.cmp(&b.key));
+        v
+    }
+
+    /// Variants evicted so far (budget + TTL; explicit `unload`s do not
+    /// count).
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
+    }
+
+    pub fn memory_budget(&self) -> Option<usize> {
+        self.max_resident_bytes
+    }
+
+    pub fn ttl(&self) -> Option<Duration> {
+        self.ttl
+    }
+
+    /// Snapshot of resident variants (key-sorted) **without** an LRU
+    /// touch — listing models must not make everything recently-used.
+    pub fn list(&self) -> Vec<(String, Arc<ModelHandle<'rt>>)> {
+        let map = self.models.lock().unwrap();
+        let mut v: Vec<(String, Arc<ModelHandle<'rt>>)> =
+            map.iter().map(|(k, r)| (k.clone(), r.handle.clone())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
     }
 
     pub fn len(&self) -> usize {
@@ -253,7 +500,64 @@ impl<'rt> ModelRegistry<'rt> {
 
     /// Total packed weight bytes resident across all variants.
     pub fn resident_bytes_total(&self) -> usize {
-        self.models.lock().unwrap().values().map(|h| h.resident_bytes()).sum()
+        self.models.lock().unwrap().values().map(|r| r.bytes).sum()
+    }
+
+    /// TTL sweep + LRU budget enforcement + default-key repair (the full
+    /// pass run on insert). `protect` (the variant just inserted or
+    /// resolved) is never evicted.
+    fn enforce_policy(&self, map: &mut HashMap<String, Resident<'rt>>, protect: Option<&str>) {
+        self.sweep_ttl(map, protect);
+        if let Some(budget) = self.max_resident_bytes {
+            while map.values().map(|r| r.bytes).sum::<usize>() > budget {
+                let victim = map
+                    .iter()
+                    .filter(|(k, _)| protect != Some(k.as_str()))
+                    .min_by_key(|(_, r)| r.last_use)
+                    .map(|(k, _)| k.clone());
+                match victim {
+                    Some(k) => {
+                        map.remove(&k);
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                        log::info!("registry: evicted {k} (over byte budget)");
+                    }
+                    // Only the protected variant remains: it may exceed
+                    // the budget on its own and must keep serving.
+                    None => break,
+                }
+            }
+        }
+        self.repair_default(map);
+    }
+
+    /// Evict variants idle past the TTL (if one is configured).
+    fn sweep_ttl(&self, map: &mut HashMap<String, Resident<'rt>>, protect: Option<&str>) {
+        if let Some(ttl) = self.ttl {
+            let now = Instant::now();
+            let expired: Vec<String> = map
+                .iter()
+                .filter(|(k, r)| {
+                    protect != Some(k.as_str()) && now.duration_since(r.last_use) > ttl
+                })
+                .map(|(k, _)| k.clone())
+                .collect();
+            for k in expired {
+                map.remove(&k);
+                self.evictions.fetch_add(1, Ordering::Relaxed);
+                log::info!("registry: evicted {k} (idle past TTL)");
+            }
+        }
+    }
+
+    /// Keep the default key pointing at a resident variant: if the
+    /// default was evicted/unloaded, fall forward to the most recently
+    /// used survivor (or none).
+    fn repair_default(&self, map: &HashMap<String, Resident<'rt>>) {
+        let mut def = self.default_key.lock().unwrap();
+        let ok = def.as_ref().is_some_and(|k| map.contains_key(k));
+        if !ok {
+            *def = map.iter().max_by_key(|(_, r)| r.last_use).map(|(k, _)| k.clone());
+        }
     }
 }
 

@@ -15,24 +15,35 @@
 //!   generation + shrinking-free failure reporting) used across the quant
 //!   and coordinator invariants.
 //! * [`progress`] — wall-clock scoped timers and rate reporting.
+//! * [`order`] — NaN-safe total orderings for score argmax/sorting.
 
 pub mod argparse;
 pub mod json;
+pub mod order;
 pub mod pool;
 pub mod progress;
 pub mod proptest;
 pub mod rng;
 pub mod toml;
 
-/// Simple stable 64-bit FNV-1a hash, used for config-keyed caching in the
-/// results store (stable across runs and platforms, unlike `DefaultHasher`).
-pub fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h: u64 = 0xcbf29ce484222325;
+/// FNV-1a offset basis: the seed for [`fnv1a_fold`] chains.
+pub const FNV1A_OFFSET: u64 = 0xcbf29ce484222325;
+
+/// Fold `bytes` into a running FNV-1a state — the streaming form of
+/// [`fnv1a`], used where a key is hashed from multiple components
+/// without assembling a byte buffer (the server's score-cache row keys).
+pub fn fnv1a_fold(mut h: u64, bytes: &[u8]) -> u64 {
     for &b in bytes {
         h ^= b as u64;
         h = h.wrapping_mul(0x100000001b3);
     }
     h
+}
+
+/// Simple stable 64-bit FNV-1a hash, used for config-keyed caching in the
+/// results store (stable across runs and platforms, unlike `DefaultHasher`).
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    fnv1a_fold(FNV1A_OFFSET, bytes)
 }
 
 #[cfg(test)]

@@ -1,0 +1,56 @@
+//! Total orderings for floating-point scores.
+//!
+//! `partial_cmp(..).unwrap()` over model scores panics the worker thread
+//! the moment an executable returns a NaN NLL. Score selection in the
+//! serving layer (`choose`) and the zero-shot harness uses this NaN-last
+//! total order instead: a NaN can never win an argmax, and callers detect
+//! the all-NaN case by checking the winner — surfacing an error response
+//! rather than unwinding a thread.
+
+use std::cmp::Ordering;
+
+/// Total order on `f64` in which every NaN sorts **below** every non-NaN
+/// value (NaNs compare equal to each other). A `max_by` using this
+/// comparator selects a NaN only when every candidate is NaN.
+pub fn nan_last_cmp(a: f64, b: f64) -> Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => Ordering::Equal,
+        (true, false) => Ordering::Less,
+        (false, true) => Ordering::Greater,
+        (false, false) => a.partial_cmp(&b).expect("non-NaN floats compare"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_reals_normally() {
+        assert_eq!(nan_last_cmp(1.0, 2.0), Ordering::Less);
+        assert_eq!(nan_last_cmp(2.0, 1.0), Ordering::Greater);
+        assert_eq!(nan_last_cmp(1.5, 1.5), Ordering::Equal);
+        assert_eq!(nan_last_cmp(f64::NEG_INFINITY, -1e308), Ordering::Less);
+    }
+
+    #[test]
+    fn nan_loses_to_everything() {
+        assert_eq!(nan_last_cmp(f64::NAN, f64::NEG_INFINITY), Ordering::Less);
+        assert_eq!(nan_last_cmp(f64::NEG_INFINITY, f64::NAN), Ordering::Greater);
+        assert_eq!(nan_last_cmp(f64::NAN, f64::NAN), Ordering::Equal);
+    }
+
+    #[test]
+    fn max_by_never_picks_nan_over_a_real() {
+        let scores = [f64::NAN, -3.0, f64::NAN, -1.0, -2.0];
+        let best = (0..scores.len())
+            .max_by(|&a, &b| nan_last_cmp(scores[a], scores[b]))
+            .unwrap();
+        assert_eq!(best, 3);
+        // All-NaN: an index still comes back (no panic); the caller
+        // checks the winning score and surfaces an error.
+        let all_nan = [f64::NAN, f64::NAN];
+        let best = (0..2).max_by(|&a, &b| nan_last_cmp(all_nan[a], all_nan[b])).unwrap();
+        assert!(all_nan[best].is_nan());
+    }
+}

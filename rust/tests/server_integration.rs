@@ -1,10 +1,14 @@
 //! Serving-layer integration: quantized models behind the JSON-lines
 //! protocol — the single-model [`Session`] API in memory (no sockets),
-//! and the packed-model registry + concurrent batched TCP stack.
+//! the packed-model registry + concurrent batched TCP stack, and the
+//! governance layer: LRU/TTL eviction under a byte budget, `unload`,
+//! single-flight loading, the score cache, and the serving-path
+//! regression fixes (vocab-bounded tokens, capped request lines).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::Barrier;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
 use std::time::Duration;
 
 use kbitscale::data::corpus::{Corpus, CorpusConfig};
@@ -236,4 +240,255 @@ fn load_op_makes_variants_resident_and_routes() {
             .unwrap(),
     );
     assert_eq!(again.get("models").unwrap().as_usize().unwrap(), 1);
+}
+
+// ---------------------------------------------------------------------------
+// Memory governance: eviction, TTL, unload, single-flight
+// ---------------------------------------------------------------------------
+
+#[test]
+fn eviction_under_budget_keeps_pinned_handles_alive() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    // A 1-byte budget: every insert is over budget, so each new variant
+    // evicts all unprotected residents while itself staying (the
+    // just-used variant is never evicted by its own enforcement pass).
+    let reg = registry(&rt, &manifest).with_memory_budget(Some(1));
+    let a = reg.load("gpt2like", "t0", QuantSpec::new(DataType::Fp, 4, Some(64))).unwrap();
+    let a_key = a.key();
+    assert_eq!(reg.len(), 1, "a single over-budget variant must still serve");
+    let b = reg.load("gpt2like", "t0", QuantSpec::new(DataType::Int, 3, Some(32))).unwrap();
+    assert_eq!(reg.len(), 1, "loading past the budget must evict the LRU variant");
+    assert!(reg.evictions() >= 1);
+    assert!(reg.get(Some(a_key.as_str())).is_err(), "evicted variant must not resolve");
+
+    // The evicted variant is pinned by our Arc: in-flight scoring still
+    // works until the last reference drops.
+    let tier = manifest.tier("t0").unwrap();
+    let (row, mask) = kbitscale::data::corpus::pad_score_row(&[1, 5, 9], tier.seq);
+    let scored = a.score_rows(&[(row, mask)]).unwrap();
+    assert!(scored[0].0.is_finite(), "pinned evicted handle must still score");
+
+    // stats reports the survivor (pinned: we hold `b`) and the eviction.
+    let mut conn = Connection::new(&reg, None);
+    let stats = conn.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
+    let models = stats.get("models").unwrap().as_arr().unwrap();
+    assert_eq!(models.len(), 1);
+    assert_eq!(models[0].get("key").unwrap().as_str().unwrap(), b.key());
+    assert!(models[0].get("pinned").unwrap().as_bool().unwrap());
+    assert!(stats.get("evictions").unwrap().as_f64().unwrap() >= 1.0);
+    assert_eq!(stats.get("budget_bytes").unwrap().as_usize().unwrap(), 1);
+
+    // The default key was repaired onto a survivor: implicit routing works.
+    let score = conn.handle(&Json::parse(r#"{"op":"score","tokens":[1,2,3]}"#).unwrap());
+    assert!(score.opt("ce").is_some(), "{score:?}");
+}
+
+#[test]
+fn ttl_evicts_idle_variants() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let reg = registry(&rt, &manifest).with_ttl(Some(Duration::from_millis(5)));
+    reg.load("gpt2like", "t0", QuantSpec::new(DataType::Fp, 4, Some(64))).unwrap();
+    assert_eq!(reg.len(), 1);
+    std::thread::sleep(Duration::from_millis(30));
+    // stats runs the TTL sweep (no background thread).
+    assert!(reg.stats().is_empty(), "idle variant must be TTL-evicted");
+    assert_eq!(reg.len(), 0);
+    assert!(reg.evictions() >= 1);
+}
+
+#[test]
+fn single_flight_load_builds_exactly_once() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let builds = Arc::new(AtomicUsize::new(0));
+    let counter = builds.clone();
+    let mref = manifest.clone();
+    let loader: ParamLoader<'static> = Box::new(move |family: &str, tier: &str| {
+        counter.fetch_add(1, Ordering::SeqCst);
+        // Widen the race window: without single-flight every racer lands
+        // in here and pays a full quantize+compile.
+        std::thread::sleep(Duration::from_millis(30));
+        Ok(init_params(mref.tier(tier)?, Family::get(family)?))
+    });
+    let reg = ModelRegistry::new(&rt, &manifest, loader);
+    let handles: Vec<_> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..6)
+            .map(|_| {
+                s.spawn(|| {
+                    reg.load("gpt2like", "t0", QuantSpec::new(DataType::Fp, 4, Some(64))).unwrap()
+                })
+            })
+            .collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    assert_eq!(builds.load(Ordering::SeqCst), 1, "racing loads must build once");
+    assert_eq!(reg.len(), 1);
+    for h in &handles[1..] {
+        assert!(Arc::ptr_eq(&handles[0], h), "all racers share the winner's handle");
+    }
+}
+
+#[test]
+fn unload_op_drops_variant() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let reg = registry(&rt, &manifest);
+    let mut conn = Connection::new(&reg, None);
+    let loaded = conn
+        .handle(&Json::parse(r#"{"op":"load","family":"gpt2like","tier":"t0"}"#).unwrap());
+    let key = loaded.get("model").unwrap().as_str().unwrap().to_string();
+
+    let err = conn.handle(&Json::parse(r#"{"op":"unload","model":"nope_t9"}"#).unwrap());
+    assert!(err.get("error").unwrap().as_str().unwrap().contains("not resident"));
+
+    let req = format!("{{\"op\":\"unload\",\"model\":\"{key}\"}}");
+    let gone = conn.handle(&Json::parse(&req).unwrap());
+    assert_eq!(gone.get("unloaded").unwrap().as_str().unwrap(), key);
+    assert_eq!(gone.get("models").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(reg.len(), 0);
+
+    // Nothing resident: scoring is a structured error again.
+    let err = conn.handle(&Json::parse(r#"{"op":"score","tokens":[1,2]}"#).unwrap());
+    assert!(err.opt("error").is_some());
+}
+
+// ---------------------------------------------------------------------------
+// Score cache
+// ---------------------------------------------------------------------------
+
+#[test]
+fn repeated_rows_hit_the_cache_with_identical_scores() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let reg = registry(&rt, &manifest).with_score_cache(256);
+    reg.load("gpt2like", "t0", QuantSpec::new(DataType::Fp, 4, Some(64))).unwrap();
+    let mut conn = Connection::new(&reg, None);
+
+    let req = Json::parse(r#"{"op":"score","tokens":[1,5,9,12,3]}"#).unwrap();
+    let first = conn.handle(&req);
+    assert!(first.opt("ce").is_some(), "{first:?}");
+    let info = conn.handle(&Json::parse(r#"{"op":"info"}"#).unwrap());
+    assert!(info.get("cached").unwrap().as_bool().unwrap());
+    assert_eq!(info.get("cache_hits").unwrap().as_usize().unwrap(), 0);
+    assert!(info.get("cache_misses").unwrap().as_usize().unwrap() >= 1);
+    assert!(info.get("cache_rows").unwrap().as_usize().unwrap() >= 1);
+
+    // The repeat is a hit and returns byte-identical scores.
+    let second = conn.handle(&req);
+    assert_eq!(first.dump(), second.dump());
+    let info = conn.handle(&Json::parse(r#"{"op":"info"}"#).unwrap());
+    assert!(info.get("cache_hits").unwrap().as_usize().unwrap() >= 1);
+
+    // A different row is a fresh miss, not a false hit.
+    let other = conn.handle(&Json::parse(r#"{"op":"score","tokens":[2,6,10,13,4]}"#).unwrap());
+    assert!(other.opt("ce").is_some());
+    assert_ne!(first.dump(), other.dump());
+}
+
+#[test]
+fn batched_serving_publishes_and_hits_the_cache() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let reg = registry(&rt, &manifest).with_score_cache(256);
+    reg.load("gpt2like", "t0", QuantSpec::new(DataType::Fp, 4, Some(64))).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOpts {
+        workers: 2,
+        flush: Duration::from_millis(1),
+        batching: true,
+        max_conns: Some(1),
+    };
+    std::thread::scope(|s| {
+        let server = s.spawn(|| serve_listener(&reg, listener, &opts));
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        let mut responses = Vec::new();
+        for _ in 0..6 {
+            writeln!(writer, "{{\"op\":\"score\",\"tokens\":[1,5,9,12,3]}}").unwrap();
+            let mut line = String::new();
+            reader.read_line(&mut line).unwrap();
+            responses.push(line.trim().to_string());
+        }
+        for r in &responses[1..] {
+            assert_eq!(&responses[0], r, "cached repeats must score identically");
+        }
+        writeln!(writer, "{{\"op\":\"info\"}}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let info = Json::parse(line.trim()).unwrap();
+        assert!(
+            info.get("cache_hits").unwrap().as_usize().unwrap() >= 4,
+            "batched path must serve repeats from the cache: {info:?}"
+        );
+        drop(writer);
+        drop(reader);
+        server.join().unwrap().unwrap();
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Serving-path regression fixes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn out_of_vocab_tokens_are_rejected() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let reg = registry(&rt, &manifest);
+    reg.load("gpt2like", "t0", QuantSpec::new(DataType::Fp, 4, Some(64))).unwrap();
+    let vocab = manifest.tier("t0").unwrap().vocab;
+    let mut conn = Connection::new(&reg, None);
+
+    // 3e9 would saturate an unchecked `f64 as i32` cast to i32::MAX.
+    let err = conn.handle(&Json::parse(r#"{"op":"score","tokens":[3000000000]}"#).unwrap());
+    assert!(
+        err.get("error").unwrap().as_str().unwrap().contains("out of range"),
+        "{err:?}"
+    );
+    // The first out-of-vocab value (== vocab) is rejected too.
+    let req = format!("{{\"op\":\"score\",\"tokens\":[{vocab}]}}");
+    let err = conn.handle(&Json::parse(&req).unwrap());
+    assert!(err.get("error").unwrap().as_str().unwrap().contains("out of range"));
+    // Fractional tokens stay rejected.
+    let err = conn.handle(&Json::parse(r#"{"op":"score","tokens":[1.5]}"#).unwrap());
+    assert!(err.opt("error").is_some());
+    // The last in-vocab token scores fine.
+    let req = format!("{{\"op\":\"score\",\"tokens\":[{},1,2]}}", vocab - 1);
+    let ok = conn.handle(&Json::parse(&req).unwrap());
+    assert!(ok.opt("ce").is_some(), "{ok:?}");
+    // choose validates context and choices the same way.
+    let req = format!(
+        "{{\"op\":\"choose\",\"context\":[1,2],\"choices\":[[3],[{vocab}]]}}"
+    );
+    let err = conn.handle(&Json::parse(&req).unwrap());
+    assert!(err.get("error").unwrap().as_str().unwrap().contains("out of range"));
+}
+
+#[test]
+fn oversized_request_line_gets_error_response_not_oom() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mut s = session(&rt, &manifest);
+
+    let mut input: Vec<u8> = Vec::new();
+    input.extend_from_slice(b"{\"op\":\"info\"}\n");
+    // One 2 MiB line: over the 1 MiB cap, must be rejected without
+    // buffering and without poisoning the rest of the stream.
+    input.extend_from_slice(&vec![b'x'; 2 << 20]);
+    input.push(b'\n');
+    input.extend_from_slice(b"{\"op\":\"score\",\"tokens\":[1,2,3]}\n");
+    let mut out = Vec::new();
+    let served = serve_lines(&mut s, &input[..], &mut out).unwrap();
+    assert_eq!(served, 3);
+    let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().trim().lines().collect();
+    assert_eq!(lines.len(), 3);
+    assert!(Json::parse(lines[0]).unwrap().opt("model").is_some());
+    let err = Json::parse(lines[1]).unwrap();
+    assert!(err.get("error").unwrap().as_str().unwrap().contains("exceeds"), "{err:?}");
+    assert!(Json::parse(lines[2]).unwrap().opt("ce").is_some());
 }

@@ -13,6 +13,8 @@ round-trips cleanly (see /opt/xla-example/README.md).
 Emitted artifacts:
 
   fwd_<tier>.hlo.txt     eval_scores graph per model scale
+  fwd_a_<tier>.hlo.txt   pipeline stage A (embed + layers [0, mid))
+  fwd_b_<tier>.hlo.txt   pipeline stage B (layers [mid, L) + head + scoring)
   train_<tier>.hlo.txt   fused Adam train-step graph per model scale
   dequant_matmul_u8.hlo.txt       fused Pallas dequant+matmul (uint8 idx)
   dequant_matmul_packed4.hlo.txt  fused Pallas dequant+matmul (4-bit packed)
@@ -50,6 +52,40 @@ def to_hlo_text(lowered) -> str:
     return comp.as_hlo_text()
 
 
+def stage_entries(cfg) -> list[dict]:
+    """Manifest description of the 2-stage pipeline split for one tier.
+
+    Each stage lists the tier parameters it owns; ``lo``/``hi`` select a
+    leading-layer-axis slice of a stacked tensor (absent = whole tensor).
+    The Rust ``runtime::plan`` engine turns this into an ExecutionPlan;
+    the tied LM head means ``embed`` is replicated into stage B.
+    """
+    mid = model.pipeline_mid(cfg)
+    lo_half = [{"source": nm, "lo": 0, "hi": mid} for nm in model.STACKED_PARAMS]
+    hi_half = [
+        {"source": nm, "lo": mid, "hi": cfg.n_layer} for nm in model.STACKED_PARAMS
+    ]
+    return [
+        {
+            "name": "s0",
+            "hlo": f"fwd_a_{cfg.name}.hlo.txt",
+            "outputs": 1,
+            "params": [{"source": "embed"}, {"source": "pos"}, *lo_half],
+        },
+        {
+            "name": "s1",
+            "hlo": f"fwd_b_{cfg.name}.hlo.txt",
+            "outputs": 2,
+            "params": [
+                *hi_half,
+                {"source": "lnf_s"},
+                {"source": "lnf_b"},
+                {"source": "embed"},
+            ],
+        },
+    ]
+
+
 def lower_model_graphs(out_dir: pathlib.Path, tiers) -> list[dict]:
     entries = []
     for cfg in tiers:
@@ -61,6 +97,11 @@ def lower_model_graphs(out_dir: pathlib.Path, tiers) -> list[dict]:
 
         acts = jax.jit(model.calibration_acts(cfg)).lower(*model.acts_example_args(cfg))
         (out_dir / f"acts_{cfg.name}.hlo.txt").write_text(to_hlo_text(acts))
+
+        stage_a = jax.jit(model.fwd_stage_a(cfg)).lower(*model.stage_a_example_args(cfg))
+        (out_dir / f"fwd_a_{cfg.name}.hlo.txt").write_text(to_hlo_text(stage_a))
+        stage_b = jax.jit(model.fwd_stage_b(cfg)).lower(*model.stage_b_example_args(cfg))
+        (out_dir / f"fwd_b_{cfg.name}.hlo.txt").write_text(to_hlo_text(stage_b))
 
         shapes = model.param_shapes(cfg)
         entries.append(
@@ -82,6 +123,7 @@ def lower_model_graphs(out_dir: pathlib.Path, tiers) -> list[dict]:
                 "fwd_hlo": f"fwd_{cfg.name}.hlo.txt",
                 "train_hlo": f"train_{cfg.name}.hlo.txt",
                 "acts_hlo": f"acts_{cfg.name}.hlo.txt",
+                "stages": stage_entries(cfg),
             }
         )
         print(f"  lowered {cfg.name}: {model.param_count(cfg):,} params")

@@ -40,6 +40,10 @@ __all__ = [
     "param_shapes",
     "param_count",
     "eval_scores",
+    "fwd_stage_a",
+    "fwd_stage_b",
+    "pipeline_mid",
+    "STACKED_PARAMS",
     "train_step",
     "init_params",
     "TIERS",
@@ -203,13 +207,12 @@ def _logits(params, tokens, cfg: ModelConfig):
     return x @ embed.T  # tied LM head
 
 
-def _masked_nll(params, tokens, mask, cfg: ModelConfig):
-    """Per-sequence masked NLL sum and greedy top-1 hit count.
+def _scores_from_logits(logits, tokens, mask):
+    """Masked NLL sum + greedy top-1 hit count from LM logits.
 
-    ``mask[b, s]`` weights the prediction of ``tokens[b, s]`` from position
-    ``s - 1``; position 0 is never a target (its mask entry is ignored).
+    Shared by the monolithic eval graph and the final pipeline stage so a
+    sharded plan scores with the exact arithmetic of the one-graph path.
     """
-    logits = _logits(params, tokens, cfg)  # (B, S, V)
     logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)  # predicts tokens[:,1:]
     targets = tokens[:, 1:]
     m = mask[:, 1:]
@@ -218,6 +221,15 @@ def _masked_nll(params, tokens, mask, cfg: ModelConfig):
     top1 = (jnp.argmax(logp, axis=-1) == targets).astype(jnp.float32)
     hits = (top1 * m).sum(axis=-1)  # (B,)
     return nll, hits
+
+
+def _masked_nll(params, tokens, mask, cfg: ModelConfig):
+    """Per-sequence masked NLL sum and greedy top-1 hit count.
+
+    ``mask[b, s]`` weights the prediction of ``tokens[b, s]`` from position
+    ``s - 1``; position 0 is never a target (its mask entry is ignored).
+    """
+    return _scores_from_logits(_logits(params, tokens, cfg), tokens, mask)
 
 
 def eval_scores(cfg: ModelConfig):
@@ -234,6 +246,115 @@ def eval_scores(cfg: ModelConfig):
         return _masked_nll(params, tokens, mask, cfg)
 
     return f
+
+
+# ---------------------------------------------------------------------------
+# Pipeline-sharded eval graphs
+# ---------------------------------------------------------------------------
+#
+# The monolithic ``eval_scores`` graph caps the model size one executable
+# (and one process) can host.  The 2-stage split below shards the forward
+# at a layer boundary ``mid``; each stage is lowered to its own HLO
+# artifact and chained at run time by the Rust ``runtime::plan`` engine.
+#
+# Uniform stage calling convention (what the Rust side relies on):
+#
+#   stage_i(*stage_params, *carried, tokens, mask) -> carried'
+#
+# where ``carried`` is the previous stage's output tuple (empty for stage
+# 0) and the final stage returns ``(nll, hits)``.  Stacked per-layer
+# parameters are sliced ``[:mid]`` / ``[mid:]`` along the leading layer
+# axis — a contiguous slice of the checkpoint tensor on the Rust side.
+# The tied LM head means ``embed`` appears in both stages (real pipeline
+# deployments replicate tied embeddings the same way).
+
+#: Layer-stacked parameter names (leading ``n_layer`` axis), in the order
+#: each stage's scan consumes them.
+STACKED_PARAMS = ("qkv", "wo", "fc1", "fc2", "ln1_s", "ln1_b", "ln2_s", "ln2_b")
+
+
+def pipeline_mid(cfg: ModelConfig) -> int:
+    """The layer boundary of the 2-stage split (first stage gets [0, mid))."""
+    return cfg.n_layer // 2
+
+
+def fwd_stage_a(cfg: ModelConfig):
+    """Stage A: ``(embed, pos, *stacked[:mid], tokens, mask) -> (hidden,)``.
+
+    Embeds tokens and runs the first ``mid`` transformer blocks; the
+    hidden state ``(B, S, d)`` is the activation handed to stage B.
+    """
+
+    def f(*args):
+        embed, pos = args[0], args[1]
+        stacked = args[2:10]
+        tokens, mask = args[10], args[11]
+        x = embed[tokens] + pos[None]
+
+        def step(carry, lp):
+            return _block(carry, lp, cfg), None
+
+        x, _ = lax.scan(step, x, stacked)
+        # Keep `mask` alive: the stablehlo->XlaComputation conversion drops
+        # unused parameters (see calibration_acts), which would break the
+        # uniform (params..., carried..., tokens, mask) stage signature.
+        keep = jnp.float32(0.0) * jnp.sum(mask)
+        return (x + keep,)
+
+    return f
+
+
+def fwd_stage_b(cfg: ModelConfig):
+    """Stage B: ``(*stacked[mid:], lnf_s, lnf_b, embed, hidden, tokens,
+    mask) -> (nll, hits)`` — the remaining blocks, final LayerNorm, tied
+    LM head, and the same masked scoring arithmetic as ``eval_scores``."""
+
+    def f(*args):
+        stacked = args[:8]
+        lfs, lfb, embed = args[8], args[9], args[10]
+        h, tokens, mask = args[11], args[12], args[13]
+
+        def step(carry, lp):
+            return _block(carry, lp, cfg), None
+
+        x, _ = lax.scan(step, h, stacked)
+        x = _layernorm(x, lfs, lfb)
+        return _scores_from_logits(x @ embed.T, tokens, mask)
+
+    return f
+
+
+def _stacked_slice_struct(cfg: ModelConfig, name: str, n_layers: int):
+    shape = param_shapes(cfg)[name]
+    return jax.ShapeDtypeStruct((n_layers, *shape[1:]), jnp.float32)
+
+
+def stage_a_example_args(cfg: ModelConfig, batch: int = BATCH_EVAL):
+    shapes = param_shapes(cfg)
+    mid = pipeline_mid(cfg)
+    params = [
+        jax.ShapeDtypeStruct(shapes["embed"], jnp.float32),
+        jax.ShapeDtypeStruct(shapes["pos"], jnp.float32),
+    ]
+    params += [_stacked_slice_struct(cfg, nm, mid) for nm in STACKED_PARAMS]
+    tokens = jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32)
+    mask = jax.ShapeDtypeStruct((batch, cfg.seq), jnp.float32)
+    return (*params, tokens, mask)
+
+
+def stage_b_example_args(cfg: ModelConfig, batch: int = BATCH_EVAL):
+    shapes = param_shapes(cfg)
+    rest = cfg.n_layer - pipeline_mid(cfg)
+    params = [_stacked_slice_struct(cfg, nm, rest) for nm in STACKED_PARAMS]
+    params += [
+        jax.ShapeDtypeStruct(shapes["lnf_s"], jnp.float32),
+        jax.ShapeDtypeStruct(shapes["lnf_b"], jnp.float32),
+        jax.ShapeDtypeStruct(shapes["embed"], jnp.float32),
+    ]
+    hidden = jax.ShapeDtypeStruct((batch, cfg.seq, cfg.d_model), jnp.float32)
+    tokens = jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32)
+    mask = jax.ShapeDtypeStruct((batch, cfg.seq), jnp.float32)
+    return (*params, hidden, tokens, mask)
 
 
 def _block_with_taps(x, layer_params, cfg: ModelConfig):

@@ -4,7 +4,7 @@
 //! pre-registry sequential serving path), plus the packed-vs-f32 resident
 //! weight footprint of every variant hosted by the registry.
 //!
-//! Two governance sections follow the throughput table:
+//! Four focused sections follow the throughput table:
 //!
 //! * **score cache** — repeat traffic (every client resends the same row)
 //!   against a cache-enabled vs cache-disabled registry; cached rows skip
@@ -12,6 +12,12 @@
 //! * **eviction churn** — a registry whose `--max-resident-bytes` budget
 //!   holds ~one variant, loaded round-robin with three variants: every
 //!   load past the budget evicts the LRU resident and pays a rebuild.
+//! * **pipeline plans** — the same traffic against the monolithic vs the
+//!   2-stage sharded build of one spec; the activation handoff should
+//!   cost < 10% added p50 latency.
+//! * **streamed vs buffered** — one 48-row request with `stream:true` vs
+//!   buffered; streaming should put the first partial scores on the wire
+//!   well before the buffered response completes.
 //!
 //! Init-only parameters are used (throughput does not depend on training),
 //! so this bench needs artifacts but no checkpoints.
@@ -26,7 +32,7 @@ use kbitscale::models::manifest::Manifest;
 use kbitscale::quant::codebook::DataType;
 use kbitscale::quant::QuantSpec;
 use kbitscale::runtime::Runtime;
-use kbitscale::server::{serve_listener, ModelRegistry, ParamLoader, ServeOpts};
+use kbitscale::server::{serve_listener, ModelRegistry, ParamLoader, PlanRequest, ServeOpts};
 
 const REQS_PER_CLIENT: usize = 40;
 
@@ -69,7 +75,7 @@ fn main() -> anyhow::Result<()> {
     let mut batched_4 = 0.0f64;
     for &clients in &[1usize, 4, 16] {
         for &batching in &[false, true] {
-            let (rps, p50, p95) = run_trial(&registry, clients, batching, false)?;
+            let (rps, p50, p95) = run_trial(&registry, clients, batching, false, None)?;
             if clients == 1 && !batching {
                 seq_1 = rps;
             }
@@ -92,12 +98,47 @@ fn main() -> anyhow::Result<()> {
     println!();
     let cached = ModelRegistry::new(&rt, &manifest, make_loader(&manifest)).with_score_cache(4096);
     cached.load("gpt2like", "t0", QuantSpec::new(DataType::Fp, 4, Some(64)))?;
-    let (uncached_rps, _, _) = run_trial(&registry, 4, true, true)?;
-    let (cached_rps, cp50, _) = run_trial(&cached, 4, true, true)?;
+    let (uncached_rps, _, _) = run_trial(&registry, 4, true, true, None)?;
+    let (cached_rps, cp50, _) = run_trial(&cached, 4, true, true, None)?;
     println!(
         "repeat traffic, 4 clients: uncached {uncached_rps:.1} req/s | cached {cached_rps:.1} req/s \
          (p50 {cp50:.3} ms) | {:.1}x (target >= 5x)",
         cached_rps / uncached_rps.max(1e-9)
+    );
+
+    // --- pipeline plans: monolithic vs 2-stage sharded ------------------
+    println!();
+    if manifest.tier("t0")?.stages.is_empty() {
+        println!("pipeline plans: artifacts declare no stages; section skipped");
+    } else {
+        let piped = registry.load_plan(
+            "gpt2like",
+            "t0",
+            QuantSpec::new(DataType::Fp, 4, Some(64)),
+            &PlanRequest::staged(),
+        )?;
+        let (mono_key, pipe_key) = (h0.key(), piped.key());
+        let (_, mono_p50, _) = run_trial(&registry, 4, true, false, Some(mono_key.as_str()))?;
+        let (_, pipe_p50, _) = run_trial(&registry, 4, true, false, Some(pipe_key.as_str()))?;
+        println!(
+            "pipeline handoff: monolithic p50 {mono_p50:.2} ms | 2-stage p50 {pipe_p50:.2} ms \
+             ({:+.1}% overhead, target < 10%)",
+            (pipe_p50 / mono_p50.max(1e-9) - 1.0) * 100.0
+        );
+        for (name, bytes) in &piped.stage_bytes {
+            println!("  stage {name}: {bytes} packed B resident");
+        }
+    }
+
+    // --- streamed vs buffered multi-row responses -----------------------
+    println!();
+    let (buf_first, buf_total) = stream_trial(&registry, 48, false)?;
+    let (str_first, str_total) = stream_trial(&registry, 48, true)?;
+    println!(
+        "48-row request: buffered first/total {buf_first:.1}/{buf_total:.1} ms | \
+         streamed first/total {str_first:.1}/{str_total:.1} ms \
+         (first-scores {:.1}x sooner)",
+        buf_first / str_first.max(1e-9)
     );
 
     // --- eviction churn: budget holds ~one variant ----------------------
@@ -132,12 +173,14 @@ fn main() -> anyhow::Result<()> {
 /// One trial: spin up the server for exactly `clients` connections, run
 /// the clients concurrently, and collect per-request latencies. With
 /// `repeat`, every client sends the same row every time (the cache's best
-/// case); otherwise rows vary per client and request.
+/// case); otherwise rows vary per client and request. `model` routes
+/// every request to one resident variant (`None` = the registry default).
 fn run_trial(
     registry: &ModelRegistry<'_>,
     clients: usize,
     batching: bool,
     repeat: bool,
+    model: Option<&str>,
 ) -> anyhow::Result<(f64, f64, f64)> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
@@ -155,7 +198,7 @@ fn run_trial(
         let server = s.spawn(|| serve_listener(registry, listener, &opts));
         let mut joins = Vec::new();
         for c in 0..clients {
-            joins.push(s.spawn(move || client_run(addr, c, repeat)));
+            joins.push(s.spawn(move || client_run(addr, c, repeat, model)));
         }
         for j in joins {
             lats.extend(j.join().expect("client thread panicked")?);
@@ -169,21 +212,84 @@ fn run_trial(
     Ok(((clients * REQS_PER_CLIENT) as f64 / wall, pct(0.50), pct(0.95)))
 }
 
-fn client_run(addr: SocketAddr, c: usize, repeat: bool) -> anyhow::Result<Vec<f64>> {
+/// One multi-row request against a 1-client server: returns
+/// `(ms to first scored line, ms total)`. With `stream`, the first line
+/// is the first chunk; buffered, the single response is both.
+fn stream_trial(
+    registry: &ModelRegistry<'_>,
+    rows: usize,
+    stream: bool,
+) -> anyhow::Result<(f64, f64)> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    let opts = ServeOpts {
+        workers: 1,
+        flush: Duration::from_millis(1),
+        batching: false,
+        max_conns: Some(1),
+    };
+    let mut first_ms = 0.0f64;
+    let mut total_ms = 0.0f64;
+    std::thread::scope(|s| -> anyhow::Result<()> {
+        let server = s.spawn(|| serve_listener(registry, listener, &opts));
+        let sock = TcpStream::connect(addr)?;
+        let mut reader = BufReader::new(sock.try_clone()?);
+        let mut writer = sock;
+        let row_json: Vec<String> = (0..rows)
+            .map(|i| format!("[1,{},9,{},3]", 2 + i % 200, 5 + i % 100))
+            .collect();
+        let t0 = Instant::now();
+        writeln!(
+            writer,
+            "{{\"op\":\"score\",\"rows\":[{}],\"stream\":{stream}}}",
+            row_json.join(",")
+        )?;
+        loop {
+            let mut line = String::new();
+            if reader.read_line(&mut line)? == 0 {
+                anyhow::bail!("server hung up mid-response");
+            }
+            if line.contains("\"error\"") {
+                anyhow::bail!("server error: {line}");
+            }
+            if first_ms == 0.0 {
+                first_ms = t0.elapsed().as_secs_f64() * 1e3;
+            }
+            // Buffered: the one response line. Streamed: stop on "done".
+            if !stream || line.contains("\"done\":true") {
+                break;
+            }
+        }
+        total_ms = t0.elapsed().as_secs_f64() * 1e3;
+        drop(writer);
+        drop(reader);
+        server.join().expect("server thread panicked")?;
+        Ok(())
+    })?;
+    Ok((first_ms, total_ms))
+}
+
+fn client_run(
+    addr: SocketAddr,
+    c: usize,
+    repeat: bool,
+    model: Option<&str>,
+) -> anyhow::Result<Vec<f64>> {
     let stream = TcpStream::connect(addr)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = stream;
+    let route = model.map(|m| format!(",\"model\":\"{m}\"")).unwrap_or_default();
     let mut lats = Vec::with_capacity(REQS_PER_CLIENT);
     for i in 0..REQS_PER_CLIENT {
         let t = Instant::now();
         if repeat {
             // Identical row across all clients and requests: after the
             // first forward, every request is a cache hit (when enabled).
-            writeln!(writer, "{{\"op\":\"score\",\"tokens\":[1,2,9,5,3,7]}}")?;
+            writeln!(writer, "{{\"op\":\"score\",\"tokens\":[1,2,9,5,3,7]{route}}}")?;
         } else {
             writeln!(
                 writer,
-                "{{\"op\":\"score\",\"tokens\":[1,{},9,{},3,7]}}",
+                "{{\"op\":\"score\",\"tokens\":[1,{},9,{},3,7]{route}}}",
                 2 + (c + i) % 200,
                 5 + i % 100
             )?;

@@ -344,6 +344,8 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             .opt("bits", Some("4"), "quantization bit width (16 = baseline)")
             .opt("dtype", Some("fp"), "int|fp|quantile|dynexp")
             .opt("block", Some("64"), "block size (0 = tensor-wise)")
+            .flag("pipeline", "serve the default model pipeline-sharded (per-stage executables)")
+            .opt("stage-bits", None, "per-stage bit widths for --pipeline, csv (16 = unquantized stage)")
             .opt("preload", None, "extra variants, csv of family:tier[:bits[:dtype[:block]]]")
             .opt("workers", Some("0"), "connection worker threads (0 = auto)")
             .opt("flush-ms", Some("2"), "micro-batch flush window in milliseconds")
@@ -383,11 +385,27 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             s => Some(std::time::Duration::from_secs(s as u64)),
         })
         .with_score_cache(args.usize("cache-rows")?);
-    let default = registry.load(family.name, args.get("tier")?, qspec)?;
+    let stage_bits = match args.opt_get("stage-bits") {
+        Some(csv) => {
+            let bits = csv
+                .split(',')
+                .map(|b| {
+                    b.trim()
+                        .parse::<usize>()
+                        .map_err(|_| anyhow::anyhow!("bad --stage-bits {csv:?}"))
+                })
+                .collect::<Result<Vec<_>>>()?;
+            Some(bits)
+        }
+        None => None,
+    };
+    let plan = crate::server::PlanRequest { pipeline: args.flag("pipeline"), stage_bits };
+    let default = registry.load_plan(family.name, args.get("tier")?, qspec, &plan)?;
     log::info!(
-        "resident {}: {} packed bytes",
+        "resident {}: {} packed bytes across {} stage(s)",
         default.key(),
-        default.resident_bytes()
+        default.resident_bytes(),
+        default.n_stages()
     );
     // Only needed for the log line: holding the Arc for the whole serve
     // lifetime would report the default variant as pinned in `stats`.

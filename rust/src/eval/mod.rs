@@ -1,7 +1,10 @@
 //! Evaluation harness: perplexity and the four zero-shot tasks.
 //!
-//! One AOT graph serves every metric: `fwd_<tier>.hlo.txt` maps
-//! `(params…, tokens, mask)` to per-row `(nll_sum, top1_hits)`.
+//! Scoring runs through an [`ExecutionPlan`] (`runtime::plan`): the
+//! monolithic `fwd_<tier>.hlo.txt` graph is the degenerate single-stage
+//! plan mapping `(params…, tokens, mask)` to per-row `(nll_sum,
+//! top1_hits)`; a pipeline-sharded tier chains its stage artifacts by
+//! activation handoff instead, with identical scoring semantics.
 //! Perplexity masks all real tokens; zero-shot tasks mask the candidate
 //! continuation and compare **length-normalized** log-likelihood across
 //! choices (the EleutherAI harness's multiple-choice scoring rule).
@@ -15,10 +18,8 @@ use anyhow::{bail, Result};
 use crate::data::corpus::Corpus;
 use crate::data::tasks::{scoring_rows, Task, TaskSet};
 use crate::models::manifest::{Manifest, TierManifest};
-use crate::runtime::{lit_f32, lit_i32, to_vec_f32, Executable, Runtime};
+use crate::runtime::{lit_f32, lit_i32, to_vec_f32, ExecutionPlan, Runtime};
 use crate::tensor::Tensor;
-
-use std::sync::Arc;
 
 /// How much evaluation a sweep cell requests.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -60,20 +61,41 @@ pub struct EvalResult {
     pub top1: f64,
 }
 
-/// The evaluator for one tier: holds the compiled graph + batch geometry.
+/// The evaluator for one tier: holds the compiled execution plan + batch
+/// geometry.
 pub struct Evaluator<'rt> {
     rt: &'rt Runtime,
-    exe: Arc<Executable>,
+    plan: ExecutionPlan,
     tier: TierManifest,
 }
 
 impl<'rt> Evaluator<'rt> {
+    /// The default evaluator: the monolithic single-stage plan.
     pub fn new(rt: &'rt Runtime, manifest: &Manifest, tier: &TierManifest) -> Result<Self> {
-        let exe = rt.load(&manifest.hlo_path(&tier.fwd_hlo))?;
-        Ok(Evaluator { rt, exe, tier: tier.clone() })
+        Evaluator::with_plan(rt, manifest, tier, false)
     }
 
-    /// Build the reusable parameter literals for a parameter set. Generic
+    /// Evaluator over an explicit plan choice: `pipeline` selects the
+    /// tier's declared multi-stage plan (errors if the manifest declares
+    /// none); otherwise the monolithic graph.
+    pub fn with_plan(
+        rt: &'rt Runtime,
+        manifest: &Manifest,
+        tier: &TierManifest,
+        pipeline: bool,
+    ) -> Result<Self> {
+        let plan = ExecutionPlan::compile(rt, manifest, tier, pipeline)?;
+        Ok(Evaluator { rt, plan, tier: tier.clone() })
+    }
+
+    /// The compiled execution plan (stage layout + per-stage geometry).
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.plan
+    }
+
+    /// Build the reusable parameter literals for a parameter set, in the
+    /// plan's flat parameter order (== tier manifest order for the
+    /// monolithic plan; per-stage slices for pipeline plans). Generic
     /// over `Borrow<Tensor>` so borrowed (`Cow`) checkpoints from
     /// [`crate::quant::quantize_checkpoint_cow`] avoid f32 copies.
     pub fn param_literals<T: std::borrow::Borrow<Tensor>>(
@@ -83,7 +105,7 @@ impl<'rt> Evaluator<'rt> {
         if params.len() != self.tier.params.len() {
             bail!("expected {} parameter tensors, got {}", self.tier.params.len(), params.len());
         }
-        params.iter().map(|(_, t)| lit_f32(t.borrow())).collect()
+        self.plan.param_literals(params)
     }
 
     /// Public scoring entry point used by the serving layer: rows must be
@@ -118,13 +140,9 @@ impl<'rt> Evaluator<'rt> {
             let mask_lit = lit_f32(&Tensor::new(vec![b, s], mask))?;
             // Parameter literals are borrowed: built once per cell, reused
             // across every batch of the cell (the sweep's hot-path saving).
-            let mut args: Vec<&xla::Literal> = Vec::with_capacity(plits.len() + 2);
-            args.extend(plits.iter());
-            args.push(&tok_lit);
-            args.push(&mask_lit);
-            let res = self.rt.execute(&self.exe, &args)?;
+            let res = self.plan.execute(self.rt, plits, &tok_lit, &mask_lit)?;
             if res.len() != 2 {
-                bail!("eval graph returned {} leaves, expected 2", res.len());
+                bail!("eval plan returned {} leaves, expected 2", res.len());
             }
             let nll = to_vec_f32(&res[0])?;
             let hits = to_vec_f32(&res[1])?;

@@ -26,11 +26,11 @@
 //! | [`gptq`] | one-shot GPTQ (Hessian/Cholesky sequential rounding) |
 //! | [`data`] | synthetic Zipf–Markov corpus + four zero-shot task generators |
 //! | [`models`] | model zoo: families, tiers, init (incl. outlier injection), checkpoints |
-//! | [`runtime`] | PJRT client wrapper: HLO-text loading, executable cache, literal conversion |
+//! | [`runtime`] | PJRT client wrapper: HLO-text loading, single-flight executable cache, literal conversion, pipeline-sharded execution plans (`runtime::plan`) |
 //! | [`train`] | training driver over the AOT train-step executable |
-//! | [`eval`] | perplexity + zero-shot evaluation harness |
+//! | [`eval`] | perplexity + zero-shot evaluation harness, scored through execution plans |
 //! | [`coordinator`] | sweep grid, scheduler, worker pool, results store |
-//! | [`server`] | LRU/TTL-governed packed-model registry + sharded score cache + concurrent micro-batched JSON-lines serving |
+//! | [`server`] | LRU/TTL-governed packed-model registry (monolithic + pipeline-sharded variants, per-stage mixed precision) + sharded score cache + concurrent micro-batched JSON-lines serving with chunked streaming responses |
 //! | [`scaling`] | scaling curves, Pareto frontiers, bit-level optimality, correlations |
 //! | [`report`] | ASCII figures and CSV emission for every paper table/figure |
 //! | [`bench_support`] | shared harness for the `benches/` reproduction binaries |

@@ -128,6 +128,7 @@ mod tests {
             fwd_hlo: "x".into(),
             train_hlo: "y".into(),
             acts_hlo: None,
+            stages: Vec::new(),
         }
     }
 

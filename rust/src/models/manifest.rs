@@ -22,6 +22,31 @@ impl ParamInfo {
     }
 }
 
+/// One stage parameter reference: a tier parameter, optionally sliced
+/// along its leading (layer) axis. `layers == None` means the whole
+/// tensor; `Some((lo, hi))` selects stacked layers `[lo, hi)` — a
+/// contiguous slice of the checkpoint tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageParamRef {
+    pub source: String,
+    pub layers: Option<(usize, usize)>,
+}
+
+/// One pipeline stage of a sharded execution plan: an HLO artifact with
+/// the tier parameters it owns and its output arity. Stages chain by
+/// activation handoff under the uniform calling convention
+/// `(stage params…, carried…, tokens, mask) -> carried'`; the final
+/// stage returns `(nll, hits)`.
+#[derive(Debug, Clone)]
+pub struct StageManifest {
+    pub name: String,
+    pub hlo: String,
+    pub params: Vec<StageParamRef>,
+    /// Output leaves this stage's graph returns (carried into the next
+    /// stage; the last stage must return 2).
+    pub outputs: usize,
+}
+
 /// Static description of one model scale.
 #[derive(Debug, Clone)]
 pub struct TierManifest {
@@ -41,6 +66,9 @@ pub struct TierManifest {
     pub train_hlo: String,
     /// GPTQ calibration-activation graph (absent in pre-v2 manifests).
     pub acts_hlo: Option<String>,
+    /// Pipeline-sharded execution plan stages (empty in pre-v3 manifests:
+    /// only the monolithic single-stage plan is available then).
+    pub stages: Vec<StageManifest>,
 }
 
 impl TierManifest {
@@ -163,6 +191,31 @@ fn parse_tier(j: &Json) -> Result<TierManifest> {
         fwd_hlo: j.get("fwd_hlo")?.as_str()?.to_string(),
         train_hlo: j.get("train_hlo")?.as_str()?.to_string(),
         acts_hlo: j.opt("acts_hlo").and_then(|v| v.as_str().ok().map(str::to_string)),
+        stages: match j.opt("stages") {
+            Some(s) => s.as_arr()?.iter().map(parse_stage).collect::<Result<Vec<_>>>()?,
+            None => Vec::new(),
+        },
+    })
+}
+
+fn parse_stage(j: &Json) -> Result<StageManifest> {
+    Ok(StageManifest {
+        name: j.get("name")?.as_str()?.to_string(),
+        hlo: j.get("hlo")?.as_str()?.to_string(),
+        outputs: j.get("outputs")?.as_usize()?,
+        params: j
+            .get("params")?
+            .as_arr()?
+            .iter()
+            .map(|p| {
+                let layers = match (p.opt("lo"), p.opt("hi")) {
+                    (Some(lo), Some(hi)) => Some((lo.as_usize()?, hi.as_usize()?)),
+                    (None, None) => None,
+                    _ => bail!("stage param needs both lo and hi (or neither)"),
+                };
+                Ok(StageParamRef { source: p.get("source")?.as_str()?.to_string(), layers })
+            })
+            .collect::<Result<Vec<_>>>()?,
     })
 }
 
@@ -236,6 +289,53 @@ mod tests {
         let sizes = m.tier("t0").unwrap().param_sizes();
         let total: usize = sizes.iter().map(|(_, n)| n).sum();
         assert_eq!(total, 512 * 32 + 2 * 32 * 96);
+    }
+
+    #[test]
+    fn parses_pipeline_stages() {
+        let (_g, m) = fixture();
+        // Pre-v3 fixture: no stages block -> empty (monolithic only).
+        assert!(m.tier("t0").unwrap().stages.is_empty());
+
+        let dir = tempdir::guard("manifest_stages");
+        let json = r#"{
+            "version": 1, "vocab": 512, "seq": 64,
+            "param_names": ["embed", "qkv"],
+            "tiers": [{
+                "name": "t0", "d_model": 32, "n_layer": 2, "n_head": 2,
+                "d_ff": 128, "vocab": 512, "seq": 64,
+                "batch_train": 8, "batch_eval": 16, "param_count": 43328,
+                "params": [
+                    {"name": "embed", "shape": [512, 32]},
+                    {"name": "qkv", "shape": [2, 32, 96]}
+                ],
+                "quantized_params": ["qkv"],
+                "fwd_hlo": "fwd_t0.hlo.txt", "train_hlo": "train_t0.hlo.txt",
+                "stages": [
+                    {"name": "s0", "hlo": "fwd_a_t0.hlo.txt", "outputs": 1,
+                     "params": [{"source": "embed"},
+                                {"source": "qkv", "lo": 0, "hi": 1}]},
+                    {"name": "s1", "hlo": "fwd_b_t0.hlo.txt", "outputs": 2,
+                     "params": [{"source": "qkv", "lo": 1, "hi": 2},
+                                {"source": "embed"}]}
+                ]
+            }],
+            "kernels": {
+                "m": 16, "k": 512, "n": 512, "qblock": 64, "codebook_pad": 256,
+                "u8_hlo": "a.hlo.txt", "packed4_hlo": "b.hlo.txt", "f32_hlo": "c.hlo.txt"
+            }
+        }"#;
+        std::fs::write(dir.path.join("manifest.json"), json).unwrap();
+        let m = Manifest::load(&dir.path).unwrap();
+        let t = m.tier("t0").unwrap();
+        assert_eq!(t.stages.len(), 2);
+        assert_eq!(t.stages[0].name, "s0");
+        assert_eq!(t.stages[0].outputs, 1);
+        assert_eq!(t.stages[0].params[0], StageParamRef { source: "embed".into(), layers: None });
+        assert_eq!(
+            t.stages[1].params[0],
+            StageParamRef { source: "qkv".into(), layers: Some((1, 2)) }
+        );
     }
 
     #[test]

@@ -121,16 +121,29 @@ pub struct PackedParam {
 impl PackedParam {
     /// Quantize a tensor under `spec` straight into packed residency.
     pub fn quantize(t: &Tensor, spec: &QuantSpec) -> Result<PackedParam> {
-        let slices = if t.shape().len() == 3 {
-            let l = t.shape()[0];
-            let per = t.len() / l.max(1);
+        Self::quantize_slice(t.shape(), t.data(), spec)
+    }
+
+    /// Quantize borrowed `(shape, data)` without an intermediate `Tensor`
+    /// — the serving path quantizes layer slices of checkpoint tensors
+    /// (pipeline stages) straight from the source tensor's storage, so no
+    /// transient f32 copy is made on the load path.
+    pub fn quantize_slice(shape: &[usize], data: &[f32], spec: &QuantSpec) -> Result<PackedParam> {
+        anyhow::ensure!(
+            shape.iter().product::<usize>() == data.len(),
+            "quantize_slice: shape {shape:?} does not match {} elements",
+            data.len()
+        );
+        let slices = if shape.len() == 3 {
+            let l = shape[0];
+            let per = data.len() / l.max(1);
             (0..l)
-                .map(|li| PackedTensor::quantize(&t.data()[li * per..(li + 1) * per], spec))
+                .map(|li| PackedTensor::quantize(&data[li * per..(li + 1) * per], spec))
                 .collect::<Result<Vec<_>>>()?
         } else {
-            vec![PackedTensor::quantize(t.data(), spec)?]
+            vec![PackedTensor::quantize(data, spec)?]
         };
-        Ok(PackedParam { shape: t.shape().to_vec(), slices })
+        Ok(PackedParam { shape: shape.to_vec(), slices })
     }
 
     /// Total element count across slices.
@@ -163,6 +176,46 @@ impl PackedParam {
     pub fn resident_bytes(&self) -> usize {
         self.slices.iter().map(|s| s.resident_bytes()).sum()
     }
+}
+
+/// Resolve the per-stage quantization specs of a pipeline plan: stage
+/// `i` uses `stage_bits[i]` over the base spec's dtype/block/centering
+/// (`>= 16` keeps that stage unquantized — the mixed-precision deployment
+/// shape where, say, the embedding-heavy first stage stays 16-bit while
+/// later stages pack to 4). `None` repeats the base spec for every stage.
+///
+/// Validated here — stage bit widths come off the wire (the serve `load`
+/// op) and must fail as an error response, not a quantizer panic.
+pub fn stage_specs(
+    base: &QuantSpec,
+    n_stages: usize,
+    stage_bits: Option<&[usize]>,
+) -> Result<Vec<QuantSpec>> {
+    let Some(bits) = stage_bits else {
+        return Ok(vec![base.clone(); n_stages]);
+    };
+    anyhow::ensure!(
+        bits.len() == n_stages,
+        "got {} stage bit widths for a {n_stages}-stage plan",
+        bits.len()
+    );
+    bits.iter()
+        .map(|&k| {
+            if k >= 16 {
+                return Ok(QuantSpec::baseline16());
+            }
+            anyhow::ensure!(
+                (1..=8).contains(&k),
+                "unsupported stage bit width {k} (1..=8, or >=16 for the baseline)"
+            );
+            let mut s = base.clone();
+            s.bits = k;
+            s.codebook().map_err(|e| {
+                anyhow::anyhow!("unsupported stage quantization config {}: {e:#}", s.key())
+            })?;
+            Ok(s)
+        })
+        .collect()
 }
 
 /// Quantize each leading-axis slice of a stacked (L, ...) tensor
@@ -254,6 +307,35 @@ mod tests {
         // Baseline borrows everything.
         let base = quantize_checkpoint_cow(&params, &["qkv".to_string()], &QuantSpec::baseline16());
         assert!(base.iter().all(|(_, t)| matches!(t, std::borrow::Cow::Borrowed(_))));
+    }
+
+    #[test]
+    fn quantize_slice_matches_tensor_path_and_validates() {
+        let t = randn(vec![2, 4, 4], 7);
+        let spec = QuantSpec::new(DataType::Int, 4, Some(16));
+        let a = PackedParam::quantize(&t, &spec).unwrap();
+        let b = PackedParam::quantize_slice(t.shape(), t.data(), &spec).unwrap();
+        let (mut da, mut db) = (vec![0.0; t.len()], vec![0.0; t.len()]);
+        a.dequantize_into(&mut da).unwrap();
+        b.dequantize_into(&mut db).unwrap();
+        assert_eq!(da, db, "borrowed-slice quantization must match the Tensor path");
+        assert!(PackedParam::quantize_slice(&[3, 3], t.data(), &spec).is_err());
+    }
+
+    #[test]
+    fn stage_specs_resolve_and_validate() {
+        let base = QuantSpec::new(DataType::Fp, 4, Some(64));
+        // No overrides: the base spec repeats per stage.
+        let s = stage_specs(&base, 2, None).unwrap();
+        assert_eq!(s, vec![base.clone(), base.clone()]);
+        // Mixed precision: 16 = unquantized stage, others override bits.
+        let s = stage_specs(&base, 2, Some(&[16, 3])).unwrap();
+        assert!(s[0].is_baseline());
+        assert_eq!((s[1].bits, s[1].dtype, s[1].block), (3, DataType::Fp, Some(64)));
+        // Length mismatch and unbuildable widths are errors, not panics.
+        assert!(stage_specs(&base, 2, Some(&[4])).is_err());
+        assert!(stage_specs(&base, 2, Some(&[4, 9])).is_err());
+        assert!(stage_specs(&base, 2, Some(&[0, 4])).is_err());
     }
 
     #[test]

@@ -7,18 +7,25 @@
 //! XLA rejects, while the text parser reassigns ids (see
 //! /opt/xla-example/README.md and DESIGN.md §2).
 //!
-//! Compiled executables are cached per artifact path: every sweep cell of
-//! a tier reuses one compilation. All graphs are lowered with
+//! Compiled executables are cached per artifact path (single-flight:
+//! racing threads compile each artifact once): every sweep cell of a tier
+//! reuses one compilation. All graphs are lowered with
 //! `return_tuple=True`, so execution unwraps a single tuple literal into
-//! its leaves.
+//! its leaves. [`plan`] builds multi-stage execution plans (pipeline
+//! sharding) on top of this cache; the monolithic graph is the degenerate
+//! single-stage plan.
 
-use std::collections::HashMap;
+pub mod plan;
+
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{Context, Result};
 
 use crate::tensor::Tensor;
+
+pub use plan::{ExecutionPlan, PlanLayout};
 
 /// Compiled-executable handle, shareable across worker threads.
 ///
@@ -35,9 +42,14 @@ unsafe impl Send for Executable {}
 unsafe impl Sync for Executable {}
 
 /// The process-wide runtime: one PJRT CPU client + executable cache.
+/// Loading is single-flight: racing threads that miss the cache compile
+/// each artifact exactly once (mirroring the model registry's pattern).
 pub struct Runtime {
     client: xla::PjRtClient,
     cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
+    /// Paths some thread is currently compiling (single-flight loading).
+    compiling: Mutex<HashSet<PathBuf>>,
+    compiled_cv: Condvar,
 }
 
 unsafe impl Send for Runtime {}
@@ -53,15 +65,56 @@ impl Runtime {
             client.platform_name(),
             client.device_count()
         );
-        Ok(Runtime { client, cache: Mutex::new(HashMap::new()) })
+        Ok(Runtime {
+            client,
+            cache: Mutex::new(HashMap::new()),
+            compiling: Mutex::new(HashSet::new()),
+            compiled_cv: Condvar::new(),
+        })
     }
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
-    /// Load + compile an HLO-text artifact (cached).
+    /// Load + compile an HLO-text artifact (cached, single-flight).
+    /// Racing threads that miss the cache compile the artifact exactly
+    /// once: one claims the build, the rest block until its executable is
+    /// cached and share it.
     pub fn load(&self, path: &Path) -> Result<Arc<Executable>> {
+        loop {
+            if let Some(hit) = self.cache.lock().unwrap().get(path) {
+                return Ok(hit.clone());
+            }
+            // Claim the compile, or wait for the thread that holds it.
+            {
+                let mut compiling = self.compiling.lock().unwrap();
+                if !compiling.contains(path) {
+                    compiling.insert(path.to_path_buf());
+                    break;
+                }
+                while compiling.contains(path) {
+                    compiling = self.compiled_cv.wait(compiling).unwrap();
+                }
+            }
+            // The builder finished (or failed): re-check the cache; on
+            // failure this thread claims the compile and retries it.
+        }
+        // Release the claim on every exit path, including compile errors,
+        // so waiters never block on a dead flight.
+        struct FlightGuard<'g> {
+            rt: &'g Runtime,
+            path: &'g Path,
+        }
+        impl Drop for FlightGuard<'_> {
+            fn drop(&mut self) {
+                self.rt.compiling.lock().unwrap().remove(self.path);
+                self.rt.compiled_cv.notify_all();
+            }
+        }
+        let _flight = FlightGuard { rt: self, path };
+        // A winner may have inserted between our cache check and the
+        // claim; one more look avoids a redundant compile.
         if let Some(hit) = self.cache.lock().unwrap().get(path) {
             return Ok(hit.clone());
         }

@@ -1,0 +1,467 @@
+//! Pipeline-sharded execution plans.
+//!
+//! The pre-plan execution path assumed one monolithic AOT graph per tier
+//! (`Runtime::load` → a single [`Executable`]), which caps the model size
+//! one executable can host. An [`ExecutionPlan`] generalizes that: an
+//! ordered list of **stages**, each an HLO artifact with typed
+//! inputs/outputs, chained by activation handoff. Every stage is lowered
+//! with the uniform calling convention
+//!
+//! ```text
+//! stage_i(stage params…, carried…, tokens, mask) -> carried'
+//! ```
+//!
+//! where `carried` is the previous stage's output tuple (empty for stage
+//! 0) and the final stage returns the usual `(nll_sum, top1_hits)` pair.
+//! The monolithic graph is the degenerate single-stage plan, so one
+//! engine serves both shapes and the sweep/serving layers no longer know
+//! about raw executables.
+//!
+//! [`PlanLayout`] is the compile-free half: stage parameter references
+//! from the manifest resolved into concrete shapes and flat-parameter
+//! indices (unit-testable without artifacts). [`ExecutionPlan`] adds the
+//! compiled executables, reusing the runtime's per-artifact single-flight
+//! cache — and is the drop-in point for a GPU/TPU PJRT client: stages
+//! compile per device with no layer above this module changing.
+//!
+//! Stage parameters may be leading-axis **slices** of stacked checkpoint
+//! tensors (`lo..hi` layer ranges), so a sharded plan holds each weight
+//! exactly once per owning stage; the tied LM head replicates `embed`
+//! into the final stage, as real pipeline deployments do.
+
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::{lit_f32_slice, Executable, Runtime};
+use crate::models::manifest::{Manifest, TierManifest};
+use crate::tensor::Tensor;
+
+/// One resolved plan parameter: a tier checkpoint tensor, optionally
+/// sliced along its leading (layer) axis, owned by one stage.
+#[derive(Debug, Clone)]
+pub struct PlanParam {
+    /// Source tier parameter name (e.g. `qkv`).
+    pub source: String,
+    /// Leading-axis layer range `[lo, hi)`; `None` = the whole tensor.
+    pub layers: Option<(usize, usize)>,
+    /// Shape after slicing.
+    pub shape: Vec<usize>,
+    /// Owning stage index.
+    pub stage: usize,
+}
+
+impl PlanParam {
+    /// Display name: `s0/qkv[0..2]` for slices, plain source otherwise.
+    pub fn label(&self, stage_name: &str) -> String {
+        match self.layers {
+            Some((lo, hi)) => format!("{stage_name}/{}[{lo}..{hi}]", self.source),
+            None => format!("{stage_name}/{}", self.source),
+        }
+    }
+
+    /// Element count of the (sliced) parameter.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Borrow the slice of `t` this parameter covers (the whole data for
+    /// unsliced params). Validates the source tensor's geometry.
+    pub fn slice_of<'t>(&self, t: &'t Tensor) -> Result<&'t [f32]> {
+        match self.layers {
+            None => {
+                ensure!(
+                    t.len() == self.numel(),
+                    "param {}: checkpoint has {} elements, plan expects {}",
+                    self.source,
+                    t.len(),
+                    self.numel()
+                );
+                Ok(t.data())
+            }
+            Some((lo, hi)) => {
+                let Some(&l) = t.shape().first() else {
+                    bail!("param {}: cannot layer-slice a scalar", self.source)
+                };
+                ensure!(
+                    hi <= l && lo < hi,
+                    "param {}: layer range {lo}..{hi} out of bounds for {l} layers",
+                    self.source
+                );
+                let per = t.len() / l.max(1);
+                Ok(&t.data()[lo * per..hi * per])
+            }
+        }
+    }
+}
+
+/// The compile-free description of one stage: its artifact file, the
+/// range of plan parameters it owns, and its output arity.
+#[derive(Debug, Clone)]
+pub struct PlanStage {
+    pub name: String,
+    pub hlo: String,
+    /// `[lo, hi)` range into [`PlanLayout::params`] (plan parameters are
+    /// listed stage by stage, so each stage's share is contiguous).
+    pub params: (usize, usize),
+    /// Output leaves (carried into the next stage; final stage: 2).
+    pub outputs: usize,
+}
+
+/// Shape/index resolution of a plan against a tier — everything except
+/// the compiled executables, so validation is testable without artifacts.
+#[derive(Debug, Clone)]
+pub struct PlanLayout {
+    pub tier: String,
+    pub params: Vec<PlanParam>,
+    pub stages: Vec<PlanStage>,
+}
+
+impl PlanLayout {
+    /// The degenerate single-stage plan every tier supports: the
+    /// monolithic `fwd` graph taking all tier parameters.
+    pub fn monolithic(tier: &TierManifest) -> PlanLayout {
+        let params = tier
+            .params
+            .iter()
+            .map(|p| PlanParam {
+                source: p.name.clone(),
+                layers: None,
+                shape: p.shape.clone(),
+                stage: 0,
+            })
+            .collect::<Vec<_>>();
+        let n = params.len();
+        PlanLayout {
+            tier: tier.name.clone(),
+            params,
+            stages: vec![PlanStage {
+                name: "fwd".into(),
+                hlo: tier.fwd_hlo.clone(),
+                params: (0, n),
+                outputs: 2,
+            }],
+        }
+    }
+
+    /// Resolve the tier's declared pipeline stages into a layout.
+    /// Validates stage parameter references, slice bounds, and output
+    /// arities; errors here are manifest bugs, not runtime states.
+    pub fn staged(tier: &TierManifest) -> Result<PlanLayout> {
+        if tier.stages.is_empty() {
+            bail!(
+                "tier {} declares no pipeline stages (pre-v3 artifacts?); \
+                 rerun `make artifacts` or use the monolithic plan",
+                tier.name
+            );
+        }
+        let mut params = Vec::new();
+        let mut stages = Vec::new();
+        for (si, st) in tier.stages.iter().enumerate() {
+            ensure!(st.outputs >= 1, "stage {} declares no outputs", st.name);
+            let lo = params.len();
+            for r in &st.params {
+                let info = tier
+                    .params
+                    .iter()
+                    .find(|p| p.name == r.source)
+                    .with_context(|| {
+                        format!("stage {} references unknown param {:?}", st.name, r.source)
+                    })?;
+                let shape = match r.layers {
+                    None => info.shape.clone(),
+                    Some((a, b)) => {
+                        let Some(&l) = info.shape.first() else {
+                            bail!("stage {}: cannot layer-slice scalar {:?}", st.name, r.source)
+                        };
+                        ensure!(
+                            a < b && b <= l,
+                            "stage {}: {:?} layer range {a}..{b} out of bounds for {l}",
+                            st.name,
+                            r.source
+                        );
+                        let mut s = info.shape.clone();
+                        s[0] = b - a;
+                        s
+                    }
+                };
+                params.push(PlanParam {
+                    source: r.source.clone(),
+                    layers: r.layers,
+                    shape,
+                    stage: si,
+                });
+            }
+            stages.push(PlanStage {
+                name: st.name.clone(),
+                hlo: st.hlo.clone(),
+                params: (lo, params.len()),
+                outputs: st.outputs,
+            });
+        }
+        let last = stages.last().expect("non-empty stages");
+        ensure!(
+            last.outputs == 2,
+            "final stage {} must return (nll, hits), declares {} outputs",
+            last.name,
+            last.outputs
+        );
+        Ok(PlanLayout { tier: tier.name.clone(), params, stages })
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Whether this is the degenerate monolithic plan.
+    pub fn is_monolithic(&self) -> bool {
+        self.stages.len() == 1
+    }
+
+    /// Build the flat parameter-literal vector for this layout from a
+    /// tier checkpoint (name → tensor pairs in any order). Sliced
+    /// parameters borrow the source tensor's contiguous layer range — no
+    /// intermediate `Tensor` copies.
+    pub fn param_literals<T: std::borrow::Borrow<Tensor>>(
+        &self,
+        checkpoint: &[(String, T)],
+    ) -> Result<Vec<xla::Literal>> {
+        self.params
+            .iter()
+            .map(|p| {
+                let (_, t) = checkpoint
+                    .iter()
+                    .find(|(n, _)| n == &p.source)
+                    .with_context(|| format!("checkpoint missing param {:?}", p.source))?;
+                lit_f32_slice(&p.shape, p.slice_of(t.borrow())?)
+            })
+            .collect()
+    }
+}
+
+/// A compiled plan: the layout plus one executable per stage.
+pub struct ExecutionPlan {
+    pub layout: PlanLayout,
+    exes: Vec<Arc<Executable>>,
+}
+
+impl ExecutionPlan {
+    /// Compile a plan for `tier`: the declared pipeline stages when
+    /// `pipeline` is set, the monolithic single-stage plan otherwise.
+    /// Stage artifacts go through the runtime's per-artifact cache, so
+    /// plans sharing a stage (or repeated compiles of one tier) reuse
+    /// compilations.
+    pub fn compile(
+        rt: &Runtime,
+        manifest: &Manifest,
+        tier: &TierManifest,
+        pipeline: bool,
+    ) -> Result<ExecutionPlan> {
+        let layout =
+            if pipeline { PlanLayout::staged(tier)? } else { PlanLayout::monolithic(tier) };
+        let exes = layout
+            .stages
+            .iter()
+            .map(|s| rt.load(&manifest.hlo_path(&s.hlo)))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ExecutionPlan { layout, exes })
+    }
+
+    /// Run the plan on one batch: each stage gets its own parameter
+    /// literals, the previous stage's outputs (activation handoff), and
+    /// the shared `tokens`/`mask` literals; returns the final stage's
+    /// `(nll, hits)` leaves.
+    pub fn execute(
+        &self,
+        rt: &Runtime,
+        plits: &[xla::Literal],
+        tokens: &xla::Literal,
+        mask: &xla::Literal,
+    ) -> Result<Vec<xla::Literal>> {
+        ensure!(
+            plits.len() == self.layout.params.len(),
+            "plan {} wants {} parameter literals, got {}",
+            self.layout.tier,
+            self.layout.params.len(),
+            plits.len()
+        );
+        let mut carried: Vec<xla::Literal> = Vec::new();
+        for (stage, exe) in self.layout.stages.iter().zip(&self.exes) {
+            let (lo, hi) = stage.params;
+            let mut args: Vec<&xla::Literal> = Vec::with_capacity(hi - lo + carried.len() + 2);
+            args.extend(plits[lo..hi].iter());
+            args.extend(carried.iter());
+            args.push(tokens);
+            args.push(mask);
+            let out = rt
+                .execute(exe, &args)
+                .with_context(|| format!("executing plan stage {}", stage.name))?;
+            ensure!(
+                out.len() == stage.outputs,
+                "stage {} returned {} leaves, expected {}",
+                stage.name,
+                out.len(),
+                stage.outputs
+            );
+            carried = out;
+        }
+        Ok(carried)
+    }
+
+    /// Build the flat parameter-literal vector from a tier checkpoint
+    /// (see [`PlanLayout::param_literals`]).
+    pub fn param_literals<T: std::borrow::Borrow<Tensor>>(
+        &self,
+        checkpoint: &[(String, T)],
+    ) -> Result<Vec<xla::Literal>> {
+        self.layout.param_literals(checkpoint)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Layout resolution is artifact-free; staged *execution* is covered
+    //! by the integration suite (`rust/tests/`).
+    use super::*;
+    use crate::models::manifest::{ParamInfo, StageManifest, StageParamRef};
+
+    fn tier_with_stages(stages: Vec<StageManifest>) -> TierManifest {
+        TierManifest {
+            name: "t0".into(),
+            d_model: 32,
+            n_layer: 2,
+            n_head: 2,
+            d_ff: 128,
+            vocab: 512,
+            seq: 64,
+            batch_train: 8,
+            batch_eval: 16,
+            param_count: 0,
+            params: vec![
+                ParamInfo { name: "embed".into(), shape: vec![512, 32] },
+                ParamInfo { name: "qkv".into(), shape: vec![2, 32, 96] },
+            ],
+            quantized_params: vec!["qkv".into()],
+            fwd_hlo: "fwd_t0.hlo.txt".into(),
+            train_hlo: "train_t0.hlo.txt".into(),
+            acts_hlo: None,
+            stages,
+        }
+    }
+
+    fn two_stage() -> Vec<StageManifest> {
+        vec![
+            StageManifest {
+                name: "s0".into(),
+                hlo: "fwd_a_t0.hlo.txt".into(),
+                outputs: 1,
+                params: vec![
+                    StageParamRef { source: "embed".into(), layers: None },
+                    StageParamRef { source: "qkv".into(), layers: Some((0, 1)) },
+                ],
+            },
+            StageManifest {
+                name: "s1".into(),
+                hlo: "fwd_b_t0.hlo.txt".into(),
+                outputs: 2,
+                params: vec![
+                    StageParamRef { source: "qkv".into(), layers: Some((1, 2)) },
+                    StageParamRef { source: "embed".into(), layers: None },
+                ],
+            },
+        ]
+    }
+
+    #[test]
+    fn monolithic_layout_mirrors_tier_params() {
+        let tier = tier_with_stages(vec![]);
+        let l = PlanLayout::monolithic(&tier);
+        assert!(l.is_monolithic());
+        assert_eq!(l.params.len(), 2);
+        assert_eq!(l.stages[0].params, (0, 2));
+        assert_eq!(l.stages[0].outputs, 2);
+        assert_eq!(l.params[1].shape, vec![2, 32, 96]);
+    }
+
+    #[test]
+    fn staged_layout_slices_and_replicates() {
+        let tier = tier_with_stages(two_stage());
+        let l = PlanLayout::staged(&tier).unwrap();
+        assert_eq!(l.n_stages(), 2);
+        assert!(!l.is_monolithic());
+        // Sliced stacked tensor: leading dim replaced by the range width.
+        assert_eq!(l.params[1].shape, vec![1, 32, 96]);
+        assert_eq!(l.params[2].shape, vec![1, 32, 96]);
+        // embed is replicated (tied head) — once per owning stage.
+        let embeds: Vec<usize> =
+            l.params.iter().filter(|p| p.source == "embed").map(|p| p.stage).collect();
+        assert_eq!(embeds, vec![0, 1]);
+        // Contiguous per-stage ranges.
+        assert_eq!(l.stages[0].params, (0, 2));
+        assert_eq!(l.stages[1].params, (2, 4));
+        assert_eq!(l.params[0].label("s0"), "s0/embed");
+        assert_eq!(l.params[1].label("s0"), "s0/qkv[0..1]");
+    }
+
+    #[test]
+    fn staged_layout_rejects_bad_manifests() {
+        // No stages declared.
+        assert!(PlanLayout::staged(&tier_with_stages(vec![])).is_err());
+        // Unknown source param.
+        let mut bad = two_stage();
+        bad[0].params[0].source = "nope".into();
+        assert!(PlanLayout::staged(&tier_with_stages(bad)).is_err());
+        // Slice out of bounds.
+        let mut bad = two_stage();
+        bad[1].params[0].layers = Some((1, 3));
+        assert!(PlanLayout::staged(&tier_with_stages(bad)).is_err());
+        // Empty slice.
+        let mut bad = two_stage();
+        bad[0].params[1].layers = Some((1, 1));
+        assert!(PlanLayout::staged(&tier_with_stages(bad)).is_err());
+        // Final stage must score.
+        let mut bad = two_stage();
+        bad[1].outputs = 1;
+        assert!(PlanLayout::staged(&tier_with_stages(bad)).is_err());
+    }
+
+    #[test]
+    fn plan_param_slicing_borrows_layer_ranges() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let p = PlanParam {
+            source: "qkv".into(),
+            layers: Some((1, 2)),
+            shape: vec![1, 3],
+            stage: 0,
+        };
+        assert_eq!(p.slice_of(&t).unwrap(), &[4., 5., 6.]);
+        let whole =
+            PlanParam { source: "x".into(), layers: None, shape: vec![2, 3], stage: 0 };
+        assert_eq!(whole.slice_of(&t).unwrap().len(), 6);
+        let bad = PlanParam {
+            source: "x".into(),
+            layers: Some((2, 3)),
+            shape: vec![1, 3],
+            stage: 0,
+        };
+        assert!(bad.slice_of(&t).is_err());
+        // Shape mismatch on an unsliced param is caught, not silently fed.
+        let wrong =
+            PlanParam { source: "x".into(), layers: None, shape: vec![7], stage: 0 };
+        assert!(wrong.slice_of(&t).is_err());
+    }
+
+    #[test]
+    fn layout_param_literals_resolve_by_name() {
+        let tier = tier_with_stages(two_stage());
+        let l = PlanLayout::staged(&tier).unwrap();
+        let embed = Tensor::zeros(vec![512, 32]);
+        let qkv = Tensor::zeros(vec![2, 32, 96]);
+        // Checkpoint order differs from plan order: resolution is by name.
+        let ckpt = vec![("qkv".to_string(), qkv), ("embed".to_string(), embed)];
+        let lits = l.param_literals(&ckpt).unwrap();
+        assert_eq!(lits.len(), 4);
+        // Missing tensors are an error, not a panic.
+        assert!(l.param_literals(&ckpt[..1].to_vec()).is_err());
+    }
+}

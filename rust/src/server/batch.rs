@@ -177,39 +177,28 @@ fn execute_group(mut jobs: Vec<ScoreJob<'_>>, cache: Option<&ScoreCache>) {
     // Move the rows out of the jobs (remembering each job's share) rather
     // than cloning seq-length token/mask vectors on the hot path.
     let lens: Vec<usize> = jobs.iter().map(|j| j.rows.len()).collect();
-    let mut rows: Vec<(Vec<i32>, Vec<f32>)> =
+    let rows: Vec<(Vec<i32>, Vec<f32>)> =
         jobs.iter_mut().flat_map(|j| j.rows.drain(..)).collect();
-    let mut vals: Vec<Option<(f64, f64)>> = rows
-        .iter()
-        .map(|r| cache.and_then(|c| c.probe(&key, r)))
-        .collect();
-    let miss_idx: Vec<usize> = vals
-        .iter()
-        .enumerate()
-        .filter_map(|(i, v)| v.is_none().then_some(i))
-        .collect();
-    if !miss_idx.is_empty() {
-        let miss_rows: Vec<(Vec<i32>, Vec<f32>)> =
-            miss_idx.iter().map(|&i| std::mem::take(&mut rows[i])).collect();
-        match handle.score_rows(&miss_rows) {
+    // Silent re-probe (shared seam: `cache::RowLookup`): rows whose twin
+    // completed while queued become hits without touching the counters
+    // the request handler already maintained.
+    let mut lk = super::cache::RowLookup::probe(cache, &key, rows, false);
+    if !lk.is_complete() {
+        match handle.score_rows(&lk.miss_rows) {
             Ok(scored) => {
                 if let Some(c) = cache {
-                    for (row, val) in miss_rows.iter().zip(&scored) {
-                        c.put(&key, row, *val);
-                    }
+                    lk.publish(c, &key, &scored);
                 }
-                for (&i, val) in miss_idx.iter().zip(&scored) {
-                    vals[i] = Some(*val);
-                }
+                lk.fill(scored);
             }
             Err(e) => {
                 // Fail only the jobs that needed the forward; a job whose
-                // rows were all cache hits already has its scores in
-                // `vals` and must not inherit a stranger's fault.
+                // rows were all cache hits already has its scores in the
+                // lookup and must not inherit a stranger's fault.
                 let msg = format!("batched execution failed: {e:#}");
                 let mut off = 0;
                 for (job, n) in jobs.into_iter().zip(lens) {
-                    let span = &vals[off..off + n];
+                    let span = &lk.vals[off..off + n];
                     if span.iter().all(|v| v.is_some()) {
                         let out: Vec<(f64, f64)> =
                             span.iter().map(|v| v.expect("all hits")).collect();
@@ -223,13 +212,10 @@ fn execute_group(mut jobs: Vec<ScoreJob<'_>>, cache: Option<&ScoreCache>) {
             }
         }
     }
+    let scores = lk.into_scores();
     let mut off = 0;
     for (job, n) in jobs.into_iter().zip(lens) {
-        let out: Vec<(f64, f64)> = vals[off..off + n]
-            .iter()
-            .map(|v| v.expect("every row is cached or scored"))
-            .collect();
-        let _ = job.tx.send(Ok(out));
+        let _ = job.tx.send(Ok(scores[off..off + n].to_vec()));
         off += n;
     }
 }

@@ -152,6 +152,88 @@ impl ScoreCache {
     }
 }
 
+/// The cache-probe half of scoring a row batch — the one row-assembly
+/// seam shared by the request handler's `score_via` (direct and streamed
+/// chunks) and the batch dispatcher, so cache semantics can never diverge
+/// between the two paths.
+///
+/// `probe` splits rows into hits (`vals[i] = Some`) and misses
+/// (`miss_rows`, with their original positions in `miss_idx`); after the
+/// caller scores the misses, [`RowLookup::fill`] merges the fresh scores
+/// back in and [`RowLookup::into_scores`] yields the complete per-row
+/// vector in request order. Only **complete** rows ever enter the cache
+/// ([`RowLookup::publish`]): streamed chunks publish per finished chunk,
+/// partial stage activations never.
+pub struct RowLookup {
+    /// Per-row scores; `Some` for cache hits, filled for misses by `fill`.
+    pub vals: Vec<Option<(f64, f64)>>,
+    /// Original positions of the rows in `miss_rows`.
+    pub miss_idx: Vec<usize>,
+    /// The rows that need a forward pass, in `miss_idx` order.
+    pub miss_rows: Vec<(Vec<i32>, Vec<f32>)>,
+}
+
+impl RowLookup {
+    /// Probe `cache` for every row. `counted` selects the request-level
+    /// counted lookup ([`ScoreCache::get`]) vs the dispatcher's silent
+    /// re-check ([`ScoreCache::probe`]). With no cache, every row is a
+    /// miss.
+    pub fn probe(
+        cache: Option<&ScoreCache>,
+        key: &str,
+        rows: Vec<(Vec<i32>, Vec<f32>)>,
+        counted: bool,
+    ) -> RowLookup {
+        let vals: Vec<Option<(f64, f64)>> = rows
+            .iter()
+            .map(|r| {
+                cache.and_then(|c| if counted { c.get(key, r) } else { c.probe(key, r) })
+            })
+            .collect();
+        let mut rows = rows;
+        let mut miss_idx = Vec::new();
+        let mut miss_rows = Vec::new();
+        for (i, v) in vals.iter().enumerate() {
+            if v.is_none() {
+                miss_idx.push(i);
+                miss_rows.push(std::mem::take(&mut rows[i]));
+            }
+        }
+        RowLookup { vals, miss_idx, miss_rows }
+    }
+
+    /// Every row was a cache hit — nothing to score.
+    pub fn is_complete(&self) -> bool {
+        self.miss_idx.is_empty()
+    }
+
+    /// Publish freshly scored miss rows to the cache (call before
+    /// [`RowLookup::fill`], which does not retain the rows).
+    pub fn publish(&self, cache: &ScoreCache, key: &str, scored: &[(f64, f64)]) {
+        for (row, val) in self.miss_rows.iter().zip(scored) {
+            cache.put(key, row, *val);
+        }
+    }
+
+    /// Merge the miss scores (in `miss_rows` order) back into `vals`.
+    pub fn fill(&mut self, scored: Vec<(f64, f64)>) {
+        assert_eq!(scored.len(), self.miss_idx.len(), "scorer returned wrong row count");
+        for (&i, val) in self.miss_idx.iter().zip(scored) {
+            self.vals[i] = Some(val);
+        }
+    }
+
+    /// The complete per-row score vector, in original request order.
+    /// Panics if misses were never filled — a caller bug, not a runtime
+    /// state.
+    pub fn into_scores(self) -> Vec<(f64, f64)> {
+        self.vals
+            .into_iter()
+            .map(|v| v.expect("every row cached or scored"))
+            .collect()
+    }
+}
+
 /// Streaming FNV-1a ([`crate::util::fnv1a_fold`]) over the full row key:
 /// model key, token count, tokens, mask bits. Stable across platforms.
 fn row_hash(model: &str, row: &(Vec<i32>, Vec<f32>)) -> u64 {
@@ -226,6 +308,34 @@ mod tests {
         c.put("m", &r, (f64::INFINITY, 0.0));
         assert_eq!(c.get("m", &r), None);
         assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn row_lookup_splits_hits_and_misses() {
+        let c = ScoreCache::new(64);
+        let (a, b, d) = (row(&[1]), row(&[2]), row(&[3]));
+        c.put("m", &b, (2.0, 0.0));
+        let mut lk =
+            RowLookup::probe(Some(&c), "m", vec![a.clone(), b.clone(), d.clone()], true);
+        assert!(!lk.is_complete());
+        assert_eq!(lk.miss_idx, vec![0, 2]);
+        assert_eq!(lk.miss_rows, vec![a, d]);
+        assert_eq!(lk.vals[1], Some((2.0, 0.0)));
+        lk.publish(&c, "m", &[(1.0, 0.0), (3.0, 0.0)]);
+        lk.fill(vec![(1.0, 0.0), (3.0, 0.0)]);
+        assert_eq!(lk.into_scores(), vec![(1.0, 0.0), (2.0, 0.0), (3.0, 0.0)]);
+        // Published misses hit next time (counted: 1 hit above + 2 now).
+        let lk2 = RowLookup::probe(Some(&c), "m", vec![row(&[1]), row(&[3])], true);
+        assert!(lk2.is_complete());
+        assert_eq!(lk2.into_scores(), vec![(1.0, 0.0), (3.0, 0.0)]);
+    }
+
+    #[test]
+    fn row_lookup_without_cache_misses_everything() {
+        let rows = vec![row(&[1]), row(&[2])];
+        let lk = RowLookup::probe(None, "m", rows.clone(), true);
+        assert_eq!(lk.miss_rows, rows);
+        assert_eq!(lk.vals, vec![None, None]);
     }
 
     #[test]

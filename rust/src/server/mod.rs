@@ -5,8 +5,10 @@
 //! the deployment face of that claim: quantize checkpoints once under a
 //! [`QuantSpec`] (4-bit fp/b64 by default, the paper's recommendation),
 //! keep them resident in **packed k-bit form**, and serve scoring
-//! requests from many concurrent clients through the AOT forward
-//! executable — Python-free, one process, warm PJRT state.
+//! requests from many concurrent clients through the tier's AOT
+//! execution plan — monolithic or pipeline-sharded across per-stage
+//! executables (`runtime::plan`), optionally with per-stage bit widths —
+//! Python-free, one process, warm PJRT state.
 //!
 //! # Serving architecture
 //!
@@ -46,19 +48,42 @@
 //!
 //! ```text
 //! → {"op":"score", "tokens":[1,5,9,...]}               sequence NLL + ppl
+//! → {"op":"score", "rows":[[..],[..],...]}             many rows, one response
+//! → {"op":"score", "rows":[...], "stream":true, "chunk":16}
+//!                                       chunked streaming: one line per
+//!                                       scored chunk, then a terminal
+//!                                       {"done":true,...} summary line
 //! → {"op":"choose", "context":[...], "choices":[[..],[..]]}
 //!                                       length-normalized best choice
 //! → {"op":"info"}                       model + residency + cache counters
 //! → {"op":"models"}                     all resident variants
 //! → {"op":"load", "family":"gpt2like", "tier":"t1", "bits":4,
 //!    "dtype":"fp", "block":64}          make a variant resident
+//! → {"op":"load", ..., "pipeline":true, "stage_bits":[16,4]}
+//!                                       pipeline-sharded variant (per-stage
+//!                                       executables; optional per-stage
+//!                                       bit widths = mixed precision)
 //! → {"op":"unload", "model":"gpt2like_t1@fp:4:b64"}
 //!                                       drop a variant (in-flight work
 //!                                       pins it until finished)
 //! → {"op":"stats"}                      governance: per-variant resident
-//!                                       bytes / hits / idle / pinned,
-//!                                       budget, evictions, cache counters
+//!                                       bytes (per plan stage) / hits /
+//!                                       idle / pinned, budget, evictions,
+//!                                       cache counters
 //! ```
+//!
+//! # Streaming
+//!
+//! A `"stream":true` score request answers with **multiple lines**: one
+//! `{"chunk":k,"first_row":i,"rows":[...]}` line per scored row group
+//! (chunk size defaults to the tier's `batch_eval`; `"chunk"` overrides),
+//! terminated by a `{"done":true,...}` summary. Chunks are emitted in row
+//! order as their forward batches complete, so a slow multi-row request
+//! delivers partial scores long before the last batch runs. A mid-stream
+//! fault (bad row, model error) terminates the stream with a
+//! `{"done":true,"error":...}` line — already-emitted chunks stand, and
+//! the connection keeps serving. Only complete rows enter the score
+//! cache; partial stage activations never do.
 //!
 //! `score`/`choose`/`info` accept an optional `"model"` field (a registry
 //! key from `models`/`load`) to route per request; otherwise the
@@ -79,8 +104,10 @@ pub mod cache;
 pub mod registry;
 
 pub use batch::Batcher;
-pub use cache::{ScoreCache, DEFAULT_CACHE_ROWS};
-pub use registry::{ModelHandle, ModelRegistry, ModelSpecReq, ParamLoader, VariantStats};
+pub use cache::{RowLookup, ScoreCache, DEFAULT_CACHE_ROWS};
+pub use registry::{
+    ModelHandle, ModelRegistry, ModelSpecReq, ParamLoader, PlanRequest, VariantStats,
+};
 
 use std::io::{BufRead, Write};
 use std::sync::Arc;
@@ -118,9 +145,21 @@ impl<'a, 'rt> Connection<'a, 'rt> {
         Connection { registry, batcher, core: ConnCore::default() }
     }
 
-    /// Handle one request object; returns the response object.
+    /// Handle one request object; returns the response object. Streamed
+    /// (`"stream":true`) requests error here — they need a line
+    /// transport; use [`Connection::handle_streaming`].
     pub fn handle(&mut self, req: &Json) -> Json {
-        handle_request(self.registry, self.batcher, &mut self.core, req)
+        handle_request(self.registry, self.batcher, &mut self.core, req, None)
+    }
+
+    /// Handle one request with streaming support: partial-response lines
+    /// go through `sink`; the terminal line is the return value.
+    pub fn handle_streaming(
+        &mut self,
+        req: &Json,
+        sink: &mut dyn FnMut(&Json) -> Result<()>,
+    ) -> Json {
+        handle_request(self.registry, self.batcher, &mut self.core, req, Some(sink))
     }
 }
 
@@ -157,9 +196,20 @@ impl<'rt> Session<'rt> {
         Ok(Session { registry, core: ConnCore::default() })
     }
 
-    /// Handle one request object; returns the response object.
+    /// Handle one request object; returns the response object (streamed
+    /// requests need [`Session::handle_streaming`]).
     pub fn handle(&mut self, req: &Json) -> Json {
-        handle_request(&self.registry, None, &mut self.core, req)
+        handle_request(&self.registry, None, &mut self.core, req, None)
+    }
+
+    /// Handle one request with streaming support (see
+    /// [`Connection::handle_streaming`]).
+    pub fn handle_streaming(
+        &mut self,
+        req: &Json,
+        sink: &mut dyn FnMut(&Json) -> Result<()>,
+    ) -> Json {
+        handle_request(&self.registry, None, &mut self.core, req, Some(sink))
     }
 
     /// The underlying registry (e.g. to preload more variants).
@@ -177,9 +227,10 @@ fn handle_request<'rt>(
     batcher: Option<&Batcher<'rt>>,
     core: &mut ConnCore,
     req: &Json,
+    sink: Option<&mut dyn FnMut(&Json) -> Result<()>>,
 ) -> Json {
     core.requests += 1;
-    match try_handle(registry, batcher, core, req) {
+    match try_handle(registry, batcher, core, req, sink) {
         Ok(resp) => resp,
         Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
     }
@@ -219,48 +270,169 @@ fn cache_counters(registry: &ModelRegistry<'_>) -> (bool, u64, u64, usize) {
     }
 }
 
-/// Score rows through the cache → batcher → executable stack: cached rows
-/// skip the forward entirely; only misses are submitted (batched path
-/// publishes results to the cache inside the dispatcher, the direct path
-/// publishes here).
+/// Score rows through the cache → batcher → execution-plan stack: cached
+/// rows skip the forward entirely; only misses are submitted (batched
+/// path publishes results to the cache inside the dispatcher, the direct
+/// path publishes here). The cache split/merge lives in
+/// [`cache::RowLookup`], the one row-assembly seam shared with the batch
+/// dispatcher — streamed responses call this per chunk, so only complete
+/// rows ever reach the cache.
 fn score_via<'rt>(
     cache: Option<&ScoreCache>,
     batcher: Option<&Batcher<'rt>>,
     handle: &Arc<ModelHandle<'rt>>,
     rows: Vec<(Vec<i32>, Vec<f32>)>,
 ) -> Result<Vec<(f64, f64)>> {
-    let Some(cache) = cache else {
-        return match batcher {
-            Some(b) => b.submit(handle.clone(), rows),
-            None => handle.score_rows(&rows),
-        };
-    };
     let key = handle.key();
-    let mut rows = rows;
-    let mut out: Vec<Option<(f64, f64)>> = rows.iter().map(|r| cache.get(&key, r)).collect();
-    let miss_idx: Vec<usize> = out
-        .iter()
-        .enumerate()
-        .filter_map(|(i, v)| v.is_none().then_some(i))
-        .collect();
-    if !miss_idx.is_empty() {
-        let miss_rows: Vec<(Vec<i32>, Vec<f32>)> =
-            miss_idx.iter().map(|&i| std::mem::take(&mut rows[i])).collect();
+    let mut lk = RowLookup::probe(cache, &key, rows, true);
+    if !lk.is_complete() {
         let scored = match batcher {
-            Some(b) => b.submit(handle.clone(), miss_rows)?,
+            // The dispatcher re-probes and publishes on its side.
+            Some(b) => b.submit(handle.clone(), std::mem::take(&mut lk.miss_rows))?,
             None => {
-                let scored = handle.score_rows(&miss_rows)?;
-                for (row, val) in miss_rows.iter().zip(&scored) {
-                    cache.put(&key, row, *val);
+                let scored = handle.score_rows(&lk.miss_rows)?;
+                if let Some(c) = cache {
+                    lk.publish(c, &key, &scored);
                 }
                 scored
             }
         };
-        for (&i, val) in miss_idx.iter().zip(&scored) {
-            out[i] = Some(*val);
+        lk.fill(scored);
+    }
+    Ok(lk.into_scores())
+}
+
+/// The per-row score-response object — the one shaping rule shared by the
+/// legacy single-row `score` response, buffered multi-row responses, and
+/// streamed chunk lines.
+fn row_response(nll: f64, hits: f64, ntok: f64) -> Json {
+    Json::obj(vec![
+        ("nll", Json::num(nll)),
+        ("tokens_scored", Json::num(ntok)),
+        ("ce", Json::num(nll / ntok.max(1.0))),
+        ("ppl", Json::num((nll / ntok.max(1.0)).exp().min(1e6))),
+        ("greedy_hits", Json::num(hits)),
+    ])
+}
+
+/// Parse, validate, and pad one scoring row against the addressed tier:
+/// vocab-checked tokens, tier-aware tail padding, and the masked token
+/// count the response reports.
+fn shape_row(v: &Json, tier: &TierManifest) -> Result<((Vec<i32>, Vec<f32>), f64)> {
+    let tokens = tokens_of(v, tier.vocab)?;
+    if tokens.is_empty() {
+        bail!("empty token list");
+    }
+    // Pad to the **addressed tier's** seq: a registry hosting tiers with
+    // different sequence lengths scores each against its own geometry.
+    let (row, mask) = crate::data::corpus::pad_score_row(&tokens, tier.seq);
+    let ntok = mask.iter().sum::<f32>() as f64;
+    Ok(((row, mask), ntok))
+}
+
+/// Shape + score one group of raw token rows: validate (all rows before
+/// any scoring), pad, score through the cache/batcher stack, and build
+/// the per-row response objects plus the group's `(nll, token)` totals.
+/// The one scoring seam under both the buffered response and every
+/// streamed chunk, so the two can never diverge.
+fn score_rows_shaped<'rt>(
+    cache: Option<&ScoreCache>,
+    batcher: Option<&Batcher<'rt>>,
+    handle: &Arc<ModelHandle<'rt>>,
+    group: &[&Json],
+) -> Result<(Vec<Json>, f64, f64)> {
+    let mut rows = Vec::with_capacity(group.len());
+    let mut ntoks = Vec::with_capacity(group.len());
+    for v in group {
+        let (row, ntok) = shape_row(v, &handle.tier)?;
+        rows.push(row);
+        ntoks.push(ntok);
+    }
+    let scored = score_via(cache, batcher, handle, rows)?;
+    let mut nll_sum = 0.0;
+    let mut tok_sum = 0.0;
+    let rows_json: Vec<Json> = scored
+        .iter()
+        .zip(&ntoks)
+        .map(|(&(nll, hits), &ntok)| {
+            nll_sum += nll;
+            tok_sum += ntok;
+            row_response(nll, hits, ntok)
+        })
+        .collect();
+    Ok((rows_json, nll_sum, tok_sum))
+}
+
+/// Shape + score one streamed chunk; returns the chunk line and its
+/// `(nll, token)` totals. Row validation happens per chunk, not up
+/// front — earlier chunks are already on the wire when a bad row or a
+/// model fault surfaces mid-stream.
+fn score_chunk<'rt>(
+    cache: Option<&ScoreCache>,
+    batcher: Option<&Batcher<'rt>>,
+    handle: &Arc<ModelHandle<'rt>>,
+    chunk: &[&Json],
+    index: usize,
+    first_row: usize,
+) -> Result<(Json, f64, f64)> {
+    let (rows_json, nll_sum, tok_sum) = score_rows_shaped(cache, batcher, handle, chunk)?;
+    let line = Json::obj(vec![
+        ("chunk", Json::num(index as f64)),
+        ("first_row", Json::num(first_row as f64)),
+        ("rows", Json::Arr(rows_json)),
+    ]);
+    Ok((line, nll_sum, tok_sum))
+}
+
+/// Drive one streamed `score` request: emit a chunk line per scored row
+/// group through `sink`, then return the terminal summary line (every
+/// streamed response ends in a `"done":true` line). A mid-stream fault —
+/// bad row, model error — becomes a terminal `done`+`error` line; the
+/// chunks already emitted stand and the connection survives.
+fn stream_score<'rt>(
+    cache: Option<&ScoreCache>,
+    batcher: Option<&Batcher<'rt>>,
+    handle: &Arc<ModelHandle<'rt>>,
+    raw: &[&Json],
+    chunk_rows: usize,
+    sink: &mut dyn FnMut(&Json) -> Result<()>,
+) -> Json {
+    let mut chunks = 0usize;
+    let mut done_rows = 0usize;
+    let mut total_nll = 0.0f64;
+    let mut total_tok = 0.0f64;
+    for chunk in raw.chunks(chunk_rows) {
+        match score_chunk(cache, batcher, handle, chunk, chunks, done_rows) {
+            Ok((line, nll, tok)) => {
+                if let Err(e) = sink(&line) {
+                    // The client is gone; there is no one to stream to.
+                    return Json::obj(vec![
+                        ("done", Json::Bool(true)),
+                        ("error", Json::str(format!("stream write failed: {e:#}"))),
+                    ]);
+                }
+                chunks += 1;
+                done_rows += chunk.len();
+                total_nll += nll;
+                total_tok += tok;
+            }
+            Err(e) => {
+                return Json::obj(vec![
+                    ("done", Json::Bool(true)),
+                    ("error", Json::str(format!("{e:#}"))),
+                    ("rows_scored", Json::num(done_rows as f64)),
+                    ("chunks", Json::num(chunks as f64)),
+                ]);
+            }
         }
     }
-    Ok(out.into_iter().map(|v| v.expect("every row cached or scored")).collect())
+    Json::obj(vec![
+        ("done", Json::Bool(true)),
+        ("rows_scored", Json::num(done_rows as f64)),
+        ("chunks", Json::num(chunks as f64)),
+        ("nll", Json::num(total_nll)),
+        ("ce", Json::num(total_nll / total_tok.max(1.0))),
+    ])
 }
 
 fn try_handle<'rt>(
@@ -268,6 +440,7 @@ fn try_handle<'rt>(
     batcher: Option<&Batcher<'rt>>,
     core: &mut ConnCore,
     req: &Json,
+    sink: Option<&mut dyn FnMut(&Json) -> Result<()>>,
 ) -> Result<Json> {
     match req.get("op")?.as_str()? {
         "info" => {
@@ -289,6 +462,7 @@ fn try_handle<'rt>(
                 ("quantized_f32_bytes", Json::num(h.quantized_f32_bytes() as f64)),
                 ("total_bits", Json::num(h.ideal_total_bits())),
                 ("models", Json::num(registry.len() as f64)),
+                ("stages", Json::num(h.n_stages() as f64)),
                 ("batched", Json::Bool(batcher.is_some())),
                 ("cached", Json::Bool(cached)),
                 ("cache_hits", Json::num(cache_hits as f64)),
@@ -318,9 +492,22 @@ fn try_handle<'rt>(
                 .stats()
                 .into_iter()
                 .map(|v| {
+                    // Per-stage packed-byte breakdown: governance sees
+                    // where a sharded variant's residency lives.
+                    let stages: Vec<Json> = v
+                        .stage_bytes
+                        .iter()
+                        .map(|(name, bytes)| {
+                            Json::obj(vec![
+                                ("name", Json::str(name)),
+                                ("resident_bytes", Json::num(*bytes as f64)),
+                            ])
+                        })
+                        .collect();
                     Json::obj(vec![
                         ("key", Json::str(v.key)),
                         ("resident_bytes", Json::num(v.resident_bytes as f64)),
+                        ("stages", Json::Arr(stages)),
                         ("hits", Json::num(v.hits as f64)),
                         ("idle_ms", Json::num(v.idle.as_secs_f64() * 1e3)),
                         ("pinned", Json::Bool(v.pinned)),
@@ -381,34 +568,79 @@ fn try_handle<'rt>(
                 None => Some(64),
             };
             let spec = registry::spec_from_parts(bits, dtype, block)?;
-            let h = registry.load(family, tier, spec)?;
+            // Plan shape: pipeline sharding + optional per-stage bit
+            // widths (mixed precision), e.g. {"pipeline":true,
+            // "stage_bits":[16,4]}.
+            let plan = PlanRequest {
+                pipeline: match req.opt("pipeline") {
+                    Some(v) => v.as_bool()?,
+                    None => false,
+                },
+                stage_bits: match req.opt("stage_bits") {
+                    Some(v) => Some(v.usizes()?),
+                    None => None,
+                },
+            };
+            let h = registry.load_plan(family, tier, spec, &plan)?;
             core.current = Some(h.key());
             Ok(Json::obj(vec![
                 ("model", Json::str(h.key())),
                 ("models", Json::num(registry.len() as f64)),
                 ("resident_bytes", Json::num(h.resident_bytes() as f64)),
+                ("stages", Json::num(h.n_stages() as f64)),
             ]))
         }
         "score" => {
             let h = resolve(registry, core, req, true)?;
-            let tokens = tokens_of(req.get("tokens")?, h.tier.vocab)?;
-            if tokens.is_empty() {
-                bail!("empty token list");
+            let multi = req.opt("rows").is_some();
+            if multi && req.opt("tokens").is_some() {
+                bail!(r#"give "tokens" or "rows", not both"#);
             }
-            // Pad to the **addressed tier's** seq: a registry hosting
-            // tiers with different sequence lengths scores each against
-            // its own geometry.
-            let (row, mask) = crate::data::corpus::pad_score_row(&tokens, h.tier.seq);
-            let ntok = mask.iter().sum::<f32>() as f64;
+            // One row ("tokens") or many ("rows": an array of token rows).
+            let raw: Vec<&Json> = if multi {
+                req.get("rows")?.as_arr()?.iter().collect()
+            } else {
+                vec![req.get("tokens")?]
+            };
+            if raw.is_empty() {
+                bail!("empty rows list");
+            }
+            let stream = match req.opt("stream") {
+                Some(v) => v.as_bool()?,
+                None => false,
+            };
+            // Streamed responses chunk at the forward-batch granularity
+            // by default; "chunk" overrides (rows per chunk, >= 1).
+            let chunk_rows = match req.opt("chunk") {
+                Some(v) => v.as_usize()?.max(1),
+                None => h.tier.batch_eval.max(1),
+            };
             let cache = registry.score_cache();
-            let scored = score_via(cache.as_deref(), batcher, &h, vec![(row, mask)])?;
-            let (nll, hits) = scored[0];
+            if stream {
+                let Some(sink) = sink else {
+                    bail!("streaming requires a line transport (stdin or TCP serving)")
+                };
+                return Ok(stream_score(
+                    cache.as_deref(),
+                    batcher,
+                    &h,
+                    &raw,
+                    chunk_rows,
+                    sink,
+                ));
+            }
+            // Buffered path: the whole request is one shaped group
+            // (validating every row before any scoring), one response.
+            let (mut rows_json, total_nll, total_tok) =
+                score_rows_shaped(cache.as_deref(), batcher, &h, &raw)?;
+            if !multi {
+                return Ok(rows_json.remove(0));
+            }
             Ok(Json::obj(vec![
-                ("nll", Json::num(nll)),
-                ("tokens_scored", Json::num(ntok)),
-                ("ce", Json::num(nll / ntok.max(1.0))),
-                ("ppl", Json::num((nll / ntok.max(1.0)).exp().min(1e6))),
-                ("greedy_hits", Json::num(hits)),
+                ("rows_scored", Json::num(rows_json.len() as f64)),
+                ("rows", Json::Arr(rows_json)),
+                ("nll", Json::num(total_nll)),
+                ("ce", Json::num(total_nll / total_tok.max(1.0))),
             ]))
         }
         "choose" => {
@@ -549,9 +781,12 @@ fn read_line_capped<R: BufRead>(
 }
 
 /// Pump one line-based transport through a request handler until EOF.
-/// Request lines are capped at [`MAX_REQUEST_LINE`] bytes.
+/// Request lines are capped at [`MAX_REQUEST_LINE`] bytes. The handler
+/// gets a **sink** that writes streamed partial-response lines straight
+/// to the transport (flushed per line, so chunks reach the client before
+/// scoring finishes); the handler's return value is the terminal line.
 fn pump<R: BufRead, W: Write>(
-    mut handle: impl FnMut(&Json) -> Json,
+    mut handle: impl FnMut(&Json, &mut dyn FnMut(&Json) -> Result<()>) -> Json,
     mut reader: R,
     mut writer: W,
 ) -> Result<u64> {
@@ -568,7 +803,15 @@ fn pump<R: BufRead, W: Write>(
             LineRead::Line => match std::str::from_utf8(&buf) {
                 Ok(line) if line.trim().is_empty() => continue,
                 Ok(line) => match Json::parse(line) {
-                    Ok(req) => handle(&req),
+                    Ok(req) => {
+                        let w = &mut writer;
+                        let mut sink = |j: &Json| -> Result<()> {
+                            writeln!(w, "{}", j.dump())?;
+                            w.flush()?;
+                            Ok(())
+                        };
+                        handle(&req, &mut sink)
+                    }
                     Err(e) => {
                         Json::obj(vec![("error", Json::str(format!("bad request: {e:#}")))])
                     }
@@ -585,13 +828,14 @@ fn pump<R: BufRead, W: Write>(
     Ok(served)
 }
 
-/// Drive a single-model session over any line-based transport until EOF.
+/// Drive a single-model session over any line-based transport until EOF
+/// (streaming-capable: chunked responses go straight to `writer`).
 pub fn serve_lines<R: BufRead, W: Write>(
     session: &mut Session<'_>,
     reader: R,
     writer: W,
 ) -> Result<u64> {
-    pump(|req| session.handle(req), reader, writer)
+    pump(|req, sink| session.handle_streaming(req, sink), reader, writer)
 }
 
 /// Serve a registry over stdin/stdout (the CLI's non-TCP mode; direct
@@ -599,7 +843,7 @@ pub fn serve_lines<R: BufRead, W: Write>(
 pub fn serve_stdin(registry: &ModelRegistry<'_>) -> Result<u64> {
     let mut conn = Connection::new(registry, None);
     let stdin = std::io::stdin();
-    pump(|req| conn.handle(req), stdin.lock(), std::io::stdout())
+    pump(|req, sink| conn.handle_streaming(req, sink), stdin.lock(), std::io::stdout())
 }
 
 /// Concurrency/batching knobs for the TCP server.
@@ -729,5 +973,5 @@ fn serve_stream<'rt>(
 ) -> Result<u64> {
     let mut conn = Connection::new(registry, batcher);
     let reader = std::io::BufReader::new(stream.try_clone()?);
-    pump(|req| conn.handle(req), reader, stream)
+    pump(|req, sink| conn.handle_streaming(req, sink), reader, stream)
 }

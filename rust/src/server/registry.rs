@@ -9,7 +9,10 @@
 //! concurrently with no per-request copying.
 //!
 //! A [`ModelRegistry`] hosts many variants in one process, keyed
-//! `"{family}_{tier}@{spec}"`. Checkpoints come through a caller-supplied
+//! `"{family}_{tier}@{spec}"` plus a plan suffix (`#pipe`, `#pipe[16,4]`)
+//! for pipeline-sharded and mixed-precision builds, so every plan shape
+//! of one spec is its own governed resident — with per-stage packed-byte
+//! accounting. Checkpoints come through a caller-supplied
 //! [`ParamLoader`], so the CLI wires the on-disk [`CheckpointStore`] while
 //! tests and benches inject init-only parameters.
 //!
@@ -44,12 +47,47 @@ use super::cache::ScoreCache;
 use crate::eval::Evaluator;
 use crate::models::manifest::{Manifest, TierManifest};
 use crate::quant::{self, PackedParam, QuantSpec};
-use crate::runtime::{lit_f32, lit_f32_slice, ParamLiterals, Runtime};
+use crate::runtime::{lit_f32_slice, ParamLiterals, Runtime};
 use crate::tensor::Tensor;
 
 /// Produces the checkpoint parameters for `(family, tier)` on demand.
 pub type ParamLoader<'a> =
     Box<dyn Fn(&str, &str) -> Result<Vec<(String, Tensor)>> + Send + Sync + 'a>;
+
+/// How a variant should execute: the monolithic single-stage plan
+/// (default) or the tier's declared pipeline stages, optionally with
+/// per-stage bit widths (mixed precision — e.g. `[16, 4]` keeps stage 0
+/// unquantized while stage 1 packs to 4-bit).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PlanRequest {
+    pub pipeline: bool,
+    /// Per-stage bit-width overrides (requires `pipeline`); `None` =
+    /// the variant's base spec everywhere.
+    pub stage_bits: Option<Vec<usize>>,
+}
+
+impl PlanRequest {
+    /// The pipeline plan with the base spec in every stage.
+    pub fn staged() -> Self {
+        PlanRequest { pipeline: true, stage_bits: None }
+    }
+
+    /// Registry-key suffix distinguishing plan shapes of one spec, so
+    /// monolithic and sharded variants coexist as separate residents:
+    /// `""`, `#pipe`, or `#pipe[8,4]`.
+    pub fn suffix(&self) -> String {
+        if !self.pipeline {
+            return String::new();
+        }
+        match &self.stage_bits {
+            None => "#pipe".into(),
+            Some(b) => {
+                let bits: Vec<String> = b.iter().map(|k| k.to_string()).collect();
+                format!("#pipe[{}]", bits.join(","))
+            }
+        }
+    }
+}
 
 /// One resident model variant: immutable, `Arc`-shared across connections.
 pub struct ModelHandle<'rt> {
@@ -57,22 +95,24 @@ pub struct ModelHandle<'rt> {
     pub model_key: String,
     pub tier: TierManifest,
     pub spec: QuantSpec,
+    /// The plan shape this variant executes with (part of its identity).
+    pub plan_req: PlanRequest,
     ev: Evaluator<'rt>,
     plits: ParamLiterals,
-    /// Packed k-bit residency of every quantized tensor, in manifest
-    /// order. Empty for baseline and proxy specs (the former has nothing
-    /// to pack; the latter is mixed-precision and stays simulated).
+    /// Packed k-bit residency of every quantized tensor, in plan-param
+    /// order (`qkv` for the monolithic plan, `s1/qkv[1..2]`-style labels
+    /// for pipeline slices). Empty for baseline and proxy specs (the
+    /// former has nothing to pack; the latter is mixed-precision and
+    /// stays simulated).
     pub packed: Vec<(String, PackedParam)>,
+    /// Packed resident bytes per plan stage (stage name, bytes) — the
+    /// governance layer's per-stage view of a sharded variant.
+    pub stage_bytes: Vec<(String, usize)>,
 }
 
 impl<'rt> ModelHandle<'rt> {
-    /// Quantize `params` under `spec` and build the resident state.
-    ///
-    /// Quantized tensors stream through **one reusable scratch buffer**:
-    /// quantize → pack → `dequantize_into(scratch)` → parameter literal.
-    /// Neither the unpacked index vector nor a dequantized f32 `Tensor`
-    /// survives construction — the packed form is the only host-side
-    /// weight residency.
+    /// Quantize `params` under `spec` for the monolithic plan and build
+    /// the resident state (see [`ModelHandle::with_plan`]).
     pub fn new(
         rt: &'rt Runtime,
         manifest: &Manifest,
@@ -81,54 +121,119 @@ impl<'rt> ModelHandle<'rt> {
         spec: QuantSpec,
         model_key: String,
     ) -> Result<Self> {
-        let ev = Evaluator::new(rt, manifest, tier)?;
+        Self::with_plan(rt, manifest, tier, params, spec, &PlanRequest::default(), model_key)
+    }
+
+    /// Quantize `params` and build the resident state for one plan shape.
+    ///
+    /// Every plan parameter (a tier tensor, or a pipeline stage's layer
+    /// slice of one) streams through **one reusable scratch buffer**:
+    /// slice → quantize under its stage's spec → pack →
+    /// `dequantize_into(scratch)` → parameter literal. Neither the
+    /// unpacked index vector nor a dequantized f32 `Tensor` survives
+    /// construction — the packed form is the only host-side weight
+    /// residency. Per-layer slice quantization makes a sharded variant's
+    /// dequantized weights bit-identical to the monolithic build under
+    /// the same spec.
+    pub fn with_plan(
+        rt: &'rt Runtime,
+        manifest: &Manifest,
+        tier: &TierManifest,
+        params: &[(String, Tensor)],
+        spec: QuantSpec,
+        plan_req: &PlanRequest,
+        model_key: String,
+    ) -> Result<Self> {
         if params.len() != tier.params.len() {
             bail!("expected {} parameter tensors, got {}", tier.params.len(), params.len());
         }
+        if plan_req.stage_bits.is_some() && !plan_req.pipeline {
+            bail!("stage_bits requires the pipeline plan");
+        }
+        if spec.proxy_outlier_pct.is_some() && plan_req.pipeline {
+            bail!("proxy quantization has no pipeline form (stays simulated)");
+        }
+        let ev = Evaluator::with_plan(rt, manifest, tier, plan_req.pipeline)?;
+        let layout = &ev.plan().layout;
+        let stage_specs =
+            quant::stage_specs(&spec, layout.n_stages(), plan_req.stage_bits.as_deref())?;
         let simulate_only = spec.is_baseline() || spec.proxy_outlier_pct.is_some();
-        if simulate_only {
+        if simulate_only && plan_req.stage_bits.is_none() {
             // Proxy quantization is mixed-precision (16-bit outlier columns
             // inside k-bit tensors) and has no pure packed form; baseline
-            // has nothing to pack. Both fall back to the simulated path.
+            // has nothing to pack. Both fall back to the simulated path
+            // (the plan's literal mapping handles stage slicing).
             let q = quant::quantize_checkpoint_cow(params, &tier.quantized_params, &spec);
+            let stage_bytes =
+                layout.stages.iter().map(|s| (s.name.clone(), 0usize)).collect();
             let plits = ParamLiterals(ev.param_literals(&q)?);
             return Ok(ModelHandle {
                 model_key,
                 tier: tier.clone(),
                 spec,
+                plan_req: plan_req.clone(),
                 ev,
                 plits,
                 packed: Vec::new(),
+                stage_bytes,
             });
         }
-        let mut plits = Vec::with_capacity(params.len());
+        let mut plits = Vec::with_capacity(layout.params.len());
         let mut packed = Vec::new();
+        let mut bytes_per_stage = vec![0usize; layout.n_stages()];
         let mut scratch: Vec<f32> = Vec::new();
-        for (name, t) in params {
-            if tier.quantized_params.iter().any(|q| q == name) {
-                let pp = PackedParam::quantize(t, &spec)?;
+        for pp in &layout.params {
+            let (_, t) = params
+                .iter()
+                .find(|(n, _)| n == &pp.source)
+                .with_context(|| format!("checkpoint missing param {:?}", pp.source))?;
+            let data = pp.slice_of(t)?;
+            let sspec = &stage_specs[pp.stage];
+            let is_quantized = tier.quantized_params.iter().any(|q| q == &pp.source);
+            if is_quantized && !sspec.is_baseline() {
+                let pk = PackedParam::quantize_slice(&pp.shape, data, sspec)?;
                 scratch.clear();
-                scratch.resize(t.len(), 0.0);
-                pp.dequantize_into(&mut scratch)?;
-                plits.push(lit_f32_slice(t.shape(), &scratch)?);
-                packed.push((name.clone(), pp));
+                scratch.resize(data.len(), 0.0);
+                pk.dequantize_into(&mut scratch)?;
+                plits.push(lit_f32_slice(&pp.shape, &scratch)?);
+                bytes_per_stage[pp.stage] += pk.resident_bytes();
+                let label = if layout.is_monolithic() {
+                    pp.source.clone()
+                } else {
+                    pp.label(&layout.stages[pp.stage].name)
+                };
+                packed.push((label, pk));
             } else {
-                plits.push(lit_f32(t)?);
+                plits.push(lit_f32_slice(&pp.shape, data)?);
             }
         }
+        let stage_bytes = layout
+            .stages
+            .iter()
+            .zip(bytes_per_stage)
+            .map(|(s, b)| (s.name.clone(), b))
+            .collect();
         Ok(ModelHandle {
             model_key,
             tier: tier.clone(),
             spec,
+            plan_req: plan_req.clone(),
             ev,
             plits: ParamLiterals(plits),
             packed,
+            stage_bytes,
         })
     }
 
-    /// Registry key of this variant.
+    /// Registry key of this variant (plan shape included, so monolithic
+    /// and sharded builds of one spec are distinct residents).
     pub fn key(&self) -> String {
-        format!("{}@{}", self.model_key, self.spec.key())
+        format!("{}@{}{}", self.model_key, self.spec.key(), self.plan_req.suffix())
+    }
+
+    /// Stages of this variant's execution plan (1 = monolithic).
+    pub fn n_stages(&self) -> usize {
+        self.stage_bytes.len()
     }
 
     /// Score padded `(tokens, mask)` rows through the resident literals.
@@ -179,6 +284,11 @@ struct Resident<'rt> {
 pub struct VariantStats {
     pub key: String,
     pub resident_bytes: usize,
+    /// Per-stage packed-byte breakdown of `resident_bytes` — one entry
+    /// for the monolithic plan, one per pipeline stage for sharded
+    /// variants, so governance reporting sees where a variant's memory
+    /// lives.
+    pub stage_bytes: Vec<(String, usize)>,
     pub hits: u64,
     /// Time since the variant was last resolved.
     pub idle: Duration,
@@ -291,17 +401,36 @@ impl<'rt> ModelRegistry<'rt> {
     }
 
     /// Load (or return the already-resident) `(family, tier, spec)`
-    /// variant via the attached checkpoint loader. Racing `load`s of the
-    /// same key build it once: one caller quantizes + compiles, the rest
-    /// wait and share the winner's handle.
+    /// variant on the monolithic plan (see [`ModelRegistry::load_plan`]).
     pub fn load(
         &self,
         family: &str,
         tier_name: &str,
         spec: QuantSpec,
     ) -> Result<Arc<ModelHandle<'rt>>> {
+        self.load_plan(family, tier_name, spec, &PlanRequest::default())
+    }
+
+    /// Load (or return the already-resident) `(family, tier, spec, plan)`
+    /// variant via the attached checkpoint loader. Racing `load`s of the
+    /// same key build it once: one caller quantizes + compiles, the rest
+    /// wait and share the winner's handle.
+    pub fn load_plan(
+        &self,
+        family: &str,
+        tier_name: &str,
+        spec: QuantSpec,
+        plan: &PlanRequest,
+    ) -> Result<Arc<ModelHandle<'rt>>> {
+        // Validate the plan shape before the residency lookup: a
+        // malformed request (stage_bits without pipeline) must error even
+        // when its key collides with an already-resident variant —
+        // otherwise validation would depend on resident state.
+        if plan.stage_bits.is_some() && !plan.pipeline {
+            bail!("stage_bits requires the pipeline plan");
+        }
         let model_key = format!("{family}_{tier_name}");
-        let key = format!("{}@{}", model_key, spec.key());
+        let key = format!("{}@{}{}", model_key, spec.key(), plan.suffix());
         loop {
             if let Some(hit) = self.touch(&key) {
                 return Ok(hit);
@@ -341,8 +470,15 @@ impl<'rt> ModelRegistry<'rt> {
         let tier = self.manifest.tier(tier_name)?;
         let params = (self.loader)(family, tier_name)
             .with_context(|| format!("loading checkpoint {model_key}"))?;
-        let handle =
-            ModelHandle::new(self.rt, &self.manifest, tier, &params, spec, model_key)?;
+        let handle = ModelHandle::with_plan(
+            self.rt,
+            &self.manifest,
+            tier,
+            &params,
+            spec,
+            plan,
+            model_key,
+        )?;
         Ok(self.insert(handle))
     }
 
@@ -457,6 +593,7 @@ impl<'rt> ModelRegistry<'rt> {
             .map(|(k, r)| VariantStats {
                 key: k.clone(),
                 resident_bytes: r.bytes,
+                stage_bytes: r.handle.stage_bytes.clone(),
                 hits: r.hits,
                 idle: now.duration_since(r.last_use),
                 pinned: Arc::strong_count(&r.handle) > 1,
@@ -644,6 +781,21 @@ mod tests {
         assert!(ModelSpecReq::parse("justfamily").is_err());
         assert!(ModelSpecReq::parse("f:t:x").is_err());
         assert!(ModelSpecReq::parse("f:t:4:fp:64:extra").is_err());
+    }
+
+    #[test]
+    fn plan_request_suffixes_distinguish_shapes() {
+        // The suffix is part of the registry key: monolithic, sharded,
+        // and mixed-precision builds of one spec must never collide.
+        assert_eq!(PlanRequest::default().suffix(), "");
+        assert_eq!(PlanRequest::staged().suffix(), "#pipe");
+        let mixed = PlanRequest { pipeline: true, stage_bits: Some(vec![16, 4]) };
+        assert_eq!(mixed.suffix(), "#pipe[16,4]");
+        let suffixes = [PlanRequest::default().suffix(), PlanRequest::staged().suffix(), mixed.suffix()];
+        let mut dedup = suffixes.to_vec();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), suffixes.len());
     }
 
     #[test]

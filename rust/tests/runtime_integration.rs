@@ -5,8 +5,10 @@
 //! order, output arity, masking semantics, kernel numerics).
 
 use std::path::Path;
+use std::sync::Arc;
 
 use kbitscale::data::corpus::{Corpus, CorpusConfig};
+use kbitscale::eval::Evaluator;
 use kbitscale::models::families::Family;
 use kbitscale::models::init::init_params;
 use kbitscale::models::manifest::Manifest;
@@ -68,6 +70,94 @@ fn fwd_graph_shapes_and_masking() {
     let per_tok = nll_full.iter().sum::<f32>() / (b * (s - 1)) as f32;
     let uniform = (m.vocab as f32).ln();
     assert!((per_tok - uniform).abs() < 1.0, "per-token NLL {per_tok} vs ln V {uniform}");
+}
+
+#[test]
+fn single_stage_plan_matches_direct_executable_path() {
+    // The ExecutionPlan refactor's parity gate: scoring through the
+    // degenerate single-stage plan must be **bit-identical** to the
+    // pre-plan direct-executable path (same artifact, same literals, same
+    // deterministic CPU execution) on a fixed seed tier.
+    let (m, rt) = setup();
+    let tier = m.tier("t0").unwrap();
+    let params = init_params(tier, Family::get("gpt2like").unwrap());
+    let c = corpus(&m);
+    let (b, s) = (tier.batch_eval, tier.seq);
+    let seqs = c.eval_sequences(5);
+    let rows: Vec<(Vec<i32>, Vec<f32>)> = seqs.iter().map(|sq| c.pad_to_seq(sq)).collect();
+
+    // The pre-refactor path, inlined: one monolithic executable, one
+    // hand-padded batch of (params..., tokens, mask).
+    let exe = rt.load(&m.hlo_path(&tier.fwd_hlo)).unwrap();
+    let mut tokens = vec![0i32; b * s];
+    let mut mask = vec![0.0f32; b * s];
+    for (r, (t, mk)) in rows.iter().enumerate() {
+        tokens[r * s..(r + 1) * s].copy_from_slice(t);
+        mask[r * s..(r + 1) * s].copy_from_slice(mk);
+    }
+    let mut args: Vec<xla::Literal> =
+        params.iter().map(|(_, t)| lit_f32(t).unwrap()).collect();
+    args.push(lit_i32(&[b, s], &tokens).unwrap());
+    args.push(lit_f32(&Tensor::new(vec![b, s], mask)).unwrap());
+    let out = rt.execute(&exe, &args).unwrap();
+    let nll = to_vec_f32(&out[0]).unwrap();
+    let hits = to_vec_f32(&out[1]).unwrap();
+
+    // The plan path (what every caller uses now).
+    let ev = Evaluator::new(&rt, &m, tier).unwrap();
+    assert!(ev.plan().layout.is_monolithic());
+    let plits = ev.param_literals(&params).unwrap();
+    let scored = ev.score_padded_rows(&plits, &rows).unwrap();
+    assert_eq!(scored.len(), rows.len());
+    for (r, &(p_nll, p_hits)) in scored.iter().enumerate() {
+        assert_eq!(p_nll, nll[r] as f64, "row {r}: plan NLL diverged from direct path");
+        assert_eq!(p_hits, hits[r] as f64, "row {r}: plan hits diverged from direct path");
+    }
+}
+
+#[test]
+fn pipeline_plan_scores_match_monolithic() {
+    let (m, rt) = setup();
+    let tier = m.tier("t0").unwrap();
+    if tier.stages.is_empty() {
+        eprintln!("skipping: artifacts predate pipeline stages (rerun make artifacts)");
+        return;
+    }
+    let params = init_params(tier, Family::get("gpt2like").unwrap());
+    let c = corpus(&m);
+    let seqs = c.eval_sequences(4);
+    let rows: Vec<(Vec<i32>, Vec<f32>)> = seqs.iter().map(|sq| c.pad_to_seq(sq)).collect();
+
+    let mono = Evaluator::new(&rt, &m, tier).unwrap();
+    let piped = Evaluator::with_plan(&rt, &m, tier, true).unwrap();
+    assert_eq!(piped.plan().layout.n_stages(), 2);
+    let mono_scores =
+        mono.score_padded_rows(&mono.param_literals(&params).unwrap(), &rows).unwrap();
+    let pipe_scores =
+        piped.score_padded_rows(&piped.param_literals(&params).unwrap(), &rows).unwrap();
+    for (r, (a, b)) in mono_scores.iter().zip(&pipe_scores).enumerate() {
+        let rel = (a.0 - b.0).abs() / a.0.abs().max(1.0);
+        assert!(rel < 1e-4, "row {r}: staged NLL {} vs monolithic {}", b.0, a.0);
+        // Greedy argmax can only flip on a numeric near-tie; allow one.
+        assert!((a.1 - b.1).abs() <= 1.0, "row {r}: hits {} vs {}", b.1, a.1);
+    }
+}
+
+#[test]
+fn runtime_load_is_single_flight_and_shared() {
+    let (m, rt) = setup();
+    let path = m.hlo_path(&m.tier("t0").unwrap().fwd_hlo);
+    assert_eq!(rt.cached_executables(), 0);
+    let handles: Vec<_> = std::thread::scope(|s| {
+        let joins: Vec<_> = (0..6).map(|_| s.spawn(|| rt.load(&path).unwrap())).collect();
+        joins.into_iter().map(|j| j.join().unwrap()).collect()
+    });
+    // All racers share the winner's executable: without single-flight,
+    // concurrent cache misses each compile and return distinct Arcs.
+    for h in &handles[1..] {
+        assert!(Arc::ptr_eq(&handles[0], h), "racing loads must share one executable");
+    }
+    assert_eq!(rt.cached_executables(), 1);
 }
 
 #[test]

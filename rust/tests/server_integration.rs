@@ -96,6 +96,99 @@ fn serve_lines_transport() {
 }
 
 // ---------------------------------------------------------------------------
+// Streaming responses
+// ---------------------------------------------------------------------------
+
+#[test]
+fn streamed_score_chunks_in_row_order() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mut s = session(&rt, &manifest);
+
+    // 5 rows, chunk size 2 -> chunk lines 0/1/2 (2+2+1 rows) + done line.
+    let input =
+        b"{\"op\":\"score\",\"rows\":[[1,2,3],[4,5,6],[7,8],[9,10],[11]],\"stream\":true,\"chunk\":2}\n";
+    let mut out = Vec::new();
+    let served = serve_lines(&mut s, &input[..], &mut out).unwrap();
+    assert_eq!(served, 1, "one streamed request, many lines");
+    let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().trim().lines().collect();
+    assert_eq!(lines.len(), 4, "3 chunks + terminal summary: {lines:?}");
+    for (i, l) in lines[..3].iter().enumerate() {
+        let j = Json::parse(l).unwrap();
+        assert_eq!(j.get("chunk").unwrap().as_usize().unwrap(), i, "chunk order");
+        assert_eq!(j.get("first_row").unwrap().as_usize().unwrap(), i * 2, "row order");
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), if i < 2 { 2 } else { 1 });
+        for r in rows {
+            assert!(r.get("ce").unwrap().as_f64().unwrap() > 0.0, "{r:?}");
+        }
+    }
+    let done = Json::parse(lines[3]).unwrap();
+    assert!(done.get("done").unwrap().as_bool().unwrap());
+    assert!(done.opt("error").is_none(), "{done:?}");
+    assert_eq!(done.get("rows_scored").unwrap().as_usize().unwrap(), 5);
+    assert_eq!(done.get("chunks").unwrap().as_usize().unwrap(), 3);
+    assert!(done.get("ce").unwrap().as_f64().unwrap() > 0.0);
+
+    // A streamed row scores exactly like the same row sent unstreamed.
+    let single = s.handle(&Json::parse(r#"{"op":"score","tokens":[1,2,3]}"#).unwrap());
+    let chunk0 = Json::parse(lines[0]).unwrap();
+    let row0 = &chunk0.get("rows").unwrap().as_arr().unwrap()[0];
+    assert_eq!(single.dump(), row0.dump(), "streamed row must equal unstreamed score");
+}
+
+#[test]
+fn streamed_error_mid_stream_keeps_connection() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mut s = session(&rt, &manifest);
+    let vocab = manifest.tier("t0").unwrap().vocab;
+
+    // Third row is out of vocab: two chunks stream out, then the stream
+    // terminates with an error line — and the connection keeps serving.
+    let input = format!(
+        "{{\"op\":\"score\",\"rows\":[[1,2],[3,4],[{vocab}]],\"stream\":true,\"chunk\":1}}\n\
+         {{\"op\":\"info\"}}\n"
+    );
+    let mut out = Vec::new();
+    let served = serve_lines(&mut s, input.as_bytes(), &mut out).unwrap();
+    assert_eq!(served, 2);
+    let lines: Vec<&str> = std::str::from_utf8(&out).unwrap().trim().lines().collect();
+    assert_eq!(lines.len(), 4, "2 chunks + error line + info response: {lines:?}");
+    assert_eq!(Json::parse(lines[0]).unwrap().get("chunk").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(Json::parse(lines[1]).unwrap().get("chunk").unwrap().as_usize().unwrap(), 1);
+    let err = Json::parse(lines[2]).unwrap();
+    assert!(err.get("done").unwrap().as_bool().unwrap(), "{err:?}");
+    assert!(err.get("error").unwrap().as_str().unwrap().contains("out of range"));
+    assert_eq!(err.get("chunks").unwrap().as_usize().unwrap(), 2);
+    let info = Json::parse(lines[3]).unwrap();
+    assert!(info.opt("model").is_some(), "connection must survive a mid-stream error");
+}
+
+#[test]
+fn buffered_multi_row_score_responds_once() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let mut s = session(&rt, &manifest);
+    let resp =
+        s.handle(&Json::parse(r#"{"op":"score","rows":[[1,2,3],[4,5,6]]}"#).unwrap());
+    let rows = resp.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 2);
+    assert_eq!(resp.get("rows_scored").unwrap().as_usize().unwrap(), 2);
+    assert!(resp.get("ce").unwrap().as_f64().unwrap() > 0.0);
+    // Both row sources at once is ambiguous and rejected.
+    let err = s.handle(
+        &Json::parse(r#"{"op":"score","tokens":[1],"rows":[[2]]}"#).unwrap(),
+    );
+    assert!(err.opt("error").is_some());
+    // Streaming without a line transport is an error, not a hang.
+    let err = s.handle(
+        &Json::parse(r#"{"op":"score","rows":[[1,2]],"stream":true}"#).unwrap(),
+    );
+    assert!(err.get("error").unwrap().as_str().unwrap().contains("transport"), "{err:?}");
+}
+
+// ---------------------------------------------------------------------------
 // Registry / concurrency / residency
 // ---------------------------------------------------------------------------
 
@@ -429,6 +522,157 @@ fn batched_serving_publishes_and_hits_the_cache() {
         drop(reader);
         server.join().unwrap().unwrap();
     });
+}
+
+#[test]
+fn tcp_streamed_request_returns_chunks_before_summary() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let reg = registry(&rt, &manifest).with_score_cache(256);
+    reg.load("gpt2like", "t0", QuantSpec::new(DataType::Fp, 4, Some(64))).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOpts {
+        workers: 2,
+        flush: Duration::from_millis(1),
+        batching: true,
+        max_conns: Some(1),
+    };
+    std::thread::scope(|s| {
+        let server = s.spawn(|| serve_listener(&reg, listener, &opts));
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writeln!(
+            writer,
+            "{{\"op\":\"score\",\"rows\":[[1,2,3],[4,5],[6,7,8],[9]],\"stream\":true,\"chunk\":2}}"
+        )
+        .unwrap();
+        // Partial chunks arrive as their own lines before the summary.
+        let mut chunks = 0usize;
+        let done = loop {
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).unwrap() > 0, "server hung up mid-stream");
+            let j = Json::parse(line.trim()).unwrap();
+            if j.opt("done").is_some() {
+                break j;
+            }
+            assert_eq!(j.get("chunk").unwrap().as_usize().unwrap(), chunks);
+            chunks += 1;
+        };
+        assert_eq!(chunks, 2, "two partial chunks must precede the summary");
+        assert!(done.opt("error").is_none(), "{done:?}");
+        assert_eq!(done.get("rows_scored").unwrap().as_usize().unwrap(), 4);
+        // Same connection serves ordinary requests afterwards.
+        writeln!(writer, "{{\"op\":\"score\",\"tokens\":[1,2,3]}}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(Json::parse(line.trim()).unwrap().opt("ce").is_some(), "{line}");
+        drop(writer);
+        drop(reader);
+        server.join().unwrap().unwrap();
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Pipeline-sharded variants over the protocol
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pipeline_variant_loads_scores_and_accounts_per_stage() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    if manifest.tier("t0").unwrap().stages.is_empty() {
+        eprintln!("skipping: artifacts predate pipeline stages (rerun make artifacts)");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let reg = registry(&rt, &manifest);
+    let mut conn = Connection::new(&reg, None);
+
+    let loaded = conn.handle(
+        &Json::parse(r#"{"op":"load","family":"gpt2like","tier":"t0","pipeline":true}"#)
+            .unwrap(),
+    );
+    let key = loaded.get("model").unwrap().as_str().unwrap().to_string();
+    assert!(key.ends_with("#pipe"), "{key}");
+    assert_eq!(loaded.get("stages").unwrap().as_usize().unwrap(), 2);
+
+    // The sharded variant scores, close to the monolithic build.
+    let piped = conn.handle(&Json::parse(r#"{"op":"score","tokens":[1,5,9,12,3]}"#).unwrap());
+    let pipe_ce = piped.get("ce").unwrap().as_f64().unwrap();
+    assert!(pipe_ce.is_finite() && pipe_ce > 0.0, "{piped:?}");
+    let mono = conn.handle(
+        &Json::parse(r#"{"op":"load","family":"gpt2like","tier":"t0"}"#).unwrap(),
+    );
+    assert_eq!(mono.get("models").unwrap().as_usize().unwrap(), 2, "plan shapes coexist");
+    let mono_score =
+        conn.handle(&Json::parse(r#"{"op":"score","tokens":[1,5,9,12,3]}"#).unwrap());
+    let mono_ce = mono_score.get("ce").unwrap().as_f64().unwrap();
+    assert!(
+        (pipe_ce - mono_ce).abs() / mono_ce.max(1e-9) < 1e-4,
+        "sharded ce {pipe_ce} vs monolithic {mono_ce}"
+    );
+
+    // stats reports the per-stage residency breakdown, summing to the
+    // variant total (same packed payload as the monolithic build).
+    let stats = conn.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
+    let models = stats.get("models").unwrap().as_arr().unwrap();
+    let pipe_stats = models
+        .iter()
+        .find(|m| m.get("key").unwrap().as_str().unwrap() == key)
+        .expect("sharded variant in stats");
+    let stages = pipe_stats.get("stages").unwrap().as_arr().unwrap();
+    assert_eq!(stages.len(), 2);
+    let stage_sum: usize = stages
+        .iter()
+        .map(|s| s.get("resident_bytes").unwrap().as_usize().unwrap())
+        .sum();
+    let total = pipe_stats.get("resident_bytes").unwrap().as_usize().unwrap();
+    assert_eq!(stage_sum, total, "per-stage bytes must sum to the variant total");
+    assert!(stages.iter().all(|s| {
+        s.get("resident_bytes").unwrap().as_usize().unwrap() > 0
+    }), "every stage owns packed weights: {stages:?}");
+
+    // Mixed precision: stage 0 unquantized, stage 1 packed at 4 bits.
+    let mixed = conn.handle(
+        &Json::parse(
+            r#"{"op":"load","family":"gpt2like","tier":"t0","pipeline":true,"stage_bits":[16,4]}"#,
+        )
+        .unwrap(),
+    );
+    let mixed_key = mixed.get("model").unwrap().as_str().unwrap().to_string();
+    assert!(mixed_key.ends_with("#pipe[16,4]"), "{mixed_key}");
+    let mixed_bytes = mixed.get("resident_bytes").unwrap().as_usize().unwrap();
+    assert!(
+        mixed_bytes > 0 && mixed_bytes < total,
+        "a 16-bit stage packs nothing: {mixed_bytes} vs full {total}"
+    );
+    let scored = conn.handle(&Json::parse(r#"{"op":"score","tokens":[1,5,9]}"#).unwrap());
+    assert!(scored.opt("ce").is_some(), "{scored:?}");
+
+    // Bad per-stage widths are an error response, not a worker panic.
+    let err = conn.handle(
+        &Json::parse(
+            r#"{"op":"load","family":"gpt2like","tier":"t0","pipeline":true,"stage_bits":[4]}"#,
+        )
+        .unwrap(),
+    );
+    assert!(err.opt("error").is_some(), "{err:?}");
+
+    // stage_bits without pipeline errors even though its key collides
+    // with the already-resident monolithic variant — validation must not
+    // depend on resident state.
+    let err = conn.handle(
+        &Json::parse(
+            r#"{"op":"load","family":"gpt2like","tier":"t0","stage_bits":[16,4]}"#,
+        )
+        .unwrap(),
+    );
+    assert!(
+        err.get("error").unwrap().as_str().unwrap().contains("pipeline"),
+        "{err:?}"
+    );
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,114 @@
+//! Autotuned serving walkthrough: `tune` → policy artifact → `--policy`
+//! serving (the live control surface over the paper's frontier).
+//!
+//! 1. train a small slice of the zoo (cached after the first run),
+//! 2. run the precision autotuner over the k-bit config space on a
+//!    calibration slice, deduped into `runs/tune.jsonl`,
+//! 3. write the Pareto-frontier policy to `runs/policy.json` — the same
+//!    artifact `kbitscale tune` emits and `kbitscale serve --policy`
+//!    loads,
+//! 4. serve with the policy active and resolve `{"op":"load","auto":true}`
+//!    at two different byte budgets: the tight budget lands on the
+//!    narrowest quantized frontier config (the k-bit regime where the
+//!    paper's 4-bit headline lives), the loose one on the best-metric
+//!    config the budget allows.
+//!
+//! Run: `make artifacts && cargo run --release --example tune_policy_serving`
+//!
+//! The shell equivalent of steps 2-4:
+//! ```text
+//! kbitscale train --families gpt2like --tiers t0,t1
+//! kbitscale tune  --families gpt2like --tiers t0,t1 --out runs/policy.json
+//! kbitscale serve --policy runs/policy.json --max-resident-bytes 30000 --tcp 127.0.0.1:7878
+//! echo '{"op":"load","auto":true,"family":"gpt2like","tier":"t0"}' | nc 127.0.0.1 7878
+//! ```
+
+use kbitscale::bench_support::BenchEnv;
+use kbitscale::models::families::Family;
+use kbitscale::models::ModelId;
+use kbitscale::server::{Connection, ModelRegistry, ParamLoader};
+use kbitscale::tensor::Tensor;
+use kbitscale::tune::{self, TuneStore, TuneTarget, TunedPolicy};
+use kbitscale::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let env = BenchEnv::open()?;
+    let families = vec!["gpt2like"];
+    let tiers: Vec<String> = ["t0", "t1"].iter().map(|s| s.to_string()).collect();
+
+    println!("== autotuned serving: search -> policy -> auto-load ==\n");
+    env.ensure_trained(&families, &tiers)?;
+
+    // Step 2: the search. Candidates span bits x dtype x block (plus
+    // per-stage width vectors when the artifacts declare pipeline
+    // stages); each one is built as a real packed resident and scored on
+    // the calibration slice. The store makes reruns incremental.
+    let store = TuneStore::open(env.paths().results.with_file_name("tune.jsonl"))?;
+    let ckpt = &env.checkpoints;
+    let loader = |family: &str, tier: &str| -> anyhow::Result<Vec<(String, Tensor)>> {
+        let fam = Family::get(family)?;
+        Ok(ckpt.load(&ModelId::new(fam.name, tier))?.0)
+    };
+    let targets: Vec<TuneTarget> =
+        tiers.iter().map(|t| TuneTarget::new("gpt2like", t.clone())).collect();
+    let cfg = tune::TuneConfig::default(); // bits {3,4,8} x fp/b64 + stage mixes
+    let report = tune::search(
+        &env.ctx.rt,
+        &env.ctx.manifest,
+        &env.ctx.corpus,
+        &loader,
+        &targets,
+        &cfg,
+        Some(&store),
+    )?;
+    println!(
+        "measured {} cells ({} cached); frontier:",
+        report.points.len(),
+        report.cached
+    );
+    for e in &report.policy.entries {
+        println!(
+            "  {:<28} {:>6.2} bits/param   metric {:+.4}",
+            e.key(),
+            e.bits_per_param,
+            e.metric
+        );
+    }
+
+    // Step 3: the artifact. `validate()` re-checks the Pareto invariant
+    // on every load, so this file is safe to hand-edit.
+    let policy_path = env.paths().results.with_file_name("policy.json");
+    report.policy.save(&policy_path)?;
+    println!("\npolicy -> {}", policy_path.display());
+    let policy = TunedPolicy::load(&policy_path)?;
+
+    // Step 4: policy-driven serving at two budgets derived from the
+    // frontier itself (measured bits/param includes the 16-bit
+    // pass-through tensors, so budgets must come from the entries, not
+    // the analytic k+16/B figure). The registry's --max-resident-bytes
+    // headroom is what the auto-load pick sees.
+    let tier = env.ctx.manifest.tier("t0")?;
+    let tight = policy.entries.first().expect("non-empty frontier").estimated_model_bytes(tier);
+    let loose = policy.entries.last().unwrap().estimated_model_bytes(tier);
+    for (label, budget) in [("tight", tight), ("loose", loose)] {
+        let loader: ParamLoader<'_> = Box::new(|family: &str, tier: &str| {
+            let fam = Family::get(family)?;
+            Ok(ckpt.load(&ModelId::new(fam.name, tier))?.0)
+        });
+        let registry = ModelRegistry::new(&env.ctx.rt, &env.ctx.manifest, loader)
+            .with_memory_budget(Some(budget))
+            .with_policy(Some(policy.clone()));
+        let mut conn = Connection::new(&registry, None);
+        let resp = conn.handle(
+            &Json::parse(r#"{"op":"load","auto":true,"family":"gpt2like","tier":"t0"}"#)?,
+        );
+        println!(
+            "{label} budget ({budget} B): auto-load -> {}",
+            resp.get("model")?.as_str()?
+        );
+        let score = conn.handle(&Json::parse(r#"{"op":"score","tokens":[1,5,9,12,3]}"#)?);
+        println!("  score ce {:.4}", score.get("ce")?.as_f64()?);
+    }
+    println!("\n(no dominated config can ever be picked: the policy stores only the frontier)");
+    Ok(())
+}

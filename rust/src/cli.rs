@@ -6,6 +6,9 @@
 //! kbitscale figures  --fig all|1|2|...                       # regenerate paper artifacts
 //! kbitscale analyze  --pearson                               # cross-metric analyses
 //! kbitscale quantize --tier t2 --family gpt2like --bits 4    # one-off cell
+//! kbitscale tune     --families gpt2like --tiers t0,t1       # search the k-bit space,
+//!                                                            # emit runs/policy.json
+//! kbitscale serve    --policy runs/policy.json --tcp ...     # policy-driven serving
 //! kbitscale demo     --tier t2                               # generate text, fp16 vs 4-bit
 //! kbitscale status                                           # what exists on disk
 //! ```
@@ -15,7 +18,7 @@ use std::path::PathBuf;
 use anyhow::{bail, Result};
 
 use crate::coordinator::{Cell, Coordinator, GridBuilder, ResultsStore};
-use crate::data::corpus::{Corpus, CorpusConfig};
+use crate::data::corpus::Corpus;
 use crate::data::vocabulary::Vocabulary;
 use crate::eval::EvalSuite;
 use crate::models::checkpoint::CheckpointStore;
@@ -25,6 +28,7 @@ use crate::quant::codebook::DataType;
 use crate::quant::QuantSpec;
 use crate::runtime::Runtime;
 use crate::train::{train_model, TrainConfig};
+use crate::tune::{self, TuneStore, TuneTarget, TunedPolicy};
 use crate::util::argparse::{ArgSpec, Args};
 
 /// Filesystem layout of a run directory.
@@ -59,11 +63,7 @@ impl Ctx {
     pub fn new(root: &str) -> Result<Ctx> {
         let paths = Paths::from_root(root);
         let manifest = Manifest::load(&paths.artifacts)?;
-        let corpus = Corpus::new(CorpusConfig {
-            vocab: manifest.vocab,
-            seq: manifest.seq,
-            ..CorpusConfig::default()
-        });
+        let corpus = Corpus::for_geometry(manifest.vocab, manifest.seq);
         Ok(Ctx { rt: Runtime::cpu()?, manifest, corpus, paths })
     }
 
@@ -79,7 +79,7 @@ impl Ctx {
 pub fn main_with_args(argv: Vec<String>) -> Result<()> {
     crate::util::progress::init_logging();
     let Some(cmd) = argv.first().cloned() else {
-        bail!("usage: kbitscale <train|sweep|figures|analyze|quantize|demo|serve|status> [options]\n(see README.md)");
+        bail!("usage: kbitscale <train|sweep|figures|analyze|quantize|tune|demo|serve|status> [options]\n(see README.md)");
     };
     let rest = argv[1..].to_vec();
     match cmd.as_str() {
@@ -88,6 +88,7 @@ pub fn main_with_args(argv: Vec<String>) -> Result<()> {
         "figures" => cmd_figures(&rest),
         "analyze" => cmd_analyze(&rest),
         "quantize" => cmd_quantize(&rest),
+        "tune" => cmd_tune(&rest),
         "demo" => cmd_demo(&rest),
         "serve" => cmd_serve(&rest),
         "status" => cmd_status(&rest),
@@ -303,6 +304,119 @@ fn cmd_quantize(raw: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_tune(raw: &[String]) -> Result<()> {
+    let spec = root_opt(
+        ArgSpec::new("tune", "search the k-bit config space and emit a tuned serving policy")
+            .opt("families", Some("headline"), "families (csv | headline | all)")
+            .opt("tiers", Some("all"), "tiers (csv | all); untrained models are skipped")
+            .opt("bits", Some("3,4,5,6,8"), "candidate bit widths")
+            .opt("dtypes", Some("fp,int"), "candidate data types (csv of int|fp|quantile|dynexp)")
+            .opt("blocks", Some("64"), "candidate block sizes (csv; 0 = tensor-wise)")
+            .flag("no-stage-mixes", "skip per-stage mixed-precision candidates")
+            .flag("zero-shot", "tune on mean zero-shot accuracy (default: CE loss)")
+            .opt("ppl-seqs", Some("16"), "calibration perplexity sequences per cell")
+            .opt("zs-examples", Some("16"), "calibration examples per zero-shot task")
+            .opt("threads", Some("2"), "tuning worker threads")
+            .opt("store", Some("runs/tune.jsonl"), "tuning store (dedupes measured cells)")
+            .opt("out", Some("runs/policy.json"), "tuned policy output path"),
+    );
+    let args = spec.parse(raw)?;
+    let root = args.get("root")?;
+    let ctx = Ctx::new(root)?;
+    let ckpt = ctx.checkpoint_store();
+
+    let cfg = tune::TuneConfig {
+        bits: args.usize_list("bits")?,
+        dtypes: args
+            .list("dtypes")?
+            .iter()
+            .map(|d| DataType::parse(d))
+            .collect::<Result<_>>()?,
+        blocks: args
+            .usize_list("blocks")?
+            .into_iter()
+            .map(|b| if b == 0 { None } else { Some(b) })
+            .collect(),
+        stage_mixes: !args.flag("no-stage-mixes"),
+        suite: if args.flag("zero-shot") { EvalSuite::PplZeroShot } else { EvalSuite::Ppl },
+        eval: crate::eval::EvalConfig {
+            ppl_sequences: args.usize("ppl-seqs")?.max(1),
+            zs_examples: args.usize("zs-examples")?.max(1),
+        },
+        threads: args.usize("threads")?.max(1),
+    };
+
+    // Only trained models can be measured; skipping (with a note) keeps
+    // `--tiers all` usable on a partially trained zoo.
+    let mut targets = Vec::new();
+    for family in parse_families(&args)? {
+        for tier in parse_tiers(&ctx, &args)? {
+            let id = crate::models::ModelId::new(family.name, &tier);
+            if ckpt.exists(&id) {
+                targets.push(TuneTarget::new(family.name, tier));
+            } else {
+                log::info!("tune: no checkpoint for {id}, skipping (run `kbitscale train`)");
+            }
+        }
+    }
+    if targets.is_empty() {
+        bail!("no trained checkpoints among the requested models — run `kbitscale train` first");
+    }
+
+    let store = TuneStore::open(PathBuf::from(root).join(args.get("store")?))?;
+    let out_path = PathBuf::from(root).join(args.get("out")?);
+    let loader = |family: &str, tier: &str| -> Result<Vec<(String, crate::tensor::Tensor)>> {
+        let fam = Family::get(family)?;
+        Ok(ckpt.load(&crate::models::ModelId::new(fam.name, tier))?.0)
+    };
+    let t = std::time::Instant::now();
+    let report =
+        tune::search(&ctx.rt, &ctx.manifest, &ctx.corpus, &loader, &targets, &cfg, Some(&store))?;
+
+    println!(
+        "tuned {} cells in {:.1}s ({} fresh, {} cached, {} skipped; store {})",
+        report.points.len(),
+        t.elapsed().as_secs_f64(),
+        report.fresh,
+        report.cached,
+        report.skipped,
+        store.len()
+    );
+    println!("\nper-config scaling curves (x = resident model bits):");
+    for c in &report.curves {
+        let slope = c
+            .mean_slope()
+            .map(|s| format!("{s:+.4}/decade"))
+            .unwrap_or_else(|| "-".to_string());
+        println!("  {:<24} {} point(s), slope {}", c.label, c.points().len(), slope);
+    }
+    let wins = crate::scaling::win_counts(&report.curves, 40);
+    if !wins.is_empty() {
+        println!("win counts across 40 log-spaced bit budgets: {wins:?}");
+    }
+    println!("\nPareto frontier (the policy):");
+    println!(
+        "{:<28} {:>8} {:>12} {:>12}",
+        "config", "bits/p", "metric", "est bytes/p"
+    );
+    for e in &report.policy.entries {
+        println!(
+            "{:<28} {:>8.3} {:>12.4} {:>12.3}",
+            e.key(),
+            e.bits_per_param,
+            e.metric,
+            e.bits_per_param / 8.0
+        );
+    }
+    report.policy.save(&out_path)?;
+    println!(
+        "\npolicy: {} entries -> {} (serve with --policy, then {{\"op\":\"load\",\"auto\":true}})",
+        report.policy.entries.len(),
+        out_path.display()
+    );
+    Ok(())
+}
+
 fn cmd_demo(raw: &[String]) -> Result<()> {
     let spec = root_opt(
         ArgSpec::new("demo", "decode a held-out sequence and show fp16-vs-4bit token NLL")
@@ -353,6 +467,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             .opt("max-resident-bytes", Some("0"), "evict LRU variants past this packed-byte budget (0 = unbounded)")
             .opt("ttl-secs", Some("0"), "evict variants idle longer than this (0 = no TTL)")
             .opt("cache-rows", Some("4096"), "score cache capacity in rows (0 = disabled)")
+            .opt("policy", None, "tuned policy JSON from `kbitscale tune` (enables {\"op\":\"load\",\"auto\":true})")
             .opt("tcp", None, "listen address (e.g. 127.0.0.1:7878); default stdin/stdout"),
     );
     let args = spec.parse(raw)?;
@@ -384,7 +499,22 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             0 => None,
             s => Some(std::time::Duration::from_secs(s as u64)),
         })
-        .with_score_cache(args.usize("cache-rows")?);
+        .with_score_cache(args.usize("cache-rows")?)
+        .with_policy(match args.opt_get("policy") {
+            Some(p) => {
+                // Like every other CLI path (tune --store/--out, runs/,
+                // artifacts/): relative to --root, absolute passes through.
+                let path = PathBuf::from(args.get("root")?).join(p);
+                let policy = TunedPolicy::load(&path)?;
+                log::info!(
+                    "policy: {} frontier entries from {p} (tuned on {})",
+                    policy.entries.len(),
+                    policy.tuned_on.join(",")
+                );
+                Some(policy)
+            }
+            None => None,
+        });
     let stage_bits = match args.opt_get("stage-bits") {
         Some(csv) => {
             let bits = csv

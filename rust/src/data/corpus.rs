@@ -168,6 +168,17 @@ impl Corpus {
         Corpus { gen: Generator::new(&cfg), cfg }
     }
 
+    /// The repo's one manifest-geometry corpus construction: the given
+    /// vocab/seq over every other `CorpusConfig` default (incl. the
+    /// seed). The CLI context, the serve-side `{"op":"tune"}` op, and
+    /// the tuning benches/tests all build their corpus here, so the
+    /// sweep, the tuner, and serving score the same held-out
+    /// distribution by construction (the tuning store's dedupe keys
+    /// embed the corpus seed and rely on this).
+    pub fn for_geometry(vocab: usize, seq: usize) -> Self {
+        Corpus::new(CorpusConfig { vocab, seq, ..CorpusConfig::default() })
+    }
+
     pub fn generator(&self) -> &Generator {
         &self.gen
     }

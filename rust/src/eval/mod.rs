@@ -231,11 +231,25 @@ impl<'rt> Evaluator<'rt> {
         cfg: &EvalConfig,
     ) -> Result<EvalResult> {
         let plits = self.param_literals(params)?;
-        let (ce, ppl, top1) = self.perplexity(&plits, corpus, cfg.ppl_sequences)?;
+        self.run_literals(&plits, corpus, suite, cfg)
+    }
+
+    /// Run a full suite against already-built parameter literals — the
+    /// one suite-assembly path shared by [`Evaluator::run`] (the sweep)
+    /// and the serving layer's resident-handle calibration (the
+    /// autotuner), so the two metrics can never diverge.
+    pub fn run_literals(
+        &self,
+        plits: &[xla::Literal],
+        corpus: &Corpus,
+        suite: EvalSuite,
+        cfg: &EvalConfig,
+    ) -> Result<EvalResult> {
+        let (ce, ppl, top1) = self.perplexity(plits, corpus, cfg.ppl_sequences)?;
         let mut zs_acc = Vec::new();
         if suite == EvalSuite::PplZeroShot {
             for task in Task::ALL {
-                zs_acc.push(self.zero_shot(&plits, corpus, task, cfg.zs_examples)?);
+                zs_acc.push(self.zero_shot(plits, corpus, task, cfg.zs_examples)?);
             }
         }
         let zs_mean = if zs_acc.is_empty() {

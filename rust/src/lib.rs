@@ -30,8 +30,9 @@
 //! | [`train`] | training driver over the AOT train-step executable |
 //! | [`eval`] | perplexity + zero-shot evaluation harness, scored through execution plans |
 //! | [`coordinator`] | sweep grid, scheduler, worker pool, results store |
-//! | [`server`] | LRU/TTL-governed packed-model registry (monolithic + pipeline-sharded variants, per-stage mixed precision) + sharded score cache + concurrent micro-batched JSON-lines serving with chunked streaming responses |
+//! | [`server`] | LRU/TTL-governed packed-model registry (monolithic + pipeline-sharded variants, per-stage mixed precision) + sharded score cache + concurrent micro-batched JSON-lines serving with chunked streaming responses and tuned-policy auto-loading |
 //! | [`scaling`] | scaling curves, Pareto frontiers, bit-level optimality, correlations |
+//! | [`tune`] | precision autotuner: candidate search over bits × block × dtype × per-stage widths, calibration eval, Pareto-frontier `TunedPolicy` artifacts |
 //! | [`report`] | ASCII figures and CSV emission for every paper table/figure |
 //! | [`bench_support`] | shared harness for the `benches/` reproduction binaries |
 //!
@@ -52,6 +53,7 @@ pub mod train;
 pub mod eval;
 pub mod coordinator;
 pub mod scaling;
+pub mod tune;
 pub mod report;
 pub mod bench_support;
 pub mod cli;

@@ -339,6 +339,50 @@ mod tests {
     }
 
     #[test]
+    fn stage_specs_empty_stage_list() {
+        // A zero-stage plan is degenerate but must resolve to an empty
+        // spec list (with or without an empty override vector), never
+        // panic or fabricate specs.
+        let base = QuantSpec::new(DataType::Fp, 4, Some(64));
+        assert!(stage_specs(&base, 0, None).unwrap().is_empty());
+        assert!(stage_specs(&base, 0, Some(&[])).unwrap().is_empty());
+        // A non-empty override against zero stages is a count mismatch.
+        assert!(stage_specs(&base, 0, Some(&[4])).is_err());
+    }
+
+    #[test]
+    fn stage_specs_all_16_is_full_passthrough() {
+        // Every stage at >= 16 bits: all-baseline specs, so nothing packs
+        // anywhere — the "serve unquantized through the pipeline" shape.
+        let base = QuantSpec::new(DataType::Int, 4, Some(64));
+        let s = stage_specs(&base, 3, Some(&[16, 16, 16])).unwrap();
+        assert_eq!(s.len(), 3);
+        assert!(s.iter().all(QuantSpec::is_baseline));
+        // Widths past 16 mean the same thing (>= 16 = baseline).
+        let s = stage_specs(&base, 2, Some(&[32, 16])).unwrap();
+        assert!(s.iter().all(QuantSpec::is_baseline));
+    }
+
+    #[test]
+    fn stage_specs_base_block_override_carries_per_stage() {
+        // Only the bit width is per-stage; a base spec carrying a
+        // non-default block size (or tensor-wise blocking) must hand that
+        // block to every overridden stage unchanged.
+        let blocked = QuantSpec::new(DataType::Fp, 4, Some(32));
+        let s = stage_specs(&blocked, 2, Some(&[3, 8])).unwrap();
+        assert_eq!((s[0].bits, s[0].block), (3, Some(32)));
+        assert_eq!((s[1].bits, s[1].block), (8, Some(32)));
+        let tensorwise = QuantSpec::new(DataType::Int, 4, None);
+        let s = stage_specs(&tensorwise, 2, Some(&[3, 4])).unwrap();
+        assert!(s.iter().all(|sp| sp.block.is_none()));
+        // ...but a baseline (16) stage drops the block: there is nothing
+        // to block-quantize in a passthrough stage.
+        let s = stage_specs(&blocked, 2, Some(&[16, 4])).unwrap();
+        assert!(s[0].is_baseline());
+        assert_eq!(s[1].block, Some(32));
+    }
+
+    #[test]
     fn stacked_slices_quantized_independently() {
         // Put an outlier in layer 0; layer 1 must be unaffected by it.
         let mut t = randn(vec![2, 4, 4], 4);

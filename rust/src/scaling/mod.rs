@@ -10,6 +10,8 @@
 
 use std::collections::BTreeMap;
 
+use crate::util::order::nan_last_cmp;
+
 /// One evaluated point of a scaling curve.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Point {
@@ -28,8 +30,15 @@ pub struct Curve {
 }
 
 impl Curve {
+    /// Non-finite points (NaN/±inf metric, non-positive or non-finite
+    /// bits) are **skipped**: a single failed eval cell produces a NaN
+    /// metric, and that must degrade the curve, not panic the sort that
+    /// used to run `partial_cmp().unwrap()` over it. The sort itself goes
+    /// through the NaN-last total order, so the constructor is total even
+    /// if the filter invariant ever changes.
     pub fn new(label: impl Into<String>, mut points: Vec<Point>) -> Self {
-        points.sort_by(|a, b| a.bits.partial_cmp(&b.bits).unwrap());
+        points.retain(|p| p.bits.is_finite() && p.bits > 0.0 && p.metric.is_finite());
+        points.sort_by(|a, b| nan_last_cmp(a.bits, b.bits));
         Curve { label: label.into(), points }
     }
 
@@ -76,9 +85,13 @@ impl Curve {
 /// Pareto frontier for metric **maximization** (zero-shot accuracy):
 /// the subset of points not dominated by any point with fewer-or-equal
 /// bits and strictly higher metric. Input: `(bits, metric, tag)` triples.
+/// NaN coordinates (either axis) are dropped up front — a NaN-bits point
+/// has no place on the axis and a NaN metric can never "improve" on the
+/// running best; the NaN-last sort keeps the pass panic-free regardless.
 pub fn pareto_frontier<T: Clone>(points: &[(f64, f64, T)]) -> Vec<(f64, f64, T)> {
-    let mut sorted: Vec<&(f64, f64, T)> = points.iter().collect();
-    sorted.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut sorted: Vec<&(f64, f64, T)> =
+        points.iter().filter(|p| !p.0.is_nan() && !p.1.is_nan()).collect();
+    sorted.sort_by(|a, b| nan_last_cmp(a.0, b.0));
     let mut out: Vec<(f64, f64, T)> = Vec::new();
     let mut best = f64::NEG_INFINITY;
     for p in sorted {
@@ -97,7 +110,8 @@ pub fn best_curve_at(curves: &[Curve], bits_budget: f64) -> Option<(String, f64)
     curves
         .iter()
         .filter_map(|c| c.interpolate(bits_budget).map(|m| (c.label.clone(), m)))
-        .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .filter(|(_, m)| !m.is_nan())
+        .max_by(|a, b| nan_last_cmp(a.1, b.1))
 }
 
 /// Count how often each curve wins across a log-spaced sweep of budgets
@@ -240,6 +254,47 @@ mod tests {
         let four = wins.get("4").copied().unwrap_or(0);
         let total: usize = wins.values().sum();
         assert!(four * 2 > total, "4-bit wins {four}/{total}: {wins:?}");
+    }
+
+    #[test]
+    fn curve_skips_nonfinite_points_instead_of_panicking() {
+        // A failed eval cell used to kill the whole tuning run via
+        // partial_cmp().unwrap() in the constructor's sort.
+        let c = Curve::new(
+            "c",
+            vec![
+                Point { bits: f64::NAN, metric: 0.5 },
+                Point { bits: 100.0, metric: f64::NAN },
+                Point { bits: 100.0, metric: 0.4 },
+                Point { bits: -5.0, metric: 0.3 },
+                Point { bits: f64::INFINITY, metric: 0.9 },
+                Point { bits: 10_000.0, metric: 0.8 },
+            ],
+        );
+        assert_eq!(c.points().len(), 2, "{:?}", c.points());
+        assert_eq!(c.interpolate(100.0), Some(0.4));
+        assert_eq!(c.interpolate(10_000.0), Some(0.8));
+        // All-bad input: an empty curve, not a panic.
+        assert!(Curve::new("x", vec![Point { bits: f64::NAN, metric: f64::NAN }]).is_empty());
+    }
+
+    #[test]
+    fn pareto_and_best_curve_ignore_nan_points() {
+        let pts = vec![
+            (f64::NAN, 9.9, "nan-bits"),
+            (100.0, 0.5, "a"),
+            (200.0, f64::NAN, "nan-metric"),
+            (300.0, 0.7, "b"),
+        ];
+        let front = pareto_frontier(&pts);
+        let tags: Vec<&str> = front.iter().map(|p| p.2).collect();
+        assert_eq!(tags, vec!["a", "b"]);
+        // best_curve_at over a curve that interpolates to NaN must not
+        // panic and must prefer the finite curve.
+        let good = mk("good", &[(100.0, 0.4), (10_000.0, 0.8)]);
+        let empty = Curve::new("empty", vec![]);
+        let best = best_curve_at(&[good, empty], 1000.0).unwrap();
+        assert_eq!(best.0, "good");
     }
 
     #[test]

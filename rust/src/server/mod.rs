@@ -70,7 +70,31 @@
 //!                                       bytes (per plan stage) / hits /
 //!                                       idle / pinned, budget, evictions,
 //!                                       cache counters
+//! → {"op":"load", "auto":true}          policy-driven load: the active
+//!                                       tuned policy picks spec/stage_bits
+//!                                       under the byte-budget headroom
+//! → {"op":"tune", "family":"gpt2like", "tier":"t0", "bits":[3,4,8]}
+//!                                       search the k-bit config space on
+//!                                       a calibration slice and install
+//!                                       the resulting Pareto policy
+//! → {"op":"policy"}                     inspect the active tuned policy;
+//!                                       "set": {...} swaps it in,
+//!                                       "clear": true removes it
 //! ```
+//!
+//! # Tuned-policy serving
+//!
+//! A [`crate::tune::TunedPolicy`] (from `kbitscale tune`, the CLI's
+//! `--policy`, or a live `{"op":"tune"}` search) holds the measured
+//! Pareto frontier of the quantization config space. With a policy
+//! active, `{"op":"load","auto":true}` resolves the frontier-optimal
+//! configuration that fits the registry's remaining `--max-resident-bytes`
+//! headroom — precision, data type, block size, and (for tiers with
+//! declared pipeline stages) the per-stage width vector — so operators
+//! state a byte budget instead of hand-picking `stage_bits`. Note that a
+//! live `{"op":"tune"}` search builds its candidates *outside* the
+//! packed-byte governance (transient, dropped per cell); on a budgeted
+//! server the builds therefore default to serial (`"threads"` overrides).
 //!
 //! # Streaming
 //!
@@ -113,13 +137,15 @@ use std::io::{BufRead, Write};
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::data::corpus::Corpus;
+use crate::eval::EvalSuite;
 use crate::models::manifest::{Manifest, TierManifest};
 use crate::quant::{bits_per_param, DataType, QuantSpec};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
+use crate::tune::{self, TunedPolicy};
 use crate::util::json::Json;
 use crate::util::pool;
 
@@ -255,6 +281,33 @@ fn resolve<'rt>(
         registry.get(key)
     } else {
         registry.peek(key)
+    }
+}
+
+/// Resolve the `(family, tier)` a tune/auto-load request addresses:
+/// explicit `"family"`/`"tier"` fields, else the identity of the
+/// connection's current (or registry default) model — so `{"op":"tune"}`
+/// with no arguments searches against whatever is being served.
+fn model_identity(
+    registry: &ModelRegistry<'_>,
+    core: &ConnCore,
+    req: &Json,
+) -> Result<(String, String)> {
+    match (req.opt("family"), req.opt("tier")) {
+        (Some(f), Some(t)) => Ok((f.as_str()?.to_string(), t.as_str()?.to_string())),
+        (None, None) => {
+            let h = resolve(registry, core, req, false)?;
+            // The handle carries the authoritative tier; strip it off the
+            // `{family}_{tier}` key rather than string-splitting, so a
+            // tier name containing '_' can never mis-parse the family.
+            let tier = h.tier.name.clone();
+            let family = h
+                .model_key
+                .strip_suffix(&format!("_{tier}"))
+                .ok_or_else(|| anyhow!("cannot derive family/tier from {:?}", h.model_key))?;
+            Ok((family.to_string(), tier))
+        }
+        _ => bail!(r#"give both "family" and "tier", or neither"#),
     }
 }
 
@@ -550,6 +603,39 @@ fn try_handle<'rt>(
             ]))
         }
         "load" => {
+            // Policy-driven variant: {"op":"load","auto":true} lets the
+            // active tuned policy pick the config for the byte headroom.
+            let auto = match req.opt("auto") {
+                Some(v) => v.as_bool()?,
+                None => false,
+            };
+            if auto {
+                for k in ["bits", "dtype", "block", "pipeline", "stage_bits"] {
+                    if req.opt(k).is_some() {
+                        bail!(r#""auto":true picks the config from the policy; drop {k:?}"#);
+                    }
+                }
+                let (family, tier) = model_identity(registry, core, req)?;
+                let (h, entry) = registry.load_auto(&family, &tier)?;
+                core.current = Some(h.key());
+                return Ok(Json::obj(vec![
+                    ("model", Json::str(h.key())),
+                    ("auto", Json::Bool(true)),
+                    ("policy_metric", Json::num(entry.metric)),
+                    (
+                        "stage_bits",
+                        match &entry.stage_bits {
+                            Some(v) => {
+                                Json::Arr(v.iter().map(|&b| Json::num(b as f64)).collect())
+                            }
+                            None => Json::Null,
+                        },
+                    ),
+                    ("models", Json::num(registry.len() as f64)),
+                    ("resident_bytes", Json::num(h.resident_bytes() as f64)),
+                    ("stages", Json::num(h.n_stages() as f64)),
+                ]));
+            }
             let family = req.get("family")?.as_str()?;
             let tier = req.get("tier")?.as_str()?;
             let bits = match req.opt("bits") {
@@ -687,7 +773,105 @@ fn try_handle<'rt>(
                 ("scores", Json::arr_f64(&norm)),
             ]))
         }
-        op => bail!("unknown op {op:?} (info|models|stats|load|unload|score|choose)"),
+        "tune" => {
+            // Run a precision search against a resident model's weights
+            // (pulled through the registry's checkpoint loader) on a
+            // calibration slice, and install the resulting Pareto policy.
+            let (family, tier) = model_identity(registry, core, req)?;
+            let mut cfg = tune::TuneConfig::default();
+            if let Some(v) = req.opt("bits") {
+                cfg.bits = v.usizes()?;
+            }
+            if let Some(v) = req.opt("dtypes") {
+                cfg.dtypes = v
+                    .as_arr()?
+                    .iter()
+                    .map(|d| DataType::parse(d.as_str()?))
+                    .collect::<Result<_>>()?;
+            }
+            if let Some(v) = req.opt("blocks") {
+                cfg.blocks = v
+                    .as_arr()?
+                    .iter()
+                    .map(|b| {
+                        Ok(match b.as_usize()? {
+                            0 => None,
+                            n => Some(n),
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            if let Some(v) = req.opt("stage_mixes") {
+                cfg.stage_mixes = v.as_bool()?;
+            }
+            if let Some(v) = req.opt("ppl_sequences") {
+                cfg.eval.ppl_sequences = v.as_usize()?.max(1);
+            }
+            if let Some(v) = req.opt("zs_examples") {
+                cfg.eval.zs_examples = v.as_usize()?.max(1);
+            }
+            if let Some(v) = req.opt("zero_shot") {
+                if v.as_bool()? {
+                    cfg.suite = EvalSuite::PplZeroShot;
+                }
+            }
+            if let Some(v) = req.opt("threads") {
+                cfg.threads = v.as_usize()?.max(1);
+            } else if registry.memory_budget().is_some() {
+                // The search's transient working set (one full candidate
+                // build per worker + the pinned checkpoint) lives outside
+                // the registry's packed-byte governance. A budgeted
+                // server declared itself memory-constrained, so keep the
+                // builds serial unless the operator explicitly asks.
+                cfg.threads = 1;
+            }
+            let install = match req.opt("install") {
+                Some(v) => v.as_bool()?,
+                None => true,
+            };
+            // The one manifest-geometry corpus construction — tuning and
+            // sweeping score the same held-out distribution.
+            let corpus = Corpus::for_geometry(registry.manifest.vocab, registry.manifest.seq);
+            let targets = vec![tune::TuneTarget::new(family, tier)];
+            let report = tune::search(
+                registry.runtime(),
+                &registry.manifest,
+                &corpus,
+                &|f: &str, t: &str| registry.checkpoint(f, t),
+                &targets,
+                &cfg,
+                None,
+            )?;
+            let policy_json = report.policy.to_json();
+            if install {
+                registry.set_policy(Some(report.policy));
+            }
+            Ok(Json::obj(vec![
+                ("tuned", Json::num(report.points.len() as f64)),
+                ("evaluated", Json::num(report.fresh as f64)),
+                ("skipped", Json::num(report.skipped as f64)),
+                ("installed", Json::Bool(install)),
+                ("policy", policy_json),
+            ]))
+        }
+        "policy" => {
+            // Inspect / swap / clear the active tuned policy.
+            if let Some(v) = req.opt("set") {
+                registry.set_policy(Some(TunedPolicy::from_json(v)?));
+            } else if let Some(v) = req.opt("clear") {
+                if v.as_bool()? {
+                    registry.set_policy(None);
+                }
+            }
+            Ok(Json::obj(vec![(
+                "policy",
+                match registry.policy() {
+                    Some(p) => p.to_json(),
+                    None => Json::Null,
+                },
+            )]))
+        }
+        op => bail!("unknown op {op:?} (info|models|stats|load|unload|score|choose|tune|policy)"),
     }
 }
 

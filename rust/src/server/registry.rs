@@ -44,11 +44,13 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Context, Result};
 
 use super::cache::ScoreCache;
-use crate::eval::Evaluator;
+use crate::data::corpus::Corpus;
+use crate::eval::{EvalConfig, EvalResult, EvalSuite, Evaluator};
 use crate::models::manifest::{Manifest, TierManifest};
 use crate::quant::{self, PackedParam, QuantSpec};
 use crate::runtime::{lit_f32_slice, ParamLiterals, Runtime};
 use crate::tensor::Tensor;
+use crate::tune::policy::{PolicyEntry, TunedPolicy};
 
 /// Produces the checkpoint parameters for `(family, tier)` on demand.
 pub type ParamLoader<'a> =
@@ -241,6 +243,21 @@ impl<'rt> ModelHandle<'rt> {
         self.ev.score_padded_rows(&self.plits.0, rows)
     }
 
+    /// Run a calibration evaluation suite against the resident literals —
+    /// the autotuner's measurement primitive: perplexity (and optionally
+    /// the four zero-shot tasks) on a held-out corpus slice, through
+    /// whatever plan shape this variant executes with. Delegates to the
+    /// sweep's own suite assembly ([`Evaluator::run_literals`]), so the
+    /// tuner's metric and the sweep's metric can never diverge.
+    pub fn evaluate(
+        &self,
+        corpus: &Corpus,
+        suite: EvalSuite,
+        cfg: &EvalConfig,
+    ) -> Result<EvalResult> {
+        self.ev.run_literals(&self.plits.0, corpus, suite, cfg)
+    }
+
     /// Host-resident weight bytes in packed form (indices + per-block
     /// constants). Zero for baseline/proxy specs, which keep no packed
     /// store.
@@ -315,6 +332,9 @@ pub struct ModelRegistry<'rt> {
     loaded_cv: Condvar,
     /// Shared score cache; `None` = caching disabled.
     cache: Option<Arc<ScoreCache>>,
+    /// Active tuned policy driving `{"op":"load","auto":true}` picks;
+    /// `Arc`-shared so in-flight picks survive a concurrent swap.
+    policy: Mutex<Option<Arc<TunedPolicy>>>,
 }
 
 impl<'rt> ModelRegistry<'rt> {
@@ -333,6 +353,7 @@ impl<'rt> ModelRegistry<'rt> {
             loading: Mutex::new(HashSet::new()),
             loaded_cv: Condvar::new(),
             cache: None,
+            policy: Mutex::new(None),
         }
     }
 
@@ -361,6 +382,125 @@ impl<'rt> ModelRegistry<'rt> {
     /// second reference).
     pub fn score_cache(&self) -> Option<Arc<ScoreCache>> {
         self.cache.clone()
+    }
+
+    /// Attach a tuned policy at construction (the CLI's `--policy`).
+    pub fn with_policy(self, policy: Option<TunedPolicy>) -> Self {
+        self.set_policy(policy);
+        self
+    }
+
+    /// Install (or clear) the active tuned policy — the `{"op":"policy",
+    /// "set":...}` / `{"op":"tune"}` swap path. In-flight auto-loads keep
+    /// the policy they already resolved.
+    pub fn set_policy(&self, policy: Option<TunedPolicy>) {
+        *self.policy.lock().unwrap() = policy.map(Arc::new);
+    }
+
+    /// The active tuned policy, if any.
+    pub fn policy(&self) -> Option<Arc<TunedPolicy>> {
+        self.policy.lock().unwrap().clone()
+    }
+
+    /// Packed-byte headroom left under the configured budget (`None` =
+    /// unbounded): what an `auto` load may still spend.
+    pub fn headroom(&self) -> Option<usize> {
+        self.max_resident_bytes.map(|b| b.saturating_sub(self.resident_bytes_total()))
+    }
+
+    /// The shared PJRT runtime (the tune op runs its search on it).
+    pub fn runtime(&self) -> &'rt Runtime {
+        self.rt
+    }
+
+    /// Pull checkpoint parameters through the registry's loader — the
+    /// tune op's parameter source, so a search measures exactly the
+    /// weights this registry would serve.
+    pub fn checkpoint(&self, family: &str, tier: &str) -> Result<Vec<(String, Tensor)>> {
+        (self.loader)(family, tier)
+    }
+
+    /// Policy-driven load: pick the frontier-optimal config for
+    /// `(family, tier)` under the current byte headroom and make that
+    /// variant resident. Returns the handle together with the policy
+    /// entry that chose it, so the protocol layer can report the pick.
+    ///
+    /// Idempotent under repeated calls: a frontier entry that is
+    /// **already resident** costs zero additional bytes, so it is
+    /// preferred over any fresh load the shrunken headroom would allow —
+    /// a fleet of clients all sending `{"op":"load","auto":true}` on
+    /// connect converge on one variant instead of cascading down the
+    /// frontier as each load eats the budget. A strictly better entry
+    /// that fits the remaining headroom fresh still wins (upgrades
+    /// happen when an operator raises the budget).
+    pub fn load_auto(
+        &self,
+        family: &str,
+        tier_name: &str,
+    ) -> Result<(Arc<ModelHandle<'rt>>, PolicyEntry)> {
+        let policy = self.policy().ok_or_else(|| {
+            anyhow!(
+                "no tuned policy active (start with --policy <file>, or install one \
+                 via {{\"op\":\"tune\"}} / {{\"op\":\"policy\",\"set\":...}})"
+            )
+        })?;
+        let tier = self.manifest.tier(tier_name)?;
+        let n_stages = tier.stages.len();
+        let applicable = |e: &PolicyEntry| match &e.stage_bits {
+            None => true,
+            Some(v) => v.len() == n_stages,
+        };
+        // Best already-resident frontier entry (entries sort by metric
+        // ascending, so scan in reverse). The probe must not touch
+        // LRU/hit state — it may lose to a better fresh pick, and a
+        // non-serving resolution counting as a use would shield an idle
+        // variant from eviction (the same reason `peek` exists).
+        let model_key = format!("{family}_{tier_name}");
+        let resident = {
+            let map = self.models.lock().unwrap();
+            policy.entries.iter().rev().filter(|e| applicable(e)).find_map(|e| {
+                let spec = e.spec().ok()?;
+                let key = format!("{model_key}@{}{}", spec.key(), e.plan_request().suffix());
+                map.get(&key).map(|r| (key, r.handle.clone(), e.clone()))
+            })
+        };
+        let headroom = self.headroom();
+        let fresh = policy.pick(tier, headroom).cloned();
+        let entry = match (resident, fresh) {
+            (Some((_, _, r)), Some(f))
+                if crate::util::order::nan_last_cmp(f.metric, r.metric).is_gt() =>
+            {
+                f
+            }
+            (Some((key, h, r)), _) => {
+                // Serving the resident pick *is* a use: record it now
+                // (fall back to the probed handle if it was evicted in
+                // the gap — our Arc pins it).
+                let h = self.touch(&key).unwrap_or(h);
+                return Ok((h, r));
+            }
+            (None, Some(f)) => f,
+            (None, None) => {
+                // The hint must only cite entries pick() could ever
+                // choose for this tier (stage-count applicable), or an
+                // operator chases a byte figure that can never fit.
+                let smallest = policy
+                    .entries
+                    .iter()
+                    .filter(|e| applicable(e))
+                    .map(|e| e.estimated_model_bytes(tier))
+                    .min();
+                return Err(match (headroom, smallest) {
+                    (Some(b), Some(n)) => anyhow!(
+                        "no policy entry fits {b} bytes of headroom for tier {tier_name} \
+                         (smallest applicable entry wants ~{n} bytes)"
+                    ),
+                    _ => anyhow!("policy has no entry applicable to tier {tier_name}"),
+                });
+            }
+        };
+        let handle = self.load_plan(family, tier_name, entry.spec()?, &entry.plan_request())?;
+        Ok((handle, entry))
     }
 
     /// Insert an already-built handle; the first insert becomes the
@@ -428,6 +568,20 @@ impl<'rt> ModelRegistry<'rt> {
         // otherwise validation would depend on resident state.
         if plan.stage_bits.is_some() && !plan.pipeline {
             bail!("stage_bits requires the pipeline plan");
+        }
+        // Validate the width count against the tier's declared stage
+        // count here at the protocol boundary: a mismatch used to
+        // surface as a deep plan-layout error after the stage graphs had
+        // already compiled; it must be one clear error line instead.
+        if let Some(bits) = &plan.stage_bits {
+            let declared = self.manifest.tier(tier_name)?.stages.len();
+            if bits.len() != declared {
+                bail!(
+                    "stage_bits has {} widths but tier {tier_name} declares {declared} \
+                     pipeline stage(s)",
+                    bits.len()
+                );
+            }
         }
         let model_key = format!("{family}_{tier_name}");
         let key = format!("{}@{}{}", model_key, spec.key(), plan.suffix());

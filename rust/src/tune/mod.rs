@@ -1,0 +1,720 @@
+//! Pareto-guided precision autotuner: search the k-bit config space and
+//! distill the measurements into a serving policy.
+//!
+//! The paper's result is that the accuracy/size trade-off is governed by
+//! precision, block size, and data type, with 4-bit almost universally
+//! optimal; mixed-precision work pushes further by assigning widths
+//! per layer/stage. This module closes the loop between the repo's two
+//! halves — `scaling::` can *measure* the frontier and `server::` can
+//! *serve* any per-stage width vector — by connecting measurement to
+//! deployment:
+//!
+//! 1. [`candidates`] enumerates configurations over the paper's axes
+//!    (bit width × block size × data type) plus per-stage width vectors
+//!    for tiers that declare pipeline stages,
+//! 2. [`search`] evaluates each candidate's calibration metric through
+//!    the existing [`Evaluator`]/plan path (built as a real
+//!    [`ModelHandle`], so packed residency is *measured*, not modeled),
+//!    fanned out on the coordinator's worker pool and deduped into a
+//!    [`store::TuneStore`],
+//! 3. the measured points are fitted into [`scaling::Curve`]s and the
+//!    Pareto frontier over resident model bits is extracted,
+//! 4. the frontier is serialized as a [`policy::TunedPolicy`] mapping a
+//!    byte budget to the frontier-optimal config — the artifact
+//!    `kbitscale serve --policy` and `{"op":"load","auto":true}` run on.
+//!
+//! A failed evaluation cell is logged and **skipped**, never fatal: one
+//! unbuildable config or NaN metric must not kill a long tuning run (the
+//! NaN-tolerant [`scaling::Curve`]/frontier path drops such points).
+//!
+//! [`Evaluator`]: crate::eval::Evaluator
+//! [`ModelHandle`]: crate::server::registry::ModelHandle
+
+pub mod policy;
+pub mod store;
+
+pub use policy::{PolicyEntry, TunedPolicy};
+pub use store::{point_key, TunePoint, TuneStore};
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::DATA_VERSION;
+use crate::data::corpus::Corpus;
+use crate::eval::{EvalConfig, EvalSuite};
+use crate::models::manifest::{Manifest, TierManifest};
+use crate::quant::{self, DataType, QuantSpec};
+use crate::runtime::{ExecutionPlan, PlanLayout, Runtime};
+use crate::scaling::{self, Curve, Point};
+use crate::server::registry::{ModelHandle, PlanRequest};
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::order::nan_last_cmp;
+use crate::util::pool;
+
+/// One point of the search space: a quantization spec, optionally with a
+/// per-stage width vector (pipeline-sharded mixed precision). Candidates
+/// vary the paper's main axes only — exponent bits, centering, and proxy
+/// quantization are out of scope for the tuner (and for the store's
+/// serialization).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Candidate {
+    pub spec: QuantSpec,
+    /// Per-stage widths (`16` = unquantized stage); requires the tier to
+    /// declare pipeline stages. `None` = the monolithic plan.
+    pub stage_bits: Option<Vec<usize>>,
+}
+
+impl Candidate {
+    /// A uniform-precision candidate on the monolithic plan.
+    pub fn uniform(spec: QuantSpec) -> Candidate {
+        Candidate { spec, stage_bits: None }
+    }
+
+    /// A pipeline-sharded candidate with per-stage widths over the base
+    /// spec's dtype/block.
+    pub fn staged(spec: QuantSpec, stage_bits: Vec<usize>) -> Candidate {
+        Candidate { spec, stage_bits: Some(stage_bits) }
+    }
+
+    /// The plan shape this candidate executes with.
+    pub fn plan_request(&self) -> PlanRequest {
+        PlanRequest {
+            pipeline: self.stage_bits.is_some(),
+            stage_bits: self.stage_bits.clone(),
+        }
+    }
+
+    /// Stable identity matching the registry-key spelling:
+    /// `fp:4:b64`, `fp:4:b64#pipe[16,4]`.
+    pub fn key(&self) -> String {
+        format!("{}{}", self.spec.key(), self.plan_request().suffix())
+    }
+
+    /// Resident model bits of this candidate on `tier` — the Pareto
+    /// x-axis. Monolithic candidates use the paper's analytic accounting
+    /// (`bitcost::total_model_bits`); staged candidates account each plan
+    /// parameter under its stage's spec, so a replicated parameter (the
+    /// tied LM head) counts once per owning stage, exactly as it is
+    /// resident in a sharded deployment.
+    pub fn total_bits(&self, tier: &TierManifest) -> Result<f64> {
+        match &self.stage_bits {
+            None => Ok(quant::bitcost::total_model_bits(
+                &tier.param_sizes(),
+                &tier.quantized_params,
+                &self.spec,
+            )),
+            Some(bits) => {
+                let layout = PlanLayout::staged(tier)?;
+                let specs = quant::stage_specs(&self.spec, layout.n_stages(), Some(bits))?;
+                Ok(layout
+                    .params
+                    .iter()
+                    .map(|pp| {
+                        let quantized =
+                            tier.quantized_params.iter().any(|q| q == &pp.source);
+                        let bpp = if quantized {
+                            quant::bits_per_param(&specs[pp.stage])
+                        } else {
+                            16.0
+                        };
+                        bpp * pp.numel() as f64
+                    })
+                    .sum())
+            }
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bits", Json::num(self.spec.bits as f64)),
+            ("dtype", Json::str(self.spec.dtype.name())),
+            (
+                "block",
+                match self.spec.block {
+                    Some(b) => Json::num(b as f64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "stage_bits",
+                match &self.stage_bits {
+                    Some(v) => Json::Arr(v.iter().map(|&b| Json::num(b as f64)).collect()),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Candidate> {
+        let block = match j.get("block")? {
+            Json::Null => None,
+            v => Some(v.as_usize()?),
+        };
+        let spec = QuantSpec::new(
+            DataType::parse(j.get("dtype")?.as_str()?)?,
+            j.get("bits")?.as_usize()?,
+            block,
+        );
+        let stage_bits = match j.get("stage_bits")? {
+            Json::Null => None,
+            v => Some(v.usizes()?),
+        };
+        Ok(Candidate { spec, stage_bits })
+    }
+}
+
+/// What the search sweeps and how hard it evaluates each cell.
+#[derive(Debug, Clone)]
+pub struct TuneConfig {
+    /// Candidate bit widths (values >= 16 fold into the always-included
+    /// baseline reference point).
+    pub bits: Vec<usize>,
+    pub dtypes: Vec<DataType>,
+    /// Candidate block sizes; `None` = tensor-wise.
+    pub blocks: Vec<Option<usize>>,
+    /// Also generate per-stage width vectors for tiers with pipeline
+    /// stages (hi-precision prefix / lo-precision suffix splits over the
+    /// first dtype × block).
+    pub stage_mixes: bool,
+    /// Calibration suite; `Ppl` maximizes `-ce`, `PplZeroShot` maximizes
+    /// mean zero-shot accuracy.
+    pub suite: EvalSuite,
+    /// Calibration slice sizes (deliberately smaller than a full sweep
+    /// cell: tuning trades eval precision for search breadth).
+    pub eval: EvalConfig,
+    pub threads: usize,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig {
+            bits: vec![3, 4, 8],
+            dtypes: vec![DataType::Fp],
+            blocks: vec![Some(64)],
+            stage_mixes: true,
+            suite: EvalSuite::Ppl,
+            eval: EvalConfig { ppl_sequences: 16, zs_examples: 16 },
+            threads: 2,
+        }
+    }
+}
+
+/// Enumerate the candidate set for a plan with `n_stages` stages: the
+/// 16-bit baseline, every buildable uniform (dtype × bits × block)
+/// config, and — when `stage_mixes` is on and the plan is sharded —
+/// two-width prefix/suffix stage vectors (e.g. `[16,4]`: a 16-bit
+/// embedding-heavy stage 0 over a 4-bit stage 1). Unbuildable combos
+/// (e.g. dynexp below 3 bits) are silently dropped, not errors.
+pub fn candidates(cfg: &TuneConfig, n_stages: usize) -> Vec<Candidate> {
+    let mut out = vec![Candidate::uniform(QuantSpec::baseline16())];
+    for &k in &cfg.bits {
+        if k >= 16 {
+            continue; // the baseline is already in
+        }
+        for &dt in &cfg.dtypes {
+            for &block in &cfg.blocks {
+                let spec = QuantSpec::new(dt, k, block);
+                if spec.codebook().is_ok() {
+                    out.push(Candidate::uniform(spec));
+                }
+            }
+        }
+    }
+    if cfg.stage_mixes && n_stages >= 2 {
+        let dt = cfg.dtypes.first().copied().unwrap_or(DataType::Fp);
+        let block = cfg.blocks.first().copied().unwrap_or(Some(64));
+        let mut widths: Vec<usize> = cfg
+            .bits
+            .iter()
+            .copied()
+            .filter(|&k| k < 16 && QuantSpec::new(dt, k, block).codebook().is_ok())
+            .collect();
+        widths.push(16);
+        widths.sort_unstable();
+        widths.dedup();
+        for &hi in &widths {
+            for &lo in &widths {
+                if hi == lo {
+                    continue;
+                }
+                for split in 1..n_stages {
+                    let v: Vec<usize> =
+                        (0..n_stages).map(|s| if s < split { hi } else { lo }).collect();
+                    // The base spec's bits field is the narrowest
+                    // quantized width (every stage overrides it anyway;
+                    // this keeps the registry key readable).
+                    let base = v.iter().copied().filter(|&k| k < 16).min().unwrap_or(4);
+                    out.push(Candidate::staged(QuantSpec::new(dt, base, block), v));
+                }
+            }
+        }
+    }
+    let mut seen = HashSet::new();
+    out.retain(|c| seen.insert(c.key()));
+    out
+}
+
+/// One model the search measures.
+#[derive(Debug, Clone)]
+pub struct TuneTarget {
+    pub family: String,
+    pub tier: String,
+}
+
+impl TuneTarget {
+    pub fn new(family: impl Into<String>, tier: impl Into<String>) -> TuneTarget {
+        TuneTarget { family: family.into(), tier: tier.into() }
+    }
+
+    pub fn key(&self) -> String {
+        format!("{}_{}", self.family, self.tier)
+    }
+}
+
+/// Everything a search run produced.
+pub struct TuneReport {
+    /// All measured points (cached + freshly evaluated), target order.
+    pub points: Vec<TunePoint>,
+    /// Cells evaluated this run (the rest were store hits).
+    pub fresh: usize,
+    pub cached: usize,
+    /// Cells that failed and were skipped (logged, never fatal).
+    pub skipped: usize,
+    /// Per-candidate scaling curves over (total bits, metric) — one point
+    /// per measured target, the paper's Figure-1 geometry.
+    pub curves: Vec<Curve>,
+    /// The distilled serving policy (the measured Pareto frontier).
+    pub policy: TunedPolicy,
+}
+
+fn suite_name(suite: EvalSuite) -> &'static str {
+    match suite {
+        EvalSuite::Ppl => "ppl",
+        EvalSuite::PplZeroShot => "ppl_zs",
+    }
+}
+
+/// Run the search: evaluate every (target × candidate) cell not already
+/// in `store`, fit the points into scaling curves, and distill the
+/// Pareto-frontier policy. `loader` produces checkpoint parameters per
+/// (family, tier) — the CLI wires the on-disk store, the serve op wires
+/// the registry's loader, tests/benches inject init-only params.
+pub fn search(
+    rt: &Runtime,
+    manifest: &Manifest,
+    corpus: &Corpus,
+    loader: &(dyn Fn(&str, &str) -> Result<Vec<(String, Tensor)>> + Sync),
+    targets: &[TuneTarget],
+    cfg: &TuneConfig,
+    store: Option<&TuneStore>,
+) -> Result<TuneReport> {
+    struct Cell<'m> {
+        target: TuneTarget,
+        tier: &'m TierManifest,
+        cand: Candidate,
+        key: String,
+    }
+    let mut cells: Vec<Cell<'_>> = Vec::new();
+    for t in targets {
+        let tier = manifest.tier(&t.tier)?;
+        for cand in candidates(cfg, tier.stages.len()) {
+            let key = point_key(
+                &t.family,
+                &t.tier,
+                &cand.key(),
+                suite_name(cfg.suite),
+                cfg.eval.ppl_sequences,
+                cfg.eval.zs_examples,
+                corpus.cfg.seed,
+                DATA_VERSION,
+            );
+            cells.push(Cell { target: t.clone(), tier, cand, key });
+        }
+    }
+    if cells.is_empty() {
+        bail!("tune: no candidates to evaluate (empty targets or config)");
+    }
+
+    // Partition into cached / to-run (the store's dedupe economics).
+    let mut points: Vec<Option<TunePoint>> = Vec::with_capacity(cells.len());
+    let mut todo: Vec<usize> = Vec::new();
+    for (i, c) in cells.iter().enumerate() {
+        match store.and_then(|s| s.get(&c.key)) {
+            Some(hit) => points.push(Some(hit)),
+            None => {
+                points.push(None);
+                todo.push(i);
+            }
+        }
+    }
+    let cached = cells.len() - todo.len();
+    let mut skipped = 0usize;
+
+    if !todo.is_empty() {
+        log::info!(
+            "tune: {} cells ({cached} cached, {} to run) on {} workers",
+            cells.len(),
+            todo.len(),
+            cfg.threads.max(1)
+        );
+        // Pre-compile each involved plan serially: PJRT compilation is
+        // not profitably concurrent (the coordinator does the same). A
+        // staged-plan compile failure only dooms the staged cells, which
+        // fail-and-skip individually below.
+        let mut seen_plans: HashSet<(String, bool)> = HashSet::new();
+        for &i in &todo {
+            let c = &cells[i];
+            let pipeline = c.cand.stage_bits.is_some();
+            if seen_plans.insert((c.tier.name.clone(), pipeline)) {
+                if let Err(e) = ExecutionPlan::compile(rt, manifest, c.tier, pipeline) {
+                    log::warn!(
+                        "tune: pre-compile of {} (pipeline={pipeline}) failed: {e:#}",
+                        c.tier.name
+                    );
+                }
+            }
+        }
+        // In-memory checkpoint cache shared by the workers.
+        let params_cache: Mutex<HashMap<String, Arc<Vec<(String, Tensor)>>>> =
+            Mutex::new(HashMap::new());
+        let load_params = |family: &str, tier: &str| -> Result<Arc<Vec<(String, Tensor)>>> {
+            let ck = format!("{family}_{tier}");
+            if let Some(hit) = params_cache.lock().unwrap().get(&ck) {
+                return Ok(hit.clone());
+            }
+            let params = loader(family, tier)
+                .with_context(|| format!("loading checkpoint {ck} for tuning"))?;
+            let arc = Arc::new(params);
+            params_cache.lock().unwrap().insert(ck, arc.clone());
+            Ok(arc)
+        };
+        // Warm the cache serially: the check-then-insert above is not
+        // single-flight, so the first wave of workers would otherwise
+        // all re-read the same checkpoint at once. Errors are left for
+        // the cells to rediscover and fail-skip individually.
+        let mut seen_targets: HashSet<String> = HashSet::new();
+        for &i in &todo {
+            let t = &cells[i].target;
+            if seen_targets.insert(t.key()) {
+                if let Err(e) = load_params(&t.family, &t.tier) {
+                    log::warn!("tune: pre-loading {} failed: {e:#}", t.key());
+                }
+            }
+        }
+        let fresh = pool::parallel_map(todo.len(), cfg.threads.max(1), |j| {
+            let c = &cells[todo[j]];
+            run_cell(rt, manifest, corpus, cfg, c.tier, &c.target, &c.cand, &c.key, &load_params)
+                .with_context(|| format!("tune cell {} {}", c.target.key(), c.cand.key()))
+        });
+        for (j, res) in fresh.into_iter().enumerate() {
+            match res {
+                Ok(p) => {
+                    if let Some(s) = store {
+                        s.put(p.clone())?;
+                    }
+                    points[todo[j]] = Some(p);
+                }
+                // One failed cell (unbuildable config, missing stage
+                // artifacts, a NaN blow-up) must not kill the run.
+                Err(e) => {
+                    log::warn!("tune: skipping cell: {e:#}");
+                    skipped += 1;
+                }
+            }
+        }
+    }
+
+    let points: Vec<TunePoint> = points.into_iter().flatten().collect();
+    if points.is_empty() {
+        bail!("tune: every cell failed — nothing to fit a policy from");
+    }
+    let curves = fit_curves(&points);
+    let policy = frontier_policy(&points, suite_name(cfg.suite));
+    debug_assert!(policy.validate().is_ok(), "frontier extraction produced a dominated entry");
+    Ok(TuneReport { fresh: points.len() - cached, cached, skipped, curves, policy, points })
+}
+
+/// Evaluate one (target × candidate) cell: build the candidate as a real
+/// resident [`ModelHandle`] (so packed bytes are measured) and score the
+/// calibration slice through its execution plan.
+#[allow(clippy::too_many_arguments)]
+fn run_cell(
+    rt: &Runtime,
+    manifest: &Manifest,
+    corpus: &Corpus,
+    cfg: &TuneConfig,
+    tier: &TierManifest,
+    target: &TuneTarget,
+    cand: &Candidate,
+    key: &str,
+    load_params: &dyn Fn(&str, &str) -> Result<Arc<Vec<(String, Tensor)>>>,
+) -> Result<TunePoint> {
+    let t0 = std::time::Instant::now();
+    let params = load_params(&target.family, &target.tier)?;
+    let handle = ModelHandle::with_plan(
+        rt,
+        manifest,
+        tier,
+        &params,
+        cand.spec.clone(),
+        &cand.plan_request(),
+        target.key(),
+    )?;
+    let r = handle.evaluate(corpus, cfg.suite, &cfg.eval)?;
+    let metric = if r.zs_mean.is_finite() { r.zs_mean } else { -r.ce };
+    let total_bits = cand.total_bits(tier)?;
+    Ok(TunePoint {
+        key: key.to_string(),
+        family: target.family.clone(),
+        tier: target.tier.clone(),
+        candidate: cand.clone(),
+        suite: suite_name(cfg.suite).to_string(),
+        ce: r.ce,
+        ppl: r.ppl,
+        zs_mean: r.zs_mean,
+        metric,
+        total_bits,
+        bits_per_param: total_bits / tier.param_count.max(1) as f64,
+        resident_bytes: handle.resident_bytes(),
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
+/// Fit measured points into per-candidate scaling curves over
+/// (total model bits, metric) — one point per measured target, the
+/// paper's per-configuration curve family.
+pub fn fit_curves(points: &[TunePoint]) -> Vec<Curve> {
+    let mut by_label: BTreeMap<String, Vec<Point>> = BTreeMap::new();
+    for p in points {
+        by_label
+            .entry(p.candidate.key())
+            .or_default()
+            .push(Point { bits: p.total_bits, metric: p.metric });
+    }
+    by_label.into_iter().map(|(label, pts)| Curve::new(label, pts)).collect()
+}
+
+/// Distill measured points into the serving policy: extract each model's
+/// Pareto frontier over (bits-per-param, metric), merge the surviving
+/// configs across models, then re-extract the frontier so the final
+/// entry set is itself Pareto-consistent — no dominated config can ever
+/// be picked, for any budget.
+///
+/// Raw metrics are **not comparable across model scales**, so merging
+/// centers each model's metrics on its own mean first: with the paper's
+/// near-parallel curves, `metric(config, model) ≈ f(model) + g(config)`,
+/// and the centered score estimates `g`. This keeps a config measured on
+/// only a subset of models (a skipped cell) from being unfairly ranked
+/// against configs that carry a larger model's better absolute numbers.
+/// A config's footprint keeps its **largest** measured bits-per-param,
+/// so budget estimates stay conservative.
+pub fn frontier_policy(points: &[TunePoint], suite: &str) -> TunedPolicy {
+    let entry_of = |p: &TunePoint| PolicyEntry {
+        bits: p.candidate.spec.bits,
+        dtype: p.candidate.spec.dtype,
+        block: p.candidate.spec.block,
+        stage_bits: p.candidate.stage_bits.clone(),
+        metric: p.metric,
+        total_bits: p.total_bits,
+        bits_per_param: p.bits_per_param,
+    };
+    let mut by_model: BTreeMap<String, Vec<&TunePoint>> = BTreeMap::new();
+    for p in points {
+        by_model.entry(format!("{}_{}", p.family, p.tier)).or_default().push(p);
+    }
+    let tuned_on: Vec<String> = by_model.keys().cloned().collect();
+    struct Agg {
+        centered_sum: f64,
+        n: usize,
+        entry: PolicyEntry,
+    }
+    let mut agg: BTreeMap<String, Agg> = BTreeMap::new();
+    for pts in by_model.values() {
+        let finite: Vec<f64> = pts.iter().map(|p| p.metric).filter(|m| m.is_finite()).collect();
+        if finite.is_empty() {
+            continue;
+        }
+        let mean = finite.iter().sum::<f64>() / finite.len() as f64;
+        let mut triples: Vec<(f64, f64, &TunePoint)> =
+            pts.iter().map(|p| (p.bits_per_param, p.metric, *p)).collect();
+        // Sort ties metric-descending so the frontier keeps the best of
+        // equal-size configs (pareto_frontier's re-sort is stable).
+        triples.sort_by(|a, b| nan_last_cmp(a.0, b.0).then(nan_last_cmp(b.1, a.1)));
+        // Only per-model frontier survivors qualify: a config dominated
+        // at its own scale never enters the merged set.
+        for (_, _, p) in scaling::pareto_frontier(&triples) {
+            let a = agg.entry(p.candidate.key()).or_insert_with(|| Agg {
+                centered_sum: 0.0,
+                n: 0,
+                entry: entry_of(p),
+            });
+            a.centered_sum += p.metric - mean;
+            a.n += 1;
+            if p.bits_per_param > a.entry.bits_per_param {
+                a.entry.bits_per_param = p.bits_per_param;
+                a.entry.total_bits = p.total_bits;
+            }
+        }
+    }
+    let mut merged: Vec<(f64, f64, PolicyEntry)> = agg
+        .into_values()
+        .map(|a| {
+            let mut e = a.entry;
+            e.metric = a.centered_sum / a.n.max(1) as f64;
+            (e.bits_per_param, e.metric, e)
+        })
+        .collect();
+    merged.sort_by(|a, b| nan_last_cmp(a.0, b.0).then(nan_last_cmp(b.1, a.1)));
+    let entries: Vec<PolicyEntry> =
+        scaling::pareto_frontier(&merged).into_iter().map(|(_, _, e)| e).collect();
+    TunedPolicy { suite: suite.to_string(), tuned_on, entries }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TuneConfig {
+        TuneConfig {
+            bits: vec![3, 4, 8],
+            dtypes: vec![DataType::Fp, DataType::Int],
+            blocks: vec![Some(64)],
+            ..TuneConfig::default()
+        }
+    }
+
+    #[test]
+    fn candidates_cover_axes_and_dedupe() {
+        let c = candidates(&cfg(), 1);
+        // Baseline + 3 bits x 2 dtypes, no stage mixes on a 1-stage plan.
+        assert_eq!(c.len(), 1 + 3 * 2);
+        assert!(c.iter().any(|x| x.spec.is_baseline()));
+        assert!(c.iter().all(|x| x.stage_bits.is_none()));
+        let mut keys: Vec<String> = c.iter().map(Candidate::key).collect();
+        keys.sort();
+        keys.dedup();
+        assert_eq!(keys.len(), c.len(), "candidate keys must be unique");
+    }
+
+    #[test]
+    fn staged_candidates_appear_for_sharded_plans() {
+        let c = candidates(&cfg(), 2);
+        let staged: Vec<&Candidate> = c.iter().filter(|x| x.stage_bits.is_some()).collect();
+        // Widths {3,4,8,16}: 4*3 ordered pairs, one split point.
+        assert_eq!(staged.len(), 12);
+        assert!(staged
+            .iter()
+            .any(|x| x.stage_bits.as_deref() == Some(&[16, 4][..])), "the flagship [16,4] mix");
+        // Every staged vector matches the stage count and mixes widths.
+        for s in &staged {
+            let v = s.stage_bits.as_ref().unwrap();
+            assert_eq!(v.len(), 2);
+            assert_ne!(v[0], v[1]);
+        }
+        // Unbuildable widths are dropped, not errors: dynexp needs k >= 3.
+        let dyncfg = TuneConfig {
+            bits: vec![2, 4],
+            dtypes: vec![DataType::DynExp],
+            ..TuneConfig::default()
+        };
+        let c = candidates(&dyncfg, 2);
+        assert!(c.iter().all(|x| x.spec.is_baseline() || x.spec.bits != 2));
+    }
+
+    #[test]
+    fn candidate_json_round_trips() {
+        for c in [
+            Candidate::uniform(QuantSpec::baseline16()),
+            Candidate::uniform(QuantSpec::new(DataType::Int, 3, None)),
+            Candidate::staged(QuantSpec::new(DataType::Fp, 4, Some(64)), vec![16, 4]),
+        ] {
+            let back = Candidate::from_json(&Json::parse(&c.to_json().dump()).unwrap()).unwrap();
+            assert_eq!(back, c);
+            assert_eq!(back.key(), c.key());
+        }
+    }
+
+    fn point(tier: &str, cand: Candidate, bpp: f64, metric: f64) -> TunePoint {
+        TunePoint {
+            key: format!("{tier}|{}", cand.key()),
+            family: "gpt2like".into(),
+            tier: tier.into(),
+            candidate: cand,
+            suite: "ppl".into(),
+            ce: -metric,
+            ppl: (-metric).exp(),
+            zs_mean: f64::NAN,
+            metric,
+            total_bits: bpp * 1e5,
+            bits_per_param: bpp,
+            resident_bytes: (bpp * 1e5 / 8.0) as usize,
+            wall_s: 0.1,
+        }
+    }
+
+    #[test]
+    fn frontier_policy_drops_dominated_configs() {
+        let fp4 = Candidate::uniform(QuantSpec::new(DataType::Fp, 4, Some(64)));
+        let int4 = Candidate::uniform(QuantSpec::new(DataType::Int, 4, Some(64)));
+        let fp3 = Candidate::uniform(QuantSpec::new(DataType::Fp, 3, Some(64)));
+        let base = Candidate::uniform(QuantSpec::baseline16());
+        let points = vec![
+            point("t0", fp3, 3.25, -2.0),
+            point("t0", fp4.clone(), 4.25, -1.5),
+            // Same size as fp4, worse metric: dominated, must not appear.
+            point("t0", int4.clone(), 4.25, -1.8),
+            point("t0", base, 16.0, -1.4),
+        ];
+        let p = frontier_policy(&points, "ppl");
+        assert!(p.validate().is_ok());
+        let keys: Vec<String> = p.entries.iter().map(PolicyEntry::key).collect();
+        assert!(keys.contains(&"fp:4:b64".to_string()), "{keys:?}");
+        assert!(!keys.contains(&"int:4:b64".to_string()), "dominated config on frontier: {keys:?}");
+        assert_eq!(p.tuned_on, vec!["gpt2like_t0".to_string()]);
+        // NaN metrics are skipped, not propagated into the policy.
+        let mut with_nan = points.clone();
+        with_nan.push(point("t0", fp4, 4.5, f64::NAN));
+        let p2 = frontier_policy(&with_nan, "ppl");
+        assert!(p2.validate().is_ok());
+        assert!(p2.entries.iter().all(|e| e.metric.is_finite()));
+    }
+
+    #[test]
+    fn frontier_policy_merges_targets_pareto_consistently() {
+        let fp4 = Candidate::uniform(QuantSpec::new(DataType::Fp, 4, Some(64)));
+        let fp3 = Candidate::uniform(QuantSpec::new(DataType::Fp, 3, Some(64)));
+        let base = Candidate::uniform(QuantSpec::baseline16());
+        // Two tiers, near-parallel curves (the paper's geometry): larger
+        // tier has better absolute metrics for the same configs.
+        let points = vec![
+            point("t0", fp3.clone(), 3.25, -2.2),
+            point("t0", fp4.clone(), 4.25, -1.9),
+            point("t0", base.clone(), 16.0, -1.8),
+            point("t1", fp3, 3.25, -1.6),
+            point("t1", fp4, 4.25, -1.2),
+            point("t1", base, 16.0, -1.1),
+        ];
+        let p = frontier_policy(&points, "ppl");
+        assert!(p.validate().is_ok(), "{:?}", p.entries);
+        assert_eq!(p.tuned_on, vec!["gpt2like_t0".to_string(), "gpt2like_t1".to_string()]);
+        // The merged frontier keeps the config ordering: 3 < 4 < 16 bits.
+        let bits: Vec<usize> = p.entries.iter().map(|e| e.bits).collect();
+        assert_eq!(bits, vec![3, 4, 16]);
+    }
+
+    #[test]
+    fn fit_curves_groups_by_candidate_across_targets() {
+        let fp4 = Candidate::uniform(QuantSpec::new(DataType::Fp, 4, Some(64)));
+        let points = vec![
+            point("t0", fp4.clone(), 4.25, -2.0),
+            point("t1", fp4, 4.25, -1.5),
+        ];
+        let curves = fit_curves(&points);
+        assert_eq!(curves.len(), 1);
+        assert_eq!(curves[0].points().len(), 2);
+        assert_eq!(curves[0].label, "fp:4:b64");
+    }
+}

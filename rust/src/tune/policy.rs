@@ -1,0 +1,393 @@
+//! [`TunedPolicy`]: the serialized product of a tuning run — the Pareto
+//! frontier of the measured config space, ready to drive serving.
+//!
+//! A policy is a list of [`PolicyEntry`]s sorted by bits-per-param, each
+//! one frontier point of the accuracy-vs-size trade-off: *"below this
+//! many model bytes, this is the best measured configuration"*. The
+//! serving layer resolves `{"op":"load","auto":true}` by picking the
+//! highest-metric entry whose estimated footprint fits the registry's
+//! byte headroom — because only frontier points are stored, that pick can
+//! never be a dominated configuration, for any budget.
+//!
+//! The artifact is plain JSON (`kbitscale tune --out runs/policy.json`,
+//! `kbitscale serve --policy runs/policy.json`), so operators can
+//! inspect, diff, and hand-edit it; [`TunedPolicy::from_json`] re-checks
+//! Pareto consistency on every load so a hand-edited file cannot smuggle
+//! a dominated entry back in.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::models::manifest::TierManifest;
+use crate::quant::{DataType, QuantSpec};
+use crate::server::registry::{spec_from_parts, PlanRequest};
+use crate::util::json::Json;
+use crate::util::order::nan_last_cmp;
+
+/// One frontier point: a full serving configuration plus the measured
+/// numbers that earned it its place.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PolicyEntry {
+    /// Quantization bit width (>= 16 = unquantized baseline). For staged
+    /// entries this is the narrowest quantized stage width.
+    pub bits: usize,
+    pub dtype: DataType,
+    /// Block size; `None` = tensor-wise.
+    pub block: Option<usize>,
+    /// Per-stage widths for pipeline-sharded serving; `None` = the
+    /// monolithic plan.
+    pub stage_bits: Option<Vec<usize>>,
+    /// The calibration metric maximized by [`TunedPolicy::pick`] (mean
+    /// zero-shot accuracy, or negative CE for ppl-only tuning). Policies
+    /// distilled by `tune::frontier_policy` center each model's metrics
+    /// on its own mean before aggregating across scales, so this is a
+    /// *relative* score — only its ordering within one policy matters.
+    pub metric: f64,
+    /// Resident model bits measured at tune time (info; tier-specific).
+    pub total_bits: f64,
+    /// `total_bits / param_count` at tune time — the transferable size
+    /// axis used to estimate this config's footprint on any tier.
+    pub bits_per_param: f64,
+}
+
+impl PolicyEntry {
+    /// The quantization spec this entry deploys (validated like the
+    /// serving boundary's `spec_from_parts` — the one defaulting rule).
+    pub fn spec(&self) -> Result<QuantSpec> {
+        spec_from_parts(self.bits, self.dtype, self.block)
+    }
+
+    /// The plan shape this entry deploys (pipeline iff staged).
+    pub fn plan_request(&self) -> PlanRequest {
+        PlanRequest {
+            pipeline: self.stage_bits.is_some(),
+            stage_bits: self.stage_bits.clone(),
+        }
+    }
+
+    /// Human identity, matching the registry-key spelling:
+    /// `fp:4:b64`, `fp:4:b64#pipe[16,4]`.
+    pub fn key(&self) -> String {
+        let spec = self
+            .spec()
+            .map(|s| s.key())
+            .unwrap_or_else(|_| format!("{}:{}", self.dtype.name(), self.bits));
+        format!("{spec}{}", self.plan_request().suffix())
+    }
+
+    /// Estimated resident model bytes of this config on `tier`, from the
+    /// measured bits-per-param. This is *model* bytes (quantized and
+    /// pass-through tensors both counted), deliberately an over-estimate
+    /// of the registry's packed-byte accounting, so budget-driven picks
+    /// err conservative.
+    pub fn estimated_model_bytes(&self, tier: &TierManifest) -> usize {
+        (self.bits_per_param * tier.param_count as f64 / 8.0).ceil() as usize
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("bits", Json::num(self.bits as f64)),
+            ("dtype", Json::str(self.dtype.name())),
+            (
+                "block",
+                match self.block {
+                    Some(b) => Json::num(b as f64),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "stage_bits",
+                match &self.stage_bits {
+                    Some(v) => Json::Arr(v.iter().map(|&b| Json::num(b as f64)).collect()),
+                    None => Json::Null,
+                },
+            ),
+            ("metric", Json::num(self.metric)),
+            ("total_bits", Json::num(self.total_bits)),
+            ("bits_per_param", Json::num(self.bits_per_param)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<PolicyEntry> {
+        let block = match j.get("block")? {
+            Json::Null => None,
+            v => match v.as_usize()? {
+                0 => None,
+                b => Some(b),
+            },
+        };
+        let stage_bits = match j.get("stage_bits")? {
+            Json::Null => None,
+            v => Some(v.usizes()?),
+        };
+        let e = PolicyEntry {
+            bits: j.get("bits")?.as_usize()?,
+            dtype: DataType::parse(j.get("dtype")?.as_str()?)?,
+            block,
+            stage_bits,
+            metric: j.get("metric")?.as_f64()?,
+            total_bits: j.get("total_bits")?.as_f64()?,
+            bits_per_param: j.get("bits_per_param")?.as_f64()?,
+        };
+        // A policy entry must be deployable: the spec it names has to
+        // build a codebook now, not when a load request arrives.
+        e.spec().with_context(|| format!("policy entry {} names an unbuildable spec", e.key()))?;
+        Ok(e)
+    }
+}
+
+/// The tuned serving policy: the measured Pareto frontier, serialized.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunedPolicy {
+    /// Eval suite the metric came from (`ppl` or `ppl_zs`).
+    pub suite: String,
+    /// Model keys (`family_tier`) the search measured.
+    pub tuned_on: Vec<String>,
+    /// Frontier entries, sorted by `bits_per_param` ascending with
+    /// strictly increasing metric (the Pareto invariant).
+    pub entries: Vec<PolicyEntry>,
+}
+
+impl TunedPolicy {
+    /// Pick the frontier-optimal entry for `tier` under a byte budget
+    /// (`None` = unbounded): the highest-metric entry whose estimated
+    /// footprint fits, skipping staged entries whose width vector does
+    /// not match the tier's declared stage count. Returns `None` when
+    /// nothing fits.
+    pub fn pick(&self, tier: &TierManifest, budget_bytes: Option<usize>) -> Option<&PolicyEntry> {
+        let n_stages = tier.stages.len();
+        self.entries
+            .iter()
+            .filter(|e| match &e.stage_bits {
+                None => true,
+                Some(v) => v.len() == n_stages,
+            })
+            .filter(|e| match budget_bytes {
+                None => true,
+                Some(b) => e.estimated_model_bytes(tier) <= b,
+            })
+            .max_by(|a, b| nan_last_cmp(a.metric, b.metric))
+    }
+
+    /// Check the Pareto invariant: entries sorted by `bits_per_param`
+    /// ascending must have strictly increasing metric — otherwise some
+    /// entry is dominated (same-or-more bits, same-or-less metric) and a
+    /// budget exists at which `pick` could do strictly better smaller.
+    pub fn validate(&self) -> Result<()> {
+        for w in self.entries.windows(2) {
+            let (a, b) = (&w[0], &w[1]);
+            if !(a.bits_per_param < b.bits_per_param) || !(a.metric < b.metric) {
+                bail!(
+                    "policy is not Pareto-consistent: {} ({:.3} bits/param, metric {:.4}) \
+                     vs {} ({:.3} bits/param, metric {:.4})",
+                    a.key(),
+                    a.bits_per_param,
+                    a.metric,
+                    b.key(),
+                    b.bits_per_param,
+                    b.metric
+                );
+            }
+        }
+        if self.entries.iter().any(|e| e.metric.is_nan() || !e.bits_per_param.is_finite()) {
+            bail!("policy contains non-finite entries");
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("suite", Json::str(&self.suite)),
+            (
+                "tuned_on",
+                Json::Arr(self.tuned_on.iter().map(Json::str).collect()),
+            ),
+            (
+                "entries",
+                Json::Arr(self.entries.iter().map(PolicyEntry::to_json).collect()),
+            ),
+        ])
+    }
+
+    /// Parse a policy, re-checking the Pareto invariant — a hand-edited
+    /// artifact (or a bad `{"op":"policy","set":...}`) must fail loudly,
+    /// not serve dominated configs.
+    pub fn from_json(j: &Json) -> Result<TunedPolicy> {
+        let p = TunedPolicy {
+            suite: j.get("suite")?.as_str()?.to_string(),
+            tuned_on: j
+                .get("tuned_on")?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+            entries: j
+                .get("entries")?
+                .as_arr()?
+                .iter()
+                .map(PolicyEntry::from_json)
+                .collect::<Result<Vec<_>>>()?,
+        };
+        p.validate()?;
+        Ok(p)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().dump() + "\n")
+            .with_context(|| format!("writing policy {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<TunedPolicy> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading policy {}", path.display()))?;
+        Self::from_json(&Json::parse(&text).context("parsing policy JSON")?)
+            .with_context(|| format!("loading policy {}", path.display()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::manifest::{ParamInfo, StageManifest, StageParamRef};
+
+    fn entry(
+        bits: usize,
+        stage_bits: Option<Vec<usize>>,
+        metric: f64,
+        bpp: f64,
+    ) -> PolicyEntry {
+        PolicyEntry {
+            bits,
+            dtype: DataType::Fp,
+            block: Some(64),
+            stage_bits,
+            metric,
+            total_bits: bpp * 1e5,
+            bits_per_param: bpp,
+        }
+    }
+
+    fn tier(n_stages: usize) -> TierManifest {
+        let stages = (0..n_stages)
+            .map(|i| StageManifest {
+                name: format!("s{i}"),
+                hlo: format!("fwd_{i}.hlo.txt"),
+                outputs: if i + 1 == n_stages { 2 } else { 1 },
+                params: vec![StageParamRef { source: "embed".into(), layers: None }],
+            })
+            .collect();
+        TierManifest {
+            name: "t0".into(),
+            d_model: 32,
+            n_layer: 2,
+            n_head: 2,
+            d_ff: 128,
+            vocab: 512,
+            seq: 64,
+            batch_train: 8,
+            batch_eval: 16,
+            param_count: 100_000,
+            params: vec![ParamInfo { name: "embed".into(), shape: vec![512, 32] }],
+            quantized_params: vec![],
+            fwd_hlo: "fwd.hlo.txt".into(),
+            train_hlo: "train.hlo.txt".into(),
+            acts_hlo: None,
+            stages,
+        }
+    }
+
+    fn policy() -> TunedPolicy {
+        TunedPolicy {
+            suite: "ppl".into(),
+            tuned_on: vec!["gpt2like_t0".into()],
+            entries: vec![
+                entry(3, None, 0.40, 3.25),
+                entry(4, None, 0.55, 4.25),
+                entry(4, Some(vec![16, 4]), 0.58, 9.0),
+                entry(16, None, 0.60, 16.0),
+            ],
+        }
+    }
+
+    #[test]
+    fn pick_is_frontier_optimal_per_budget() {
+        let p = policy();
+        let t = tier(2);
+        // Unbounded: the best metric wins.
+        assert_eq!(p.pick(&t, None).unwrap().bits, 16);
+        // Budgets between entry footprints select the best fitting entry.
+        let bytes = |bpp: f64| (bpp * t.param_count as f64 / 8.0).ceil() as usize;
+        assert_eq!(p.pick(&t, Some(bytes(16.0))).unwrap().bits_per_param, 16.0);
+        assert_eq!(p.pick(&t, Some(bytes(16.0) - 1)).unwrap().bits_per_param, 9.0);
+        assert_eq!(p.pick(&t, Some(bytes(4.25))).unwrap().bits, 4);
+        assert_eq!(p.pick(&t, Some(bytes(3.25))).unwrap().bits, 3);
+        // Nothing fits: no pick, not a panic.
+        assert!(p.pick(&t, Some(10)).is_none());
+        // A pick is never dominated by another affordable entry.
+        for budget in [bytes(3.25), bytes(4.25), bytes(9.0), bytes(16.0)] {
+            let chosen = p.pick(&t, Some(budget)).unwrap();
+            for e in &p.entries {
+                if e.estimated_model_bytes(&t) <= budget {
+                    assert!(
+                        e.metric <= chosen.metric,
+                        "budget {budget}: {} dominates chosen {}",
+                        e.key(),
+                        chosen.key()
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pick_skips_stage_entries_on_mismatched_plans() {
+        let p = policy();
+        // A monolithic-only tier (no declared stages) must never be
+        // handed a 2-stage width vector.
+        let t = tier(0);
+        let best = p.pick(&t, None).unwrap();
+        assert!(best.stage_bits.is_none());
+        let mid = p.pick(&t, Some((9.5 * t.param_count as f64 / 8.0) as usize)).unwrap();
+        assert!(mid.stage_bits.is_none(), "staged entry leaked onto a monolithic tier");
+        assert_eq!(mid.bits, 4);
+    }
+
+    #[test]
+    fn round_trip_preserves_selection_at_every_budget() {
+        let p = policy();
+        let parsed = TunedPolicy::from_json(&Json::parse(&p.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(parsed, p);
+        let t = tier(2);
+        for budget in [None, Some(40_000), Some(55_000), Some(120_000), Some(250_000)] {
+            assert_eq!(
+                p.pick(&t, budget).map(PolicyEntry::key),
+                parsed.pick(&t, budget).map(PolicyEntry::key),
+                "selection diverged after round-trip at budget {budget:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn validate_rejects_dominated_entries() {
+        let mut p = policy();
+        assert!(p.validate().is_ok());
+        // More bits, less metric: dominated.
+        p.entries.push(entry(8, None, 0.1, 20.0));
+        assert!(p.validate().is_err());
+        // And from_json re-checks, so a hand-edited artifact fails loudly.
+        assert!(TunedPolicy::from_json(&Json::parse(&p.to_json().dump()).unwrap()).is_err());
+    }
+
+    #[test]
+    fn entry_keys_match_registry_spelling() {
+        assert_eq!(entry(4, None, 0.5, 4.25).key(), "fp:4:b64");
+        assert_eq!(entry(4, Some(vec![16, 4]), 0.5, 9.0).key(), "fp:4:b64#pipe[16,4]");
+        let base = entry(16, None, 0.6, 16.0);
+        assert_eq!(base.key(), "fp:16:bnone");
+    }
+}

@@ -1,0 +1,222 @@
+//! Tuning store: an append-only JSONL database of evaluated candidates,
+//! mirroring `coordinator::store::ResultsStore`'s economics — a candidate
+//! is measured **once** per (model, config, calibration workload) across
+//! every tuning run that shares the store, so re-tuning after adding one
+//! bit width only pays for the new cells.
+
+use std::collections::HashMap;
+use std::io::Write as _;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::util::fnv1a;
+use crate::util::json::Json;
+
+use super::Candidate;
+
+/// Everything stored for one measured candidate on one model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TunePoint {
+    /// Stable dedupe key (see [`point_key`]).
+    pub key: String,
+    pub family: String,
+    pub tier: String,
+    pub candidate: Candidate,
+    /// Calibration suite (`ppl` or `ppl_zs`).
+    pub suite: String,
+    pub ce: f64,
+    pub ppl: f64,
+    /// NaN for ppl-only calibration.
+    pub zs_mean: f64,
+    /// The maximized tuning metric: `zs_mean` when measured, else `-ce`.
+    pub metric: f64,
+    /// Resident model bits of this candidate on this tier (the Pareto
+    /// x-axis; per-stage accounting for staged candidates).
+    pub total_bits: f64,
+    /// `total_bits / param_count` — the tier-transferable size axis.
+    pub bits_per_param: f64,
+    /// Measured packed host bytes of the built variant (0 for baseline).
+    pub resident_bytes: usize,
+    pub wall_s: f64,
+}
+
+impl TunePoint {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("key", Json::str(&self.key)),
+            ("family", Json::str(&self.family)),
+            ("tier", Json::str(&self.tier)),
+            ("candidate", self.candidate.to_json()),
+            ("suite", Json::str(&self.suite)),
+            ("ce", Json::num(self.ce)),
+            ("ppl", Json::num(self.ppl)),
+            ("zs_mean", Json::num(self.zs_mean)),
+            ("metric", Json::num(self.metric)),
+            ("total_bits", Json::num(self.total_bits)),
+            ("bits_per_param", Json::num(self.bits_per_param)),
+            ("resident_bytes", Json::num(self.resident_bytes as f64)),
+            ("wall_s", Json::num(self.wall_s)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<TunePoint> {
+        Ok(TunePoint {
+            key: j.get("key")?.as_str()?.to_string(),
+            family: j.get("family")?.as_str()?.to_string(),
+            tier: j.get("tier")?.as_str()?.to_string(),
+            candidate: Candidate::from_json(j.get("candidate")?)?,
+            suite: j.get("suite")?.as_str()?.to_string(),
+            ce: j.get("ce")?.as_f64()?,
+            ppl: j.get("ppl")?.as_f64()?,
+            zs_mean: match j.get("zs_mean")? {
+                Json::Null => f64::NAN,
+                v => v.as_f64()?,
+            },
+            metric: j.get("metric")?.as_f64()?,
+            total_bits: j.get("total_bits")?.as_f64()?,
+            bits_per_param: j.get("bits_per_param")?.as_f64()?,
+            resident_bytes: j.get("resident_bytes")?.as_usize()?,
+            wall_s: j.get("wall_s")?.as_f64()?,
+        })
+    }
+}
+
+/// Build the stable tuning-cell key. Includes the calibration workload
+/// and corpus seed, so changing the slice re-measures instead of serving
+/// stale numbers; `data_version` is `coordinator::DATA_VERSION`.
+#[allow(clippy::too_many_arguments)]
+pub fn point_key(
+    family: &str,
+    tier: &str,
+    candidate_key: &str,
+    suite: &str,
+    ppl_sequences: usize,
+    zs_examples: usize,
+    corpus_seed: u64,
+    data_version: u32,
+) -> String {
+    let raw = format!(
+        "tune|{family}|{tier}|{candidate_key}|{suite}|p{ppl_sequences}|z{zs_examples}|s{corpus_seed}|v{data_version}"
+    );
+    format!("{:016x}", fnv1a(raw.as_bytes()))
+}
+
+/// JSONL-backed tuning store with an in-memory index; thread safe.
+pub struct TuneStore {
+    path: PathBuf,
+    inner: Mutex<HashMap<String, TunePoint>>,
+}
+
+impl TuneStore {
+    /// Open (or create) a store, loading all prior tuning points.
+    pub fn open(path: impl Into<PathBuf>) -> Result<TuneStore> {
+        let path = path.into();
+        let mut map = HashMap::new();
+        if path.exists() {
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            for (lineno, line) in text.lines().enumerate() {
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let j = Json::parse(line)
+                    .with_context(|| format!("{}:{}", path.display(), lineno + 1))?;
+                let p = TunePoint::from_json(&j)?;
+                map.insert(p.key.clone(), p);
+            }
+        }
+        Ok(TuneStore { path, inner: Mutex::new(map) })
+    }
+
+    pub fn get(&self, key: &str) -> Option<TunePoint> {
+        self.inner.lock().unwrap().get(key).cloned()
+    }
+
+    pub fn put(&self, p: TunePoint) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.insert(p.key.clone(), p.clone());
+        if let Some(dir) = self.path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&self.path)?;
+        writeln!(f, "{}", p.to_json().dump())?;
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{DataType, QuantSpec};
+
+    fn tmp(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("kbt_tune_{tag}_{}.jsonl", std::process::id()))
+    }
+
+    fn sample(key: &str, staged: bool) -> TunePoint {
+        TunePoint {
+            key: key.to_string(),
+            family: "gpt2like".into(),
+            tier: "t0".into(),
+            candidate: if staged {
+                Candidate::staged(QuantSpec::new(DataType::Fp, 4, Some(64)), vec![16, 4])
+            } else {
+                Candidate::uniform(QuantSpec::new(DataType::Fp, 4, Some(64)))
+            },
+            suite: "ppl".into(),
+            ce: 1.5,
+            ppl: 4.48,
+            // Staged sample: NaN zs_mean (ppl-only tuning); uniform
+            // sample keeps it finite so equality comparisons work.
+            zs_mean: if staged { f64::NAN } else { 0.55 },
+            metric: -1.5,
+            total_bits: 5.0e5,
+            bits_per_param: 5.0,
+            resident_bytes: 12_000,
+            wall_s: 0.4,
+        }
+    }
+
+    #[test]
+    fn roundtrip_and_reload_including_staged_candidates() {
+        let path = tmp("rt");
+        std::fs::remove_file(&path).ok();
+        {
+            let s = TuneStore::open(&path).unwrap();
+            s.put(sample("aaa", false)).unwrap();
+            s.put(sample("bbb", true)).unwrap();
+            assert_eq!(s.len(), 2);
+        }
+        let s2 = TuneStore::open(&path).unwrap();
+        assert_eq!(s2.len(), 2);
+        assert_eq!(s2.get("aaa").unwrap(), sample("aaa", false));
+        let staged = s2.get("bbb").unwrap();
+        assert_eq!(staged.candidate.stage_bits, Some(vec![16, 4]));
+        assert!(staged.zs_mean.is_nan(), "NaN zs_mean must survive the round-trip");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn keys_are_stable_and_workload_sensitive() {
+        let a = point_key("gpt2like", "t0", "fp:4:b64", "ppl", 16, 16, 7, 1);
+        let b = point_key("gpt2like", "t0", "fp:4:b64", "ppl", 16, 16, 7, 1);
+        let c = point_key("gpt2like", "t0", "fp:4:b64", "ppl", 32, 16, 7, 1);
+        let d = point_key("gpt2like", "t0", "fp:4:b64#pipe[16,4]", "ppl", 16, 16, 7, 1);
+        assert_eq!(a, b);
+        assert_ne!(a, c, "calibration size must re-key");
+        assert_ne!(a, d, "plan shape must re-key");
+    }
+}

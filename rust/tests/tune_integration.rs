@@ -1,0 +1,333 @@
+//! Autotuner integration: the tune → policy → serving loop end to end —
+//! a search over the k-bit config space on real (init-only) models, the
+//! Pareto consistency of the emitted policy, policy-driven
+//! `{"op":"load","auto":true}` resolution under a byte budget, the
+//! `tune`/`policy` protocol ops, and the protocol-boundary `stage_bits`
+//! validation.
+
+use kbitscale::data::corpus::Corpus;
+use kbitscale::eval::{EvalConfig, EvalSuite};
+use kbitscale::models::families::Family;
+use kbitscale::models::init::init_params;
+use kbitscale::models::manifest::Manifest;
+use kbitscale::quant::DataType;
+use kbitscale::runtime::Runtime;
+use kbitscale::server::{Connection, ModelRegistry, ParamLoader};
+use kbitscale::tensor::Tensor;
+use kbitscale::tune::{self, PolicyEntry, TuneConfig, TuneTarget, TunedPolicy};
+use kbitscale::util::json::Json;
+
+fn registry<'a>(rt: &'a Runtime, manifest: &'a Manifest) -> ModelRegistry<'a> {
+    let mref = manifest.clone();
+    let loader: ParamLoader<'static> = Box::new(move |family: &str, tier: &str| {
+        Ok(init_params(mref.tier(tier)?, Family::get(family)?))
+    });
+    ModelRegistry::new(rt, manifest, loader)
+}
+
+fn corpus(manifest: &Manifest) -> Corpus {
+    Corpus::for_geometry(manifest.vocab, manifest.seq)
+}
+
+/// A small ppl-only search config (calibration, not a full sweep).
+fn quick_cfg() -> TuneConfig {
+    TuneConfig {
+        bits: vec![3, 4, 8],
+        dtypes: vec![DataType::Fp],
+        blocks: vec![Some(64)],
+        stage_mixes: false,
+        suite: EvalSuite::Ppl,
+        eval: EvalConfig { ppl_sequences: 4, zs_examples: 4 },
+        threads: 2,
+    }
+}
+
+fn entry(
+    bits: usize,
+    stage_bits: Option<Vec<usize>>,
+    metric: f64,
+    bits_per_param: f64,
+) -> PolicyEntry {
+    PolicyEntry {
+        bits,
+        dtype: DataType::Fp,
+        block: Some(64),
+        stage_bits,
+        metric,
+        total_bits: bits_per_param * 1e5,
+        bits_per_param,
+    }
+}
+
+#[test]
+fn search_emits_pareto_consistent_policy_on_the_zoo() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))
+        .expect("run `make artifacts` first");
+    let rt = Runtime::cpu().unwrap();
+    let corpus = corpus(&manifest);
+    let loader = |f: &str, t: &str| -> anyhow::Result<Vec<(String, Tensor)>> {
+        Ok(init_params(manifest.tier(t)?, Family::get(f)?))
+    };
+    let targets = vec![TuneTarget::new("gpt2like", "t0")];
+    let report =
+        tune::search(&rt, &manifest, &corpus, &loader, &targets, &quick_cfg(), None).unwrap();
+
+    // Every candidate measured (baseline + fp3/fp4/fp8), none skipped.
+    assert_eq!(report.points.len(), 4, "cells: {}", report.points.len());
+    assert_eq!(report.skipped, 0);
+    assert_eq!(report.curves.len(), 4, "one curve per candidate config");
+
+    // The policy is the Pareto frontier: consistent by construction, and
+    // no budget can ever select a dominated config.
+    let policy = &report.policy;
+    assert!(!policy.entries.is_empty());
+    policy.validate().expect("search produced a dominated policy entry");
+    let tier = manifest.tier("t0").unwrap();
+    for probe in &policy.entries {
+        let budget = probe.estimated_model_bytes(tier);
+        let chosen = policy.pick(tier, Some(budget)).expect("entry must fit its own estimate");
+        for e in &policy.entries {
+            if e.estimated_model_bytes(tier) <= budget {
+                assert!(
+                    e.metric <= chosen.metric,
+                    "budget {budget}: pick {} dominated by {}",
+                    chosen.key(),
+                    e.key()
+                );
+            }
+        }
+    }
+
+    // Serialize -> load -> identical selection at several budgets (the
+    // artifact a server restarts from must pick exactly the same).
+    let path = std::env::temp_dir()
+        .join(format!("kbt_tune_policy_{}.json", std::process::id()));
+    policy.save(&path).unwrap();
+    let reloaded = TunedPolicy::load(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(&reloaded, policy);
+    let probes: Vec<Option<usize>> = std::iter::once(None)
+        .chain(policy.entries.iter().flat_map(|e| {
+            let b = e.estimated_model_bytes(tier);
+            [Some(b), Some(b.saturating_sub(1))]
+        }))
+        .collect();
+    for budget in probes {
+        assert_eq!(
+            policy.pick(tier, budget).map(PolicyEntry::key),
+            reloaded.pick(tier, budget).map(PolicyEntry::key),
+            "round-trip changed the pick at budget {budget:?}"
+        );
+    }
+}
+
+#[test]
+fn auto_load_serves_the_policy_pick_for_the_budget() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let tier = manifest.tier("t0").unwrap();
+    let policy = TunedPolicy {
+        suite: "ppl".into(),
+        tuned_on: vec!["gpt2like_t0".into()],
+        entries: vec![
+            entry(3, None, -2.0, 3.25),
+            entry(4, None, -1.5, 4.25),
+            entry(16, None, -1.2, 16.0),
+        ],
+    };
+    // Budget exactly the 4-bit entry's estimated footprint: the frontier
+    // pick for this budget is 4-bit (16-bit does not fit, 3-bit is worse).
+    let budget = policy.entries[1].estimated_model_bytes(tier);
+    let reg = registry(&rt, &manifest)
+        .with_memory_budget(Some(budget))
+        .with_policy(Some(policy.clone()));
+    let expected = policy.pick(tier, reg.headroom()).unwrap().key();
+    assert_eq!(expected, "fp:4:b64");
+
+    let mut conn = Connection::new(&reg, None);
+    let loaded = conn.handle(
+        &Json::parse(r#"{"op":"load","auto":true,"family":"gpt2like","tier":"t0"}"#).unwrap(),
+    );
+    let key = loaded.get("model").unwrap().as_str().unwrap().to_string();
+    assert!(key.ends_with(&format!("@{expected}")), "{loaded:?}");
+    assert!(loaded.get("auto").unwrap().as_bool().unwrap());
+    assert_eq!(*loaded.get("stage_bits").unwrap(), Json::Null);
+
+    // The auto-loaded variant becomes the connection's current model.
+    let score = conn.handle(&Json::parse(r#"{"op":"score","tokens":[1,5,9]}"#).unwrap());
+    assert!(score.opt("ce").is_some(), "{score:?}");
+
+    // Repeated auto-loads are idempotent: the resident frontier pick
+    // costs zero additional bytes, so the same variant resolves again
+    // even though packed headroom shrank below every fresh estimate — a
+    // fleet of auto-loading clients converges on one variant instead of
+    // cascading down the frontier.
+    let again = conn.handle(&Json::parse(r#"{"op":"load","auto":true}"#).unwrap());
+    assert_eq!(
+        again.get("model").unwrap().as_str().unwrap(),
+        key,
+        "second auto-load must resolve the resident pick: {again:?}"
+    );
+    assert_eq!(reg.len(), 1, "idempotent auto-load must not grow residency");
+
+    // Unbounded registry: the best-metric frontier entry wins outright.
+    let unbounded = registry(&rt, &manifest).with_policy(Some(policy.clone()));
+    let mut conn = Connection::new(&unbounded, None);
+    let loaded = conn.handle(
+        &Json::parse(r#"{"op":"load","auto":true,"family":"gpt2like","tier":"t0"}"#).unwrap(),
+    );
+    let key = loaded.get("model").unwrap().as_str().unwrap();
+    assert!(key.ends_with("@fp:16:bnone"), "{loaded:?}");
+
+    // auto alongside explicit config fields is rejected, and auto with
+    // no policy active is a clear error, not a panic.
+    let err = conn.handle(
+        &Json::parse(r#"{"op":"load","auto":true,"family":"gpt2like","tier":"t0","bits":4}"#)
+            .unwrap(),
+    );
+    assert!(err.get("error").unwrap().as_str().unwrap().contains("policy"), "{err:?}");
+    let bare = registry(&rt, &manifest);
+    let mut conn = Connection::new(&bare, None);
+    let err = conn.handle(
+        &Json::parse(r#"{"op":"load","auto":true,"family":"gpt2like","tier":"t0"}"#).unwrap(),
+    );
+    assert!(err.get("error").unwrap().as_str().unwrap().contains("no tuned policy"), "{err:?}");
+}
+
+#[test]
+fn auto_load_picks_staged_entries_for_sharded_tiers() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let tier = manifest.tier("t0").unwrap();
+    if tier.stages.is_empty() {
+        eprintln!("skipping: artifacts predate pipeline stages (rerun make artifacts)");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let n_stages = tier.stages.len();
+    let mut stage_bits = vec![4usize; n_stages];
+    stage_bits[0] = 16; // the flagship mix: 16-bit stage 0 over 4-bit rest
+    let policy = TunedPolicy {
+        suite: "ppl".into(),
+        tuned_on: vec!["gpt2like_t0".into()],
+        entries: vec![
+            entry(4, None, -1.5, 4.25),
+            entry(4, Some(stage_bits.clone()), -1.3, 9.0),
+            entry(16, None, -1.2, 16.0),
+        ],
+    };
+    // Budget fits the staged mix but not the full 16-bit baseline: the
+    // frontier pick is the per-stage width vector.
+    let budget = policy.entries[1].estimated_model_bytes(tier);
+    let reg = registry(&rt, &manifest)
+        .with_memory_budget(Some(budget))
+        .with_policy(Some(policy.clone()));
+    let expected = policy.pick(tier, reg.headroom()).unwrap();
+    assert_eq!(expected.stage_bits.as_ref(), Some(&stage_bits));
+
+    let mut conn = Connection::new(&reg, None);
+    let loaded = conn.handle(
+        &Json::parse(r#"{"op":"load","auto":true,"family":"gpt2like","tier":"t0"}"#).unwrap(),
+    );
+    let key = loaded.get("model").unwrap().as_str().unwrap();
+    assert!(
+        key.ends_with(&format!("@{}", expected.key())),
+        "served {key}, policy picked {}",
+        expected.key()
+    );
+    let served_bits = loaded.get("stage_bits").unwrap().usizes().unwrap();
+    assert_eq!(served_bits, stage_bits, "served stage_bits must equal the frontier pick");
+    assert_eq!(loaded.get("stages").unwrap().as_usize().unwrap(), n_stages);
+    let score = conn.handle(&Json::parse(r#"{"op":"score","tokens":[1,5,9,12,3]}"#).unwrap());
+    assert!(score.opt("ce").is_some(), "{score:?}");
+}
+
+#[test]
+fn tune_and_policy_ops_drive_the_loop_over_the_protocol() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let reg = registry(&rt, &manifest);
+    let mut conn = Connection::new(&reg, None);
+
+    // No policy yet.
+    let none = conn.handle(&Json::parse(r#"{"op":"policy"}"#).unwrap());
+    assert_eq!(*none.get("policy").unwrap(), Json::Null);
+
+    // A live search against the registry's own loader, tiny calibration.
+    let tuned = conn.handle(
+        &Json::parse(
+            r#"{"op":"tune","family":"gpt2like","tier":"t0","bits":[3,4],
+                "stage_mixes":false,"ppl_sequences":2,"zs_examples":2,"threads":2}"#,
+        )
+        .unwrap(),
+    );
+    assert!(tuned.opt("error").is_none(), "{tuned:?}");
+    assert_eq!(tuned.get("tuned").unwrap().as_usize().unwrap(), 3, "baseline + fp3 + fp4");
+    assert!(tuned.get("installed").unwrap().as_bool().unwrap());
+    let entries = tuned.get("policy").unwrap().get("entries").unwrap().as_arr().unwrap();
+    assert!(!entries.is_empty());
+
+    // The installed policy is inspectable and drives auto loads.
+    let shown = conn.handle(&Json::parse(r#"{"op":"policy"}"#).unwrap());
+    assert_eq!(shown.get("policy").unwrap().dump(), tuned.get("policy").unwrap().dump());
+    // Nothing resident yet, so the first auto load names its model; the
+    // later one leans on the connection's current model.
+    let loaded = conn.handle(
+        &Json::parse(r#"{"op":"load","auto":true,"family":"gpt2like","tier":"t0"}"#).unwrap(),
+    );
+    assert!(loaded.opt("error").is_none(), "{loaded:?}");
+    assert!(loaded.get("model").unwrap().as_str().unwrap().starts_with("gpt2like_t0@"));
+
+    // Swap in a hand-written policy, then clear it.
+    let hand = TunedPolicy {
+        suite: "ppl".into(),
+        tuned_on: vec!["gpt2like_t0".into()],
+        entries: vec![entry(3, None, -2.0, 3.25)],
+    };
+    let req = Json::obj(vec![("op", Json::str("policy")), ("set", hand.to_json())]);
+    let swapped = conn.handle(&req);
+    let suite = swapped.get("policy").unwrap().get("suite").unwrap().as_str().unwrap();
+    assert_eq!(suite, "ppl");
+    let loaded = conn.handle(&Json::parse(r#"{"op":"load","auto":true}"#).unwrap());
+    assert!(
+        loaded.get("model").unwrap().as_str().unwrap().ends_with("@fp:3:b64"),
+        "{loaded:?}"
+    );
+    // A dominated hand-written policy is rejected at the protocol edge.
+    let bad = TunedPolicy {
+        suite: "ppl".into(),
+        tuned_on: vec![],
+        entries: vec![entry(4, None, -1.0, 4.25), entry(8, None, -2.0, 8.25)],
+    };
+    let req = Json::obj(vec![("op", Json::str("policy")), ("set", bad.to_json())]);
+    let err = conn.handle(&req);
+    assert!(
+        err.get("error").unwrap().as_str().unwrap().contains("Pareto"),
+        "{err:?}"
+    );
+    let cleared = conn.handle(&Json::parse(r#"{"op":"policy","clear":true}"#).unwrap());
+    assert_eq!(*cleared.get("policy").unwrap(), Json::Null);
+}
+
+#[test]
+fn stage_bits_count_mismatch_is_a_boundary_error() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let reg = registry(&rt, &manifest);
+    let declared = manifest.tier("t0").unwrap().stages.len();
+    let mut conn = Connection::new(&reg, None);
+    // One width against a plan that declares a different stage count:
+    // the error must name both numbers (protocol boundary validation),
+    // not surface as a deep plan-layout failure — and it must fire even
+    // on pre-stage artifacts (declared == 0).
+    let err = conn.handle(
+        &Json::parse(
+            r#"{"op":"load","family":"gpt2like","tier":"t0","pipeline":true,"stage_bits":[4,4,4,4,4]}"#,
+        )
+        .unwrap(),
+    );
+    let msg = err.get("error").unwrap().as_str().unwrap();
+    assert!(msg.contains("5 widths"), "{msg}");
+    assert!(msg.contains(&format!("{declared} pipeline stage")), "{msg}");
+    // Nothing was made resident by the failed load.
+    assert_eq!(reg.len(), 0);
+}

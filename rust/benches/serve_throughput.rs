@@ -22,6 +22,10 @@
 //!   (ppl-only calibration) emits a Pareto policy; serving the policy's
 //!   pick under a byte budget is compared head-to-head with fixed 4-bit
 //!   and fixed 16-bit residents under the same budget.
+//! * **fleet scaling** — the same 4-client traffic against a 1-worker vs
+//!   a 3-worker fleet behind the `fleet::` router, under the **same
+//!   total byte budget** (split per worker), so the horizontal-scaling
+//!   win of the router tier is measured rather than asserted.
 //!
 //! Init-only parameters are used (throughput does not depend on training),
 //! so this bench needs artifacts but no checkpoints.
@@ -261,6 +265,94 @@ fn main() -> anyhow::Result<()> {
             );
         }
     }
+
+    // --- fleet: 1 worker vs 3 workers, same total byte budget -----------
+    println!();
+    {
+        use kbitscale::fleet::{serve_fleet, Fleet, FleetOpts, WorkerSpec};
+
+        // Worker "processes" are leaked registries served from detached
+        // threads (alive until the bench exits), so the router sees
+        // workers that serve forever — like real `serve --tcp` backends.
+        let rt_fleet: &'static Runtime = Box::leak(Box::new(Runtime::cpu()?));
+        let manifest_fleet: &'static Manifest = Box::leak(Box::new(manifest.clone()));
+        let spec = QuantSpec::new(DataType::Fp, 4, Some(64));
+        let per_variant = h0.resident_bytes() + h0.resident_bytes() / 4;
+        let total_budget = per_variant * 3;
+        const CLIENTS: usize = 4;
+        println!(
+            "fleet scaling: {CLIENTS} clients via the router, {total_budget} B total fleet budget"
+        );
+        let mut base_rps = 0.0f64;
+        for &n_workers in &[1usize, 3] {
+            let worker_budget = total_budget / n_workers;
+            let mut specs = Vec::new();
+            let mut key = String::new();
+            for _ in 0..n_workers {
+                let reg: &'static ModelRegistry<'static> = Box::leak(Box::new(
+                    ModelRegistry::new(rt_fleet, manifest_fleet, make_loader(manifest_fleet))
+                        .with_memory_budget(Some(worker_budget)),
+                ));
+                key = reg.load("gpt2like", "t0", spec.clone())?.key();
+                let listener = TcpListener::bind("127.0.0.1:0")?;
+                let addr = listener.local_addr()?.to_string();
+                let wo: &'static ServeOpts = Box::leak(Box::new(ServeOpts {
+                    workers: CLIENTS,
+                    flush: Duration::from_millis(1),
+                    batching: true,
+                    max_conns: None,
+                    io_timeout: Some(Duration::from_secs(30)),
+                }));
+                std::thread::spawn(move || {
+                    let _ = serve_listener(reg, listener, wo);
+                });
+                specs.push(WorkerSpec { addr, budget: Some(worker_budget) });
+            }
+            let fleet: &'static Fleet = Box::leak(Box::new(Fleet::new(
+                manifest_fleet,
+                specs,
+                None,
+                FleetOpts {
+                    probe_interval: Duration::from_secs(60),
+                    max_conns: Some(CLIENTS as u64),
+                    ..FleetOpts::default()
+                },
+            )));
+            fleet.probe();
+            let router_listener = TcpListener::bind("127.0.0.1:0")?;
+            let router_addr = router_listener.local_addr()?;
+            let mut lats: Vec<f64> = Vec::new();
+            let t0w = Instant::now();
+            std::thread::scope(|s| -> anyhow::Result<()> {
+                let router = s.spawn(move || serve_fleet(fleet, router_listener));
+                let mut joins = Vec::new();
+                let keyref = key.as_str();
+                for c in 0..CLIENTS {
+                    joins.push(s.spawn(move || client_run(router_addr, c, false, Some(keyref))));
+                }
+                for j in joins {
+                    lats.extend(j.join().expect("client thread panicked")?);
+                }
+                router.join().expect("router thread panicked")?;
+                Ok(())
+            })?;
+            let wall = t0w.elapsed().as_secs_f64();
+            lats.sort_by(|a, b| a.total_cmp(b));
+            let p50 = lats[((lats.len() - 1) as f64 * 0.5).round() as usize] * 1e3;
+            let rps = (CLIENTS * REQS_PER_CLIENT) as f64 / wall;
+            println!(
+                "  {n_workers} worker(s) @ {worker_budget:>9} B each: {rps:>8.1} req/s   p50 {p50:>6.2} ms"
+            );
+            if n_workers == 1 {
+                base_rps = rps;
+            } else {
+                println!(
+                    "  {n_workers}-worker fleet vs 1 worker: {:.2}x (same total budget)",
+                    rps / base_rps.max(1e-9)
+                );
+            }
+        }
+    }
     Ok(())
 }
 
@@ -285,6 +377,7 @@ fn run_trial(
         flush: Duration::from_millis(2),
         batching,
         max_conns: Some(clients as u64),
+        ..ServeOpts::default()
     };
     let mut lats: Vec<f64> = Vec::new();
     let t0 = Instant::now();
@@ -321,6 +414,7 @@ fn stream_trial(
         flush: Duration::from_millis(1),
         batching: false,
         max_conns: Some(1),
+        ..ServeOpts::default()
     };
     let mut first_ms = 0.0f64;
     let mut total_ms = 0.0f64;

@@ -9,6 +9,8 @@
 //! kbitscale tune     --families gpt2like --tiers t0,t1       # search the k-bit space,
 //!                                                            # emit runs/policy.json
 //! kbitscale serve    --policy runs/policy.json --tcp ...     # policy-driven serving
+//! kbitscale fleet    --worker host:7878:10000000 --spawn 2   # multi-node router over
+//!                    --policy runs/policy.json --tcp ...     # N serve workers
 //! kbitscale demo     --tier t2                               # generate text, fp16 vs 4-bit
 //! kbitscale status                                           # what exists on disk
 //! ```
@@ -21,6 +23,7 @@ use crate::coordinator::{Cell, Coordinator, GridBuilder, ResultsStore};
 use crate::data::corpus::Corpus;
 use crate::data::vocabulary::Vocabulary;
 use crate::eval::EvalSuite;
+use crate::fleet::WorkerSpec;
 use crate::models::checkpoint::CheckpointStore;
 use crate::models::families::Family;
 use crate::models::manifest::Manifest;
@@ -79,7 +82,7 @@ impl Ctx {
 pub fn main_with_args(argv: Vec<String>) -> Result<()> {
     crate::util::progress::init_logging();
     let Some(cmd) = argv.first().cloned() else {
-        bail!("usage: kbitscale <train|sweep|figures|analyze|quantize|tune|demo|serve|status> [options]\n(see README.md)");
+        bail!("usage: kbitscale <train|sweep|figures|analyze|quantize|tune|demo|serve|fleet|status> [options]\n(see README.md)");
     };
     let rest = argv[1..].to_vec();
     match cmd.as_str() {
@@ -91,6 +94,7 @@ pub fn main_with_args(argv: Vec<String>) -> Result<()> {
         "tune" => cmd_tune(&rest),
         "demo" => cmd_demo(&rest),
         "serve" => cmd_serve(&rest),
+        "fleet" => cmd_fleet(&rest),
         "status" => cmd_status(&rest),
         other => bail!("unknown subcommand {other:?}"),
     }
@@ -468,6 +472,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             .opt("ttl-secs", Some("0"), "evict variants idle longer than this (0 = no TTL)")
             .opt("cache-rows", Some("4096"), "score cache capacity in rows (0 = disabled)")
             .opt("policy", None, "tuned policy JSON from `kbitscale tune` (enables {\"op\":\"load\",\"auto\":true})")
+            .opt("io-timeout-secs", Some("0"), "TCP read/write timeout per connection (0 = off; stdin never times out)")
             .opt("tcp", None, "listen address (e.g. 127.0.0.1:7878); default stdin/stdout"),
     );
     let args = spec.parse(raw)?;
@@ -499,22 +504,25 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             0 => None,
             s => Some(std::time::Duration::from_secs(s as u64)),
         })
-        .with_score_cache(args.usize("cache-rows")?)
-        .with_policy(match args.opt_get("policy") {
-            Some(p) => {
-                // Like every other CLI path (tune --store/--out, runs/,
-                // artifacts/): relative to --root, absolute passes through.
-                let path = PathBuf::from(args.get("root")?).join(p);
-                let policy = TunedPolicy::load(&path)?;
-                log::info!(
-                    "policy: {} frontier entries from {p} (tuned on {})",
-                    policy.entries.len(),
-                    policy.tuned_on.join(",")
-                );
-                Some(policy)
-            }
-            None => None,
-        });
+        .with_score_cache(args.usize("cache-rows")?);
+    let registry = match args.opt_get("policy") {
+        Some(p) => {
+            // Like every other CLI path (tune --store/--out, runs/,
+            // artifacts/): relative to --root, absolute passes through.
+            let path = PathBuf::from(args.get("root")?).join(p);
+            let policy = TunedPolicy::load(&path)?;
+            log::info!(
+                "policy: {} frontier entries from {p} (tuned on {}, hash {})",
+                policy.entries.len(),
+                policy.tuned_on.join(","),
+                policy.fingerprint()
+            );
+            // Keep the artifact path as the policy's provenance so
+            // {"op":"stats"} (and fleet skew reports) can name it.
+            registry.with_policy_sourced(Some(policy), Some(p.to_string()))
+        }
+        None => registry,
+    };
     let stage_bits = match args.opt_get("stage-bits") {
         Some(csv) => {
             let bits = csv
@@ -557,6 +565,10 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             }
             opts.flush = std::time::Duration::from_millis(args.usize("flush-ms")? as u64);
             opts.batching = !args.flag("no-batch");
+            opts.io_timeout = match args.usize("io-timeout-secs")? {
+                0 => None,
+                s => Some(std::time::Duration::from_secs(s as u64)),
+            };
             crate::server::serve_tcp(&registry, addr, &opts)
         }
         None => {
@@ -565,6 +577,133 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             Ok(())
         }
     }
+}
+
+fn cmd_fleet(raw: &[String]) -> Result<()> {
+    let spec = root_opt(
+        ArgSpec::new("fleet", "route N serve workers as one logical server over the line protocol")
+            .multi("worker", "backend worker address, host:port[:budget-bytes]")
+            .opt("spawn", Some("0"), "self-host this many in-process workers on ephemeral ports")
+            .opt("max-resident-bytes", Some("0"), "packed-byte budget per *spawned* worker (0 = unbounded)")
+            .opt("ttl-secs", Some("0"), "idle-eviction TTL per spawned worker (0 = none)")
+            .opt("cache-rows", Some("4096"), "score cache rows per spawned worker (0 = disabled)")
+            .opt("policy", None, "tuned policy JSON: drives placement and is pushed to skewed workers")
+            .opt("workers", Some("0"), "router connection worker threads (0 = auto)")
+            .opt("io-timeout-secs", Some("30"), "read/write timeout on client and worker sockets (0 = off)")
+            .opt("probe-secs", Some("2"), "health/residency probe interval in seconds")
+            .flag("no-push-policy", "report policy skew instead of healing it")
+            .opt("tcp", Some("127.0.0.1:7979"), "router listen address"),
+    );
+    let args = spec.parse(raw)?;
+    let root = args.get("root")?;
+    let ctx = Ctx::new(root)?;
+    let policy = match args.opt_get("policy") {
+        Some(p) => {
+            let path = PathBuf::from(root).join(p);
+            let policy = TunedPolicy::load(&path)?;
+            log::info!(
+                "fleet policy: {} frontier entries from {p} (hash {})",
+                policy.entries.len(),
+                policy.fingerprint()
+            );
+            Some(policy)
+        }
+        None => None,
+    };
+    let mut specs: Vec<WorkerSpec> = args
+        .occurrences("worker")
+        .iter()
+        .map(|w| WorkerSpec::parse(w))
+        .collect::<Result<_>>()?;
+    let spawn = args.usize("spawn")?;
+    if specs.is_empty() && spawn == 0 {
+        bail!("no workers: give --worker host:port[:budget] (repeatable) and/or --spawn n");
+    }
+    let io_timeout = match args.usize("io-timeout-secs")? {
+        0 => None,
+        s => Some(std::time::Duration::from_secs(s as u64)),
+    };
+    let budget = match args.usize("max-resident-bytes")? {
+        0 => None,
+        b => Some(b),
+    };
+    let ttl = match args.usize("ttl-secs")? {
+        0 => None,
+        s => Some(std::time::Duration::from_secs(s as u64)),
+    };
+
+    // Self-hosted workers: each an independent registry with its own
+    // budget and checkpoint loader, on an ephemeral local port — the
+    // zero-infrastructure path for tests, benches, and demos. Production
+    // fleets point --worker at `kbitscale serve --tcp` processes instead.
+    let mut registries = Vec::new();
+    let mut listeners = Vec::new();
+    for _ in 0..spawn {
+        let store = ctx.checkpoint_store();
+        let loader: crate::server::ParamLoader<'static> =
+            Box::new(move |family: &str, tier: &str| {
+                let fam = Family::get(family)?;
+                Ok(store.load(&crate::models::ModelId::new(fam.name, tier))?.0)
+            });
+        let reg = crate::server::ModelRegistry::new(&ctx.rt, &ctx.manifest, loader)
+            .with_memory_budget(budget)
+            .with_ttl(ttl)
+            .with_score_cache(args.usize("cache-rows")?)
+            .with_policy_sourced(policy.clone(), args.opt_get("policy").map(String::from));
+        let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        log::info!("fleet: spawned in-process worker on {addr}");
+        specs.push(WorkerSpec { addr, budget });
+        registries.push(reg);
+        listeners.push(listener);
+    }
+
+    let mut opts = crate::fleet::FleetOpts {
+        io_timeout,
+        probe_interval: std::time::Duration::from_secs(args.usize("probe-secs")?.max(1) as u64),
+        push_policy: !args.flag("no-push-policy"),
+        ..crate::fleet::FleetOpts::default()
+    };
+    match args.usize("workers")? {
+        0 => {}
+        w => opts.workers = w,
+    }
+    let fleet = crate::fleet::Fleet::new(&ctx.manifest, specs, policy, opts);
+    let worker_opts =
+        crate::server::ServeOpts { io_timeout, ..crate::server::ServeOpts::default() };
+    // Bind the router port before the spawned workers start serving
+    // forever: an already-taken --tcp address must fail the command, not
+    // leave orphaned worker threads blocking exit.
+    let addr = args.get("tcp")?;
+    let router_listener = std::net::TcpListener::bind(addr)
+        .map_err(|e| anyhow::anyhow!("binding {addr}: {e}"))?;
+    log::info!(
+        "fleet router on {addr}: {} worker(s), policy {}",
+        fleet.topology().len(),
+        if fleet.has_policy() { "active" } else { "none" }
+    );
+    std::thread::scope(|s| -> Result<()> {
+        for (reg, listener) in registries.iter().zip(listeners) {
+            let wo = &worker_opts;
+            s.spawn(move || {
+                if let Err(e) = crate::server::serve_listener(reg, listener, wo) {
+                    log::error!("fleet: spawned worker failed: {e:#}");
+                }
+            });
+        }
+        let served = crate::fleet::serve_fleet(&fleet, router_listener);
+        if spawn > 0 {
+            // Spawned workers serve forever, so the scope can never
+            // join them: once the router stops (error or otherwise),
+            // report and exit the process instead of wedging silently.
+            match &served {
+                Ok(()) => log::info!("fleet router stopped"),
+                Err(e) => log::error!("fleet router failed: {e:#}"),
+            }
+            std::process::exit(if served.is_ok() { 0 } else { 1 });
+        }
+        served
+    })
 }
 
 fn cmd_status(raw: &[String]) -> Result<()> {

@@ -1,0 +1,173 @@
+//! Fleet serving: a policy-aware multi-node router over the line
+//! protocol.
+//!
+//! The paper's headline — 4-bit precision maximizes accuracy per total
+//! model bit — becomes an *allocation* problem at serving scale: a fixed
+//! fleet-wide byte budget should hold the Pareto-optimal mix of resident
+//! variants, not whatever one process happens to fit. This module is the
+//! horizontal layer over [`crate::server`]: a front-door **router** that
+//! treats N backend `serve_tcp` workers (each its own process with its
+//! own `--max-resident-bytes` budget) as one logical server, speaking the
+//! existing JSON-line protocol as the inter-node wire format — a worker
+//! cannot tell the router from a direct client, so any mix of routed and
+//! direct traffic stays valid.
+//!
+//! Three pieces, smallest state first:
+//!
+//! * [`topology`] — the worker roster: per-worker address + byte budget,
+//!   periodic `{"op":"ping"}`/`{"op":"stats"}` health and residency
+//!   probes, mark-down on failure and mark-up on the next successful
+//!   probe, and the per-worker resident-variant sets placement and
+//!   scatter routing read.
+//! * [`placement`] — policy-aware placement: route
+//!   `{"op":"load","auto":true}` to the worker whose headroom fits the
+//!   tuned frontier pick, prefer workers where a frontier variant is
+//!   **already resident** (zero marginal bytes), and spill to the
+//!   next-best frontier entry when nothing fits anywhere.
+//! * [`router`] — the per-connection proxy loop: forwards ops to the
+//!   owning worker with retry-on-next-worker failover, scatters
+//!   multi-row `{"op":"score"}` requests across replicas and reassembles
+//!   rows in order (including `{"stream":true}` chunk interleaving with
+//!   one terminal summary), and aggregates `{"op":"info"}`/
+//!   `{"op":"stats"}`/`{"op":"models"}` fleet-wide — with policy-skew
+//!   detection via the workers' reported policy fingerprints.
+//!
+//! The CLI front end is `kbitscale fleet` (`--worker host:port[:budget]`
+//! repeatable, `--policy`, and `--spawn n` for self-hosted in-process
+//! workers in tests and benches).
+//!
+//! Sizing note: each backend serves one connection per worker thread
+//! (`serve --workers`), and the router holds one connection per (client
+//! × worker) — size backend worker pools at least one above the
+//! expected concurrent client count so health probes never starve in
+//! the accept queue. Routing is resilient to a starved probe (a live
+//! cached connection outvotes a probe-declared down mark), but
+//! fleet-wide `stats` reflects the prober's view.
+
+pub mod placement;
+pub mod router;
+pub mod topology;
+
+pub use placement::{place_auto, place_load, replicas};
+pub use router::{serve_fleet, FleetConn};
+pub use topology::{Topology, WorkerClient, WorkerSpec, WorkerView};
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::models::manifest::Manifest;
+use crate::tune::TunedPolicy;
+use crate::util::pool;
+
+/// Router-side knobs (the worker-side equivalents live in
+/// [`crate::server::ServeOpts`]).
+pub struct FleetOpts {
+    /// Client-connection worker threads on the router.
+    pub workers: usize,
+    /// Read/write timeout on both sides of the router: client sockets
+    /// (a stalled client must not pin a router worker) and backend
+    /// worker connections (a stalled backend must not wedge the router).
+    /// This bounds a *single backend response*, so set it above the
+    /// worst-case scoring latency of your largest tier — a healthy
+    /// worker that computes past the timeout is indistinguishable from a
+    /// stalled one and gets marked down. (`{"op":"tune"}` is exempt: it
+    /// runs on a dedicated unbounded connection.)
+    pub io_timeout: Option<Duration>,
+    /// How often the background prober re-checks every worker's health
+    /// and residency (down workers are re-probed too — that is the
+    /// mark-up path).
+    pub probe_interval: Duration,
+    /// Push the router's `--policy` to any worker whose policy
+    /// fingerprint differs (heals policy skew instead of just reporting
+    /// it). No-op when the router has no policy.
+    pub push_policy: bool,
+    /// Stop accepting after this many client connections (tests and
+    /// benches; `None` = serve forever).
+    pub max_conns: Option<u64>,
+}
+
+impl Default for FleetOpts {
+    fn default() -> Self {
+        FleetOpts {
+            workers: pool::default_threads().min(8),
+            io_timeout: Some(Duration::from_secs(30)),
+            probe_interval: Duration::from_secs(2),
+            push_policy: true,
+            max_conns: None,
+        }
+    }
+}
+
+/// One logical server over N backend workers: the shared state every
+/// router connection reads (roster, policy, manifest geometry).
+pub struct Fleet {
+    topology: Topology,
+    /// Tier geometry for placement estimates and registry-key parsing
+    /// (the router and its workers serve the same artifact set).
+    pub manifest: Manifest,
+    /// The router's own copy of the tuned policy: drives worker
+    /// *selection* for auto loads (each worker's own policy still makes
+    /// the final config pick under its local headroom) and, with
+    /// [`FleetOpts::push_policy`], is installed on skewed workers.
+    /// Mutable: a routed `{"op":"tune"}` or `{"op":"policy","set":...}`
+    /// updates it, so the prober's skew-heal pushes follow live installs
+    /// instead of reverting them to the `--policy` startup artifact.
+    policy: Mutex<Option<TunedPolicy>>,
+    pub opts: FleetOpts,
+    /// Round-robin cursor spreading single-row scoring across replicas.
+    rr: AtomicUsize,
+}
+
+impl Fleet {
+    pub fn new(
+        manifest: &Manifest,
+        workers: Vec<WorkerSpec>,
+        policy: Option<TunedPolicy>,
+        opts: FleetOpts,
+    ) -> Fleet {
+        let topology = Topology::new(workers, opts.io_timeout);
+        Fleet {
+            topology,
+            manifest: manifest.clone(),
+            policy: Mutex::new(policy),
+            opts,
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    /// The worker roster (health, budgets, residency).
+    pub fn topology(&self) -> &Topology {
+        &self.topology
+    }
+
+    /// The router's current policy (startup `--policy`, or the last
+    /// routed live install).
+    pub fn policy(&self) -> Option<TunedPolicy> {
+        self.policy.lock().unwrap().clone()
+    }
+
+    pub fn has_policy(&self) -> bool {
+        self.policy.lock().unwrap().is_some()
+    }
+
+    /// Swap the router's policy — called when a routed `tune`/`policy`
+    /// op installs (or clears) one fleet-wide.
+    pub fn set_policy(&self, policy: Option<TunedPolicy>) {
+        *self.policy.lock().unwrap() = policy;
+    }
+
+    /// One health + residency probe round across every worker, pushing
+    /// the router policy to skewed workers when configured. Called by the
+    /// background prober in [`router::serve_fleet`]; tests call it
+    /// directly for a deterministic roster.
+    pub fn probe(&self) {
+        let push = if self.opts.push_policy { self.policy() } else { None };
+        self.topology.probe_all(push.as_ref());
+    }
+
+    /// Next round-robin ticket (replica spreading for scoring traffic).
+    pub(crate) fn next_rr(&self) -> usize {
+        self.rr.fetch_add(1, Ordering::Relaxed)
+    }
+}

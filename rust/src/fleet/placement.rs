@@ -1,0 +1,325 @@
+//! Policy-aware placement: which worker should host (or already hosts)
+//! a variant.
+//!
+//! Placement mirrors the single-process registry's `load_auto` logic at
+//! fleet scale. The rules, in order of preference:
+//!
+//! 1. **Already resident wins** — serving a frontier variant that some
+//!    worker already holds costs zero marginal bytes, so a fleet of
+//!    clients auto-loading on connect converges on shared residents
+//!    instead of duplicating models across workers.
+//! 2. **Best frontier entry that fits** — otherwise walk the tuned
+//!    policy's entries best-metric-first and place the first one whose
+//!    estimated footprint fits some worker's headroom, on the worker
+//!    with the *most* headroom (spreads load, leaves small holes free
+//!    for small variants).
+//! 3. **Spill down the frontier** — when the best entry fits nowhere,
+//!    the next-best entry is tried, exactly like a single worker's
+//!    budget-constrained `pick`.
+//!
+//! A resident pick only loses to a fresh pick with a strictly better
+//! metric (the upgrade path when an operator grows the fleet).
+
+use anyhow::{bail, Result};
+
+use super::topology::WorkerView;
+use crate::models::manifest::TierManifest;
+use crate::tune::{PolicyEntry, TunedPolicy};
+use crate::util::order::nan_last_cmp;
+
+/// Up workers holding `key` resident — the scatter set for multi-row
+/// scoring.
+pub fn replicas(workers: &[WorkerView], key: &str) -> Vec<usize> {
+    workers
+        .iter()
+        .filter(|w| w.up && w.resident.contains(key))
+        .map(|w| w.id)
+        .collect()
+}
+
+/// Place an **explicit** load of `key` with an estimated packed
+/// footprint of `est_bytes`: resident replica first, then the roomiest
+/// worker that fits, then the roomiest worker at all (its own LRU
+/// eviction absorbs the overflow — a single variant larger than any
+/// budget must still serve somewhere).
+pub fn place_load(workers: &[WorkerView], key: &str, est_bytes: usize) -> Result<usize> {
+    if let Some(w) = workers.iter().filter(|w| w.up).find(|w| w.resident.contains(key)) {
+        return Ok(w.id);
+    }
+    if let Some(w) = workers
+        .iter()
+        .filter(|w| w.up && w.headroom() >= est_bytes)
+        .max_by_key(|w| w.headroom())
+    {
+        return Ok(w.id);
+    }
+    workers
+        .iter()
+        .filter(|w| w.up)
+        .max_by_key(|w| w.headroom())
+        .map(|w| w.id)
+        .ok_or_else(|| anyhow::anyhow!("no healthy workers in the fleet"))
+}
+
+/// Place a policy-driven (`{"op":"load","auto":true}`) request for
+/// `model_key` (= `family_tier`) on `tier`: returns the chosen worker
+/// and the frontier entry that motivated the choice. The addressed
+/// worker's own policy still makes the final pick under its local
+/// headroom; this function only decides *where* the request lands.
+pub fn place_auto(
+    workers: &[WorkerView],
+    policy: &TunedPolicy,
+    tier: &TierManifest,
+    model_key: &str,
+) -> Result<(usize, PolicyEntry)> {
+    let n_stages = tier.stages.len();
+    // Entries sort by bits-per-param ascending with strictly increasing
+    // metric, so reverse order is best-metric-first.
+    let applicable: Vec<&PolicyEntry> = policy
+        .entries
+        .iter()
+        .rev()
+        .filter(|e| match &e.stage_bits {
+            None => true,
+            Some(v) => v.len() == n_stages,
+        })
+        .collect();
+    if applicable.is_empty() {
+        bail!("policy has no entry applicable to tier {}", tier.name);
+    }
+    // Best already-resident frontier entry anywhere in the fleet.
+    let mut resident_pick: Option<(usize, &PolicyEntry)> = None;
+    'resident: for e in applicable.iter().copied() {
+        let Ok(spec) = e.spec() else { continue };
+        let key = format!("{model_key}@{}{}", spec.key(), e.plan_request().suffix());
+        for w in workers.iter().filter(|w| w.up) {
+            if w.resident.contains(&key) {
+                resident_pick = Some((w.id, e));
+                break 'resident;
+            }
+        }
+    }
+    // Best entry some worker could load fresh (spilling down the
+    // frontier until one fits).
+    let mut fresh_pick: Option<(usize, &PolicyEntry)> = None;
+    for e in applicable.iter().copied() {
+        let bytes = e.estimated_model_bytes(tier);
+        if let Some(w) = workers
+            .iter()
+            .filter(|w| w.up && w.headroom() >= bytes)
+            .max_by_key(|w| w.headroom())
+        {
+            fresh_pick = Some((w.id, e));
+            break;
+        }
+    }
+    let chosen = match (resident_pick, fresh_pick) {
+        (Some((wr, er)), Some((wf, ef))) => {
+            // A strictly better entry that fits fresh beats residency
+            // (the operator-raised-the-budget upgrade path); ties keep
+            // the zero-marginal-bytes resident.
+            if nan_last_cmp(ef.metric, er.metric).is_gt() {
+                (wf, ef)
+            } else {
+                (wr, er)
+            }
+        }
+        (Some(r), None) => r,
+        (None, Some(f)) => f,
+        (None, None) => bail!(
+            "no worker has headroom for any policy entry on tier {} \
+             (smallest applicable entry wants ~{} bytes)",
+            tier.name,
+            applicable
+                .iter()
+                .map(|e| e.estimated_model_bytes(tier))
+                .min()
+                .unwrap_or(0)
+        ),
+    };
+    Ok((chosen.0, chosen.1.clone()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::manifest::{ParamInfo, StageManifest, StageParamRef};
+    use crate::quant::DataType;
+    use std::collections::HashSet;
+
+    fn worker(
+        id: usize,
+        up: bool,
+        resident: &[&str],
+        used: usize,
+        budget: Option<usize>,
+    ) -> WorkerView {
+        WorkerView {
+            id,
+            addr: format!("127.0.0.1:{}", 7000 + id),
+            up,
+            resident: resident.iter().map(|s| s.to_string()).collect::<HashSet<_>>(),
+            resident_bytes: used,
+            budget_bytes: budget,
+            policy_hash: None,
+            policy_entries: 0,
+            policy_source: None,
+            last_error: None,
+        }
+    }
+
+    fn entry(bits: usize, stage_bits: Option<Vec<usize>>, metric: f64, bpp: f64) -> PolicyEntry {
+        PolicyEntry {
+            bits,
+            dtype: DataType::Fp,
+            block: Some(64),
+            stage_bits,
+            metric,
+            total_bits: bpp * 1e5,
+            bits_per_param: bpp,
+        }
+    }
+
+    fn tier(n_stages: usize) -> TierManifest {
+        let stages = (0..n_stages)
+            .map(|i| StageManifest {
+                name: format!("s{i}"),
+                hlo: format!("fwd_{i}.hlo.txt"),
+                outputs: if i + 1 == n_stages { 2 } else { 1 },
+                params: vec![StageParamRef { source: "embed".into(), layers: None }],
+            })
+            .collect();
+        TierManifest {
+            name: "t0".into(),
+            d_model: 32,
+            n_layer: 2,
+            n_head: 2,
+            d_ff: 128,
+            vocab: 512,
+            seq: 64,
+            batch_train: 8,
+            batch_eval: 16,
+            param_count: 100_000,
+            params: vec![ParamInfo { name: "embed".into(), shape: vec![512, 32] }],
+            quantized_params: vec![],
+            fwd_hlo: "fwd.hlo.txt".into(),
+            train_hlo: "train.hlo.txt".into(),
+            acts_hlo: None,
+            stages,
+        }
+    }
+
+    fn policy() -> TunedPolicy {
+        TunedPolicy {
+            suite: "ppl".into(),
+            tuned_on: vec!["gpt2like_t0".into()],
+            entries: vec![
+                entry(3, None, 0.40, 3.25),
+                entry(4, None, 0.55, 4.25),
+                entry(16, None, 0.60, 16.0),
+            ],
+        }
+    }
+
+    /// Estimated model bytes of the bpp-entry on the test tier.
+    fn bytes(bpp: f64) -> usize {
+        (bpp * 100_000.0 / 8.0).ceil() as usize
+    }
+
+    #[test]
+    fn replicas_filters_down_and_nonresident() {
+        let ws = [
+            worker(0, true, &["m@fp:4:b64"], 0, None),
+            worker(1, false, &["m@fp:4:b64"], 0, None),
+            worker(2, true, &["m@int:3:b32"], 0, None),
+        ];
+        assert_eq!(replicas(&ws, "m@fp:4:b64"), vec![0], "down/non-resident workers excluded");
+    }
+
+    #[test]
+    fn place_load_prefers_resident_then_fit_then_spill() {
+        let key = "m@fp:4:b64";
+        // Resident beats bigger headroom.
+        let ws = [
+            worker(0, true, &[key], 90, Some(100)),
+            worker(1, true, &[], 0, Some(1_000_000)),
+        ];
+        assert_eq!(place_load(&ws, key, 50).unwrap(), 0);
+        // No resident: roomiest worker that fits.
+        let ws = [
+            worker(0, true, &[], 80, Some(100)),
+            worker(1, true, &[], 10, Some(100)),
+            worker(2, false, &[], 0, Some(1_000_000)),
+        ];
+        assert_eq!(place_load(&ws, key, 50).unwrap(), 1, "down workers never place");
+        // Nothing fits: spill to the roomiest anyway (worker-side LRU
+        // eviction absorbs it).
+        assert_eq!(place_load(&ws, key, 5_000).unwrap(), 1);
+        // No healthy workers at all is an error.
+        let ws = [worker(0, false, &[], 0, None)];
+        assert!(place_load(&ws, key, 1).is_err());
+    }
+
+    #[test]
+    fn place_auto_picks_best_entry_fitting_headroom() {
+        let p = policy();
+        let t = tier(0);
+        // Both workers empty: best entry (16-bit) on the roomiest worker.
+        let ws = [
+            worker(0, true, &[], 0, Some(bytes(16.0) + 10)),
+            worker(1, true, &[], 0, Some(bytes(4.25) + 10)),
+        ];
+        let (w, e) = place_auto(&ws, &p, &t, "gpt2like_t0").unwrap();
+        assert_eq!((w, e.bits), (0, 16));
+        // Only the small worker up: the frontier spills to 4-bit.
+        let ws = [
+            worker(0, false, &[], 0, Some(bytes(16.0) + 10)),
+            worker(1, true, &[], 0, Some(bytes(4.25) + 10)),
+        ];
+        let (w, e) = place_auto(&ws, &p, &t, "gpt2like_t0").unwrap();
+        assert_eq!((w, e.bits), (1, 4));
+        // Nothing fits anywhere: an error naming the smallest entry.
+        let ws = [worker(0, true, &[], 0, Some(10))];
+        let err = place_auto(&ws, &p, &t, "gpt2like_t0").unwrap_err().to_string();
+        assert!(err.contains("headroom"), "{err}");
+    }
+
+    #[test]
+    fn place_auto_prefers_resident_unless_strictly_better_fits() {
+        let p = policy();
+        let t = tier(0);
+        // The 4-bit entry is resident on worker 1; worker 0 could fit it
+        // fresh but not the 16-bit entry → residency wins (equal metric).
+        let key4 = "gpt2like_t0@fp:4:b64";
+        let ws = [
+            worker(0, true, &[], 0, Some(bytes(4.25) + 10)),
+            worker(1, true, &[key4], bytes(4.25), Some(bytes(4.25) + 10)),
+        ];
+        let (w, e) = place_auto(&ws, &p, &t, "gpt2like_t0").unwrap();
+        assert_eq!((w, e.bits), (1, 4), "resident replica must win at equal metric");
+        // A roomy worker joins: the strictly better 16-bit entry fits
+        // fresh and beats the resident 4-bit one.
+        let ws = [
+            worker(0, true, &[], 0, Some(bytes(16.0) + 10)),
+            worker(1, true, &[key4], bytes(4.25), Some(bytes(4.25) + 10)),
+        ];
+        let (w, e) = place_auto(&ws, &p, &t, "gpt2like_t0").unwrap();
+        assert_eq!((w, e.bits), (0, 16), "strictly better fresh entry must win");
+    }
+
+    #[test]
+    fn place_auto_skips_stage_mismatched_entries() {
+        let mut p = policy();
+        p.entries.push(entry(4, Some(vec![16, 4]), 0.65, 17.0));
+        // A monolithic-only tier must never be placed via a staged entry.
+        let t = tier(0);
+        let ws = [worker(0, true, &[], 0, None)];
+        let (_, e) = place_auto(&ws, &p, &t, "gpt2like_t0").unwrap();
+        assert!(e.stage_bits.is_none());
+        assert_eq!(e.bits, 16);
+        // On a 2-stage tier the staged entry (best metric) wins.
+        let t = tier(2);
+        let (_, e) = place_auto(&ws, &p, &t, "gpt2like_t0").unwrap();
+        assert_eq!(e.stage_bits.as_deref(), Some(&[16usize, 4][..]));
+    }
+}

@@ -1,0 +1,1442 @@
+//! The per-connection proxy loop: one logical server over N workers.
+//!
+//! Each client connection to the router gets a [`FleetConn`] driving the
+//! same `pump` loop the single-process server uses — the router speaks
+//! the identical line protocol upstream and downstream. Routing rules:
+//!
+//! * **`load`** — placement ([`super::placement`]) picks the worker
+//!   (resident replica → headroom fit → frontier spill for `auto`);
+//!   the request is forwarded verbatim and the worker's response
+//!   (augmented with `"worker"`) becomes the client's. The connection
+//!   then owns that `(worker, model)` pair for implicit routing.
+//! * **`score`/`choose`** — forwarded to a replica with the target
+//!   variant resident (round-robin across replicas for load spreading).
+//!   Multi-row `score` requests **scatter**: rows split into contiguous
+//!   blocks across all replicas, scored concurrently, and reassembled in
+//!   request order — streamed requests interleave chunk lines in row
+//!   order with one router-synthesized terminal summary.
+//! * **Failover** — a worker that errors at the transport level is
+//!   marked down and the request retries on the next candidate; if the
+//!   variant is not resident there, the router replays a `load` derived
+//!   from the registry key first, so failover is transparent to the
+//!   client. A worker dying *mid-stream* terminates that stream with a
+//!   `{"done":true,"error":...}` line (already-emitted chunks stand, the
+//!   connection survives, and the next request fails over).
+//! * **`info`/`stats`/`models`/`policy`/`unload`** — aggregated
+//!   fleet-wide; `stats` additionally reports per-worker state and a
+//!   `"policy_skew"` flag from the workers' policy fingerprints.
+
+use std::collections::{HashMap, HashSet};
+use std::io::BufReader;
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::placement;
+use super::topology::{WorkerClient, WorkerView};
+use super::Fleet;
+use crate::models::manifest::Manifest;
+use crate::quant::DataType;
+use crate::server::registry::spec_from_parts;
+use crate::server::PlanRequest;
+use crate::tune::{Candidate, TunedPolicy};
+use crate::util::json::Json;
+use crate::util::pool;
+
+/// One client connection's router state: cached worker connections plus
+/// the `(worker, model)` pair the last `load` selected.
+pub struct FleetConn<'f> {
+    fleet: &'f Fleet,
+    clients: HashMap<usize, WorkerClient>,
+    current: Option<(usize, String)>,
+    requests: u64,
+}
+
+impl<'f> FleetConn<'f> {
+    pub fn new(fleet: &'f Fleet) -> FleetConn<'f> {
+        FleetConn { fleet, clients: HashMap::new(), current: None, requests: 0 }
+    }
+
+    /// Handle one request object (buffered responses only — streamed
+    /// requests need [`FleetConn::handle_streaming`]).
+    pub fn handle(&mut self, req: &Json) -> Json {
+        self.dispatch(req, None)
+    }
+
+    /// Handle one request with streaming support: partial-response lines
+    /// go through `sink`; the terminal line is the return value.
+    pub fn handle_streaming(
+        &mut self,
+        req: &Json,
+        sink: &mut dyn FnMut(&Json) -> Result<()>,
+    ) -> Json {
+        self.dispatch(req, Some(sink))
+    }
+
+    fn dispatch(
+        &mut self,
+        req: &Json,
+        sink: Option<&mut dyn FnMut(&Json) -> Result<()>>,
+    ) -> Json {
+        self.requests += 1;
+        match self.try_handle(req, sink) {
+            Ok(resp) => resp,
+            Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+        }
+    }
+
+    fn try_handle(
+        &mut self,
+        req: &Json,
+        sink: Option<&mut dyn FnMut(&Json) -> Result<()>>,
+    ) -> Result<Json> {
+        match req.get("op")?.as_str()? {
+            "ping" => {
+                let snap = self.fleet.topology().snapshot();
+                let up = snap.iter().filter(|w| w.up).count();
+                Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("role", Json::str("router")),
+                    ("workers", Json::num(snap.len() as f64)),
+                    ("workers_up", Json::num(up as f64)),
+                ]))
+            }
+            "models" => self.op_models(),
+            "stats" => self.op_stats(),
+            "info" => self.op_info(req),
+            "load" => self.op_load(req),
+            "unload" => self.op_unload(req),
+            "policy" => self.op_policy(req),
+            "tune" => self.op_tune(req),
+            "score" => self.op_score(req, sink),
+            "choose" => self.op_choose(req),
+            op => bail!(
+                "unknown op {op:?} (ping|info|models|stats|load|unload|score|choose|tune|policy)"
+            ),
+        }
+    }
+
+    // -- worker connection plumbing --------------------------------------
+
+    /// Run one attempt against worker `id`'s cached-or-fresh client. A
+    /// transport failure on a **cached** connection gets one fresh
+    /// reconnect (while `may_retry` allows) before the worker is marked
+    /// down — backends legitimately close idle connections
+    /// (`--io-timeout-secs`), and a stale socket must not condemn a
+    /// healthy worker. A failure on a fresh connection marks down;
+    /// semantic `{"error":...}` responses are returned as `Ok` and never
+    /// mark down.
+    fn with_reconnect(
+        &mut self,
+        id: usize,
+        attempt: &mut dyn FnMut(&mut WorkerClient) -> Result<Json>,
+        may_retry: &mut dyn FnMut() -> bool,
+    ) -> Result<Json> {
+        let had_cached = self.clients.contains_key(&id);
+        if let Err(e) = self.ensure_client(id) {
+            self.fail_worker(id, &e);
+            return Err(e);
+        }
+        let r = attempt(self.clients.get_mut(&id).expect("client just ensured"));
+        match r {
+            Err(_) if had_cached && may_retry() => {
+                self.clients.remove(&id);
+                if let Err(e) = self.ensure_client(id) {
+                    self.fail_worker(id, &e);
+                    return Err(e);
+                }
+                let r2 = attempt(self.clients.get_mut(&id).expect("client just ensured"));
+                if let Err(e) = &r2 {
+                    self.fail_worker(id, e);
+                }
+                r2
+            }
+            Err(e) => {
+                self.fail_worker(id, &e);
+                Err(e)
+            }
+            ok => ok,
+        }
+    }
+
+    /// Forward one buffered request to a worker (reconnect-once on a
+    /// stale cached connection — safe to resend, every op routed through
+    /// here is idempotent).
+    fn request_worker(&mut self, id: usize, req: &Json) -> Result<Json> {
+        self.with_reconnect(id, &mut |c| c.request(req), &mut || true)
+    }
+
+    fn ensure_client(&mut self, id: usize) -> Result<()> {
+        if !self.clients.contains_key(&id) {
+            let addr = self.fleet.topology().addr_of(id)?;
+            let c = WorkerClient::connect(&addr, self.fleet.opts.io_timeout)?;
+            self.clients.insert(id, c);
+        }
+        Ok(())
+    }
+
+    fn fail_worker(&mut self, id: usize, e: &anyhow::Error) {
+        self.clients.remove(&id);
+        self.fleet.topology().mark_down(id, &format!("{e:#}"));
+    }
+
+    /// Make `key` resident on worker `id` by replaying a `load` derived
+    /// from the registry key (no-op when the roster already shows it
+    /// resident, or when the key is a bare model key the worker resolves
+    /// itself).
+    fn ensure_resident(&mut self, id: usize, key: &str) -> Result<()> {
+        if !key.contains('@') {
+            return Ok(());
+        }
+        if self.fleet.topology().is_resident(id, key) {
+            return Ok(());
+        }
+        let load = load_request_for_key(&self.fleet.manifest, key)?;
+        let resp = self.request_worker(id, &load)?;
+        if let Some(e) = resp.opt("error") {
+            bail!(
+                "worker cannot load {key:?} for failover: {}",
+                e.as_str().unwrap_or("unknown error")
+            );
+        }
+        self.fleet.topology().note_loaded(id, key);
+        Ok(())
+    }
+
+    /// Candidate worker order for scoring `key`: replicas first
+    /// (round-robin rotated so concurrent connections spread), then
+    /// every other healthy worker (load-replay failover targets).
+    ///
+    /// "Usable" is up-per-roster **or** cached-connection-alive: when
+    /// every backend worker thread is pinned by long-lived router
+    /// connections, a probe can starve in the backend's accept queue and
+    /// mark the worker down even though this connection's cached socket
+    /// still serves fine — so a live cached client outvotes the roster,
+    /// and an actually-dead socket just fails over on first use.
+    fn route_order(&self, key: &str) -> Result<Vec<usize>> {
+        let snap = self.fleet.topology().snapshot();
+        let usable = |w: &WorkerView| w.up || self.clients.contains_key(&w.id);
+        let mut order: Vec<usize> = snap
+            .iter()
+            .filter(|w| usable(w) && w.resident.contains(key))
+            .map(|w| w.id)
+            .collect();
+        if order.is_empty() && !key.contains('@') {
+            // Bare model key: any worker holding *some* variant of it
+            // can resolve it (ambiguity errors surface worker-side).
+            let prefix = format!("{key}@");
+            order = snap
+                .iter()
+                .filter(|w| usable(w) && w.resident.iter().any(|k| k.starts_with(&prefix)))
+                .map(|w| w.id)
+                .collect();
+        }
+        if !order.is_empty() {
+            let r = self.fleet.next_rr() % order.len();
+            order.rotate_left(r);
+        }
+        for w in snap.iter().filter(|w| usable(w)) {
+            if !order.contains(&w.id) {
+                order.push(w.id);
+            }
+        }
+        if order.is_empty() {
+            bail!("no healthy workers in the fleet");
+        }
+        Ok(order)
+    }
+
+    /// The variant a scoring request addresses: explicit `"model"`, else
+    /// the connection's current model, else `None` — a model-less
+    /// request forwards verbatim and resolves against the addressed
+    /// worker's registry default, exactly like a direct client's would.
+    fn target_key(&self, req: &Json) -> Result<Option<String>> {
+        if let Some(m) = req.opt("model") {
+            return Ok(Some(m.as_str()?.to_string()));
+        }
+        Ok(self.current.as_ref().map(|(_, k)| k.clone()))
+    }
+
+    // -- scoring ---------------------------------------------------------
+
+    fn op_score(
+        &mut self,
+        req: &Json,
+        sink: Option<&mut dyn FnMut(&Json) -> Result<()>>,
+    ) -> Result<Json> {
+        if req.opt("rows").is_some() && req.opt("tokens").is_some() {
+            bail!(r#"give "tokens" or "rows", not both"#);
+        }
+        let key = self.target_key(req)?;
+        let stream = match req.opt("stream") {
+            Some(v) => v.as_bool()?,
+            None => false,
+        };
+        let n_rows = match req.opt("rows") {
+            Some(v) => v.as_arr()?.len(),
+            None => 1,
+        };
+        // Only multi-row keyed requests can scatter; the single-row hot
+        // path skips straight to forwarding (one roster snapshot inside
+        // route_order, not two).
+        if let Some(key) = key.as_ref().filter(|_| n_rows >= 2) {
+            let snap = self.fleet.topology().snapshot();
+            let reps = placement::replicas(&snap, key);
+            if reps.len() >= 2 {
+                let rows: Vec<Json> = req.get("rows")?.as_arr()?.to_vec();
+                if stream {
+                    let Some(sink) = sink else {
+                        bail!("streaming requires a line transport (stdin or TCP serving)")
+                    };
+                    return Ok(self.scatter_stream(req, key, &rows, &reps, &snap, sink));
+                }
+                return self.scatter_buffered(req, key, &rows, &reps, &snap);
+            }
+        }
+        self.forward_scoring(req, key.as_deref(), stream, sink)
+    }
+
+    fn op_choose(&mut self, req: &Json) -> Result<Json> {
+        let key = self.target_key(req)?;
+        self.forward_scoring(req, key.as_deref(), false, None)
+    }
+
+    /// Single-target forwarding with transparent failover: walk the
+    /// candidate order, replaying the variant load where needed. A
+    /// model-less request (`key: None`) forwards verbatim to a stable
+    /// healthy worker, whose registry default resolves it — the same
+    /// behavior a direct client gets. A worker dying mid-stream (chunks
+    /// already on the wire) terminates the stream like the
+    /// single-process server would.
+    fn forward_scoring(
+        &mut self,
+        req: &Json,
+        key: Option<&str>,
+        stream: bool,
+        mut sink: Option<&mut dyn FnMut(&Json) -> Result<()>>,
+    ) -> Result<Json> {
+        let fwd = match key {
+            Some(k) => with_field(req, "model", Json::str(k)),
+            None => req.clone(),
+        };
+        let order = match key {
+            Some(k) => self.route_order(k)?,
+            None => {
+                // Roster order, not round-robin: different workers may
+                // have different default models, and one connection's
+                // model-less requests should answer consistently.
+                let snap = self.fleet.topology().snapshot();
+                let order: Vec<usize> = snap
+                    .iter()
+                    .filter(|w| w.up || self.clients.contains_key(&w.id))
+                    .map(|w| w.id)
+                    .collect();
+                if order.is_empty() {
+                    bail!("no healthy workers in the fleet");
+                }
+                order
+            }
+        };
+        let mut last: Option<anyhow::Error> = None;
+        'candidates: for id in order {
+            if let Some(k) = key {
+                if let Err(e) = self.ensure_resident(id, k) {
+                    last = Some(e);
+                    continue;
+                }
+            }
+            // Up to two tries per candidate: a worker answering "not
+            // resident" despite the roster (evicted worker-side between
+            // probes) gets the roster corrected, the load replayed, and
+            // one clean resend — nothing was emitted for such a
+            // request-level rejection, so resending is safe.
+            for attempt in 0..2 {
+                let stale = |resp: &Json| {
+                    attempt == 0 && key.is_some() && is_not_resident_error(resp)
+                };
+                if stream {
+                    let s = match sink {
+                        Some(ref mut s) => &mut **s,
+                        None => {
+                            bail!("streaming requires a line transport (stdin or TCP serving)")
+                        }
+                    };
+                    let mut emitted = 0usize;
+                    match self.stream_worker(id, &fwd, s, &mut emitted) {
+                        Ok(term) if emitted == 0 && stale(&term) => {
+                            if let Err(e) = self.reload_stale(id, key) {
+                                last = Some(e);
+                                continue 'candidates;
+                            }
+                        }
+                        Ok(term) => return Ok(term),
+                        Err(e) if emitted > 0 => {
+                            // Partial stream already delivered:
+                            // terminate it honestly; the *next* request
+                            // fails over.
+                            return Ok(Json::obj(vec![
+                                ("done", Json::Bool(true)),
+                                (
+                                    "error",
+                                    Json::str(format!("worker failed mid-stream: {e:#}")),
+                                ),
+                                ("chunks", Json::num(emitted as f64)),
+                            ]));
+                        }
+                        Err(e) => {
+                            last = Some(e);
+                            continue 'candidates;
+                        }
+                    }
+                } else {
+                    match self.request_worker(id, &fwd) {
+                        Ok(resp) if stale(&resp) => {
+                            if let Err(e) = self.reload_stale(id, key) {
+                                last = Some(e);
+                                continue 'candidates;
+                            }
+                        }
+                        Ok(resp) => return Ok(resp),
+                        Err(e) => {
+                            last = Some(e);
+                            continue 'candidates;
+                        }
+                    }
+                }
+            }
+        }
+        Err(last.unwrap_or_else(|| anyhow!("no healthy worker available for {key:?}")))
+    }
+
+    /// Roster said resident, the worker disagreed: fix the roster and
+    /// replay the load so the next attempt can land.
+    fn reload_stale(&mut self, id: usize, key: Option<&str>) -> Result<()> {
+        let key = key.expect("stale residency implies a keyed request");
+        self.fleet.topology().note_unloaded(id, key);
+        self.ensure_resident(id, key)
+    }
+
+    /// One streamed request against one worker; `emitted` counts chunk
+    /// lines already written to the client when an error interrupts. The
+    /// reconnect-once retry only applies while nothing has been emitted
+    /// yet — a resend after chunks are on the wire would duplicate rows.
+    fn stream_worker(
+        &mut self,
+        id: usize,
+        req: &Json,
+        sink: &mut dyn FnMut(&Json) -> Result<()>,
+        emitted: &mut usize,
+    ) -> Result<Json> {
+        let count = std::cell::Cell::new(0usize);
+        let r = self.with_reconnect(
+            id,
+            &mut |c| {
+                let mut counting = |j: &Json| -> Result<()> {
+                    sink(j)?;
+                    count.set(count.get() + 1);
+                    Ok(())
+                };
+                c.request_streaming(req, &mut counting)
+            },
+            &mut || count.get() == 0,
+        );
+        *emitted = count.get();
+        r
+    }
+
+    /// Buffered multi-row scatter: contiguous row blocks across the
+    /// replicas, scored concurrently over fresh connections, reassembled
+    /// in request order with a router-computed summary matching the
+    /// single-worker response shape. A failed block retries once on
+    /// another replica before the request errors.
+    fn scatter_buffered(
+        &mut self,
+        _req: &Json,
+        key: &str,
+        rows: &[Json],
+        reps: &[usize],
+        snap: &[WorkerView],
+    ) -> Result<Json> {
+        let fleet = self.fleet;
+        let blocks = split_blocks(rows.len(), reps.len());
+        let io_t = fleet.opts.io_timeout;
+        let addr_of = |id: usize| -> String {
+            snap.iter().find(|w| w.id == id).map(|w| w.addr.clone()).unwrap_or_default()
+        };
+        let results: Vec<Result<Json>> = std::thread::scope(|s| {
+            let joins: Vec<_> = blocks
+                .iter()
+                .enumerate()
+                .map(|(i, &(a, b))| {
+                    let addr = addr_of(reps[i]);
+                    let sub = sub_score_request(key, &rows[a..b], false, None);
+                    s.spawn(move || -> Result<Json> {
+                        let mut c = WorkerClient::connect(&addr, io_t)?;
+                        c.request(&sub)
+                    })
+                })
+                .collect();
+            joins
+                .into_iter()
+                .map(|j| j.join().expect("scatter thread panicked"))
+                .collect()
+        });
+        let mut merged: Vec<Json> = Vec::with_capacity(rows.len());
+        for (i, r) in results.into_iter().enumerate() {
+            let resp = match r {
+                Ok(resp) if is_not_resident_error(&resp) => {
+                    // The roster was stale (evicted worker-side between
+                    // probes): correct it and retry the block on another
+                    // replica — unlike other semantic errors, this one
+                    // is not reproducible fleet-wide.
+                    self.fleet.topology().note_unloaded(reps[i], key);
+                    let (a, b) = blocks[i];
+                    self.retry_block(key, &rows[a..b], reps[i]).with_context(|| {
+                        format!("scatter block {i} hit stale residency; retry failed too")
+                    })?
+                }
+                Ok(resp) => {
+                    if let Some(e) = resp.opt("error") {
+                        // Any other semantic error (bad row, worker-side
+                        // fault) would fail identically elsewhere.
+                        bail!(
+                            "worker {}: {}",
+                            addr_of(reps[i]),
+                            e.as_str().unwrap_or("scoring error")
+                        );
+                    }
+                    resp
+                }
+                Err(e) => {
+                    self.fail_worker(reps[i], &e);
+                    let (a, b) = blocks[i];
+                    self.retry_block(key, &rows[a..b], reps[i]).with_context(|| {
+                        format!("scatter block {i} failed ({e:#}); failover retry failed too")
+                    })?
+                }
+            };
+            merged.extend(resp.get("rows")?.as_arr()?.iter().cloned());
+        }
+        Ok(summarize_rows(merged))
+    }
+
+    /// Failover for one scatter block: the remaining candidates in route
+    /// order, loading the variant where it is not yet resident.
+    fn retry_block(&mut self, key: &str, rows: &[Json], failed: usize) -> Result<Json> {
+        let mut last: Option<anyhow::Error> = None;
+        let order: Vec<usize> =
+            self.route_order(key)?.into_iter().filter(|&id| id != failed).collect();
+        for id in order {
+            if let Err(e) = self.ensure_resident(id, key) {
+                last = Some(e);
+                continue;
+            }
+            let sub = sub_score_request(key, rows, false, None);
+            match self.request_worker(id, &sub) {
+                Ok(resp) => {
+                    if let Some(e) = resp.opt("error") {
+                        bail!("retry worker: {}", e.as_str().unwrap_or("scoring error"));
+                    }
+                    return Ok(resp);
+                }
+                Err(e) => last = Some(e),
+            }
+        }
+        Err(last.unwrap_or_else(|| anyhow!("no healthy replica left for {key:?}")))
+    }
+
+    /// Streamed multi-row scatter: every replica streams its contiguous
+    /// block concurrently; the router interleaves chunk lines back into
+    /// global row order (renumbered chunks, re-offset `first_row`) and
+    /// synthesizes the one terminal summary. Any block failure after
+    /// chunks are on the wire terminates the stream with a
+    /// `done`+`error` line; already-emitted chunks stand.
+    fn scatter_stream(
+        &mut self,
+        req: &Json,
+        key: &str,
+        rows: &[Json],
+        reps: &[usize],
+        snap: &[WorkerView],
+        sink: &mut dyn FnMut(&Json) -> Result<()>,
+    ) -> Json {
+        let fleet = self.fleet;
+        let blocks = split_blocks(rows.len(), reps.len());
+        let chunk = req.opt("chunk").cloned();
+        let io_t = fleet.opts.io_timeout;
+        let addr_of = |id: usize| -> String {
+            snap.iter().find(|w| w.id == id).map(|w| w.addr.clone()).unwrap_or_default()
+        };
+        // One bounded queue per block: replica threads push re-offset
+        // chunk lines, the main loop drains the queues in block order so
+        // chunks reach the client in global row order while later blocks
+        // keep scoring concurrently (bounded buffering = backpressure,
+        // never unbounded memory).
+        let queues: Vec<pool::BoundedQueue<Json>> =
+            blocks.iter().map(|_| pool::BoundedQueue::new(64)).collect();
+        let mut chunks_out = 0usize;
+        let mut rows_out = 0usize;
+        let mut nll = 0.0f64;
+        let mut tok = 0.0f64;
+        let mut failure: Option<String> = None;
+        std::thread::scope(|s| {
+            let mut joins: Vec<Option<std::thread::ScopedJoinHandle<'_, Result<()>>>> =
+                Vec::with_capacity(blocks.len());
+            for (i, &(a, b)) in blocks.iter().enumerate() {
+                let addr = addr_of(reps[i]);
+                let sub = sub_score_request(key, &rows[a..b], true, chunk.as_ref());
+                let q = &queues[i];
+                joins.push(Some(s.spawn(move || -> Result<()> {
+                    // The queue MUST close on every exit path — an early
+                    // error (a failed connect included) would otherwise
+                    // leave the drain loop blocked in pop() forever.
+                    let mut run = || -> Result<()> {
+                        let mut c = WorkerClient::connect(&addr, io_t)?;
+                        let mut push = |j: &Json| -> Result<()> {
+                            let line = offset_first_row(j, a)?;
+                            if !q.push(line) {
+                                bail!("stream cancelled");
+                            }
+                            Ok(())
+                        };
+                        let term = c.request_streaming(&sub, &mut push)?;
+                        if let Some(e) = term.opt("error") {
+                            bail!("worker {addr}: {}", e.as_str().unwrap_or("stream error"));
+                        }
+                        Ok(())
+                    };
+                    let r = run();
+                    q.close();
+                    r
+                })));
+            }
+            'blocks: for (i, q) in queues.iter().enumerate() {
+                while let Some(line) = q.pop() {
+                    let line = with_field(&line, "chunk", Json::num(chunks_out as f64));
+                    if let Some(Json::Arr(rs)) = line.opt("rows") {
+                        rows_out += rs.len();
+                        for r in rs {
+                            nll += r.opt("nll").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+                            tok += r
+                                .opt("tokens_scored")
+                                .and_then(|v| v.as_f64().ok())
+                                .unwrap_or(0.0);
+                        }
+                    }
+                    if sink(&line).is_err() {
+                        failure = Some("stream write failed (client gone)".to_string());
+                        break 'blocks;
+                    }
+                    chunks_out += 1;
+                }
+                let handle = joins[i].take().expect("block joined once");
+                let joined = handle.join().expect("scatter thread panicked");
+                if let Err(e) = joined {
+                    let msg = format!("{e:#}");
+                    if is_io_error(&e) {
+                        fleet.topology().mark_down(reps[i], &msg);
+                    } else if msg.contains("not resident") {
+                        // Stale roster residency: correct it so the
+                        // *next* request routes (and reloads) right.
+                        fleet.topology().note_unloaded(reps[i], key);
+                    }
+                    failure = Some(msg);
+                    break 'blocks;
+                }
+            }
+            // Cancel whatever is still streaming and reap the threads
+            // (closed queues make their pushes fail fast).
+            for q in &queues {
+                q.close();
+            }
+            for j in joins.iter_mut().filter_map(|o| o.take()) {
+                let _ = j.join();
+            }
+        });
+        match failure {
+            Some(e) => Json::obj(vec![
+                ("done", Json::Bool(true)),
+                ("error", Json::str(e)),
+                ("rows_scored", Json::num(rows_out as f64)),
+                ("chunks", Json::num(chunks_out as f64)),
+            ]),
+            None => Json::obj(vec![
+                ("done", Json::Bool(true)),
+                ("rows_scored", Json::num(rows_out as f64)),
+                ("chunks", Json::num(chunks_out as f64)),
+                ("nll", Json::num(nll)),
+                ("ce", Json::num(nll / tok.max(1.0))),
+            ]),
+        }
+    }
+
+    // -- residency ops ---------------------------------------------------
+
+    fn op_load(&mut self, req: &Json) -> Result<Json> {
+        let auto = match req.opt("auto") {
+            Some(v) => v.as_bool()?,
+            None => false,
+        };
+        if auto {
+            return self.op_load_auto(req);
+        }
+        let fleet = self.fleet;
+        let family = req.get("family")?.as_str()?.to_string();
+        let tier_name = req.get("tier")?.as_str()?.to_string();
+        let bits = match req.opt("bits") {
+            Some(v) => v.as_usize()?,
+            None => 4,
+        };
+        let dtype = match req.opt("dtype") {
+            Some(v) => DataType::parse(v.as_str()?)?,
+            None => DataType::Fp,
+        };
+        let block = match req.opt("block") {
+            Some(v) => match v.as_usize()? {
+                0 => None,
+                b => Some(b),
+            },
+            None => Some(64),
+        };
+        let plan = PlanRequest {
+            pipeline: match req.opt("pipeline") {
+                Some(v) => v.as_bool()?,
+                None => false,
+            },
+            stage_bits: match req.opt("stage_bits") {
+                Some(v) => Some(v.usizes()?),
+                None => None,
+            },
+        };
+        if plan.stage_bits.is_some() && !plan.pipeline {
+            bail!("stage_bits requires the pipeline plan");
+        }
+        // Validate the spec at the router boundary (same rule as the
+        // worker) so a bad request never consumes a failover walk.
+        let spec = spec_from_parts(bits, dtype, block)?;
+        let key = format!("{family}_{tier_name}@{}{}", spec.key(), plan.suffix());
+        let tier = fleet.manifest.tier(&tier_name)?;
+        // Footprint estimate for placement: the tuner's candidate
+        // accounting, which prices staged mixed-precision loads per
+        // stage — a [16,4] request must not be placed by its 4-bit base
+        // spec alone.
+        let cand = Candidate { spec, stage_bits: plan.stage_bits.clone() };
+        let est = (cand.total_bits(tier)? / 8.0).ceil() as usize;
+        let snap = fleet.topology().snapshot();
+        let target = placement::place_load(&snap, &key, est)?;
+        let mut order = vec![target];
+        for w in snap.iter().filter(|w| w.up) {
+            if !order.contains(&w.id) {
+                order.push(w.id);
+            }
+        }
+        self.finish_load(&order, req, &snap)
+    }
+
+    fn op_load_auto(&mut self, req: &Json) -> Result<Json> {
+        for k in ["bits", "dtype", "block", "pipeline", "stage_bits"] {
+            if req.opt(k).is_some() {
+                bail!(r#""auto":true picks the config from the policy; drop {k:?}"#);
+            }
+        }
+        let fleet = self.fleet;
+        let (family, tier_name) = match (req.opt("family"), req.opt("tier")) {
+            (Some(f), Some(t)) => (f.as_str()?.to_string(), t.as_str()?.to_string()),
+            (None, None) => {
+                let key = match &self.current {
+                    Some((_, k)) => k.clone(),
+                    None => bail!(r#"give "family" and "tier" (no model loaded yet)"#),
+                };
+                let model_key = key.split('@').next().unwrap_or(&key).to_string();
+                split_model_key(&fleet.manifest, &model_key)?
+            }
+            _ => bail!(r#"give both "family" and "tier", or neither"#),
+        };
+        let fwd = Json::obj(vec![
+            ("op", Json::str("load")),
+            ("auto", Json::Bool(true)),
+            ("family", Json::str(&family)),
+            ("tier", Json::str(&tier_name)),
+        ]);
+        let snap = fleet.topology().snapshot();
+        let mut order: Vec<usize> = Vec::new();
+        if let Some(policy) = fleet.policy() {
+            let tier = fleet.manifest.tier(&tier_name)?;
+            let model_key = format!("{family}_{tier_name}");
+            let (w, entry) = placement::place_auto(&snap, &policy, tier, &model_key)?;
+            log::info!(
+                "fleet: placing auto-load of {model_key} on worker {} (frontier entry {})",
+                addr_in(&snap, w),
+                entry.key()
+            );
+            order.push(w);
+        }
+        // Failover candidates (and the no-router-policy path): healthy
+        // workers roomiest-first — each worker's own policy makes the
+        // final pick under its local headroom.
+        let mut rest: Vec<&WorkerView> =
+            snap.iter().filter(|w| w.up && !order.contains(&w.id)).collect();
+        rest.sort_by_key(|w| std::cmp::Reverse(w.headroom()));
+        order.extend(rest.iter().map(|w| w.id));
+        if order.is_empty() {
+            bail!("no healthy workers in the fleet");
+        }
+        self.finish_load(&order, &fwd, &snap)
+    }
+
+    /// Forward a load along the candidate order (transport failures and
+    /// semantic rejections both fall through to the next worker), then
+    /// record the residency and the connection's current model.
+    fn finish_load(
+        &mut self,
+        order: &[usize],
+        req: &Json,
+        snap: &[WorkerView],
+    ) -> Result<Json> {
+        let mut last_resp: Option<Json> = None;
+        let mut last_err: Option<anyhow::Error> = None;
+        for &id in order {
+            match self.request_worker(id, req) {
+                Ok(resp) if resp.opt("error").is_none() => {
+                    let full = resp.get("model")?.as_str()?.to_string();
+                    self.fleet.topology().note_loaded(id, &full);
+                    self.current = Some((id, full));
+                    return Ok(with_field(&resp, "worker", Json::str(addr_in(snap, id))));
+                }
+                Ok(resp) => last_resp = Some(resp),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        // Every worker rejected (e.g. nothing fits any headroom): the
+        // last worker's own error is the most useful response.
+        if let Some(r) = last_resp {
+            return Ok(r);
+        }
+        Err(last_err.unwrap_or_else(|| anyhow!("no healthy workers in the fleet")))
+    }
+
+    fn op_unload(&mut self, req: &Json) -> Result<Json> {
+        let key = req.get("model")?.as_str()?.to_string();
+        let snap = self.fleet.topology().snapshot();
+        let mut done: Vec<Json> = Vec::new();
+        let mut last_resp: Option<Json> = None;
+        for w in snap.iter().filter(|w| w.up) {
+            match self.request_worker(w.id, req) {
+                Ok(resp) if resp.opt("error").is_none() => {
+                    let full = resp
+                        .opt("unloaded")
+                        .and_then(|v| v.as_str().ok())
+                        .unwrap_or(&key)
+                        .to_string();
+                    self.fleet.topology().note_unloaded(w.id, &full);
+                    if self.current.as_ref().is_some_and(|(_, k)| *k == full) {
+                        self.current = None;
+                    }
+                    done.push(Json::str(&w.addr));
+                }
+                Ok(resp) => last_resp = Some(resp),
+                Err(_) => {}
+            }
+        }
+        if done.is_empty() {
+            return Ok(last_resp
+                .unwrap_or_else(|| Json::obj(vec![("error", Json::str("no healthy workers"))])));
+        }
+        Ok(Json::obj(vec![
+            ("unloaded", Json::str(key)),
+            ("workers", Json::Arr(done)),
+        ]))
+    }
+
+    // -- aggregation ops -------------------------------------------------
+
+    fn op_models(&mut self) -> Result<Json> {
+        let snap = self.fleet.topology().snapshot();
+        let probe = Json::obj(vec![("op", Json::str("models"))]);
+        let mut entries: Vec<Json> = Vec::new();
+        let mut up = 0usize;
+        for w in snap.iter().filter(|w| w.up) {
+            match self.request_worker(w.id, &probe) {
+                Ok(resp) => {
+                    up += 1;
+                    if let Some(models) = resp.opt("models") {
+                        for m in models.as_arr()? {
+                            entries.push(with_field(m, "worker", Json::str(&w.addr)));
+                        }
+                    }
+                }
+                Err(e) => log::warn!("fleet: models query of {} failed: {e:#}", w.addr),
+            }
+        }
+        Ok(Json::obj(vec![
+            ("models", Json::Arr(entries)),
+            ("workers", Json::num(snap.len() as f64)),
+            ("workers_up", Json::num(up as f64)),
+        ]))
+    }
+
+    fn op_stats(&mut self) -> Result<Json> {
+        let snap = self.fleet.topology().snapshot();
+        let probe = Json::obj(vec![("op", Json::str("stats"))]);
+        let mut workers_json: Vec<Json> = Vec::new();
+        let mut total = 0.0f64;
+        let mut up = 0usize;
+        let mut idents: HashSet<String> = HashSet::new();
+        for w in &snap {
+            if !w.up {
+                workers_json.push(Json::obj(vec![
+                    ("addr", Json::str(&w.addr)),
+                    ("up", Json::Bool(false)),
+                    (
+                        "error",
+                        Json::str(w.last_error.clone().unwrap_or_else(|| "down".to_string())),
+                    ),
+                ]));
+                continue;
+            }
+            match self.request_worker(w.id, &probe) {
+                Ok(resp) => {
+                    up += 1;
+                    total += resp
+                        .opt("resident_bytes_total")
+                        .and_then(|v| v.as_f64().ok())
+                        .unwrap_or(0.0);
+                    // Policy identity for skew detection: a worker with
+                    // no policy is its own (distinct) identity.
+                    let ident = match resp.opt("policy") {
+                        Some(Json::Null) | None => "none".to_string(),
+                        Some(p) => p
+                            .opt("hash")
+                            .and_then(|h| h.as_str().ok())
+                            .unwrap_or("unknown")
+                            .to_string(),
+                    };
+                    idents.insert(ident);
+                    workers_json.push(Json::obj(vec![
+                        ("addr", Json::str(&w.addr)),
+                        ("up", Json::Bool(true)),
+                        ("stats", resp),
+                    ]));
+                }
+                Err(e) => workers_json.push(Json::obj(vec![
+                    ("addr", Json::str(&w.addr)),
+                    ("up", Json::Bool(false)),
+                    ("error", Json::str(format!("{e:#}"))),
+                ])),
+            }
+        }
+        Ok(Json::obj(vec![
+            ("fleet", Json::Bool(true)),
+            ("workers", Json::Arr(workers_json)),
+            ("workers_up", Json::num(up as f64)),
+            ("workers_total", Json::num(snap.len() as f64)),
+            ("resident_bytes_total", Json::num(total)),
+            ("policy_skew", Json::Bool(idents.len() > 1)),
+        ]))
+    }
+
+    fn op_info(&mut self, req: &Json) -> Result<Json> {
+        let key = match req.opt("model") {
+            Some(m) => Some(m.as_str()?.to_string()),
+            None => self.current.as_ref().map(|(_, k)| k.clone()),
+        };
+        let snap = self.fleet.topology().snapshot();
+        let up = snap.iter().filter(|w| w.up).count();
+        match key {
+            Some(key) => {
+                let fwd = with_field(req, "model", Json::str(&key));
+                let mut last: Option<anyhow::Error> = None;
+                for id in self.route_order(&key)? {
+                    match self.request_worker(id, &fwd) {
+                        Ok(resp) => {
+                            let resp = with_field(&resp, "worker", Json::str(addr_in(&snap, id)));
+                            return Ok(with_field(&resp, "workers_up", Json::num(up as f64)));
+                        }
+                        Err(e) => last = Some(e),
+                    }
+                }
+                Err(last.unwrap_or_else(|| anyhow!("no healthy worker answered info")))
+            }
+            None => {
+                // Fleet-level summary straight from the roster — no
+                // model selected means there is no single variant to
+                // describe.
+                let resident: HashSet<&String> =
+                    snap.iter().filter(|w| w.up).flat_map(|w| w.resident.iter()).collect();
+                let bytes: usize = snap.iter().filter(|w| w.up).map(|w| w.resident_bytes).sum();
+                Ok(Json::obj(vec![
+                    ("fleet", Json::Bool(true)),
+                    ("workers", Json::num(snap.len() as f64)),
+                    ("workers_up", Json::num(up as f64)),
+                    ("models", Json::num(resident.len() as f64)),
+                    ("resident_bytes", Json::num(bytes as f64)),
+                    ("requests", Json::num(self.requests as f64)),
+                ]))
+            }
+        }
+    }
+
+    fn op_policy(&mut self, req: &Json) -> Result<Json> {
+        let snap = self.fleet.topology().snapshot();
+        let mut first: Option<Json> = None;
+        let mut idents: HashSet<u64> = HashSet::new();
+        let mut up = 0usize;
+        for w in snap.iter().filter(|w| w.up) {
+            match self.request_worker(w.id, req) {
+                Ok(resp) => {
+                    up += 1;
+                    if let Some(p) = resp.opt("policy") {
+                        idents.insert(crate::util::fnv1a(p.dump().as_bytes()));
+                    }
+                    if first.is_none() {
+                        first = Some(resp);
+                    }
+                }
+                Err(e) => log::warn!("fleet: policy op on {} failed: {e:#}", w.addr),
+            }
+        }
+        let Some(first) = first else { bail!("no healthy workers in the fleet") };
+        // Mirror a successful set/clear into the router's own policy so
+        // placement and the prober's skew-heal pushes follow the live
+        // install instead of reverting it on the next probe round.
+        if let Some(v) = req.opt("set") {
+            if let Ok(p) = TunedPolicy::from_json(v) {
+                self.fleet.set_policy(Some(p));
+            }
+        } else if let Some(v) = req.opt("clear") {
+            if v.as_bool().unwrap_or(false) {
+                self.fleet.set_policy(None);
+            }
+        }
+        let first = with_field(&first, "workers_up", Json::num(up as f64));
+        Ok(with_field(&first, "policy_skew", Json::Bool(idents.len() > 1)))
+    }
+
+    fn op_tune(&mut self, req: &Json) -> Result<Json> {
+        let snap = self.fleet.topology().snapshot();
+        // Tune on the connection's current worker when set, else the
+        // first healthy one. A tuning search runs far past any io
+        // timeout, so it gets a dedicated unbounded connection.
+        let id = match &self.current {
+            Some((id, _)) if snap.iter().any(|w| w.id == *id && w.up) => *id,
+            _ => snap
+                .iter()
+                .find(|w| w.up)
+                .map(|w| w.id)
+                .ok_or_else(|| anyhow!("no healthy workers in the fleet"))?,
+        };
+        let addr = addr_in(&snap, id).to_string();
+        // Bounded connect (a dead-but-roster-up worker must not pin this
+        // router thread for the OS connect timeout), unbounded read: the
+        // search legitimately runs for minutes.
+        let mut c = WorkerClient::connect(&addr, self.fleet.opts.io_timeout)?;
+        c.set_io_timeout(None)?;
+        let resp = match c.request(req) {
+            Ok(r) => r,
+            Err(e) => {
+                self.fail_worker(id, &e);
+                return Err(e);
+            }
+        };
+        if resp.opt("error").is_some() {
+            return Ok(resp);
+        }
+        // Broadcast the freshly tuned policy so the fleet stays
+        // skew-free (same heal path as the prober's push).
+        let broadcast = if self.fleet.opts.push_policy {
+            resp.opt("policy").cloned().filter(|p| *p != Json::Null)
+        } else {
+            None
+        };
+        if let Some(policy_json) = broadcast {
+            // The router's own copy must track the install, or the next
+            // probe round would push the stale policy back over it.
+            match TunedPolicy::from_json(&policy_json) {
+                Ok(p) => self.fleet.set_policy(Some(p)),
+                Err(e) => log::warn!("fleet: tuned policy does not parse: {e:#}"),
+            }
+            let set = Json::obj(vec![("op", Json::str("policy")), ("set", policy_json)]);
+            for w in snap.iter().filter(|w| w.up && w.id != id) {
+                if let Err(e) = self.request_worker(w.id, &set) {
+                    log::warn!("fleet: policy broadcast to {} failed: {e:#}", w.addr);
+                }
+            }
+        }
+        Ok(with_field(&resp, "worker", Json::str(addr)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------------
+
+fn addr_in<'a>(snap: &'a [WorkerView], id: usize) -> &'a str {
+    snap.iter().find(|w| w.id == id).map(|w| w.addr.as_str()).unwrap_or("?")
+}
+
+/// Clone an object with one field added/replaced (non-objects become an
+/// object holding just the field).
+fn with_field(j: &Json, key: &str, val: Json) -> Json {
+    let mut m = match j {
+        Json::Obj(m) => m.clone(),
+        _ => Default::default(),
+    };
+    m.insert(key.to_string(), val);
+    Json::Obj(m)
+}
+
+/// `true` when an error chain bottoms out in socket-level I/O — the
+/// mark-the-worker-down class, as opposed to semantic scoring errors.
+fn is_io_error(e: &anyhow::Error) -> bool {
+    e.chain().any(|c| c.downcast_ref::<std::io::Error>().is_some())
+}
+
+/// Worker-side "model not resident" rejection (the registry's
+/// `resolve_full_key` wording) — the one semantic error the router can
+/// heal by correcting the roster and replaying the load, as opposed to
+/// errors that would fail identically on any replica.
+fn is_not_resident_error(resp: &Json) -> bool {
+    resp.opt("error")
+        .and_then(|e| e.as_str().ok())
+        .is_some_and(|s| s.contains("not resident"))
+}
+
+/// Split `n` rows into at most `k` contiguous, near-even, non-empty
+/// blocks (fewer when `n < k`).
+fn split_blocks(n: usize, k: usize) -> Vec<(usize, usize)> {
+    let k = k.max(1).min(n.max(1));
+    let base = n / k;
+    let extra = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0;
+    for i in 0..k {
+        let len = base + usize::from(i < extra);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+/// The per-block scatter sub-request: the same score op a direct client
+/// would send, routed to one replica.
+fn sub_score_request(key: &str, rows: &[Json], stream: bool, chunk: Option<&Json>) -> Json {
+    let mut pairs = vec![
+        ("op", Json::str("score")),
+        ("model", Json::str(key)),
+        ("rows", Json::Arr(rows.to_vec())),
+    ];
+    if stream {
+        pairs.push(("stream", Json::Bool(true)));
+    }
+    if let Some(c) = chunk {
+        pairs.push(("chunk", c.clone()));
+    }
+    Json::obj(pairs)
+}
+
+/// Re-offset a replica-local chunk line into global row coordinates.
+fn offset_first_row(line: &Json, base: usize) -> Result<Json> {
+    let fr = line.get("first_row")?.as_usize()?;
+    Ok(with_field(line, "first_row", Json::num((fr + base) as f64)))
+}
+
+/// `family_tier` → `(family, tier)`, resolved against the manifest's
+/// declared tier names so a tier name containing `_` can never
+/// mis-parse the family.
+pub(crate) fn split_model_key(manifest: &Manifest, model_key: &str) -> Result<(String, String)> {
+    for t in &manifest.tiers {
+        if let Some(family) = model_key.strip_suffix(&format!("_{}", t.name)) {
+            if !family.is_empty() {
+                return Ok((family.to_string(), t.name.clone()));
+            }
+        }
+    }
+    bail!(
+        "cannot split model key {model_key:?} into family/tier (tiers: {:?})",
+        manifest.tiers.iter().map(|t| &t.name).collect::<Vec<_>>()
+    )
+}
+
+/// The parsed identity of a full registry key
+/// (`family_tier@dtype:bits:bBLOCK[#pipe[..]]`) — what failover needs to
+/// replay the exact variant on another worker.
+#[derive(Debug, PartialEq)]
+pub(crate) struct VariantKey {
+    pub model_key: String,
+    pub dtype: String,
+    pub bits: usize,
+    /// `0` = tensor-wise (the load op's spelling of `bnone`).
+    pub block: usize,
+    pub pipeline: bool,
+    pub stage_bits: Option<Vec<usize>>,
+}
+
+pub(crate) fn parse_variant_key(key: &str) -> Result<VariantKey> {
+    let (model_key, rest) = key
+        .split_once('@')
+        .ok_or_else(|| anyhow!("not a full registry key: {key:?}"))?;
+    let (spec_str, plan_str) = match rest.find('#') {
+        Some(i) => (&rest[..i], Some(&rest[i..])),
+        None => (rest, None),
+    };
+    let parts: Vec<&str> = spec_str.split(':').collect();
+    if parts.len() != 3 {
+        // Exponent-bit/centering/proxy specs never come from policy or
+        // load responses; refusing them here keeps replay honest.
+        bail!("cannot replay load for spec {spec_str:?} (want dtype:bits:bBLOCK)");
+    }
+    let bits: usize = parts[1].parse().map_err(|_| anyhow!("bad bits in registry key {key:?}"))?;
+    let block: usize = match parts[2] {
+        "bnone" => 0,
+        b => b
+            .strip_prefix('b')
+            .and_then(|n| n.parse().ok())
+            .ok_or_else(|| anyhow!("bad block in registry key {key:?}"))?,
+    };
+    let (pipeline, stage_bits) = match plan_str {
+        None => (false, None),
+        Some("#pipe") => (true, None),
+        Some(p) => {
+            let inner = p
+                .strip_prefix("#pipe[")
+                .and_then(|s| s.strip_suffix(']'))
+                .ok_or_else(|| anyhow!("bad plan suffix in registry key {key:?}"))?;
+            let bits: Vec<usize> = inner
+                .split(',')
+                .map(|b| {
+                    b.trim()
+                        .parse::<usize>()
+                        .map_err(|_| anyhow!("bad stage bits in registry key {key:?}"))
+                })
+                .collect::<Result<_>>()?;
+            (true, Some(bits))
+        }
+    };
+    Ok(VariantKey {
+        model_key: model_key.to_string(),
+        dtype: parts[0].to_string(),
+        bits,
+        block,
+        pipeline,
+        stage_bits,
+    })
+}
+
+/// Build the explicit `load` request that re-creates `key` on any worker
+/// — the failover replay path.
+pub(crate) fn load_request_for_key(manifest: &Manifest, key: &str) -> Result<Json> {
+    let v = parse_variant_key(key)?;
+    let (family, tier) = split_model_key(manifest, &v.model_key)?;
+    let mut pairs = vec![
+        ("op", Json::str("load")),
+        ("family", Json::str(family)),
+        ("tier", Json::str(tier)),
+        ("bits", Json::num(v.bits as f64)),
+        ("dtype", Json::str(&v.dtype)),
+        ("block", Json::num(v.block as f64)),
+    ];
+    if v.pipeline {
+        pairs.push(("pipeline", Json::Bool(true)));
+    }
+    if let Some(bits) = &v.stage_bits {
+        pairs.push((
+            "stage_bits",
+            Json::Arr(bits.iter().map(|&b| Json::num(b as f64)).collect()),
+        ));
+    }
+    Ok(Json::obj(pairs))
+}
+
+/// The buffered multi-row response shape shared with the single-process
+/// server (`rows_scored`/`rows`/`nll`/`ce`), recomputed from the merged
+/// per-row objects.
+fn summarize_rows(rows: Vec<Json>) -> Json {
+    let mut nll = 0.0f64;
+    let mut tok = 0.0f64;
+    for r in &rows {
+        nll += r.opt("nll").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+        tok += r.opt("tokens_scored").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
+    }
+    Json::obj(vec![
+        ("rows_scored", Json::num(rows.len() as f64)),
+        ("rows", Json::Arr(rows)),
+        ("nll", Json::num(nll)),
+        ("ce", Json::num(nll / tok.max(1.0))),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// Serving
+// ---------------------------------------------------------------------------
+
+/// Serve an already-bound router listener: a worker-thread pool consumes
+/// accepted client sockets (the same accept/fault-isolation structure as
+/// [`crate::server::serve_listener`]) while a background prober keeps the
+/// topology's health and residency fresh.
+pub fn serve_fleet(fleet: &Fleet, listener: TcpListener) -> Result<()> {
+    const MAX_CONSECUTIVE_ACCEPT_ERRORS: u32 = 32;
+    let opts = &fleet.opts;
+    let workers = opts.workers.max(1);
+    let conns: pool::BoundedQueue<TcpStream> = pool::BoundedQueue::new(workers * 2);
+    let stop = pool::Latch::new();
+    let accept_err = std::thread::scope(|s| {
+        let prober = s.spawn(|| {
+            fleet.probe();
+            // Condvar sleep: a tripped latch ends the wait (and the
+            // prober) immediately instead of after a polling slice.
+            while !stop.wait_timeout(opts.probe_interval) {
+                fleet.probe();
+            }
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            handles.push(s.spawn(|| {
+                while let Some(stream) = conns.pop() {
+                    let peer =
+                        stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+                    if let Some(t) = opts.io_timeout {
+                        let set = stream
+                            .set_read_timeout(Some(t))
+                            .and_then(|_| stream.set_write_timeout(Some(t)));
+                        if let Err(e) = set {
+                            log::warn!("fleet client {peer}: cannot set io timeout: {e:#}");
+                            continue;
+                        }
+                    }
+                    match serve_client(fleet, stream) {
+                        Ok(n) => log::info!("fleet client {peer}: {n} requests"),
+                        Err(e) => log::warn!("fleet client {peer}: connection error: {e:#}"),
+                    }
+                }
+            }));
+        }
+        let mut accepted = 0u64;
+        let mut consecutive_errors = 0u32;
+        let mut accept_err: Option<anyhow::Error> = None;
+        for stream in listener.incoming() {
+            match stream {
+                Ok(stm) => {
+                    consecutive_errors = 0;
+                    if !conns.push(stm) {
+                        break;
+                    }
+                    accepted += 1;
+                }
+                Err(e) => {
+                    consecutive_errors += 1;
+                    log::warn!("fleet accept error ({consecutive_errors} consecutive): {e:#}");
+                    if consecutive_errors >= MAX_CONSECUTIVE_ACCEPT_ERRORS {
+                        accept_err = Some(anyhow::Error::new(e).context(format!(
+                            "{consecutive_errors} consecutive accept failures; shutting down"
+                        )));
+                        break;
+                    }
+                    std::thread::sleep(Duration::from_millis(10));
+                    continue;
+                }
+            }
+            if opts.max_conns.is_some_and(|m| accepted >= m) {
+                break;
+            }
+        }
+        conns.close();
+        for h in handles {
+            let _ = h.join();
+        }
+        stop.set();
+        let _ = prober.join();
+        accept_err
+    });
+    match accept_err {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Serve one accepted client socket through the shared `pump` seam —
+/// streamed chunk lines go straight to the client as they arrive.
+fn serve_client(fleet: &Fleet, stream: TcpStream) -> Result<u64> {
+    let mut conn = FleetConn::new(fleet);
+    let reader = BufReader::new(stream.try_clone()?);
+    crate::server::pump(|req, sink| conn.handle_streaming(req, sink), reader, stream)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_blocks_covers_rows_contiguously() {
+        assert_eq!(split_blocks(5, 2), vec![(0, 3), (3, 5)]);
+        assert_eq!(split_blocks(6, 3), vec![(0, 2), (2, 4), (4, 6)]);
+        // Fewer rows than replicas: one row per block, no empty blocks.
+        assert_eq!(split_blocks(2, 5), vec![(0, 1), (1, 2)]);
+        assert_eq!(split_blocks(1, 1), vec![(0, 1)]);
+        for (n, k) in [(7, 3), (16, 5), (4, 4), (9, 2)] {
+            let blocks = split_blocks(n, k);
+            assert_eq!(blocks[0].0, 0);
+            assert_eq!(blocks.last().unwrap().1, n);
+            for w in blocks.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "blocks must tile contiguously");
+                assert!(w[0].1 > w[0].0, "no empty blocks");
+            }
+        }
+    }
+
+    #[test]
+    fn variant_keys_parse_spec_and_plan() {
+        let v = parse_variant_key("gpt2like_t0@fp:4:b64").unwrap();
+        assert_eq!(v.model_key, "gpt2like_t0");
+        assert_eq!((v.dtype.as_str(), v.bits, v.block), ("fp", 4, 64));
+        assert!(!v.pipeline && v.stage_bits.is_none());
+
+        let v = parse_variant_key("gpt2like_t0@fp:16:bnone").unwrap();
+        assert_eq!((v.bits, v.block), (16, 0), "baseline key round-trips to block 0");
+
+        let v = parse_variant_key("gpt2like_t0@int:3:b32#pipe").unwrap();
+        assert!(v.pipeline && v.stage_bits.is_none());
+
+        let v = parse_variant_key("gpt2like_t0@fp:4:b64#pipe[16,4]").unwrap();
+        assert!(v.pipeline);
+        assert_eq!(v.stage_bits, Some(vec![16, 4]));
+
+        assert!(parse_variant_key("gpt2like_t0").is_err(), "bare model key is not a variant");
+        assert!(parse_variant_key("m@fp:4:b64:e3").is_err(), "exponent specs are not replayable");
+        assert!(parse_variant_key("m@fp:4:b64#pipe[x]").is_err());
+        assert!(parse_variant_key("m@fp:4:64").is_err(), "block must be b-prefixed");
+    }
+
+    #[test]
+    fn with_field_replaces_and_preserves() {
+        let j = Json::parse(r#"{"op":"score","tokens":[1]}"#).unwrap();
+        let out = with_field(&j, "model", Json::str("k"));
+        assert_eq!(out.get("model").unwrap().as_str().unwrap(), "k");
+        assert_eq!(out.get("op").unwrap().as_str().unwrap(), "score");
+        // Replacement, not duplication.
+        let out2 = with_field(&out, "model", Json::str("k2"));
+        assert_eq!(out2.get("model").unwrap().as_str().unwrap(), "k2");
+        assert_eq!(out2.as_obj().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn summarize_rows_matches_worker_shape() {
+        let rows = vec![
+            Json::parse(r#"{"nll":2.0,"tokens_scored":4,"ce":0.5}"#).unwrap(),
+            Json::parse(r#"{"nll":6.0,"tokens_scored":2,"ce":3.0}"#).unwrap(),
+        ];
+        let s = summarize_rows(rows);
+        assert_eq!(s.get("rows_scored").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(s.get("nll").unwrap().as_f64().unwrap(), 8.0);
+        assert!((s.get("ce").unwrap().as_f64().unwrap() - 8.0 / 6.0).abs() < 1e-12);
+        assert_eq!(s.get("rows").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn offset_first_row_shifts_into_global_coordinates() {
+        let line = Json::parse(r#"{"chunk":0,"first_row":2,"rows":[]}"#).unwrap();
+        let out = offset_first_row(&line, 8).unwrap();
+        assert_eq!(out.get("first_row").unwrap().as_usize().unwrap(), 10);
+        assert!(offset_first_row(&Json::parse(r#"{"x":1}"#).unwrap(), 0).is_err());
+    }
+}

@@ -1,0 +1,548 @@
+//! Worker roster: addresses, byte budgets, health, and residency.
+//!
+//! The topology is the router's model of its backends. Each worker is
+//! probed with `{"op":"ping"}` (liveness) and `{"op":"stats"}`
+//! (residency: which variants are resident, how many packed bytes, what
+//! byte budget and tuned policy the worker runs) — both side-effect-free
+//! on the worker. A failed probe or a failed in-flight request marks the
+//! worker **down**; the next successful probe marks it back **up**, so a
+//! restarted backend rejoins the fleet without router intervention.
+//!
+//! [`WorkerClient`] is the one line-protocol client used everywhere the
+//! router talks to a backend: request/response over one TCP connection,
+//! with optional read/write timeouts so a stalled backend surfaces as an
+//! error instead of wedging a router thread.
+
+use std::collections::HashSet;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tune::TunedPolicy;
+use crate::util::json::Json;
+
+/// One `--worker` roster entry: `host:port` with an optional
+/// operator-declared packed-byte budget (used for placement when the
+/// worker itself reports an unbounded registry).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerSpec {
+    pub addr: String,
+    pub budget: Option<usize>,
+}
+
+impl WorkerSpec {
+    /// Parse `host:port` or `host:port:budget` (the repeatable CLI
+    /// `--worker` format).
+    pub fn parse(s: &str) -> Result<WorkerSpec> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts.len() {
+            2 if !parts[0].is_empty() && !parts[1].is_empty() => {
+                Ok(WorkerSpec { addr: s.to_string(), budget: None })
+            }
+            3 if !parts[0].is_empty() && !parts[1].is_empty() => Ok(WorkerSpec {
+                addr: format!("{}:{}", parts[0], parts[1]),
+                budget: Some(
+                    parts[2]
+                        .parse()
+                        .map_err(|_| anyhow!("bad budget in worker spec {s:?}"))?,
+                ),
+            }),
+            _ => bail!("bad worker spec {s:?} (want host:port or host:port:budget)"),
+        }
+    }
+}
+
+/// Roster-internal mutable state for one worker.
+struct WorkerState {
+    spec: WorkerSpec,
+    up: bool,
+    /// Full registry keys resident on this worker (probe + load/unload
+    /// bookkeeping between probes).
+    resident: HashSet<String>,
+    resident_bytes: usize,
+    /// Budget the worker itself reported (`stats.budget_bytes`);
+    /// overrides the operator-declared spec budget when present.
+    probed_budget: Option<usize>,
+    policy_hash: Option<String>,
+    policy_entries: usize,
+    policy_source: Option<String>,
+    last_error: Option<String>,
+}
+
+/// A read-only snapshot of one worker, handed to placement and routing
+/// (no locks held while the router does I/O).
+#[derive(Debug, Clone)]
+pub struct WorkerView {
+    pub id: usize,
+    pub addr: String,
+    pub up: bool,
+    pub resident: HashSet<String>,
+    pub resident_bytes: usize,
+    /// Effective packed-byte budget: worker-reported, else the
+    /// operator-declared roster budget, else unbounded.
+    pub budget_bytes: Option<usize>,
+    pub policy_hash: Option<String>,
+    pub policy_entries: usize,
+    pub policy_source: Option<String>,
+    pub last_error: Option<String>,
+}
+
+impl WorkerView {
+    /// Packed bytes this worker may still spend; unbounded workers
+    /// report a huge-but-finite headroom so `max_by_key` ordering stays
+    /// total.
+    pub fn headroom(&self) -> usize {
+        match self.budget_bytes {
+            Some(b) => b.saturating_sub(self.resident_bytes),
+            None => usize::MAX / 2,
+        }
+    }
+}
+
+/// What one probe round learned about a worker.
+struct ProbeResult {
+    resident: HashSet<String>,
+    resident_bytes: usize,
+    probed_budget: Option<usize>,
+    policy_hash: Option<String>,
+    policy_entries: usize,
+    policy_source: Option<String>,
+}
+
+/// The shared worker roster. All mutation goes through `&self` (internal
+/// mutex), so every router connection and the background prober share one
+/// instance.
+pub struct Topology {
+    workers: Mutex<Vec<WorkerState>>,
+    io_timeout: Option<Duration>,
+}
+
+impl Topology {
+    pub fn new(specs: Vec<WorkerSpec>, io_timeout: Option<Duration>) -> Topology {
+        let workers = specs
+            .into_iter()
+            .map(|spec| WorkerState {
+                spec,
+                // Workers start down; the first probe marks them up.
+                up: false,
+                resident: HashSet::new(),
+                resident_bytes: 0,
+                probed_budget: None,
+                policy_hash: None,
+                policy_entries: 0,
+                policy_source: None,
+                last_error: None,
+            })
+            .collect();
+        Topology { workers: Mutex::new(workers), io_timeout }
+    }
+
+    pub fn len(&self) -> usize {
+        self.workers.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn addr_of(&self, id: usize) -> Result<String> {
+        let w = self.workers.lock().unwrap();
+        w.get(id)
+            .map(|s| s.spec.addr.clone())
+            .ok_or_else(|| anyhow!("no worker {id} in the roster"))
+    }
+
+    /// Snapshot of every worker for placement/routing decisions.
+    pub fn snapshot(&self) -> Vec<WorkerView> {
+        let w = self.workers.lock().unwrap();
+        w.iter()
+            .enumerate()
+            .map(|(id, s)| WorkerView {
+                id,
+                addr: s.spec.addr.clone(),
+                up: s.up,
+                resident: s.resident.clone(),
+                resident_bytes: s.resident_bytes,
+                budget_bytes: s.probed_budget.or(s.spec.budget),
+                policy_hash: s.policy_hash.clone(),
+                policy_entries: s.policy_entries,
+                policy_source: s.policy_source.clone(),
+                last_error: s.last_error.clone(),
+            })
+            .collect()
+    }
+
+    /// Mark a worker down after a failed request or probe. Down workers
+    /// stay in the roster and are re-probed; routing skips them.
+    pub fn mark_down(&self, id: usize, err: &str) {
+        let mut w = self.workers.lock().unwrap();
+        if let Some(s) = w.get_mut(id) {
+            if s.up {
+                log::warn!("fleet: worker {} marked down: {err}", s.spec.addr);
+            }
+            s.up = false;
+            s.last_error = Some(err.to_string());
+        }
+    }
+
+    /// Whether the roster shows `key` resident on worker `id` — the
+    /// hot-path check (`ensure_resident` runs it per scoring candidate)
+    /// that must not clone a full snapshot.
+    pub fn is_resident(&self, id: usize, key: &str) -> bool {
+        let w = self.workers.lock().unwrap();
+        w.get(id).is_some_and(|s| s.resident.contains(key))
+    }
+
+    /// Record a variant made resident on a worker (a routed `load`
+    /// response, or test seeding) without waiting for the next probe.
+    pub fn note_loaded(&self, id: usize, key: &str) {
+        let mut w = self.workers.lock().unwrap();
+        if let Some(s) = w.get_mut(id) {
+            s.up = true;
+            s.resident.insert(key.to_string());
+        }
+    }
+
+    /// Record a routed `unload` so scatter routing stops targeting the
+    /// worker before the next probe.
+    pub fn note_unloaded(&self, id: usize, key: &str) {
+        let mut w = self.workers.lock().unwrap();
+        if let Some(s) = w.get_mut(id) {
+            s.resident.remove(key);
+        }
+    }
+
+    /// Worker ids currently marked up.
+    pub fn up_ids(&self) -> Vec<usize> {
+        let w = self.workers.lock().unwrap();
+        w.iter().enumerate().filter(|(_, s)| s.up).map(|(id, _)| id).collect()
+    }
+
+    /// One probe round: ping + stats against every worker (up or down —
+    /// a down worker answering is the mark-up path). With `push`, a
+    /// worker whose policy fingerprint differs from the router policy
+    /// gets `{"op":"policy","set":...}` before its state is recorded, so
+    /// one probe round heals fleet-wide policy skew.
+    pub fn probe_all(&self, push: Option<&TunedPolicy>) {
+        // Probes answer in microseconds on a healthy worker; cap the
+        // wait well below the serving io timeout so one dead address
+        // does not stall the probe round.
+        let t = Some(match self.io_timeout {
+            Some(t) => t.min(Duration::from_secs(2)),
+            None => Duration::from_secs(2),
+        });
+        let addrs: Vec<(usize, String)> = {
+            let w = self.workers.lock().unwrap();
+            w.iter().enumerate().map(|(id, s)| (id, s.spec.addr.clone())).collect()
+        };
+        // Probe concurrently: a round over N workers costs one probe's
+        // wall clock, not N — dead addresses burn their connect timeout
+        // in parallel instead of stretching the round past the probe
+        // interval and delaying every other worker's mark-up.
+        let probed: Vec<(usize, String, Result<ProbeResult>)> = std::thread::scope(|s| {
+            let joins: Vec<_> = addrs
+                .into_iter()
+                .map(|(id, addr)| {
+                    s.spawn(move || {
+                        let r = probe_worker(&addr, t, push);
+                        (id, addr, r)
+                    })
+                })
+                .collect();
+            joins.into_iter().map(|j| j.join().expect("probe thread panicked")).collect()
+        });
+        for (id, addr, result) in probed {
+            match result {
+                Ok(r) => {
+                    let mut w = self.workers.lock().unwrap();
+                    if let Some(s) = w.get_mut(id) {
+                        if !s.up {
+                            log::info!("fleet: worker {addr} is up");
+                        }
+                        s.up = true;
+                        s.resident = r.resident;
+                        s.resident_bytes = r.resident_bytes;
+                        s.probed_budget = r.probed_budget;
+                        s.policy_hash = r.policy_hash;
+                        s.policy_entries = r.policy_entries;
+                        s.policy_source = r.policy_source;
+                        s.last_error = None;
+                    }
+                }
+                Err(e) => self.mark_down(id, &format!("probe failed: {e:#}")),
+            }
+        }
+    }
+}
+
+/// Probe one worker over a fresh connection: ping, stats, and optionally
+/// a policy push when the fingerprints differ.
+fn probe_worker(
+    addr: &str,
+    timeout: Option<Duration>,
+    push: Option<&TunedPolicy>,
+) -> Result<ProbeResult> {
+    let mut c = WorkerClient::connect(addr, timeout)?;
+    let pong = c.request(&Json::obj(vec![("op", Json::str("ping"))]))?;
+    if let Some(e) = pong.opt("error") {
+        bail!("ping rejected: {}", e.as_str().unwrap_or("unknown error"));
+    }
+    let stats = c.request(&Json::obj(vec![("op", Json::str("stats"))]))?;
+    if let Some(e) = stats.opt("error") {
+        bail!("stats rejected: {}", e.as_str().unwrap_or("unknown error"));
+    }
+    let mut r = parse_stats(&stats)?;
+    if let Some(policy) = push {
+        let want = policy.fingerprint();
+        if r.policy_hash.as_deref() != Some(want.as_str()) {
+            let set = Json::obj(vec![
+                ("op", Json::str("policy")),
+                ("set", policy.to_json()),
+            ]);
+            match c.request(&set) {
+                Ok(resp) if resp.opt("error").is_none() => {
+                    log::info!("fleet: pushed policy {want} to {addr}");
+                    r.policy_hash = Some(want);
+                    r.policy_entries = policy.entries.len();
+                    r.policy_source = None;
+                }
+                Ok(resp) => log::warn!(
+                    "fleet: {addr} rejected policy push: {}",
+                    resp.opt("error").and_then(|e| e.as_str().ok()).unwrap_or("?")
+                ),
+                Err(e) => log::warn!("fleet: policy push to {addr} failed: {e:#}"),
+            }
+        }
+    }
+    Ok(r)
+}
+
+/// Pull the roster-relevant fields out of a worker `{"op":"stats"}`
+/// response (resident keys, total bytes, budget, policy identity).
+fn parse_stats(stats: &Json) -> Result<ProbeResult> {
+    let resident: HashSet<String> = stats
+        .get("models")?
+        .as_arr()?
+        .iter()
+        .map(|m| Ok(m.get("key")?.as_str()?.to_string()))
+        .collect::<Result<_>>()?;
+    let resident_bytes = stats.get("resident_bytes_total")?.as_usize()?;
+    let probed_budget = match stats.get("budget_bytes")? {
+        Json::Null => None,
+        v => Some(v.as_usize()?),
+    };
+    let (policy_hash, policy_entries, policy_source) = match stats.opt("policy") {
+        None | Some(Json::Null) => (None, 0, None),
+        Some(p) => (
+            Some(p.get("hash")?.as_str()?.to_string()),
+            p.get("entries")?.as_usize()?,
+            match p.get("source")? {
+                Json::Null => None,
+                v => Some(v.as_str()?.to_string()),
+            },
+        ),
+    };
+    Ok(ProbeResult {
+        resident,
+        resident_bytes,
+        probed_budget,
+        policy_hash,
+        policy_entries,
+        policy_source,
+    })
+}
+
+/// A line-protocol client for one backend connection — request out,
+/// response line(s) back. The router holds one per (client connection ×
+/// worker) for request forwarding, plus short-lived ones for probes and
+/// scatter blocks.
+pub struct WorkerClient {
+    addr: String,
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl WorkerClient {
+    /// Connect with an optional timeout applied to connect, read, and
+    /// write — a stalled backend then errors out instead of blocking a
+    /// router thread forever.
+    pub fn connect(addr: &str, timeout: Option<Duration>) -> Result<WorkerClient> {
+        let stream = match timeout {
+            Some(t) => {
+                let sa = addr
+                    .to_socket_addrs()
+                    .with_context(|| format!("resolving worker {addr}"))?
+                    .next()
+                    .ok_or_else(|| anyhow!("worker address {addr:?} resolves to nothing"))?;
+                TcpStream::connect_timeout(&sa, t)
+                    .with_context(|| format!("connecting worker {addr}"))?
+            }
+            None => {
+                TcpStream::connect(addr).with_context(|| format!("connecting worker {addr}"))?
+            }
+        };
+        // Request/response per line: Nagle only adds latency here.
+        let _ = stream.set_nodelay(true);
+        if let Some(t) = timeout {
+            stream.set_read_timeout(Some(t))?;
+            stream.set_write_timeout(Some(t))?;
+        }
+        Ok(WorkerClient {
+            addr: addr.to_string(),
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+        })
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    /// Adjust the read/write timeouts after connect (reader and writer
+    /// are dups of one socket, so setting via the writer covers both).
+    /// The tune op keeps its bounded connect but must wait unboundedly
+    /// for the search to finish.
+    pub fn set_io_timeout(&self, t: Option<Duration>) -> Result<()> {
+        self.writer.set_read_timeout(t)?;
+        self.writer.set_write_timeout(t)?;
+        Ok(())
+    }
+
+    /// One buffered request: write the line, read exactly one response
+    /// line. Worker-side *semantic* errors come back as
+    /// `Ok({"error":...})`; an `Err` means the worker itself failed
+    /// (connection, timeout, garbage) and should be marked down.
+    pub fn request(&mut self, req: &Json) -> Result<Json> {
+        writeln!(self.writer, "{}", req.dump())
+            .with_context(|| format!("writing to worker {}", self.addr))?;
+        self.writer.flush()?;
+        self.read_response()
+    }
+
+    /// One streamed request: non-terminal lines (chunks) go through
+    /// `sink`; the terminal line (`"done"` present, or a bare error
+    /// response for a request the worker rejected outright) is returned.
+    pub fn request_streaming(
+        &mut self,
+        req: &Json,
+        sink: &mut dyn FnMut(&Json) -> Result<()>,
+    ) -> Result<Json> {
+        writeln!(self.writer, "{}", req.dump())
+            .with_context(|| format!("writing to worker {}", self.addr))?;
+        self.writer.flush()?;
+        loop {
+            let line = self.read_response()?;
+            let terminal = line.opt("done").is_some()
+                || (line.opt("error").is_some() && line.opt("chunk").is_none());
+            if terminal {
+                return Ok(line);
+            }
+            sink(&line)?;
+        }
+    }
+
+    fn read_response(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        let n = self
+            .reader
+            .read_line(&mut line)
+            .with_context(|| format!("reading from worker {}", self.addr))?;
+        if n == 0 {
+            bail!("worker {} hung up", self.addr);
+        }
+        Json::parse(line.trim())
+            .with_context(|| format!("bad response line from worker {}", self.addr))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn worker_spec_parses_addr_and_budget() {
+        let w = WorkerSpec::parse("127.0.0.1:7878").unwrap();
+        assert_eq!(w.addr, "127.0.0.1:7878");
+        assert_eq!(w.budget, None);
+        let w = WorkerSpec::parse("127.0.0.1:7878:500000").unwrap();
+        assert_eq!(w.addr, "127.0.0.1:7878");
+        assert_eq!(w.budget, Some(500_000));
+        assert!(WorkerSpec::parse("justhost").is_err());
+        assert!(WorkerSpec::parse("h:p:notanumber").is_err());
+        assert!(WorkerSpec::parse(":7878").is_err());
+        assert!(WorkerSpec::parse(":7878:100").is_err(), "empty host with budget");
+        assert!(WorkerSpec::parse("host::100").is_err(), "empty port with budget");
+        assert!(WorkerSpec::parse("a:b:1:2").is_err());
+    }
+
+    #[test]
+    fn roster_starts_down_and_tracks_residency_notes() {
+        let t = Topology::new(
+            vec![
+                WorkerSpec::parse("127.0.0.1:1:100").unwrap(),
+                WorkerSpec::parse("127.0.0.1:2").unwrap(),
+            ],
+            None,
+        );
+        assert_eq!(t.len(), 2);
+        assert!(t.up_ids().is_empty(), "workers start down until the first probe");
+        t.note_loaded(0, "gpt2like_t0@fp:4:b64");
+        assert_eq!(t.up_ids(), vec![0], "a successful routed load implies the worker is up");
+        assert!(t.is_resident(0, "gpt2like_t0@fp:4:b64"));
+        assert!(!t.is_resident(1, "gpt2like_t0@fp:4:b64"));
+        assert!(!t.is_resident(7, "gpt2like_t0@fp:4:b64"), "unknown worker id is not resident");
+        let snap = t.snapshot();
+        assert!(snap[0].resident.contains("gpt2like_t0@fp:4:b64"));
+        assert_eq!(snap[0].budget_bytes, Some(100), "roster budget used until a probe overrides");
+        assert_eq!(snap[1].budget_bytes, None);
+        assert!(snap[1].headroom() > snap[0].headroom(), "unbounded beats bounded headroom");
+        t.note_unloaded(0, "gpt2like_t0@fp:4:b64");
+        assert!(t.snapshot()[0].resident.is_empty());
+        t.mark_down(0, "boom");
+        assert!(t.up_ids().is_empty());
+        assert_eq!(t.snapshot()[0].last_error.as_deref(), Some("boom"));
+    }
+
+    #[test]
+    fn probe_marks_unreachable_workers_down() {
+        // Port 1 on localhost: nothing listens; the probe must fail fast
+        // and mark the worker down, not hang.
+        let t = Topology::new(vec![WorkerSpec::parse("127.0.0.1:1").unwrap()], None);
+        t.note_loaded(0, "k");
+        t.probe_all(None);
+        assert!(t.up_ids().is_empty());
+        assert!(t.snapshot()[0].last_error.is_some());
+    }
+
+    #[test]
+    fn parse_stats_extracts_roster_fields() {
+        let j = Json::parse(
+            r#"{"models":[{"key":"a@fp:4:b64","resident_bytes":10},{"key":"b@int:3:b32","resident_bytes":5}],
+                "resident_bytes_total":15,"budget_bytes":100,
+                "policy":{"entries":3,"suite":"ppl","hash":"00ff","source":"runs/policy.json"}}"#,
+        )
+        .unwrap();
+        let r = parse_stats(&j).unwrap();
+        assert!(r.resident.contains("a@fp:4:b64") && r.resident.contains("b@int:3:b32"));
+        assert_eq!(r.resident_bytes, 15);
+        assert_eq!(r.probed_budget, Some(100));
+        assert_eq!(r.policy_hash.as_deref(), Some("00ff"));
+        assert_eq!(r.policy_entries, 3);
+        assert_eq!(r.policy_source.as_deref(), Some("runs/policy.json"));
+        // Unbudgeted, policy-less worker (and pre-fleet stats without a
+        // "policy" field at all).
+        let j = Json::parse(
+            r#"{"models":[],"resident_bytes_total":0,"budget_bytes":null,"policy":null}"#,
+        )
+        .unwrap();
+        let r = parse_stats(&j).unwrap();
+        assert_eq!(r.probed_budget, None);
+        assert!(r.policy_hash.is_none());
+        let j = Json::parse(r#"{"models":[],"resident_bytes_total":0,"budget_bytes":null}"#)
+            .unwrap();
+        assert!(parse_stats(&j).unwrap().policy_hash.is_none());
+    }
+}

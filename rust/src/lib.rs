@@ -31,6 +31,7 @@
 //! | [`eval`] | perplexity + zero-shot evaluation harness, scored through execution plans |
 //! | [`coordinator`] | sweep grid, scheduler, worker pool, results store |
 //! | [`server`] | LRU/TTL-governed packed-model registry (monolithic + pipeline-sharded variants, per-stage mixed precision) + sharded score cache + concurrent micro-batched JSON-lines serving with chunked streaming responses and tuned-policy auto-loading |
+//! | [`fleet`] | multi-node serving tier: worker roster with health/residency probes, policy-aware placement, and a line-protocol router with scatter/gather scoring, streamed chunk reassembly, and retry-on-next-worker failover |
 //! | [`scaling`] | scaling curves, Pareto frontiers, bit-level optimality, correlations |
 //! | [`tune`] | precision autotuner: candidate search over bits × block × dtype × per-stage widths, calibration eval, Pareto-frontier `TunedPolicy` artifacts |
 //! | [`report`] | ASCII figures and CSV emission for every paper table/figure |
@@ -49,6 +50,7 @@ pub mod data;
 pub mod models;
 pub mod runtime;
 pub mod server;
+pub mod fleet;
 pub mod train;
 pub mod eval;
 pub mod coordinator;

@@ -55,6 +55,10 @@
 //!                                       {"done":true,...} summary line
 //! → {"op":"choose", "context":[...], "choices":[[..],[..]]}
 //!                                       length-normalized best choice
+//! → {"op":"ping"}                       liveness probe: {"ok":true} plus
+//!                                       resident counts; never touches
+//!                                       LRU/TTL state (fleet routers
+//!                                       poll this for worker health)
 //! → {"op":"info"}                       model + residency + cache counters
 //! → {"op":"models"}                     all resident variants
 //! → {"op":"load", "family":"gpt2like", "tier":"t1", "bits":4,
@@ -81,6 +85,17 @@
 //!                                       "set": {...} swaps it in,
 //!                                       "clear": true removes it
 //! ```
+//!
+//! The same line protocol is the **inter-node wire format** of the fleet
+//! tier ([`crate::fleet`]): a `kbitscale fleet` router speaks it
+//! downstream to N `serve_tcp` workers and upstream to clients, so a
+//! worker cannot tell a router from a direct client. Router-aggregated
+//! ops (`info`/`stats`/`models` fan out to every worker; `score` rows
+//! scatter across replicas) keep the exact response shapes documented
+//! here, plus fleet-only fields (`"worker"`, `"workers"`,
+//! `"policy_skew"`). `{"op":"stats"}` reports the active policy identity
+//! (`entries`/`hash`/`source`) so fleet aggregation can detect policy
+//! skew between workers.
 //!
 //! # Tuned-policy serving
 //!
@@ -496,6 +511,17 @@ fn try_handle<'rt>(
     sink: Option<&mut dyn FnMut(&Json) -> Result<()>>,
 ) -> Result<Json> {
     match req.get("op")?.as_str()? {
+        "ping" => {
+            // Health probe: cheap, allocation-light, and deliberately
+            // free of LRU/TTL side effects — a fleet router polling every
+            // worker must never keep an idle variant warm or trip an
+            // eviction sweep.
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("models", Json::num(registry.len() as f64)),
+                ("resident_bytes_total", Json::num(registry.resident_bytes_total() as f64)),
+            ]))
+        }
         "info" => {
             // Peek, not get: metadata polling must not refresh LRU/TTL
             // state or count as a hit (matching `models`/`stats`).
@@ -589,6 +615,27 @@ fn try_handle<'rt>(
                 ("cache_hits", Json::num(cache_hits as f64)),
                 ("cache_misses", Json::num(cache_misses as f64)),
                 ("cache_rows", Json::num(cache_rows as f64)),
+                // Active policy identity (entry count + content hash +
+                // artifact source): fleet-wide stats aggregation compares
+                // these across workers to detect policy skew.
+                (
+                    "policy",
+                    match registry.policy() {
+                        Some(p) => Json::obj(vec![
+                            ("entries", Json::num(p.entries.len() as f64)),
+                            ("suite", Json::str(&p.suite)),
+                            ("hash", Json::str(p.fingerprint())),
+                            (
+                                "source",
+                                match registry.policy_source() {
+                                    Some(s) => Json::str(s),
+                                    None => Json::Null,
+                                },
+                            ),
+                        ]),
+                        None => Json::Null,
+                    },
+                ),
             ]))
         }
         "unload" => {
@@ -871,7 +918,9 @@ fn try_handle<'rt>(
                 },
             )]))
         }
-        op => bail!("unknown op {op:?} (info|models|stats|load|unload|score|choose|tune|policy)"),
+        op => bail!(
+            "unknown op {op:?} (ping|info|models|stats|load|unload|score|choose|tune|policy)"
+        ),
     }
 }
 
@@ -969,7 +1018,11 @@ fn read_line_capped<R: BufRead>(
 /// gets a **sink** that writes streamed partial-response lines straight
 /// to the transport (flushed per line, so chunks reach the client before
 /// scoring finishes); the handler's return value is the terminal line.
-fn pump<R: BufRead, W: Write>(
+///
+/// `pub(crate)`: this is the connection-handoff seam the fleet router
+/// ([`crate::fleet`]) reuses to drive its own per-client proxy loop over
+/// the identical line protocol.
+pub(crate) fn pump<R: BufRead, W: Write>(
     mut handle: impl FnMut(&Json, &mut dyn FnMut(&Json) -> Result<()>) -> Json,
     mut reader: R,
     mut writer: W,
@@ -1043,6 +1096,14 @@ pub struct ServeOpts {
     /// Stop accepting after this many connections (tests and benches;
     /// `None` = serve forever).
     pub max_conns: Option<u64>,
+    /// Socket read/write timeout on accepted TCP connections (`None` =
+    /// off, the default — and stdin serving never times out). Without
+    /// one, a client that stalls mid-line (or goes silent while holding
+    /// the socket open) pins a `serve_listener` worker thread forever;
+    /// with one, the blocked read errors out, the connection is dropped
+    /// and logged, and the worker moves on. This is an **idle** timeout:
+    /// any completed request/response resets it.
+    pub io_timeout: Option<Duration>,
 }
 
 impl Default for ServeOpts {
@@ -1052,6 +1113,7 @@ impl Default for ServeOpts {
             flush: Duration::from_millis(2),
             batching: true,
             max_conns: None,
+            io_timeout: None,
         }
     }
 }
@@ -1096,6 +1158,17 @@ pub fn serve_listener(
                 while let Some(stream) = conns.pop() {
                     let peer =
                         stream.peer_addr().map(|a| a.to_string()).unwrap_or_default();
+                    // A failed timeout configuration is a broken socket;
+                    // drop the connection rather than serve it unbounded.
+                    if let Some(t) = opts.io_timeout {
+                        let set = stream
+                            .set_read_timeout(Some(t))
+                            .and_then(|_| stream.set_write_timeout(Some(t)));
+                        if let Err(e) = set {
+                            log::warn!("client {peer}: cannot set io timeout: {e:#}");
+                            continue;
+                        }
+                    }
                     let served = serve_stream(registry, opts.batching.then_some(&batcher), stream);
                     match served {
                         Ok(n) => log::info!("client {peer}: {n} requests"),

@@ -335,6 +335,11 @@ pub struct ModelRegistry<'rt> {
     /// Active tuned policy driving `{"op":"load","auto":true}` picks;
     /// `Arc`-shared so in-flight picks survive a concurrent swap.
     policy: Mutex<Option<Arc<TunedPolicy>>>,
+    /// Where the active policy came from (the `--policy` file path);
+    /// `None` for live installs (`{"op":"tune"}`/`{"op":"policy"}`).
+    /// Reported by `{"op":"stats"}` so fleet-wide aggregation can name
+    /// the artifact behind a policy-skew finding.
+    policy_source: Mutex<Option<String>>,
 }
 
 impl<'rt> ModelRegistry<'rt> {
@@ -354,6 +359,7 @@ impl<'rt> ModelRegistry<'rt> {
             loaded_cv: Condvar::new(),
             cache: None,
             policy: Mutex::new(None),
+            policy_source: Mutex::new(None),
         }
     }
 
@@ -390,16 +396,36 @@ impl<'rt> ModelRegistry<'rt> {
         self
     }
 
+    /// Attach a tuned policy together with its provenance (the artifact
+    /// path the CLI loaded it from) — `{"op":"stats"}` reports both.
+    pub fn with_policy_sourced(self, policy: Option<TunedPolicy>, source: Option<String>) -> Self {
+        self.set_policy_sourced(policy, source);
+        self
+    }
+
     /// Install (or clear) the active tuned policy — the `{"op":"policy",
     /// "set":...}` / `{"op":"tune"}` swap path. In-flight auto-loads keep
-    /// the policy they already resolved.
+    /// the policy they already resolved. Live installs have no artifact
+    /// source; the source is cleared with the swap.
     pub fn set_policy(&self, policy: Option<TunedPolicy>) {
+        self.set_policy_sourced(policy, None);
+    }
+
+    /// [`ModelRegistry::set_policy`] with provenance.
+    pub fn set_policy_sourced(&self, policy: Option<TunedPolicy>, source: Option<String>) {
         *self.policy.lock().unwrap() = policy.map(Arc::new);
+        *self.policy_source.lock().unwrap() = source;
     }
 
     /// The active tuned policy, if any.
     pub fn policy(&self) -> Option<Arc<TunedPolicy>> {
         self.policy.lock().unwrap().clone()
+    }
+
+    /// Provenance of the active policy (artifact path), if it was loaded
+    /// from a file rather than installed live.
+    pub fn policy_source(&self) -> Option<String> {
+        self.policy_source.lock().unwrap().clone()
     }
 
     /// Packed-byte headroom left under the configured budget (`None` =

@@ -196,6 +196,17 @@ impl TunedPolicy {
         Ok(())
     }
 
+    /// Stable identity of this policy's *content* (entry set, metrics,
+    /// suite): the FNV-1a hash of the canonical JSON serialization
+    /// (`Json` objects serialize key-sorted, so the hash is
+    /// representation-independent). Fleet-wide stats aggregation compares
+    /// fingerprints across workers to detect policy skew — two workers
+    /// serving different frontiers would make `auto` placement
+    /// inconsistent.
+    pub fn fingerprint(&self) -> String {
+        format!("{:016x}", crate::util::fnv1a(self.to_json().dump().as_bytes()))
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("version", Json::num(1.0)),
@@ -381,6 +392,17 @@ mod tests {
         assert!(p.validate().is_err());
         // And from_json re-checks, so a hand-edited artifact fails loudly.
         assert!(TunedPolicy::from_json(&Json::parse(&p.to_json().dump()).unwrap()).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_content_not_representation() {
+        let p = policy();
+        let parsed =
+            TunedPolicy::from_json(&Json::parse(&p.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(p.fingerprint(), parsed.fingerprint(), "round-trip must not change identity");
+        let mut other = policy();
+        other.entries.pop();
+        assert_ne!(p.fingerprint(), other.fingerprint(), "different frontiers must hash apart");
     }
 
     #[test]

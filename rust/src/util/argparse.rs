@@ -19,11 +19,13 @@ struct OptDef {
     help: &'static str,
     default: Option<&'static str>,
     is_flag: bool,
+    is_multi: bool,
 }
 
 /// Parsed arguments.
 pub struct Args {
     values: BTreeMap<String, String>,
+    multi: BTreeMap<String, Vec<String>>,
     flags: Vec<String>,
     pub positional: Vec<String>,
 }
@@ -35,20 +37,33 @@ impl ArgSpec {
 
     /// `--key <value>` option with an optional default.
     pub fn opt(mut self, key: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
-        self.opts.push(OptDef { key, help, default, is_flag: false });
+        self.opts.push(OptDef { key, help, default, is_flag: false, is_multi: false });
+        self
+    }
+
+    /// Repeatable `--key <value>` option: every occurrence is kept, in
+    /// order (`kbitscale fleet --worker a:1 --worker b:2`).
+    pub fn multi(mut self, key: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptDef { key, help, default: None, is_flag: false, is_multi: true });
         self
     }
 
     /// Boolean `--key` flag.
     pub fn flag(mut self, key: &'static str, help: &'static str) -> Self {
-        self.opts.push(OptDef { key, help, default: None, is_flag: true });
+        self.opts.push(OptDef { key, help, default: None, is_flag: true, is_multi: false });
         self
     }
 
     pub fn usage(&self) -> String {
         let mut s = format!("{} — {}\n\noptions:\n", self.name, self.about);
         for o in &self.opts {
-            let kind = if o.is_flag { "" } else { " <value>" };
+            let kind = if o.is_flag {
+                ""
+            } else if o.is_multi {
+                " <value> (repeatable)"
+            } else {
+                " <value>"
+            };
             let dft = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
             s.push_str(&format!("  --{}{}\n      {}{}\n", o.key, kind, o.help, dft));
         }
@@ -58,6 +73,7 @@ impl ArgSpec {
     /// Parse a raw argument list (not including the program/subcommand name).
     pub fn parse(&self, raw: &[String]) -> Result<Args> {
         let mut values = BTreeMap::new();
+        let mut multi: BTreeMap<String, Vec<String>> = BTreeMap::new();
         let mut flags = Vec::new();
         let mut positional = Vec::new();
         for o in &self.opts {
@@ -93,13 +109,17 @@ impl ArgSpec {
                             .ok_or_else(|| anyhow!("--{key} requires a value"))?
                             .clone(),
                     };
-                    values.insert(key.to_string(), v);
+                    if def.is_multi {
+                        multi.entry(key.to_string()).or_default().push(v);
+                    } else {
+                        values.insert(key.to_string(), v);
+                    }
                 }
             } else {
                 positional.push(a.clone());
             }
         }
-        Ok(Args { values, flags, positional })
+        Ok(Args { values, multi, flags, positional })
     }
 }
 
@@ -125,6 +145,12 @@ impl Args {
 
     pub fn flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
+    }
+
+    /// Every occurrence of a repeatable option, in command-line order
+    /// (empty when never given).
+    pub fn occurrences(&self, key: &str) -> Vec<String> {
+        self.multi.get(key).cloned().unwrap_or_default()
     }
 
     /// Comma-separated list helper: `--tiers t0,t1,t2`.
@@ -185,6 +211,17 @@ mod tests {
         assert!(spec().parse(&raw(&["--verbose=1"])).is_err());
         let a = spec().parse(&raw(&[])).unwrap();
         assert!(a.get("dtype").is_err()); // required, no default
+    }
+
+    #[test]
+    fn multi_options_keep_every_occurrence_in_order() {
+        let s = ArgSpec::new("t", "t").multi("worker", "worker address");
+        let a = s.parse(&raw(&["--worker", "a:1", "--worker=b:2", "--worker", "c:3"])).unwrap();
+        assert_eq!(a.occurrences("worker"), vec!["a:1", "b:2", "c:3"]);
+        let s = ArgSpec::new("t", "t").multi("worker", "worker address");
+        assert!(s.parse(&raw(&[])).unwrap().occurrences("worker").is_empty());
+        let s = ArgSpec::new("t", "t").multi("worker", "worker address");
+        assert!(s.parse(&raw(&["--worker"])).is_err(), "a multi option still needs a value");
     }
 
     #[test]

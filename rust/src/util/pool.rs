@@ -138,6 +138,54 @@ impl<T> BoundedQueue<T> {
     }
 }
 
+/// A one-shot cross-thread shutdown signal: waiters sleep on a condvar
+/// (no polling wakeups) and are released the moment the latch trips.
+/// The fleet router's background prober sleeps on this between probe
+/// rounds so serving shutdown never waits out a sleep slice.
+pub struct Latch {
+    state: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Latch {
+    pub fn new() -> Latch {
+        Latch { state: Mutex::new(false), cv: Condvar::new() }
+    }
+
+    /// Trip the latch, waking every current and future waiter.
+    pub fn set(&self) {
+        *self.state.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+
+    pub fn is_set(&self) -> bool {
+        *self.state.lock().unwrap()
+    }
+
+    /// Sleep up to `dur`; returns `true` (immediately) once the latch is
+    /// tripped, `false` when the full duration elapsed untripped.
+    pub fn wait_timeout(&self, dur: std::time::Duration) -> bool {
+        let deadline = std::time::Instant::now() + dur;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if *st {
+                return true;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            st = self.cv.wait_timeout(st, deadline - now).unwrap().0;
+        }
+    }
+}
+
+impl Default for Latch {
+    fn default() -> Self {
+        Latch::new()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -200,6 +248,30 @@ mod tests {
         assert_eq!(q.pop_timeout(Duration::from_millis(30)), Some(7));
         q.close();
         assert_eq!(q.pop_timeout(Duration::from_millis(30)), None);
+    }
+
+    #[test]
+    fn latch_times_out_untripped_and_releases_on_set() {
+        use std::time::{Duration, Instant};
+        let l = Latch::new();
+        assert!(!l.is_set());
+        let t = Instant::now();
+        assert!(!l.wait_timeout(Duration::from_millis(30)), "untripped latch must time out");
+        assert!(t.elapsed() >= Duration::from_millis(25));
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(20));
+                l.set();
+            });
+            let t = Instant::now();
+            assert!(
+                l.wait_timeout(Duration::from_secs(10)),
+                "set() must release the waiter early"
+            );
+            assert!(t.elapsed() < Duration::from_secs(5), "waiter released long before timeout");
+        });
+        assert!(l.is_set());
+        assert!(l.wait_timeout(Duration::from_millis(1)), "tripped latch returns immediately");
     }
 
     #[test]

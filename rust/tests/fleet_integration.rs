@@ -1,0 +1,388 @@
+//! Fleet-tier integration: in-process `serve_listener` workers on
+//! ephemeral ports behind the [`kbitscale::fleet`] router — routed vs
+//! direct score parity (bit-identical NLLs), mid-stream worker death and
+//! retry-on-next-worker failover, policy-aware placement under per-worker
+//! headroom, and fleet-wide stats aggregation with policy-skew detection.
+//!
+//! Worker processes are simulated by leaked registries served from
+//! detached threads (they idle until the test binary exits), so workers
+//! "serve forever" exactly like real `kbitscale serve --tcp` processes
+//! while each test joins only what it owns.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use kbitscale::fleet::{serve_fleet, Fleet, FleetConn, FleetOpts, WorkerSpec};
+use kbitscale::models::families::Family;
+use kbitscale::models::init::init_params;
+use kbitscale::models::manifest::Manifest;
+use kbitscale::quant::codebook::DataType;
+use kbitscale::quant::QuantSpec;
+use kbitscale::runtime::Runtime;
+use kbitscale::server::{serve_listener, ModelRegistry, ParamLoader, ServeOpts};
+use kbitscale::tune::{PolicyEntry, TunedPolicy};
+use kbitscale::util::json::Json;
+
+/// A "worker process": leaked registry + runtime served from a detached
+/// thread on an ephemeral port, alive until the test binary exits.
+fn spawn_worker(
+    budget: Option<usize>,
+    policy: Option<TunedPolicy>,
+    source: Option<&str>,
+) -> (&'static ModelRegistry<'static>, String) {
+    let manifest = Manifest::load(std::path::Path::new("artifacts"))
+        .expect("run `make artifacts` first");
+    let rt: &'static Runtime = Box::leak(Box::new(Runtime::cpu().unwrap()));
+    let mref = manifest.clone();
+    let loader: ParamLoader<'static> = Box::new(move |family: &str, tier: &str| {
+        // Init-only params: deterministic, so every worker holds
+        // bit-identical weights — the parity tests depend on this.
+        Ok(init_params(mref.tier(tier)?, Family::get(family)?))
+    });
+    let reg: &'static ModelRegistry<'static> = Box::leak(Box::new(
+        ModelRegistry::new(rt, &manifest, loader)
+            .with_memory_budget(budget)
+            .with_policy_sourced(policy, source.map(String::from)),
+    ));
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts: &'static ServeOpts = Box::leak(Box::new(ServeOpts {
+        workers: 4,
+        flush: Duration::from_millis(1),
+        batching: true,
+        max_conns: None,
+        io_timeout: Some(Duration::from_secs(30)),
+    }));
+    std::thread::spawn(move || {
+        let _ = serve_listener(reg, listener, opts);
+    });
+    (reg, addr)
+}
+
+fn fleet_for(addrs: &[&str], policy: Option<TunedPolicy>) -> Fleet {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let specs = addrs.iter().map(|a| WorkerSpec::parse(a).unwrap()).collect();
+    Fleet::new(
+        &manifest,
+        specs,
+        policy,
+        FleetOpts {
+            io_timeout: Some(Duration::from_secs(10)),
+            probe_interval: Duration::from_millis(200),
+            push_policy: false,
+            ..FleetOpts::default()
+        },
+    )
+}
+
+/// One request/response against a line-protocol TCP endpoint.
+fn roundtrip(
+    reader: &mut BufReader<TcpStream>,
+    writer: &mut TcpStream,
+    req: &str,
+) -> Json {
+    writeln!(writer, "{req}").unwrap();
+    let mut line = String::new();
+    assert!(reader.read_line(&mut line).unwrap() > 0, "endpoint hung up on {req:?}");
+    Json::parse(line.trim()).unwrap()
+}
+
+fn connect(addr: &str) -> (BufReader<TcpStream>, TcpStream) {
+    let stream = TcpStream::connect(addr).unwrap();
+    (BufReader::new(stream.try_clone().unwrap()), stream)
+}
+
+const ROWS: &str = "[[1,2,3],[4,5,6],[7,8],[9,10],[11]]";
+
+#[test]
+fn routed_scores_match_direct_worker_bit_for_bit() {
+    let (reg_a, addr_a) = spawn_worker(None, None, None);
+    let (reg_b, addr_b) = spawn_worker(None, None, None);
+    let spec = QuantSpec::new(DataType::Fp, 4, Some(64));
+    let key = reg_a.load("gpt2like", "t0", spec.clone()).unwrap().key();
+    reg_b.load("gpt2like", "t0", spec).unwrap();
+
+    // Router over both workers, served on its own ephemeral port. The
+    // test owns exactly the connections it opens, so max_conns joins the
+    // router thread deterministically.
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let fleet = Fleet::new(
+        &manifest,
+        vec![WorkerSpec::parse(&addr_a).unwrap(), WorkerSpec::parse(&addr_b).unwrap()],
+        None,
+        FleetOpts {
+            io_timeout: Some(Duration::from_secs(10)),
+            probe_interval: Duration::from_secs(60),
+            push_policy: false,
+            max_conns: Some(1),
+            ..FleetOpts::default()
+        },
+    );
+    fleet.probe();
+    assert_eq!(fleet.topology().up_ids().len(), 2, "both workers must probe up");
+    assert!(
+        fleet.topology().snapshot().iter().all(|w| w.resident.contains(&key)),
+        "probes must discover residency"
+    );
+
+    let router_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let router_addr = router_listener.local_addr().unwrap().to_string();
+    std::thread::scope(|s| {
+        let router = s.spawn(|| serve_fleet(&fleet, router_listener));
+        let (mut rr, mut rw) = connect(&router_addr);
+
+        // The router answers its own ping with fleet health.
+        let pong = roundtrip(&mut rr, &mut rw, r#"{"op":"ping"}"#);
+        assert!(pong.get("ok").unwrap().as_bool().unwrap(), "{pong:?}");
+        assert_eq!(pong.get("role").unwrap().as_str().unwrap(), "router");
+        assert_eq!(pong.get("workers_up").unwrap().as_usize().unwrap(), 2);
+
+        // Direct reference response from worker A.
+        let (mut dr, mut dw) = connect(&addr_a);
+        let direct = roundtrip(
+            &mut dr,
+            &mut dw,
+            &format!(r#"{{"op":"score","model":"{key}","rows":{ROWS}}}"#),
+        );
+        assert!(direct.opt("error").is_none(), "{direct:?}");
+
+        // Buffered multi-row through the router scatters across both
+        // replicas and must reassemble to the identical response.
+        let routed = roundtrip(
+            &mut rr,
+            &mut rw,
+            &format!(r#"{{"op":"score","model":"{key}","rows":{ROWS}}}"#),
+        );
+        assert!(routed.opt("error").is_none(), "{routed:?}");
+        assert_eq!(routed.get("rows_scored").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(
+            routed.get("rows").unwrap().dump(),
+            direct.get("rows").unwrap().dump(),
+            "scattered rows must be bit-identical to the direct worker"
+        );
+        assert_eq!(
+            routed.get("nll").unwrap().as_f64().unwrap(),
+            direct.get("nll").unwrap().as_f64().unwrap(),
+            "summed NLL must match bit-for-bit (same addition order)"
+        );
+
+        // Streamed multi-row: chunks renumbered into global row order
+        // with one terminal summary; row payloads identical to direct.
+        let stream_req =
+            format!(r#"{{"op":"score","model":"{key}","rows":{ROWS},"stream":true,"chunk":1}}"#);
+        writeln!(rw, "{stream_req}").unwrap();
+        let mut streamed_rows: Vec<Json> = Vec::new();
+        let mut chunk_no = 0usize;
+        let done = loop {
+            let mut line = String::new();
+            assert!(rr.read_line(&mut line).unwrap() > 0, "router hung up mid-stream");
+            let j = Json::parse(line.trim()).unwrap();
+            if j.opt("done").is_some() {
+                break j;
+            }
+            assert_eq!(j.get("chunk").unwrap().as_usize().unwrap(), chunk_no, "chunk order");
+            assert_eq!(
+                j.get("first_row").unwrap().as_usize().unwrap(),
+                streamed_rows.len(),
+                "row order across replica blocks"
+            );
+            streamed_rows.extend(j.get("rows").unwrap().as_arr().unwrap().iter().cloned());
+            chunk_no += 1;
+        };
+        assert!(done.opt("error").is_none(), "{done:?}");
+        assert_eq!(done.get("rows_scored").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(done.get("chunks").unwrap().as_usize().unwrap(), 5, "chunk:1 over 5 rows");
+        assert_eq!(
+            done.get("nll").unwrap().as_f64().unwrap(),
+            direct.get("nll").unwrap().as_f64().unwrap()
+        );
+        let direct_rows = direct.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(Json::Arr(streamed_rows).dump(), Json::Arr(direct_rows.to_vec()).dump());
+
+        // models aggregation names the owning worker per entry.
+        let models = roundtrip(&mut rr, &mut rw, r#"{"op":"models"}"#);
+        let entries = models.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 2, "one resident variant per worker: {models:?}");
+        assert!(entries.iter().all(|e| e.opt("worker").is_some()));
+
+        drop(rw);
+        drop(rr);
+        router.join().unwrap().unwrap();
+    });
+}
+
+/// A fake worker that answers one chunk line and then drops the
+/// connection mid-stream (or drops buffered requests outright) —
+/// deterministic "worker dies mid-request" behavior no real
+/// `serve_listener` can produce on demand.
+fn crashy_worker(listener: TcpListener) {
+    for stream in listener.incoming() {
+        let Ok(stream) = stream else { return };
+        let Ok(clone) = stream.try_clone() else { continue };
+        let mut reader = BufReader::new(clone);
+        let mut writer = stream;
+        let mut line = String::new();
+        if reader.read_line(&mut line).unwrap_or(0) == 0 {
+            continue;
+        }
+        if line.contains("\"stream\":true") {
+            let chunk = r#"{"chunk":0,"first_row":0,"rows":[{"ce":1.5,"greedy_hits":0,"nll":1.5,"ppl":4.4817,"tokens_scored":1}]}"#;
+            let _ = writeln!(writer, "{chunk}");
+            let _ = writer.flush();
+        }
+        // Connection dropped here: mid-stream for streamed requests,
+        // before any response for buffered ones.
+    }
+}
+
+#[test]
+fn worker_death_mid_stream_fails_over_to_healthy_replica() {
+    let (_reg_a, addr_a) = spawn_worker(None, None, None);
+    let crashy = TcpListener::bind("127.0.0.1:0").unwrap();
+    let crashy_addr = crashy.local_addr().unwrap().to_string();
+    std::thread::spawn(move || crashy_worker(crashy));
+
+    let fleet = fleet_for(&[&addr_a, &crashy_addr], None);
+    let key = "gpt2like_t0@fp:4:b64";
+    // Seed the roster by hand (no probe): the crashy worker is the only
+    // replica, the healthy worker is up but holds nothing relevant.
+    fleet.topology().note_loaded(0, "gpt2like_t0@int:3:b32");
+    fleet.topology().note_loaded(1, key);
+
+    let mut conn = FleetConn::new(&fleet);
+    let req = Json::parse(&format!(
+        r#"{{"op":"score","model":"{key}","rows":[[1,2],[3,4],[5,6]],"stream":true,"chunk":1}}"#
+    ))
+    .unwrap();
+    let mut lines: Vec<Json> = Vec::new();
+    let term = conn.handle_streaming(&req, &mut |j| {
+        lines.push(j.clone());
+        Ok(())
+    });
+    // The crashy replica delivered one chunk then died: the stream must
+    // terminate with an error line, the delivered chunk stands, and the
+    // worker is marked down.
+    assert!(term.get("done").unwrap().as_bool().unwrap(), "{term:?}");
+    assert!(
+        term.get("error").unwrap().as_str().unwrap().contains("mid-stream"),
+        "{term:?}"
+    );
+    assert_eq!(lines.len(), 1, "the chunk emitted before the crash stands");
+    assert_eq!(lines[0].get("chunk").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(fleet.topology().up_ids(), vec![0], "crashy worker must be marked down");
+
+    // The *same connection* survives; the next request fails over: the
+    // healthy worker does not hold the variant, so the router replays
+    // the load derived from the registry key, then scores there.
+    let resp = conn.handle(
+        &Json::parse(&format!(
+            r#"{{"op":"score","model":"{key}","rows":[[1,2],[3,4],[5,6]]}}"#
+        ))
+        .unwrap(),
+    );
+    assert!(resp.opt("error").is_none(), "failover must succeed: {resp:?}");
+    assert_eq!(resp.get("rows_scored").unwrap().as_usize().unwrap(), 3);
+    assert!(
+        fleet.topology().snapshot()[0].resident.contains(key),
+        "failover load must be recorded in the roster"
+    );
+
+    // Single-row traffic keeps flowing on the survivor too.
+    let resp = conn.handle(
+        &Json::parse(&format!(r#"{{"op":"score","model":"{key}","tokens":[1,5,9]}}"#)).unwrap(),
+    );
+    assert!(resp.opt("ce").is_some(), "{resp:?}");
+}
+
+fn test_policy(param_count: usize) -> TunedPolicy {
+    let entry = |bits: usize, metric: f64, bpp: f64| PolicyEntry {
+        bits,
+        dtype: DataType::Fp,
+        block: Some(64),
+        stage_bits: None,
+        metric,
+        total_bits: bpp * param_count as f64,
+        bits_per_param: bpp,
+    };
+    TunedPolicy {
+        suite: "ppl".into(),
+        tuned_on: vec!["gpt2like_t0".into()],
+        entries: vec![entry(4, 0.55, 4.25), entry(16, 0.60, 16.0)],
+    }
+}
+
+#[test]
+fn auto_load_placement_respects_per_worker_headroom() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let tier = manifest.tier("t0").unwrap();
+    let bytes = |bpp: f64| (bpp * tier.param_count as f64 / 8.0).ceil() as usize;
+    let policy = test_policy(tier.param_count);
+
+    // Worker A's budget fits only the 4-bit entry; worker B fits the
+    // full frontier.
+    let (_, addr_a) = spawn_worker(Some(bytes(4.25) + 4096), Some(policy.clone()), None);
+    let (_, addr_b) = spawn_worker(Some(bytes(16.0) + 4096), Some(policy.clone()), None);
+    let fleet = fleet_for(&[&addr_a, &addr_b], Some(policy));
+    fleet.probe();
+    let snap = fleet.topology().snapshot();
+    assert!(snap.iter().all(|w| w.up), "{snap:?}");
+    assert_eq!(snap[0].budget_bytes, Some(bytes(4.25) + 4096), "probed budget wins");
+
+    // The frontier-best 16-bit entry fits only worker B → placed there,
+    // and B's own policy picks the 16-bit config.
+    let mut conn = FleetConn::new(&fleet);
+    let resp = conn.handle(
+        &Json::parse(r#"{"op":"load","auto":true,"family":"gpt2like","tier":"t0"}"#).unwrap(),
+    );
+    assert!(resp.opt("error").is_none(), "{resp:?}");
+    assert_eq!(resp.get("worker").unwrap().as_str().unwrap(), addr_b);
+    assert!(
+        resp.get("model").unwrap().as_str().unwrap().ends_with("fp:16:bnone"),
+        "{resp:?}"
+    );
+
+    // With B gone, placement spills down the frontier to the 4-bit
+    // entry worker A's headroom can hold.
+    fleet.topology().mark_down(1, "killed for the test");
+    let resp = conn.handle(
+        &Json::parse(r#"{"op":"load","auto":true,"family":"gpt2like","tier":"t0"}"#).unwrap(),
+    );
+    assert!(resp.opt("error").is_none(), "{resp:?}");
+    assert_eq!(resp.get("worker").unwrap().as_str().unwrap(), addr_a);
+    assert!(
+        resp.get("model").unwrap().as_str().unwrap().ends_with("fp:4:b64"),
+        "spill to the frontier entry that fits: {resp:?}"
+    );
+}
+
+#[test]
+fn fleet_stats_detects_and_heals_policy_skew() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let policy = test_policy(manifest.tier("t0").unwrap().param_count);
+    // A runs the policy (from a named artifact), B runs none: skew.
+    let (_, addr_a) = spawn_worker(None, Some(policy.clone()), Some("runs/policy.json"));
+    let (_, addr_b) = spawn_worker(None, None, None);
+    let fleet = fleet_for(&[&addr_a, &addr_b], None);
+    fleet.probe();
+
+    let mut conn = FleetConn::new(&fleet);
+    let stats = conn.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
+    assert!(stats.get("policy_skew").unwrap().as_bool().unwrap(), "{stats:?}");
+    assert_eq!(stats.get("workers_up").unwrap().as_usize().unwrap(), 2);
+    assert_eq!(stats.get("workers").unwrap().as_arr().unwrap().len(), 2);
+    let a_stats = stats.get("workers").unwrap().as_arr().unwrap()[0].get("stats").unwrap();
+    assert_eq!(
+        a_stats.get("policy").unwrap().get("source").unwrap().as_str().unwrap(),
+        "runs/policy.json",
+        "skew reports must name the artifact behind each worker's policy"
+    );
+
+    // Broadcasting a policy through the router heals the skew.
+    let set = format!(r#"{{"op":"policy","set":{}}}"#, policy.to_json().dump());
+    let resp = conn.handle(&Json::parse(&set).unwrap());
+    assert!(resp.opt("error").is_none(), "{resp:?}");
+    assert!(!resp.get("policy_skew").unwrap().as_bool().unwrap(), "{resp:?}");
+    let stats = conn.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
+    assert!(!stats.get("policy_skew").unwrap().as_bool().unwrap(), "{stats:?}");
+}

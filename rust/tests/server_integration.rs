@@ -71,6 +71,12 @@ fn protocol_roundtrip() {
     assert!(best < 2);
     assert_eq!(choose.get("scores").unwrap().as_arr().unwrap().len(), 2);
 
+    // ping: the fleet router's health probe — cheap, structured, and ok.
+    let pong = s.handle(&Json::parse(r#"{"op":"ping"}"#).unwrap());
+    assert!(pong.get("ok").unwrap().as_bool().unwrap(), "{pong:?}");
+    assert_eq!(pong.get("models").unwrap().as_usize().unwrap(), 1);
+    assert!(pong.opt("resident_bytes_total").is_some());
+
     // errors are structured, not panics
     let err = s.handle(&Json::parse(r#"{"op":"nope"}"#).unwrap());
     assert!(err.get("error").unwrap().as_str().unwrap().contains("unknown op"));
@@ -217,6 +223,7 @@ fn registry_serves_concurrent_clients_from_multiple_models() {
         flush: Duration::from_millis(3),
         batching: true,
         max_conns: Some(2),
+        ..ServeOpts::default()
     };
     let barrier_owned = Barrier::new(2);
     let barrier = &barrier_owned;
@@ -494,6 +501,7 @@ fn batched_serving_publishes_and_hits_the_cache() {
         flush: Duration::from_millis(1),
         batching: true,
         max_conns: Some(1),
+        ..ServeOpts::default()
     };
     std::thread::scope(|s| {
         let server = s.spawn(|| serve_listener(&reg, listener, &opts));
@@ -538,6 +546,7 @@ fn tcp_streamed_request_returns_chunks_before_summary() {
         flush: Duration::from_millis(1),
         batching: true,
         max_conns: Some(1),
+        ..ServeOpts::default()
     };
     std::thread::scope(|s| {
         let server = s.spawn(|| serve_listener(&reg, listener, &opts));
@@ -673,6 +682,97 @@ fn pipeline_variant_loads_scores_and_accounts_per_stage() {
         err.get("error").unwrap().as_str().unwrap().contains("pipeline"),
         "{err:?}"
     );
+}
+
+#[test]
+fn stats_reports_policy_identity() {
+    use kbitscale::tune::{PolicyEntry, TunedPolicy};
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let reg = registry(&rt, &manifest);
+    let mut conn = Connection::new(&reg, None);
+
+    // No policy: stats reports null, so fleet aggregation can tell
+    // "policy-less" apart from "policy unknown".
+    let stats = conn.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
+    assert_eq!(stats.get("policy").unwrap(), &Json::Null, "{stats:?}");
+
+    let policy = TunedPolicy {
+        suite: "ppl".into(),
+        tuned_on: vec!["gpt2like_t0".into()],
+        entries: vec![PolicyEntry {
+            bits: 4,
+            dtype: DataType::Fp,
+            block: Some(64),
+            stage_bits: None,
+            metric: 0.5,
+            total_bits: 4.25e5,
+            bits_per_param: 4.25,
+        }],
+    };
+    let fp = policy.fingerprint();
+    reg.set_policy_sourced(Some(policy), Some("runs/policy.json".into()));
+    let stats = conn.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
+    let p = stats.get("policy").unwrap();
+    assert_eq!(p.get("entries").unwrap().as_usize().unwrap(), 1);
+    assert_eq!(p.get("hash").unwrap().as_str().unwrap(), fp);
+    assert_eq!(p.get("source").unwrap().as_str().unwrap(), "runs/policy.json");
+
+    // A live install (no artifact behind it) clears the source but keeps
+    // the content hash.
+    let set = format!(
+        r#"{{"op":"policy","set":{}}}"#,
+        conn.handle(&Json::parse(r#"{"op":"policy"}"#).unwrap()).get("policy").unwrap().dump()
+    );
+    let resp = conn.handle(&Json::parse(&set).unwrap());
+    assert!(resp.opt("error").is_none(), "{resp:?}");
+    let stats = conn.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
+    let p = stats.get("policy").unwrap();
+    assert_eq!(p.get("hash").unwrap().as_str().unwrap(), fp);
+    assert_eq!(p.get("source").unwrap(), &Json::Null);
+}
+
+#[test]
+fn io_timeout_drops_stalled_client_without_pinning_worker() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let reg = registry(&rt, &manifest);
+    reg.load("gpt2like", "t0", QuantSpec::new(DataType::Fp, 4, Some(64))).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    // One worker thread, one connection: without the io timeout a silent
+    // client would pin the worker (and this test) forever.
+    let opts = ServeOpts {
+        workers: 1,
+        flush: Duration::from_millis(1),
+        batching: false,
+        max_conns: Some(1),
+        // Generous enough that a loaded CI runner still delivers the
+        // live request within the window; the stall phase then costs
+        // this long once.
+        io_timeout: Some(Duration::from_secs(2)),
+    };
+    std::thread::scope(|s| {
+        let server = s.spawn(|| serve_listener(&reg, listener, &opts));
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        // A request before the stall proves the connection was live.
+        writeln!(writer, "{{\"op\":\"ping\"}}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("\"ok\":true"), "{line}");
+        // Now stall: send a partial line and go silent. The server's
+        // read times out and drops the connection (read returns 0), so
+        // serve_listener's one worker is released and the scope joins.
+        write!(writer, "{{\"op\":\"inf").unwrap();
+        writer.flush().unwrap();
+        let mut rest = String::new();
+        let n = reader.read_line(&mut rest).unwrap();
+        assert_eq!(n, 0, "server must hang up on a stalled client, got {rest:?}");
+        server.join().unwrap().unwrap();
+    });
 }
 
 // ---------------------------------------------------------------------------

@@ -6,6 +6,11 @@
 //! CPU interpret path validates numerics + storage layout, and the
 //! bits-loaded column is the hardware-independent quantity the claim is
 //! proportional to.
+//!
+//! A native section (no artifacts needed) times the `quant::fused`
+//! dequantize-matmul kernel — scalar vs AVX2 vs the classic
+//! `dequantize_into` + GEMM composition — and spot-checks that all three
+//! produce bit-identical outputs.
 
 use kbitscale::models::manifest::Manifest;
 use kbitscale::quant::codebook::{Codebook, DataType};
@@ -56,6 +61,63 @@ fn main() -> anyhow::Result<()> {
         std::hint::black_box(unpack_bits(&packed, 4, n).unwrap());
     });
     println!("{:<26} {:>12.1} {:>14.2}", "unpack 4-bit stream", dtu * 1e3, (n * 4) as f64 / dtu / 1e9);
+
+    // ---- Native fused dequant-matmul kernel (no artifacts needed) ----
+    {
+        use kbitscale::quant::fused::{self, Backend};
+        use kbitscale::quant::packing::PackedTensor;
+
+        let (m, kd, nn) = (8usize, 1024usize, 1024usize);
+        let mut x = vec![0.0f32; m * kd];
+        let mut wn = vec![0.0f32; kd * nn];
+        rng.fill_normal(&mut x, 1.0);
+        rng.fill_normal(&mut wn, 0.05);
+        let p = PackedTensor::quantize(&wn, &QuantSpec::new(DataType::Fp, 4, Some(64)))?;
+        let backend = fused::active_backend();
+        println!("\nnative fused kernel ({m}x{kd}x{nn}, fp4 b64, auto backend {backend:?}):");
+        println!("{:<26} {:>12}", "path", "ms");
+        let mut dense = vec![0.0f32; kd * nn];
+        let mut out = vec![0.0f32; m * nn];
+        let mut wrow: Vec<f32> = Vec::new();
+        let t_unfused = bench_best(2, 9, || {
+            p.dequantize_into(&mut dense).unwrap();
+            out.fill(0.0);
+            fused::matmul_f32_with(Backend::Scalar, &x, &dense, &mut out, m, kd, nn);
+            std::hint::black_box(&out);
+        });
+        println!("{:<26} {:>12.2}", "dequantize_into + GEMM", t_unfused * 1e3);
+        let t_scalar = bench_best(2, 9, || {
+            out.fill(0.0);
+            fused::fused_matmul_with(Backend::Scalar, &x, &p, &mut out, m, kd, nn, &mut wrow)
+                .unwrap();
+            std::hint::black_box(&out);
+        });
+        println!("{:<26} {:>12.2}", "fused scalar", t_scalar * 1e3);
+        if fused::avx2_available() {
+            let t_avx = bench_best(2, 9, || {
+                out.fill(0.0);
+                fused::fused_matmul_with(Backend::Avx2, &x, &p, &mut out, m, kd, nn, &mut wrow)
+                    .unwrap();
+                std::hint::black_box(&out);
+            });
+            println!("{:<26} {:>12.2}", "fused avx2", t_avx * 1e3);
+        } else {
+            println!("{:<26} {:>12}", "fused avx2", "n/a (no AVX2)");
+        }
+        // Bit-identity spot check: the honest part of the speedup claim.
+        let mut a = vec![0.0f32; m * nn];
+        p.dequantize_into(&mut dense)?;
+        fused::matmul_f32_with(Backend::Scalar, &x, &dense, &mut a, m, kd, nn);
+        let mut b = vec![0.0f32; m * nn];
+        fused::fused_matmul_with(Backend::Scalar, &x, &p, &mut b, m, kd, nn, &mut wrow)?;
+        anyhow::ensure!(a == b, "scalar fused output diverged from dequantize_into + GEMM");
+        if fused::avx2_available() {
+            let mut c = vec![0.0f32; m * nn];
+            fused::fused_matmul_with(Backend::Avx2, &x, &p, &mut c, m, kd, nn, &mut wrow)?;
+            anyhow::ensure!(a == c, "avx2 fused output diverged from the scalar reference");
+        }
+        println!("bit-identity: all fused paths agree on {} outputs", m * nn);
+    }
 
     // ---- Fused kernel path (needs artifacts) ----
     let Ok(manifest) = Manifest::load(std::path::Path::new("artifacts")) else {

@@ -15,9 +15,15 @@
 //! * **pipeline plans** — the same traffic against the monolithic vs the
 //!   2-stage sharded build of one spec; the activation handoff should
 //!   cost < 10% added p50 latency.
+//! * **fused native backend** — the same traffic against the `#fused`
+//!   build of one spec (packed weights walked in the matmul inner loop,
+//!   no f32 expansion) vs the classic dequantize→executable resident.
 //! * **streamed vs buffered** — one 48-row request with `stream:true` vs
 //!   buffered; streaming should put the first partial scores on the wire
 //!   well before the buffered response completes.
+//! * **binary score frames** — the same 48-row streamed request over
+//!   negotiated `bin1` frames vs JSON lines; reports the wire bytes each
+//!   format spends on chunk payloads.
 //! * **tuned policy vs fixed precision** — a quick autotuner search
 //!   (ppl-only calibration) emits a Pareto policy; serving the policy's
 //!   pick under a byte budget is compared head-to-head with fixed 4-bit
@@ -29,7 +35,12 @@
 //!
 //! Init-only parameters are used (throughput does not depend on training),
 //! so this bench needs artifacts but no checkpoints.
+//!
+//! Pass `--json <path>` to also write the headline numbers as a JSON
+//! snapshot (the `BENCH_serve_throughput.json` baseline checked into the
+//! repo root is regenerated this way on real hardware).
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::time::{Duration, Instant};
@@ -40,7 +51,8 @@ use kbitscale::models::manifest::Manifest;
 use kbitscale::quant::codebook::DataType;
 use kbitscale::quant::QuantSpec;
 use kbitscale::runtime::Runtime;
-use kbitscale::server::{serve_listener, ModelRegistry, ParamLoader, PlanRequest, ServeOpts};
+use kbitscale::server::{frames, serve_listener, ModelRegistry, ParamLoader, PlanRequest, ServeOpts};
+use kbitscale::util::json::Json;
 
 const REQS_PER_CLIENT: usize = 40;
 
@@ -53,6 +65,13 @@ fn make_loader(manifest: &Manifest) -> ParamLoader<'static> {
 
 fn main() -> anyhow::Result<()> {
     kbitscale::util::progress::init_logging();
+    let argv: Vec<String> = std::env::args().collect();
+    let json_path = argv
+        .iter()
+        .position(|a| a == "--json")
+        .map(|i| argv.get(i + 1).cloned().expect("--json needs a path argument"));
+    // Headline numbers accumulate here; `--json` dumps them at the end.
+    let mut snap: BTreeMap<String, Json> = BTreeMap::new();
     let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
     let rt = Runtime::cpu()?;
     // No score cache on the main registry: the throughput table measures
@@ -81,6 +100,7 @@ fn main() -> anyhow::Result<()> {
     );
     let mut seq_1 = 0.0f64;
     let mut batched_4 = 0.0f64;
+    let mut table: Vec<Json> = Vec::new();
     for &clients in &[1usize, 4, 16] {
         for &batching in &[false, true] {
             let (rps, p50, p95) = run_trial(&registry, clients, batching, false, None)?;
@@ -94,8 +114,17 @@ fn main() -> anyhow::Result<()> {
                 "{clients:<8} {:>9} {rps:>10.1} {p50:>10.2} {p95:>10.2}",
                 if batching { "on" } else { "off" }
             );
+            table.push(Json::obj(vec![
+                ("clients", Json::Num(clients as f64)),
+                ("batching", Json::Bool(batching)),
+                ("req_per_s", Json::Num(rps)),
+                ("p50_ms", Json::Num(p50)),
+                ("p95_ms", Json::Num(p95)),
+            ]));
         }
     }
+    snap.insert("throughput".to_string(), Json::Arr(table));
+    snap.insert("batched4_vs_seq1".to_string(), Json::Num(batched_4 / seq_1.max(1e-9)));
     println!();
     println!(
         "batched 4-client throughput vs sequential path: {:.2}x (target >= 2x)",
@@ -113,6 +142,7 @@ fn main() -> anyhow::Result<()> {
          (p50 {cp50:.3} ms) | {:.1}x (target >= 5x)",
         cached_rps / uncached_rps.max(1e-9)
     );
+    snap.insert("cache_speedup".to_string(), Json::Num(cached_rps / uncached_rps.max(1e-9)));
 
     // --- pipeline plans: monolithic vs 2-stage sharded ------------------
     println!();
@@ -138,15 +168,64 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // --- fused native backend vs the unfused executable path ------------
+    println!();
+    {
+        let fused = registry.load_plan(
+            "gpt2like",
+            "t0",
+            QuantSpec::new(DataType::Fp, 4, Some(64)),
+            &PlanRequest::fused(),
+        )?;
+        let (base_key, fused_key) = (h0.key(), fused.key());
+        drop(fused);
+        let (u_rps, u_p50, _) = run_trial(&registry, 4, true, false, Some(base_key.as_str()))?;
+        let (f_rps, f_p50, _) = run_trial(&registry, 4, true, false, Some(fused_key.as_str()))?;
+        let backend = format!("{:?}", kbitscale::quant::fused::active_backend());
+        println!(
+            "fused dequant-matmul ({backend}): unfused {u_rps:.1} req/s p50 {u_p50:.2} ms | \
+             fused {f_rps:.1} req/s p50 {f_p50:.2} ms ({:+.1}% p50)",
+            (f_p50 / u_p50.max(1e-9) - 1.0) * 100.0
+        );
+        snap.insert(
+            "fused".to_string(),
+            Json::obj(vec![
+                ("backend", Json::Str(backend)),
+                ("unfused_req_per_s", Json::Num(u_rps)),
+                ("unfused_p50_ms", Json::Num(u_p50)),
+                ("fused_req_per_s", Json::Num(f_rps)),
+                ("fused_p50_ms", Json::Num(f_p50)),
+            ]),
+        );
+    }
+
     // --- streamed vs buffered multi-row responses -----------------------
     println!();
-    let (buf_first, buf_total) = stream_trial(&registry, 48, false)?;
-    let (str_first, str_total) = stream_trial(&registry, 48, true)?;
+    let (buf_first, buf_total, _) = stream_trial(&registry, 48, false, false)?;
+    let (str_first, str_total, json_bytes) = stream_trial(&registry, 48, true, false)?;
     println!(
         "48-row request: buffered first/total {buf_first:.1}/{buf_total:.1} ms | \
          streamed first/total {str_first:.1}/{str_total:.1} ms \
          (first-scores {:.1}x sooner)",
         buf_first / str_first.max(1e-9)
+    );
+
+    // --- binary score frames (bin1) vs JSON chunk lines -----------------
+    println!();
+    let (bin_first, _, bin_bytes) = stream_trial(&registry, 48, true, true)?;
+    println!(
+        "48-row stream, chunk payload bytes on the wire: json {json_bytes} B | \
+         bin1 {bin_bytes} B ({:.2}x smaller; first-chunk {str_first:.1} vs {bin_first:.1} ms)",
+        json_bytes as f64 / bin_bytes.max(1) as f64
+    );
+    snap.insert(
+        "frames".to_string(),
+        Json::obj(vec![
+            ("json_chunk_bytes", Json::Num(json_bytes as f64)),
+            ("bin1_chunk_bytes", Json::Num(bin_bytes as f64)),
+            ("json_first_chunk_ms", Json::Num(str_first)),
+            ("bin1_first_chunk_ms", Json::Num(bin_first)),
+        ]),
     );
 
     // --- eviction churn: budget holds ~one variant ----------------------
@@ -350,8 +429,21 @@ fn main() -> anyhow::Result<()> {
                     "  {n_workers}-worker fleet vs 1 worker: {:.2}x (same total budget)",
                     rps / base_rps.max(1e-9)
                 );
+                snap.insert("fleet_3v1_speedup".to_string(), Json::Num(rps / base_rps.max(1e-9)));
             }
         }
+    }
+
+    if let Some(path) = json_path {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("serve_throughput")),
+            // Honest provenance: true only when this process produced the
+            // numbers above (the checked-in baseline starts as false).
+            ("measured", Json::Bool(true)),
+            ("results", Json::Obj(snap)),
+        ]);
+        std::fs::write(&path, doc.dump() + "\n")?;
+        println!("\nwrote {path}");
     }
     Ok(())
 }
@@ -400,13 +492,18 @@ fn run_trial(
 }
 
 /// One multi-row request against a 1-client server: returns
-/// `(ms to first scored line, ms total)`. With `stream`, the first line
-/// is the first chunk; buffered, the single response is both.
+/// `(ms to first scored line, ms total, chunk payload bytes)`. With
+/// `stream`, the first line is the first chunk; buffered, the single
+/// response is both. With `bin`, the connection negotiates `bin1` frames
+/// first and chunk payloads arrive as binary frames; the byte count
+/// covers chunk payloads only (requests, handshake, and the terminal
+/// done-line are JSON in both modes).
 fn stream_trial(
     registry: &ModelRegistry<'_>,
     rows: usize,
     stream: bool,
-) -> anyhow::Result<(f64, f64)> {
+    bin: bool,
+) -> anyhow::Result<(f64, f64, usize)> {
     let listener = TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?;
     let opts = ServeOpts {
@@ -418,11 +515,18 @@ fn stream_trial(
     };
     let mut first_ms = 0.0f64;
     let mut total_ms = 0.0f64;
+    let mut chunk_bytes = 0usize;
     std::thread::scope(|s| -> anyhow::Result<()> {
         let server = s.spawn(|| serve_listener(registry, listener, &opts));
         let sock = TcpStream::connect(addr)?;
         let mut reader = BufReader::new(sock.try_clone()?);
         let mut writer = sock;
+        if bin {
+            writeln!(writer, "{{\"op\":\"hello\",\"frames\":\"bin1\"}}")?;
+            let mut reply = String::new();
+            reader.read_line(&mut reply)?;
+            anyhow::ensure!(reply.contains("\"bin1\""), "server refused bin1 frames: {reply}");
+        }
         let row_json: Vec<String> = (0..rows)
             .map(|i| format!("[1,{},9,{},3]", 2 + i % 200, 5 + i % 100))
             .collect();
@@ -432,7 +536,16 @@ fn stream_trial(
             "{{\"op\":\"score\",\"rows\":[{}],\"stream\":{stream}}}",
             row_json.join(",")
         )?;
+        let mut frame: Vec<u8> = Vec::new();
         loop {
+            if reader.fill_buf()?.first() == Some(&frames::MAGIC) {
+                frames::read_frame(&mut reader, &mut frame)?;
+                chunk_bytes += frame.len();
+                if first_ms == 0.0 {
+                    first_ms = t0.elapsed().as_secs_f64() * 1e3;
+                }
+                continue;
+            }
             let mut line = String::new();
             if reader.read_line(&mut line)? == 0 {
                 anyhow::bail!("server hung up mid-response");
@@ -442,6 +555,9 @@ fn stream_trial(
             }
             if first_ms == 0.0 {
                 first_ms = t0.elapsed().as_secs_f64() * 1e3;
+            }
+            if line.contains("\"chunk\"") {
+                chunk_bytes += line.len();
             }
             // Buffered: the one response line. Streamed: stop on "done".
             if !stream || line.contains("\"done\":true") {
@@ -454,7 +570,7 @@ fn stream_trial(
         server.join().expect("server thread panicked")?;
         Ok(())
     })?;
-    Ok((first_ms, total_ms))
+    Ok((first_ms, total_ms, chunk_bytes))
 }
 
 fn client_run(

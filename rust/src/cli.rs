@@ -464,6 +464,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             .opt("block", Some("64"), "block size (0 = tensor-wise)")
             .flag("pipeline", "serve the default model pipeline-sharded (per-stage executables)")
             .opt("stage-bits", None, "per-stage bit widths for --pipeline, csv (16 = unquantized stage)")
+            .flag("fused", "score the default model through the fused dequant-matmul backend")
             .opt("preload", None, "extra variants, csv of family:tier[:bits[:dtype[:block]]]")
             .opt("workers", Some("0"), "connection worker threads (0 = auto)")
             .opt("flush-ms", Some("2"), "micro-batch flush window in milliseconds")
@@ -537,7 +538,11 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         }
         None => None,
     };
-    let plan = crate::server::PlanRequest { pipeline: args.flag("pipeline"), stage_bits };
+    let plan = crate::server::PlanRequest {
+        pipeline: args.flag("pipeline"),
+        stage_bits,
+        fused: args.flag("fused"),
+    };
     let default = registry.load_plan(family.name, args.get("tier")?, qspec, &plan)?;
     log::info!(
         "resident {}: {} packed bytes across {} stage(s)",

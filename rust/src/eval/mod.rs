@@ -62,11 +62,17 @@ pub struct EvalResult {
 }
 
 /// The evaluator for one tier: holds the compiled execution plan + batch
-/// geometry.
+/// geometry, and optionally a native fused-kernel backend that scores
+/// packed residency directly (bypassing the XLA executables).
 pub struct Evaluator<'rt> {
     rt: &'rt Runtime,
     plan: ExecutionPlan,
     tier: TierManifest,
+    /// When set (`{"op":"load","fused":true}` variants), every scoring
+    /// call routes through the native fused dequant×matmul backend; the
+    /// parameter-literal argument is ignored (fused variants keep no XLA
+    /// literals resident).
+    native: Option<std::sync::Arc<crate::runtime::native::NativeModel>>,
 }
 
 impl<'rt> Evaluator<'rt> {
@@ -85,7 +91,18 @@ impl<'rt> Evaluator<'rt> {
         pipeline: bool,
     ) -> Result<Self> {
         let plan = ExecutionPlan::compile(rt, manifest, tier, pipeline)?;
-        Ok(Evaluator { rt, plan, tier: tier.clone() })
+        Ok(Evaluator { rt, plan, tier: tier.clone(), native: None })
+    }
+
+    /// Attach the native fused-kernel backend: all scoring (perplexity,
+    /// zero-shot, served rows) dispatches to it instead of the XLA plan.
+    pub fn set_native(&mut self, model: std::sync::Arc<crate::runtime::native::NativeModel>) {
+        self.native = Some(model);
+    }
+
+    /// Whether this evaluator scores through the native fused backend.
+    pub fn is_native(&self) -> bool {
+        self.native.is_some()
     }
 
     /// The compiled execution plan (stage layout + per-stage geometry).
@@ -125,6 +142,10 @@ impl<'rt> Evaluator<'rt> {
         plits: &[xla::Literal],
         rows: &[(Vec<i32>, Vec<f32>)],
     ) -> Result<Vec<(f64, f64)>> {
+        if let Some(native) = &self.native {
+            // Fused variants score natively; `plits` is empty for them.
+            return native.score_rows(rows);
+        }
         let b = self.tier.batch_eval;
         let s = self.tier.seq;
         let mut out = Vec::with_capacity(rows.len());

@@ -39,7 +39,7 @@ use super::Fleet;
 use crate::models::manifest::Manifest;
 use crate::quant::DataType;
 use crate::server::registry::spec_from_parts;
-use crate::server::PlanRequest;
+use crate::server::{frames, Emit, EmitSink, PlanRequest};
 use crate::tune::{Candidate, TunedPolicy};
 use crate::util::json::Json;
 use crate::util::pool;
@@ -64,21 +64,14 @@ impl<'f> FleetConn<'f> {
         self.dispatch(req, None)
     }
 
-    /// Handle one request with streaming support: partial-response lines
-    /// go through `sink`; the terminal line is the return value.
-    pub fn handle_streaming(
-        &mut self,
-        req: &Json,
-        sink: &mut dyn FnMut(&Json) -> Result<()>,
-    ) -> Json {
+    /// Handle one request with streaming support: partial-response units
+    /// (chunk lines, or forwarded worker frames) go through `sink`; the
+    /// terminal line is the return value.
+    pub fn handle_streaming(&mut self, req: &Json, sink: &mut EmitSink<'_>) -> Json {
         self.dispatch(req, Some(sink))
     }
 
-    fn dispatch(
-        &mut self,
-        req: &Json,
-        sink: Option<&mut dyn FnMut(&Json) -> Result<()>>,
-    ) -> Json {
+    fn dispatch(&mut self, req: &Json, sink: Option<&mut EmitSink<'_>>) -> Json {
         self.requests += 1;
         match self.try_handle(req, sink) {
             Ok(resp) => resp,
@@ -86,11 +79,7 @@ impl<'f> FleetConn<'f> {
         }
     }
 
-    fn try_handle(
-        &mut self,
-        req: &Json,
-        sink: Option<&mut dyn FnMut(&Json) -> Result<()>>,
-    ) -> Result<Json> {
+    fn try_handle(&mut self, req: &Json, sink: Option<&mut EmitSink<'_>>) -> Result<Json> {
         match req.get("op")?.as_str()? {
             "ping" => {
                 let snap = self.fleet.topology().snapshot();
@@ -170,7 +159,11 @@ impl<'f> FleetConn<'f> {
     fn ensure_client(&mut self, id: usize) -> Result<()> {
         if !self.clients.contains_key(&id) {
             let addr = self.fleet.topology().addr_of(id)?;
-            let c = WorkerClient::connect(&addr, self.fleet.opts.io_timeout)?;
+            let mut c = WorkerClient::connect(&addr, self.fleet.opts.io_timeout)?;
+            // Streamed chunks from this worker then pass through as
+            // binary frames instead of being re-parsed per hop; a worker
+            // without frame support just stays in JSON mode.
+            c.negotiate_frames()?;
             self.clients.insert(id, c);
         }
         Ok(())
@@ -260,11 +253,7 @@ impl<'f> FleetConn<'f> {
 
     // -- scoring ---------------------------------------------------------
 
-    fn op_score(
-        &mut self,
-        req: &Json,
-        sink: Option<&mut dyn FnMut(&Json) -> Result<()>>,
-    ) -> Result<Json> {
+    fn op_score(&mut self, req: &Json, sink: Option<&mut EmitSink<'_>>) -> Result<Json> {
         if req.opt("rows").is_some() && req.opt("tokens").is_some() {
             bail!(r#"give "tokens" or "rows", not both"#);
         }
@@ -314,7 +303,7 @@ impl<'f> FleetConn<'f> {
         req: &Json,
         key: Option<&str>,
         stream: bool,
-        mut sink: Option<&mut dyn FnMut(&Json) -> Result<()>>,
+        mut sink: Option<&mut EmitSink<'_>>,
     ) -> Result<Json> {
         let fwd = match key {
             Some(k) => with_field(req, "model", Json::str(k)),
@@ -425,15 +414,15 @@ impl<'f> FleetConn<'f> {
         &mut self,
         id: usize,
         req: &Json,
-        sink: &mut dyn FnMut(&Json) -> Result<()>,
+        sink: &mut EmitSink<'_>,
         emitted: &mut usize,
     ) -> Result<Json> {
         let count = std::cell::Cell::new(0usize);
         let r = self.with_reconnect(
             id,
             &mut |c| {
-                let mut counting = |j: &Json| -> Result<()> {
-                    sink(j)?;
+                let mut counting = |e: Emit<'_>| -> Result<()> {
+                    sink(e)?;
                     count.set(count.get() + 1);
                     Ok(())
                 };
@@ -547,11 +536,15 @@ impl<'f> FleetConn<'f> {
     }
 
     /// Streamed multi-row scatter: every replica streams its contiguous
-    /// block concurrently; the router interleaves chunk lines back into
+    /// block concurrently; the router interleaves chunk units back into
     /// global row order (renumbered chunks, re-offset `first_row`) and
-    /// synthesizes the one terminal summary. Any block failure after
-    /// chunks are on the wire terminates the stream with a
-    /// `done`+`error` line; already-emitted chunks stand.
+    /// synthesizes the one terminal summary. On a `bin1` worker
+    /// connection the chunks arrive as binary frames and are forwarded
+    /// verbatim — [`frames::patch_header`] renumbers them in place and
+    /// [`frames::rows_nll_tok`] reads the summary totals, so no float is
+    /// re-serialized on this hop. Any block failure after chunks are on
+    /// the wire terminates the stream with a `done`+`error` line;
+    /// already-emitted chunks stand.
     fn scatter_stream(
         &mut self,
         req: &Json,
@@ -559,7 +552,7 @@ impl<'f> FleetConn<'f> {
         rows: &[Json],
         reps: &[usize],
         snap: &[WorkerView],
-        sink: &mut dyn FnMut(&Json) -> Result<()>,
+        sink: &mut EmitSink<'_>,
     ) -> Json {
         let fleet = self.fleet;
         let blocks = split_blocks(rows.len(), reps.len());
@@ -568,12 +561,13 @@ impl<'f> FleetConn<'f> {
         let addr_of = |id: usize| -> String {
             snap.iter().find(|w| w.id == id).map(|w| w.addr.clone()).unwrap_or_default()
         };
-        // One bounded queue per block: replica threads push re-offset
-        // chunk lines, the main loop drains the queues in block order so
-        // chunks reach the client in global row order while later blocks
-        // keep scoring concurrently (bounded buffering = backpressure,
-        // never unbounded memory).
-        let queues: Vec<pool::BoundedQueue<Json>> =
+        // One bounded queue per block: replica threads push chunk units
+        // (JSON lines re-offset at push; binary frames renumbered at
+        // drain, where the global chunk counter lives), the main loop
+        // drains the queues in block order so chunks reach the client in
+        // global row order while later blocks keep scoring concurrently
+        // (bounded buffering = backpressure, never unbounded memory).
+        let queues: Vec<pool::BoundedQueue<ScatterChunk>> =
             blocks.iter().map(|_| pool::BoundedQueue::new(64)).collect();
         let mut chunks_out = 0usize;
         let mut rows_out = 0usize;
@@ -593,9 +587,13 @@ impl<'f> FleetConn<'f> {
                     // leave the drain loop blocked in pop() forever.
                     let mut run = || -> Result<()> {
                         let mut c = WorkerClient::connect(&addr, io_t)?;
-                        let mut push = |j: &Json| -> Result<()> {
-                            let line = offset_first_row(j, a)?;
-                            if !q.push(line) {
+                        c.negotiate_frames()?;
+                        let mut push = |e: Emit<'_>| -> Result<()> {
+                            let item = match e {
+                                Emit::Line(j) => ScatterChunk::Line(offset_first_row(j, a)?),
+                                Emit::Raw(f) => ScatterChunk::Frame(f.to_vec()),
+                            };
+                            if !q.push(item) {
                                 bail!("stream cancelled");
                             }
                             Ok(())
@@ -612,19 +610,44 @@ impl<'f> FleetConn<'f> {
                 })));
             }
             'blocks: for (i, q) in queues.iter().enumerate() {
-                while let Some(line) = q.pop() {
-                    let line = with_field(&line, "chunk", Json::num(chunks_out as f64));
-                    if let Some(Json::Arr(rs)) = line.opt("rows") {
-                        rows_out += rs.len();
-                        for r in rs {
-                            nll += r.opt("nll").and_then(|v| v.as_f64().ok()).unwrap_or(0.0);
-                            tok += r
-                                .opt("tokens_scored")
-                                .and_then(|v| v.as_f64().ok())
-                                .unwrap_or(0.0);
+                let base = blocks[i].0;
+                while let Some(item) = q.pop() {
+                    let write_failed = match item {
+                        ScatterChunk::Line(line) => {
+                            let line =
+                                with_field(&line, "chunk", Json::num(chunks_out as f64));
+                            if let Some(Json::Arr(rs)) = line.opt("rows") {
+                                rows_out += rs.len();
+                                for r in rs {
+                                    nll += r
+                                        .opt("nll")
+                                        .and_then(|v| v.as_f64().ok())
+                                        .unwrap_or(0.0);
+                                    tok += r
+                                        .opt("tokens_scored")
+                                        .and_then(|v| v.as_f64().ok())
+                                        .unwrap_or(0.0);
+                                }
+                            }
+                            sink(Emit::Line(&line)).is_err()
                         }
-                    }
-                    if sink(&line).is_err() {
+                        ScatterChunk::Frame(mut buf) => {
+                            // Renumber in place; floats stay untouched.
+                            match patch_scatter_frame(&mut buf, chunks_out, base) {
+                                Ok((n, t, nrows)) => {
+                                    nll += n;
+                                    tok += t;
+                                    rows_out += nrows;
+                                    sink(Emit::Raw(&buf)).is_err()
+                                }
+                                Err(e) => {
+                                    failure = Some(format!("bad worker frame: {e:#}"));
+                                    break 'blocks;
+                                }
+                            }
+                        }
+                    };
+                    if write_failed {
                         failure = Some("stream write failed (client gone)".to_string());
                         break 'blocks;
                     }
@@ -708,6 +731,10 @@ impl<'f> FleetConn<'f> {
                 Some(v) => Some(v.usizes()?),
                 None => None,
             },
+            fused: match req.opt("fused") {
+                Some(v) => v.as_bool()?,
+                None => false,
+            },
         };
         if plan.stage_bits.is_some() && !plan.pipeline {
             bail!("stage_bits requires the pipeline plan");
@@ -735,7 +762,7 @@ impl<'f> FleetConn<'f> {
     }
 
     fn op_load_auto(&mut self, req: &Json) -> Result<Json> {
-        for k in ["bits", "dtype", "block", "pipeline", "stage_bits"] {
+        for k in ["bits", "dtype", "block", "pipeline", "stage_bits", "fused"] {
             if req.opt(k).is_some() {
                 bail!(r#""auto":true picks the config from the policy; drop {k:?}"#);
             }
@@ -1141,6 +1168,24 @@ fn offset_first_row(line: &Json, base: usize) -> Result<Json> {
     Ok(with_field(line, "first_row", Json::num((fr + base) as f64)))
 }
 
+/// One queued scatter-stream unit from a replica: a chunk line (JSON
+/// worker connection) or its verbatim binary frame (`bin1` connection).
+enum ScatterChunk {
+    Line(Json),
+    Frame(Vec<u8>),
+}
+
+/// Renumber one forwarded scatter frame into global coordinates (chunk
+/// index and `first_row` base offset, in place — the float payload is
+/// never touched) and return its `(nll, tokens, rows)` totals for the
+/// router-synthesized terminal summary.
+fn patch_scatter_frame(buf: &mut [u8], chunk: usize, base: usize) -> Result<(f64, f64, usize)> {
+    let (_, first_row, _) = frames::chunk_header(buf)?;
+    let sums = frames::rows_nll_tok(buf)?;
+    frames::patch_header(buf, chunk as u32, first_row + base as u32)?;
+    Ok(sums)
+}
+
 /// `family_tier` → `(family, tier)`, resolved against the manifest's
 /// declared tier names so a tier name containing `_` can never
 /// mis-parse the family.
@@ -1159,8 +1204,8 @@ pub(crate) fn split_model_key(manifest: &Manifest, model_key: &str) -> Result<(S
 }
 
 /// The parsed identity of a full registry key
-/// (`family_tier@dtype:bits:bBLOCK[#pipe[..]]`) — what failover needs to
-/// replay the exact variant on another worker.
+/// (`family_tier@dtype:bits:bBLOCK[#pipe[..]][#fused]`) — what failover
+/// needs to replay the exact variant on another worker.
 #[derive(Debug, PartialEq)]
 pub(crate) struct VariantKey {
     pub model_key: String,
@@ -1170,12 +1215,19 @@ pub(crate) struct VariantKey {
     pub block: usize,
     pub pipeline: bool,
     pub stage_bits: Option<Vec<usize>>,
+    pub fused: bool,
 }
 
 pub(crate) fn parse_variant_key(key: &str) -> Result<VariantKey> {
     let (model_key, rest) = key
         .split_once('@')
         .ok_or_else(|| anyhow!("not a full registry key: {key:?}"))?;
+    // The `#fused` marker is always the last suffix component
+    // (`PlanRequest::suffix` appends it after the pipe part).
+    let (rest, fused) = match rest.strip_suffix("#fused") {
+        Some(r) => (r, true),
+        None => (rest, false),
+    };
     let (spec_str, plan_str) = match rest.find('#') {
         Some(i) => (&rest[..i], Some(&rest[i..])),
         None => (rest, None),
@@ -1220,6 +1272,7 @@ pub(crate) fn parse_variant_key(key: &str) -> Result<VariantKey> {
         block,
         pipeline,
         stage_bits,
+        fused,
     })
 }
 
@@ -1244,6 +1297,9 @@ pub(crate) fn load_request_for_key(manifest: &Manifest, key: &str) -> Result<Jso
             "stage_bits",
             Json::Arr(bits.iter().map(|&b| Json::num(b as f64)).collect()),
         ));
+    }
+    if v.fused {
+        pairs.push(("fused", Json::Bool(true)));
     }
     Ok(Json::obj(pairs))
 }
@@ -1400,6 +1456,15 @@ mod tests {
         let v = parse_variant_key("gpt2like_t0@fp:4:b64#pipe[16,4]").unwrap();
         assert!(v.pipeline);
         assert_eq!(v.stage_bits, Some(vec![16, 4]));
+        assert!(!v.fused);
+
+        let v = parse_variant_key("gpt2like_t0@fp:4:b64#fused").unwrap();
+        assert!(v.fused && !v.pipeline && v.stage_bits.is_none());
+        assert_eq!((v.dtype.as_str(), v.bits, v.block), ("fp", 4, 64));
+
+        let v = parse_variant_key("gpt2like_t0@fp:4:b64#pipe[16,4]#fused").unwrap();
+        assert!(v.fused && v.pipeline);
+        assert_eq!(v.stage_bits, Some(vec![16, 4]));
 
         assert!(parse_variant_key("gpt2like_t0").is_err(), "bare model key is not a variant");
         assert!(parse_variant_key("m@fp:4:b64:e3").is_err(), "exponent specs are not replayable");
@@ -1438,5 +1503,20 @@ mod tests {
         let out = offset_first_row(&line, 8).unwrap();
         assert_eq!(out.get("first_row").unwrap().as_usize().unwrap(), 10);
         assert!(offset_first_row(&Json::parse(r#"{"x":1}"#).unwrap(), 0).is_err());
+    }
+
+    #[test]
+    fn patch_scatter_frame_renumbers_and_sums_in_place() {
+        let line = Json::parse(
+            r#"{"chunk":0,"first_row":2,"rows":[{"nll":2.5,"tokens_scored":4,"greedy_hits":1}]}"#,
+        )
+        .unwrap();
+        let mut buf = Vec::new();
+        frames::encode_chunk_into(&line, &mut buf).unwrap();
+        let (nll, tok, nrows) = patch_scatter_frame(&mut buf, 7, 16).unwrap();
+        assert_eq!((nll, tok, nrows), (2.5, 4.0, 1));
+        let (chunk, first_row, _) = frames::chunk_header(&buf).unwrap();
+        assert_eq!((chunk, first_row), (7, 18), "chunk renumbered, first_row offset by base");
+        assert!(patch_scatter_frame(&mut vec![0u8; 4], 0, 0).is_err(), "garbage rejected");
     }
 }

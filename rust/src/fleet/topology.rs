@@ -21,6 +21,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::server::{frames, Emit, EmitSink};
 use crate::tune::TunedPolicy;
 use crate::util::json::Json;
 
@@ -363,6 +364,10 @@ pub struct WorkerClient {
     addr: String,
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// This connection negotiated `bin1` score frames (see
+    /// [`crate::server::frames`]); streamed chunk responses may arrive
+    /// as binary frames and are passed through as [`Emit::Raw`].
+    bin1: bool,
 }
 
 impl WorkerClient {
@@ -394,7 +399,21 @@ impl WorkerClient {
             addr: addr.to_string(),
             reader: BufReader::new(stream.try_clone()?),
             writer: stream,
+            bin1: false,
         })
+    }
+
+    /// Negotiate `bin1` binary score frames for this connection
+    /// (`{"op":"hello","frames":"bin1"}`). A worker that answers with
+    /// anything but `"frames":"bin1"` — including an error from an
+    /// implementation without frame support — leaves the connection in
+    /// JSON mode; only a transport failure is an `Err`.
+    pub fn negotiate_frames(&mut self) -> Result<bool> {
+        let hello = Json::obj(vec![("op", Json::str("hello")), ("frames", Json::str("bin1"))]);
+        let resp = self.request(&hello)?;
+        self.bin1 = resp.opt("error").is_none()
+            && resp.opt("frames").and_then(|v| v.as_str().ok()) == Some("bin1");
+        Ok(self.bin1)
     }
 
     pub fn addr(&self) -> &str {
@@ -419,29 +438,51 @@ impl WorkerClient {
         writeln!(self.writer, "{}", req.dump())
             .with_context(|| format!("writing to worker {}", self.addr))?;
         self.writer.flush()?;
+        if self.bin1 && self.peek_byte()? == frames::MAGIC {
+            bail!("worker {} sent a binary frame for a buffered request", self.addr);
+        }
         self.read_response()
     }
 
-    /// One streamed request: non-terminal lines (chunks) go through
-    /// `sink`; the terminal line (`"done"` present, or a bare error
-    /// response for a request the worker rejected outright) is returned.
-    pub fn request_streaming(
-        &mut self,
-        req: &Json,
-        sink: &mut dyn FnMut(&Json) -> Result<()>,
-    ) -> Result<Json> {
+    /// One streamed request: non-terminal units (chunks) go through
+    /// `sink` — as [`Emit::Raw`] binary frames on a `bin1` connection
+    /// (forwarded without decoding), else as [`Emit::Line`] JSON — and
+    /// the terminal line (`"done"` present, or a bare error response for
+    /// a request the worker rejected outright) is returned. Terminal
+    /// lines are JSON in both modes, so one peeked byte routes each unit.
+    pub fn request_streaming(&mut self, req: &Json, sink: &mut EmitSink<'_>) -> Result<Json> {
         writeln!(self.writer, "{}", req.dump())
             .with_context(|| format!("writing to worker {}", self.addr))?;
         self.writer.flush()?;
+        let mut frame: Vec<u8> = Vec::new();
         loop {
+            if self.bin1 && self.peek_byte()? == frames::MAGIC {
+                frames::read_frame(&mut self.reader, &mut frame)
+                    .with_context(|| format!("reading frame from worker {}", self.addr))?;
+                sink(Emit::Raw(&frame))?;
+                continue;
+            }
             let line = self.read_response()?;
             let terminal = line.opt("done").is_some()
                 || (line.opt("error").is_some() && line.opt("chunk").is_none());
             if terminal {
                 return Ok(line);
             }
-            sink(&line)?;
+            sink(Emit::Line(&line))?;
         }
+    }
+
+    /// Peek the next response byte without consuming it: a binary frame
+    /// starts with [`frames::MAGIC`], a JSON line with `{`.
+    fn peek_byte(&mut self) -> Result<u8> {
+        let buf = self
+            .reader
+            .fill_buf()
+            .with_context(|| format!("reading from worker {}", self.addr))?;
+        if buf.is_empty() {
+            bail!("worker {} hung up", self.addr);
+        }
+        Ok(buf[0])
     }
 
     fn read_response(&mut self) -> Result<Json> {

@@ -22,16 +22,16 @@
 //! |---|---|
 //! | [`util`] | from-scratch substrates: JSON, RNG, thread pool + bounded queue, CLI, property testing |
 //! | [`tensor`] | dense f32 tensors + binary serialization |
-//! | [`quant`] | codebooks, block-wise quantization, packed k-bit residency, centering, proxy quantization |
+//! | [`quant`] | codebooks, block-wise quantization, packed k-bit residency, centering, proxy quantization, fused dequantize-matmul kernel (`quant::fused`: scalar + AVX2, bit-identical to dequantize→GEMM) |
 //! | [`gptq`] | one-shot GPTQ (Hessian/Cholesky sequential rounding) |
 //! | [`data`] | synthetic Zipf–Markov corpus + four zero-shot task generators |
 //! | [`models`] | model zoo: families, tiers, init (incl. outlier injection), checkpoints |
-//! | [`runtime`] | PJRT client wrapper: HLO-text loading, single-flight executable cache, literal conversion, pipeline-sharded execution plans (`runtime::plan`) |
+//! | [`runtime`] | PJRT client wrapper: HLO-text loading, single-flight executable cache, literal conversion, pipeline-sharded execution plans (`runtime::plan`), native packed-residency scoring backend (`runtime::native`) |
 //! | [`train`] | training driver over the AOT train-step executable |
 //! | [`eval`] | perplexity + zero-shot evaluation harness, scored through execution plans |
 //! | [`coordinator`] | sweep grid, scheduler, worker pool, results store |
-//! | [`server`] | LRU/TTL-governed packed-model registry (monolithic + pipeline-sharded variants, per-stage mixed precision) + sharded score cache + concurrent micro-batched JSON-lines serving with chunked streaming responses and tuned-policy auto-loading |
-//! | [`fleet`] | multi-node serving tier: worker roster with health/residency probes, policy-aware placement, and a line-protocol router with scatter/gather scoring, streamed chunk reassembly, and retry-on-next-worker failover |
+//! | [`server`] | LRU/TTL-governed packed-model registry (monolithic, pipeline-sharded, and fused-native variants, per-stage mixed precision) + sharded score cache + concurrent micro-batched JSON-lines serving with chunked streaming responses, negotiated binary score frames (`server::frames`), and tuned-policy auto-loading |
+//! | [`fleet`] | multi-node serving tier: worker roster with health/residency probes, policy-aware placement, and a line-protocol router with scatter/gather scoring, streamed chunk reassembly (JSON lines or pass-through binary frames), and retry-on-next-worker failover |
 //! | [`scaling`] | scaling curves, Pareto frontiers, bit-level optimality, correlations |
 //! | [`tune`] | precision autotuner: candidate search over bits × block × dtype × per-stage widths, calibration eval, Pareto-frontier `TunedPolicy` artifacts |
 //! | [`report`] | ASCII figures and CSV emission for every paper table/figure |

@@ -1,0 +1,401 @@
+//! Fused dequantize×matmul: the packed-residency scoring kernel.
+//!
+//! The classic serving path expands every [`PackedTensor`] into a full f32
+//! tensor (`dequantize_into` → GEMM), paying the dequantized footprint once
+//! per parameter per load and shipping f32 weights into the executable. This
+//! module fuses the two steps: the matmul inner loop walks the packed k-bit
+//! bitstream directly, decoding **one weight row at a time** into a small
+//! reusable scratch row and accumulating it into the output — packed
+//! parameters never materialize as full f32 tensors on the score path.
+//!
+//! Numerical contract: the fused kernel is **bit-identical** to the
+//! `dequantize_into` → reference-GEMM composition. Both share one
+//! accumulation order (k-outer axpy: `out[i][c] += x[i][r] * w[r][c]`, `r`
+//! ascending, `c` ascending) and the row decoder reproduces
+//! [`PackedTensor::dequantize_into`]'s exact arithmetic
+//! (`values[idx] * absmax + mean`, f32 ops in the same order). The AVX2 path
+//! uses only `_mm256_mul_ps`/`_mm256_add_ps` — deliberately **no FMA**, which
+//! would skip the intermediate rounding step and break bit-identity with the
+//! scalar fallback.
+//!
+//! Backend selection is automatic (runtime `is_x86_feature_detected!`) with
+//! an escape hatch: setting `KBITSCALE_FORCE_SCALAR` in the environment pins
+//! the scalar fallback, which CI uses to prove the scalar path passes the
+//! same suite (the selection is latched on first use, so set it before any
+//! scoring happens).
+
+use std::sync::OnceLock;
+
+use anyhow::{ensure, Result};
+
+use super::packing::PackedTensor;
+
+/// Which inner-loop implementation a fused matmul runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Plain f32 loop — the portable fallback, and the bit-identity
+    /// reference for the SIMD path.
+    Scalar,
+    /// AVX2 `std::arch` path (mul + add only; no FMA).
+    Avx2,
+}
+
+/// Whether AVX2 is usable on this machine (compile-target and runtime
+/// feature detection; always false off x86_64).
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        std::arch::is_x86_feature_detected!("avx2")
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// The backend fused matmuls dispatch to: AVX2 when the CPU has it, unless
+/// `KBITSCALE_FORCE_SCALAR` is set. Latched once per process.
+pub fn active_backend() -> Backend {
+    static ACTIVE: OnceLock<Backend> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        if std::env::var_os("KBITSCALE_FORCE_SCALAR").is_some() || !avx2_available() {
+            Backend::Scalar
+        } else {
+            Backend::Avx2
+        }
+    })
+}
+
+/// Decode packed elements `[lo, hi)` straight into `out` (length `hi - lo`)
+/// — the row-granular form of [`PackedTensor::dequantize_into`], and
+/// bit-identical to the slice `full[lo..hi]` of a full decode: same codebook
+/// lookup, same `value * absmax + mean` f32 arithmetic per element.
+pub fn decode_range(p: &PackedTensor, lo: usize, hi: usize, out: &mut [f32]) -> Result<()> {
+    ensure!(lo <= hi && hi <= p.n, "decode_range {lo}..{hi} out of bounds for {} elements", p.n);
+    ensure!(out.len() == hi - lo, "decode_range: buffer {} != span {}", out.len(), hi - lo);
+    ensure!(
+        p.packed.len() * 32 >= p.n * p.bits,
+        "packed stream too short: {} words for {} x {}-bit",
+        p.packed.len(),
+        p.n,
+        p.bits
+    );
+    let values = p.codebook.values();
+    let k = p.bits;
+    let mask = if k >= 8 { 0xFFu32 } else { (1u32 << k) - 1 };
+    let mut bitpos = lo * k;
+    let mut i = lo;
+    for o in out.iter_mut() {
+        let b = i / p.block;
+        let amax = p.absmax[b];
+        let mean = p.means.as_ref().map_or(0.0, |m| m[b]);
+        let word = bitpos / 32;
+        let off = bitpos % 32;
+        let mut v = p.packed[word] >> off;
+        if off + k > 32 {
+            v |= p.packed[word + 1] << (32 - off);
+        }
+        *o = values[(v & mask) as usize] * amax + mean;
+        bitpos += k;
+        i += 1;
+    }
+    Ok(())
+}
+
+/// Reference dense GEMM accumulating into `out`: `out[m,n] += x[m,k] @
+/// w[k,n]`, row-major, k-outer axpy order. This exact loop order is the
+/// bit-identity baseline the fused and SIMD paths are tested against.
+pub fn matmul_f32(x: &[f32], w: &[f32], out: &mut [f32], m: usize, kd: usize, n: usize) {
+    debug_assert_eq!(x.len(), m * kd);
+    debug_assert_eq!(w.len(), kd * n);
+    debug_assert_eq!(out.len(), m * n);
+    matmul_f32_with(active_backend(), x, w, out, m, kd, n)
+}
+
+/// [`matmul_f32`] with an explicit backend (parity tests drive both).
+pub fn matmul_f32_with(
+    backend: Backend,
+    x: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+) {
+    for r in 0..kd {
+        let wrow = &w[r * n..(r + 1) * n];
+        for i in 0..m {
+            axpy(backend, x[i * kd + r], wrow, &mut out[i * n..(i + 1) * n]);
+        }
+    }
+}
+
+/// Fused dequantize×matmul accumulating into `out`: `out[m,n] += x[m,k] @
+/// W[k,n]` where `W` is `p`'s packed k-bit payload, decoded one row at a
+/// time into `wrow` (resized to `n`; pass the same buffer across calls so
+/// the score path allocates the scratch row once). Never materializes the
+/// full f32 weight tensor.
+pub fn fused_matmul(
+    x: &[f32],
+    p: &PackedTensor,
+    out: &mut [f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    wrow: &mut Vec<f32>,
+) -> Result<()> {
+    fused_matmul_with(active_backend(), x, p, out, m, kd, n, wrow)
+}
+
+/// [`fused_matmul`] with an explicit backend (parity tests drive both).
+#[allow(clippy::too_many_arguments)]
+pub fn fused_matmul_with(
+    backend: Backend,
+    x: &[f32],
+    p: &PackedTensor,
+    out: &mut [f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    wrow: &mut Vec<f32>,
+) -> Result<()> {
+    ensure!(p.n == kd * n, "packed tensor has {} elements, matmul wants {}x{}", p.n, kd, n);
+    ensure!(x.len() == m * kd, "fused_matmul: x has {} elements, want {}", x.len(), m * kd);
+    ensure!(out.len() == m * n, "fused_matmul: out has {} elements, want {}", out.len(), m * n);
+    wrow.resize(n, 0.0);
+    for r in 0..kd {
+        decode_range(p, r * n, (r + 1) * n, wrow)?;
+        for i in 0..m {
+            axpy(backend, x[i * kd + r], wrow, &mut out[i * n..(i + 1) * n]);
+        }
+    }
+    Ok(())
+}
+
+/// `out[c] += a * w[c]` — the one inner loop every matmul here reduces to.
+#[inline]
+fn axpy(backend: Backend, a: f32, w: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(w.len(), out.len());
+    match backend {
+        Backend::Scalar => axpy_scalar(a, w, out),
+        Backend::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Backend::Avx2 is only ever selected after
+            // `is_x86_feature_detected!("avx2")` (active_backend), or by a
+            // test that checked `avx2_available()` first.
+            unsafe {
+                axpy_avx2(a, w, out)
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            axpy_scalar(a, w, out)
+        }
+    }
+}
+
+#[inline]
+fn axpy_scalar(a: f32, w: &[f32], out: &mut [f32]) {
+    for (o, &wv) in out.iter_mut().zip(w) {
+        *o += a * wv;
+    }
+}
+
+/// AVX2 axpy: 8 lanes of `out += a * w` per iteration, scalar tail. Uses
+/// separate mul + add (not `_mm256_fmadd_ps`): FMA skips the intermediate
+/// rounding and would diverge from the scalar path in the last bit.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(a: f32, w: &[f32], out: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = w.len();
+    let va = _mm256_set1_ps(a);
+    let mut c = 0usize;
+    while c + 8 <= n {
+        let vw = _mm256_loadu_ps(w.as_ptr().add(c));
+        let vo = _mm256_loadu_ps(out.as_ptr().add(c));
+        let sum = _mm256_add_ps(vo, _mm256_mul_ps(va, vw));
+        _mm256_storeu_ps(out.as_mut_ptr().add(c), sum);
+        c += 8;
+    }
+    while c < n {
+        *out.get_unchecked_mut(c) += a * *w.get_unchecked(c);
+        c += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::quant::codebook::DataType;
+    use crate::quant::spec::QuantSpec;
+    use crate::util::proptest::{check, gen};
+    use crate::util::rng::Rng;
+
+    fn backends() -> Vec<Backend> {
+        let mut b = vec![Backend::Scalar];
+        if avx2_available() {
+            b.push(Backend::Avx2);
+        }
+        b
+    }
+
+    #[test]
+    fn decode_range_matches_full_decode() {
+        check("decode-range-parity", 48, |rng, case| {
+            let bits = 3 + case % 6;
+            let block = [Some(16), Some(64), Some(256), None][(case / 6) % 4];
+            let data = gen::weights(rng, 4000);
+            let n = data.len();
+            let mut spec = QuantSpec::new(DataType::ALL[rng.below(4)], bits, block);
+            if rng.below(2) == 0 {
+                spec = spec.with_centering();
+            }
+            let p = PackedTensor::quantize(&data, &spec).map_err(|e| format!("{e:#}"))?;
+            let mut full = vec![0.0f32; n];
+            p.dequantize_into(&mut full).map_err(|e| format!("{e:#}"))?;
+            // A handful of random spans, plus the degenerate edges.
+            let mut spans = vec![(0, n), (0, 0), (n, n)];
+            for _ in 0..8 {
+                let a = rng.below(n + 1);
+                let b = a + rng.below(n - a + 1);
+                spans.push((a, b));
+            }
+            for (lo, hi) in spans {
+                let mut got = vec![0.0f32; hi - lo];
+                decode_range(&p, lo, hi, &mut got).map_err(|e| format!("{e:#}"))?;
+                prop_assert!(
+                    got == full[lo..hi],
+                    "bits={bits} block={block:?} n={n} span {lo}..{hi}: range decode \
+                     != full decode slice"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn decode_range_validates_bounds() {
+        let spec = QuantSpec::new(DataType::Int, 4, Some(64));
+        let p = PackedTensor::quantize(&[1.0f32; 100], &spec).unwrap();
+        let mut buf = vec![0.0f32; 10];
+        assert!(decode_range(&p, 95, 105, &mut buf).is_err(), "hi past n");
+        assert!(decode_range(&p, 0, 5, &mut buf).is_err(), "buffer/span mismatch");
+        assert!(decode_range(&p, 0, 10, &mut buf).is_ok());
+    }
+
+    #[test]
+    fn prop_fused_matmul_bit_identical_to_dequant_gemm() {
+        // The tentpole invariant: scalar fused, SIMD fused, and the
+        // dequantize_into→GEMM composition agree to the bit across bits
+        // 3..=8 × block sizes (ragged tails included) × codebook dtypes.
+        check("fused-matmul-parity", 48, |rng, case| {
+            let bits = 3 + case % 6;
+            let block = [Some(16), Some(32), Some(64), None][(case / 6) % 4];
+            let m = 1 + rng.below(6);
+            let kd = 1 + rng.below(40);
+            let n = 1 + rng.below(40);
+            let mut w = vec![0.0f32; kd * n];
+            let std = 0.5;
+            for v in w.iter_mut() {
+                *v = (rng.normal() * std) as f32;
+            }
+            let x: Vec<f32> = (0..m * kd).map(|_| (rng.normal()) as f32).collect();
+            let mut spec = QuantSpec::new(DataType::ALL[rng.below(4)], bits, block);
+            if rng.below(2) == 0 {
+                spec = spec.with_centering();
+            }
+            let p = PackedTensor::quantize(&w, &spec).map_err(|e| format!("{e:#}"))?;
+            // Reference: full dequantize, then the same-order GEMM.
+            let mut wd = vec![0.0f32; kd * n];
+            p.dequantize_into(&mut wd).map_err(|e| format!("{e:#}"))?;
+            let mut reference = vec![0.0f32; m * n];
+            matmul_f32_with(Backend::Scalar, &x, &wd, &mut reference, m, kd, n);
+            for backend in backends() {
+                let mut got = vec![0.0f32; m * n];
+                let mut wrow = Vec::new();
+                fused_matmul_with(backend, &x, &p, &mut got, m, kd, n, &mut wrow)
+                    .map_err(|e| format!("{e:#}"))?;
+                prop_assert!(
+                    got == reference,
+                    "bits={bits} block={block:?} m={m} k={kd} n={n} {backend:?}: \
+                     fused != dequantize_into+GEMM"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_simd_dense_matmul_matches_scalar() {
+        if !avx2_available() {
+            return; // nothing to compare on this host
+        }
+        check("dense-axpy-simd-parity", 32, |rng, _| {
+            let m = 1 + rng.below(5);
+            let kd = 1 + rng.below(50);
+            let n = 1 + rng.below(70); // crosses the 8-lane boundary + tail
+            let x: Vec<f32> = (0..m * kd).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..kd * n).map(|_| rng.normal() as f32).collect();
+            let mut a = vec![0.0f32; m * n];
+            let mut b = vec![0.0f32; m * n];
+            matmul_f32_with(Backend::Scalar, &x, &w, &mut a, m, kd, n);
+            matmul_f32_with(Backend::Avx2, &x, &w, &mut b, m, kd, n);
+            prop_assert!(a == b, "m={m} k={kd} n={n}: AVX2 dense GEMM != scalar");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_matmul_accumulates_into_out() {
+        // `out +=`, not `out =`: the transformer residual path relies on it.
+        let spec = QuantSpec::new(DataType::Fp, 4, Some(64));
+        let w = vec![1.0f32; 8];
+        let p = PackedTensor::quantize(&w, &spec).unwrap();
+        let x = vec![1.0f32; 2];
+        let mut out = vec![10.0f32; 4];
+        let mut wrow = Vec::new();
+        fused_matmul(&x, &p, &mut out, 1, 2, 4, &mut wrow).unwrap();
+        let mut wd = vec![0.0f32; 8];
+        p.dequantize_into(&mut wd).unwrap();
+        let mut expect = vec![10.0f32; 4];
+        matmul_f32_with(Backend::Scalar, &x, &wd, &mut expect, 1, 2, 4);
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn fused_matmul_rejects_geometry_mismatch() {
+        let spec = QuantSpec::new(DataType::Int, 4, Some(64));
+        let p = PackedTensor::quantize(&[0.5f32; 12], &spec).unwrap();
+        let mut wrow = Vec::new();
+        let x = vec![1.0f32; 3];
+        let mut out = vec![0.0f32; 4];
+        // p.n = 12 != 3*5
+        assert!(fused_matmul(&x, &p, &mut out, 1, 3, 5, &mut wrow).is_err());
+        // x too short for m=2
+        assert!(fused_matmul(&x, &p, &mut out, 2, 3, 4, &mut wrow).is_err());
+        assert!(fused_matmul(&x, &p, &mut out, 1, 3, 4, &mut wrow).is_ok());
+    }
+
+    #[test]
+    fn zero_inputs_preserve_signed_zero_semantics() {
+        // x = 0 rows must still run the axpy (skipping would turn -0.0
+        // outputs into +0.0 and break bit-identity with the reference).
+        let mut rng = Rng::new(7);
+        let w: Vec<f32> = (0..16).map(|_| rng.normal() as f32).collect();
+        let spec = QuantSpec::new(DataType::Fp, 4, Some(16));
+        let p = PackedTensor::quantize(&w, &spec).unwrap();
+        let x = vec![0.0f32; 4];
+        let mut wd = vec![0.0f32; 16];
+        p.dequantize_into(&mut wd).unwrap();
+        for backend in backends() {
+            let mut got = vec![-0.0f32; 4];
+            let mut expect = vec![-0.0f32; 4];
+            let mut wrow = Vec::new();
+            fused_matmul_with(backend, &x, &p, &mut got, 1, 4, 4, &mut wrow).unwrap();
+            matmul_f32_with(Backend::Scalar, &x, &wd, &mut expect, 1, 4, 4);
+            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+            let eb: Vec<u32> = expect.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(gb, eb, "{backend:?}");
+        }
+    }
+}

@@ -21,6 +21,7 @@ pub mod bitcost;
 pub mod blockwise;
 pub mod centering;
 pub mod codebook;
+pub mod fused;
 pub mod packing;
 pub mod proxy;
 pub mod spec;

@@ -15,6 +15,7 @@
 //! sharding) on top of this cache; the monolithic graph is the degenerate
 //! single-stage plan.
 
+pub mod native;
 pub mod plan;
 
 use std::collections::{HashMap, HashSet};

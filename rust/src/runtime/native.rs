@@ -1,0 +1,657 @@
+//! Native fused-kernel execution backend.
+//!
+//! The XLA path dequantizes every packed parameter into a full f32 literal
+//! at load time and scores through AOT graphs. This module is the
+//! `{"op":"load","fused":true}` alternative: a pure-Rust forward pass whose
+//! projection matmuls walk [`PackedParam`] residency directly through
+//! [`crate::quant::fused`] — packed weights never expand to full f32
+//! tensors, at load time or on the score path. Unquantized parameters
+//! (embeddings, LayerNorms, baseline stages of a mixed-precision plan)
+//! stay dense f32, exactly as the paper prescribes.
+//!
+//! A [`NativeModel`] is built from the same [`PlanLayout`] the XLA path
+//! compiles, so monolithic and pipeline-sharded variants both resolve here:
+//! stage-sliced stacked tensors are reassembled per layer, and because
+//! [`PackedParam`] quantizes leading-axis slices independently, a sharded
+//! build's weights are bit-identical to the monolithic build under the same
+//! spec — the fused score of either plan shape is the same number.
+//!
+//! Scoring semantics mirror `python/compile/model.py` (`eval_scores`):
+//! pre-LN blocks, causal softmax attention, tanh-approximate GELU, tied LM
+//! head, masked NLL sums + greedy top-1 hits per row. Agreement with the
+//! XLA executables is to float tolerance (operation order differs inside
+//! XLA's fusions); agreement between the scalar and SIMD fused paths is
+//! exact (see `quant::fused`).
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use super::plan::PlanLayout;
+use crate::models::manifest::TierManifest;
+use crate::quant::fused;
+use crate::quant::PackedParam;
+
+/// One plan parameter in native residency: packed k-bit indices for
+/// quantized tensors, dense f32 for everything else. Entries are given in
+/// [`PlanLayout::params`] order.
+pub enum NativeParam {
+    Dense(Vec<f32>),
+    Packed(Arc<PackedParam>),
+}
+
+/// One layer's projection weight: a slice view into a shared dense buffer,
+/// or one leading-axis slice of a shared packed parameter.
+#[derive(Clone)]
+enum Mat {
+    /// (storage, element offset of this layer's `[k, n]` block).
+    Dense(Arc<Vec<f32>>, usize),
+    /// (packed parameter, leading-axis slice index).
+    Packed(Arc<PackedParam>, usize),
+}
+
+/// Per-layer weights, reassembled from (possibly stage-sliced) plan params.
+struct Layer {
+    qkv: Mat,
+    wo: Mat,
+    fc1: Mat,
+    fc2: Mat,
+    ln1_s: Vec<f32>,
+    ln1_b: Vec<f32>,
+    ln2_s: Vec<f32>,
+    ln2_b: Vec<f32>,
+}
+
+/// A resident model variant executable natively through the fused kernel.
+pub struct NativeModel {
+    d: usize,
+    n_layer: usize,
+    n_head: usize,
+    d_ff: usize,
+    vocab: usize,
+    seq: usize,
+    batch_eval: usize,
+    embed: Vec<f32>,
+    pos: Vec<f32>,
+    layers: Vec<Layer>,
+    lnf_s: Vec<f32>,
+    lnf_b: Vec<f32>,
+}
+
+/// Internal: a plan parameter promoted to shareable storage.
+enum Entry {
+    Dense(Arc<Vec<f32>>),
+    Packed(Arc<PackedParam>),
+}
+
+impl NativeModel {
+    /// Assemble a native model from a plan layout and its parameters (in
+    /// `layout.params` order — the exact order `ModelHandle::with_plan`
+    /// walks). Validates geometry against the tier manifest; errors here
+    /// are build-time, never mid-score.
+    pub fn build(
+        tier: &TierManifest,
+        layout: &PlanLayout,
+        params: Vec<NativeParam>,
+    ) -> Result<NativeModel> {
+        ensure!(
+            params.len() == layout.params.len(),
+            "native build: {} params for a {}-param layout",
+            params.len(),
+            layout.params.len()
+        );
+        let (d, l, f) = (tier.d_model, tier.n_layer, tier.d_ff);
+        ensure!(tier.n_head > 0 && d % tier.n_head == 0, "d_model must divide by n_head");
+        let entries: Vec<Entry> = params
+            .into_iter()
+            .map(|p| match p {
+                NativeParam::Dense(v) => Entry::Dense(Arc::new(v)),
+                NativeParam::Packed(a) => Entry::Packed(a),
+            })
+            .collect();
+        let qkv = layer_mats(layout, &entries, "qkv", l, d * 3 * d)?;
+        let wo = layer_mats(layout, &entries, "wo", l, d * d)?;
+        let fc1 = layer_mats(layout, &entries, "fc1", l, d * f)?;
+        let fc2 = layer_mats(layout, &entries, "fc2", l, f * d)?;
+        let ln1_s = layer_vecs(layout, &entries, "ln1_s", l, d)?;
+        let ln1_b = layer_vecs(layout, &entries, "ln1_b", l, d)?;
+        let ln2_s = layer_vecs(layout, &entries, "ln2_s", l, d)?;
+        let ln2_b = layer_vecs(layout, &entries, "ln2_b", l, d)?;
+        let layers = (0..l)
+            .map(|li| Layer {
+                qkv: qkv[li].clone(),
+                wo: wo[li].clone(),
+                fc1: fc1[li].clone(),
+                fc2: fc2[li].clone(),
+                ln1_s: ln1_s[li].clone(),
+                ln1_b: ln1_b[li].clone(),
+                ln2_s: ln2_s[li].clone(),
+                ln2_b: ln2_b[li].clone(),
+            })
+            .collect();
+        Ok(NativeModel {
+            d,
+            n_layer: l,
+            n_head: tier.n_head,
+            d_ff: f,
+            vocab: tier.vocab,
+            seq: tier.seq,
+            batch_eval: tier.batch_eval.max(1),
+            embed: whole_dense(layout, &entries, "embed", tier.vocab * d)?,
+            pos: whole_dense(layout, &entries, "pos", tier.seq * d)?,
+            layers,
+            lnf_s: whole_dense(layout, &entries, "lnf_s", d)?,
+            lnf_b: whole_dense(layout, &entries, "lnf_b", d)?,
+        })
+    }
+
+    /// Score padded `(tokens, mask)` rows: per-row `(nll_sum, top1_hits)`,
+    /// the same contract as the XLA plan. Rows are chunked by the tier's
+    /// eval batch internally.
+    pub fn score_rows(&self, rows: &[(Vec<i32>, Vec<f32>)]) -> Result<Vec<(f64, f64)>> {
+        let mut out = Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(self.batch_eval) {
+            self.score_chunk(chunk, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    fn score_chunk(&self, rows: &[(Vec<i32>, Vec<f32>)], out: &mut Vec<(f64, f64)>) -> Result<()> {
+        let (b, s, d, f) = (rows.len(), self.seq, self.d, self.d_ff);
+        for (t, m) in rows {
+            ensure!(t.len() == s && m.len() == s, "rows must be padded to seq {s}");
+            if let Some(&bad) = t.iter().find(|&&v| v < 0 || v as usize >= self.vocab) {
+                bail!("token {bad} out of vocab range 0..{}", self.vocab);
+            }
+        }
+        // Embed + positional.
+        let mut x = vec![0.0f32; b * s * d];
+        for (r, (toks, _)) in rows.iter().enumerate() {
+            for (p, &tok) in toks.iter().enumerate() {
+                let dst = (r * s + p) * d;
+                let emb = &self.embed[tok as usize * d..(tok as usize + 1) * d];
+                let pe = &self.pos[p * d..(p + 1) * d];
+                for j in 0..d {
+                    x[dst + j] = emb[j] + pe[j];
+                }
+            }
+        }
+        let (h, hd) = (self.n_head, d / self.n_head);
+        let rows_bs = b * s;
+        let mut y = vec![0.0f32; rows_bs * d];
+        let mut qkv_out = vec![0.0f32; rows_bs * 3 * d];
+        let mut att_out = vec![0.0f32; rows_bs * d];
+        let mut proj = vec![0.0f32; rows_bs * d];
+        let mut ff = vec![0.0f32; rows_bs * f];
+        let mut att_row = vec![0.0f32; s];
+        let mut wrow = Vec::new();
+        for layer in &self.layers {
+            // Attention sub-block (pre-LN).
+            layernorm(&x, &layer.ln1_s, &layer.ln1_b, &mut y, d);
+            qkv_out.iter_mut().for_each(|v| *v = 0.0);
+            apply_mat(&layer.qkv, &y, &mut qkv_out, rows_bs, d, 3 * d, &mut wrow)?;
+            att_out.iter_mut().for_each(|v| *v = 0.0);
+            let scale = 1.0 / (hd as f32).sqrt();
+            for bi in 0..b {
+                for hi in 0..h {
+                    for t in 0..s {
+                        let q = &qkv_out[(bi * s + t) * 3 * d + hi * hd..][..hd];
+                        // Causal scores over positions 0..=t, softmaxed.
+                        let mut maxv = f32::NEG_INFINITY;
+                        for (u, a) in att_row.iter_mut().enumerate().take(t + 1) {
+                            let k = &qkv_out[(bi * s + u) * 3 * d + d + hi * hd..][..hd];
+                            let mut dot = 0.0f32;
+                            for j in 0..hd {
+                                dot += q[j] * k[j];
+                            }
+                            *a = dot * scale;
+                            maxv = maxv.max(*a);
+                        }
+                        let mut denom = 0.0f32;
+                        for a in att_row.iter_mut().take(t + 1) {
+                            *a = (*a - maxv).exp();
+                            denom += *a;
+                        }
+                        let dst = (bi * s + t) * d + hi * hd;
+                        for u in 0..=t {
+                            let p = att_row[u] / denom;
+                            let v = &qkv_out[(bi * s + u) * 3 * d + 2 * d + hi * hd..][..hd];
+                            for j in 0..hd {
+                                att_out[dst + j] += p * v[j];
+                            }
+                        }
+                    }
+                }
+            }
+            proj.iter_mut().for_each(|v| *v = 0.0);
+            apply_mat(&layer.wo, &att_out, &mut proj, rows_bs, d, d, &mut wrow)?;
+            for (xv, pv) in x.iter_mut().zip(&proj) {
+                *xv += pv;
+            }
+            // MLP sub-block.
+            layernorm(&x, &layer.ln2_s, &layer.ln2_b, &mut y, d);
+            ff.iter_mut().for_each(|v| *v = 0.0);
+            apply_mat(&layer.fc1, &y, &mut ff, rows_bs, d, f, &mut wrow)?;
+            for v in ff.iter_mut() {
+                *v = gelu_tanh(*v);
+            }
+            proj.iter_mut().for_each(|v| *v = 0.0);
+            apply_mat(&layer.fc2, &ff, &mut proj, rows_bs, f, d, &mut wrow)?;
+            for (xv, pv) in x.iter_mut().zip(&proj) {
+                *xv += pv;
+            }
+        }
+        layernorm(&x, &self.lnf_s, &self.lnf_b, &mut y, d);
+        // Tied LM head + masked scoring, one position at a time (the full
+        // (B, S, V) logits tensor is never materialized).
+        let mut logits = vec![0.0f32; self.vocab];
+        for (r, (toks, mask)) in rows.iter().enumerate() {
+            let mut nll = 0.0f64;
+            let mut hits = 0.0f64;
+            for t in 0..s - 1 {
+                let mw = mask[t + 1];
+                if mw == 0.0 {
+                    continue; // zero-weight target contributes exactly 0
+                }
+                let target = toks[t + 1] as usize;
+                let hrow = &y[(r * s + t) * d..(r * s + t + 1) * d];
+                for (v, lg) in logits.iter_mut().enumerate() {
+                    let erow = &self.embed[v * d..(v + 1) * d];
+                    let mut dot = 0.0f32;
+                    for j in 0..d {
+                        dot += hrow[j] * erow[j];
+                    }
+                    *lg = dot;
+                }
+                // First-max argmax (JAX tie-breaking) + log-sum-exp.
+                let mut best = 0usize;
+                let mut maxv = logits[0];
+                for (v, &lg) in logits.iter().enumerate().skip(1) {
+                    if lg > maxv {
+                        maxv = lg;
+                        best = v;
+                    }
+                }
+                let mut denom = 0.0f32;
+                for &lg in &logits {
+                    denom += (lg - maxv).exp();
+                }
+                let logp = (logits[target] - maxv) - denom.ln();
+                nll -= logp as f64 * mw as f64;
+                if best == target {
+                    hits += mw as f64;
+                }
+            }
+            out.push((nll, hits));
+        }
+        Ok(())
+    }
+}
+
+/// Run one matmul (`out[m,n] += x[m,k] @ W[k,n]`) through the weight's
+/// residency form: dense f32 GEMM or the fused packed kernel.
+fn apply_mat(
+    mat: &Mat,
+    x: &[f32],
+    out: &mut [f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    wrow: &mut Vec<f32>,
+) -> Result<()> {
+    match mat {
+        Mat::Dense(v, off) => {
+            fused::matmul_f32(x, &v[*off..*off + kd * n], out, m, kd, n);
+            Ok(())
+        }
+        Mat::Packed(p, si) => fused::fused_matmul(x, &p.slices[*si], out, m, kd, n, wrow),
+    }
+}
+
+/// LayerNorm rows of `x` (inner dim `d`) into `y` with eps 1e-5.
+fn layernorm(x: &[f32], scale: &[f32], bias: &[f32], y: &mut [f32], d: usize) {
+    for (xr, yr) in x.chunks_exact(d).zip(y.chunks_exact_mut(d)) {
+        let mut mean = 0.0f32;
+        for &v in xr {
+            mean += v;
+        }
+        mean /= d as f32;
+        let mut var = 0.0f32;
+        for &v in xr {
+            var += (v - mean) * (v - mean);
+        }
+        var /= d as f32;
+        let rstd = 1.0 / (var + 1e-5).sqrt();
+        for j in 0..d {
+            yr[j] = (xr[j] - mean) * rstd * scale[j] + bias[j];
+        }
+    }
+}
+
+/// Tanh-approximate GELU (`jax.nn.gelu`'s default form).
+fn gelu_tanh(v: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * v * (1.0 + (C * (v + 0.044715 * v * v * v)).tanh())
+}
+
+/// Resolve a whole (never layer-sliced, never quantized) dense parameter.
+fn whole_dense(
+    layout: &PlanLayout,
+    entries: &[Entry],
+    source: &str,
+    numel: usize,
+) -> Result<Vec<f32>> {
+    for (pp, e) in layout.params.iter().zip(entries) {
+        if pp.source != source || pp.layers.is_some() {
+            continue;
+        }
+        let Entry::Dense(v) = e else {
+            bail!("param {source} is packed; expected dense residency");
+        };
+        ensure!(v.len() == numel, "param {source}: {} elements, expected {numel}", v.len());
+        return Ok(v.as_ref().clone());
+    }
+    Err(anyhow!("layout has no whole dense param {source:?}"))
+}
+
+/// Reassemble one layer-stacked projection source into per-layer [`Mat`]s,
+/// merging stage slices (`lo..hi` ranges) back into layer order. `per` is
+/// one layer's element count.
+fn layer_mats(
+    layout: &PlanLayout,
+    entries: &[Entry],
+    source: &str,
+    n_layer: usize,
+    per: usize,
+) -> Result<Vec<Mat>> {
+    let mut mats: Vec<Option<Mat>> = vec![None; n_layer];
+    for (pp, e) in layout.params.iter().zip(entries) {
+        if pp.source != source {
+            continue;
+        }
+        let (lo, hi) = pp.layers.unwrap_or((0, n_layer));
+        ensure!(hi <= n_layer && lo < hi, "param {source}: bad layer range {lo}..{hi}");
+        match e {
+            Entry::Dense(v) => {
+                ensure!(
+                    v.len() == (hi - lo) * per,
+                    "param {source}[{lo}..{hi}]: {} elements, expected {}",
+                    v.len(),
+                    (hi - lo) * per
+                );
+                for li in lo..hi {
+                    mats[li] = Some(Mat::Dense(v.clone(), (li - lo) * per));
+                }
+            }
+            Entry::Packed(p) => {
+                ensure!(
+                    p.slices.len() == hi - lo && p.slices.iter().all(|sl| sl.n == per),
+                    "param {source}[{lo}..{hi}]: packed slices do not match layer geometry"
+                );
+                for li in lo..hi {
+                    mats[li] = Some(Mat::Packed(p.clone(), li - lo));
+                }
+            }
+        }
+    }
+    mats.into_iter()
+        .enumerate()
+        .map(|(li, m)| m.ok_or_else(|| anyhow!("layer {li} of {source:?} missing from layout")))
+        .collect()
+}
+
+/// Reassemble a layer-stacked dense vector source (LayerNorm scales and
+/// biases) into per-layer copies.
+fn layer_vecs(
+    layout: &PlanLayout,
+    entries: &[Entry],
+    source: &str,
+    n_layer: usize,
+    d: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let mut vecs: Vec<Option<Vec<f32>>> = vec![None; n_layer];
+    for (pp, e) in layout.params.iter().zip(entries) {
+        if pp.source != source {
+            continue;
+        }
+        let (lo, hi) = pp.layers.unwrap_or((0, n_layer));
+        ensure!(hi <= n_layer && lo < hi, "param {source}: bad layer range {lo}..{hi}");
+        let Entry::Dense(v) = e else {
+            bail!("param {source} is packed; LayerNorm params stay dense");
+        };
+        ensure!(
+            v.len() == (hi - lo) * d,
+            "param {source}[{lo}..{hi}]: {} elements, expected {}",
+            v.len(),
+            (hi - lo) * d
+        );
+        for li in lo..hi {
+            vecs[li] = Some(v[(li - lo) * d..(li - lo + 1) * d].to_vec());
+        }
+    }
+    vecs.into_iter()
+        .enumerate()
+        .map(|(li, m)| m.ok_or_else(|| anyhow!("layer {li} of {source:?} missing from layout")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::manifest::{ParamInfo, StageManifest, StageParamRef, TierManifest};
+    use crate::quant::{DataType, QuantSpec};
+    use crate::util::rng::Rng;
+
+    const D: usize = 8;
+    const L: usize = 2;
+    const F: usize = 32;
+    const V: usize = 32;
+    const S: usize = 8;
+
+    fn tiny_tier(stages: Vec<StageManifest>) -> TierManifest {
+        TierManifest {
+            name: "tiny".into(),
+            d_model: D,
+            n_layer: L,
+            n_head: 2,
+            d_ff: F,
+            vocab: V,
+            seq: S,
+            batch_train: 2,
+            batch_eval: 4,
+            param_count: 0,
+            params: vec![
+                ParamInfo { name: "embed".into(), shape: vec![V, D] },
+                ParamInfo { name: "pos".into(), shape: vec![S, D] },
+                ParamInfo { name: "qkv".into(), shape: vec![L, D, 3 * D] },
+                ParamInfo { name: "wo".into(), shape: vec![L, D, D] },
+                ParamInfo { name: "fc1".into(), shape: vec![L, D, F] },
+                ParamInfo { name: "fc2".into(), shape: vec![L, F, D] },
+                ParamInfo { name: "ln1_s".into(), shape: vec![L, D] },
+                ParamInfo { name: "ln1_b".into(), shape: vec![L, D] },
+                ParamInfo { name: "ln2_s".into(), shape: vec![L, D] },
+                ParamInfo { name: "ln2_b".into(), shape: vec![L, D] },
+                ParamInfo { name: "lnf_s".into(), shape: vec![D] },
+                ParamInfo { name: "lnf_b".into(), shape: vec![D] },
+            ],
+            quantized_params: vec!["qkv".into(), "wo".into(), "fc1".into(), "fc2".into()],
+            fwd_hlo: "fwd_tiny.hlo.txt".into(),
+            train_hlo: "train_tiny.hlo.txt".into(),
+            acts_hlo: None,
+            stages,
+        }
+    }
+
+    fn two_stages() -> Vec<StageManifest> {
+        let sliced = |source: &str, lo, hi| StageParamRef {
+            source: source.into(),
+            layers: Some((lo, hi)),
+        };
+        vec![
+            StageManifest {
+                name: "s0".into(),
+                hlo: "a.hlo.txt".into(),
+                outputs: 1,
+                params: vec![
+                    StageParamRef { source: "embed".into(), layers: None },
+                    StageParamRef { source: "pos".into(), layers: None },
+                    sliced("qkv", 0, 1),
+                    sliced("wo", 0, 1),
+                    sliced("fc1", 0, 1),
+                    sliced("fc2", 0, 1),
+                    sliced("ln1_s", 0, 1),
+                    sliced("ln1_b", 0, 1),
+                    sliced("ln2_s", 0, 1),
+                    sliced("ln2_b", 0, 1),
+                ],
+            },
+            StageManifest {
+                name: "s1".into(),
+                hlo: "b.hlo.txt".into(),
+                outputs: 2,
+                params: vec![
+                    sliced("qkv", 1, 2),
+                    sliced("wo", 1, 2),
+                    sliced("fc1", 1, 2),
+                    sliced("fc2", 1, 2),
+                    sliced("ln1_s", 1, 2),
+                    sliced("ln1_b", 1, 2),
+                    sliced("ln2_s", 1, 2),
+                    sliced("ln2_b", 1, 2),
+                    StageParamRef { source: "lnf_s".into(), layers: None },
+                    StageParamRef { source: "lnf_b".into(), layers: None },
+                    StageParamRef { source: "embed".into(), layers: None },
+                ],
+            },
+        ]
+    }
+
+    fn checkpoint(seed: u64, tier: &TierManifest) -> Vec<(String, Vec<f32>)> {
+        let mut rng = Rng::new(seed);
+        tier.params
+            .iter()
+            .map(|p| {
+                let n: usize = p.shape.iter().product();
+                let mut v = vec![0.0f32; n];
+                if p.name.ends_with("_s") {
+                    v.iter_mut().for_each(|x| *x = 1.0);
+                } else {
+                    rng.fill_normal(&mut v, 0.1);
+                }
+                (p.name.clone(), v)
+            })
+            .collect()
+    }
+
+    /// Build a NativeModel over `layout`: quantized sources packed under
+    /// `spec` when `packed` is set, otherwise dense with the **dequantized**
+    /// weights — the two residency forms of identical numbers.
+    fn build_native(
+        tier: &TierManifest,
+        layout: &PlanLayout,
+        ckpt: &[(String, Vec<f32>)],
+        spec: &QuantSpec,
+        packed: bool,
+    ) -> NativeModel {
+        let params: Vec<NativeParam> = layout
+            .params
+            .iter()
+            .map(|pp| {
+                let (_, data) = ckpt.iter().find(|(n, _)| n == &pp.source).unwrap();
+                let per: usize = pp.shape.iter().skip(1).product::<usize>().max(1);
+                let slice = match pp.layers {
+                    Some((lo, hi)) => &data[lo * per..hi * per],
+                    None => &data[..],
+                };
+                if tier.quantized_params.iter().any(|q| q == &pp.source) {
+                    let pk = PackedParam::quantize_slice(&pp.shape, slice, spec).unwrap();
+                    if packed {
+                        NativeParam::Packed(std::sync::Arc::new(pk))
+                    } else {
+                        let mut dq = vec![0.0f32; slice.len()];
+                        pk.dequantize_into(&mut dq).unwrap();
+                        NativeParam::Dense(dq)
+                    }
+                } else {
+                    NativeParam::Dense(slice.to_vec())
+                }
+            })
+            .collect();
+        NativeModel::build(tier, layout, params).unwrap()
+    }
+
+    fn score_input(seed: u64, n_rows: usize) -> Vec<(Vec<i32>, Vec<f32>)> {
+        let mut rng = Rng::new(seed);
+        (0..n_rows)
+            .map(|_| {
+                let toks: Vec<i32> = (0..S).map(|_| rng.below(V) as i32).collect();
+                let mask: Vec<f32> =
+                    (0..S).map(|i| if i > 0 && rng.below(4) > 0 { 1.0 } else { 0.0 }).collect();
+                (toks, mask)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn packed_scores_bit_identical_to_dequantized_dense() {
+        // The tentpole invariant end to end: scoring through fused packed
+        // matmuls == scoring through dense matmuls over the dequantized
+        // weights, exactly (same accumulation order everywhere).
+        let tier = tiny_tier(vec![]);
+        let layout = PlanLayout::monolithic(&tier);
+        let ckpt = checkpoint(3, &tier);
+        let spec = QuantSpec::new(DataType::Fp, 4, Some(16));
+        let packed = build_native(&tier, &layout, &ckpt, &spec, true);
+        let dense = build_native(&tier, &layout, &ckpt, &spec, false);
+        let rows = score_input(5, 7); // crosses the batch_eval=4 chunk edge
+        let a = packed.score_rows(&rows).unwrap();
+        let b = dense.score_rows(&rows).unwrap();
+        assert_eq!(a, b);
+        assert!(a.iter().all(|(nll, _)| nll.is_finite() && *nll >= 0.0), "{a:?}");
+        assert!(a.iter().map(|(nll, _)| nll).sum::<f64>() > 0.0, "nothing scored: {a:?}");
+    }
+
+    #[test]
+    fn staged_layout_scores_match_monolithic() {
+        // A pipeline-sharded layout reassembles to the same native model:
+        // per-layer slice quantization makes the weights — and therefore
+        // the fused scores — bit-identical across plan shapes.
+        let tier_m = tiny_tier(vec![]);
+        let tier_s = tiny_tier(two_stages());
+        let mono = PlanLayout::monolithic(&tier_m);
+        let staged = PlanLayout::staged(&tier_s).unwrap();
+        let ckpt = checkpoint(11, &tier_m);
+        let spec = QuantSpec::new(DataType::Int, 3, Some(16));
+        let a = build_native(&tier_m, &mono, &ckpt, &spec, true);
+        let b = build_native(&tier_s, &staged, &ckpt, &spec, true);
+        let rows = score_input(13, 5);
+        assert_eq!(a.score_rows(&rows).unwrap(), b.score_rows(&rows).unwrap());
+    }
+
+    #[test]
+    fn build_and_score_validate_inputs() {
+        let tier = tiny_tier(vec![]);
+        let layout = PlanLayout::monolithic(&tier);
+        let ckpt = checkpoint(17, &tier);
+        let spec = QuantSpec::new(DataType::Fp, 4, Some(16));
+        let m = build_native(&tier, &layout, &ckpt, &spec, true);
+        // Short rows and out-of-vocab tokens are errors, not panics.
+        assert!(m.score_rows(&[(vec![0; S - 1], vec![0.0; S - 1])]).is_err());
+        let mut toks = vec![0i32; S];
+        toks[3] = V as i32;
+        assert!(m.score_rows(&[(toks, vec![1.0; S])]).is_err());
+        // Param-count mismatch at build time.
+        assert!(NativeModel::build(&tier, &layout, Vec::new()).is_err());
+    }
+
+    #[test]
+    fn all_masked_rows_score_zero() {
+        let tier = tiny_tier(vec![]);
+        let layout = PlanLayout::monolithic(&tier);
+        let ckpt = checkpoint(19, &tier);
+        let spec = QuantSpec::new(DataType::Fp, 4, Some(16));
+        let m = build_native(&tier, &layout, &ckpt, &spec, true);
+        let scored = m.score_rows(&[(vec![1i32; S], vec![0.0; S])]).unwrap();
+        assert_eq!(scored, vec![(0.0, 0.0)]);
+    }
+}

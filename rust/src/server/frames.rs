@@ -1,0 +1,305 @@
+//! `bin1` binary score frames: a length-prefixed wire encoding for
+//! streamed score-chunk lines.
+//!
+//! The JSON line protocol re-serializes every float on every hop: worker
+//! → router → client each print and re-parse `nll`/`ce`/`ppl` per row.
+//! A connection that negotiates frames (`{"op":"hello","frames":"bin1"}`,
+//! see [`super`'s protocol docs](super)) instead receives each streamed
+//! `{"chunk":..,"first_row":..,"rows":[..]}` line as one binary frame;
+//! requests and the terminal `{"done":true,...}` summary stay JSON, and
+//! JSON remains the default and the only format a worker must accept.
+//!
+//! # Frame layout (all integers little-endian)
+//!
+//! ```text
+//! offset 0  u8   magic 0xB1
+//! offset 1  u8   version (1)
+//! offset 2  u32  payload length (bytes after the 6-byte header)
+//! offset 6  u32  chunk index
+//! offset 10 u32  first_row
+//! offset 14 u32  row count
+//! offset 18      rows: per row  f64 nll | f64 greedy_hits | u32 tokens_scored
+//! ```
+//!
+//! Only the three independent per-row quantities travel on the wire;
+//! `ce`/`ppl` are derived at decode through the *same* `row_response`
+//! shaping as the JSON path, so a decoded frame is field-for-field
+//! identical to the line it replaced (f64 text round-trips exactly under
+//! the JSON writer's shortest-representation formatting). The fleet
+//! router forwards worker frames verbatim — [`patch_header`] renumbers
+//! `chunk`/`first_row` in place without touching the float payload, and
+//! [`rows_nll_tok`] reads the totals it needs for the terminal summary
+//! straight out of the frame.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::json::Json;
+
+/// First byte of every frame; distinguishes a frame from a JSON line
+/// (which always starts with `{`) when peeking a stream.
+pub const MAGIC: u8 = 0xB1;
+/// Wire-format version; bumped on any layout change.
+pub const VERSION: u8 = 1;
+/// Bytes before the payload: magic, version, payload length.
+pub const HEADER_BYTES: usize = 6;
+/// Fixed payload prefix: chunk, first_row, row count.
+const PREFIX_BYTES: usize = 12;
+/// Bytes per row: nll f64, greedy_hits f64, tokens_scored u32.
+const ROW_BYTES: usize = 20;
+/// Sanity cap on one frame's payload; a row cap derives from the request
+/// line cap, so anything near this is a corrupt or hostile length field.
+pub const MAX_PAYLOAD: usize = 1 << 24;
+
+/// Is this streamed line a score-chunk line (the only shape frames
+/// encode)? Terminal `done` lines and error lines stay JSON.
+pub fn is_chunk_line(j: &Json) -> bool {
+    j.opt("chunk").is_some() && j.opt("rows").is_some()
+}
+
+/// Encode one `{"chunk":..,"first_row":..,"rows":[..]}` line into `out`
+/// (cleared first). Rows carry only `nll`/`greedy_hits`/`tokens_scored`;
+/// the derived fields are reconstructed by [`decode_chunk`].
+pub fn encode_chunk_into(line: &Json, out: &mut Vec<u8>) -> Result<()> {
+    let chunk = line.get("chunk")?.as_usize()?;
+    let first_row = line.get("first_row")?.as_usize()?;
+    let rows = line.get("rows")?.as_arr()?;
+    ensure!(chunk <= u32::MAX as usize, "chunk index {chunk} exceeds frame range");
+    ensure!(first_row <= u32::MAX as usize, "first_row {first_row} exceeds frame range");
+    let payload = PREFIX_BYTES + ROW_BYTES * rows.len();
+    ensure!(payload <= MAX_PAYLOAD, "{} rows exceed one frame", rows.len());
+    out.clear();
+    out.reserve(HEADER_BYTES + payload);
+    out.push(MAGIC);
+    out.push(VERSION);
+    out.extend_from_slice(&(payload as u32).to_le_bytes());
+    out.extend_from_slice(&(chunk as u32).to_le_bytes());
+    out.extend_from_slice(&(first_row as u32).to_le_bytes());
+    out.extend_from_slice(&(rows.len() as u32).to_le_bytes());
+    for r in rows {
+        let nll = r.get("nll")?.as_f64()?;
+        let hits = r.get("greedy_hits")?.as_f64()?;
+        let ntok = r.get("tokens_scored")?.as_f64()?;
+        ensure!(
+            ntok.fract() == 0.0 && (0.0..=u32::MAX as f64).contains(&ntok),
+            "tokens_scored {ntok} is not a u32 count"
+        );
+        out.extend_from_slice(&nll.to_le_bytes());
+        out.extend_from_slice(&hits.to_le_bytes());
+        out.extend_from_slice(&(ntok as u32).to_le_bytes());
+    }
+    Ok(())
+}
+
+/// Validate a complete frame and return `(chunk, first_row, nrows)`.
+fn header(buf: &[u8]) -> Result<(u32, u32, usize)> {
+    ensure!(buf.len() >= HEADER_BYTES + PREFIX_BYTES, "frame too short ({} bytes)", buf.len());
+    ensure!(buf[0] == MAGIC, "bad frame magic {:#04x}", buf[0]);
+    ensure!(buf[1] == VERSION, "unsupported frame version {}", buf[1]);
+    let payload = u32::from_le_bytes(buf[2..6].try_into().unwrap()) as usize;
+    ensure!(
+        buf.len() == HEADER_BYTES + payload,
+        "frame length mismatch: header says {payload} payload bytes, have {}",
+        buf.len() - HEADER_BYTES
+    );
+    let chunk = u32::from_le_bytes(buf[6..10].try_into().unwrap());
+    let first_row = u32::from_le_bytes(buf[10..14].try_into().unwrap());
+    let nrows = u32::from_le_bytes(buf[14..18].try_into().unwrap()) as usize;
+    ensure!(
+        payload == PREFIX_BYTES + ROW_BYTES * nrows,
+        "frame row count {nrows} disagrees with payload length {payload}"
+    );
+    Ok((chunk, first_row, nrows))
+}
+
+/// Validate a complete frame and expose its header fields
+/// `(chunk, first_row, nrows)` — what a forwarding hop needs before
+/// renumbering with [`patch_header`].
+pub fn chunk_header(buf: &[u8]) -> Result<(u32, u32, usize)> {
+    header(buf)
+}
+
+/// Decode one frame back into the exact chunk line it encodes. Derived
+/// fields (`ce`, `ppl`) are rebuilt through the same shaping as the JSON
+/// path, so both formats deliver identical objects.
+pub fn decode_chunk(buf: &[u8]) -> Result<Json> {
+    let (chunk, first_row, nrows) = header(buf)?;
+    let mut rows = Vec::with_capacity(nrows);
+    let mut off = HEADER_BYTES + PREFIX_BYTES;
+    for _ in 0..nrows {
+        let nll = f64::from_le_bytes(buf[off..off + 8].try_into().unwrap());
+        let hits = f64::from_le_bytes(buf[off + 8..off + 16].try_into().unwrap());
+        let ntok = u32::from_le_bytes(buf[off + 16..off + 20].try_into().unwrap());
+        rows.push(super::row_response(nll, hits, ntok as f64));
+        off += ROW_BYTES;
+    }
+    Ok(Json::obj(vec![
+        ("chunk", Json::num(chunk as f64)),
+        ("first_row", Json::num(first_row as f64)),
+        ("rows", Json::Arr(rows)),
+    ]))
+}
+
+/// Renumber a forwarded frame's `chunk`/`first_row` in place — the fleet
+/// router's per-hop rewrite, done without touching the float payload.
+pub fn patch_header(buf: &mut [u8], chunk: u32, first_row: u32) -> Result<()> {
+    header(buf)?;
+    buf[6..10].copy_from_slice(&chunk.to_le_bytes());
+    buf[10..14].copy_from_slice(&first_row.to_le_bytes());
+    Ok(())
+}
+
+/// Sum a frame's `(nll, tokens_scored)` and return its row count — the
+/// accumulation the router needs for the terminal summary line.
+pub fn rows_nll_tok(buf: &[u8]) -> Result<(f64, f64, usize)> {
+    let (_, _, nrows) = header(buf)?;
+    let mut nll = 0.0f64;
+    let mut tok = 0.0f64;
+    let mut off = HEADER_BYTES + PREFIX_BYTES;
+    for _ in 0..nrows {
+        nll += f64::from_le_bytes(buf[off..off + 8].try_into().unwrap());
+        tok += u32::from_le_bytes(buf[off + 16..off + 20].try_into().unwrap()) as f64;
+        off += ROW_BYTES;
+    }
+    Ok((nll, tok, nrows))
+}
+
+/// Read one complete frame (header + payload) from `r` into `buf`. The
+/// caller has already peeked that the next byte is [`MAGIC`] (a JSON
+/// line starts with `{`, so one byte disambiguates).
+pub fn read_frame<R: std::io::Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<()> {
+    let mut head = [0u8; HEADER_BYTES];
+    r.read_exact(&mut head).context("reading frame header")?;
+    ensure!(head[0] == MAGIC, "bad frame magic {:#04x}", head[0]);
+    ensure!(head[1] == VERSION, "unsupported frame version {}", head[1]);
+    let payload = u32::from_le_bytes(head[2..6].try_into().unwrap()) as usize;
+    ensure!(
+        (PREFIX_BYTES..=MAX_PAYLOAD).contains(&payload),
+        "frame payload length {payload} out of range"
+    );
+    buf.clear();
+    buf.extend_from_slice(&head);
+    buf.resize(HEADER_BYTES + payload, 0);
+    r.read_exact(&mut buf[HEADER_BYTES..]).context("reading frame payload")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A chunk line exactly as `score_chunk` shapes it.
+    fn chunk_line(chunk: usize, first_row: usize, rows: &[(f64, f64, f64)]) -> Json {
+        let rows_json = rows
+            .iter()
+            .map(|&(nll, hits, ntok)| crate::server::row_response(nll, hits, ntok))
+            .collect();
+        Json::obj(vec![
+            ("chunk", Json::num(chunk as f64)),
+            ("first_row", Json::num(first_row as f64)),
+            ("rows", Json::Arr(rows_json)),
+        ])
+    }
+
+    #[test]
+    fn round_trip_is_field_identical() {
+        let line = chunk_line(
+            3,
+            48,
+            &[(12.75, 4.0, 16.0), (0.0, 0.0, 0.0), (1.0e-3, 1.0, 63.0)],
+        );
+        let mut buf = Vec::new();
+        encode_chunk_into(&line, &mut buf).unwrap();
+        assert_eq!(buf.len(), HEADER_BYTES + PREFIX_BYTES + 3 * ROW_BYTES);
+        let back = decode_chunk(&buf).unwrap();
+        assert_eq!(back, line);
+        // And the JSON text forms agree too (what a client would see).
+        assert_eq!(back.dump(), line.dump());
+    }
+
+    #[test]
+    fn round_trip_preserves_f64_bits() {
+        // An NLL with no short decimal form survives encode/decode
+        // bit-exactly — the point of a binary wire format.
+        let nll = 123.456_789_012_345_67_f64;
+        let line = chunk_line(0, 0, &[(nll, 7.0, 32.0)]);
+        let mut buf = Vec::new();
+        encode_chunk_into(&line, &mut buf).unwrap();
+        let back = decode_chunk(&buf).unwrap();
+        let got = back.get("rows").unwrap().as_arr().unwrap()[0]
+            .get("nll")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert_eq!(got.to_bits(), nll.to_bits());
+    }
+
+    #[test]
+    fn patch_header_renumbers_without_touching_rows() {
+        let line = chunk_line(0, 0, &[(2.5, 1.0, 8.0), (3.5, 0.0, 8.0)]);
+        let mut buf = Vec::new();
+        encode_chunk_into(&line, &mut buf).unwrap();
+        patch_header(&mut buf, 9, 144).unwrap();
+        let back = decode_chunk(&buf).unwrap();
+        assert_eq!(back.get("chunk").unwrap().as_usize().unwrap(), 9);
+        assert_eq!(back.get("first_row").unwrap().as_usize().unwrap(), 144);
+        assert_eq!(back.get("rows").unwrap(), line.get("rows").unwrap());
+    }
+
+    #[test]
+    fn rows_nll_tok_sums_the_payload() {
+        let line = chunk_line(1, 16, &[(2.0, 1.0, 8.0), (3.0, 2.0, 12.0)]);
+        let mut buf = Vec::new();
+        encode_chunk_into(&line, &mut buf).unwrap();
+        let (nll, tok, nrows) = rows_nll_tok(&buf).unwrap();
+        assert_eq!(nll, 5.0);
+        assert_eq!(tok, 20.0);
+        assert_eq!(nrows, 2);
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected() {
+        let line = chunk_line(0, 0, &[(1.0, 1.0, 4.0)]);
+        let mut buf = Vec::new();
+        encode_chunk_into(&line, &mut buf).unwrap();
+        // Bad magic.
+        let mut bad = buf.clone();
+        bad[0] = b'{';
+        assert!(decode_chunk(&bad).is_err());
+        // Bad version.
+        let mut bad = buf.clone();
+        bad[1] = 2;
+        assert!(decode_chunk(&bad).is_err());
+        // Truncated payload.
+        assert!(decode_chunk(&buf[..buf.len() - 1]).is_err());
+        // Length field disagrees with the row count.
+        let mut bad = buf.clone();
+        bad[14..18].copy_from_slice(&9u32.to_le_bytes());
+        assert!(decode_chunk(&bad).is_err());
+        // Non-chunk lines refuse to encode.
+        let done = Json::obj(vec![("done", Json::Bool(true))]);
+        assert!(!is_chunk_line(&done));
+        assert!(encode_chunk_into(&done, &mut buf).is_err());
+    }
+
+    #[test]
+    fn read_frame_consumes_exactly_one_frame() {
+        let a = chunk_line(0, 0, &[(1.0, 0.0, 4.0)]);
+        let b = chunk_line(1, 4, &[(2.0, 1.0, 4.0)]);
+        let mut wire = Vec::new();
+        let mut one = Vec::new();
+        encode_chunk_into(&a, &mut one).unwrap();
+        wire.extend_from_slice(&one);
+        encode_chunk_into(&b, &mut one).unwrap();
+        wire.extend_from_slice(&one);
+        wire.extend_from_slice(b"{\"done\":true}\n");
+        let mut r = std::io::Cursor::new(wire);
+        let mut buf = Vec::new();
+        read_frame(&mut r, &mut buf).unwrap();
+        assert_eq!(decode_chunk(&buf).unwrap(), a);
+        read_frame(&mut r, &mut buf).unwrap();
+        assert_eq!(decode_chunk(&buf).unwrap(), b);
+        // The JSON tail is untouched.
+        let rest = &r.get_ref()[r.position() as usize..];
+        assert_eq!(rest, b"{\"done\":true}\n");
+    }
+}

@@ -67,6 +67,15 @@
 //!                                       pipeline-sharded variant (per-stage
 //!                                       executables; optional per-stage
 //!                                       bit widths = mixed precision)
+//! → {"op":"load", ..., "fused":true}    native fused-kernel variant: score
+//!                                       through quant::fused's dequant×
+//!                                       matmul (packed weights never
+//!                                       expand to full f32 tensors)
+//! → {"op":"hello", "frames":"bin1"}     negotiate binary score frames for
+//!                                       this connection; replies
+//!                                       {"ok":true,"frames":"bin1"}. Any
+//!                                       other (or absent) format downgrades
+//!                                       to {"frames":"json"}, the default
 //! → {"op":"unload", "model":"gpt2like_t1@fp:4:b64"}
 //!                                       drop a variant (in-flight work
 //!                                       pins it until finished)
@@ -124,6 +133,21 @@
 //! the connection keeps serving. Only complete rows enter the score
 //! cache; partial stage activations never do.
 //!
+//! # Binary score frames (`bin1`)
+//!
+//! Frame negotiation is a **transport** concern, handled entirely inside
+//! [`pump`]: a client that sends `{"op":"hello","frames":"bin1"}` before
+//! other traffic flips its connection into frame mode, after which each
+//! streamed chunk line arrives as one length-prefixed binary frame
+//! ([`frames`]) instead of JSON text — requests, buffered responses, and
+//! the terminal `{"done":true,...}` line stay JSON, and the handler stack
+//! never sees the hello. JSON remains the default and the only format a
+//! worker must accept; an unknown `"frames"` value downgrades to
+//! `{"frames":"json"}`. The fleet router negotiates `bin1` downstream and
+//! forwards worker frames verbatim (header renumbered in place, float
+//! payload untouched), so scattered score rows cross `worker → router →
+//! client` without one per-hop float re-serialization.
+//!
 //! `score`/`choose`/`info` accept an optional `"model"` field (a registry
 //! key from `models`/`load`) to route per request; otherwise the
 //! connection's current model (set by `load`) or the registry default is
@@ -140,6 +164,7 @@
 
 pub mod batch;
 pub mod cache;
+pub mod frames;
 pub mod registry;
 
 pub use batch::Batcher;
@@ -163,6 +188,24 @@ use crate::tensor::Tensor;
 use crate::tune::{self, TunedPolicy};
 use crate::util::json::Json;
 use crate::util::pool;
+
+/// One streamed partial-response unit.
+///
+/// The streaming sink carries either a JSON line (the server's own chunk
+/// output — [`pump`] re-encodes it as a binary frame when the connection
+/// negotiated `bin1`) or an already-encoded frame forwarded verbatim (the
+/// fleet router's pass-through — [`pump`] decodes it back to JSON lines
+/// for JSON-mode clients). Terminal lines never travel here; a handler's
+/// return value is always a JSON object.
+pub enum Emit<'a> {
+    /// A JSON object to deliver as one streamed line.
+    Line(&'a Json),
+    /// A complete pre-encoded [`frames`] frame to forward.
+    Raw(&'a [u8]),
+}
+
+/// The streaming-sink callback type: one call per streamed unit.
+pub type EmitSink<'s> = dyn FnMut(Emit<'_>) -> Result<()> + 's;
 
 /// Per-connection mutable state — everything that is *not* shared.
 #[derive(Default)]
@@ -193,13 +236,10 @@ impl<'a, 'rt> Connection<'a, 'rt> {
         handle_request(self.registry, self.batcher, &mut self.core, req, None)
     }
 
-    /// Handle one request with streaming support: partial-response lines
-    /// go through `sink`; the terminal line is the return value.
-    pub fn handle_streaming(
-        &mut self,
-        req: &Json,
-        sink: &mut dyn FnMut(&Json) -> Result<()>,
-    ) -> Json {
+    /// Handle one request with streaming support: partial-response units
+    /// (JSON lines or forwarded binary frames) go through `sink`; the
+    /// terminal line is the return value.
+    pub fn handle_streaming(&mut self, req: &Json, sink: &mut EmitSink<'_>) -> Json {
         handle_request(self.registry, self.batcher, &mut self.core, req, Some(sink))
     }
 }
@@ -245,11 +285,7 @@ impl<'rt> Session<'rt> {
 
     /// Handle one request with streaming support (see
     /// [`Connection::handle_streaming`]).
-    pub fn handle_streaming(
-        &mut self,
-        req: &Json,
-        sink: &mut dyn FnMut(&Json) -> Result<()>,
-    ) -> Json {
+    pub fn handle_streaming(&mut self, req: &Json, sink: &mut EmitSink<'_>) -> Json {
         handle_request(&self.registry, None, &mut self.core, req, Some(sink))
     }
 
@@ -268,7 +304,7 @@ fn handle_request<'rt>(
     batcher: Option<&Batcher<'rt>>,
     core: &mut ConnCore,
     req: &Json,
-    sink: Option<&mut dyn FnMut(&Json) -> Result<()>>,
+    sink: Option<&mut EmitSink<'_>>,
 ) -> Json {
     core.requests += 1;
     match try_handle(registry, batcher, core, req, sink) {
@@ -463,7 +499,7 @@ fn stream_score<'rt>(
     handle: &Arc<ModelHandle<'rt>>,
     raw: &[&Json],
     chunk_rows: usize,
-    sink: &mut dyn FnMut(&Json) -> Result<()>,
+    sink: &mut EmitSink<'_>,
 ) -> Json {
     let mut chunks = 0usize;
     let mut done_rows = 0usize;
@@ -472,7 +508,7 @@ fn stream_score<'rt>(
     for chunk in raw.chunks(chunk_rows) {
         match score_chunk(cache, batcher, handle, chunk, chunks, done_rows) {
             Ok((line, nll, tok)) => {
-                if let Err(e) = sink(&line) {
+                if let Err(e) = sink(Emit::Line(&line)) {
                     // The client is gone; there is no one to stream to.
                     return Json::obj(vec![
                         ("done", Json::Bool(true)),
@@ -508,7 +544,7 @@ fn try_handle<'rt>(
     batcher: Option<&Batcher<'rt>>,
     core: &mut ConnCore,
     req: &Json,
-    sink: Option<&mut dyn FnMut(&Json) -> Result<()>>,
+    sink: Option<&mut EmitSink<'_>>,
 ) -> Result<Json> {
     match req.get("op")?.as_str()? {
         "ping" => {
@@ -657,7 +693,7 @@ fn try_handle<'rt>(
                 None => false,
             };
             if auto {
-                for k in ["bits", "dtype", "block", "pipeline", "stage_bits"] {
+                for k in ["bits", "dtype", "block", "pipeline", "stage_bits", "fused"] {
                     if req.opt(k).is_some() {
                         bail!(r#""auto":true picks the config from the policy; drop {k:?}"#);
                     }
@@ -703,7 +739,8 @@ fn try_handle<'rt>(
             let spec = registry::spec_from_parts(bits, dtype, block)?;
             // Plan shape: pipeline sharding + optional per-stage bit
             // widths (mixed precision), e.g. {"pipeline":true,
-            // "stage_bits":[16,4]}.
+            // "stage_bits":[16,4]}, and/or the native fused dequant×matmul
+            // execution backend ({"fused":true}).
             let plan = PlanRequest {
                 pipeline: match req.opt("pipeline") {
                     Some(v) => v.as_bool()?,
@@ -712,6 +749,10 @@ fn try_handle<'rt>(
                 stage_bits: match req.opt("stage_bits") {
                     Some(v) => Some(v.usizes()?),
                     None => None,
+                },
+                fused: match req.opt("fused") {
+                    Some(v) => v.as_bool()?,
+                    None => false,
                 },
             };
             let h = registry.load_plan(family, tier, spec, &plan)?;
@@ -1013,22 +1054,47 @@ fn read_line_capped<R: BufRead>(
     }
 }
 
+/// `{"op":"hello","frames":"bin1"}` → the negotiated per-connection frame
+/// mode and the reply line. Unknown (or absent) formats downgrade to
+/// JSON, so an old client talking to a new server loses nothing.
+fn hello_response(req: &Json) -> (bool, Json) {
+    let bin = req
+        .opt("frames")
+        .and_then(|v| v.as_str().ok())
+        .is_some_and(|f| f == "bin1");
+    let reply = Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("frames", Json::str(if bin { "bin1" } else { "json" })),
+    ]);
+    (bin, reply)
+}
+
 /// Pump one line-based transport through a request handler until EOF.
 /// Request lines are capped at [`MAX_REQUEST_LINE`] bytes. The handler
-/// gets a **sink** that writes streamed partial-response lines straight
-/// to the transport (flushed per line, so chunks reach the client before
+/// gets a **sink** that writes streamed partial-response units straight
+/// to the transport (flushed per unit, so chunks reach the client before
 /// scoring finishes); the handler's return value is the terminal line.
+///
+/// Frame negotiation lives here, not in the handlers: an
+/// `{"op":"hello"}` line is answered directly (the handler never sees
+/// it), and the negotiated mode shapes how sink units hit the wire —
+/// `bin1` encodes chunk [`Emit::Line`]s as binary frames and forwards
+/// [`Emit::Raw`] frames verbatim; JSON mode (the default) writes lines
+/// as-is and decodes forwarded frames back to text. Requests and
+/// terminal lines are JSON in both modes.
 ///
 /// `pub(crate)`: this is the connection-handoff seam the fleet router
 /// ([`crate::fleet`]) reuses to drive its own per-client proxy loop over
 /// the identical line protocol.
 pub(crate) fn pump<R: BufRead, W: Write>(
-    mut handle: impl FnMut(&Json, &mut dyn FnMut(&Json) -> Result<()>) -> Json,
+    mut handle: impl FnMut(&Json, &mut EmitSink<'_>) -> Json,
     mut reader: R,
     mut writer: W,
 ) -> Result<u64> {
     let mut served = 0;
+    let mut bin = false;
     let mut buf: Vec<u8> = Vec::new();
+    let mut frame: Vec<u8> = Vec::new();
     loop {
         buf.clear();
         let resp = match read_line_capped(&mut reader, &mut buf, MAX_REQUEST_LINE)? {
@@ -1040,10 +1106,32 @@ pub(crate) fn pump<R: BufRead, W: Write>(
             LineRead::Line => match std::str::from_utf8(&buf) {
                 Ok(line) if line.trim().is_empty() => continue,
                 Ok(line) => match Json::parse(line) {
+                    Ok(req) if req.opt("op").and_then(|v| v.as_str().ok()) == Some("hello") => {
+                        let (mode, reply) = hello_response(&req);
+                        bin = mode;
+                        reply
+                    }
                     Ok(req) => {
                         let w = &mut writer;
-                        let mut sink = |j: &Json| -> Result<()> {
-                            writeln!(w, "{}", j.dump())?;
+                        let fr = &mut frame;
+                        let mut sink = |e: Emit<'_>| -> Result<()> {
+                            match e {
+                                Emit::Line(j) => {
+                                    if bin && frames::is_chunk_line(j) {
+                                        frames::encode_chunk_into(j, fr)?;
+                                        w.write_all(fr)?;
+                                    } else {
+                                        writeln!(w, "{}", j.dump())?;
+                                    }
+                                }
+                                Emit::Raw(bytes) => {
+                                    if bin {
+                                        w.write_all(bytes)?;
+                                    } else {
+                                        writeln!(w, "{}", frames::decode_chunk(bytes)?.dump())?;
+                                    }
+                                }
+                            }
                             w.flush()?;
                             Ok(())
                         };

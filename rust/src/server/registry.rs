@@ -48,6 +48,7 @@ use crate::data::corpus::Corpus;
 use crate::eval::{EvalConfig, EvalResult, EvalSuite, Evaluator};
 use crate::models::manifest::{Manifest, TierManifest};
 use crate::quant::{self, PackedParam, QuantSpec};
+use crate::runtime::native::{NativeModel, NativeParam};
 use crate::runtime::{lit_f32_slice, ParamLiterals, Runtime};
 use crate::tensor::Tensor;
 use crate::tune::policy::{PolicyEntry, TunedPolicy};
@@ -66,28 +67,42 @@ pub struct PlanRequest {
     /// Per-stage bit-width overrides (requires `pipeline`); `None` =
     /// the variant's base spec everywhere.
     pub stage_bits: Option<Vec<usize>>,
+    /// Execute through the native fused dequant×matmul backend
+    /// (`runtime::native`): packed weights never expand to f32 literals;
+    /// scoring walks the k-bit bitstream inside the matmul inner loop.
+    pub fused: bool,
 }
 
 impl PlanRequest {
     /// The pipeline plan with the base spec in every stage.
     pub fn staged() -> Self {
-        PlanRequest { pipeline: true, stage_bits: None }
+        PlanRequest { pipeline: true, stage_bits: None, fused: false }
+    }
+
+    /// The monolithic plan on the native fused backend.
+    pub fn fused() -> Self {
+        PlanRequest { pipeline: false, stage_bits: None, fused: true }
     }
 
     /// Registry-key suffix distinguishing plan shapes of one spec, so
-    /// monolithic and sharded variants coexist as separate residents:
-    /// `""`, `#pipe`, or `#pipe[8,4]`.
+    /// monolithic, sharded, and fused variants coexist as separate
+    /// residents: `""`, `#pipe`, `#pipe[8,4]`, `#fused`, `#pipe#fused`, …
     pub fn suffix(&self) -> String {
-        if !self.pipeline {
-            return String::new();
-        }
-        match &self.stage_bits {
-            None => "#pipe".into(),
-            Some(b) => {
-                let bits: Vec<String> = b.iter().map(|k| k.to_string()).collect();
-                format!("#pipe[{}]", bits.join(","))
+        let mut s = if !self.pipeline {
+            String::new()
+        } else {
+            match &self.stage_bits {
+                None => "#pipe".into(),
+                Some(b) => {
+                    let bits: Vec<String> = b.iter().map(|k| k.to_string()).collect();
+                    format!("#pipe[{}]", bits.join(","))
+                }
             }
+        };
+        if self.fused {
+            s.push_str("#fused");
         }
+        s
     }
 }
 
@@ -105,8 +120,9 @@ pub struct ModelHandle<'rt> {
     /// order (`qkv` for the monolithic plan, `s1/qkv[1..2]`-style labels
     /// for pipeline slices). Empty for baseline and proxy specs (the
     /// former has nothing to pack; the latter is mixed-precision and
-    /// stays simulated).
-    pub packed: Vec<(String, PackedParam)>,
+    /// stays simulated). `Arc`-shared so the fused native backend scores
+    /// the same allocations — fused variants add zero packed bytes.
+    pub packed: Vec<(String, Arc<PackedParam>)>,
     /// Packed resident bytes per plan stage (stage name, bytes) — the
     /// governance layer's per-stage view of a sharded variant.
     pub stage_bytes: Vec<(String, usize)>,
@@ -129,14 +145,20 @@ impl<'rt> ModelHandle<'rt> {
     /// Quantize `params` and build the resident state for one plan shape.
     ///
     /// Every plan parameter (a tier tensor, or a pipeline stage's layer
-    /// slice of one) streams through **one reusable scratch buffer**:
-    /// slice → quantize under its stage's spec → pack →
-    /// `dequantize_into(scratch)` → parameter literal. Neither the
-    /// unpacked index vector nor a dequantized f32 `Tensor` survives
-    /// construction — the packed form is the only host-side weight
-    /// residency. Per-layer slice quantization makes a sharded variant's
-    /// dequantized weights bit-identical to the monolithic build under
-    /// the same spec.
+    /// slice of one) streams through **one reusable scratch buffer**,
+    /// pre-sized to the largest quantized plan param: slice → quantize
+    /// under its stage's spec → pack → `dequantize_into(scratch)` →
+    /// parameter literal. Neither the unpacked index vector nor a
+    /// dequantized f32 `Tensor` survives construction — the packed form is
+    /// the only host-side weight residency. Per-layer slice quantization
+    /// makes a sharded variant's dequantized weights bit-identical to the
+    /// monolithic build under the same spec.
+    ///
+    /// Fused variants (`plan_req.fused`) skip the dequantize step
+    /// entirely: quantized params go straight into the native fused
+    /// backend as packed residency (`Arc`-shared with [`Self::packed`], so
+    /// resident bytes are unchanged), and no XLA parameter literals are
+    /// built.
     pub fn with_plan(
         rt: &'rt Runtime,
         manifest: &Manifest,
@@ -155,11 +177,17 @@ impl<'rt> ModelHandle<'rt> {
         if spec.proxy_outlier_pct.is_some() && plan_req.pipeline {
             bail!("proxy quantization has no pipeline form (stays simulated)");
         }
-        let ev = Evaluator::with_plan(rt, manifest, tier, plan_req.pipeline)?;
-        let layout = &ev.plan().layout;
+        let simulate_only = spec.is_baseline() || spec.proxy_outlier_pct.is_some();
+        if plan_req.fused && simulate_only {
+            bail!(
+                "fused execution requires a packable quantized spec \
+                 (baseline/proxy variants have no packed residency)"
+            );
+        }
+        let mut ev = Evaluator::with_plan(rt, manifest, tier, plan_req.pipeline)?;
+        let layout = ev.plan().layout.clone();
         let stage_specs =
             quant::stage_specs(&spec, layout.n_stages(), plan_req.stage_bits.as_deref())?;
-        let simulate_only = spec.is_baseline() || spec.proxy_outlier_pct.is_some();
         if simulate_only && plan_req.stage_bits.is_none() {
             // Proxy quantization is mixed-precision (16-bit outlier columns
             // inside k-bit tensors) and has no pure packed form; baseline
@@ -182,8 +210,22 @@ impl<'rt> ModelHandle<'rt> {
         }
         let mut plits = Vec::with_capacity(layout.params.len());
         let mut packed = Vec::new();
+        let mut native_params: Vec<NativeParam> = Vec::new();
         let mut bytes_per_stage = vec![0usize; layout.n_stages()];
-        let mut scratch: Vec<f32> = Vec::new();
+        // One dequant scratch for every parameter, pre-sized to the
+        // largest quantized plan param so successive loads never
+        // reallocate (each param borrows a prefix of it).
+        let max_quant_numel = layout
+            .params
+            .iter()
+            .filter(|pp| {
+                tier.quantized_params.iter().any(|q| q == &pp.source)
+                    && !stage_specs[pp.stage].is_baseline()
+            })
+            .map(|pp| pp.numel())
+            .max()
+            .unwrap_or(0);
+        let mut scratch = vec![0.0f32; if plan_req.fused { 0 } else { max_quant_numel }];
         for pp in &layout.params {
             let (_, t) = params
                 .iter()
@@ -193,11 +235,16 @@ impl<'rt> ModelHandle<'rt> {
             let sspec = &stage_specs[pp.stage];
             let is_quantized = tier.quantized_params.iter().any(|q| q == &pp.source);
             if is_quantized && !sspec.is_baseline() {
-                let pk = PackedParam::quantize_slice(&pp.shape, data, sspec)?;
-                scratch.clear();
-                scratch.resize(data.len(), 0.0);
-                pk.dequantize_into(&mut scratch)?;
-                plits.push(lit_f32_slice(&pp.shape, &scratch)?);
+                let pk = Arc::new(PackedParam::quantize_slice(&pp.shape, data, sspec)?);
+                if plan_req.fused {
+                    // Fused variants keep only the packed form: the native
+                    // backend decodes it inside the matmul inner loop.
+                    native_params.push(NativeParam::Packed(pk.clone()));
+                } else {
+                    let buf = &mut scratch[..data.len()];
+                    pk.dequantize_into(buf)?;
+                    plits.push(lit_f32_slice(&pp.shape, buf)?);
+                }
                 bytes_per_stage[pp.stage] += pk.resident_bytes();
                 let label = if layout.is_monolithic() {
                     pp.source.clone()
@@ -205,9 +252,14 @@ impl<'rt> ModelHandle<'rt> {
                     pp.label(&layout.stages[pp.stage].name)
                 };
                 packed.push((label, pk));
+            } else if plan_req.fused {
+                native_params.push(NativeParam::Dense(data.to_vec()));
             } else {
                 plits.push(lit_f32_slice(&pp.shape, data)?);
             }
+        }
+        if plan_req.fused {
+            ev.set_native(Arc::new(NativeModel::build(tier, &layout, native_params)?));
         }
         let stage_bytes = layout
             .stages
@@ -969,9 +1021,21 @@ mod tests {
         // and mixed-precision builds of one spec must never collide.
         assert_eq!(PlanRequest::default().suffix(), "");
         assert_eq!(PlanRequest::staged().suffix(), "#pipe");
-        let mixed = PlanRequest { pipeline: true, stage_bits: Some(vec![16, 4]) };
+        let mixed = PlanRequest { pipeline: true, stage_bits: Some(vec![16, 4]), fused: false };
         assert_eq!(mixed.suffix(), "#pipe[16,4]");
-        let suffixes = [PlanRequest::default().suffix(), PlanRequest::staged().suffix(), mixed.suffix()];
+        assert_eq!(PlanRequest::fused().suffix(), "#fused");
+        let staged_fused = PlanRequest { pipeline: true, stage_bits: None, fused: true };
+        assert_eq!(staged_fused.suffix(), "#pipe#fused");
+        let mixed_fused = PlanRequest { fused: true, ..mixed.clone() };
+        assert_eq!(mixed_fused.suffix(), "#pipe[16,4]#fused");
+        let suffixes = [
+            PlanRequest::default().suffix(),
+            PlanRequest::staged().suffix(),
+            mixed.suffix(),
+            PlanRequest::fused().suffix(),
+            staged_fused.suffix(),
+            mixed_fused.suffix(),
+        ];
         let mut dedup = suffixes.to_vec();
         dedup.sort();
         dedup.dedup();

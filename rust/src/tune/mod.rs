@@ -84,6 +84,7 @@ impl Candidate {
         PlanRequest {
             pipeline: self.stage_bits.is_some(),
             stage_bits: self.stage_bits.clone(),
+            fused: false,
         }
     }
 

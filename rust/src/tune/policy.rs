@@ -63,6 +63,7 @@ impl PolicyEntry {
         PlanRequest {
             pipeline: self.stage_bits.is_some(),
             stage_bits: self.stage_bits.clone(),
+            fused: false,
         }
     }
 

@@ -2,7 +2,8 @@
 //! ephemeral ports behind the [`kbitscale::fleet`] router — routed vs
 //! direct score parity (bit-identical NLLs), mid-stream worker death and
 //! retry-on-next-worker failover, policy-aware placement under per-worker
-//! headroom, and fleet-wide stats aggregation with policy-skew detection.
+//! headroom, fleet-wide stats aggregation with policy-skew detection, and
+//! negotiated `bin1` binary-frame pass-through parity.
 //!
 //! Worker processes are simulated by leaked registries served from
 //! detached threads (they idle until the test binary exits), so workers
@@ -20,7 +21,7 @@ use kbitscale::models::manifest::Manifest;
 use kbitscale::quant::codebook::DataType;
 use kbitscale::quant::QuantSpec;
 use kbitscale::runtime::Runtime;
-use kbitscale::server::{serve_listener, ModelRegistry, ParamLoader, ServeOpts};
+use kbitscale::server::{frames, serve_listener, Emit, ModelRegistry, ParamLoader, ServeOpts};
 use kbitscale::tune::{PolicyEntry, TunedPolicy};
 use kbitscale::util::json::Json;
 
@@ -212,6 +213,90 @@ fn routed_scores_match_direct_worker_bit_for_bit() {
     });
 }
 
+#[test]
+fn router_bin1_stream_decodes_to_the_json_stream() {
+    let (reg_a, addr_a) = spawn_worker(None, None, None);
+    let (reg_b, addr_b) = spawn_worker(None, None, None);
+    let spec = QuantSpec::new(DataType::Fp, 4, Some(64));
+    let key = reg_a.load("gpt2like", "t0", spec.clone()).unwrap().key();
+    reg_b.load("gpt2like", "t0", spec).unwrap();
+
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let fleet = Fleet::new(
+        &manifest,
+        vec![WorkerSpec::parse(&addr_a).unwrap(), WorkerSpec::parse(&addr_b).unwrap()],
+        None,
+        FleetOpts {
+            io_timeout: Some(Duration::from_secs(10)),
+            probe_interval: Duration::from_secs(60),
+            push_policy: false,
+            max_conns: Some(2),
+            ..FleetOpts::default()
+        },
+    );
+    fleet.probe();
+    assert_eq!(fleet.topology().up_ids().len(), 2, "both workers must probe up");
+
+    let router_listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let router_addr = router_listener.local_addr().unwrap().to_string();
+    let req = format!(r#"{{"op":"score","model":"{key}","rows":{ROWS},"stream":true,"chunk":1}}"#);
+    std::thread::scope(|s| {
+        let router = s.spawn(|| serve_fleet(&fleet, router_listener));
+
+        // Reference connection: default JSON framing through the router.
+        let (mut jr, mut jw) = connect(&router_addr);
+        writeln!(jw, "{req}").unwrap();
+        let mut json_stream: Vec<Json> = Vec::new();
+        loop {
+            let mut line = String::new();
+            assert!(jr.read_line(&mut line).unwrap() > 0, "router hung up mid-stream");
+            let j = Json::parse(line.trim()).unwrap();
+            let done = j.opt("done").is_some();
+            json_stream.push(j);
+            if done {
+                break;
+            }
+        }
+        drop(jw);
+        drop(jr);
+
+        // bin1 connection: scattered chunks arrive as binary frames the
+        // router renumbered in place (no per-hop float re-serialization);
+        // the terminal summary stays JSON.
+        let (mut br, mut bw) = connect(&router_addr);
+        let hello = roundtrip(&mut br, &mut bw, r#"{"op":"hello","frames":"bin1"}"#);
+        assert_eq!(hello.get("frames").unwrap().as_str().unwrap(), "bin1", "{hello:?}");
+        writeln!(bw, "{req}").unwrap();
+        let mut bin_stream: Vec<Json> = Vec::new();
+        let mut frames_seen = 0usize;
+        let mut frame: Vec<u8> = Vec::new();
+        loop {
+            if br.fill_buf().unwrap().first() == Some(&frames::MAGIC) {
+                frames::read_frame(&mut br, &mut frame).unwrap();
+                bin_stream.push(frames::decode_chunk(&frame).unwrap());
+                frames_seen += 1;
+                continue;
+            }
+            let mut line = String::new();
+            assert!(br.read_line(&mut line).unwrap() > 0, "router hung up mid-stream");
+            let j = Json::parse(line.trim()).unwrap();
+            let done = j.opt("done").is_some();
+            bin_stream.push(j);
+            if done {
+                break;
+            }
+        }
+        assert_eq!(frames_seen, 5, "every chunk must arrive as a binary frame");
+        assert_eq!(json_stream.len(), bin_stream.len());
+        for (a, b) in json_stream.iter().zip(&bin_stream) {
+            assert_eq!(a.dump(), b.dump(), "bin1 router stream must decode to the JSON stream");
+        }
+        drop(bw);
+        drop(br);
+        router.join().unwrap().unwrap();
+    });
+}
+
 /// A fake worker that answers one chunk line and then drops the
 /// connection mid-stream (or drops buffered requests outright) —
 /// deterministic "worker dies mid-request" behavior no real
@@ -256,8 +341,10 @@ fn worker_death_mid_stream_fails_over_to_healthy_replica() {
     ))
     .unwrap();
     let mut lines: Vec<Json> = Vec::new();
-    let term = conn.handle_streaming(&req, &mut |j| {
-        lines.push(j.clone());
+    let term = conn.handle_streaming(&req, &mut |e: Emit<'_>| {
+        if let Emit::Line(j) = e {
+            lines.push(j.clone());
+        }
         Ok(())
     });
     // The crashy replica delivered one chunk then died: the stream must

@@ -2,8 +2,9 @@
 //! protocol — the single-model [`Session`] API in memory (no sockets),
 //! the packed-model registry + concurrent batched TCP stack, and the
 //! governance layer: LRU/TTL eviction under a byte budget, `unload`,
-//! single-flight loading, the score cache, and the serving-path
-//! regression fixes (vocab-bounded tokens, capped request lines).
+//! single-flight loading, the score cache, the serving-path regression
+//! fixes (vocab-bounded tokens, capped request lines), the fused native
+//! scoring backend, and negotiated `bin1` binary-frame parity.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -19,7 +20,8 @@ use kbitscale::quant::codebook::DataType;
 use kbitscale::quant::QuantSpec;
 use kbitscale::runtime::Runtime;
 use kbitscale::server::{
-    serve_lines, serve_listener, Connection, ModelRegistry, ParamLoader, ServeOpts, Session,
+    frames, serve_lines, serve_listener, Connection, ModelRegistry, ParamLoader, ServeOpts,
+    Session,
 };
 use kbitscale::util::json::Json;
 
@@ -585,6 +587,93 @@ fn tcp_streamed_request_returns_chunks_before_summary() {
 }
 
 // ---------------------------------------------------------------------------
+// Binary score frames (bin1)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bin1_stream_decodes_to_exactly_the_json_stream() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let reg = registry(&rt, &manifest);
+    reg.load("gpt2like", "t0", QuantSpec::new(DataType::Fp, 4, Some(64))).unwrap();
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let opts = ServeOpts {
+        workers: 2,
+        flush: Duration::from_millis(1),
+        batching: true,
+        max_conns: Some(2),
+        ..ServeOpts::default()
+    };
+    let req = r#"{"op":"score","rows":[[1,2,3],[4,5],[6,7,8],[9]],"stream":true,"chunk":2}"#;
+    std::thread::scope(|s| {
+        let server = s.spawn(|| serve_listener(&reg, listener, &opts));
+
+        // Reference connection: default JSON framing, no handshake.
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writeln!(writer, "{req}").unwrap();
+        let mut json_stream: Vec<Json> = Vec::new();
+        loop {
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).unwrap() > 0, "server hung up mid-stream");
+            let j = Json::parse(line.trim()).unwrap();
+            let done = j.opt("done").is_some();
+            json_stream.push(j);
+            if done {
+                break;
+            }
+        }
+        drop(writer);
+        drop(reader);
+
+        // bin1 connection: after the hello handshake the same request's
+        // chunks arrive as binary frames; the done-line stays JSON.
+        let stream = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut writer = stream;
+        writeln!(writer, "{{\"op\":\"hello\",\"frames\":\"bin1\"}}").unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let hello = Json::parse(line.trim()).unwrap();
+        assert_eq!(hello.get("frames").unwrap().as_str().unwrap(), "bin1", "{hello:?}");
+        writeln!(writer, "{req}").unwrap();
+        let mut bin_stream: Vec<Json> = Vec::new();
+        let mut frames_seen = 0usize;
+        let mut frame: Vec<u8> = Vec::new();
+        loop {
+            if reader.fill_buf().unwrap().first() == Some(&frames::MAGIC) {
+                frames::read_frame(&mut reader, &mut frame).unwrap();
+                bin_stream.push(frames::decode_chunk(&frame).unwrap());
+                frames_seen += 1;
+                continue;
+            }
+            let mut line = String::new();
+            assert!(reader.read_line(&mut line).unwrap() > 0, "server hung up mid-stream");
+            let j = Json::parse(line.trim()).unwrap();
+            let done = j.opt("done").is_some();
+            bin_stream.push(j);
+            if done {
+                break;
+            }
+        }
+        assert_eq!(frames_seen, 2, "both chunks must arrive as binary frames");
+        // Field-identical parity: every decoded frame dumps to the exact
+        // text the JSON framing produced (shortest-round-trip f64s travel
+        // losslessly in both formats).
+        assert_eq!(json_stream.len(), bin_stream.len());
+        for (a, b) in json_stream.iter().zip(&bin_stream) {
+            assert_eq!(a.dump(), b.dump(), "bin1 stream must decode to the JSON stream");
+        }
+        drop(writer);
+        drop(reader);
+        server.join().unwrap().unwrap();
+    });
+}
+
+// ---------------------------------------------------------------------------
 // Pipeline-sharded variants over the protocol
 // ---------------------------------------------------------------------------
 
@@ -682,6 +771,52 @@ fn pipeline_variant_loads_scores_and_accounts_per_stage() {
         err.get("error").unwrap().as_str().unwrap().contains("pipeline"),
         "{err:?}"
     );
+}
+
+#[test]
+fn fused_variant_loads_scores_and_stays_packed() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let reg = registry(&rt, &manifest);
+    let mut conn = Connection::new(&reg, None);
+
+    let loaded = conn.handle(
+        &Json::parse(r#"{"op":"load","family":"gpt2like","tier":"t0","fused":true}"#).unwrap(),
+    );
+    let key = loaded.get("model").unwrap().as_str().unwrap().to_string();
+    assert!(key.ends_with("#fused"), "{key}");
+
+    let fused = conn.handle(&Json::parse(r#"{"op":"score","tokens":[1,5,9,12,3]}"#).unwrap());
+    let fused_ce = fused.get("ce").unwrap().as_f64().unwrap();
+    assert!(fused_ce.is_finite() && fused_ce > 0.0, "{fused:?}");
+
+    // The executable build of the same spec scores to a close ce — same
+    // packed payload, but XLA's GEMM accumulates f32 in its own order,
+    // so close-not-identical is the expected relationship here.
+    let mono =
+        conn.handle(&Json::parse(r#"{"op":"load","family":"gpt2like","tier":"t0"}"#).unwrap());
+    assert_eq!(mono.get("models").unwrap().as_usize().unwrap(), 2, "backends coexist");
+    let plain = conn.handle(&Json::parse(r#"{"op":"score","tokens":[1,5,9,12,3]}"#).unwrap());
+    let plain_ce = plain.get("ce").unwrap().as_f64().unwrap();
+    assert!(
+        (fused_ce - plain_ce).abs() / plain_ce.max(1e-9) < 1e-3,
+        "fused ce {fused_ce} vs executable ce {plain_ce}"
+    );
+
+    // The packed payload is Arc-shared with the executable build: the
+    // fused variant reports the same resident footprint (no f32 copies).
+    assert_eq!(
+        loaded.get("resident_bytes").unwrap().as_usize().unwrap(),
+        mono.get("resident_bytes").unwrap().as_usize().unwrap(),
+        "fused residency must equal the packed payload"
+    );
+
+    // A simulate-only (16-bit baseline) spec has nothing to fuse.
+    let err = conn.handle(
+        &Json::parse(r#"{"op":"load","family":"gpt2like","tier":"t0","fused":true,"bits":16}"#)
+            .unwrap(),
+    );
+    assert!(err.opt("error").is_some(), "baseline spec must not fuse: {err:?}");
 }
 
 #[test]

@@ -1,0 +1,351 @@
+//! A minimal Rust lexer for the lint pass — tokens plus comments.
+//!
+//! This is not a parser: the rules in [`super::rules`] work on the flat
+//! token stream (with byte-accurate line numbers) and the comment list.
+//! The lexer therefore only has to get *boundaries* right — where strings,
+//! comments, lifetimes, and char literals start and end — so that rule
+//! pattern-matching never fires inside a string literal or doc comment,
+//! and so every finding points at the true source line. It handles the
+//! constructs that actually appear in this crate: line and nested block
+//! comments, strings with escapes (including backslash-newline
+//! continuations, which still advance the line counter), raw strings
+//! (`r"…"`, `r#"…"#`), byte strings/chars, raw identifiers (`r#fn`),
+//! char-vs-lifetime disambiguation, and numeric literals kept verbatim
+//! (`0xB1` stays `0xB1`).
+//!
+//! In the spirit of [`crate::util::json`]: a small hand-rolled scanner
+//! with zero dependencies, built for exactly the job the crate needs.
+
+/// Token classes the rules distinguish.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    /// String literal (content without quotes); raw and byte strings too.
+    Str,
+    /// Char or byte-char literal (content without quotes).
+    Char,
+    /// Lifetime (content without the leading `'`).
+    Lifetime,
+    /// Numeric literal, verbatim (suffixes and `0x` prefixes included).
+    Num,
+    /// Single-byte punctuation, verbatim.
+    Punct,
+}
+
+/// One lexed token with its 1-based source line.
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: usize,
+}
+
+impl Tok {
+    pub fn is(&self, text: &str) -> bool {
+        self.text == text
+    }
+    pub fn is_ident(&self, text: &str) -> bool {
+        self.kind == TokKind::Ident && self.text == text
+    }
+}
+
+/// One comment (line or block). `own_line` is true when no token precedes
+/// it on its starting line — an own-line `lint: allow` annotation applies
+/// to the next code line, a trailing one to its own line.
+#[derive(Debug, Clone)]
+pub struct Comment {
+    pub start_line: usize,
+    pub end_line: usize,
+    /// Text after `//` (so doc comments keep their `/` or `!` marker) or
+    /// between `/*` and `*/`.
+    pub text: String,
+    pub own_line: bool,
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b.is_ascii_alphabetic() || b == b'_' || b >= 0x80
+}
+
+fn is_ident_cont(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_' || b >= 0x80
+}
+
+fn text_of(src: &[u8], a: usize, b: usize) -> String {
+    String::from_utf8_lossy(&src[a.min(src.len())..b.min(src.len())]).into_owned()
+}
+
+/// Lex `src` into `(tokens, comments)`. Never fails: unterminated
+/// constructs extend to end-of-file, unknown bytes become punctuation —
+/// lint input is untrusted text, and the worst outcome must be an odd
+/// token, not a crash.
+pub fn scan(src: &str) -> (Vec<Tok>, Vec<Comment>) {
+    let src = src.as_bytes();
+    let n = src.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut comments: Vec<Comment> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut last_tok_line = 0usize;
+
+    macro_rules! push {
+        ($kind:expr, $text:expr, $ln:expr) => {{
+            last_tok_line = $ln;
+            toks.push(Tok { kind: $kind, text: $text, line: $ln });
+        }};
+    }
+
+    while i < n {
+        let c = src[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c == b' ' || c == b'\t' || c == b'\r' {
+            i += 1;
+            continue;
+        }
+        // Line comment (doc comments included; text keeps the marker).
+        if c == b'/' && src.get(i + 1) == Some(&b'/') {
+            let j = src[i..].iter().position(|&b| b == b'\n').map_or(n, |p| i + p);
+            comments.push(Comment {
+                start_line: line,
+                end_line: line,
+                text: text_of(src, i + 2, j),
+                own_line: last_tok_line != line,
+            });
+            i = j;
+            continue;
+        }
+        // Block comment, nesting respected.
+        if c == b'/' && src.get(i + 1) == Some(&b'*') {
+            let start = line;
+            let own = last_tok_line != start;
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if src[j] == b'\n' {
+                    line += 1;
+                    j += 1;
+                } else if src[j] == b'/' && src.get(j + 1) == Some(&b'*') {
+                    depth += 1;
+                    j += 2;
+                } else if src[j] == b'*' && src.get(j + 1) == Some(&b'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            let text_end = if j >= 2 { j - 2 } else { i + 2 };
+            comments.push(Comment {
+                start_line: start,
+                end_line: line,
+                text: text_of(src, i + 2, text_end.max(i + 2)),
+                own_line: own,
+            });
+            i = j;
+            continue;
+        }
+        if is_ident_start(c) {
+            // Raw string r"…" / r#"…"# and raw ident r#name.
+            if c == b'r' && matches!(src.get(i + 1), Some(&b'"') | Some(&b'#')) {
+                let mut j = i + 1;
+                let mut hashes = 0usize;
+                while j < n && src[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && src[j] == b'"' {
+                    let mut term = String::from("\"");
+                    term.push_str(&"#".repeat(hashes));
+                    let term = term.as_bytes();
+                    let mut k = j + 1;
+                    while k < n && !src[k..].starts_with(term) {
+                        k += 1;
+                    }
+                    let ln = line;
+                    line += src[j + 1..k.min(n)].iter().filter(|&&b| b == b'\n').count();
+                    push!(TokKind::Str, text_of(src, j + 1, k), ln);
+                    i = (k + term.len()).min(n);
+                    continue;
+                }
+                if hashes == 1 && j < n && is_ident_start(src[j]) {
+                    let mut k = j;
+                    while k < n && is_ident_cont(src[k]) {
+                        k += 1;
+                    }
+                    push!(TokKind::Ident, text_of(src, j, k), line);
+                    i = k;
+                    continue;
+                }
+            }
+            // Byte string b"…" / byte char b'…'.
+            if c == b'b' && matches!(src.get(i + 1), Some(&b'"') | Some(&b'\'')) {
+                let q = src[i + 1];
+                let mut k = i + 2;
+                while k < n && src[k] != q {
+                    if src[k] == b'\\' {
+                        k += 1;
+                        if k < n && src[k] == b'\n' {
+                            line += 1;
+                        }
+                    } else if src[k] == b'\n' {
+                        line += 1;
+                    }
+                    k += 1;
+                }
+                let kind = if q == b'"' { TokKind::Str } else { TokKind::Char };
+                push!(kind, text_of(src, i + 2, k), line);
+                i = (k + 1).min(n);
+                continue;
+            }
+            let mut k = i;
+            while k < n && is_ident_cont(src[k]) {
+                k += 1;
+            }
+            push!(TokKind::Ident, text_of(src, i, k), line);
+            i = k;
+            continue;
+        }
+        if c == b'"' {
+            let ln = line;
+            let mut k = i + 1;
+            while k < n && src[k] != b'"' {
+                if src[k] == b'\\' {
+                    // Escapes, including backslash-newline continuation:
+                    // the skipped byte may itself be a newline and must
+                    // still advance the line counter.
+                    k += 1;
+                    if k < n && src[k] == b'\n' {
+                        line += 1;
+                    }
+                } else if src[k] == b'\n' {
+                    line += 1;
+                }
+                k += 1;
+            }
+            push!(TokKind::Str, text_of(src, i + 1, k), ln);
+            i = (k + 1).min(n);
+            continue;
+        }
+        if c == b'\'' {
+            // Escaped char: '\n', '\\', '\u{..}'.
+            if src.get(i + 1) == Some(&b'\\') {
+                let mut k = i + 3;
+                while k < n && src[k] != b'\'' {
+                    k += 1;
+                }
+                push!(TokKind::Char, text_of(src, i + 1, k), line);
+                i = (k + 1).min(n);
+                continue;
+            }
+            let mut k = i + 1;
+            while k < n && is_ident_cont(src[k]) {
+                k += 1;
+            }
+            if k > i + 1 && k < n && src[k] == b'\'' {
+                // 'x' (multi-byte chars land here too) — a char literal.
+                push!(TokKind::Char, text_of(src, i + 1, k), line);
+                i = k + 1;
+                continue;
+            }
+            if k == i + 1 && k + 1 < n && src[k + 1] == b'\'' {
+                // Single punctuation char like '.' or '{'.
+                push!(TokKind::Char, text_of(src, k, k + 1), line);
+                i = k + 2;
+                continue;
+            }
+            // No closing quote: a lifetime ('a, 'static).
+            push!(TokKind::Lifetime, text_of(src, i + 1, k), line);
+            i = k;
+            continue;
+        }
+        if c.is_ascii_digit() {
+            let mut k = i;
+            while k < n && is_ident_cont(src[k]) {
+                k += 1;
+            }
+            // Float continuation: `1.5` but not `1.max(2)` or `0..n`.
+            if k < n && src[k] == b'.' && src.get(k + 1).is_some_and(|b| b.is_ascii_digit()) {
+                k += 1;
+                while k < n && is_ident_cont(src[k]) {
+                    k += 1;
+                }
+            }
+            push!(TokKind::Num, text_of(src, i, k), line);
+            i = k;
+            continue;
+        }
+        push!(TokKind::Punct, text_of(src, i, i + 1), line);
+        i += 1;
+    }
+    (toks, comments)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<(TokKind, String, usize)> {
+        let (toks, _) = scan(src);
+        toks.into_iter().map(|t| (t.kind, t.text, t.line)).collect()
+    }
+
+    #[test]
+    fn idents_puncts_and_numbers() {
+        let ts = kinds("let x = 0x2A + 2;");
+        assert_eq!(ts[0], (TokKind::Ident, "let".into(), 1));
+        assert_eq!(ts[1], (TokKind::Ident, "x".into(), 1));
+        assert_eq!(ts[3], (TokKind::Num, "0x2A".into(), 1));
+        assert_eq!(ts[5], (TokKind::Num, "2".into(), 1));
+    }
+
+    #[test]
+    fn strings_do_not_leak_tokens() {
+        let ts = kinds("let s = \"unwrap() panic! .lock()\";");
+        assert!(ts.iter().all(|t| t.0 != TokKind::Ident || t.1 != "unwrap"));
+        assert_eq!(ts.iter().filter(|t| t.0 == TokKind::Str).count(), 1);
+    }
+
+    #[test]
+    fn escaped_newline_in_string_keeps_line_numbers() {
+        let src = "let a = \"one \\\n  two\";\nlet b = 1;\n";
+        let ts = kinds(src);
+        let b = ts.iter().find(|t| t.1 == "b").expect("b token");
+        assert_eq!(b.2, 3, "token after a continuation string sits on line 3");
+    }
+
+    #[test]
+    fn raw_strings_and_raw_idents() {
+        let ts = kinds("let r = r#\"a \"quoted\" b\"#; let r#fn = 1;");
+        assert!(ts.iter().any(|t| t.0 == TokKind::Str && t.1.contains("quoted")));
+        assert!(ts.iter().any(|t| t.0 == TokKind::Ident && t.1 == "fn"));
+    }
+
+    #[test]
+    fn lifetimes_vs_chars() {
+        let ts = kinds("fn f<'a>(x: &'a str) { let c = 'x'; let nl = '\\n'; }");
+        assert!(ts.iter().any(|t| t.0 == TokKind::Lifetime && t.1 == "a"));
+        assert!(ts.iter().any(|t| t.0 == TokKind::Char && t.1 == "x"));
+    }
+
+    #[test]
+    fn nested_block_comments_and_own_line_flag() {
+        let src = "let a = 1; // trailing\n/* outer /* inner */ still */\nlet b = 2;\n";
+        let (toks, comments) = scan(src);
+        assert_eq!(comments.len(), 2);
+        assert!(!comments[0].own_line, "trailing comment shares its line with code");
+        assert!(comments[1].own_line, "block comment starts its own line");
+        let b = toks.iter().find(|t| t.is_ident("b")).expect("b token");
+        assert_eq!(b.line, 3);
+    }
+
+    #[test]
+    fn doc_comment_text_keeps_marker() {
+        let (_, comments) = scan("//! module docs\n/// item docs\n// plain\n");
+        assert_eq!(comments[0].text, "! module docs");
+        assert_eq!(comments[1].text, "/ item docs");
+        assert_eq!(comments[2].text, " plain");
+    }
+}

@@ -1,0 +1,121 @@
+//! In-tree static analysis: the `kbitscale lint` pass.
+//!
+//! A dependency-free source scanner (no `syn`, no external crates — a
+//! hand-rolled lexer in the idiom of [`crate::util::json`]) that walks
+//! `rust/src/` and enforces the crate's serving-surface invariants:
+//!
+//! - **panic-path** — no `.unwrap()` / `.expect()`, aborting macros, or
+//!   unchecked slice indexing in the network-facing modules (`server/`,
+//!   `fleet/`). A panic on a connection or scatter thread tears down a
+//!   worker mid-request; malformed input must surface as a protocol
+//!   error line instead. Exemption: `.lock().unwrap()` — the crate's
+//!   mutex-poisoning propagation convention.
+//! - **unsafe-discipline** — `unsafe` only inside the allowlisted kernel
+//!   modules (`quant/fused.rs`, `runtime/mod.rs`), each use immediately
+//!   preceded by a `// SAFETY:` comment stating the invariant.
+//! - **lock-order** — `.lock()` / `.wait()` nesting per function is
+//!   checked against the declared partial order
+//!   ([`rules::DECLARED_ORDER`]: registry → cache shard → flight;
+//!   roster → worker conn). Undeclared edges and unregistered mutex
+//!   fields are findings.
+//! - **protocol-doc** — every `"op"` dispatched by `server::try_handle`
+//!   (plus `hello` in `pump`) must appear in the protocol doc block of
+//!   `server/mod.rs` and vice versa; the bin1 wire constants stay
+//!   single-sourced in `server/frames.rs`.
+//!
+//! False positives are silenced in place with
+//! `// lint: allow(<rule>) — <reason>`; the reason is mandatory and the
+//! annotation itself is linted (unknown rule or missing justification is
+//! a `lint-allow` finding). The pass runs blocking in CI, so the tree
+//! lints clean by construction.
+
+pub mod lexer;
+pub mod rules;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use rules::{analyze_file, FileReport, Finding};
+
+/// Result of linting a whole source tree.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub findings: Vec<Finding>,
+    pub files: usize,
+    /// `lint: allow` annotations that suppressed a finding.
+    pub allows: usize,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Recursively collect `.rs` files under `root`, sorted by path so runs
+/// are deterministic.
+fn rs_files(root: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    let mut stack = vec![root.to_path_buf()];
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<PathBuf> = std::fs::read_dir(&dir)
+            .with_context(|| format!("reading {}", dir.display()))?
+            .map(|e| e.map(|e| e.path()))
+            .collect::<std::io::Result<_>>()
+            .with_context(|| format!("listing {}", dir.display()))?;
+        entries.sort();
+        for p in entries {
+            if p.is_dir() {
+                stack.push(p);
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Lint every `.rs` file under `root` (typically `rust/src`). File paths
+/// in findings are reported relative to `root` with `/` separators —
+/// the same shape the rules key on (`server/frames.rs`).
+pub fn lint_tree(root: &Path) -> Result<LintReport> {
+    let mut report = LintReport::default();
+    for path in rs_files(root)? {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .components()
+            .map(|c| c.as_os_str().to_string_lossy())
+            .collect::<Vec<_>>()
+            .join("/");
+        let src = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let file = analyze_file(&rel, &src);
+        report.findings.extend(file.findings);
+        report.allows += file.allows;
+        report.files += 1;
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The tree lints itself clean — the same invariant CI enforces.
+    /// (Skipped silently if the source tree is not present next to the
+    /// test binary's working directory, e.g. in an installed context.)
+    #[test]
+    fn own_tree_is_clean() {
+        let root = Path::new("src");
+        if !root.join("lib.rs").exists() {
+            return;
+        }
+        let report = lint_tree(root).expect("lint walks the tree");
+        assert!(report.files > 40, "walked {} files — wrong root?", report.files);
+        let msgs: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+        assert!(report.clean(), "lint findings in tree:\n{}", msgs.join("\n"));
+    }
+}

@@ -1,0 +1,814 @@
+//! The lint rules: panic paths, unsafe discipline, lock order, protocol
+//! doc exhaustiveness, and the `lint: allow` escape hatch.
+//!
+//! Every rule works on the flat token stream from [`super::lexer`] — no
+//! AST, no name resolution. That keeps the pass dependency-free and fast,
+//! at the price of being syntactic: the lock-order rule, for instance,
+//! keys on *receiver field names* (`self.models.lock()` → class
+//! `registry.models`), which works because this crate names its mutexes
+//! uniquely per subsystem. The tables below are the crate's declared
+//! invariants; a new mutex field must be registered here (and its
+//! ordering edges declared) before the tree lints clean.
+
+use std::collections::{HashMap, HashSet};
+
+use super::lexer::{Comment, Tok, TokKind};
+
+/// Rule identifiers — the names `lint: allow(<rule>)` accepts.
+pub const RULE_PANIC: &str = "panic-path";
+pub const RULE_UNSAFE: &str = "unsafe-discipline";
+pub const RULE_LOCK: &str = "lock-order";
+pub const RULE_PROTOCOL: &str = "protocol-doc";
+pub const RULE_ALLOW: &str = "lint-allow";
+
+pub const RULES: &[&str] = &[RULE_PANIC, RULE_UNSAFE, RULE_LOCK, RULE_PROTOCOL, RULE_ALLOW];
+
+/// One lint violation, pointing at a repo-relative file and 1-based line.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+// ---------------------------------------------------------------- config
+
+/// Mutex/Condvar receiver field name → lock class. The class is the unit
+/// the declared partial order ranks; several fields may share one class
+/// (a Condvar and the Mutex it pairs with).
+const LOCK_CLASSES: &[(&str, &str)] = &[
+    ("models", "registry.models"),
+    ("default_key", "registry.default"),
+    ("loading", "registry.flight"),
+    ("loaded_cv", "registry.flight"),
+    ("policy", "policy"),
+    ("policy_source", "policy"),
+    ("shards", "cache.shard"),
+    ("shard", "cache.shard"),
+    ("shard_for", "cache.shard"),
+    ("stop", "pool.latch"),
+    ("slots", "pool.slot"),
+    ("cache", "runtime.cache"),
+    ("compiling", "runtime.flight"),
+    ("compiled_cv", "runtime.flight"),
+    ("workers", "fleet.roster"),
+    ("inner", "store.inner"),
+    ("not_full", "store.inner"),
+    ("not_empty", "store.inner"),
+    ("state", "pool.latch"),
+    ("cv", "pool.latch"),
+    ("param_cache", "coordinator.params"),
+    ("params_cache", "coordinator.params"),
+    ("CACHE", "quant.codebooks"),
+];
+
+/// Receivers whose `.lock()` is not a Mutex (stdio handles).
+const LOCK_IGNORE: &[&str] = &["stdin", "stdout", "stderr"];
+
+/// The declared lock partial order: `(held, acquired)` pairs that may
+/// nest, outermost first. Checked under transitive closure; any observed
+/// nesting not reachable from these edges is an undeclared-edge finding.
+pub const DECLARED_ORDER: &[(&str, &str)] = &[
+    ("registry.models", "registry.default"),
+    ("registry.models", "cache.shard"),
+    ("cache.shard", "registry.flight"),
+    ("registry.models", "runtime.cache"),
+    ("runtime.cache", "runtime.flight"),
+    ("fleet.roster", "fleet.conn"),
+];
+
+/// Modules allowed to contain `unsafe` (each use still needs `// SAFETY:`).
+const UNSAFE_ALLOWED: &[&str] = &["quant/fused.rs", "runtime/mod.rs"];
+
+/// Macros that abort the thread — banned on network paths.
+const PANIC_MACROS: &[&str] = &["panic", "unreachable", "todo", "unimplemented"];
+
+/// Keywords that may directly precede `[` without it being an index
+/// expression (`match x[..]` never parses; `&mut [u8]` does).
+const NONINDEX_KEYWORDS: &[&str] = &[
+    "mut", "return", "in", "as", "dyn", "box", "static", "const", "let", "ref", "move", "else",
+    "match", "if",
+];
+
+fn lock_class(recv: &str) -> Option<&'static str> {
+    LOCK_CLASSES.iter().find(|(f, _)| *f == recv).map(|(_, c)| *c)
+}
+
+/// Transitive closure of [`DECLARED_ORDER`].
+fn declared_closure() -> HashSet<(&'static str, &'static str)> {
+    let mut cl: HashSet<(&'static str, &'static str)> = DECLARED_ORDER.iter().copied().collect();
+    loop {
+        let mut added = Vec::new();
+        for &(a, b) in &cl {
+            for &(c, d) in &cl {
+                if b == c && !cl.contains(&(a, d)) {
+                    added.push((a, d));
+                }
+            }
+        }
+        if added.is_empty() {
+            return cl;
+        }
+        cl.extend(added);
+    }
+}
+
+// --------------------------------------------------------------- helpers
+
+/// Parse `lint: allow(<rule>) — <reason>` annotations out of the comment
+/// list. Returns the `(line, rule)` suppression set; malformed
+/// annotations (unknown rule, missing justification) become `lint-allow`
+/// findings — the escape hatch itself is linted.
+fn parse_allows(
+    comments: &[Comment],
+    toks: &[Tok],
+    findings: &mut Vec<Finding>,
+    relpath: &str,
+) -> HashSet<(usize, &'static str)> {
+    let mut allows = HashSet::new();
+    let mut tok_lines: Vec<usize> = toks.iter().map(|t| t.line).collect();
+    tok_lines.sort_unstable();
+    tok_lines.dedup();
+    const MARK: &str = "lint: allow(";
+    for c in comments {
+        // Annotations live in plain `//` comments only: doc comments
+        // (`///`, `//!`, `/** */`) describe the convention, never carry it.
+        if c.text.starts_with(['/', '!', '*']) {
+            continue;
+        }
+        let Some(idx) = c.text.find(MARK) else { continue };
+        let rest = &c.text[idx + MARK.len()..];
+        let Some(close) = rest.find(')') else {
+            findings.push(Finding {
+                file: relpath.to_string(),
+                line: c.start_line,
+                rule: RULE_ALLOW,
+                msg: "malformed allow annotation (no closing `)`)".to_string(),
+            });
+            continue;
+        };
+        let rule_name = rest[..close].trim();
+        let mut reason = rest[close + 1..].trim();
+        for sep in ["—", "--", "-", ":"] {
+            if let Some(r) = reason.strip_prefix(sep) {
+                reason = r.trim();
+                break;
+            }
+        }
+        let Some(rule) = RULES.iter().copied().find(|r| *r == rule_name) else {
+            findings.push(Finding {
+                file: relpath.to_string(),
+                line: c.start_line,
+                rule: RULE_ALLOW,
+                msg: format!("allow names unknown rule `{rule_name}`"),
+            });
+            continue;
+        };
+        if reason.len() < 3 {
+            findings.push(Finding {
+                file: relpath.to_string(),
+                line: c.start_line,
+                rule: RULE_ALLOW,
+                msg: format!("allow({rule}) carries no justification"),
+            });
+            continue;
+        }
+        if c.own_line {
+            // Own-line annotation suppresses the next line holding code.
+            if let Some(&target) = tok_lines.iter().find(|&&l| l > c.end_line) {
+                allows.insert((target, rule));
+            }
+        } else {
+            allows.insert((c.start_line, rule));
+        }
+    }
+    allows
+}
+
+/// Token index ranges `[a, b]` covered by `#[cfg(test)] mod/fn { … }` —
+/// test code may unwrap freely.
+fn test_regions(toks: &[Tok]) -> Vec<(usize, usize)> {
+    let n = toks.len();
+    let mut ranges = Vec::new();
+    let mut i = 0usize;
+    while i < n {
+        if !(toks[i].is("#") && i + 1 < n && toks[i + 1].is("[")) {
+            i += 1;
+            continue;
+        }
+        // Scan the attribute to its matching `]`, collecting idents.
+        let mut depth = 0usize;
+        let mut j = i + 1;
+        let mut saw_cfg = false;
+        let mut saw_test = false;
+        while j < n {
+            if toks[j].is("[") {
+                depth += 1;
+            } else if toks[j].is("]") {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            } else if toks[j].kind == TokKind::Ident {
+                saw_cfg |= toks[j].text == "cfg";
+                saw_test |= toks[j].text == "test";
+            }
+            j += 1;
+        }
+        if saw_cfg && saw_test {
+            let mut k = j + 1;
+            // Skip any further attributes between cfg(test) and the item.
+            while k < n && toks[k].is("#") && k + 1 < n && toks[k + 1].is("[") {
+                let mut d2 = 0usize;
+                k += 1;
+                while k < n {
+                    if toks[k].is("[") {
+                        d2 += 1;
+                    } else if toks[k].is("]") {
+                        d2 -= 1;
+                        if d2 == 0 {
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                k += 1;
+            }
+            if k < n && (toks[k].is_ident("mod") || toks[k].is_ident("fn")) {
+                while k < n && !toks[k].is("{") {
+                    k += 1;
+                }
+                let body_start = k;
+                let mut d2 = 0usize;
+                while k < n {
+                    if toks[k].is("{") {
+                        d2 += 1;
+                    } else if toks[k].is("}") {
+                        d2 -= 1;
+                        if d2 == 0 {
+                            break;
+                        }
+                    }
+                    k += 1;
+                }
+                ranges.push((body_start, k));
+            }
+        }
+        i = j + 1;
+    }
+    ranges
+}
+
+fn in_ranges(idx: usize, ranges: &[(usize, usize)]) -> bool {
+    ranges.iter().any(|&(a, b)| a <= idx && idx <= b)
+}
+
+/// Walk back over one or more `(...)` / `[...]` groups ending at `j`,
+/// returning the index of the token before the outermost group — the
+/// receiver position for a chained call like `self.shard_for(h).lock()`.
+fn back_over_groups(toks: &[Tok], mut j: usize) -> Option<usize> {
+    loop {
+        let t = &toks[j];
+        let (close, open) = match t.text.as_str() {
+            ")" => (")", "("),
+            "]" => ("]", "["),
+            _ => return Some(j),
+        };
+        let mut depth = 0usize;
+        loop {
+            if toks[j].is(close) {
+                depth += 1;
+            } else if toks[j].is(open) {
+                depth -= 1;
+                if depth == 0 {
+                    break;
+                }
+            }
+            j = j.checked_sub(1)?;
+        }
+        j = j.checked_sub(1)?;
+    }
+}
+
+// ----------------------------------------------------------------- rules
+
+/// Rule 1 — panic paths: in network-facing modules (`server/`, `fleet/`)
+/// no `.unwrap()` / `.expect()`, no aborting macros, no unchecked slice
+/// indexing. Exemption: `.lock().unwrap()` / `.wait(..).unwrap()` — the
+/// crate-wide convention for propagating mutex poisoning (a poisoned lock
+/// means another thread already panicked; unwrapping re-raises instead of
+/// serving with torn state).
+fn rule_panic(relpath: &str, toks: &[Tok], ranges: &[(usize, usize)], findings: &mut Vec<Finding>) {
+    if !(relpath.starts_with("server/") || relpath.starts_with("fleet/")) {
+        return;
+    }
+    let n = toks.len();
+    let mut i = 0usize;
+    while i < n {
+        if in_ranges(i, ranges) {
+            i += 1;
+            continue;
+        }
+        let t = &toks[i];
+        let method_call = t.kind == TokKind::Ident
+            && (t.text == "unwrap" || t.text == "expect")
+            && i + 1 < n
+            && toks[i + 1].is("(")
+            && i >= 1
+            && toks[i - 1].is(".");
+        if method_call {
+            // Poisoning-propagation exemption: receiver is a lock()/wait()
+            // call directly.
+            let exempt = t.text == "unwrap"
+                && i >= 2
+                && toks[i - 2].is(")")
+                && back_over_groups(toks, i - 2)
+                    .is_some_and(|j| matches!(toks[j].text.as_str(), "lock" | "wait" | "wait_timeout") && toks[j].kind == TokKind::Ident);
+            if !exempt {
+                findings.push(Finding {
+                    file: relpath.to_string(),
+                    line: t.line,
+                    rule: RULE_PANIC,
+                    msg: format!("`.{}()` on a network path", t.text),
+                });
+            }
+        } else if t.kind == TokKind::Ident
+            && PANIC_MACROS.contains(&t.text.as_str())
+            && i + 1 < n
+            && toks[i + 1].is("!")
+        {
+            findings.push(Finding {
+                file: relpath.to_string(),
+                line: t.line,
+                rule: RULE_PANIC,
+                msg: format!("`{}!` on a network path", t.text),
+            });
+        } else if t.is("[") && i >= 1 {
+            let prev = &toks[i - 1];
+            let indexable = matches!(prev.kind, TokKind::Ident | TokKind::Str)
+                || prev.is(")")
+                || prev.is("]");
+            let keyword =
+                prev.kind == TokKind::Ident && NONINDEX_KEYWORDS.contains(&prev.text.as_str());
+            if indexable && !keyword {
+                findings.push(Finding {
+                    file: relpath.to_string(),
+                    line: t.line,
+                    rule: RULE_PANIC,
+                    msg: "unchecked slice/array index on a network path".to_string(),
+                });
+            }
+        }
+        i += 1;
+    }
+}
+
+/// Rule 2 — unsafe discipline: `unsafe` only in the allowlisted kernel
+/// modules, and every use immediately preceded by (or sharing a line
+/// with) a comment run containing `SAFETY:`.
+fn rule_unsafe(relpath: &str, toks: &[Tok], comments: &[Comment], findings: &mut Vec<Finding>) {
+    let mut comment_lines: HashMap<usize, Vec<&str>> = HashMap::new();
+    for c in comments {
+        for l in c.start_line..=c.end_line {
+            comment_lines.entry(l).or_default().push(&c.text);
+        }
+    }
+    for t in toks {
+        if !t.is_ident("unsafe") {
+            continue;
+        }
+        if !UNSAFE_ALLOWED.contains(&relpath) {
+            findings.push(Finding {
+                file: relpath.to_string(),
+                line: t.line,
+                rule: RULE_UNSAFE,
+                msg: "`unsafe` outside the allowlisted kernel modules".to_string(),
+            });
+            continue;
+        }
+        // Collect the same-line comment plus the contiguous run of
+        // comment lines directly above.
+        let mut seen: Vec<&str> = comment_lines.get(&t.line).cloned().unwrap_or_default();
+        let mut l = t.line - 1;
+        while let Some(texts) = comment_lines.get(&l) {
+            seen.extend(texts.iter().copied());
+            if l == 0 {
+                break;
+            }
+            l -= 1;
+        }
+        if !seen.iter().any(|s| s.contains("SAFETY:")) {
+            findings.push(Finding {
+                file: relpath.to_string(),
+                line: t.line,
+                rule: RULE_UNSAFE,
+                msg: "`unsafe` without an immediately preceding `// SAFETY:` comment".to_string(),
+            });
+        }
+    }
+}
+
+/// One lock guard the walker currently believes is held.
+struct Held {
+    cls: &'static str,
+    depth: usize,
+    let_bound: bool,
+    var: Option<String>,
+}
+
+/// Rule 3 — lock order: walk each function, track which lock classes are
+/// held (let-bound guards live until their scope closes, expression
+/// temporaries until the end of the statement, `drop(g)` releases early),
+/// and flag (a) locks on unregistered receiver fields and (b) nesting
+/// edges absent from the declared order's transitive closure.
+fn rule_lock(relpath: &str, toks: &[Tok], ranges: &[(usize, usize)], findings: &mut Vec<Finding>) {
+    let declared = declared_closure();
+    let n = toks.len();
+    let mut depth = 0usize;
+    let mut held: Vec<Held> = Vec::new();
+    let mut cur_fn = String::from("?");
+    let mut stmt_start = true;
+    let mut stmt_let = false;
+    let mut reported: HashSet<String> = HashSet::new();
+    let mut i = 0usize;
+    while i < n {
+        let t = &toks[i];
+        if t.kind == TokKind::Punct {
+            match t.text.as_str() {
+                "{" => {
+                    held.retain(|h| h.let_bound || h.depth != depth);
+                    depth += 1;
+                    stmt_start = true;
+                    stmt_let = false;
+                    i += 1;
+                    continue;
+                }
+                "}" => {
+                    depth = depth.saturating_sub(1);
+                    held.retain(|h| h.depth <= depth);
+                    stmt_start = true;
+                    stmt_let = false;
+                    i += 1;
+                    continue;
+                }
+                ";" => {
+                    held.retain(|h| h.let_bound || h.depth != depth);
+                    stmt_start = true;
+                    stmt_let = false;
+                    i += 1;
+                    continue;
+                }
+                _ => {}
+            }
+        }
+        if t.is_ident("fn") && i + 1 < n && toks[i + 1].kind == TokKind::Ident {
+            cur_fn = toks[i + 1].text.clone();
+        }
+        if stmt_start && t.kind == TokKind::Ident {
+            stmt_let = t.text == "let";
+            stmt_start = false;
+        }
+        if t.is_ident("drop")
+            && i + 2 < n
+            && toks[i + 1].is("(")
+            && toks[i + 2].kind == TokKind::Ident
+        {
+            let name = toks[i + 2].text.clone();
+            held.retain(|h| h.var.as_deref() != Some(name.as_str()));
+        }
+        let is_acquire = t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "lock" | "wait" | "wait_timeout")
+            && i + 1 < n
+            && toks[i + 1].is("(")
+            && i >= 2
+            && toks[i - 1].is(".");
+        if is_acquire {
+            let recv = back_over_groups(toks, i - 2)
+                .filter(|&j| toks[j].kind == TokKind::Ident)
+                .map(|j| toks[j].text.clone());
+            let recv_name = recv.as_deref().unwrap_or("<expr>");
+            if LOCK_IGNORE.contains(&recv_name) || in_ranges(i, ranges) {
+                i += 1;
+                continue;
+            }
+            let Some(cls) = lock_class(recv_name) else {
+                let key = format!("unreg:{cur_fn}:{recv_name}");
+                if reported.insert(key) {
+                    findings.push(Finding {
+                        file: relpath.to_string(),
+                        line: t.line,
+                        rule: RULE_LOCK,
+                        msg: format!(
+                            "lock on unregistered field `{recv_name}` (fn {cur_fn}) — add a lock class"
+                        ),
+                    });
+                }
+                i += 1;
+                continue;
+            };
+            for h in &held {
+                if h.cls != cls && !declared.contains(&(h.cls, cls)) {
+                    let key = format!("edge:{cur_fn}:{}:{cls}", h.cls);
+                    if reported.insert(key) {
+                        findings.push(Finding {
+                            file: relpath.to_string(),
+                            line: t.line,
+                            rule: RULE_LOCK,
+                            msg: format!(
+                                "undeclared lock-order edge {} -> {cls} in fn {cur_fn}",
+                                h.cls
+                            ),
+                        });
+                    }
+                }
+            }
+            // Condvar waits release and reacquire; they check ordering
+            // (above) but do not add a held guard.
+            if t.text == "lock" {
+                held.push(Held {
+                    cls,
+                    depth,
+                    let_bound: stmt_let,
+                    var: let_var(toks, i),
+                });
+            }
+        }
+        i += 1;
+    }
+}
+
+/// The `let [mut] NAME` binding of the statement containing token `i`,
+/// if any — how `drop(name)` is matched back to its guard.
+fn let_var(toks: &[Tok], i: usize) -> Option<String> {
+    let mut j = i;
+    while !matches!(toks[j].text.as_str(), ";" | "{" | "}") {
+        j = j.checked_sub(1)?;
+    }
+    j += 1;
+    if !toks.get(j)?.is_ident("let") {
+        return None;
+    }
+    j += 1;
+    if toks.get(j)?.is_ident("mut") {
+        j += 1;
+    }
+    let t = toks.get(j)?;
+    (t.kind == TokKind::Ident).then(|| t.text.clone())
+}
+
+/// Rule 4 — protocol exhaustiveness: every op dispatched in
+/// `server/mod.rs` (`try_handle` match arms plus the `hello` literal in
+/// `pump`) must appear in the `//!` protocol doc block and vice versa;
+/// and the bin1 wire constants stay single-sourced in `server/frames.rs`
+/// (no stray `0xB1` magic or layout-constant redefinitions elsewhere).
+fn rule_protocol(relpath: &str, toks: &[Tok], comments: &[Comment], findings: &mut Vec<Finding>) {
+    let n = toks.len();
+    if relpath != "server/frames.rs" {
+        let mut i = 0usize;
+        while i < n {
+            let t = &toks[i];
+            if t.kind == TokKind::Num && t.text.eq_ignore_ascii_case("0xb1") {
+                findings.push(Finding {
+                    file: relpath.to_string(),
+                    line: t.line,
+                    rule: RULE_PROTOCOL,
+                    msg: "bin1 magic literal outside server/frames.rs".to_string(),
+                });
+            }
+            if t.is_ident("const")
+                && i + 1 < n
+                && matches!(toks[i + 1].text.as_str(), "HEADER_BYTES" | "ROW_BYTES" | "PREFIX_BYTES")
+            {
+                findings.push(Finding {
+                    file: relpath.to_string(),
+                    line: t.line,
+                    rule: RULE_PROTOCOL,
+                    msg: "bin1 layout constant redefined outside server/frames.rs".to_string(),
+                });
+            }
+            i += 1;
+        }
+    }
+    if relpath != "server/mod.rs" {
+        return;
+    }
+    // Documented ops: `"op":"NAME"` occurrences in `//!` doc comments.
+    let mut documented: HashSet<String> = HashSet::new();
+    for c in comments {
+        if !c.text.starts_with('!') {
+            continue;
+        }
+        let mut rest = c.text.as_str();
+        const MARK: &str = "\"op\":\"";
+        while let Some(idx) = rest.find(MARK) {
+            rest = &rest[idx + MARK.len()..];
+            let Some(close) = rest.find('"') else { break };
+            documented.insert(rest[..close].to_string());
+            rest = &rest[close..];
+        }
+    }
+    // Dispatched ops: string-literal match arms one brace level inside the
+    // `match` of `fn try_handle`, plus the `hello` literal in `fn pump`.
+    let mut dispatched: HashSet<String> = HashSet::new();
+    let mut f = 0usize;
+    while f + 1 < n {
+        if toks[f].is_ident("fn") && toks[f + 1].is_ident("try_handle") {
+            let mut m = f;
+            while m < n && !toks[m].is_ident("match") {
+                m += 1;
+            }
+            while m < n && !toks[m].is("{") {
+                m += 1;
+            }
+            let mut d = 0usize;
+            let mut j = m;
+            while j < n {
+                if toks[j].is("{") {
+                    d += 1;
+                } else if toks[j].is("}") {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                } else if toks[j].kind == TokKind::Str && d == 1 {
+                    let nxt = toks.get(j + 1).map(|t| t.text.as_str()).unwrap_or("");
+                    let nxt2 = toks.get(j + 2).map(|t| t.text.as_str()).unwrap_or("");
+                    let prv = if j >= 1 { toks[j - 1].text.as_str() } else { "" };
+                    if (nxt == "=" && nxt2 == ">") || nxt == "|" || prv == "|" {
+                        dispatched.insert(toks[j].text.clone());
+                    }
+                }
+                j += 1;
+            }
+            break;
+        }
+        f += 1;
+    }
+    let mut f = 0usize;
+    while f + 1 < n {
+        if toks[f].is_ident("fn") && toks[f + 1].is_ident("pump") {
+            let mut j = f;
+            while j < n && !toks[j].is("{") {
+                j += 1;
+            }
+            let mut d = 0usize;
+            while j < n {
+                if toks[j].is("{") {
+                    d += 1;
+                } else if toks[j].is("}") {
+                    d -= 1;
+                    if d == 0 {
+                        break;
+                    }
+                } else if toks[j].kind == TokKind::Str && toks[j].text == "hello" {
+                    dispatched.insert("hello".to_string());
+                }
+                j += 1;
+            }
+            break;
+        }
+        f += 1;
+    }
+    if documented.is_empty() || dispatched.is_empty() {
+        findings.push(Finding {
+            file: relpath.to_string(),
+            line: 1,
+            rule: RULE_PROTOCOL,
+            msg: "could not locate protocol doc block or dispatch table".to_string(),
+        });
+        return;
+    }
+    let mut missing_doc: Vec<&String> = dispatched.difference(&documented).collect();
+    missing_doc.sort();
+    for op in missing_doc {
+        findings.push(Finding {
+            file: relpath.to_string(),
+            line: 1,
+            rule: RULE_PROTOCOL,
+            msg: format!("op `{op}` dispatched but missing from the protocol doc block"),
+        });
+    }
+    let mut missing_dispatch: Vec<&String> = documented.difference(&dispatched).collect();
+    missing_dispatch.sort();
+    for op in missing_dispatch {
+        findings.push(Finding {
+            file: relpath.to_string(),
+            line: 1,
+            rule: RULE_PROTOCOL,
+            msg: format!("op `{op}` documented but not dispatched"),
+        });
+    }
+}
+
+// ---------------------------------------------------------------- driver
+
+/// Per-file lint result: surviving findings plus how many annotations
+/// suppressed one.
+#[derive(Debug, Default)]
+pub struct FileReport {
+    pub findings: Vec<Finding>,
+    pub allows: usize,
+}
+
+/// Run every rule over one file. `relpath` is the path relative to the
+/// source root with `/` separators (`server/frames.rs`) — it selects
+/// which rules apply.
+pub fn analyze_file(relpath: &str, src: &str) -> FileReport {
+    let (toks, comments) = super::lexer::scan(src);
+    let mut findings: Vec<Finding> = Vec::new();
+    let allows = parse_allows(&comments, &toks, &mut findings, relpath);
+    let ranges = test_regions(&toks);
+    rule_panic(relpath, &toks, &ranges, &mut findings);
+    rule_unsafe(relpath, &toks, &comments, &mut findings);
+    rule_lock(relpath, &toks, &ranges, &mut findings);
+    rule_protocol(relpath, &toks, &comments, &mut findings);
+    let n_allows = allows.len();
+    findings.retain(|f| !allows.contains(&(f.line, f.rule)));
+    FileReport { findings, allows: n_allows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint(relpath: &str, src: &str) -> Vec<Finding> {
+        analyze_file(relpath, src).findings
+    }
+
+    #[test]
+    fn unwrap_on_network_path_is_flagged_and_lock_unwrap_is_not() {
+        let src = "fn f(v: Vec<u32>) { v.first().unwrap(); }";
+        assert_eq!(lint("server/x.rs", src).len(), 1);
+        assert!(lint("quant/x.rs", src).is_empty(), "rule scoped to server//fleet/");
+        let poisoning = "fn f(m: &Mutex<u32>) { m.lock().unwrap(); }";
+        assert!(
+            lint("server/x.rs", poisoning).iter().all(|f| f.rule != RULE_PANIC),
+            "lock().unwrap() is the poisoning-propagation convention"
+        );
+    }
+
+    #[test]
+    fn allow_annotation_needs_a_reason() {
+        let flagged = "fn f(v: &[u32]) {\n    // lint: allow(panic-path)\n    v.first().unwrap();\n}";
+        let fs = lint("server/x.rs", flagged);
+        assert!(fs.iter().any(|f| f.rule == RULE_ALLOW), "reasonless allow is itself flagged");
+        assert!(fs.iter().any(|f| f.rule == RULE_PANIC), "and does not suppress");
+        let ok = "fn f(v: &[u32]) {\n    // lint: allow(panic-path) — invariant: v is non-empty here\n    v.first().unwrap();\n}";
+        assert!(lint("server/x.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn test_modules_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    #[test]\n    fn t() { Some(1).unwrap(); }\n}";
+        assert!(lint("server/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn undeclared_lock_edge_is_flagged_and_declared_edge_is_not() {
+        let bad = "fn f(&self) { let g = self.workers.lock().unwrap(); let h = self.models.lock().unwrap(); }";
+        let fs = lint("fleet/x.rs", bad);
+        assert!(
+            fs.iter().any(|f| f.rule == RULE_LOCK && f.msg.contains("fleet.roster")),
+            "roster -> registry.models is not a declared edge: {fs:?}"
+        );
+        let ok = "fn f(&self) { let g = self.models.lock().unwrap(); let h = self.default_key.lock().unwrap(); }";
+        assert!(lint("server/x.rs", ok).iter().all(|f| f.rule != RULE_LOCK));
+    }
+
+    #[test]
+    fn drop_releases_a_guard() {
+        let src = "fn f(&self) { let g = self.workers.lock().unwrap(); drop(g); let h = self.models.lock().unwrap(); }";
+        assert!(lint("fleet/x.rs", src).iter().all(|f| f.rule != RULE_LOCK));
+    }
+
+    #[test]
+    fn unsafe_rules() {
+        let outside = "fn f() { unsafe { core::hint::unreachable_unchecked() } }";
+        assert!(lint("server/x.rs", outside).iter().any(|f| f.rule == RULE_UNSAFE));
+        let no_comment = "fn f() { unsafe { g() } }";
+        assert!(lint("runtime/mod.rs", no_comment).iter().any(|f| f.rule == RULE_UNSAFE));
+        let ok = "fn f() {\n    // SAFETY: g has no preconditions\n    unsafe { g() }\n}";
+        assert!(lint("runtime/mod.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn protocol_doc_mismatch_both_directions() {
+        let src = "//! `{\"op\":\"ping\"}` and `{\"op\":\"ghost\"}`\nfn try_handle(op: &str) {\n    match op {\n        \"ping\" => {}\n        \"extra\" => {}\n        _ => {}\n    }\n}\n";
+        let fs = lint("server/mod.rs", src);
+        assert!(fs.iter().any(|f| f.msg.contains("`extra` dispatched but missing")));
+        assert!(fs.iter().any(|f| f.msg.contains("`ghost` documented but not dispatched")));
+    }
+
+    #[test]
+    fn declared_order_closure_is_transitive() {
+        let cl = declared_closure();
+        assert!(cl.contains(&("registry.models", "registry.flight")), "models -> shard -> flight");
+    }
+}

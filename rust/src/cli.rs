@@ -13,6 +13,7 @@
 //!                    --policy runs/policy.json --tcp ...     # N serve workers
 //! kbitscale demo     --tier t2                               # generate text, fp16 vs 4-bit
 //! kbitscale status                                           # what exists on disk
+//! kbitscale lint     [--path rust/src]                       # in-tree static analysis
 //! ```
 
 use std::path::PathBuf;
@@ -82,7 +83,7 @@ impl Ctx {
 pub fn main_with_args(argv: Vec<String>) -> Result<()> {
     crate::util::progress::init_logging();
     let Some(cmd) = argv.first().cloned() else {
-        bail!("usage: kbitscale <train|sweep|figures|analyze|quantize|tune|demo|serve|fleet|status> [options]\n(see README.md)");
+        bail!("usage: kbitscale <train|sweep|figures|analyze|quantize|tune|demo|serve|fleet|status|lint> [options]\n(see README.md)");
     };
     let rest = argv[1..].to_vec();
     match cmd.as_str() {
@@ -96,6 +97,7 @@ pub fn main_with_args(argv: Vec<String>) -> Result<()> {
         "serve" => cmd_serve(&rest),
         "fleet" => cmd_fleet(&rest),
         "status" => cmd_status(&rest),
+        "lint" => cmd_lint(&rest),
         other => bail!("unknown subcommand {other:?}"),
     }
 }
@@ -709,6 +711,41 @@ fn cmd_fleet(raw: &[String]) -> Result<()> {
         }
         served
     })
+}
+
+/// `kbitscale lint`: run the in-tree static-analysis pass
+/// ([`crate::analysis`]) over the crate's own sources (or `--path`).
+/// Exits nonzero when any finding survives — the blocking CI contract.
+fn cmd_lint(raw: &[String]) -> Result<()> {
+    let spec = ArgSpec::new("lint", "static analysis: panic paths, unsafe, lock order, protocol doc")
+        .opt("path", None, "source root to lint (default: rust/src or src, whichever exists)");
+    let args = spec.parse(raw)?;
+    let root = match args.opt_get("path") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            let candidates = [PathBuf::from("rust/src"), PathBuf::from("src")];
+            match candidates.iter().find(|p| p.join("lib.rs").exists()) {
+                Some(p) => p.clone(),
+                None => bail!(
+                    "cannot find a source root (tried rust/src and src) — pass --path explicitly"
+                ),
+            }
+        }
+    };
+    let report = crate::analysis::lint_tree(&root)?;
+    for f in &report.findings {
+        println!("{f}");
+    }
+    println!(
+        "lint: {} finding(s) across {} files ({} allows)",
+        report.findings.len(),
+        report.files,
+        report.allows
+    );
+    if !report.clean() {
+        bail!("lint failed with {} finding(s)", report.findings.len());
+    }
+    Ok(())
 }
 
 fn cmd_status(raw: &[String]) -> Result<()> {

@@ -127,7 +127,10 @@ impl<'f> FleetConn<'f> {
             self.fail_worker(id, &e);
             return Err(e);
         }
-        let r = attempt(self.clients.get_mut(&id).expect("client just ensured"));
+        let r = match self.clients.get_mut(&id) {
+            Some(c) => attempt(c),
+            None => Err(anyhow!("worker {id} lost its client after ensure")),
+        };
         match r {
             Err(_) if had_cached && may_retry() => {
                 self.clients.remove(&id);
@@ -135,7 +138,10 @@ impl<'f> FleetConn<'f> {
                     self.fail_worker(id, &e);
                     return Err(e);
                 }
-                let r2 = attempt(self.clients.get_mut(&id).expect("client just ensured"));
+                let r2 = match self.clients.get_mut(&id) {
+                    Some(c) => attempt(c),
+                    None => Err(anyhow!("worker {id} lost its client after ensure")),
+                };
                 if let Err(e) = &r2 {
                     self.fail_worker(id, e);
                 }
@@ -401,7 +407,9 @@ impl<'f> FleetConn<'f> {
     /// Roster said resident, the worker disagreed: fix the roster and
     /// replay the load so the next attempt can land.
     fn reload_stale(&mut self, id: usize, key: Option<&str>) -> Result<()> {
-        let key = key.expect("stale residency implies a keyed request");
+        let Some(key) = key else {
+            bail!("worker {id} reported stale residency for an unkeyed request")
+        };
         self.fleet.topology().note_unloaded(id, key);
         self.ensure_resident(id, key)
     }
@@ -456,9 +464,10 @@ impl<'f> FleetConn<'f> {
         let results: Vec<Result<Json>> = std::thread::scope(|s| {
             let joins: Vec<_> = blocks
                 .iter()
-                .enumerate()
-                .map(|(i, &(a, b))| {
-                    let addr = addr_of(reps[i]);
+                .zip(reps)
+                .map(|(&(a, b), &rep)| {
+                    let addr = addr_of(rep);
+                    // lint: allow(panic-path) — block bounds come from split_blocks(rows.len(), ..), always in range
                     let sub = sub_score_request(key, &rows[a..b], false, None);
                     s.spawn(move || -> Result<Json> {
                         let mut c = WorkerClient::connect(&addr, io_t)?;
@@ -468,20 +477,21 @@ impl<'f> FleetConn<'f> {
                 .collect();
             joins
                 .into_iter()
-                .map(|j| j.join().expect("scatter thread panicked"))
+                .map(|j| j.join().unwrap_or_else(|_| Err(anyhow!("scatter thread panicked"))))
                 .collect()
         });
         let mut merged: Vec<Json> = Vec::with_capacity(rows.len());
-        for (i, r) in results.into_iter().enumerate() {
+        for (i, ((&(a, b), &rep), r)) in
+            blocks.iter().zip(reps).zip(results).enumerate()
+        {
             let resp = match r {
                 Ok(resp) if is_not_resident_error(&resp) => {
                     // The roster was stale (evicted worker-side between
                     // probes): correct it and retry the block on another
                     // replica — unlike other semantic errors, this one
                     // is not reproducible fleet-wide.
-                    self.fleet.topology().note_unloaded(reps[i], key);
-                    let (a, b) = blocks[i];
-                    self.retry_block(key, &rows[a..b], reps[i]).with_context(|| {
+                    self.fleet.topology().note_unloaded(rep, key);
+                    self.retry_block(key, block_rows(rows, a, b)?, rep).with_context(|| {
                         format!("scatter block {i} hit stale residency; retry failed too")
                     })?
                 }
@@ -491,16 +501,15 @@ impl<'f> FleetConn<'f> {
                         // fault) would fail identically elsewhere.
                         bail!(
                             "worker {}: {}",
-                            addr_of(reps[i]),
+                            addr_of(rep),
                             e.as_str().unwrap_or("scoring error")
                         );
                     }
                     resp
                 }
                 Err(e) => {
-                    self.fail_worker(reps[i], &e);
-                    let (a, b) = blocks[i];
-                    self.retry_block(key, &rows[a..b], reps[i]).with_context(|| {
+                    self.fail_worker(rep, &e);
+                    self.retry_block(key, block_rows(rows, a, b)?, rep).with_context(|| {
                         format!("scatter block {i} failed ({e:#}); failover retry failed too")
                     })?
                 }
@@ -577,10 +586,10 @@ impl<'f> FleetConn<'f> {
         std::thread::scope(|s| {
             let mut joins: Vec<Option<std::thread::ScopedJoinHandle<'_, Result<()>>>> =
                 Vec::with_capacity(blocks.len());
-            for (i, &(a, b)) in blocks.iter().enumerate() {
-                let addr = addr_of(reps[i]);
+            for ((&(a, b), &rep), q) in blocks.iter().zip(reps).zip(&queues) {
+                let addr = addr_of(rep);
+                // lint: allow(panic-path) — block bounds come from split_blocks(rows.len(), ..), always in range
                 let sub = sub_score_request(key, &rows[a..b], true, chunk.as_ref());
-                let q = &queues[i];
                 joins.push(Some(s.spawn(move || -> Result<()> {
                     // The queue MUST close on every exit path — an early
                     // error (a failed connect included) would otherwise
@@ -609,8 +618,9 @@ impl<'f> FleetConn<'f> {
                     r
                 })));
             }
-            'blocks: for (i, q) in queues.iter().enumerate() {
-                let base = blocks[i].0;
+            'blocks: for (((q, &(base, _)), &rep), join_slot) in
+                queues.iter().zip(&blocks).zip(reps).zip(joins.iter_mut())
+            {
                 while let Some(item) = q.pop() {
                     let write_failed = match item {
                         ScatterChunk::Line(line) => {
@@ -653,16 +663,18 @@ impl<'f> FleetConn<'f> {
                     }
                     chunks_out += 1;
                 }
-                let handle = joins[i].take().expect("block joined once");
-                let joined = handle.join().expect("scatter thread panicked");
+                let Some(handle) = join_slot.take() else { continue };
+                let joined = handle
+                    .join()
+                    .unwrap_or_else(|_| Err(anyhow!("scatter thread panicked")));
                 if let Err(e) = joined {
                     let msg = format!("{e:#}");
                     if is_io_error(&e) {
-                        fleet.topology().mark_down(reps[i], &msg);
+                        fleet.topology().mark_down(rep, &msg);
                     } else if msg.contains("not resident") {
                         // Stale roster residency: correct it so the
                         // *next* request routes (and reloads) right.
-                        fleet.topology().note_unloaded(reps[i], key);
+                        fleet.topology().note_unloaded(rep, key);
                     }
                     failure = Some(msg);
                     break 'blocks;
@@ -1145,6 +1157,15 @@ fn split_blocks(n: usize, k: usize) -> Vec<(usize, usize)> {
     out
 }
 
+/// Checked view of one scatter block's rows: a malformed block table is a
+/// routing bug surfaced as a protocol error, never an out-of-bounds panic
+/// on a connection thread.
+fn block_rows(rows: &[Json], a: usize, b: usize) -> Result<&[Json]> {
+    rows.get(a..b).with_context(|| {
+        format!("scatter block {a}..{b} out of range ({} rows)", rows.len())
+    })
+}
+
 /// The per-block scatter sub-request: the same score op a direct client
 /// would send, routed to one replica.
 fn sub_score_request(key: &str, rows: &[Json], stream: bool, chunk: Option<&Json>) -> Json {
@@ -1182,7 +1203,11 @@ enum ScatterChunk {
 fn patch_scatter_frame(buf: &mut [u8], chunk: usize, base: usize) -> Result<(f64, f64, usize)> {
     let (_, first_row, _) = frames::chunk_header(buf)?;
     let sums = frames::rows_nll_tok(buf)?;
-    frames::patch_header(buf, chunk as u32, first_row + base as u32)?;
+    let global_first = u32::try_from(base)
+        .ok()
+        .and_then(|b| first_row.checked_add(b))
+        .ok_or_else(|| anyhow!("chunk renumber overflow: first_row {first_row} + base {base}"))?;
+    frames::patch_header(buf, chunk as u32, global_first)?;
     Ok(sums)
 }
 
@@ -1229,17 +1254,20 @@ pub(crate) fn parse_variant_key(key: &str) -> Result<VariantKey> {
         None => (rest, false),
     };
     let (spec_str, plan_str) = match rest.find('#') {
-        Some(i) => (&rest[..i], Some(&rest[i..])),
+        Some(i) => {
+            let (spec, plan) = rest.split_at(i);
+            (spec, Some(plan))
+        }
         None => (rest, None),
     };
     let parts: Vec<&str> = spec_str.split(':').collect();
-    if parts.len() != 3 {
+    let &[dtype_s, bits_s, block_s] = parts.as_slice() else {
         // Exponent-bit/centering/proxy specs never come from policy or
         // load responses; refusing them here keeps replay honest.
         bail!("cannot replay load for spec {spec_str:?} (want dtype:bits:bBLOCK)");
-    }
-    let bits: usize = parts[1].parse().map_err(|_| anyhow!("bad bits in registry key {key:?}"))?;
-    let block: usize = match parts[2] {
+    };
+    let bits: usize = bits_s.parse().map_err(|_| anyhow!("bad bits in registry key {key:?}"))?;
+    let block: usize = match block_s {
         "bnone" => 0,
         b => b
             .strip_prefix('b')
@@ -1267,7 +1295,7 @@ pub(crate) fn parse_variant_key(key: &str) -> Result<VariantKey> {
     };
     Ok(VariantKey {
         model_key: model_key.to_string(),
-        dtype: parts[0].to_string(),
+        dtype: dtype_s.to_string(),
         bits,
         block,
         pipeline,

@@ -39,16 +39,14 @@ impl WorkerSpec {
     /// `--worker` format).
     pub fn parse(s: &str) -> Result<WorkerSpec> {
         let parts: Vec<&str> = s.split(':').collect();
-        match parts.len() {
-            2 if !parts[0].is_empty() && !parts[1].is_empty() => {
+        match parts.as_slice() {
+            [host, port] if !host.is_empty() && !port.is_empty() => {
                 Ok(WorkerSpec { addr: s.to_string(), budget: None })
             }
-            3 if !parts[0].is_empty() && !parts[1].is_empty() => Ok(WorkerSpec {
-                addr: format!("{}:{}", parts[0], parts[1]),
+            [host, port, budget] if !host.is_empty() && !port.is_empty() => Ok(WorkerSpec {
+                addr: format!("{host}:{port}"),
                 budget: Some(
-                    parts[2]
-                        .parse()
-                        .map_err(|_| anyhow!("bad budget in worker spec {s:?}"))?,
+                    budget.parse().map_err(|_| anyhow!("bad budget in worker spec {s:?}"))?,
                 ),
             }),
             _ => bail!("bad worker spec {s:?} (want host:port or host:port:budget)"),
@@ -253,7 +251,15 @@ impl Topology {
                     })
                 })
                 .collect();
-            joins.into_iter().map(|j| j.join().expect("probe thread panicked")).collect()
+            joins
+                .into_iter()
+                .enumerate()
+                .map(|(id, j)| {
+                    j.join().unwrap_or_else(|_| {
+                        (id, String::new(), Err(anyhow!("probe thread panicked")))
+                    })
+                })
+                .collect()
         });
         for (id, addr, result) in probed {
             match result {
@@ -479,10 +485,10 @@ impl WorkerClient {
             .reader
             .fill_buf()
             .with_context(|| format!("reading from worker {}", self.addr))?;
-        if buf.is_empty() {
-            bail!("worker {} hung up", self.addr);
+        match buf.first() {
+            Some(&b) => Ok(b),
+            None => bail!("worker {} hung up", self.addr),
         }
-        Ok(buf[0])
     }
 
     fn read_response(&mut self) -> Result<Json> {

@@ -36,10 +36,42 @@
 //! | [`tune`] | precision autotuner: candidate search over bits × block × dtype × per-stage widths, calibration eval, Pareto-frontier `TunedPolicy` artifacts |
 //! | [`report`] | ASCII figures and CSV emission for every paper table/figure |
 //! | [`bench_support`] | shared harness for the `benches/` reproduction binaries |
+//! | [`analysis`] | in-tree static analysis (`kbitscale lint`): panic-path, unsafe-discipline, lock-order, and protocol-doc rules over a hand-rolled lexer |
 //!
 //! The image's vendored crate set has no serde/clap/tokio/criterion, so the
 //! JSON codec, CLI parser, thread pool, bench harness, and property-testing
 //! helper are implemented in [`util`] from scratch (DESIGN.md §3).
+//!
+//! ## Static analysis & invariants
+//!
+//! `kbitscale lint` ([`analysis`]) runs blocking in CI and keeps four
+//! serving-surface invariants machine-checked:
+//!
+//! * **Panic paths.** Nothing in `server/` or `fleet/` may `.unwrap()`,
+//!   `.expect()`, call an aborting macro, or index a slice unchecked:
+//!   malformed network input must come back as a protocol error line
+//!   with the connection (and worker) surviving. The one exemption is
+//!   `.lock().unwrap()` / `.wait(..).unwrap()` — the crate-wide
+//!   convention for propagating mutex poisoning (a poisoned lock means
+//!   another thread already panicked; re-raising beats serving torn
+//!   state).
+//! * **Unsafe discipline.** `unsafe` lives only in `quant/fused.rs` and
+//!   `runtime/mod.rs`, and every use is immediately preceded by a
+//!   `// SAFETY:` comment stating the invariant it relies on.
+//! * **Lock order.** Mutex/Condvar nesting is checked against the
+//!   declared partial order ([`analysis::rules::DECLARED_ORDER`]):
+//!   `registry.models → {registry.default, cache.shard → registry.flight,
+//!   runtime.cache → runtime.flight}` and `fleet.roster → fleet.conn`.
+//!   A new mutex field must be registered with a lock class (and any new
+//!   nesting declared) before the tree lints clean.
+//! * **Protocol doc.** The op table documented in `server`'s module docs
+//!   is diffed against the ops `try_handle`/`pump` actually dispatch,
+//!   and the bin1 wire-layout constants stay single-sourced in
+//!   `server::frames`.
+//!
+//! False positives are silenced in place with
+//! `// lint: allow(<rule>) — <reason>`; the justification is mandatory
+//! and the annotation itself is linted.
 
 pub mod util;
 pub mod config;
@@ -58,6 +90,7 @@ pub mod scaling;
 pub mod tune;
 pub mod report;
 pub mod bench_support;
+pub mod analysis;
 pub mod cli;
 
 /// Crate-wide result type.

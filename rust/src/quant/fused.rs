@@ -73,13 +73,10 @@ pub fn active_backend() -> Backend {
 pub fn decode_range(p: &PackedTensor, lo: usize, hi: usize, out: &mut [f32]) -> Result<()> {
     ensure!(lo <= hi && hi <= p.n, "decode_range {lo}..{hi} out of bounds for {} elements", p.n);
     ensure!(out.len() == hi - lo, "decode_range: buffer {} != span {}", out.len(), hi - lo);
-    ensure!(
-        p.packed.len() * 32 >= p.n * p.bits,
-        "packed stream too short: {} words for {} x {}-bit",
-        p.packed.len(),
-        p.n,
-        p.bits
-    );
+    // Cross-field invariants (block >= 1, absmax/means table lengths,
+    // stream length): a hand-built tensor must error here, not panic in
+    // the decode loop below.
+    p.validate()?;
     let values = p.codebook.values();
     let k = p.bits;
     let mask = if k >= 8 { 0xFFu32 } else { (1u32 << k) - 1 };
@@ -95,7 +92,14 @@ pub fn decode_range(p: &PackedTensor, lo: usize, hi: usize, out: &mut [f32]) -> 
         if off + k > 32 {
             v |= p.packed[word + 1] << (32 - off);
         }
-        *o = values[(v & mask) as usize] * amax + mean;
+        // Codebooks may hold fewer than 2^k values (int codebooks drop
+        // one), so a corrupt bitstream can encode an index past the
+        // table: reject it, don't index past the slice.
+        let idx = (v & mask) as usize;
+        let Some(&val) = values.get(idx) else {
+            anyhow::bail!("bitstream index {idx} out of range for {}-entry codebook", values.len());
+        };
+        *o = val * amax + mean;
         bitpos += k;
         i += 1;
     }
@@ -204,6 +208,9 @@ fn axpy_scalar(a: f32, w: &[f32], out: &mut [f32]) {
 /// rounding and would diverge from the scalar path in the last bit.
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
+// SAFETY: callers must ensure AVX2 is available (checked via
+// `is_x86_feature_detected!` before [`Backend::Avx2`] is ever selected);
+// all loads/stores are unaligned intrinsics over in-bounds slice ranges.
 unsafe fn axpy_avx2(a: f32, w: &[f32], out: &mut [f32]) {
     use std::arch::x86_64::*;
     let n = w.len();

@@ -14,7 +14,7 @@
 //! caller-owned scratch buffer — the serving layer never materializes an
 //! unpacked `Vec<u8>` index copy or keeps duplicate f32 weights alive.
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use super::blockwise::QuantizedTensor;
 use super::codebook::Codebook;
@@ -168,6 +168,50 @@ impl PackedTensor {
         })
     }
 
+    /// Check the cross-field invariants every bitstream decoder relies on.
+    ///
+    /// `PackedTensor` fields are public (serving and test code builds them
+    /// directly), so a decoder cannot assume they are mutually consistent:
+    /// a hand-built or corrupted tensor must surface as an error from the
+    /// decode entry points — never a panic, out-of-bounds index, or
+    /// divide-by-zero on a serving thread.
+    pub fn validate(&self) -> Result<()> {
+        if !(1..=8).contains(&self.bits) {
+            bail!("unsupported bit width {} (want 1..=8)", self.bits);
+        }
+        if self.block == 0 {
+            bail!("block size must be >= 1");
+        }
+        let blocks = self.n.div_ceil(self.block);
+        if self.absmax.len() != blocks {
+            bail!(
+                "absmax has {} entries; {} elements in blocks of {} need {}",
+                self.absmax.len(),
+                self.n,
+                self.block,
+                blocks
+            );
+        }
+        if let Some(m) = &self.means {
+            if m.len() != blocks {
+                bail!("means has {} entries for {} blocks", m.len(), blocks);
+            }
+        }
+        let need = self
+            .n
+            .checked_mul(self.bits)
+            .with_context(|| format!("bitstream length overflows: {} x {}-bit", self.n, self.bits))?;
+        if self.packed.len().saturating_mul(32) < need {
+            bail!(
+                "packed stream too short: {} words for {} x {}-bit",
+                self.packed.len(),
+                self.n,
+                self.bits
+            );
+        }
+        Ok(())
+    }
+
     /// Streaming dequantize: decode k-bit indices word-by-word straight
     /// into `out` (length must equal `self.n`) without materializing the
     /// unpacked index vector. `out` is typically a reusable scratch buffer
@@ -176,14 +220,7 @@ impl PackedTensor {
         if out.len() != self.n {
             bail!("dequantize_into: buffer len {} != element count {}", out.len(), self.n);
         }
-        if self.packed.len() * 32 < self.n * self.bits {
-            bail!(
-                "packed stream too short: {} words for {} x {}-bit",
-                self.packed.len(),
-                self.n,
-                self.bits
-            );
-        }
+        self.validate()?;
         let values = self.codebook.values();
         let k = self.bits;
         let mask = if k >= 8 { 0xFFu32 } else { (1u32 << k) - 1 };
@@ -200,7 +237,14 @@ impl PackedTensor {
                 if off + k > 32 {
                     v |= self.packed[word + 1] << (32 - off);
                 }
-                *o = values[(v & mask) as usize] * amax + mean;
+                // Codebooks may hold fewer than 2^k values (int codebooks
+                // drop one), so a corrupt bitstream can encode an index
+                // past the table: reject it, don't index past the slice.
+                let idx = (v & mask) as usize;
+                let Some(&val) = values.get(idx) else {
+                    bail!("bitstream index {idx} out of range for {}-entry codebook", values.len());
+                };
+                *o = val * amax + mean;
                 bitpos += k;
             }
         }

@@ -39,7 +39,10 @@ pub struct Executable {
     pub path: PathBuf,
 }
 
+// SAFETY: see the struct docs — PJRT CPU executables are immutable and
+// internally synchronized; multi-threaded execution is the documented model.
 unsafe impl Send for Executable {}
+// SAFETY: same argument as the Send impl above.
 unsafe impl Sync for Executable {}
 
 /// The process-wide runtime: one PJRT CPU client + executable cache.
@@ -53,7 +56,10 @@ pub struct Runtime {
     compiled_cv: Condvar,
 }
 
+// SAFETY: the PJRT client is internally synchronized (see [`Executable`]);
+// all other Runtime state is behind std Mutex/Condvar.
 unsafe impl Send for Runtime {}
+// SAFETY: same argument as the Send impl above.
 unsafe impl Sync for Runtime {}
 
 impl Runtime {
@@ -189,7 +195,10 @@ pub fn lit_f32_slice(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
 /// handles Send/Sync.
 pub struct ParamLiterals(pub Vec<xla::Literal>);
 
+// SAFETY: see the struct docs — literals are immutable after construction
+// and PJRT execution only reads them.
 unsafe impl Send for ParamLiterals {}
+// SAFETY: same argument as the Send impl above.
 unsafe impl Sync for ParamLiterals {}
 
 /// i32 data → literal of `shape`.

@@ -141,8 +141,9 @@ impl<'rt> Batcher<'rt> {
             // Group by resident model (arrival order preserved) and run
             // one forward execution per group. Same variant == same Arc
             // from the registry, so pointer identity is the group key.
-            while !batch.is_empty() {
-                let g = batch[0].handle.clone();
+            loop {
+                let Some(first) = batch.first() else { break };
+                let g = first.handle.clone();
                 let (group, rest): (Vec<ScoreJob>, Vec<ScoreJob>) =
                     batch.into_iter().partition(|j| Arc::ptr_eq(&j.handle, &g));
                 batch = rest;
@@ -172,7 +173,10 @@ fn rows_for<'rt>(batch: &[ScoreJob<'rt>], handle: &Arc<ModelHandle<'rt>>) -> usi
 /// sends ignore disconnects (a client may have hung up mid-flight; that
 /// is its problem, not the dispatcher's).
 fn execute_group(mut jobs: Vec<ScoreJob<'_>>, cache: Option<&ScoreCache>) {
-    let handle = jobs[0].handle.clone();
+    let handle = match jobs.first() {
+        Some(j) => j.handle.clone(),
+        None => return,
+    };
     let key = handle.key();
     // Move the rows out of the jobs (remembering each job's share) rather
     // than cloning seq-length token/mask vectors on the hot path.
@@ -198,10 +202,9 @@ fn execute_group(mut jobs: Vec<ScoreJob<'_>>, cache: Option<&ScoreCache>) {
                 let msg = format!("batched execution failed: {e:#}");
                 let mut off = 0;
                 for (job, n) in jobs.into_iter().zip(lens) {
-                    let span = &lk.vals[off..off + n];
-                    if span.iter().all(|v| v.is_some()) {
-                        let out: Vec<(f64, f64)> =
-                            span.iter().map(|v| v.expect("all hits")).collect();
+                    let span = lk.vals.get(off..off + n).unwrap_or(&[]);
+                    if span.len() == n && span.iter().all(|v| v.is_some()) {
+                        let out: Vec<(f64, f64)> = span.iter().copied().flatten().collect();
                         let _ = job.tx.send(Ok(out));
                     } else {
                         let _ = job.tx.send(Err(anyhow!("{msg}")));
@@ -215,7 +218,14 @@ fn execute_group(mut jobs: Vec<ScoreJob<'_>>, cache: Option<&ScoreCache>) {
     let scores = lk.into_scores();
     let mut off = 0;
     for (job, n) in jobs.into_iter().zip(lens) {
-        let _ = job.tx.send(Ok(scores[off..off + n].to_vec()));
+        match scores.get(off..off + n) {
+            Some(span) => {
+                let _ = job.tx.send(Ok(span.to_vec()));
+            }
+            None => {
+                let _ = job.tx.send(Err(anyhow!("scorer returned fewer rows than submitted")));
+            }
+        }
         off += n;
     }
 }

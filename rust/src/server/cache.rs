@@ -82,6 +82,13 @@ impl ScoreCache {
         }
     }
 
+    /// The shard owning hash `h`. The modulo keeps the index in range for
+    /// any hash; `new` always builds at least one shard.
+    fn shard_for(&self, h: u64) -> &Mutex<Shard> {
+        // lint: allow(panic-path) — index is taken modulo the (non-empty) shard vector length
+        &self.shards[(h as usize) % self.shards.len()]
+    }
+
     /// Counted lookup: the request-level view. Bumps the hit or miss
     /// counter surfaced by `{"op":"info"}`/`{"op":"stats"}`.
     pub fn get(&self, model: &str, row: &(Vec<i32>, Vec<f32>)) -> Option<(f64, f64)> {
@@ -102,7 +109,7 @@ impl ScoreCache {
     /// request handler already counted as misses.
     pub fn probe(&self, model: &str, row: &(Vec<i32>, Vec<f32>)) -> Option<(f64, f64)> {
         let h = row_hash(model, row);
-        let shard = self.shards[(h as usize) % self.shards.len()].lock().unwrap();
+        let shard = self.shard_for(h).lock().unwrap();
         match shard.map.get(&h) {
             Some(e) if e.matches(model, row) => Some(e.val),
             _ => None,
@@ -116,7 +123,7 @@ impl ScoreCache {
             return;
         }
         let h = row_hash(model, row);
-        let mut shard = self.shards[(h as usize) % self.shards.len()].lock().unwrap();
+        let mut shard = self.shard_for(h).lock().unwrap();
         if !shard.map.contains_key(&h) {
             while shard.map.len() >= self.cap_per_shard {
                 match shard.order.pop_front() {
@@ -144,7 +151,7 @@ impl ScoreCache {
 
     /// Rows currently cached across all shards.
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
+        self.shards.iter().map(|shard| shard.lock().unwrap().map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -193,10 +200,10 @@ impl RowLookup {
         let mut rows = rows;
         let mut miss_idx = Vec::new();
         let mut miss_rows = Vec::new();
-        for (i, v) in vals.iter().enumerate() {
+        for (i, (v, row)) in vals.iter().zip(rows.iter_mut()).enumerate() {
             if v.is_none() {
                 miss_idx.push(i);
-                miss_rows.push(std::mem::take(&mut rows[i]));
+                miss_rows.push(std::mem::take(row));
             }
         }
         RowLookup { vals, miss_idx, miss_rows }
@@ -219,7 +226,9 @@ impl RowLookup {
     pub fn fill(&mut self, scored: Vec<(f64, f64)>) {
         assert_eq!(scored.len(), self.miss_idx.len(), "scorer returned wrong row count");
         for (&i, val) in self.miss_idx.iter().zip(scored) {
-            self.vals[i] = Some(val);
+            if let Some(slot) = self.vals.get_mut(i) {
+                *slot = Some(val);
+            }
         }
     }
 
@@ -229,6 +238,7 @@ impl RowLookup {
     pub fn into_scores(self) -> Vec<(f64, f64)> {
         self.vals
             .into_iter()
+            // lint: allow(panic-path) — local invariant: fill() ran first; an unfilled slot is a caller bug, not wire data
             .map(|v| v.expect("every row cached or scored"))
             .collect()
     }

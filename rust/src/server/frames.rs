@@ -43,9 +43,9 @@ pub const VERSION: u8 = 1;
 /// Bytes before the payload: magic, version, payload length.
 pub const HEADER_BYTES: usize = 6;
 /// Fixed payload prefix: chunk, first_row, row count.
-const PREFIX_BYTES: usize = 12;
+pub const PREFIX_BYTES: usize = 12;
 /// Bytes per row: nll f64, greedy_hits f64, tokens_scored u32.
-const ROW_BYTES: usize = 20;
+pub const ROW_BYTES: usize = 20;
 /// Sanity cap on one frame's payload; a row cap derives from the request
 /// line cap, so anything near this is a corrupt or hostile length field.
 pub const MAX_PAYLOAD: usize = 1 << 24;
@@ -90,20 +90,52 @@ pub fn encode_chunk_into(line: &Json, out: &mut Vec<u8>) -> Result<()> {
     Ok(())
 }
 
+/// Checked field reads: every decode goes through these so a truncated
+/// buffer or lying length field surfaces as a protocol error (the
+/// connection answers with an error line and survives), never as a slice
+/// panic inside a connection handler. See the `panic-path` lint rule.
+fn bytes_at<const N: usize>(buf: &[u8], off: usize) -> Result<[u8; N]> {
+    let b = buf.get(off..off + N).with_context(|| {
+        format!("frame truncated: need {N} bytes at offset {off}, have {}", buf.len())
+    })?;
+    Ok(b.try_into()?)
+}
+
+fn byte_at(buf: &[u8], off: usize) -> Result<u8> {
+    buf.get(off).copied().with_context(|| format!("frame truncated at byte {off}"))
+}
+
+fn u32_at(buf: &[u8], off: usize) -> Result<u32> {
+    Ok(u32::from_le_bytes(bytes_at(buf, off)?))
+}
+
+fn f64_at(buf: &[u8], off: usize) -> Result<f64> {
+    Ok(f64::from_le_bytes(bytes_at(buf, off)?))
+}
+
+fn write_u32(buf: &mut [u8], off: usize, v: u32) -> Result<()> {
+    buf.get_mut(off..off + 4)
+        .with_context(|| format!("frame truncated: cannot write u32 at offset {off}"))?
+        .copy_from_slice(&v.to_le_bytes());
+    Ok(())
+}
+
 /// Validate a complete frame and return `(chunk, first_row, nrows)`.
 fn header(buf: &[u8]) -> Result<(u32, u32, usize)> {
     ensure!(buf.len() >= HEADER_BYTES + PREFIX_BYTES, "frame too short ({} bytes)", buf.len());
-    ensure!(buf[0] == MAGIC, "bad frame magic {:#04x}", buf[0]);
-    ensure!(buf[1] == VERSION, "unsupported frame version {}", buf[1]);
-    let payload = u32::from_le_bytes(buf[2..6].try_into().unwrap()) as usize;
+    let magic = byte_at(buf, 0)?;
+    ensure!(magic == MAGIC, "bad frame magic {magic:#04x}");
+    let version = byte_at(buf, 1)?;
+    ensure!(version == VERSION, "unsupported frame version {version}");
+    let payload = u32_at(buf, 2)? as usize;
     ensure!(
         buf.len() == HEADER_BYTES + payload,
         "frame length mismatch: header says {payload} payload bytes, have {}",
         buf.len() - HEADER_BYTES
     );
-    let chunk = u32::from_le_bytes(buf[6..10].try_into().unwrap());
-    let first_row = u32::from_le_bytes(buf[10..14].try_into().unwrap());
-    let nrows = u32::from_le_bytes(buf[14..18].try_into().unwrap()) as usize;
+    let chunk = u32_at(buf, 6)?;
+    let first_row = u32_at(buf, 10)?;
+    let nrows = u32_at(buf, 14)? as usize;
     ensure!(
         payload == PREFIX_BYTES + ROW_BYTES * nrows,
         "frame row count {nrows} disagrees with payload length {payload}"
@@ -126,9 +158,9 @@ pub fn decode_chunk(buf: &[u8]) -> Result<Json> {
     let mut rows = Vec::with_capacity(nrows);
     let mut off = HEADER_BYTES + PREFIX_BYTES;
     for _ in 0..nrows {
-        let nll = f64::from_le_bytes(buf[off..off + 8].try_into().unwrap());
-        let hits = f64::from_le_bytes(buf[off + 8..off + 16].try_into().unwrap());
-        let ntok = u32::from_le_bytes(buf[off + 16..off + 20].try_into().unwrap());
+        let nll = f64_at(buf, off)?;
+        let hits = f64_at(buf, off + 8)?;
+        let ntok = u32_at(buf, off + 16)?;
         rows.push(super::row_response(nll, hits, ntok as f64));
         off += ROW_BYTES;
     }
@@ -143,8 +175,8 @@ pub fn decode_chunk(buf: &[u8]) -> Result<Json> {
 /// router's per-hop rewrite, done without touching the float payload.
 pub fn patch_header(buf: &mut [u8], chunk: u32, first_row: u32) -> Result<()> {
     header(buf)?;
-    buf[6..10].copy_from_slice(&chunk.to_le_bytes());
-    buf[10..14].copy_from_slice(&first_row.to_le_bytes());
+    write_u32(buf, 6, chunk)?;
+    write_u32(buf, 10, first_row)?;
     Ok(())
 }
 
@@ -156,8 +188,8 @@ pub fn rows_nll_tok(buf: &[u8]) -> Result<(f64, f64, usize)> {
     let mut tok = 0.0f64;
     let mut off = HEADER_BYTES + PREFIX_BYTES;
     for _ in 0..nrows {
-        nll += f64::from_le_bytes(buf[off..off + 8].try_into().unwrap());
-        tok += u32::from_le_bytes(buf[off + 16..off + 20].try_into().unwrap()) as f64;
+        nll += f64_at(buf, off)?;
+        tok += u32_at(buf, off + 16)? as f64;
         off += ROW_BYTES;
     }
     Ok((nll, tok, nrows))
@@ -169,9 +201,11 @@ pub fn rows_nll_tok(buf: &[u8]) -> Result<(f64, f64, usize)> {
 pub fn read_frame<R: std::io::Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<()> {
     let mut head = [0u8; HEADER_BYTES];
     r.read_exact(&mut head).context("reading frame header")?;
-    ensure!(head[0] == MAGIC, "bad frame magic {:#04x}", head[0]);
-    ensure!(head[1] == VERSION, "unsupported frame version {}", head[1]);
-    let payload = u32::from_le_bytes(head[2..6].try_into().unwrap()) as usize;
+    let magic = byte_at(&head, 0)?;
+    ensure!(magic == MAGIC, "bad frame magic {magic:#04x}");
+    let version = byte_at(&head, 1)?;
+    ensure!(version == VERSION, "unsupported frame version {version}");
+    let payload = u32_at(&head, 2)? as usize;
     ensure!(
         (PREFIX_BYTES..=MAX_PAYLOAD).contains(&payload),
         "frame payload length {payload} out of range"
@@ -179,7 +213,8 @@ pub fn read_frame<R: std::io::Read>(r: &mut R, buf: &mut Vec<u8>) -> Result<()> 
     buf.clear();
     buf.extend_from_slice(&head);
     buf.resize(HEADER_BYTES + payload, 0);
-    r.read_exact(&mut buf[HEADER_BYTES..]).context("reading frame payload")?;
+    let body = buf.get_mut(HEADER_BYTES..).context("frame buffer shorter than header")?;
+    r.read_exact(body).context("reading frame payload")?;
     Ok(())
 }
 

@@ -158,6 +158,33 @@
 //! immutable); `info`'s `cache_hits`/`cache_misses` count request-level
 //! lookups.
 //!
+//! # Static analysis & invariants
+//!
+//! This module (with [`crate::fleet`]) is the lint pass's network
+//! surface ([`crate::analysis`], `kbitscale lint`, blocking in CI):
+//!
+//! * **No panic paths.** Handler and router code must not `.unwrap()`,
+//!   `.expect()`, call aborting macros, or index slices unchecked —
+//!   malformed wire input (truncated bin1 frames, bad chunk renumbering,
+//!   hostile JSON) comes back as an error line and the connection
+//!   survives. `.lock().unwrap()` is exempt by convention: a poisoned
+//!   mutex means another thread already panicked, and propagating beats
+//!   serving torn state. Deliberate exceptions carry
+//!   `// lint: allow(panic-path) — <reason>` with a mandatory
+//!   justification.
+//! * **Protocol doc = dispatch table.** The op list in this doc block is
+//!   diffed against the string arms of `try_handle` (plus `hello` in
+//!   [`pump`]) in both directions, so the block above cannot rot.
+//! * **bin1 single-sourcing.** The frame magic and layout constants live
+//!   only in [`frames`]; a stray `0xB1` or a redefined
+//!   `HEADER_BYTES`/`PREFIX_BYTES`/`ROW_BYTES` elsewhere is a finding.
+//! * **Lock order.** Declared in [`crate::analysis::rules::DECLARED_ORDER`]:
+//!   `registry.models` → `registry.default`; `registry.models` →
+//!   `cache.shard` → `registry.flight`; `registry.models` →
+//!   `runtime.cache` → `runtime.flight`; `fleet.roster` → `fleet.conn`.
+//!   Acquiring against these edges (or locking a mutex field with no
+//!   registered class) fails the lint.
+//!
 //! [`Session`] wraps a single-model registry behind the original
 //! in-memory API (tested without sockets; the CLI's `serve` subcommand
 //! still wires stdin/stdout through it for shell use).
@@ -847,13 +874,13 @@ fn try_handle<'rt>(
                 .collect();
             // NaN-last argmax: a NaN NLL from the executable must become
             // an error response, not a worker-thread panic.
-            let best = norm
+            let (best, best_score) = norm
                 .iter()
                 .enumerate()
                 .max_by(|a, b| crate::util::order::nan_last_cmp(*a.1, *b.1))
-                .map(|(i, _)| i)
-                .unwrap();
-            if norm[best].is_nan() {
+                .map(|(i, &v)| (i, v))
+                .ok_or_else(|| anyhow!("no choices to rank"))?;
+            if best_score.is_nan() {
                 bail!("model produced non-finite scores for every choice");
             }
             Ok(Json::obj(vec![
@@ -1021,6 +1048,7 @@ fn read_line_capped<R: BufRead>(
                 match chunk.iter().position(|&b| b == b'\n') {
                     Some(pos) => {
                         if !overflowed && buf.len() + pos <= max {
+                            // lint: allow(panic-path) — pos comes from position() over this same chunk
                             buf.extend_from_slice(&chunk[..pos]);
                         } else {
                             overflowed = true;
@@ -1083,10 +1111,12 @@ fn hello_response(req: &Json) -> (bool, Json) {
 /// as-is and decodes forwarded frames back to text. Requests and
 /// terminal lines are JSON in both modes.
 ///
-/// `pub(crate)`: this is the connection-handoff seam the fleet router
+/// Public: this is the connection-handoff seam the fleet router
 /// ([`crate::fleet`]) reuses to drive its own per-client proxy loop over
-/// the identical line protocol.
-pub(crate) fn pump<R: BufRead, W: Write>(
+/// the identical line protocol, and the seam the protocol fuzz harness
+/// (`tests/fuzz_protocol.rs`) drives with hostile byte streams — any
+/// input, however malformed, must produce error lines, never a panic.
+pub fn pump<R: BufRead, W: Write>(
     mut handle: impl FnMut(&Json, &mut EmitSink<'_>) -> Json,
     mut reader: R,
     mut writer: W,

@@ -220,7 +220,7 @@ impl<'rt> ModelHandle<'rt> {
             .iter()
             .filter(|pp| {
                 tier.quantized_params.iter().any(|q| q == &pp.source)
-                    && !stage_specs[pp.stage].is_baseline()
+                    && stage_specs.get(pp.stage).is_some_and(|s| !s.is_baseline())
             })
             .map(|pp| pp.numel())
             .max()
@@ -232,7 +232,9 @@ impl<'rt> ModelHandle<'rt> {
                 .find(|(n, _)| n == &pp.source)
                 .with_context(|| format!("checkpoint missing param {:?}", pp.source))?;
             let data = pp.slice_of(t)?;
-            let sspec = &stage_specs[pp.stage];
+            let sspec = stage_specs
+                .get(pp.stage)
+                .with_context(|| format!("param {:?} names stage {} of {}", pp.source, pp.stage, stage_specs.len()))?;
             let is_quantized = tier.quantized_params.iter().any(|q| q == &pp.source);
             if is_quantized && !sspec.is_baseline() {
                 let pk = Arc::new(PackedParam::quantize_slice(&pp.shape, data, sspec)?);
@@ -241,15 +243,24 @@ impl<'rt> ModelHandle<'rt> {
                     // backend decodes it inside the matmul inner loop.
                     native_params.push(NativeParam::Packed(pk.clone()));
                 } else {
-                    let buf = &mut scratch[..data.len()];
+                    let buf = scratch
+                        .get_mut(..data.len())
+                        .context("dequant scratch smaller than param")?;
                     pk.dequantize_into(buf)?;
                     plits.push(lit_f32_slice(&pp.shape, buf)?);
                 }
-                bytes_per_stage[pp.stage] += pk.resident_bytes();
+                *bytes_per_stage
+                    .get_mut(pp.stage)
+                    .with_context(|| format!("stage {} out of range", pp.stage))? +=
+                    pk.resident_bytes();
                 let label = if layout.is_monolithic() {
                     pp.source.clone()
                 } else {
-                    pp.label(&layout.stages[pp.stage].name)
+                    let stage = layout
+                        .stages
+                        .get(pp.stage)
+                        .with_context(|| format!("stage {} out of range", pp.stage))?;
+                    pp.label(&stage.name)
                 };
                 packed.push((label, pk));
             } else if plan_req.fused {
@@ -739,7 +750,9 @@ impl<'rt> ModelRegistry<'rt> {
                 .ok_or_else(|| anyhow!("registry has no models loaded"))?,
         };
         let full = Self::resolve_full_key(&map, &key)?;
-        let r = map.get_mut(&full).expect("resolved key is resident");
+        let r = map
+            .get_mut(&full)
+            .ok_or_else(|| anyhow!("model {full:?} vanished during resolution"))?;
         r.hits += 1;
         r.last_use = Instant::now();
         let handle = r.handle.clone();
@@ -769,7 +782,9 @@ impl<'rt> ModelRegistry<'rt> {
                 .ok_or_else(|| anyhow!("registry has no models loaded"))?,
         };
         let full = Self::resolve_full_key(&map, &key)?;
-        Ok(map[&full].handle.clone())
+        map.get(&full)
+            .map(|r| r.handle.clone())
+            .ok_or_else(|| anyhow!("model {full:?} vanished during resolution"))
     }
 
     /// Drop a resident variant (resolved like [`ModelRegistry::get`]:
@@ -795,16 +810,17 @@ impl<'rt> ModelRegistry<'rt> {
             .filter(|(_, r)| r.handle.model_key == key)
             .map(|(k, _)| k.clone())
             .collect();
-        match matching.len() {
-            1 => Ok(matching.into_iter().next().unwrap()),
-            0 => bail!("model {key:?} not resident (have: {:?})", {
+        match matching.as_slice() {
+            [one] => Ok(one.clone()),
+            [] => bail!("model {key:?} not resident (have: {:?})", {
                 let mut ks: Vec<&String> = map.keys().collect();
                 ks.sort();
                 ks
             }),
-            n => bail!(
-                "model {key:?} is ambiguous ({n} quantization variants resident); \
-                 use the full key"
+            many => bail!(
+                "model {key:?} is ambiguous ({} quantization variants resident); \
+                 use the full key",
+                many.len()
             ),
         }
     }
@@ -970,9 +986,10 @@ pub struct ModelSpecReq {
 impl ModelSpecReq {
     pub fn parse(s: &str) -> Result<ModelSpecReq> {
         let parts: Vec<&str> = s.split(':').collect();
-        if parts.len() < 2 || parts.len() > 5 || parts[0].is_empty() || parts[1].is_empty() {
-            bail!("bad model spec {s:?} (want family:tier[:bits[:dtype[:block]]])");
-        }
+        let (family, tier) = match parts.as_slice() {
+            [f, t, ..] if !f.is_empty() && !t.is_empty() && parts.len() <= 5 => (*f, *t),
+            _ => bail!("bad model spec {s:?} (want family:tier[:bits[:dtype[:block]]])"),
+        };
         let bits: usize = match parts.get(2) {
             Some(b) => b.parse().map_err(|_| anyhow!("bad bits in {s:?}"))?,
             None => 4,
@@ -987,8 +1004,8 @@ impl ModelSpecReq {
             None => Some(64),
         };
         Ok(ModelSpecReq {
-            family: parts[0].to_string(),
-            tier: parts[1].to_string(),
+            family: family.to_string(),
+            tier: tier.to_string(),
             spec: spec_from_parts(bits, dtype, block)?,
         })
     }

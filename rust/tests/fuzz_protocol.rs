@@ -1,0 +1,569 @@
+//! Deterministic fuzz harness for the serving surface's four parsers:
+//! the bin1 frame codec ([`kbitscale::server::frames`]), the line
+//! protocol loop ([`kbitscale::server::pump`]), the artifact manifest
+//! parser ([`Manifest::load`]), and the packed k-bit bitstream decoders
+//! ([`PackedTensor`] / [`kbitscale::quant::fused`]).
+//!
+//! The invariant under test is uniform: **error, not panic**. Every
+//! input — structured-random, bit-mutated, truncated, or hostile
+//! hand-built — must come back as `Ok`/`Err`; a panic anywhere fails the
+//! test. All randomness flows from [`Rng`] with fixed seeds (forked per
+//! case), so a failure reproduces bit-for-bit from the case index and
+//! the whole budget stays bounded (seconds, well inside the CI timeout).
+
+use std::io::Cursor;
+use std::path::PathBuf;
+
+use kbitscale::models::manifest::Manifest;
+use kbitscale::quant::{fused, DataType, PackedTensor, QuantSpec};
+use kbitscale::server::{frames, pump, Emit, EmitSink, MAX_REQUEST_LINE};
+use kbitscale::util::json::Json;
+use kbitscale::util::rng::Rng;
+
+/// Master seed; every test forks its own stream from a distinct tag.
+const SEED: u64 = 0x4b42_4954_5343_414c; // "KBITSCAL"
+
+// ---------------------------------------------------------------------------
+// Shared builders
+// ---------------------------------------------------------------------------
+
+/// A score-chunk line shaped like `score_chunk` emits (only the fields
+/// the codec reads: derived `ce`/`ppl` are reconstructed on decode).
+fn chunk_line(chunk: usize, first_row: usize, rows: &[(f64, f64, u32)]) -> Json {
+    let rows_json = rows
+        .iter()
+        .map(|&(nll, hits, ntok)| {
+            Json::obj(vec![
+                ("nll", Json::num(nll)),
+                ("greedy_hits", Json::num(hits)),
+                ("tokens_scored", Json::num(ntok as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        ("chunk", Json::num(chunk as f64)),
+        ("first_row", Json::num(first_row as f64)),
+        ("rows", Json::Arr(rows_json)),
+    ])
+}
+
+/// Encode a 3-row frame: 6 header + 12 prefix + 3 x 20 row bytes.
+fn valid_frame() -> Vec<u8> {
+    let line = chunk_line(7, 40, &[(1.25, 3.0, 16), (0.5, 8.0, 16), (2.0, 0.0, 9)]);
+    let mut buf = Vec::new();
+    frames::encode_chunk_into(&line, &mut buf).expect("valid line encodes");
+    assert_eq!(buf.len(), frames::HEADER_BYTES + frames::PREFIX_BYTES + 3 * frames::ROW_BYTES);
+    buf
+}
+
+/// Run every frame decoder over one buffer; all must return (not panic).
+/// Returns true if any accepted the buffer.
+fn poke_frame_decoders(buf: &[u8]) -> bool {
+    let a = frames::decode_chunk(buf).is_ok();
+    let b = frames::chunk_header(buf).is_ok();
+    let c = frames::rows_nll_tok(buf).is_ok();
+    let mut copy = buf.to_vec();
+    let d = frames::patch_header(&mut copy, 1, 2).is_ok();
+    let mut out = Vec::new();
+    let e = frames::read_frame(&mut Cursor::new(buf), &mut out).is_ok();
+    a || b || c || d || e
+}
+
+// ---------------------------------------------------------------------------
+// bin1 frame codec
+// ---------------------------------------------------------------------------
+
+/// Satellite pin: a frame cut at EVERY byte boundary — including each
+/// header field edge and each of the 20-byte row edges (with the f64/f64/
+/// u32 field edges inside a row) — is an error from every decoder, and
+/// the unmodified frame round-trips.
+#[test]
+fn frame_truncation_at_every_boundary() {
+    let frame = valid_frame();
+
+    // The named boundaries first (documentation of the wire layout):
+    // magic | version | payload-len | chunk | first_row | nrows | rows…
+    let h = frames::HEADER_BYTES;
+    let p = frames::PREFIX_BYTES;
+    let r = frames::ROW_BYTES;
+    let mut pinned = vec![0, 1, 2, h, h + 4, h + 8, h + p];
+    for row in 0..3 {
+        let base = h + p + row * r;
+        pinned.extend([base + 8, base + 16, base + r]);
+    }
+    pinned.pop(); // the last edge is the full frame, which must succeed
+    for &cut in &pinned {
+        assert!(cut < frame.len());
+        assert!(
+            !poke_frame_decoders(&frame[..cut]),
+            "decoder accepted a frame truncated at pinned boundary {cut}"
+        );
+    }
+
+    // Then exhaustively: every proper prefix fails, the full frame parses.
+    for cut in 0..frame.len() {
+        assert!(
+            !poke_frame_decoders(&frame[..cut]),
+            "decoder accepted a frame truncated at byte {cut}"
+        );
+    }
+    let decoded = frames::decode_chunk(&frame).expect("full frame decodes");
+    assert_eq!(decoded.get("chunk").unwrap().as_usize().unwrap(), 7);
+    assert_eq!(decoded.get("first_row").unwrap().as_usize().unwrap(), 40);
+    assert_eq!(decoded.get("rows").unwrap().as_arr().unwrap().len(), 3);
+    let (nll, tok, nrows) = frames::rows_nll_tok(&frame).expect("full frame sums");
+    assert_eq!((nll, tok, nrows), (3.75, 41.0, 3));
+}
+
+/// Satellite pin: `first_row`/`chunk` at the top of the u32 range
+/// survive the renumbering path (the router's overflow guard is upstream
+/// of the codec; the codec itself must be exact at the boundary).
+#[test]
+fn oversized_first_row_offsets_round_trip() {
+    let line = chunk_line(u32::MAX as usize, u32::MAX as usize - 3, &[(0.25, 1.0, 4)]);
+    let mut frame = Vec::new();
+    frames::encode_chunk_into(&line, &mut frame).expect("u32::MAX fields encode");
+    frames::patch_header(&mut frame, u32::MAX - 1, u32::MAX).expect("patch at u32 boundary");
+    let (chunk, first_row, nrows) = frames::chunk_header(&frame).expect("header reads back");
+    assert_eq!((chunk, first_row, nrows), (u32::MAX - 1, u32::MAX, 1));
+
+    // One past the wire range is an encode-side error, not a wrap.
+    let over = chunk_line(u32::MAX as usize + 1, 0, &[(0.25, 1.0, 4)]);
+    assert!(frames::encode_chunk_into(&over, &mut frame).is_err());
+    let over = chunk_line(0, u32::MAX as usize + 1, &[(0.25, 1.0, 4)]);
+    assert!(frames::encode_chunk_into(&over, &mut frame).is_err());
+}
+
+#[test]
+fn frame_bit_flips_never_panic() {
+    let frame = valid_frame();
+    let mut rng = Rng::new(SEED).fork(1);
+    let mut accepted = 0usize;
+    for case in 0..600 {
+        let mut r = rng.fork(case);
+        let mut buf = frame.clone();
+        for _ in 0..1 + r.below(4) {
+            let bit = r.below(buf.len() * 8);
+            buf[bit / 8] ^= 1 << (bit % 8);
+        }
+        if poke_frame_decoders(&buf) {
+            accepted += 1;
+        }
+    }
+    // Flips confined to the float payload still parse; flips in the
+    // header do not. Both outcomes must occur across the budget or the
+    // mutator is not exercising the codec.
+    assert!(accepted > 0, "no mutated frame parsed: mutator too destructive");
+    assert!(accepted < 600, "every mutated frame parsed: mutator inert");
+}
+
+#[test]
+fn random_buffers_never_panic() {
+    let mut rng = Rng::new(SEED).fork(2);
+    for case in 0..2000 {
+        let mut r = rng.fork(case);
+        let len = r.below(96);
+        let mut buf: Vec<u8> = (0..len).map(|_| r.next_u64() as u8).collect();
+        // Half the cases get a valid magic/version prologue so the fuzz
+        // reaches the length-field and row-count checks behind it.
+        if r.below(2) == 0 && buf.len() >= 2 {
+            buf[0] = frames::MAGIC;
+            buf[1] = frames::VERSION;
+        }
+        poke_frame_decoders(&buf);
+    }
+}
+
+/// `read_frame` against a lying length field: the header promises more
+/// payload than the stream carries, or more than [`frames::MAX_PAYLOAD`].
+#[test]
+fn read_frame_hostile_lengths() {
+    // Payload length beyond the sanity cap is rejected before allocation.
+    let mut head = vec![frames::MAGIC, frames::VERSION];
+    head.extend_from_slice(&(frames::MAX_PAYLOAD as u32 + 1).to_le_bytes());
+    let mut buf = Vec::new();
+    assert!(frames::read_frame(&mut Cursor::new(&head), &mut buf).is_err());
+
+    // In-range length, truncated stream: error from read_exact, no hang.
+    let mut head = vec![frames::MAGIC, frames::VERSION];
+    head.extend_from_slice(&1024u32.to_le_bytes());
+    head.extend_from_slice(&[0u8; 64]);
+    assert!(frames::read_frame(&mut Cursor::new(&head), &mut buf).is_err());
+
+    // Payload shorter than the fixed prefix is rejected up front.
+    let mut head = vec![frames::MAGIC, frames::VERSION];
+    head.extend_from_slice(&((frames::PREFIX_BYTES - 1) as u32).to_le_bytes());
+    head.extend_from_slice(&[0u8; 32]);
+    assert!(frames::read_frame(&mut Cursor::new(&head), &mut buf).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Line-protocol loop (server::pump)
+// ---------------------------------------------------------------------------
+
+/// Stub handler: answers `{"ok":true}`, and for `op=stream` first emits
+/// one chunk line through the sink (exercising the negotiated frame
+/// encoding on the write side).
+fn stub_handle(req: &Json, sink: &mut EmitSink<'_>) -> Json {
+    if req.opt("op").and_then(|v| v.as_str().ok()) == Some("stream") {
+        let line = chunk_line(0, 0, &[(0.75, 2.0, 8)]);
+        if let Err(e) = sink(Emit::Line(&line)) {
+            return Json::obj(vec![("error", Json::str(format!("{e:#}")))]);
+        }
+    }
+    Json::obj(vec![("ok", Json::Bool(true))])
+}
+
+/// Run `pump` over one input script; malformed lines must surface as
+/// per-line error responses, never as an `Err` (reserved for transport
+/// I/O) and never as a panic.
+fn run_pump(input: Vec<u8>) -> (u64, Vec<u8>) {
+    let mut out = Vec::new();
+    let served = pump(stub_handle, Cursor::new(input), &mut out)
+        .expect("pump survives hostile input (Err is for transport I/O only)");
+    (served, out)
+}
+
+#[test]
+fn pump_hostile_line_scripts() {
+    // Hand-picked corners first: oversized line, invalid UTF-8, bare
+    // frame bytes where a JSON line belongs, hello followed by garbage.
+    let mut input = Vec::new();
+    input.extend_from_slice(b"{\"op\":\"ping\"}\n");
+    input.extend_from_slice(&vec![b'a'; MAX_REQUEST_LINE + 10]);
+    input.push(b'\n');
+    input.extend_from_slice(&[0xFF, 0xFE, 0xB1, 0x00, b'\n']);
+    input.extend_from_slice(&valid_frame()); // frames are response-side only
+    input.push(b'\n');
+    input.extend_from_slice(b"{\"op\":\"hello\",\"frames\":\"bin1\"}\n");
+    input.extend_from_slice(b"not json at all\n");
+    input.extend_from_slice(b"{\"op\":\"stream\"}\n");
+    let (served, out) = run_pump(input);
+    assert!(served >= 6, "every non-empty line gets a response, got {served}");
+    let text = String::from_utf8_lossy(&out);
+    assert!(text.contains("exceeds"), "oversized line must be refused: {text}");
+    assert!(text.contains("bad request"), "unparseable lines must error: {text}");
+}
+
+#[test]
+fn pump_random_line_scripts_never_panic() {
+    let mut rng = Rng::new(SEED).fork(3);
+    for case in 0..250 {
+        let mut r = rng.fork(case);
+        let mut input = Vec::new();
+        for _ in 0..1 + r.below(8) {
+            match r.below(5) {
+                // Random bytes (often invalid UTF-8 / unterminated JSON).
+                0 => {
+                    let len = r.below(64);
+                    input.extend((0..len).map(|_| r.next_u64() as u8));
+                }
+                // A mutated valid request line.
+                1 => {
+                    let mut line = b"{\"op\":\"stream\",\"rows\":[[1,2],[3]]}".to_vec();
+                    let bit = r.below(line.len() * 8);
+                    line[bit / 8] ^= 1 << (bit % 8);
+                    input.extend_from_slice(&line);
+                }
+                // Frame negotiation, valid and mutated.
+                2 => input.extend_from_slice(b"{\"op\":\"hello\",\"frames\":\"bin1\"}"),
+                3 => input.extend_from_slice(b"{\"op\":\"hello\",\"frames\":\"b1n1\"}"),
+                // Deep-ish nesting and stray control bytes.
+                _ => {
+                    input.extend_from_slice(b"{\"a\":[[[[[\"x\"]]]]],\"b\":");
+                    input.push(r.next_u64() as u8);
+                    input.push(b'}');
+                }
+            }
+            input.push(b'\n');
+        }
+        run_pump(input);
+    }
+}
+
+/// With bin1 negotiated, the sink's chunk line crosses the wire as one
+/// frame that decodes back to the exact line; without negotiation it
+/// stays JSON. Pins the encode side of the codec inside the real loop.
+#[test]
+fn pump_bin1_roundtrip() {
+    let (_, out) = run_pump(b"{\"op\":\"hello\",\"frames\":\"bin1\"}\n{\"op\":\"stream\"}\n".to_vec());
+    let first_nl = out.iter().position(|&b| b == b'\n').expect("hello reply line");
+    let rest = &out[first_nl + 1..];
+    assert_eq!(rest.first(), Some(&frames::MAGIC), "chunk must be framed after bin1 hello");
+    let mut frame = Vec::new();
+    frames::read_frame(&mut Cursor::new(rest), &mut frame).expect("frame reads");
+    let chunk = frames::decode_chunk(&frame).expect("frame decodes");
+    let rows = chunk.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), 1);
+    assert_eq!(rows[0].get("nll").unwrap().as_f64().unwrap(), 0.75);
+
+    let (_, out) = run_pump(b"{\"op\":\"stream\"}\n".to_vec());
+    assert_eq!(out.first(), Some(&b'{'), "without hello the chunk stays JSON");
+}
+
+// ---------------------------------------------------------------------------
+// Manifest parser
+// ---------------------------------------------------------------------------
+
+/// Scoped temp dir (same idiom as the manifest unit tests); removed on
+/// drop so fuzz runs leave nothing behind.
+struct TempDirGuard {
+    path: PathBuf,
+}
+
+impl Drop for TempDirGuard {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.path).ok();
+    }
+}
+
+fn temp_guard(tag: &str) -> TempDirGuard {
+    let path = std::env::temp_dir().join(format!("kbt_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&path).expect("temp dir");
+    TempDirGuard { path }
+}
+
+const MANIFEST_JSON: &str = r#"{
+    "version": 1, "vocab": 256, "seq": 32,
+    "param_names": ["embed"],
+    "tiers": [{
+        "name": "t0", "d_model": 16, "n_layer": 1, "n_head": 2,
+        "d_ff": 64, "vocab": 256, "seq": 32,
+        "batch_train": 4, "batch_eval": 8, "param_count": 4096,
+        "params": [{"name": "embed", "shape": [256, 16]}],
+        "quantized_params": [],
+        "fwd_hlo": "fwd.hlo.txt", "train_hlo": "train.hlo.txt"
+    }],
+    "kernels": {
+        "m": 8, "k": 64, "n": 64, "qblock": 32, "codebook_pad": 256,
+        "u8_hlo": "a.hlo.txt", "packed4_hlo": "b.hlo.txt", "f32_hlo": "c.hlo.txt"
+    }
+}"#;
+
+#[test]
+fn manifest_mutations_never_panic() {
+    let guard = temp_guard("fuzz_manifest");
+    let path = guard.path.join("manifest.json");
+
+    // The pristine document loads.
+    std::fs::write(&path, MANIFEST_JSON).expect("write manifest");
+    Manifest::load(&guard.path).expect("valid manifest loads");
+
+    let base = MANIFEST_JSON.as_bytes();
+    let mut rng = Rng::new(SEED).fork(4);
+    let mut survived_ok = 0usize;
+    for case in 0..250 {
+        let mut r = rng.fork(case);
+        let mut doc = base.to_vec();
+        for _ in 0..1 + r.below(3) {
+            if doc.is_empty() {
+                break;
+            }
+            match r.below(4) {
+                0 => doc.truncate(r.below(doc.len())),
+                1 => {
+                    let i = r.below(doc.len());
+                    doc[i] = r.next_u64() as u8;
+                }
+                2 => {
+                    let i = r.below(doc.len());
+                    doc.remove(i);
+                }
+                _ => {
+                    let i = r.below(doc.len() + 1);
+                    doc.insert(i, r.next_u64() as u8);
+                }
+            }
+        }
+        std::fs::write(&path, &doc).expect("write mutated manifest");
+        if Manifest::load(&guard.path).is_ok() {
+            survived_ok += 1;
+        }
+    }
+    // Mutations in whitespace or inside string values can legitimately
+    // still parse; most must not.
+    assert!(survived_ok < 250, "every mutation parsed: mutator inert");
+
+    // Structurally valid JSON, semantically broken: typed errors, no panic.
+    for hostile in [
+        r#"{"vocab": 1, "seq": 1, "param_names": [], "tiers": [], "kernels": {}}"#,
+        r#"{"vocab": "x", "seq": 1, "param_names": [], "tiers": 3, "kernels": {}}"#,
+        r#"{}"#,
+        r#"[]"#,
+        r#"null"#,
+    ] {
+        std::fs::write(&path, hostile).expect("write hostile manifest");
+        assert!(Manifest::load(&guard.path).is_err(), "hostile manifest accepted: {hostile}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed k-bit bitstream decoders
+// ---------------------------------------------------------------------------
+
+/// A legitimate 4-bit blockwise tensor with a ragged tail block
+/// (300 = 4 x 64 + 44) — the shape every decoder must already handle.
+fn legit_tensor() -> PackedTensor {
+    let mut rng = Rng::new(SEED).fork(5);
+    let mut data = vec![0.0f32; 300];
+    rng.fill_normal(&mut data, 1.0);
+    let spec = QuantSpec::new(DataType::Int, 4, Some(64));
+    PackedTensor::quantize(&data, &spec).expect("quantize")
+}
+
+/// Every decode entry point over one tensor; all must return, and all
+/// must agree on accept/reject (the invariants are shared).
+fn poke_tensor_decoders(p: &PackedTensor) -> bool {
+    let validated = p.validate().is_ok();
+    let mut out = vec![0.0f32; p.n.min(1 << 16)];
+    if out.len() == p.n {
+        assert_eq!(
+            p.dequantize_into(&mut out).is_ok(),
+            validated,
+            "dequantize_into disagrees with validate()"
+        );
+    }
+    let span = p.n.min(8);
+    let mut head = vec![0.0f32; span];
+    assert_eq!(
+        fused::decode_range(p, 0, span, &mut head).is_ok(),
+        validated,
+        "decode_range disagrees with validate()"
+    );
+    validated
+}
+
+#[test]
+fn packed_tensor_ragged_tail_decodes() {
+    let p = legit_tensor();
+    assert_eq!(p.n % p.block, 44, "fixture must have a ragged tail block");
+    assert!(poke_tensor_decoders(&p));
+
+    // The ragged tail itself, decoded in isolation, matches the full decode.
+    let mut full = vec![0.0f32; p.n];
+    p.dequantize_into(&mut full).expect("full decode");
+    let mut tail = vec![0.0f32; 44];
+    fused::decode_range(&p, 256, 300, &mut tail).expect("tail decode");
+    assert_eq!(&full[256..300], &tail[..]);
+
+    // Out-of-bounds and inverted ranges are errors.
+    let mut buf = vec![0.0f32; 20];
+    assert!(fused::decode_range(&p, 290, 310, &mut buf).is_err());
+    let mut empty: Vec<f32> = Vec::new();
+    assert!(fused::decode_range(&p, 10, 5, &mut empty).is_err());
+}
+
+#[test]
+fn packed_tensor_hostile_fields_error_not_panic() {
+    let base = legit_tensor();
+
+    let hostile: Vec<(&str, PackedTensor)> = vec![
+        ("block=0", PackedTensor { block: 0, ..base.clone() }),
+        ("bits=0", PackedTensor { bits: 0, ..base.clone() }),
+        ("bits=9", PackedTensor { bits: 9, ..base.clone() }),
+        ("absmax truncated", {
+            let mut p = base.clone();
+            p.absmax.truncate(2);
+            p
+        }),
+        ("absmax padded", {
+            let mut p = base.clone();
+            p.absmax.push(1.0);
+            p
+        }),
+        ("means wrong length", PackedTensor { means: Some(vec![0.0; 2]), ..base.clone() }),
+        ("packed stream truncated", {
+            let mut p = base.clone();
+            let keep = p.packed.len() / 2;
+            p.packed.truncate(keep);
+            p
+        }),
+        ("element count inflated past the stream", {
+            let mut p = base.clone();
+            p.n *= 8;
+            p.absmax = vec![1.0; p.n.div_ceil(p.block)];
+            p
+        }),
+        ("n*bits overflows usize", {
+            let mut p = base.clone();
+            p.n = usize::MAX;
+            p.block = usize::MAX;
+            p.absmax = vec![1.0];
+            p.means = None;
+            p
+        }),
+    ];
+    for (what, p) in &hostile {
+        assert!(!poke_tensor_decoders(p), "hostile tensor accepted: {what}");
+        // The fused matmul path rejects them too (dims chosen so the
+        // shape checks pass and only validate() can refuse).
+        if p.n == 300 {
+            let x = vec![1.0f32; 30];
+            let mut out = vec![0.0f32; 10];
+            let mut wrow = Vec::new();
+            assert!(
+                fused::fused_matmul(&x, p, &mut out, 1, 30, 10, &mut wrow).is_err(),
+                "fused_matmul accepted hostile tensor: {what}"
+            );
+        }
+    }
+}
+
+/// A corrupted bitstream can name a codebook index past the table (the
+/// int codebook has 2^k - 1 entries, so index 2^k - 1 is unmapped):
+/// decode must surface a typed error, never an out-of-bounds read.
+#[test]
+fn packed_tensor_corrupt_bitstream_is_an_error() {
+    let mut p = legit_tensor();
+    assert!(p.codebook.len() < 1 << p.bits, "int codebook leaves an unmapped index");
+    for w in p.packed.iter_mut() {
+        *w = u32::MAX; // every 4-bit field becomes index 15
+    }
+    p.validate().expect("field invariants still hold");
+    let mut out = vec![0.0f32; p.n];
+    let err = p.dequantize_into(&mut out).expect_err("unmapped index must error");
+    assert!(format!("{err:#}").contains("codebook"), "unexpected error: {err:#}");
+    let mut head = vec![0.0f32; 8];
+    assert!(fused::decode_range(&p, 0, 8, &mut head).is_err());
+}
+
+#[test]
+fn packed_tensor_random_field_fuzz() {
+    let base = legit_tensor();
+    let mut rng = Rng::new(SEED).fork(6);
+    for case in 0..300 {
+        let mut r = rng.fork(case);
+        let mut p = base.clone();
+        for _ in 0..1 + r.below(3) {
+            match r.below(7) {
+                0 => p.n = r.next_u64() as usize,
+                1 => p.block = r.below(512),
+                2 => p.bits = r.below(12),
+                3 => p.absmax.truncate(r.below(p.absmax.len() + 1)),
+                4 => p.means = Some(vec![0.5; r.below(8)]),
+                5 => p.packed.truncate(r.below(p.packed.len() + 1)),
+                _ => {
+                    if !p.packed.is_empty() {
+                        let i = r.below(p.packed.len());
+                        p.packed[i] = r.next_u64() as u32;
+                    }
+                }
+            }
+        }
+        // Either outcome is fine; panicking is not. Corrupted words with
+        // otherwise-consistent fields may still hit an unmapped codebook
+        // index, which dequantize reports as Err even when validate()
+        // passes — so only the panic-freedom and the validate/decode
+        // agreement on *structural* errors are asserted here.
+        let structural_ok = p.validate().is_ok();
+        let mut out = vec![0.0f32; p.n.min(1 << 16)];
+        if out.len() == p.n {
+            let decoded = p.dequantize_into(&mut out).is_ok();
+            assert!(structural_ok || !decoded, "decode accepted a structurally invalid tensor");
+        }
+        let span = p.n.min(8);
+        let mut head = vec![0.0f32; span];
+        let ranged = fused::decode_range(&p, 0, span, &mut head).is_ok();
+        assert!(structural_ok || !ranged, "decode_range accepted a structurally invalid tensor");
+    }
+}

@@ -1,0 +1,24 @@
+//! Fixture: lock nesting along declared edges only.
+
+use std::sync::Mutex;
+
+struct Fixture {
+    workers: Mutex<u32>,
+    models: Mutex<u32>,
+    default_key: Mutex<u32>,
+}
+
+impl Fixture {
+    fn declared_nesting(&self) -> u32 {
+        let models = self.models.lock().unwrap();
+        let default = self.default_key.lock().unwrap();
+        *models + *default
+    }
+
+    fn early_drop(&self) -> u32 {
+        let roster = self.workers.lock().unwrap();
+        let n = *roster;
+        drop(roster);
+        n + *self.models.lock().unwrap()
+    }
+}

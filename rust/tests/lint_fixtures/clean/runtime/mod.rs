@@ -1,0 +1,6 @@
+//! Fixture: disciplined `unsafe` in an allowlisted module.
+
+fn documented(p: *const u32) -> u32 {
+    // SAFETY: fixture — p is non-null and aligned by construction.
+    unsafe { *p }
+}

@@ -1,0 +1,31 @@
+//! Fixture: idiomatic panic-free server code the lint must pass —
+//! error propagation, the poisoning exemption, a justified allow, and
+//! test-module freedom.
+
+use std::sync::Mutex;
+
+fn propagates(v: Option<u32>) -> Result<u32, String> {
+    v.ok_or_else(|| "empty".to_string())
+}
+
+fn checked_access(rows: &[u32], i: usize) -> Option<u32> {
+    rows.get(i).copied()
+}
+
+fn poisoning_convention(models: &Mutex<u32>) -> u32 {
+    *models.lock().unwrap()
+}
+
+fn justified(rows: &[u32]) -> u32 {
+    // lint: allow(panic-path) — fixture invariant: rows is never empty here
+    rows[0]
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn tests_may_unwrap() {
+        let v: Option<u32> = Some(1);
+        assert_eq!(v.unwrap(), 1);
+    }
+}

@@ -1,0 +1,15 @@
+//! Fixture: protocol doc block exactly matching the dispatch table.
+//!
+//! Documented ops: `{"op":"ping"}`, `{"op":"score"}`, `{"op":"hello"}`.
+
+fn try_handle(op: &str) -> u32 {
+    match op {
+        "ping" => 1,
+        "score" => 2,
+        _ => 0,
+    }
+}
+
+fn pump(line: &str) -> bool {
+    line.contains("hello")
+}

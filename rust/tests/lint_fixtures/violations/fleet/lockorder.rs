@@ -1,0 +1,21 @@
+//! Fixture: an undeclared lock-order edge and an unregistered mutex field.
+
+use std::sync::Mutex;
+
+struct Fixture {
+    workers: Mutex<u32>,
+    models: Mutex<u32>,
+    mystery: Mutex<u32>,
+}
+
+impl Fixture {
+    fn undeclared_edge(&self) -> u32 {
+        let roster = self.workers.lock().unwrap();
+        let registry = self.models.lock().unwrap();
+        *roster + *registry
+    }
+
+    fn unregistered_field(&self) -> u32 {
+        *self.mystery.lock().unwrap()
+    }
+}

@@ -1,0 +1,6 @@
+//! Fixture: `unsafe` outside the allowlisted kernel modules.
+
+fn forbidden(p: *const u32) -> u32 {
+    // SAFETY: a comment does not move a module onto the allowlist.
+    unsafe { *p }
+}

@@ -1,0 +1,5 @@
+//! Fixture: `unsafe` in an allowlisted module but with no SAFETY comment.
+
+fn no_safety_comment(p: *const u32) -> u32 {
+    unsafe { *p }
+}

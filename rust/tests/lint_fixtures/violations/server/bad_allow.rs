@@ -1,0 +1,12 @@
+//! Fixture: malformed escape hatches — both are `lint-allow` findings,
+//! and neither suppresses the underlying violation.
+
+fn unknown_rule(v: Option<u32>) -> u32 {
+    // lint: allow(made-up-rule) — this rule does not exist
+    v.unwrap()
+}
+
+fn missing_reason(v: Option<u32>) -> u32 {
+    // lint: allow(panic-path)
+    v.unwrap()
+}

@@ -1,0 +1,11 @@
+//! Fixture: bin1 wire constants duplicated outside server/frames.rs.
+
+const HEADER_BYTES: usize = 6;
+
+fn magic() -> u8 {
+    0xB1
+}
+
+fn header_len() -> usize {
+    HEADER_BYTES
+}

@@ -1,0 +1,15 @@
+//! Fixture: protocol doc block out of sync with the dispatch table.
+//!
+//! Documented ops: `{"op":"ping"}`, `{"op":"hello"}`, and `{"op":"ghost"}`.
+
+fn try_handle(op: &str) -> u32 {
+    match op {
+        "ping" => 1,
+        "extra" => 2,
+        _ => 0,
+    }
+}
+
+fn pump(line: &str) -> bool {
+    line.contains("hello")
+}

@@ -1,0 +1,20 @@
+//! Fixture: every panic-path pattern the lint must flag on a network path.
+
+fn unwrap_on_option(v: Option<u32>) -> u32 {
+    v.unwrap()
+}
+
+fn expect_on_result(r: Result<u32, String>) -> u32 {
+    r.expect("fixture")
+}
+
+fn aborting_macro(x: u32) -> u32 {
+    if x > 3 {
+        panic!("fixture");
+    }
+    unreachable!()
+}
+
+fn unchecked_index(rows: &[u32], i: usize) -> u32 {
+    rows[i]
+}

@@ -1,0 +1,123 @@
+//! Lint self-test: every rule must flag its deliberately-violating
+//! fixture and pass the clean fixtures — the lint is itself under test.
+//!
+//! Fixtures live in `tests/lint_fixtures/{violations,clean}/`, laid out
+//! like the real source tree (`server/…`, `fleet/…`) because the rules
+//! key on repo-relative paths. They are plain `.rs` files in a
+//! subdirectory, so cargo never compiles them — only the lint reads them.
+
+use std::path::Path;
+
+use kbitscale::analysis::{lint_tree, rules, Finding};
+
+fn fixture_root(which: &str) -> std::path::PathBuf {
+    let root = Path::new("tests/lint_fixtures").join(which);
+    assert!(root.is_dir(), "fixture tree missing: {} (run from rust/)", root.display());
+    root
+}
+
+fn findings(which: &str) -> Vec<Finding> {
+    lint_tree(&fixture_root(which)).expect("fixture tree lints").findings
+}
+
+#[track_caller]
+fn assert_flags(fs: &[Finding], file: &str, rule: &str, msg_part: &str) {
+    assert!(
+        fs.iter().any(|f| f.file == file && f.rule == rule && f.msg.contains(msg_part)),
+        "expected [{rule}] finding in {file} matching {msg_part:?}; got:\n{}",
+        fs.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}
+
+#[test]
+fn every_violation_fixture_is_flagged() {
+    let fs = findings("violations");
+
+    // panic-path: all four banned patterns.
+    assert_flags(&fs, "server/panic.rs", rules::RULE_PANIC, "`.unwrap()`");
+    assert_flags(&fs, "server/panic.rs", rules::RULE_PANIC, "`.expect()`");
+    assert_flags(&fs, "server/panic.rs", rules::RULE_PANIC, "`panic!`");
+    assert_flags(&fs, "server/panic.rs", rules::RULE_PANIC, "`unreachable!`");
+    assert_flags(&fs, "server/panic.rs", rules::RULE_PANIC, "unchecked slice/array index");
+
+    // unsafe-discipline: both failure modes.
+    assert_flags(&fs, "quant/unsafe_outside.rs", rules::RULE_UNSAFE, "outside the allowlisted");
+    assert_flags(&fs, "runtime/mod.rs", rules::RULE_UNSAFE, "SAFETY");
+
+    // lock-order: undeclared edge and unregistered field.
+    assert_flags(&fs, "fleet/lockorder.rs", rules::RULE_LOCK, "fleet.roster -> registry.models");
+    assert_flags(&fs, "fleet/lockorder.rs", rules::RULE_LOCK, "unregistered field `mystery`");
+
+    // protocol-doc: doc/dispatch diff in both directions + bin1 sourcing.
+    assert_flags(&fs, "server/mod.rs", rules::RULE_PROTOCOL, "`extra` dispatched but missing");
+    assert_flags(&fs, "server/mod.rs", rules::RULE_PROTOCOL, "`ghost` documented but not dispatched");
+    assert_flags(&fs, "server/frames_misuse.rs", rules::RULE_PROTOCOL, "magic literal");
+    assert_flags(&fs, "server/frames_misuse.rs", rules::RULE_PROTOCOL, "layout constant redefined");
+
+    // lint-allow: the escape hatch is itself linted, and a malformed
+    // annotation never suppresses.
+    assert_flags(&fs, "server/bad_allow.rs", rules::RULE_ALLOW, "unknown rule `made-up-rule`");
+    assert_flags(&fs, "server/bad_allow.rs", rules::RULE_ALLOW, "carries no justification");
+    assert_flags(&fs, "server/bad_allow.rs", rules::RULE_PANIC, "`.unwrap()`");
+}
+
+#[test]
+fn every_violation_file_fails_on_its_own() {
+    let root = fixture_root("violations");
+    let report = lint_tree(&root).expect("tree lints");
+    let mut flagged: Vec<&str> = report.findings.iter().map(|f| f.file.as_str()).collect();
+    flagged.sort_unstable();
+    flagged.dedup();
+    assert_eq!(
+        flagged,
+        vec![
+            "fleet/lockorder.rs",
+            "quant/unsafe_outside.rs",
+            "runtime/mod.rs",
+            "server/bad_allow.rs",
+            "server/frames_misuse.rs",
+            "server/mod.rs",
+            "server/panic.rs",
+        ],
+        "every violation fixture must produce at least one finding"
+    );
+}
+
+#[test]
+fn clean_fixtures_pass() {
+    let report = lint_tree(&fixture_root("clean")).expect("clean tree lints");
+    assert!(
+        report.clean(),
+        "clean fixtures flagged:\n{}",
+        report.findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+    assert_eq!(report.allows, 1, "the justified allow in handlers.rs is counted");
+}
+
+#[test]
+fn cli_exit_status_matches_findings() {
+    let lint = |path: &Path| {
+        kbitscale::cli::main_with_args(vec![
+            "lint".to_string(),
+            "--path".to_string(),
+            path.display().to_string(),
+        ])
+    };
+    assert!(lint(&fixture_root("violations")).is_err(), "violations must exit nonzero");
+    assert!(lint(&fixture_root("clean")).is_ok(), "clean tree must exit zero");
+}
+
+/// The real source tree lints clean — the exact invariant the blocking
+/// CI step (`kbitscale lint`) enforces, pinned here too so a plain
+/// `cargo test` catches a regression before CI does.
+#[test]
+fn real_tree_lints_clean() {
+    let root = Path::new("src");
+    assert!(root.join("lib.rs").exists(), "run from rust/ (cargo does)");
+    let report = lint_tree(root).expect("source tree lints");
+    assert!(
+        report.clean(),
+        "source tree has lint findings:\n{}",
+        report.findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+    );
+}

@@ -8,9 +8,10 @@
 //! proportional to.
 //!
 //! A native section (no artifacts needed) times the `quant::fused`
-//! dequantize-matmul kernel — scalar vs AVX2 vs the classic
-//! `dequantize_into` + GEMM composition — and spot-checks that all three
-//! produce bit-identical outputs.
+//! dequantize-matmul kernel — decode-only scalar vs AVX2, tiled vs
+//! untiled, 1/2/4 scoring threads, and the classic `dequantize_into` +
+//! GEMM composition — and spot-checks that every path produces
+//! bit-identical outputs.
 
 use kbitscale::models::manifest::Manifest;
 use kbitscale::quant::codebook::{Codebook, DataType};
@@ -62,9 +63,39 @@ fn main() -> anyhow::Result<()> {
     });
     println!("{:<26} {:>12.1} {:>14.2}", "unpack 4-bit stream", dtu * 1e3, (n * 4) as f64 / dtu / 1e9);
 
-    // ---- Native fused dequant-matmul kernel (no artifacts needed) ----
+    // ---- Decode-only: vectorized bitstream decode (scalar vs AVX2) ----
     {
         use kbitscale::quant::fused::{self, Backend};
+        use kbitscale::quant::packing::PackedTensor;
+
+        let p = PackedTensor::from_quantized(&q)?;
+        println!("\ndecode_range ({}M fp4 b64 elements -> f32):", n / 1_000_000);
+        println!("{:<26} {:>12} {:>14}", "backend", "ms", "GB/s (f32 out)");
+        let t_sc = bench_best(1, 7, || {
+            fused::decode_range_with(Backend::Scalar, &p, 0, p.n, &mut out).unwrap();
+            std::hint::black_box(&out);
+        });
+        println!("{:<26} {:>12.1} {:>14.2}", "scalar", t_sc * 1e3, (n * 4) as f64 / t_sc / 1e9);
+        if fused::avx2_available() {
+            let t_vx = bench_best(1, 7, || {
+                fused::decode_range_with(Backend::Avx2, &p, 0, p.n, &mut out).unwrap();
+                std::hint::black_box(&out);
+            });
+            println!(
+                "{:<26} {:>12.1} {:>14.2}",
+                "avx2 gather",
+                t_vx * 1e3,
+                (n * 4) as f64 / t_vx / 1e9
+            );
+            println!("avx2 decode speedup: {:.2}x over scalar", t_sc / t_vx);
+        } else {
+            println!("{:<26} {:>12}", "avx2 gather", "n/a (no AVX2)");
+        }
+    }
+
+    // ---- Native fused dequant-matmul kernel (no artifacts needed) ----
+    {
+        use kbitscale::quant::fused::{self, Backend, Tiling};
         use kbitscale::quant::packing::PackedTensor;
 
         let (m, kd, nn) = (8usize, 1024usize, 1024usize);
@@ -74,6 +105,7 @@ fn main() -> anyhow::Result<()> {
         rng.fill_normal(&mut wn, 0.05);
         let p = PackedTensor::quantize(&wn, &QuantSpec::new(DataType::Fp, 4, Some(64)))?;
         let backend = fused::active_backend();
+        let tile = Tiling::for_geometry(m, kd, nn);
         println!("\nnative fused kernel ({m}x{kd}x{nn}, fp4 b64, auto backend {backend:?}):");
         println!("{:<26} {:>12}", "path", "ms");
         let mut dense = vec![0.0f32; kd * nn];
@@ -88,21 +120,53 @@ fn main() -> anyhow::Result<()> {
         println!("{:<26} {:>12.2}", "dequantize_into + GEMM", t_unfused * 1e3);
         let t_scalar = bench_best(2, 9, || {
             out.fill(0.0);
-            fused::fused_matmul_with(Backend::Scalar, &x, &p, &mut out, m, kd, nn, &mut wrow)
+            fused::fused_matmul_untiled(Backend::Scalar, &x, &p, &mut out, m, kd, nn, &mut wrow)
                 .unwrap();
             std::hint::black_box(&out);
         });
-        println!("{:<26} {:>12.2}", "fused scalar", t_scalar * 1e3);
+        println!("{:<26} {:>12.2}", "fused scalar untiled", t_scalar * 1e3);
         if fused::avx2_available() {
             let t_avx = bench_best(2, 9, || {
                 out.fill(0.0);
-                fused::fused_matmul_with(Backend::Avx2, &x, &p, &mut out, m, kd, nn, &mut wrow)
+                fused::fused_matmul_untiled(Backend::Avx2, &x, &p, &mut out, m, kd, nn, &mut wrow)
                     .unwrap();
                 std::hint::black_box(&out);
             });
-            println!("{:<26} {:>12.2}", "fused avx2", t_avx * 1e3);
+            println!("{:<26} {:>12.2}", "fused avx2 untiled", t_avx * 1e3);
         } else {
-            println!("{:<26} {:>12}", "fused avx2", "n/a (no AVX2)");
+            println!("{:<26} {:>12}", "fused avx2 untiled", "n/a (no AVX2)");
+        }
+        // Tiled (cache-blocked) vs the untiled row-streaming loop, on the
+        // auto backend: the PR's headline kernel comparison.
+        let t_untiled = bench_best(2, 9, || {
+            out.fill(0.0);
+            fused::fused_matmul_untiled(backend, &x, &p, &mut out, m, kd, nn, &mut wrow).unwrap();
+            std::hint::black_box(&out);
+        });
+        let t_tiled = bench_best(2, 9, || {
+            out.fill(0.0);
+            fused::fused_matmul_tiled(backend, tile, &x, &p, &mut out, m, kd, nn, &mut wrow)
+                .unwrap();
+            std::hint::black_box(&out);
+        });
+        println!("{:<26} {:>12.2}", "fused untiled (auto)", t_untiled * 1e3);
+        println!(
+            "{:<26} {:>12.2}   ({:?}, {:.2}x vs untiled)",
+            "fused tiled (auto)",
+            t_tiled * 1e3,
+            tile,
+            t_untiled / t_tiled
+        );
+        // Thread scaling: deterministic column split, bit-identical by
+        // construction, so this row is pure wall-clock.
+        for threads in [1usize, 2, 4] {
+            let t_par = bench_best(2, 9, || {
+                out.fill(0.0);
+                fused::fused_matmul_parallel(&x, &p, &mut out, m, kd, nn, threads, &mut wrow)
+                    .unwrap();
+                std::hint::black_box(&out);
+            });
+            println!("{:<26} {:>12.2}", format!("fused tiled {threads} thread(s)"), t_par * 1e3);
         }
         // Bit-identity spot check: the honest part of the speedup claim.
         let mut a = vec![0.0f32; m * nn];
@@ -115,6 +179,11 @@ fn main() -> anyhow::Result<()> {
             let mut c = vec![0.0f32; m * nn];
             fused::fused_matmul_with(Backend::Avx2, &x, &p, &mut c, m, kd, nn, &mut wrow)?;
             anyhow::ensure!(a == c, "avx2 fused output diverged from the scalar reference");
+        }
+        for threads in [2usize, 4] {
+            let mut d = vec![0.0f32; m * nn];
+            fused::fused_matmul_parallel(&x, &p, &mut d, m, kd, nn, threads, &mut wrow)?;
+            anyhow::ensure!(a == d, "{threads}-thread fused output diverged from the reference");
         }
         println!("bit-identity: all fused paths agree on {} outputs", m * nn);
     }

@@ -18,6 +18,10 @@
 //! * **fused native backend** — the same traffic against the `#fused`
 //!   build of one spec (packed weights walked in the matmul inner loop,
 //!   no f32 expansion) vs the classic dequantize→executable resident.
+//! * **fused kernel microbench** — decode-only scalar vs AVX2, tiled vs
+//!   untiled fused matmul, and a 1/2/4-thread column-parallel sweep on a
+//!   standalone fp4 b64 tensor, so kernel regressions show up even when
+//!   protocol overhead hides them in the end-to-end rows.
 //! * **streamed vs buffered** — one 48-row request with `stream:true` vs
 //!   buffered; streaming should put the first partial scores on the wire
 //!   well before the buffered response completes.
@@ -195,6 +199,108 @@ fn main() -> anyhow::Result<()> {
                 ("unfused_p50_ms", Json::Num(u_p50)),
                 ("fused_req_per_s", Json::Num(f_rps)),
                 ("fused_p50_ms", Json::Num(f_p50)),
+            ]),
+        );
+    }
+
+    // --- fused kernel microbench: decode + tiling + thread sweep --------
+    // Kernel-level numbers behind the serving rows above, captured in the
+    // snapshot so regressions in the decode or tiling layers show up even
+    // when end-to-end throughput hides them behind protocol overhead.
+    println!();
+    {
+        use kbitscale::quant::fused::{self, Backend, Tiling};
+        use kbitscale::quant::packing::PackedTensor;
+        use kbitscale::util::progress::bench_best;
+        use kbitscale::util::rng::Rng;
+
+        let (m, kd, nn) = (8usize, 768usize, 768usize);
+        let mut rng = Rng::new(7);
+        let mut x = vec![0.0f32; m * kd];
+        let mut w = vec![0.0f32; kd * nn];
+        rng.fill_normal(&mut x, 1.0);
+        rng.fill_normal(&mut w, 0.05);
+        let p = PackedTensor::quantize(&w, &QuantSpec::new(DataType::Fp, 4, Some(64)))?;
+        let mut decoded = vec![0.0f32; p.n];
+        let dec_scalar = bench_best(1, 7, || {
+            fused::decode_range_with(Backend::Scalar, &p, 0, p.n, &mut decoded).unwrap();
+            std::hint::black_box(&decoded);
+        });
+        let dec_avx2 = if fused::avx2_available() {
+            Some(bench_best(1, 7, || {
+                fused::decode_range_with(Backend::Avx2, &p, 0, p.n, &mut decoded).unwrap();
+                std::hint::black_box(&decoded);
+            }))
+        } else {
+            None
+        };
+        let dec_best = dec_avx2.unwrap_or(dec_scalar);
+        println!(
+            "decode_range ({} elems): scalar {:.3} ms | avx2 {} | {:.2} GB/s f32 out",
+            p.n,
+            dec_scalar * 1e3,
+            dec_avx2.map_or_else(|| "n/a".to_string(), |t| format!("{:.3} ms", t * 1e3)),
+            (p.n * 4) as f64 / dec_best / 1e9
+        );
+        snap.insert(
+            "decode".to_string(),
+            Json::obj(vec![
+                ("elements", Json::Num(p.n as f64)),
+                ("scalar_ms", Json::Num(dec_scalar * 1e3)),
+                ("avx2_ms", dec_avx2.map_or(Json::Null, |t| Json::Num(t * 1e3))),
+                ("gbps_f32_out", Json::Num((p.n * 4) as f64 / dec_best / 1e9)),
+            ]),
+        );
+
+        let backend = fused::active_backend();
+        let tile = Tiling::for_geometry(m, kd, nn);
+        let mut out = vec![0.0f32; m * nn];
+        let mut panel: Vec<f32> = Vec::new();
+        let t_untiled = bench_best(2, 9, || {
+            out.fill(0.0);
+            fused::fused_matmul_untiled(backend, &x, &p, &mut out, m, kd, nn, &mut panel).unwrap();
+            std::hint::black_box(&out);
+        });
+        let t_tiled = bench_best(2, 9, || {
+            out.fill(0.0);
+            fused::fused_matmul_tiled(backend, tile, &x, &p, &mut out, m, kd, nn, &mut panel)
+                .unwrap();
+            std::hint::black_box(&out);
+        });
+        println!(
+            "fused kernel {m}x{kd}x{nn} ({backend:?}): untiled {:.2} ms | tiled {:.2} ms \
+             ({:.2}x, {tile:?})",
+            t_untiled * 1e3,
+            t_tiled * 1e3,
+            t_untiled / t_tiled.max(1e-12)
+        );
+        let mut thread_rows: Vec<Json> = Vec::new();
+        for threads in [1usize, 2, 4] {
+            let t_par = bench_best(2, 9, || {
+                out.fill(0.0);
+                fused::fused_matmul_parallel(&x, &p, &mut out, m, kd, nn, threads, &mut panel)
+                    .unwrap();
+                std::hint::black_box(&out);
+            });
+            println!(
+                "  {threads} thread(s): {:.2} ms ({:.2}x vs 1-thread tiled)",
+                t_par * 1e3,
+                t_tiled / t_par.max(1e-12)
+            );
+            thread_rows.push(Json::obj(vec![
+                ("threads", Json::Num(threads as f64)),
+                ("ms", Json::Num(t_par * 1e3)),
+            ]));
+        }
+        snap.insert(
+            "fused_kernel".to_string(),
+            Json::obj(vec![
+                ("backend", Json::Str(format!("{backend:?}"))),
+                ("untiled_ms", Json::Num(t_untiled * 1e3)),
+                ("tiled_ms", Json::Num(t_tiled * 1e3)),
+                ("tile_rows", Json::Num(tile.rows as f64)),
+                ("tile_cols", Json::Num(tile.cols as f64)),
+                ("threads", Json::Arr(thread_rows)),
             ]),
         );
     }

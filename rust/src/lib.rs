@@ -20,13 +20,13 @@
 //!
 //! | module | role |
 //! |---|---|
-//! | [`util`] | from-scratch substrates: JSON, RNG, thread pool + bounded queue, CLI, property testing |
+//! | [`util`] | from-scratch substrates: JSON, RNG, thread pool (`parallel_map`/`parallel_map_init`, `KBITSCALE_THREADS` scoring pool) + bounded queue, CLI, property testing |
 //! | [`tensor`] | dense f32 tensors + binary serialization |
-//! | [`quant`] | codebooks, block-wise quantization, packed k-bit residency, centering, proxy quantization, fused dequantize-matmul kernel (`quant::fused`: scalar + AVX2, bit-identical to dequantize→GEMM) |
+//! | [`quant`] | codebooks, block-wise quantization, packed k-bit residency, centering, proxy quantization, fused dequantize-matmul kernel (`quant::fused`: AVX2 gather-based bitstream decode, cache-blocked tiling, column-parallel execution — all bit-identical to scalar dequantize→GEMM) |
 //! | [`gptq`] | one-shot GPTQ (Hessian/Cholesky sequential rounding) |
 //! | [`data`] | synthetic Zipf–Markov corpus + four zero-shot task generators |
 //! | [`models`] | model zoo: families, tiers, init (incl. outlier injection), checkpoints |
-//! | [`runtime`] | PJRT client wrapper: HLO-text loading, single-flight executable cache, literal conversion, pipeline-sharded execution plans (`runtime::plan`), native packed-residency scoring backend (`runtime::native`) |
+//! | [`runtime`] | PJRT client wrapper: HLO-text loading, single-flight executable cache, literal conversion, pipeline-sharded execution plans (`runtime::plan`), native packed-residency scoring backend (`runtime::native`, column-parallel fused matmuls) |
 //! | [`train`] | training driver over the AOT train-step executable |
 //! | [`eval`] | perplexity + zero-shot evaluation harness, scored through execution plans |
 //! | [`coordinator`] | sweep grid, scheduler, worker pool, results store |

@@ -3,32 +3,63 @@
 //! The classic serving path expands every [`PackedTensor`] into a full f32
 //! tensor (`dequantize_into` → GEMM), paying the dequantized footprint once
 //! per parameter per load and shipping f32 weights into the executable. This
-//! module fuses the two steps: the matmul inner loop walks the packed k-bit
-//! bitstream directly, decoding **one weight row at a time** into a small
-//! reusable scratch row and accumulating it into the output — packed
-//! parameters never materialize as full f32 tensors on the score path.
+//! module fuses the two steps: the matmul walks the packed k-bit bitstream
+//! directly, decoding small weight **panels** into a reusable scratch buffer
+//! and accumulating them into the output — packed parameters never
+//! materialize as full f32 tensors on the score path.
 //!
-//! Numerical contract: the fused kernel is **bit-identical** to the
-//! `dequantize_into` → reference-GEMM composition. Both share one
-//! accumulation order (k-outer axpy: `out[i][c] += x[i][r] * w[r][c]`, `r`
-//! ascending, `c` ascending) and the row decoder reproduces
-//! [`PackedTensor::dequantize_into`]'s exact arithmetic
-//! (`values[idx] * absmax + mean`, f32 ops in the same order). The AVX2 path
-//! uses only `_mm256_mul_ps`/`_mm256_add_ps` — deliberately **no FMA**, which
-//! would skip the intermediate rounding step and break bit-identity with the
-//! scalar fallback.
+//! # Kernel design
+//!
+//! Three layers, composed bottom-up:
+//!
+//! 1. **Vectorized decode** ([`decode_range_with`]): the AVX2 path unpacks
+//!    eight k-bit indices at a time, range-checks them against the codebook,
+//!    gathers the table entries with `_mm256_i32gather_ps`, and applies the
+//!    broadcast per-block `absmax`/`mean` with one vector mul + add. The
+//!    scalar path is the portable fallback and the bit-identity reference.
+//! 2. **Cache blocking** ([`fused_matmul_tiled`]): the k×n loop nest is
+//!    tiled so each decoded `tile.rows × tile.cols` weight panel stays
+//!    L2-resident while it is swept across all `m` input rows, instead of
+//!    re-decoding per row. [`Tiling::for_geometry`] derives tile sizes from
+//!    the payload geometry ([`PANEL_BUDGET_BYTES`] / [`TILE_COLS`]); the
+//!    panel buffer reuses the scratch-row convention (callers pass one
+//!    `&mut Vec<f32>` across calls, so the score path allocates it once).
+//! 3. **Column-parallel execution** ([`fused_matmul_parallel`]): output
+//!    columns are partitioned into one contiguous span per
+//!    `util::pool` worker. The split is deterministic, each column is
+//!    written by exactly one thread, and every worker accumulates into a
+//!    thread-local output panel seeded from `out` — so `+=` semantics,
+//!    signed zeros, and the per-element accumulation order are all
+//!    preserved and results are bit-identical to the single-threaded
+//!    kernel for every thread count. Serving reads the worker count from
+//!    `KBITSCALE_THREADS` once per process
+//!    ([`crate::util::pool::scoring_threads`]).
+//!
+//! # Numerical contract
+//!
+//! The fused kernel is **bit-identical** to the `dequantize_into` →
+//! reference-GEMM composition. Both share one accumulation order (k-outer
+//! axpy: `out[i][c] += x[i][r] * w[r][c]`, `r` ascending, `c` ascending) and
+//! the panel decoder reproduces [`PackedTensor::dequantize_into`]'s exact
+//! arithmetic (`values[idx] * absmax + mean`, f32 ops in the same order).
+//! Tiling only regroups the `(r, c)` iteration space — each output element
+//! still sees `r` in ascending order — and the column split never moves an
+//! element between threads mid-sum, so neither changes a single bit. The
+//! AVX2 paths use only `_mm256_mul_ps`/`_mm256_add_ps` — deliberately **no
+//! FMA**, which would skip the intermediate rounding step and break
+//! bit-identity with the scalar fallback.
 //!
 //! Backend selection is automatic (runtime `is_x86_feature_detected!`) with
 //! an escape hatch: setting `KBITSCALE_FORCE_SCALAR` in the environment pins
 //! the scalar fallback, which CI uses to prove the scalar path passes the
-//! same suite (the selection is latched on first use, so set it before any
-//! scoring happens).
+//! same suite at 1 and 4 scoring threads (the selection is latched on first
+//! use, so set it before any scoring happens).
 
 use std::sync::OnceLock;
 
 use anyhow::{ensure, Result};
 
-use super::packing::PackedTensor;
+use super::packing::{self, PackedTensor};
 
 /// Which inner-loop implementation a fused matmul runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -66,11 +97,67 @@ pub fn active_backend() -> Backend {
     })
 }
 
+/// Column width of an auto-derived tile panel: wide enough to amortize the
+/// per-span decode setup and keep the axpy sweep in full 8-lane strides,
+/// narrow enough that `m` output-row slices of it stay cache-resident.
+pub const TILE_COLS: usize = 512;
+
+/// Budget for one decoded weight panel (`tile.rows × tile.cols` f32s) —
+/// half of a conservative 256 KiB L2, leaving the other half for the
+/// output panel and the `x` column slice the sweep touches.
+pub const PANEL_BUDGET_BYTES: usize = 128 * 1024;
+
+/// Cache-blocking geometry for [`fused_matmul_tiled`]: a decoded weight
+/// panel covers `rows` weight rows (the k dimension) × `cols` output
+/// columns. Tiling regroups the loop nest but never reorders any output
+/// element's accumulation over `r`, so every tiling is bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Tiling {
+    /// Weight rows (k dimension) decoded per panel.
+    pub rows: usize,
+    /// Output columns covered per panel.
+    pub cols: usize,
+}
+
+impl Tiling {
+    /// The degenerate row-streaming tiling: one decoded row at a time,
+    /// all `n` columns — the pre-tiling fused loop, kept as the tiled
+    /// path's bit-identity baseline ([`fused_matmul_untiled`]).
+    pub fn row_streaming(n: usize) -> Tiling {
+        Tiling { rows: 1, cols: n.max(1) }
+    }
+
+    /// Derive a tile from the payload geometry: columns capped at
+    /// [`TILE_COLS`], then as many rows as fit [`PANEL_BUDGET_BYTES`], so
+    /// one decoded panel stays L2-resident across all `m` input rows.
+    /// Deterministic in the geometry (no runtime probing).
+    pub fn for_geometry(_m: usize, kd: usize, n: usize) -> Tiling {
+        let cols = n.clamp(1, TILE_COLS);
+        let rows = (PANEL_BUDGET_BYTES / 4 / cols).clamp(1, kd.max(1));
+        Tiling { rows, cols }
+    }
+}
+
 /// Decode packed elements `[lo, hi)` straight into `out` (length `hi - lo`)
-/// — the row-granular form of [`PackedTensor::dequantize_into`], and
+/// — the panel-granular form of [`PackedTensor::dequantize_into`], and
 /// bit-identical to the slice `full[lo..hi]` of a full decode: same codebook
 /// lookup, same `value * absmax + mean` f32 arithmetic per element.
+/// Dispatches to [`active_backend`].
 pub fn decode_range(p: &PackedTensor, lo: usize, hi: usize, out: &mut [f32]) -> Result<()> {
+    decode_range_with(active_backend(), p, lo, hi, out)
+}
+
+/// [`decode_range`] with an explicit backend (parity tests and benches
+/// drive both). The span is walked block-by-block so the per-block
+/// `absmax`/`mean` are hoisted (and, on AVX2, broadcast) once per block
+/// sub-span rather than re-fetched per element.
+pub fn decode_range_with(
+    backend: Backend,
+    p: &PackedTensor,
+    lo: usize,
+    hi: usize,
+    out: &mut [f32],
+) -> Result<()> {
     ensure!(lo <= hi && hi <= p.n, "decode_range {lo}..{hi} out of bounds for {} elements", p.n);
     ensure!(out.len() == hi - lo, "decode_range: buffer {} != span {}", out.len(), hi - lo);
     // Cross-field invariants (block >= 1, absmax/means table lengths,
@@ -80,35 +167,140 @@ pub fn decode_range(p: &PackedTensor, lo: usize, hi: usize, out: &mut [f32]) -> 
     let values = p.codebook.values();
     let k = p.bits;
     let mask = if k >= 8 { 0xFFu32 } else { (1u32 << k) - 1 };
-    let mut bitpos = lo * k;
     let mut i = lo;
-    for o in out.iter_mut() {
+    let mut done = 0usize;
+    while i < hi {
         let b = i / p.block;
+        let end = hi.min((b + 1) * p.block);
         let amax = p.absmax[b];
         let mean = p.means.as_ref().map_or(0.0, |m| m[b]);
-        let word = bitpos / 32;
-        let off = bitpos % 32;
-        let mut v = p.packed[word] >> off;
-        if off + k > 32 {
-            v |= p.packed[word + 1] << (32 - off);
+        let span = &mut out[done..done + (end - i)];
+        decode_span(backend, &p.packed, values, k, mask, i, amax, mean, span)?;
+        done += end - i;
+        i = end;
+    }
+    Ok(())
+}
+
+/// Decode one within-block span (uniform `absmax`/`mean`) starting at
+/// packed element `start`.
+#[allow(clippy::too_many_arguments)]
+fn decode_span(
+    backend: Backend,
+    packed: &[u32],
+    values: &[f32],
+    k: usize,
+    mask: u32,
+    start: usize,
+    amax: f32,
+    mean: f32,
+    out: &mut [f32],
+) -> Result<()> {
+    match backend {
+        Backend::Scalar => decode_span_scalar(packed, values, k, mask, start, amax, mean, out),
+        Backend::Avx2 => {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: Backend::Avx2 is only ever selected after
+            // `is_x86_feature_detected!("avx2")` (active_backend), or by a
+            // test/bench that checked `avx2_available()` first.
+            unsafe {
+                decode_span_avx2(packed, values, k, mask, start, amax, mean, out)
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            decode_span_scalar(packed, values, k, mask, start, amax, mean, out)
         }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn decode_span_scalar(
+    packed: &[u32],
+    values: &[f32],
+    k: usize,
+    mask: u32,
+    start: usize,
+    amax: f32,
+    mean: f32,
+    out: &mut [f32],
+) -> Result<()> {
+    let mut bitpos = start * k;
+    for o in out.iter_mut() {
         // Codebooks may hold fewer than 2^k values (int codebooks drop
         // one), so a corrupt bitstream can encode an index past the
         // table: reject it, don't index past the slice.
-        let idx = (v & mask) as usize;
+        let idx = packing::bit_window(packed, bitpos, k, mask) as usize;
         let Some(&val) = values.get(idx) else {
             anyhow::bail!("bitstream index {idx} out of range for {}-entry codebook", values.len());
         };
         *o = val * amax + mean;
         bitpos += k;
-        i += 1;
+    }
+    Ok(())
+}
+
+/// AVX2 span decode: eight k-bit indices are unpacked and range-checked,
+/// gathered from the codebook in one `_mm256_i32gather_ps`, and scaled
+/// with broadcast `absmax`/`mean` as one vector mul + add (not
+/// `_mm256_fmadd_ps` — FMA skips the intermediate rounding and would
+/// diverge from the scalar path in the last bit). Scalar tail for the
+/// final `< 8` elements uses the identical per-element arithmetic.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+#[allow(clippy::too_many_arguments)]
+// SAFETY: callers must ensure AVX2 is available (checked via
+// `is_x86_feature_detected!` before [`Backend::Avx2`] is ever selected);
+// every gather lane index is range-checked against the codebook table
+// before the gather executes, and all loads/stores are unaligned
+// intrinsics over in-bounds slice ranges.
+unsafe fn decode_span_avx2(
+    packed: &[u32],
+    values: &[f32],
+    k: usize,
+    mask: u32,
+    start: usize,
+    amax: f32,
+    mean: f32,
+    out: &mut [f32],
+) -> Result<()> {
+    use std::arch::x86_64::*;
+    let n = out.len();
+    let vamax = _mm256_set1_ps(amax);
+    let vmean = _mm256_set1_ps(mean);
+    let mut idx = [0i32; 8];
+    let mut e = 0usize;
+    while e + 8 <= n {
+        let mut hi = 0u32;
+        for (j, slot) in idx.iter_mut().enumerate() {
+            let v = packing::bit_window(packed, (start + e + j) * k, k, mask);
+            hi = hi.max(v);
+            *slot = v as i32;
+        }
+        // Gathering with an out-of-table lane would read past the
+        // codebook slice, so a corrupt bitstream must bail before the
+        // gather, exactly like the scalar path's per-element check.
+        if hi as usize >= values.len() {
+            anyhow::bail!("bitstream index {hi} out of range for {}-entry codebook", values.len());
+        }
+        let vidx = _mm256_loadu_si256(idx.as_ptr() as *const __m256i);
+        let vals = _mm256_i32gather_ps::<4>(values.as_ptr(), vidx);
+        let dq = _mm256_add_ps(_mm256_mul_ps(vals, vamax), vmean);
+        _mm256_storeu_ps(out.as_mut_ptr().add(e), dq);
+        e += 8;
+    }
+    for (j, o) in out.iter_mut().enumerate().skip(e) {
+        let i = packing::bit_window(packed, (start + j) * k, k, mask) as usize;
+        let Some(&val) = values.get(i) else {
+            anyhow::bail!("bitstream index {i} out of range for {}-entry codebook", values.len());
+        };
+        *o = val * amax + mean;
     }
     Ok(())
 }
 
 /// Reference dense GEMM accumulating into `out`: `out[m,n] += x[m,k] @
 /// w[k,n]`, row-major, k-outer axpy order. This exact loop order is the
-/// bit-identity baseline the fused and SIMD paths are tested against.
+/// bit-identity baseline the fused, tiled, and parallel paths are tested
+/// against.
 pub fn matmul_f32(x: &[f32], w: &[f32], out: &mut [f32], m: usize, kd: usize, n: usize) {
     debug_assert_eq!(x.len(), m * kd);
     debug_assert_eq!(w.len(), kd * n);
@@ -134,11 +326,57 @@ pub fn matmul_f32_with(
     }
 }
 
+/// Column-parallel [`matmul_f32`]: the same deterministic span split and
+/// seeded thread-local panels as [`fused_matmul_parallel`], so dense
+/// projections scale with the same bit-identity guarantee. `threads <= 1`
+/// runs the single-threaded loop in place.
+pub fn matmul_f32_parallel(
+    x: &[f32],
+    w: &[f32],
+    out: &mut [f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    threads: usize,
+) {
+    debug_assert_eq!(x.len(), m * kd);
+    debug_assert_eq!(w.len(), kd * n);
+    debug_assert_eq!(out.len(), m * n);
+    let backend = active_backend();
+    let spans = column_spans(n, threads);
+    if spans.len() <= 1 {
+        return matmul_f32_with(backend, x, w, out, m, kd, n);
+    }
+    let seed: &[f32] = out;
+    let panels = crate::util::pool::parallel_map(spans.len(), spans.len(), |ti| {
+        let (c0, c1) = spans[ti];
+        let wd = c1 - c0;
+        let mut local = vec![0.0f32; m * wd];
+        for i in 0..m {
+            local[i * wd..(i + 1) * wd].copy_from_slice(&seed[i * n + c0..i * n + c1]);
+        }
+        for r in 0..kd {
+            let wrow = &w[r * n + c0..r * n + c1];
+            for i in 0..m {
+                axpy(backend, x[i * kd + r], wrow, &mut local[i * wd..(i + 1) * wd]);
+            }
+        }
+        local
+    });
+    for (&(c0, c1), local) in spans.iter().zip(panels) {
+        let wd = c1 - c0;
+        for i in 0..m {
+            out[i * n + c0..i * n + c1].copy_from_slice(&local[i * wd..(i + 1) * wd]);
+        }
+    }
+}
+
 /// Fused dequantize×matmul accumulating into `out`: `out[m,n] += x[m,k] @
-/// W[k,n]` where `W` is `p`'s packed k-bit payload, decoded one row at a
-/// time into `wrow` (resized to `n`; pass the same buffer across calls so
-/// the score path allocates the scratch row once). Never materializes the
-/// full f32 weight tensor.
+/// W[k,n]` where `W` is `p`'s packed k-bit payload, decoded panel-by-panel
+/// into `panel` (pass the same buffer across calls so the score path
+/// allocates the scratch once; tile sizes come from
+/// [`Tiling::for_geometry`]). Never materializes the full f32 weight
+/// tensor.
 pub fn fused_matmul(
     x: &[f32],
     p: &PackedTensor,
@@ -146,12 +384,13 @@ pub fn fused_matmul(
     m: usize,
     kd: usize,
     n: usize,
-    wrow: &mut Vec<f32>,
+    panel: &mut Vec<f32>,
 ) -> Result<()> {
-    fused_matmul_with(active_backend(), x, p, out, m, kd, n, wrow)
+    fused_matmul_with(active_backend(), x, p, out, m, kd, n, panel)
 }
 
-/// [`fused_matmul`] with an explicit backend (parity tests drive both).
+/// [`fused_matmul`] with an explicit backend (parity tests drive both);
+/// geometry-derived tiling.
 #[allow(clippy::too_many_arguments)]
 pub fn fused_matmul_with(
     backend: Backend,
@@ -161,17 +400,204 @@ pub fn fused_matmul_with(
     m: usize,
     kd: usize,
     n: usize,
+    panel: &mut Vec<f32>,
+) -> Result<()> {
+    fused_matmul_tiled(backend, Tiling::for_geometry(m, kd, n), x, p, out, m, kd, n, panel)
+}
+
+/// The untiled row-streaming fused loop (decode row `r`, sweep it across
+/// all `m` inputs): the pre-tiling baseline, kept as the reference the
+/// tiled and parallel paths are benched and parity-tested against.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_matmul_untiled(
+    backend: Backend,
+    x: &[f32],
+    p: &PackedTensor,
+    out: &mut [f32],
+    m: usize,
+    kd: usize,
+    n: usize,
     wrow: &mut Vec<f32>,
+) -> Result<()> {
+    check_geometry(p, x, out, m, kd, n)?;
+    wrow.resize(n, 0.0);
+    for r in 0..kd {
+        decode_range_with(backend, p, r * n, (r + 1) * n, wrow)?;
+        for i in 0..m {
+            axpy(backend, x[i * kd + r], wrow, &mut out[i * n..(i + 1) * n]);
+        }
+    }
+    Ok(())
+}
+
+/// Cache-blocked fused matmul with an explicit [`Tiling`] (tests force
+/// tiny tiles whose edges straddle quantization blocks; production goes
+/// through [`fused_matmul`] / [`Tiling::for_geometry`]).
+#[allow(clippy::too_many_arguments)]
+pub fn fused_matmul_tiled(
+    backend: Backend,
+    tile: Tiling,
+    x: &[f32],
+    p: &PackedTensor,
+    out: &mut [f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    panel: &mut Vec<f32>,
+) -> Result<()> {
+    check_geometry(p, x, out, m, kd, n)?;
+    fused_matmul_cols(backend, tile, x, p, out, m, kd, n, 0, n, n, panel)
+}
+
+/// Column-parallel fused matmul: output columns are split into one
+/// contiguous span per worker (deterministic split; each column written by
+/// exactly one thread), every worker runs the tiled kernel over its span
+/// into a thread-local panel seeded from `out`, and panels are copied back
+/// in span order — bit-identical to the single-threaded tiled kernel for
+/// every thread count. `threads <= 1` (or a single span) runs in place
+/// with the caller's `panel` scratch.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_matmul_parallel(
+    x: &[f32],
+    p: &PackedTensor,
+    out: &mut [f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    threads: usize,
+    panel: &mut Vec<f32>,
+) -> Result<()> {
+    fused_matmul_parallel_with(active_backend(), x, p, out, m, kd, n, threads, panel)
+}
+
+/// [`fused_matmul_parallel`] with an explicit backend (parity tests drive
+/// scalar and AVX2 across thread counts).
+#[allow(clippy::too_many_arguments)]
+pub fn fused_matmul_parallel_with(
+    backend: Backend,
+    x: &[f32],
+    p: &PackedTensor,
+    out: &mut [f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    threads: usize,
+    panel: &mut Vec<f32>,
+) -> Result<()> {
+    check_geometry(p, x, out, m, kd, n)?;
+    let spans = column_spans(n, threads);
+    if spans.len() <= 1 {
+        let tile = Tiling::for_geometry(m, kd, n);
+        return fused_matmul_cols(backend, tile, x, p, out, m, kd, n, 0, n, n, panel);
+    }
+    let seed: &[f32] = out;
+    let results = crate::util::pool::parallel_map_init(
+        spans.len(),
+        spans.len(),
+        Vec::new,
+        |scratch: &mut Vec<f32>, ti| -> Result<Vec<f32>> {
+            let (c0, c1) = spans[ti];
+            let w = c1 - c0;
+            let mut local = vec![0.0f32; m * w];
+            // Seed from the shared output so `+=` semantics (and signed
+            // zeros) survive the round-trip through the local panel.
+            for i in 0..m {
+                local[i * w..(i + 1) * w].copy_from_slice(&seed[i * n + c0..i * n + c1]);
+            }
+            let tile = Tiling::for_geometry(m, kd, w);
+            fused_matmul_cols(backend, tile, x, p, &mut local, m, kd, n, c0, c1, w, scratch)?;
+            Ok(local)
+        },
+    );
+    for (&(c0, c1), res) in spans.iter().zip(results) {
+        let local = res?;
+        let w = c1 - c0;
+        for i in 0..m {
+            out[i * n + c0..i * n + c1].copy_from_slice(&local[i * w..(i + 1) * w]);
+        }
+    }
+    Ok(())
+}
+
+fn check_geometry(
+    p: &PackedTensor,
+    x: &[f32],
+    out: &[f32],
+    m: usize,
+    kd: usize,
+    n: usize,
 ) -> Result<()> {
     ensure!(p.n == kd * n, "packed tensor has {} elements, matmul wants {}x{}", p.n, kd, n);
     ensure!(x.len() == m * kd, "fused_matmul: x has {} elements, want {}", x.len(), m * kd);
     ensure!(out.len() == m * n, "fused_matmul: out has {} elements, want {}", out.len(), m * n);
-    wrow.resize(n, 0.0);
-    for r in 0..kd {
-        decode_range(p, r * n, (r + 1) * n, wrow)?;
-        for i in 0..m {
-            axpy(backend, x[i * kd + r], wrow, &mut out[i * n..(i + 1) * n]);
+    Ok(())
+}
+
+/// Split `0..n` into at most `parts` contiguous, near-equal spans
+/// (deterministic; empty when `n == 0`).
+fn column_spans(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.clamp(1, n.max(1));
+    let per = n.div_ceil(parts);
+    (0..parts)
+        .filter_map(|t| {
+            let lo = t * per;
+            let hi = ((t + 1) * per).min(n);
+            (lo < hi).then_some((lo, hi))
+        })
+        .collect()
+}
+
+/// The tiled accumulation core over output columns `c0..c1` of `p`'s
+/// `kd × n` payload: each `tile.rows × span` weight panel is decoded once
+/// into `panel`, then swept across all `m` input rows before the next
+/// panel is decoded. Output element `(i, c)` lives at
+/// `out[i * out_stride + (c - c0)]`, so the same core serves the in-place
+/// full-width kernel (`out_stride = n`) and the parallel workers' local
+/// panels (`out_stride = c1 - c0`). Column tiles advance outermost and
+/// row tiles ascend inside them, so each output element accumulates `r`
+/// in ascending order — the bit-identity invariant.
+#[allow(clippy::too_many_arguments)]
+fn fused_matmul_cols(
+    backend: Backend,
+    tile: Tiling,
+    x: &[f32],
+    p: &PackedTensor,
+    out: &mut [f32],
+    m: usize,
+    kd: usize,
+    n: usize,
+    c0: usize,
+    c1: usize,
+    out_stride: usize,
+    panel: &mut Vec<f32>,
+) -> Result<()> {
+    if c0 >= c1 {
+        return Ok(());
+    }
+    let tw = tile.cols.max(1).min(c1 - c0);
+    let tr = tile.rows.max(1);
+    panel.resize(tr * tw, 0.0);
+    let mut cs = c0;
+    while cs < c1 {
+        let ce = (cs + tw).min(c1);
+        let w = ce - cs;
+        let mut rs = 0usize;
+        while rs < kd {
+            let re = (rs + tr).min(kd);
+            for r in rs..re {
+                let dst = &mut panel[(r - rs) * w..(r - rs) * w + w];
+                decode_range_with(backend, p, r * n + cs, r * n + ce, dst)?;
+            }
+            for i in 0..m {
+                let o0 = i * out_stride + (cs - c0);
+                let orow = &mut out[o0..o0 + w];
+                for r in rs..re {
+                    axpy(backend, x[i * kd + r], &panel[(r - rs) * w..(r - rs) * w + w], orow);
+                }
+            }
+            rs = re;
         }
+        cs = ce;
     }
     Ok(())
 }
@@ -268,13 +694,16 @@ mod tests {
                 spans.push((a, b));
             }
             for (lo, hi) in spans {
-                let mut got = vec![0.0f32; hi - lo];
-                decode_range(&p, lo, hi, &mut got).map_err(|e| format!("{e:#}"))?;
-                prop_assert!(
-                    got == full[lo..hi],
-                    "bits={bits} block={block:?} n={n} span {lo}..{hi}: range decode \
-                     != full decode slice"
-                );
+                for backend in backends() {
+                    let mut got = vec![0.0f32; hi - lo];
+                    decode_range_with(backend, &p, lo, hi, &mut got)
+                        .map_err(|e| format!("{e:#}"))?;
+                    prop_assert!(
+                        got == full[lo..hi],
+                        "bits={bits} block={block:?} n={n} span {lo}..{hi} {backend:?}: \
+                         range decode != full decode slice"
+                    );
+                }
             }
             Ok(())
         });
@@ -285,9 +714,22 @@ mod tests {
         let spec = QuantSpec::new(DataType::Int, 4, Some(64));
         let p = PackedTensor::quantize(&[1.0f32; 100], &spec).unwrap();
         let mut buf = vec![0.0f32; 10];
-        assert!(decode_range(&p, 95, 105, &mut buf).is_err(), "hi past n");
-        assert!(decode_range(&p, 0, 5, &mut buf).is_err(), "buffer/span mismatch");
-        assert!(decode_range(&p, 0, 10, &mut buf).is_ok());
+        for backend in backends() {
+            assert!(decode_range_with(backend, &p, 95, 105, &mut buf).is_err(), "hi past n");
+            assert!(decode_range_with(backend, &p, 0, 5, &mut buf).is_err(), "buffer mismatch");
+            assert!(decode_range_with(backend, &p, 0, 10, &mut buf).is_ok());
+        }
+    }
+
+    #[test]
+    fn tiling_for_geometry_is_sane() {
+        for (m, kd, n) in [(1, 1, 1), (8, 768, 768), (32, 4096, 4096), (4, 3, 100_000)] {
+            let t = Tiling::for_geometry(m, kd, n);
+            assert!(t.rows >= 1 && t.rows <= kd.max(1), "{m}x{kd}x{n}: rows {}", t.rows);
+            assert!(t.cols >= 1 && t.cols <= n.max(1).max(TILE_COLS), "cols {}", t.cols);
+            assert!(t.rows * t.cols * 4 <= PANEL_BUDGET_BYTES.max(4 * t.cols));
+        }
+        assert_eq!(Tiling::row_streaming(40), Tiling { rows: 1, cols: 40 });
     }
 
     #[test]
@@ -326,6 +768,94 @@ mod tests {
                     got == reference,
                     "bits={bits} block={block:?} m={m} k={kd} n={n} {backend:?}: \
                      fused != dequantize_into+GEMM"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_tiled_and_parallel_bit_identical_to_untiled() {
+        // Backend × tiling × thread-count cross-parity: forced tiny tiles
+        // whose edges straddle quantization blocks, and 1/2/4-way column
+        // splits, must all reproduce the untiled scalar loop to the bit.
+        check("fused-tiling-thread-parity", 32, |rng, case| {
+            let bits = 3 + case % 6;
+            let block = [Some(16), Some(32), None][(case / 6) % 3];
+            let m = 1 + rng.below(4);
+            let kd = 1 + rng.below(24);
+            let n = 1 + rng.below(48);
+            let mut w = vec![0.0f32; kd * n];
+            for v in w.iter_mut() {
+                *v = (rng.normal() * 0.5) as f32;
+            }
+            let x: Vec<f32> = (0..m * kd).map(|_| rng.normal() as f32).collect();
+            let mut spec = QuantSpec::new(DataType::ALL[rng.below(4)], bits, block);
+            if rng.below(2) == 0 {
+                spec = spec.with_centering();
+            }
+            let p = PackedTensor::quantize(&w, &spec).map_err(|e| format!("{e:#}"))?;
+            // Seed out with a prior accumulation so += survives every path.
+            let seed: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+            let mut reference = seed.clone();
+            let mut wrow = Vec::new();
+            fused_matmul_untiled(Backend::Scalar, &x, &p, &mut reference, m, kd, n, &mut wrow)
+                .map_err(|e| format!("{e:#}"))?;
+            let tiles = [
+                Tiling { rows: 1 + rng.below(5), cols: 1 + rng.below(9) },
+                Tiling::row_streaming(n),
+                Tiling::for_geometry(m, kd, n),
+            ];
+            for backend in backends() {
+                for tile in tiles {
+                    let mut got = seed.clone();
+                    let mut panel = Vec::new();
+                    fused_matmul_tiled(backend, tile, &x, &p, &mut got, m, kd, n, &mut panel)
+                        .map_err(|e| format!("{e:#}"))?;
+                    prop_assert!(
+                        got == reference,
+                        "bits={bits} block={block:?} m={m} k={kd} n={n} {backend:?} \
+                         {tile:?}: tiled != untiled scalar"
+                    );
+                }
+                for threads in [1usize, 2, 4] {
+                    let mut got = seed.clone();
+                    let mut panel = Vec::new();
+                    fused_matmul_parallel_with(
+                        backend, &x, &p, &mut got, m, kd, n, threads, &mut panel,
+                    )
+                    .map_err(|e| format!("{e:#}"))?;
+                    prop_assert!(
+                        got == reference,
+                        "bits={bits} block={block:?} m={m} k={kd} n={n} {backend:?} \
+                         threads={threads}: parallel != untiled scalar"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_parallel_dense_matmul_matches_scalar() {
+        check("dense-parallel-parity", 24, |rng, _| {
+            let m = 1 + rng.below(4);
+            let kd = 1 + rng.below(30);
+            let n = 1 + rng.below(60);
+            let x: Vec<f32> = (0..m * kd).map(|_| rng.normal() as f32).collect();
+            let w: Vec<f32> = (0..kd * n).map(|_| rng.normal() as f32).collect();
+            let seed: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+            let mut reference = seed.clone();
+            matmul_f32_with(Backend::Scalar, &x, &w, &mut reference, m, kd, n);
+            let mut simd = seed.clone();
+            matmul_f32(&x, &w, &mut simd, m, kd, n);
+            prop_assert!(simd == reference, "m={m} k={kd} n={n}: active dense != scalar");
+            for threads in [2usize, 3, 4] {
+                let mut got = seed.clone();
+                matmul_f32_parallel(&x, &w, &mut got, m, kd, n, threads);
+                prop_assert!(
+                    got == reference,
+                    "m={m} k={kd} n={n} threads={threads}: parallel dense != scalar"
                 );
             }
             Ok(())
@@ -381,6 +911,25 @@ mod tests {
         // x too short for m=2
         assert!(fused_matmul(&x, &p, &mut out, 2, 3, 4, &mut wrow).is_err());
         assert!(fused_matmul(&x, &p, &mut out, 1, 3, 4, &mut wrow).is_ok());
+        // The parallel entry enforces the same geometry checks.
+        let mut panel = Vec::new();
+        assert!(fused_matmul_parallel(&x, &p, &mut out, 1, 3, 5, 4, &mut panel).is_err());
+        assert!(fused_matmul_parallel(&x, &p, &mut out, 1, 3, 4, 4, &mut panel).is_ok());
+    }
+
+    #[test]
+    fn column_spans_partition_exactly() {
+        for (n, parts) in [(0usize, 4usize), (1, 4), (7, 3), (8, 8), (100, 7), (5, 1)] {
+            let spans = column_spans(n, parts);
+            let mut next = 0usize;
+            for &(lo, hi) in &spans {
+                assert_eq!(lo, next, "n={n} parts={parts}: gap or overlap");
+                assert!(hi > lo);
+                next = hi;
+            }
+            assert_eq!(next, n, "n={n} parts={parts}: columns not covered");
+            assert!(spans.len() <= parts.max(1));
+        }
     }
 
     #[test]
@@ -395,14 +944,17 @@ mod tests {
         let mut wd = vec![0.0f32; 16];
         p.dequantize_into(&mut wd).unwrap();
         for backend in backends() {
-            let mut got = vec![-0.0f32; 4];
-            let mut expect = vec![-0.0f32; 4];
-            let mut wrow = Vec::new();
-            fused_matmul_with(backend, &x, &p, &mut got, 1, 4, 4, &mut wrow).unwrap();
-            matmul_f32_with(Backend::Scalar, &x, &wd, &mut expect, 1, 4, 4);
-            let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
-            let eb: Vec<u32> = expect.iter().map(|v| v.to_bits()).collect();
-            assert_eq!(gb, eb, "{backend:?}");
+            for threads in [1usize, 2, 4] {
+                let mut got = vec![-0.0f32; 4];
+                let mut expect = vec![-0.0f32; 4];
+                let mut wrow = Vec::new();
+                fused_matmul_parallel_with(backend, &x, &p, &mut got, 1, 4, 4, threads, &mut wrow)
+                    .unwrap();
+                matmul_f32_with(Backend::Scalar, &x, &wd, &mut expect, 1, 4, 4);
+                let gb: Vec<u32> = got.iter().map(|v| v.to_bits()).collect();
+                let eb: Vec<u32> = expect.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(gb, eb, "{backend:?} threads={threads}");
+            }
         }
     }
 }

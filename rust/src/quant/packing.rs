@@ -58,16 +58,28 @@ pub fn unpack_bits(packed: &[u32], k: usize, n: usize) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(n);
     let mut bitpos = 0usize;
     for _ in 0..n {
-        let word = bitpos / 32;
-        let off = bitpos % 32;
-        let mut v = packed[word] >> off;
-        if off + k > 32 {
-            v |= packed[word + 1] << (32 - off);
-        }
-        out.push((v & mask) as u8);
+        out.push(bit_window(packed, bitpos, k, mask) as u8);
         bitpos += k;
     }
     Ok(out)
+}
+
+/// Extract the `k`-bit value starting at absolute bit `bitpos` of a
+/// little-endian packed word stream — the one bit-window read every
+/// decoder in the crate shares ([`unpack_bits`],
+/// [`PackedTensor::dequantize_into`], and the fused kernels' scalar and
+/// AVX2 span decoders), so their extraction arithmetic cannot diverge.
+/// `k <= 8` means a value spans at most two words; callers guarantee the
+/// stream covers `bitpos + k` bits (see [`PackedTensor::validate`]).
+#[inline(always)]
+pub fn bit_window(packed: &[u32], bitpos: usize, k: usize, mask: u32) -> u32 {
+    let word = bitpos / 32;
+    let off = bitpos % 32;
+    let mut v = packed[word] >> off;
+    if off + k > 32 {
+        v |= packed[word + 1] << (32 - off);
+    }
+    v & mask
 }
 
 /// Pack 4-bit indices two-per-byte along rows of a `(K, N)` index matrix:
@@ -231,16 +243,10 @@ impl PackedTensor {
             let amax = self.absmax[b];
             let mean = self.means.as_ref().map_or(0.0, |m| m[b]);
             for o in out[lo..hi].iter_mut() {
-                let word = bitpos / 32;
-                let off = bitpos % 32;
-                let mut v = self.packed[word] >> off;
-                if off + k > 32 {
-                    v |= self.packed[word + 1] << (32 - off);
-                }
                 // Codebooks may hold fewer than 2^k values (int codebooks
                 // drop one), so a corrupt bitstream can encode an index
                 // past the table: reject it, don't index past the slice.
-                let idx = (v & mask) as usize;
+                let idx = bit_window(&self.packed, bitpos, k, mask) as usize;
                 let Some(&val) = values.get(idx) else {
                     bail!("bitstream index {idx} out of range for {}-entry codebook", values.len());
                 };
@@ -288,6 +294,17 @@ mod tests {
     fn pack_rejects_overwide_values() {
         assert!(pack_bits(&[8], 3).is_err());
         assert!(pack_bits(&[7], 3).is_ok());
+    }
+
+    #[test]
+    fn bit_window_crosses_word_boundaries() {
+        // k=3 doesn't divide 32, so every ~10th element straddles a word
+        // boundary (element 10 spans bits 30..33); all must read back.
+        let idx: Vec<u8> = (0..40).map(|i| (i % 8) as u8).collect();
+        let packed = pack_bits(&idx, 3).unwrap();
+        for (i, &v) in idx.iter().enumerate() {
+            assert_eq!(bit_window(&packed, i * 3, 3, 0b111), v as u32, "elem {i}");
+        }
     }
 
     #[test]

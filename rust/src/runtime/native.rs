@@ -22,6 +22,15 @@
 //! XLA executables is to float tolerance (operation order differs inside
 //! XLA's fusions); agreement between the scalar and SIMD fused paths is
 //! exact (see `quant::fused`).
+//!
+//! Projection matmuls run **column-parallel** across the scoped worker
+//! pool ([`crate::quant::fused::fused_matmul_parallel`]): the worker count
+//! is latched from `KBITSCALE_THREADS` at build time
+//! ([`crate::util::pool::scoring_threads`]), and because each output
+//! column is owned by exactly one thread with an unchanged accumulation
+//! order, scores are bit-identical at every thread count — the
+//! `set_threads` override exists so tests and benches can pin 1/2/4-way
+//! runs against each other.
 
 use std::sync::Arc;
 
@@ -31,6 +40,7 @@ use super::plan::PlanLayout;
 use crate::models::manifest::TierManifest;
 use crate::quant::fused;
 use crate::quant::PackedParam;
+use crate::util::pool;
 
 /// One plan parameter in native residency: packed k-bit indices for
 /// quantized tensors, dense f32 for everything else. Entries are given in
@@ -76,6 +86,8 @@ pub struct NativeModel {
     layers: Vec<Layer>,
     lnf_s: Vec<f32>,
     lnf_b: Vec<f32>,
+    /// Column-parallel matmul worker count (see module docs).
+    threads: usize,
 }
 
 /// Internal: a plan parameter promoted to shareable storage.
@@ -142,7 +154,21 @@ impl NativeModel {
             layers,
             lnf_s: whole_dense(layout, &entries, "lnf_s", d)?,
             lnf_b: whole_dense(layout, &entries, "lnf_b", d)?,
+            threads: pool::scoring_threads(),
         })
+    }
+
+    /// Worker threads the projection matmuls fan columns across.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Override the scoring thread count. Serving builds latch
+    /// [`pool::scoring_threads`] (`KBITSCALE_THREADS`); this setter lets
+    /// tests and benches pin explicit 1/2/4-way runs — which are
+    /// bit-identical by construction.
+    pub fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
     }
 
     /// Score padded `(tokens, mask)` rows: per-row `(nll_sum, top1_hits)`,
@@ -184,12 +210,12 @@ impl NativeModel {
         let mut proj = vec![0.0f32; rows_bs * d];
         let mut ff = vec![0.0f32; rows_bs * f];
         let mut att_row = vec![0.0f32; s];
-        let mut wrow = Vec::new();
+        let mut panel = Vec::new();
         for layer in &self.layers {
             // Attention sub-block (pre-LN).
             layernorm(&x, &layer.ln1_s, &layer.ln1_b, &mut y, d);
             qkv_out.iter_mut().for_each(|v| *v = 0.0);
-            apply_mat(&layer.qkv, &y, &mut qkv_out, rows_bs, d, 3 * d, &mut wrow)?;
+            apply_mat(&layer.qkv, &y, &mut qkv_out, rows_bs, d, 3 * d, self.threads, &mut panel)?;
             att_out.iter_mut().for_each(|v| *v = 0.0);
             let scale = 1.0 / (hd as f32).sqrt();
             for bi in 0..b {
@@ -224,19 +250,19 @@ impl NativeModel {
                 }
             }
             proj.iter_mut().for_each(|v| *v = 0.0);
-            apply_mat(&layer.wo, &att_out, &mut proj, rows_bs, d, d, &mut wrow)?;
+            apply_mat(&layer.wo, &att_out, &mut proj, rows_bs, d, d, self.threads, &mut panel)?;
             for (xv, pv) in x.iter_mut().zip(&proj) {
                 *xv += pv;
             }
             // MLP sub-block.
             layernorm(&x, &layer.ln2_s, &layer.ln2_b, &mut y, d);
             ff.iter_mut().for_each(|v| *v = 0.0);
-            apply_mat(&layer.fc1, &y, &mut ff, rows_bs, d, f, &mut wrow)?;
+            apply_mat(&layer.fc1, &y, &mut ff, rows_bs, d, f, self.threads, &mut panel)?;
             for v in ff.iter_mut() {
                 *v = gelu_tanh(*v);
             }
             proj.iter_mut().for_each(|v| *v = 0.0);
-            apply_mat(&layer.fc2, &ff, &mut proj, rows_bs, f, d, &mut wrow)?;
+            apply_mat(&layer.fc2, &ff, &mut proj, rows_bs, f, d, self.threads, &mut panel)?;
             for (xv, pv) in x.iter_mut().zip(&proj) {
                 *xv += pv;
             }
@@ -289,7 +315,10 @@ impl NativeModel {
 }
 
 /// Run one matmul (`out[m,n] += x[m,k] @ W[k,n]`) through the weight's
-/// residency form: dense f32 GEMM or the fused packed kernel.
+/// residency form: dense f32 GEMM or the fused packed kernel, fanning
+/// output columns across `threads` workers (`<= 1` stays on the calling
+/// thread with the caller's `panel` scratch).
+#[allow(clippy::too_many_arguments)]
 fn apply_mat(
     mat: &Mat,
     x: &[f32],
@@ -297,14 +326,17 @@ fn apply_mat(
     m: usize,
     kd: usize,
     n: usize,
-    wrow: &mut Vec<f32>,
+    threads: usize,
+    panel: &mut Vec<f32>,
 ) -> Result<()> {
     match mat {
         Mat::Dense(v, off) => {
-            fused::matmul_f32(x, &v[*off..*off + kd * n], out, m, kd, n);
+            fused::matmul_f32_parallel(x, &v[*off..*off + kd * n], out, m, kd, n, threads);
             Ok(())
         }
-        Mat::Packed(p, si) => fused::fused_matmul(x, &p.slices[*si], out, m, kd, n, wrow),
+        Mat::Packed(p, si) => {
+            fused::fused_matmul_parallel(x, &p.slices[*si], out, m, kd, n, threads, panel)
+        }
     }
 }
 
@@ -609,6 +641,25 @@ mod tests {
         assert_eq!(a, b);
         assert!(a.iter().all(|(nll, _)| nll.is_finite() && *nll >= 0.0), "{a:?}");
         assert!(a.iter().map(|(nll, _)| nll).sum::<f64>() > 0.0, "nothing scored: {a:?}");
+    }
+
+    #[test]
+    fn thread_counts_score_bit_identically() {
+        // Column-parallel scoring is a pure partitioning of the output
+        // space: 1-, 2-, and 4-thread runs must agree to the bit.
+        let tier = tiny_tier(vec![]);
+        let layout = PlanLayout::monolithic(&tier);
+        let ckpt = checkpoint(23, &tier);
+        let spec = QuantSpec::new(DataType::Fp, 4, Some(16));
+        let mut m = build_native(&tier, &layout, &ckpt, &spec, true);
+        let rows = score_input(29, 6);
+        m.set_threads(1);
+        assert_eq!(m.threads(), 1);
+        let base = m.score_rows(&rows).unwrap();
+        for t in [2usize, 4] {
+            m.set_threads(t);
+            assert_eq!(m.score_rows(&rows).unwrap(), base, "{t} threads diverged");
+        }
     }
 
     #[test]

@@ -120,6 +120,21 @@
 //! packed-byte governance (transient, dropped per cell); on a budgeted
 //! server the builds therefore default to serial (`"threads"` overrides).
 //!
+//! # Scoring parallelism (fused variants)
+//!
+//! `"fused":true` variants run their projection matmuls column-parallel
+//! across a scoped worker pool: output columns split into one contiguous
+//! span per worker, every column is written by exactly one thread, and
+//! the per-element accumulation order is unchanged — so scores are
+//! **bit-identical at every thread count**, and one `{"op":"score"}`
+//! against a large fused variant saturates the box. The worker count is
+//! latched once per process from the `KBITSCALE_THREADS` environment
+//! variable (`>= 1`; unset or invalid falls back to one worker per
+//! available core, capped at 16), alongside the existing
+//! `KBITSCALE_FORCE_SCALAR` SIMD escape hatch — set either before the
+//! first fused load. CI runs the full test suite with SIMD force-disabled
+//! at both 1 and 4 scoring threads.
+//!
 //! # Streaming
 //!
 //! A `"stream":true` score request answers with **multiple lines**: one

@@ -52,6 +52,7 @@ use crate::runtime::native::{NativeModel, NativeParam};
 use crate::runtime::{lit_f32_slice, ParamLiterals, Runtime};
 use crate::tensor::Tensor;
 use crate::tune::policy::{PolicyEntry, TunedPolicy};
+use crate::util::pool;
 
 /// Produces the checkpoint parameters for `(family, tier)` on demand.
 pub type ParamLoader<'a> =
@@ -144,14 +145,18 @@ impl<'rt> ModelHandle<'rt> {
 
     /// Quantize `params` and build the resident state for one plan shape.
     ///
-    /// Every plan parameter (a tier tensor, or a pipeline stage's layer
-    /// slice of one) streams through **one reusable scratch buffer**,
-    /// pre-sized to the largest quantized plan param: slice → quantize
-    /// under its stage's spec → pack → `dequantize_into(scratch)` →
-    /// parameter literal. Neither the unpacked index vector nor a
-    /// dequantized f32 `Tensor` survives construction — the packed form is
-    /// the only host-side weight residency. Per-layer slice quantization
-    /// makes a sharded variant's dequantized weights bit-identical to the
+    /// Quantize+pack — the expensive step — fans out across pool workers,
+    /// one task per plan parameter (a tier tensor, or a pipeline stage's
+    /// layer slice of one); every task owns its output and no buffer is
+    /// shared, so concurrent loads of different variants (and the
+    /// column-parallel fused scoring pool) never contend on a load-time
+    /// allocation. The dequantize→literal walk stays serial on **per-load
+    /// scratch**: one buffer owned by this call, pre-sized to the largest
+    /// quantized plan param, so only a single dequantized copy exists at a
+    /// time. Neither the unpacked index vector nor a dequantized f32
+    /// `Tensor` survives construction — the packed form is the only
+    /// host-side weight residency. Per-layer slice quantization makes a
+    /// sharded variant's dequantized weights bit-identical to the
     /// monolithic build under the same spec.
     ///
     /// Fused variants (`plan_req.fused`) skip the dequantize step
@@ -212,20 +217,11 @@ impl<'rt> ModelHandle<'rt> {
         let mut packed = Vec::new();
         let mut native_params: Vec<NativeParam> = Vec::new();
         let mut bytes_per_stage = vec![0usize; layout.n_stages()];
-        // One dequant scratch for every parameter, pre-sized to the
-        // largest quantized plan param so successive loads never
-        // reallocate (each param borrows a prefix of it).
-        let max_quant_numel = layout
-            .params
-            .iter()
-            .filter(|pp| {
-                tier.quantized_params.iter().any(|q| q == &pp.source)
-                    && stage_specs.get(pp.stage).is_some_and(|s| !s.is_baseline())
-            })
-            .map(|pp| pp.numel())
-            .max()
-            .unwrap_or(0);
-        let mut scratch = vec![0.0f32; if plan_req.fused { 0 } else { max_quant_numel }];
+        // Resolve every plan param up front (cheap and serial): source
+        // slice, stage spec, and whether it quantizes under that spec —
+        // so the fan-out below borrows plain `Send` slices.
+        let mut resolved: Vec<(&crate::runtime::plan::PlanParam, &[f32], &QuantSpec, bool)> =
+            Vec::with_capacity(layout.params.len());
         for pp in &layout.params {
             let (_, t) = params
                 .iter()
@@ -235,9 +231,38 @@ impl<'rt> ModelHandle<'rt> {
             let sspec = stage_specs
                 .get(pp.stage)
                 .with_context(|| format!("param {:?} names stage {} of {}", pp.source, pp.stage, stage_specs.len()))?;
-            let is_quantized = tier.quantized_params.iter().any(|q| q == &pp.source);
-            if is_quantized && !sspec.is_baseline() {
-                let pk = Arc::new(PackedParam::quantize_slice(&pp.shape, data, sspec)?);
+            let quantizes =
+                tier.quantized_params.iter().any(|q| q == &pp.source) && !sspec.is_baseline();
+            resolved.push((pp, data, sspec, quantizes));
+        }
+        // Quantize + pack — the expensive step — in parallel across pool
+        // workers, one task per quantized param. Each task owns its
+        // output; nothing is shared across tasks or across loads.
+        let packed_parts = pool::parallel_map(
+            resolved.len(),
+            pool::default_threads(),
+            |i| -> Result<Option<Arc<PackedParam>>> {
+                let Some(&(pp, data, sspec, quantizes)) = resolved.get(i) else {
+                    return Ok(None);
+                };
+                if !quantizes {
+                    return Ok(None);
+                }
+                Ok(Some(Arc::new(PackedParam::quantize_slice(&pp.shape, data, sspec)?)))
+            },
+        );
+        // Dequant scratch is per load (owned by this call, never shared
+        // across loads or threads), pre-sized to the largest quantized
+        // plan param so the serial literal walk below never reallocates.
+        let max_quant_numel = resolved
+            .iter()
+            .filter(|(_, _, _, q)| *q)
+            .map(|(pp, ..)| pp.numel())
+            .max()
+            .unwrap_or(0);
+        let mut scratch = vec![0.0f32; if plan_req.fused { 0 } else { max_quant_numel }];
+        for (&(pp, data, _, _), part) in resolved.iter().zip(packed_parts) {
+            if let Some(pk) = part? {
                 if plan_req.fused {
                     // Fused variants keep only the packed form: the native
                     // backend decodes it inside the matmul inner loop.

@@ -7,7 +7,7 @@
 //! seconds), so a single contended queue is nowhere near the bottleneck.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Condvar, Mutex, OnceLock};
 
 /// Run `f(i)` for every `i in 0..n` across up to `threads` workers and
 /// collect results in index order. Panics in tasks propagate.
@@ -16,22 +16,40 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
+    parallel_map_init(n, threads, || (), |_, i| f(i))
+}
+
+/// [`parallel_map`] with per-worker scratch state: each worker calls
+/// `init()` exactly once when it starts and threads the value through every
+/// task it claims — the column-parallel fused matmul uses this for its
+/// decode panel so workers never share (or reallocate per task) a scratch
+/// buffer. Results are collected in index order; panics in tasks propagate.
+pub fn parallel_map_init<T, S, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<T>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> T + Sync,
+{
     let threads = threads.max(1).min(n.max(1));
     if threads <= 1 || n <= 1 {
-        return (0..n).map(f).collect();
+        let mut state = init();
+        return (0..n).map(|i| f(&mut state, i)).collect();
     }
     let next = AtomicUsize::new(0);
     let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
     let slots: Vec<Mutex<&mut Option<T>>> = out.iter_mut().map(Mutex::new).collect();
     std::thread::scope(|s| {
         for _ in 0..threads {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
+            s.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(&mut state, i);
+                    **slots[i].lock().unwrap() = Some(r);
                 }
-                let r = f(i);
-                **slots[i].lock().unwrap() = Some(r);
             });
         }
     });
@@ -43,6 +61,21 @@ where
 /// backend (itself multithreaded) from oversubscription.
 pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).clamp(1, 16)
+}
+
+/// Worker count for column-parallel fused scoring: the `KBITSCALE_THREADS`
+/// environment override when it parses to `>= 1` (clamped to 64), else
+/// [`default_threads`]. Latched once per process — like
+/// `KBITSCALE_FORCE_SCALAR`, set it before the first fused model is built.
+pub fn scoring_threads() -> usize {
+    static ACTIVE: OnceLock<usize> = OnceLock::new();
+    *ACTIVE.get_or_init(|| {
+        let env = std::env::var("KBITSCALE_THREADS").ok();
+        match env.and_then(|v| v.trim().parse::<usize>().ok()) {
+            Some(t) if t >= 1 => t.min(64),
+            _ => default_threads(),
+        }
+    })
 }
 
 /// A bounded MPMC channel used by the coordinator for work distribution
@@ -209,6 +242,49 @@ mod tests {
     fn parallel_map_handles_empty_and_single() {
         assert_eq!(parallel_map(0, 4, |i| i), Vec::<usize>::new());
         assert_eq!(parallel_map(1, 4, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn parallel_map_init_runs_init_once_per_worker() {
+        let inits = AtomicU64::new(0);
+        let got = parallel_map_init(
+            64,
+            4,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                Vec::<usize>::new()
+            },
+            |scratch, i| {
+                scratch.push(i); // per-worker state survives across tasks
+                (i, scratch.len())
+            },
+        );
+        // One init per spawned worker, never one per task.
+        let n_inits = inits.load(Ordering::Relaxed);
+        assert!(n_inits <= 4, "{n_inits} inits for 4 workers");
+        assert!(n_inits >= 1);
+        // Every task ran, in index order, and scratch lengths show reuse:
+        // the per-worker task counts sum to the task total.
+        let ids: Vec<usize> = got.iter().map(|&(i, _)| i).collect();
+        assert_eq!(ids, (0..64).collect::<Vec<_>>());
+        let max_len = got.iter().map(|&(_, l)| l).max().unwrap_or(0);
+        assert!(max_len * n_inits as usize >= 64, "scratch not reused across tasks");
+    }
+
+    #[test]
+    fn parallel_map_init_serial_path_shares_one_state() {
+        let got = parallel_map_init(5, 1, || 0usize, |acc, i| {
+            *acc += i;
+            *acc
+        });
+        assert_eq!(got, vec![0, 1, 3, 6, 10]);
+    }
+
+    #[test]
+    fn scoring_threads_is_latched_and_positive() {
+        let a = scoring_threads();
+        assert!(a >= 1);
+        assert_eq!(a, scoring_threads(), "latched value must be stable");
     }
 
     #[test]

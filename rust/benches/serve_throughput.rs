@@ -22,6 +22,10 @@
 //!   untiled fused matmul, and a 1/2/4-thread column-parallel sweep on a
 //!   standalone fp4 b64 tensor, so kernel regressions show up even when
 //!   protocol overhead hides them in the end-to-end rows.
+//! * **entropy-coded residency** — the same-geometry fp4 tensor behind
+//!   per-segment Huffman coding (`#ec`): full decode throughput vs the
+//!   packed decoder, measured coded bits/index vs the nominal k, and the
+//!   resident-byte saving the coded form buys.
 //! * **streamed vs buffered** — one 48-row request with `stream:true` vs
 //!   buffered; streaming should put the first partial scores on the wire
 //!   well before the buffered response completes.
@@ -305,6 +309,62 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
+    // --- entropy-coded residency: decode throughput + footprint ---------
+    // The same-geometry fp4 b64 tensor re-encoded with per-segment
+    // canonical Huffman coding (`#ec` residency): full-tensor decode
+    // throughput vs the packed decoder, plus the measured coded footprint
+    // — the below-the-floor bits/index the `#ec` Pareto points report.
+    println!();
+    {
+        use kbitscale::quant::entropy::EncodedTensor;
+        use kbitscale::quant::packing::PackedTensor;
+        use kbitscale::util::progress::bench_best;
+        use kbitscale::util::rng::Rng;
+
+        let (kd, nn) = (768usize, 768usize);
+        let mut rng = Rng::new(7);
+        let mut w = vec![0.0f32; kd * nn];
+        rng.fill_normal(&mut w, 0.05);
+        let p = PackedTensor::quantize(&w, &QuantSpec::new(DataType::Fp, 4, Some(64)))?;
+        let e = EncodedTensor::encode(&p)?;
+        let mut decoded = vec![0.0f32; e.n];
+        let t_packed = bench_best(1, 7, || {
+            p.dequantize_into(&mut decoded).unwrap();
+            std::hint::black_box(&decoded);
+        });
+        let t_coded = bench_best(1, 7, || {
+            e.dequantize_into(&mut decoded).unwrap();
+            std::hint::black_box(&decoded);
+        });
+        let coded_bpi = e.payload_bits() as f64 / e.n as f64;
+        println!(
+            "entropy decode ({} elems): packed {:.3} ms ({:.2} GB/s) | coded {:.3} ms \
+             ({:.2} GB/s) | {coded_bpi:.3} coded bits/index vs {} nominal | \
+             resident {} B vs {} B packed",
+            e.n,
+            t_packed * 1e3,
+            (e.n * 4) as f64 / t_packed / 1e9,
+            t_coded * 1e3,
+            (e.n * 4) as f64 / t_coded / 1e9,
+            e.bits,
+            e.resident_bytes(),
+            p.resident_bytes(),
+        );
+        snap.insert(
+            "entropy".to_string(),
+            Json::obj(vec![
+                ("elements", Json::Num(e.n as f64)),
+                ("packed_decode_ms", Json::Num(t_packed * 1e3)),
+                ("coded_decode_ms", Json::Num(t_coded * 1e3)),
+                ("coded_gbps_f32_out", Json::Num((e.n * 4) as f64 / t_coded / 1e9)),
+                ("coded_bits_per_index", Json::Num(coded_bpi)),
+                ("nominal_bits_per_index", Json::Num(e.bits as f64)),
+                ("coded_resident_bytes", Json::Num(e.resident_bytes() as f64)),
+                ("packed_resident_bytes", Json::Num(p.resident_bytes() as f64)),
+            ]),
+        );
+    }
+
     // --- streamed vs buffered multi-row responses -----------------------
     println!();
     let (buf_first, buf_total, _) = stream_trial(&registry, 48, false, false)?;
@@ -377,6 +437,7 @@ fn main() -> anyhow::Result<()> {
             dtypes: vec![DataType::Fp],
             blocks: vec![Some(64)],
             stage_mixes: false,
+            entropy: false,
             suite: EvalSuite::Ppl,
             eval: EvalConfig { ppl_sequences: 4, zs_examples: 4 },
             threads: 2,

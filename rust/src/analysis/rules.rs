@@ -300,13 +300,18 @@ fn back_over_groups(toks: &[Tok], mut j: usize) -> Option<usize> {
 // ----------------------------------------------------------------- rules
 
 /// Rule 1 — panic paths: in network-facing modules (`server/`, `fleet/`)
-/// no `.unwrap()` / `.expect()`, no aborting macros, no unchecked slice
+/// and the untrusted-bitstream decoder (`quant/entropy.rs`, which parses
+/// Huffman tables and coded streams that arrive wire-adjacent) no
+/// `.unwrap()` / `.expect()`, no aborting macros, no unchecked slice
 /// indexing. Exemption: `.lock().unwrap()` / `.wait(..).unwrap()` — the
 /// crate-wide convention for propagating mutex poisoning (a poisoned lock
 /// means another thread already panicked; unwrapping re-raises instead of
 /// serving with torn state).
 fn rule_panic(relpath: &str, toks: &[Tok], ranges: &[(usize, usize)], findings: &mut Vec<Finding>) {
-    if !(relpath.starts_with("server/") || relpath.starts_with("fleet/")) {
+    if !(relpath.starts_with("server/")
+        || relpath.starts_with("fleet/")
+        || relpath == "quant/entropy.rs")
+    {
         return;
     }
     let n = toks.len();
@@ -752,6 +757,21 @@ mod tests {
             lint("server/x.rs", poisoning).iter().all(|f| f.rule != RULE_PANIC),
             "lock().unwrap() is the poisoning-propagation convention"
         );
+    }
+
+    #[test]
+    fn entropy_decoder_is_held_to_the_network_path_rule() {
+        // quant/entropy.rs parses untrusted Huffman tables and coded
+        // bitstreams, so it is gated like server//fleet/ — unlike the
+        // rest of quant/, which only sees data this process produced.
+        let index = "fn f(v: &[u32], i: usize) -> u32 { v[i] }";
+        assert!(
+            lint("quant/entropy.rs", index).iter().any(|f| f.rule == RULE_PANIC),
+            "unchecked indexing in the entropy decoder must be flagged"
+        );
+        assert!(lint("quant/packing.rs", index).is_empty(), "the gate names one quant file");
+        let unwrap = "fn f(v: Vec<u32>) { v.first().unwrap(); }";
+        assert!(lint("quant/entropy.rs", unwrap).iter().any(|f| f.rule == RULE_PANIC));
     }
 
     #[test]

@@ -319,6 +319,7 @@ fn cmd_tune(raw: &[String]) -> Result<()> {
             .opt("dtypes", Some("fp,int"), "candidate data types (csv of int|fp|quantile|dynexp)")
             .opt("blocks", Some("64"), "candidate block sizes (csv; 0 = tensor-wise)")
             .flag("no-stage-mixes", "skip per-stage mixed-precision candidates")
+            .flag("entropy", "also tune entropy-coded twins of every quantized candidate (#ec)")
             .flag("zero-shot", "tune on mean zero-shot accuracy (default: CE loss)")
             .opt("ppl-seqs", Some("16"), "calibration perplexity sequences per cell")
             .opt("zs-examples", Some("16"), "calibration examples per zero-shot task")
@@ -344,6 +345,7 @@ fn cmd_tune(raw: &[String]) -> Result<()> {
             .map(|b| if b == 0 { None } else { Some(b) })
             .collect(),
         stage_mixes: !args.flag("no-stage-mixes"),
+        entropy: args.flag("entropy"),
         suite: if args.flag("zero-shot") { EvalSuite::PplZeroShot } else { EvalSuite::Ppl },
         eval: crate::eval::EvalConfig {
             ppl_sequences: args.usize("ppl-seqs")?.max(1),
@@ -467,6 +469,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
             .flag("pipeline", "serve the default model pipeline-sharded (per-stage executables)")
             .opt("stage-bits", None, "per-stage bit widths for --pipeline, csv (16 = unquantized stage)")
             .flag("fused", "score the default model through the fused dequant-matmul backend")
+            .flag("entropy", "hold the default model entropy-coded (Huffman over the k-bit indices; lossless)")
             .opt("preload", None, "extra variants, csv of family:tier[:bits[:dtype[:block]]]")
             .opt("workers", Some("0"), "connection worker threads (0 = auto)")
             .opt("flush-ms", Some("2"), "micro-batch flush window in milliseconds")
@@ -544,6 +547,7 @@ fn cmd_serve(raw: &[String]) -> Result<()> {
         pipeline: args.flag("pipeline"),
         stage_bits,
         fused: args.flag("fused"),
+        entropy: args.flag("entropy"),
     };
     let default = registry.load_plan(family.name, args.get("tier")?, qspec, &plan)?;
     log::info!(

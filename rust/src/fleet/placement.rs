@@ -174,6 +174,7 @@ mod tests {
             dtype: DataType::Fp,
             block: Some(64),
             stage_bits,
+            entropy: false,
             metric,
             total_bits: bpp * 1e5,
             bits_per_param: bpp,

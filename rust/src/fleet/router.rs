@@ -747,6 +747,10 @@ impl<'f> FleetConn<'f> {
                 Some(v) => v.as_bool()?,
                 None => false,
             },
+            entropy: match req.opt("entropy") {
+                Some(v) => v.as_bool()?,
+                None => false,
+            },
         };
         if plan.stage_bits.is_some() && !plan.pipeline {
             bail!("stage_bits requires the pipeline plan");
@@ -759,8 +763,11 @@ impl<'f> FleetConn<'f> {
         // Footprint estimate for placement: the tuner's candidate
         // accounting, which prices staged mixed-precision loads per
         // stage — a [16,4] request must not be placed by its 4-bit base
-        // spec alone.
-        let cand = Candidate { spec, stage_bits: plan.stage_bits.clone() };
+        // spec alone. Entropy-coded loads are placed at the uncoded
+        // estimate (the coded size is only known after building, and a
+        // conservative over-estimate never overfills a worker).
+        let cand =
+            Candidate { spec, stage_bits: plan.stage_bits.clone(), entropy: plan.entropy };
         let est = (cand.total_bits(tier)? / 8.0).ceil() as usize;
         let snap = fleet.topology().snapshot();
         let target = placement::place_load(&snap, &key, est)?;
@@ -774,7 +781,7 @@ impl<'f> FleetConn<'f> {
     }
 
     fn op_load_auto(&mut self, req: &Json) -> Result<Json> {
-        for k in ["bits", "dtype", "block", "pipeline", "stage_bits", "fused"] {
+        for k in ["bits", "dtype", "block", "pipeline", "stage_bits", "fused", "entropy"] {
             if req.opt(k).is_some() {
                 bail!(r#""auto":true picks the config from the policy; drop {k:?}"#);
             }
@@ -1229,8 +1236,8 @@ pub(crate) fn split_model_key(manifest: &Manifest, model_key: &str) -> Result<(S
 }
 
 /// The parsed identity of a full registry key
-/// (`family_tier@dtype:bits:bBLOCK[#pipe[..]][#fused]`) — what failover
-/// needs to replay the exact variant on another worker.
+/// (`family_tier@dtype:bits:bBLOCK[#pipe[..]][#ec][#fused]`) — what
+/// failover needs to replay the exact variant on another worker.
 #[derive(Debug, PartialEq)]
 pub(crate) struct VariantKey {
     pub model_key: String,
@@ -1240,6 +1247,7 @@ pub(crate) struct VariantKey {
     pub block: usize,
     pub pipeline: bool,
     pub stage_bits: Option<Vec<usize>>,
+    pub entropy: bool,
     pub fused: bool,
 }
 
@@ -1247,9 +1255,15 @@ pub(crate) fn parse_variant_key(key: &str) -> Result<VariantKey> {
     let (model_key, rest) = key
         .split_once('@')
         .ok_or_else(|| anyhow!("not a full registry key: {key:?}"))?;
-    // The `#fused` marker is always the last suffix component
-    // (`PlanRequest::suffix` appends it after the pipe part).
+    // Suffix components come in `PlanRequest::suffix` order — pipe, then
+    // `#ec`, then `#fused` last — so strip from the right. A
+    // non-canonical spelling (`#fused#ec`) falls through to the plan
+    // parser below and is rejected.
     let (rest, fused) = match rest.strip_suffix("#fused") {
+        Some(r) => (r, true),
+        None => (rest, false),
+    };
+    let (rest, entropy) = match rest.strip_suffix("#ec") {
         Some(r) => (r, true),
         None => (rest, false),
     };
@@ -1300,6 +1314,7 @@ pub(crate) fn parse_variant_key(key: &str) -> Result<VariantKey> {
         block,
         pipeline,
         stage_bits,
+        entropy,
         fused,
     })
 }
@@ -1325,6 +1340,9 @@ pub(crate) fn load_request_for_key(manifest: &Manifest, key: &str) -> Result<Jso
             "stage_bits",
             Json::Arr(bits.iter().map(|&b| Json::num(b as f64)).collect()),
         ));
+    }
+    if v.entropy {
+        pairs.push(("entropy", Json::Bool(true)));
     }
     if v.fused {
         pairs.push(("fused", Json::Bool(true)));
@@ -1493,6 +1511,20 @@ mod tests {
         let v = parse_variant_key("gpt2like_t0@fp:4:b64#pipe[16,4]#fused").unwrap();
         assert!(v.fused && v.pipeline);
         assert_eq!(v.stage_bits, Some(vec![16, 4]));
+        assert!(!v.entropy);
+
+        let v = parse_variant_key("gpt2like_t0@fp:4:b64#ec").unwrap();
+        assert!(v.entropy && !v.fused && !v.pipeline);
+
+        let v = parse_variant_key("gpt2like_t0@fp:4:b64#ec#fused").unwrap();
+        assert!(v.entropy && v.fused && !v.pipeline);
+
+        let v = parse_variant_key("gpt2like_t0@fp:4:b64#pipe[16,4]#ec#fused").unwrap();
+        assert!(v.entropy && v.fused && v.pipeline);
+        assert_eq!(v.stage_bits, Some(vec![16, 4]));
+
+        // Only the canonical suffix order (#pipe, #ec, #fused) replays.
+        assert!(parse_variant_key("m@fp:4:b64#fused#ec").is_err());
 
         assert!(parse_variant_key("gpt2like_t0").is_err(), "bare model key is not a variant");
         assert!(parse_variant_key("m@fp:4:b64:e3").is_err(), "exponent specs are not replayable");

@@ -22,7 +22,7 @@
 //! |---|---|
 //! | [`util`] | from-scratch substrates: JSON, RNG, thread pool (`parallel_map`/`parallel_map_init`, `KBITSCALE_THREADS` scoring pool) + bounded queue, CLI, property testing |
 //! | [`tensor`] | dense f32 tensors + binary serialization |
-//! | [`quant`] | codebooks, block-wise quantization, packed k-bit residency, centering, proxy quantization, fused dequantize-matmul kernel (`quant::fused`: AVX2 gather-based bitstream decode, cache-blocked tiling, column-parallel execution — all bit-identical to scalar dequantize→GEMM) |
+//! | [`quant`] | codebooks, block-wise quantization, packed k-bit residency, centering, proxy quantization, fused dequantize-matmul kernel (`quant::fused`: AVX2 gather-based bitstream decode, cache-blocked tiling, column-parallel execution — all bit-identical to scalar dequantize→GEMM), entropy-coded residency (`quant::entropy`: per-segment canonical Huffman over the packed indices, lossless, measured bits below the fixed-k floor) |
 //! | [`gptq`] | one-shot GPTQ (Hessian/Cholesky sequential rounding) |
 //! | [`data`] | synthetic Zipf–Markov corpus + four zero-shot task generators |
 //! | [`models`] | model zoo: families, tiers, init (incl. outlier injection), checkpoints |
@@ -30,10 +30,10 @@
 //! | [`train`] | training driver over the AOT train-step executable |
 //! | [`eval`] | perplexity + zero-shot evaluation harness, scored through execution plans |
 //! | [`coordinator`] | sweep grid, scheduler, worker pool, results store |
-//! | [`server`] | LRU/TTL-governed packed-model registry (monolithic, pipeline-sharded, and fused-native variants, per-stage mixed precision) + sharded score cache + concurrent micro-batched JSON-lines serving with chunked streaming responses, negotiated binary score frames (`server::frames`), and tuned-policy auto-loading |
+//! | [`server`] | LRU/TTL-governed packed-model registry (monolithic, pipeline-sharded, fused-native, and entropy-coded `#ec` variants, per-stage mixed precision) + sharded score cache + concurrent micro-batched JSON-lines serving with chunked streaming responses, negotiated binary score frames (`server::frames`), and tuned-policy auto-loading |
 //! | [`fleet`] | multi-node serving tier: worker roster with health/residency probes, policy-aware placement, and a line-protocol router with scatter/gather scoring, streamed chunk reassembly (JSON lines or pass-through binary frames), and retry-on-next-worker failover |
 //! | [`scaling`] | scaling curves, Pareto frontiers, bit-level optimality, correlations |
-//! | [`tune`] | precision autotuner: candidate search over bits × block × dtype × per-stage widths, calibration eval, Pareto-frontier `TunedPolicy` artifacts |
+//! | [`tune`] | precision autotuner: candidate search over bits × block × dtype × per-stage widths (plus entropy-coded `#ec` twins scored at their measured bits), calibration eval, Pareto-frontier `TunedPolicy` artifacts |
 //! | [`report`] | ASCII figures and CSV emission for every paper table/figure |
 //! | [`bench_support`] | shared harness for the `benches/` reproduction binaries |
 //! | [`analysis`] | in-tree static analysis (`kbitscale lint`): panic-path, unsafe-discipline, lock-order, and protocol-doc rules over a hand-rolled lexer |
@@ -47,10 +47,12 @@
 //! `kbitscale lint` ([`analysis`]) runs blocking in CI and keeps four
 //! serving-surface invariants machine-checked:
 //!
-//! * **Panic paths.** Nothing in `server/` or `fleet/` may `.unwrap()`,
+//! * **Panic paths.** Nothing in `server/`, `fleet/`, or the
+//!   untrusted-bitstream decoder `quant/entropy.rs` may `.unwrap()`,
 //!   `.expect()`, call an aborting macro, or index a slice unchecked:
-//!   malformed network input must come back as a protocol error line
-//!   with the connection (and worker) surviving. The one exemption is
+//!   malformed network input (or a hostile Huffman table / coded stream)
+//!   must come back as a typed error with the connection (and worker)
+//!   surviving. The one exemption is
 //!   `.lock().unwrap()` / `.wait(..).unwrap()` — the crate-wide
 //!   convention for propagating mutex poisoning (a poisoned lock means
 //!   another thread already panicked; re-raising beats serving torn

@@ -30,6 +30,44 @@ pub fn bits_per_param(spec: &QuantSpec) -> f64 {
     bits
 }
 
+/// Bits per parameter a packed variant actually *stores*, as opposed to
+/// the paper-ideal [`bits_per_param`]: block constants are held as `f32`
+/// (32 bits each), not the 16-bit figure the paper accounts, so honest
+/// total-bits for an uncoded packed entry is `k + 32/B` (+ `32/B` when
+/// centered). Proxy and baseline specs have no packed form and keep the
+/// analytic accounting.
+pub fn stored_bits_per_param(spec: &QuantSpec) -> f64 {
+    if spec.is_baseline() || spec.proxy_outlier_pct.is_some() {
+        return bits_per_param(spec);
+    }
+    let mut bits = spec.bits as f64;
+    if let Some(b) = spec.block {
+        bits += 32.0 / b as f64; // absmax stored as f32
+        if spec.centering {
+            bits += 32.0 / b as f64; // per-block mean stored as f32
+        }
+    } else if spec.centering {
+        bits += 1e-6;
+    }
+    bits
+}
+
+/// Shannon lower bound, in bits, of an index stream with histogram `hist`
+/// (`hist[s]` = occurrences of symbol `s`): `Σ h · log2(n/h)`. This is the
+/// floor any entropy coder (`quant::entropy`) can approach but not beat;
+/// `{"op":"stats"}` reports it next to the coded and nominal bits so the
+/// gap to the bound is observable per variant.
+pub fn index_entropy_bits(hist: &[u64]) -> f64 {
+    let n: u64 = hist.iter().sum();
+    if n == 0 {
+        return 0.0;
+    }
+    hist.iter()
+        .filter(|&&h| h > 0)
+        .map(|&h| h as f64 * (n as f64 / h as f64).log2())
+        .sum()
+}
+
 /// Total model bits for a checkpoint: quantized tensors at
 /// `bits_per_param(spec)`, everything else at 16.
 pub fn total_model_bits(
@@ -89,6 +127,32 @@ mod tests {
             assert!(bits < prev);
             prev = bits;
         }
+    }
+
+    #[test]
+    fn stored_bits_charge_f32_side_channels() {
+        // Stored accounting doubles the paper's 16-bit block-constant
+        // figure: fp4/b64 stores 4 + 32/64 = 4.5 bits/param.
+        let s = QuantSpec::new(DataType::Fp, 4, Some(64));
+        assert!((stored_bits_per_param(&s) - 4.5).abs() < 1e-12);
+        let c = s.clone().with_centering();
+        assert!((stored_bits_per_param(&c) - 5.0).abs() < 1e-12);
+        // Baseline/proxy fall back to the analytic figure.
+        assert_eq!(stored_bits_per_param(&QuantSpec::baseline16()), 16.0);
+        let p = QuantSpec::new(DataType::Fp, 4, None).with_proxy(0.02);
+        assert_eq!(stored_bits_per_param(&p), bits_per_param(&p));
+    }
+
+    #[test]
+    fn index_entropy_matches_closed_forms() {
+        // Uniform over 16 symbols: exactly 4 bits/symbol.
+        let hist = vec![8u64; 16];
+        assert!((index_entropy_bits(&hist) - 4.0 * 128.0).abs() < 1e-9);
+        // Single symbol: zero bits (and the empty stream is zero, not NaN).
+        assert_eq!(index_entropy_bits(&[42, 0, 0, 0]), 0.0);
+        assert_eq!(index_entropy_bits(&[]), 0.0);
+        // Fair coin: 1 bit/symbol.
+        assert!((index_entropy_bits(&[5, 5]) - 10.0).abs() < 1e-9);
     }
 
     #[test]

@@ -603,8 +603,10 @@ fn fused_matmul_cols(
 }
 
 /// `out[c] += a * w[c]` — the one inner loop every matmul here reduces to.
+/// `pub(crate)` so the entropy-coded fused path (`quant::entropy`) shares
+/// the exact same accumulation kernel and stays bit-identical.
 #[inline]
-fn axpy(backend: Backend, a: f32, w: &[f32], out: &mut [f32]) {
+pub(crate) fn axpy(backend: Backend, a: f32, w: &[f32], out: &mut [f32]) {
     debug_assert_eq!(w.len(), out.len());
     match backend {
         Backend::Scalar => axpy_scalar(a, w, out),

@@ -21,6 +21,7 @@ pub mod bitcost;
 pub mod blockwise;
 pub mod centering;
 pub mod codebook;
+pub mod entropy;
 pub mod fused;
 pub mod packing;
 pub mod proxy;
@@ -29,6 +30,7 @@ pub mod spec;
 pub use bitcost::bits_per_param;
 pub use blockwise::{dequantize, quantize, QuantizedTensor};
 pub use codebook::{Codebook, DataType};
+pub use entropy::{EncodedParam, EncodedTensor};
 pub use packing::PackedTensor;
 pub use spec::QuantSpec;
 
@@ -176,6 +178,12 @@ impl PackedParam {
     /// Host-resident bytes: packed indices + per-block constants.
     pub fn resident_bytes(&self) -> usize {
         self.slices.iter().map(|s| s.resident_bytes()).sum()
+    }
+
+    /// Measured stored bits across slices (exact `n*k` payload + 32-bit
+    /// f32 block constants) — see [`PackedTensor::measured_bits`].
+    pub fn measured_bits(&self) -> u64 {
+        self.slices.iter().map(|s| s.measured_bits()).sum()
     }
 }
 

@@ -270,6 +270,17 @@ impl PackedTensor {
             + self.absmax.len() * 4
             + self.means.as_ref().map_or(0, |m| m.len() * 4)
     }
+
+    /// Measured total bits this tensor stores: the exact `n * k` index
+    /// payload (no u32 word padding) plus 32 bits per stored f32 block
+    /// constant — the honest counterpart of the paper-ideal
+    /// [`super::bitcost::bits_per_param`] accounting, and the uncoded
+    /// baseline `quant::entropy` measures its coded streams against.
+    pub fn measured_bits(&self) -> u64 {
+        self.n as u64 * self.bits as u64
+            + 32 * (self.absmax.len() as u64
+                + self.means.as_ref().map_or(0, |m| m.len() as u64))
+    }
 }
 
 #[cfg(test)]

@@ -5,7 +5,10 @@
 //! `{"op":"load","fused":true}` alternative: a pure-Rust forward pass whose
 //! projection matmuls walk [`PackedParam`] residency directly through
 //! [`crate::quant::fused`] — packed weights never expand to full f32
-//! tensors, at load time or on the score path. Unquantized parameters
+//! tensors, at load time or on the score path. With `"entropy":true` the
+//! same matmuls stream-decode [`EncodedParam`] Huffman residency through
+//! [`crate::quant::entropy::fused_matmul_encoded`] instead, losslessly —
+//! scores stay bit-identical to the packed variant. Unquantized parameters
 //! (embeddings, LayerNorms, baseline stages of a mixed-precision plan)
 //! stay dense f32, exactly as the paper prescribes.
 //!
@@ -38,26 +41,30 @@ use anyhow::{anyhow, bail, ensure, Result};
 
 use super::plan::PlanLayout;
 use crate::models::manifest::TierManifest;
-use crate::quant::fused;
-use crate::quant::PackedParam;
+use crate::quant::{entropy, fused};
+use crate::quant::{EncodedParam, PackedParam};
 use crate::util::pool;
 
 /// One plan parameter in native residency: packed k-bit indices for
-/// quantized tensors, dense f32 for everything else. Entries are given in
-/// [`PlanLayout::params`] order.
+/// quantized tensors (or their entropy-coded twin under
+/// `{"op":"load","fused":true,"entropy":true}`), dense f32 for everything
+/// else. Entries are given in [`PlanLayout::params`] order.
 pub enum NativeParam {
     Dense(Vec<f32>),
     Packed(Arc<PackedParam>),
+    Encoded(Arc<EncodedParam>),
 }
 
 /// One layer's projection weight: a slice view into a shared dense buffer,
-/// or one leading-axis slice of a shared packed parameter.
+/// or one leading-axis slice of a shared packed/encoded parameter.
 #[derive(Clone)]
 enum Mat {
     /// (storage, element offset of this layer's `[k, n]` block).
     Dense(Arc<Vec<f32>>, usize),
     /// (packed parameter, leading-axis slice index).
     Packed(Arc<PackedParam>, usize),
+    /// (entropy-coded parameter, leading-axis slice index).
+    Encoded(Arc<EncodedParam>, usize),
 }
 
 /// Per-layer weights, reassembled from (possibly stage-sliced) plan params.
@@ -94,6 +101,7 @@ pub struct NativeModel {
 enum Entry {
     Dense(Arc<Vec<f32>>),
     Packed(Arc<PackedParam>),
+    Encoded(Arc<EncodedParam>),
 }
 
 impl NativeModel {
@@ -119,6 +127,7 @@ impl NativeModel {
             .map(|p| match p {
                 NativeParam::Dense(v) => Entry::Dense(Arc::new(v)),
                 NativeParam::Packed(a) => Entry::Packed(a),
+                NativeParam::Encoded(a) => Entry::Encoded(a),
             })
             .collect();
         let qkv = layer_mats(layout, &entries, "qkv", l, d * 3 * d)?;
@@ -317,7 +326,10 @@ impl NativeModel {
 /// Run one matmul (`out[m,n] += x[m,k] @ W[k,n]`) through the weight's
 /// residency form: dense f32 GEMM or the fused packed kernel, fanning
 /// output columns across `threads` workers (`<= 1` stays on the calling
-/// thread with the caller's `panel` scratch).
+/// thread with the caller's `panel` scratch). Entropy-coded weights
+/// stream-decode row-by-row on the calling thread — variable-length
+/// decode is inherently sequential, so `threads` is ignored there (scores
+/// stay bit-identical to the packed fused path either way).
 #[allow(clippy::too_many_arguments)]
 fn apply_mat(
     mat: &Mat,
@@ -336,6 +348,12 @@ fn apply_mat(
         }
         Mat::Packed(p, si) => {
             fused::fused_matmul_parallel(x, &p.slices[*si], out, m, kd, n, threads, panel)
+        }
+        Mat::Encoded(e, si) => {
+            if panel.len() < n {
+                panel.resize(n, 0.0);
+            }
+            entropy::fused_matmul_encoded(x, &e.slices[*si], out, m, kd, n, panel)
         }
     }
 }
@@ -378,7 +396,7 @@ fn whole_dense(
             continue;
         }
         let Entry::Dense(v) = e else {
-            bail!("param {source} is packed; expected dense residency");
+            bail!("param {source} is quantized; expected dense residency");
         };
         ensure!(v.len() == numel, "param {source}: {} elements, expected {numel}", v.len());
         return Ok(v.as_ref().clone());
@@ -424,6 +442,15 @@ fn layer_mats(
                     mats[li] = Some(Mat::Packed(p.clone(), li - lo));
                 }
             }
+            Entry::Encoded(ep) => {
+                ensure!(
+                    ep.slices.len() == hi - lo && ep.slices.iter().all(|sl| sl.n == per),
+                    "param {source}[{lo}..{hi}]: encoded slices do not match layer geometry"
+                );
+                for li in lo..hi {
+                    mats[li] = Some(Mat::Encoded(ep.clone(), li - lo));
+                }
+            }
         }
     }
     mats.into_iter()
@@ -449,7 +476,7 @@ fn layer_vecs(
         let (lo, hi) = pp.layers.unwrap_or((0, n_layer));
         ensure!(hi <= n_layer && lo < hi, "param {source}: bad layer range {lo}..{hi}");
         let Entry::Dense(v) = e else {
-            bail!("param {source} is packed; LayerNorm params stay dense");
+            bail!("param {source} is quantized; LayerNorm params stay dense");
         };
         ensure!(
             v.len() == (hi - lo) * d,
@@ -641,6 +668,43 @@ mod tests {
         assert_eq!(a, b);
         assert!(a.iter().all(|(nll, _)| nll.is_finite() && *nll >= 0.0), "{a:?}");
         assert!(a.iter().map(|(nll, _)| nll).sum::<f64>() > 0.0, "nothing scored: {a:?}");
+    }
+
+    #[test]
+    fn encoded_scores_bit_identical_to_packed() {
+        // Entropy-coded residency is lossless by construction: the
+        // streamed Huffman decode feeds the same axpy accumulation order
+        // as the packed fused path, so scores agree to the bit — and the
+        // thread setting is irrelevant to the (sequential) encoded path.
+        let tier = tiny_tier(vec![]);
+        let layout = PlanLayout::monolithic(&tier);
+        let ckpt = checkpoint(37, &tier);
+        let spec = QuantSpec::new(DataType::Fp, 4, Some(16));
+        let packed = build_native(&tier, &layout, &ckpt, &spec, true);
+        let params: Vec<NativeParam> = layout
+            .params
+            .iter()
+            .map(|pp| {
+                let (_, data) = ckpt.iter().find(|(n, _)| n == &pp.source).unwrap();
+                let per: usize = pp.shape.iter().skip(1).product::<usize>().max(1);
+                let slice = match pp.layers {
+                    Some((lo, hi)) => &data[lo * per..hi * per],
+                    None => &data[..],
+                };
+                if tier.quantized_params.iter().any(|q| q == &pp.source) {
+                    let pk = PackedParam::quantize_slice(&pp.shape, slice, &spec).unwrap();
+                    NativeParam::Encoded(crate::quant::entropy::encode_param(&pk).unwrap())
+                } else {
+                    NativeParam::Dense(slice.to_vec())
+                }
+            })
+            .collect();
+        let mut enc = NativeModel::build(&tier, &layout, params).unwrap();
+        let rows = score_input(41, 6);
+        let want = packed.score_rows(&rows).unwrap();
+        assert_eq!(enc.score_rows(&rows).unwrap(), want);
+        enc.set_threads(4);
+        assert_eq!(enc.score_rows(&rows).unwrap(), want, "threads must not affect decode");
     }
 
     #[test]

@@ -71,6 +71,16 @@
 //!                                       through quant::fused's dequant×
 //!                                       matmul (packed weights never
 //!                                       expand to full f32 tensors)
+//! → {"op":"load", ..., "entropy":true}  entropy-coded residency: packed
+//!                                       k-bit indices re-coded per block
+//!                                       with canonical Huffman tables
+//!                                       (quant::entropy) — lossless, so
+//!                                       scores are bit-identical to the
+//!                                       uncoded variant while resident
+//!                                       bytes drop below the fixed-k
+//!                                       floor; composes with "fused"
+//!                                       (stream-decoded matmuls) and
+//!                                       "pipeline"; key suffix "#ec"
 //! → {"op":"hello", "frames":"bin1"}     negotiate binary score frames for
 //!                                       this connection; replies
 //!                                       {"ok":true,"frames":"bin1"}. Any
@@ -82,7 +92,11 @@
 //! → {"op":"stats"}                      governance: per-variant resident
 //!                                       bytes (per plan stage) / hits /
 //!                                       idle / pinned, budget, evictions,
-//!                                       cache counters
+//!                                       cache counters; entropy-coded
+//!                                       variants also report coded vs
+//!                                       nominal payload bits and the
+//!                                       Shannon bound of their index
+//!                                       streams
 //! → {"op":"load", "auto":true}          policy-driven load: the active
 //!                                       tuned policy picks spec/stage_bits
 //!                                       under the byte-budget headroom
@@ -618,6 +632,8 @@ fn try_handle<'rt>(
                 ("resident_bytes", Json::num(h.resident_bytes() as f64)),
                 ("quantized_f32_bytes", Json::num(h.quantized_f32_bytes() as f64)),
                 ("total_bits", Json::num(h.ideal_total_bits())),
+                ("measured_total_bits", Json::num(h.measured_total_bits())),
+                ("entropy_coded", Json::Bool(h.entropy_coded())),
                 ("models", Json::num(registry.len() as f64)),
                 ("stages", Json::num(h.n_stages() as f64)),
                 ("batched", Json::Bool(batcher.is_some())),
@@ -668,6 +684,21 @@ fn try_handle<'rt>(
                         ("hits", Json::num(v.hits as f64)),
                         ("idle_ms", Json::num(v.idle.as_secs_f64() * 1e3)),
                         ("pinned", Json::Bool(v.pinned)),
+                        // Entropy-coded variants report how far the coder
+                        // compressed below the fixed-k floor — and how
+                        // close it got to the Shannon bound.
+                        (
+                            "entropy",
+                            match v.entropy {
+                                Some((coded, nominal, bound, total)) => Json::obj(vec![
+                                    ("coded_payload_bits", Json::num(coded as f64)),
+                                    ("nominal_payload_bits", Json::num(nominal as f64)),
+                                    ("entropy_bound_bits", Json::num(bound)),
+                                    ("measured_total_bits", Json::num(total)),
+                                ]),
+                                None => Json::Null,
+                            },
+                        ),
                     ])
                 })
                 .collect();
@@ -735,7 +766,7 @@ fn try_handle<'rt>(
                 None => false,
             };
             if auto {
-                for k in ["bits", "dtype", "block", "pipeline", "stage_bits", "fused"] {
+                for k in ["bits", "dtype", "block", "pipeline", "stage_bits", "fused", "entropy"] {
                     if req.opt(k).is_some() {
                         bail!(r#""auto":true picks the config from the policy; drop {k:?}"#);
                     }
@@ -781,8 +812,9 @@ fn try_handle<'rt>(
             let spec = registry::spec_from_parts(bits, dtype, block)?;
             // Plan shape: pipeline sharding + optional per-stage bit
             // widths (mixed precision), e.g. {"pipeline":true,
-            // "stage_bits":[16,4]}, and/or the native fused dequant×matmul
-            // execution backend ({"fused":true}).
+            // "stage_bits":[16,4]}, the native fused dequant×matmul
+            // execution backend ({"fused":true}), and/or entropy-coded
+            // residency ({"entropy":true}).
             let plan = PlanRequest {
                 pipeline: match req.opt("pipeline") {
                     Some(v) => v.as_bool()?,
@@ -793,6 +825,10 @@ fn try_handle<'rt>(
                     None => None,
                 },
                 fused: match req.opt("fused") {
+                    Some(v) => v.as_bool()?,
+                    None => false,
+                },
+                entropy: match req.opt("entropy") {
                     Some(v) => v.as_bool()?,
                     None => false,
                 },
@@ -933,6 +969,9 @@ fn try_handle<'rt>(
             }
             if let Some(v) = req.opt("stage_mixes") {
                 cfg.stage_mixes = v.as_bool()?;
+            }
+            if let Some(v) = req.opt("entropy") {
+                cfg.entropy = v.as_bool()?;
             }
             if let Some(v) = req.opt("ppl_sequences") {
                 cfg.eval.ppl_sequences = v.as_usize()?.max(1);

@@ -47,7 +47,7 @@ use super::cache::ScoreCache;
 use crate::data::corpus::Corpus;
 use crate::eval::{EvalConfig, EvalResult, EvalSuite, Evaluator};
 use crate::models::manifest::{Manifest, TierManifest};
-use crate::quant::{self, PackedParam, QuantSpec};
+use crate::quant::{self, EncodedParam, PackedParam, QuantSpec};
 use crate::runtime::native::{NativeModel, NativeParam};
 use crate::runtime::{lit_f32_slice, ParamLiterals, Runtime};
 use crate::tensor::Tensor;
@@ -72,22 +72,34 @@ pub struct PlanRequest {
     /// (`runtime::native`): packed weights never expand to f32 literals;
     /// scoring walks the k-bit bitstream inside the matmul inner loop.
     pub fused: bool,
+    /// Keep quantized indices **entropy-coded** in residency
+    /// (`quant::entropy`): per-segment canonical Huffman over the k-bit
+    /// index stream, decoded losslessly. Residency and `total_bits` become
+    /// *measured* coded bytes/bits instead of the nominal `n * k`.
+    pub entropy: bool,
 }
 
 impl PlanRequest {
     /// The pipeline plan with the base spec in every stage.
     pub fn staged() -> Self {
-        PlanRequest { pipeline: true, stage_bits: None, fused: false }
+        PlanRequest { pipeline: true, ..Self::default() }
     }
 
     /// The monolithic plan on the native fused backend.
     pub fn fused() -> Self {
-        PlanRequest { pipeline: false, stage_bits: None, fused: true }
+        PlanRequest { fused: true, ..Self::default() }
+    }
+
+    /// The monolithic plan with entropy-coded residency.
+    pub fn entropy_coded() -> Self {
+        PlanRequest { entropy: true, ..Self::default() }
     }
 
     /// Registry-key suffix distinguishing plan shapes of one spec, so
-    /// monolithic, sharded, and fused variants coexist as separate
-    /// residents: `""`, `#pipe`, `#pipe[8,4]`, `#fused`, `#pipe#fused`, …
+    /// monolithic, sharded, fused, and entropy-coded variants coexist as
+    /// separate residents: `""`, `#pipe`, `#pipe[8,4]`, `#ec`, `#fused`,
+    /// `#pipe#ec#fused`, … (canonical order: `#pipe…` then `#ec` then
+    /// `#fused` — fleet key replay depends on it).
     pub fn suffix(&self) -> String {
         let mut s = if !self.pipeline {
             String::new()
@@ -100,6 +112,9 @@ impl PlanRequest {
                 }
             }
         };
+        if self.entropy {
+            s.push_str("#ec");
+        }
         if self.fused {
             s.push_str("#fused");
         }
@@ -123,7 +138,14 @@ pub struct ModelHandle<'rt> {
     /// former has nothing to pack; the latter is mixed-precision and
     /// stays simulated). `Arc`-shared so the fused native backend scores
     /// the same allocations — fused variants add zero packed bytes.
+    /// Empty for entropy-coded variants, whose only residency is
+    /// [`Self::encoded`].
     pub packed: Vec<(String, Arc<PackedParam>)>,
+    /// Entropy-coded residency (`plan_req.entropy`): the same plan params
+    /// as [`Self::packed`] would hold, Huffman-coded (`quant::entropy`).
+    /// The packed form is dropped after encoding, so an entropy variant's
+    /// resident bytes are the *measured* coded bytes. Empty otherwise.
+    pub encoded: Vec<(String, Arc<EncodedParam>)>,
     /// Packed resident bytes per plan stage (stage name, bytes) — the
     /// governance layer's per-stage view of a sharded variant.
     pub stage_bytes: Vec<(String, usize)>,
@@ -189,6 +211,12 @@ impl<'rt> ModelHandle<'rt> {
                  (baseline/proxy variants have no packed residency)"
             );
         }
+        if plan_req.entropy && simulate_only {
+            bail!(
+                "entropy-coded residency requires a packable quantized spec \
+                 (baseline/proxy variants have no index stream to code)"
+            );
+        }
         let mut ev = Evaluator::with_plan(rt, manifest, tier, plan_req.pipeline)?;
         let layout = ev.plan().layout.clone();
         let stage_specs =
@@ -210,11 +238,13 @@ impl<'rt> ModelHandle<'rt> {
                 ev,
                 plits,
                 packed: Vec::new(),
+                encoded: Vec::new(),
                 stage_bytes,
             });
         }
         let mut plits = Vec::with_capacity(layout.params.len());
         let mut packed = Vec::new();
+        let mut encoded = Vec::new();
         let mut native_params: Vec<NativeParam> = Vec::new();
         let mut bytes_per_stage = vec![0usize; layout.n_stages()];
         // Resolve every plan param up front (cheap and serial): source
@@ -238,17 +268,29 @@ impl<'rt> ModelHandle<'rt> {
         // Quantize + pack — the expensive step — in parallel across pool
         // workers, one task per quantized param. Each task owns its
         // output; nothing is shared across tasks or across loads.
+        // Entropy-coded variants Huffman-encode in the same worker task
+        // and drop the packed intermediate before returning, so the coded
+        // form is the only residency that ever leaves the fan-out.
+        enum Residency {
+            Packed(Arc<PackedParam>),
+            Encoded(Arc<EncodedParam>),
+        }
+        let entropy = plan_req.entropy;
         let packed_parts = pool::parallel_map(
             resolved.len(),
             pool::default_threads(),
-            |i| -> Result<Option<Arc<PackedParam>>> {
+            |i| -> Result<Option<Residency>> {
                 let Some(&(pp, data, sspec, quantizes)) = resolved.get(i) else {
                     return Ok(None);
                 };
                 if !quantizes {
                     return Ok(None);
                 }
-                Ok(Some(Arc::new(PackedParam::quantize_slice(&pp.shape, data, sspec)?)))
+                let pk = PackedParam::quantize_slice(&pp.shape, data, sspec)?;
+                if entropy {
+                    return Ok(Some(Residency::Encoded(Arc::new(EncodedParam::encode(&pk)?))));
+                }
+                Ok(Some(Residency::Packed(Arc::new(pk))))
             },
         );
         // Dequant scratch is per load (owned by this call, never shared
@@ -262,22 +304,7 @@ impl<'rt> ModelHandle<'rt> {
             .unwrap_or(0);
         let mut scratch = vec![0.0f32; if plan_req.fused { 0 } else { max_quant_numel }];
         for (&(pp, data, _, _), part) in resolved.iter().zip(packed_parts) {
-            if let Some(pk) = part? {
-                if plan_req.fused {
-                    // Fused variants keep only the packed form: the native
-                    // backend decodes it inside the matmul inner loop.
-                    native_params.push(NativeParam::Packed(pk.clone()));
-                } else {
-                    let buf = scratch
-                        .get_mut(..data.len())
-                        .context("dequant scratch smaller than param")?;
-                    pk.dequantize_into(buf)?;
-                    plits.push(lit_f32_slice(&pp.shape, buf)?);
-                }
-                *bytes_per_stage
-                    .get_mut(pp.stage)
-                    .with_context(|| format!("stage {} out of range", pp.stage))? +=
-                    pk.resident_bytes();
+            if let Some(res) = part? {
                 let label = if layout.is_monolithic() {
                     pp.source.clone()
                 } else {
@@ -287,7 +314,47 @@ impl<'rt> ModelHandle<'rt> {
                         .with_context(|| format!("stage {} out of range", pp.stage))?;
                     pp.label(&stage.name)
                 };
-                packed.push((label, pk));
+                let bytes = bytes_per_stage
+                    .get_mut(pp.stage)
+                    .with_context(|| format!("stage {} out of range", pp.stage))?;
+                match res {
+                    Residency::Packed(pk) => {
+                        if plan_req.fused {
+                            // Fused variants keep only the packed form: the
+                            // native backend decodes it inside the matmul
+                            // inner loop.
+                            native_params.push(NativeParam::Packed(pk.clone()));
+                        } else {
+                            let buf = scratch
+                                .get_mut(..data.len())
+                                .context("dequant scratch smaller than param")?;
+                            pk.dequantize_into(buf)?;
+                            plits.push(lit_f32_slice(&pp.shape, buf)?);
+                        }
+                        *bytes += pk.resident_bytes();
+                        packed.push((label, pk));
+                    }
+                    Residency::Encoded(ep) => {
+                        if plan_req.fused {
+                            // Fused + entropy: the native backend
+                            // stream-decodes the Huffman bitstream inside
+                            // the matmul (single-threaded per matmul —
+                            // variable-length decode is sequential).
+                            native_params.push(NativeParam::Encoded(ep.clone()));
+                        } else {
+                            // Lossless: the coded stream decodes to floats
+                            // bit-identical to the packed twin, so the XLA
+                            // literals match an uncoded build exactly.
+                            let buf = scratch
+                                .get_mut(..data.len())
+                                .context("dequant scratch smaller than param")?;
+                            ep.dequantize_into(buf)?;
+                            plits.push(lit_f32_slice(&pp.shape, buf)?);
+                        }
+                        *bytes += ep.resident_bytes();
+                        encoded.push((label, ep));
+                    }
+                }
             } else if plan_req.fused {
                 native_params.push(NativeParam::Dense(data.to_vec()));
             } else {
@@ -311,6 +378,7 @@ impl<'rt> ModelHandle<'rt> {
             ev,
             plits: ParamLiterals(plits),
             packed,
+            encoded,
             stage_bytes,
         })
     }
@@ -346,17 +414,25 @@ impl<'rt> ModelHandle<'rt> {
         self.ev.run_literals(&self.plits.0, corpus, suite, cfg)
     }
 
-    /// Host-resident weight bytes in packed form (indices + per-block
-    /// constants). Zero for baseline/proxy specs, which keep no packed
-    /// store.
+    /// Host-resident weight bytes: packed form (indices + per-block
+    /// constants) or, for entropy variants, *measured coded* bytes
+    /// (Huffman streams + tables + constants). Zero for baseline/proxy
+    /// specs, which keep no packed store.
     pub fn resident_bytes(&self) -> usize {
-        self.packed.iter().map(|(_, p)| p.resident_bytes()).sum()
+        self.packed.iter().map(|(_, p)| p.resident_bytes()).sum::<usize>()
+            + self.encoded.iter().map(|(_, e)| e.resident_bytes()).sum::<usize>()
     }
 
     /// What a dequantized f32 copy of the quantized tensors would cost —
     /// the residency saving the paper's x-axis is about.
     pub fn quantized_f32_bytes(&self) -> usize {
-        self.packed.iter().map(|(_, p)| p.len() * 4).sum()
+        self.packed.iter().map(|(_, p)| p.len() * 4).sum::<usize>()
+            + self.encoded.iter().map(|(_, e)| e.len() * 4).sum::<usize>()
+    }
+
+    /// Whether this variant keeps its indices entropy-coded in residency.
+    pub fn entropy_coded(&self) -> bool {
+        self.plan_req.entropy
     }
 
     /// The paper's analytic bit accounting for this model under this spec
@@ -370,6 +446,42 @@ impl<'rt> ModelHandle<'rt> {
             &self.tier.quantized_params,
             &self.spec,
         )
+    }
+
+    /// **Measured** total model bits: quantized tensors at what they
+    /// actually store (coded payload + tables + f32 block constants for
+    /// entropy variants; exact `n*k` + f32 constants for packed), plus the
+    /// `total_model_bits` convention of 16 bits per unquantized parameter.
+    /// Falls back to the analytic figure for simulate-only variants
+    /// (baseline/proxy), which store nothing to measure.
+    pub fn measured_total_bits(&self) -> f64 {
+        if self.packed.is_empty() && self.encoded.is_empty() {
+            return self.ideal_total_bits();
+        }
+        let quant_bits: u64 = self.packed.iter().map(|(_, p)| p.measured_bits()).sum::<u64>()
+            + self.encoded.iter().map(|(_, e)| e.measured_bits()).sum::<u64>();
+        let quant_elems: usize = self.packed.iter().map(|(_, p)| p.len()).sum::<usize>()
+            + self.encoded.iter().map(|(_, e)| e.len()).sum::<usize>();
+        let total_elems: usize = self.tier.param_sizes().iter().map(|(_, n)| n).sum();
+        let plain_elems = total_elems.saturating_sub(quant_elems);
+        quant_bits as f64 + 16.0 * plain_elems as f64
+    }
+
+    /// Coded payload bits actually spent on entropy-coded index streams
+    /// (zero for uncoded variants).
+    pub fn coded_payload_bits(&self) -> u64 {
+        self.encoded.iter().map(|(_, e)| e.payload_bits()).sum()
+    }
+
+    /// The nominal `n * k` payload those same streams would spend packed.
+    pub fn coded_nominal_bits(&self) -> u64 {
+        self.encoded.iter().map(|(_, e)| e.nominal_payload_bits()).sum()
+    }
+
+    /// Shannon lower bound (bits) of the entropy-coded index streams —
+    /// the floor the coder is measured against in `{"op":"stats"}`.
+    pub fn index_entropy_bits(&self) -> f64 {
+        self.encoded.iter().map(|(_, e)| e.entropy_bits()).sum()
     }
 }
 
@@ -400,6 +512,10 @@ pub struct VariantStats {
     /// Whether `Arc` references beyond the registry's own exist —
     /// in-flight scoring pins an evicted variant until these drop.
     pub pinned: bool,
+    /// Entropy-coding accounting, `None` for uncoded variants:
+    /// `(coded payload bits, nominal n·k bits, Shannon bound bits,
+    /// measured total model bits)`.
+    pub entropy: Option<(u64, u64, f64, f64)>,
 }
 
 /// A process-wide collection of resident model variants with LRU/TTL
@@ -870,6 +986,14 @@ impl<'rt> ModelRegistry<'rt> {
                 hits: r.hits,
                 idle: now.duration_since(r.last_use),
                 pinned: Arc::strong_count(&r.handle) > 1,
+                entropy: r.handle.entropy_coded().then(|| {
+                    (
+                        r.handle.coded_payload_bits(),
+                        r.handle.coded_nominal_bits(),
+                        r.handle.index_entropy_bits(),
+                        r.handle.measured_total_bits(),
+                    )
+                }),
             })
             .collect();
         v.sort_by(|a, b| a.key.cmp(&b.key));
@@ -1063,13 +1187,26 @@ mod tests {
         // and mixed-precision builds of one spec must never collide.
         assert_eq!(PlanRequest::default().suffix(), "");
         assert_eq!(PlanRequest::staged().suffix(), "#pipe");
-        let mixed = PlanRequest { pipeline: true, stage_bits: Some(vec![16, 4]), fused: false };
+        let mixed = PlanRequest {
+            pipeline: true,
+            stage_bits: Some(vec![16, 4]),
+            ..PlanRequest::default()
+        };
         assert_eq!(mixed.suffix(), "#pipe[16,4]");
         assert_eq!(PlanRequest::fused().suffix(), "#fused");
-        let staged_fused = PlanRequest { pipeline: true, stage_bits: None, fused: true };
+        let staged_fused = PlanRequest { pipeline: true, fused: true, ..PlanRequest::default() };
         assert_eq!(staged_fused.suffix(), "#pipe#fused");
         let mixed_fused = PlanRequest { fused: true, ..mixed.clone() };
         assert_eq!(mixed_fused.suffix(), "#pipe[16,4]#fused");
+        // Entropy-coded shapes: `#ec` sits between the pipe part and
+        // `#fused` (the canonical order fleet key replay re-parses).
+        assert_eq!(PlanRequest::entropy_coded().suffix(), "#ec");
+        let ec_fused = PlanRequest { entropy: true, fused: true, ..PlanRequest::default() };
+        assert_eq!(ec_fused.suffix(), "#ec#fused");
+        let staged_ec = PlanRequest { pipeline: true, entropy: true, ..PlanRequest::default() };
+        assert_eq!(staged_ec.suffix(), "#pipe#ec");
+        let mixed_ec_fused = PlanRequest { entropy: true, fused: true, ..mixed.clone() };
+        assert_eq!(mixed_ec_fused.suffix(), "#pipe[16,4]#ec#fused");
         let suffixes = [
             PlanRequest::default().suffix(),
             PlanRequest::staged().suffix(),
@@ -1077,6 +1214,10 @@ mod tests {
             PlanRequest::fused().suffix(),
             staged_fused.suffix(),
             mixed_fused.suffix(),
+            PlanRequest::entropy_coded().suffix(),
+            ec_fused.suffix(),
+            staged_ec.suffix(),
+            mixed_ec_fused.suffix(),
         ];
         let mut dedup = suffixes.to_vec();
         dedup.sort();

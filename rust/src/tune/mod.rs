@@ -65,18 +65,29 @@ pub struct Candidate {
     /// Per-stage widths (`16` = unquantized stage); requires the tier to
     /// declare pipeline stages. `None` = the monolithic plan.
     pub stage_bits: Option<Vec<usize>>,
+    /// Hold the built variant entropy-coded ([`quant::entropy`]): the
+    /// coding is lossless, so the metric equals the uncoded twin's — only
+    /// the *measured* total bits move, which is exactly what puts coded
+    /// variants on (or off) the frontier. Requires a packable spec.
+    pub entropy: bool,
 }
 
 impl Candidate {
     /// A uniform-precision candidate on the monolithic plan.
     pub fn uniform(spec: QuantSpec) -> Candidate {
-        Candidate { spec, stage_bits: None }
+        Candidate { spec, stage_bits: None, entropy: false }
     }
 
     /// A pipeline-sharded candidate with per-stage widths over the base
     /// spec's dtype/block.
     pub fn staged(spec: QuantSpec, stage_bits: Vec<usize>) -> Candidate {
-        Candidate { spec, stage_bits: Some(stage_bits) }
+        Candidate { spec, stage_bits: Some(stage_bits), entropy: false }
+    }
+
+    /// The entropy-coded twin of this candidate.
+    pub fn with_entropy(mut self) -> Candidate {
+        self.entropy = true;
+        self
     }
 
     /// The plan shape this candidate executes with.
@@ -85,28 +96,45 @@ impl Candidate {
             pipeline: self.stage_bits.is_some(),
             stage_bits: self.stage_bits.clone(),
             fused: false,
+            entropy: self.entropy,
         }
     }
 
     /// Stable identity matching the registry-key spelling:
-    /// `fp:4:b64`, `fp:4:b64#pipe[16,4]`.
+    /// `fp:4:b64`, `fp:4:b64#pipe[16,4]`, `fp:4:b64#ec`.
     pub fn key(&self) -> String {
         format!("{}{}", self.spec.key(), self.plan_request().suffix())
     }
 
-    /// Resident model bits of this candidate on `tier` — the Pareto
-    /// x-axis. Monolithic candidates use the paper's analytic accounting
-    /// (`bitcost::total_model_bits`); staged candidates account each plan
-    /// parameter under its stage's spec, so a replicated parameter (the
-    /// tied LM head) counts once per owning stage, exactly as it is
-    /// resident in a sharded deployment.
+    /// Analytic resident model bits of this candidate on `tier` — the
+    /// pre-build *estimate* of the Pareto x-axis (the search records the
+    /// built handle's [`measured_total_bits`] for the actual frontier,
+    /// which is the only honest figure for entropy-coded candidates).
+    /// Charges what a packed variant actually stores
+    /// ([`quant::bitcost::stored_bits_per_param`]: f32 block constants,
+    /// not the paper's 16-bit figure), so estimated points carry the same
+    /// side-channel costs the measured ones do. Staged candidates account
+    /// each plan parameter under its stage's spec, so a replicated
+    /// parameter (the tied LM head) counts once per owning stage, exactly
+    /// as it is resident in a sharded deployment.
+    ///
+    /// [`measured_total_bits`]: crate::server::registry::ModelHandle::measured_total_bits
     pub fn total_bits(&self, tier: &TierManifest) -> Result<f64> {
         match &self.stage_bits {
-            None => Ok(quant::bitcost::total_model_bits(
-                &tier.param_sizes(),
-                &tier.quantized_params,
-                &self.spec,
-            )),
+            None => {
+                let bpp = quant::bitcost::stored_bits_per_param(&self.spec);
+                Ok(tier
+                    .param_sizes()
+                    .iter()
+                    .map(|(name, n)| {
+                        if tier.quantized_params.iter().any(|q| q == name) {
+                            bpp * *n as f64
+                        } else {
+                            16.0 * *n as f64
+                        }
+                    })
+                    .sum())
+            }
             Some(bits) => {
                 let layout = PlanLayout::staged(tier)?;
                 let specs = quant::stage_specs(&self.spec, layout.n_stages(), Some(bits))?;
@@ -117,7 +145,7 @@ impl Candidate {
                         let quantized =
                             tier.quantized_params.iter().any(|q| q == &pp.source);
                         let bpp = if quantized {
-                            quant::bits_per_param(&specs[pp.stage])
+                            quant::bitcost::stored_bits_per_param(&specs[pp.stage])
                         } else {
                             16.0
                         };
@@ -146,6 +174,7 @@ impl Candidate {
                     None => Json::Null,
                 },
             ),
+            ("entropy", Json::Bool(self.entropy)),
         ])
     }
 
@@ -163,7 +192,12 @@ impl Candidate {
             Json::Null => None,
             v => Some(v.usizes()?),
         };
-        Ok(Candidate { spec, stage_bits })
+        // Absent in stores written before entropy coding existed.
+        let entropy = match j.opt("entropy") {
+            Some(v) => v.as_bool()?,
+            None => false,
+        };
+        Ok(Candidate { spec, stage_bits, entropy })
     }
 }
 
@@ -180,6 +214,11 @@ pub struct TuneConfig {
     /// stages (hi-precision prefix / lo-precision suffix splits over the
     /// first dtype × block).
     pub stage_mixes: bool,
+    /// Also generate the entropy-coded twin of every packable candidate
+    /// (`#ec` keys): the metric is identical by construction (lossless
+    /// coding), but the *measured* total bits land below the fixed-k
+    /// floor, so coded twins compete on the frontier as distinct points.
+    pub entropy: bool,
     /// Calibration suite; `Ppl` maximizes `-ce`, `PplZeroShot` maximizes
     /// mean zero-shot accuracy.
     pub suite: EvalSuite,
@@ -196,6 +235,7 @@ impl Default for TuneConfig {
             dtypes: vec![DataType::Fp],
             blocks: vec![Some(64)],
             stage_mixes: true,
+            entropy: false,
             suite: EvalSuite::Ppl,
             eval: EvalConfig { ppl_sequences: 16, zs_examples: 16 },
             threads: 2,
@@ -207,8 +247,10 @@ impl Default for TuneConfig {
 /// 16-bit baseline, every buildable uniform (dtype × bits × block)
 /// config, and — when `stage_mixes` is on and the plan is sharded —
 /// two-width prefix/suffix stage vectors (e.g. `[16,4]`: a 16-bit
-/// embedding-heavy stage 0 over a 4-bit stage 1). Unbuildable combos
-/// (e.g. dynexp below 3 bits) are silently dropped, not errors.
+/// embedding-heavy stage 0 over a 4-bit stage 1). With `cfg.entropy`,
+/// every packable candidate additionally gets its entropy-coded twin
+/// (`#ec`). Unbuildable combos (e.g. dynexp below 3 bits) are silently
+/// dropped, not errors.
 pub fn candidates(cfg: &TuneConfig, n_stages: usize) -> Vec<Candidate> {
     let mut out = vec![Candidate::uniform(QuantSpec::baseline16())];
     for &k in &cfg.bits {
@@ -252,6 +294,18 @@ pub fn candidates(cfg: &TuneConfig, n_stages: usize) -> Vec<Candidate> {
                 }
             }
         }
+    }
+    if cfg.entropy {
+        // Coded twins of every packable candidate (the baseline has no
+        // index stream to code). Staged mixes qualify too: their 16-bit
+        // stages simply stay uncoded inside the variant.
+        let coded: Vec<Candidate> = out
+            .iter()
+            .filter(|c| !c.spec.is_baseline())
+            .cloned()
+            .map(Candidate::with_entropy)
+            .collect();
+        out.extend(coded);
     }
     let mut seen = HashSet::new();
     out.retain(|c| seen.insert(c.key()));
@@ -466,7 +520,11 @@ fn run_cell(
     )?;
     let r = handle.evaluate(corpus, cfg.suite, &cfg.eval)?;
     let metric = if r.zs_mean.is_finite() { r.zs_mean } else { -r.ce };
-    let total_bits = cand.total_bits(tier)?;
+    // The frontier x-axis is *measured* on the built handle (coded
+    // payload + tables + f32 constants for entropy variants, exact n·k +
+    // constants for packed; analytic fallback for simulate-only specs) —
+    // `Candidate::total_bits` remains the pre-build estimate only.
+    let total_bits = handle.measured_total_bits();
     Ok(TunePoint {
         key: key.to_string(),
         family: target.family.clone(),
@@ -518,6 +576,7 @@ pub fn frontier_policy(points: &[TunePoint], suite: &str) -> TunedPolicy {
         dtype: p.candidate.spec.dtype,
         block: p.candidate.spec.block,
         stage_bits: p.candidate.stage_bits.clone(),
+        entropy: p.candidate.entropy,
         metric: p.metric,
         total_bits: p.total_bits,
         bits_per_param: p.bits_per_param,
@@ -626,11 +685,33 @@ mod tests {
     }
 
     #[test]
+    fn entropy_twins_double_the_packable_candidates() {
+        let mut c = cfg();
+        c.entropy = true;
+        let cands = candidates(&c, 1);
+        // The baseline has nothing to code; every packable candidate
+        // gains exactly one #ec twin.
+        assert_eq!(cands.len(), 1 + 2 * (3 * 2));
+        let coded: Vec<&Candidate> = cands.iter().filter(|x| x.entropy).collect();
+        assert_eq!(coded.len(), 3 * 2);
+        assert!(coded.iter().all(|x| x.key().ends_with("#ec")), "keys must carry #ec");
+        assert!(coded.iter().all(|x| !x.spec.is_baseline()));
+        // A twin differs from its uncoded sibling only in residency —
+        // same spec, same plan shape, distinct key.
+        for t in &coded {
+            assert!(cands
+                .iter()
+                .any(|u| !u.entropy && u.spec == t.spec && u.stage_bits == t.stage_bits));
+        }
+    }
+
+    #[test]
     fn candidate_json_round_trips() {
         for c in [
             Candidate::uniform(QuantSpec::baseline16()),
             Candidate::uniform(QuantSpec::new(DataType::Int, 3, None)),
             Candidate::staged(QuantSpec::new(DataType::Fp, 4, Some(64)), vec![16, 4]),
+            Candidate::uniform(QuantSpec::new(DataType::Fp, 4, Some(64))).with_entropy(),
         ] {
             let back = Candidate::from_json(&Json::parse(&c.to_json().dump()).unwrap()).unwrap();
             assert_eq!(back, c);

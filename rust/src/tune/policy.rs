@@ -38,6 +38,10 @@ pub struct PolicyEntry {
     /// Per-stage widths for pipeline-sharded serving; `None` = the
     /// monolithic plan.
     pub stage_bits: Option<Vec<usize>>,
+    /// Deploy entropy-coded residency (`#ec`): lossless Huffman coding of
+    /// the packed indices, so the metric matches the uncoded twin while
+    /// the measured bits (and the footprint estimate) drop below `k`.
+    pub entropy: bool,
     /// The calibration metric maximized by [`TunedPolicy::pick`] (mean
     /// zero-shot accuracy, or negative CE for ppl-only tuning). Policies
     /// distilled by `tune::frontier_policy` center each model's metrics
@@ -64,11 +68,12 @@ impl PolicyEntry {
             pipeline: self.stage_bits.is_some(),
             stage_bits: self.stage_bits.clone(),
             fused: false,
+            entropy: self.entropy,
         }
     }
 
     /// Human identity, matching the registry-key spelling:
-    /// `fp:4:b64`, `fp:4:b64#pipe[16,4]`.
+    /// `fp:4:b64`, `fp:4:b64#pipe[16,4]`, `fp:4:b64#ec`.
     pub fn key(&self) -> String {
         let spec = self
             .spec()
@@ -104,6 +109,7 @@ impl PolicyEntry {
                     None => Json::Null,
                 },
             ),
+            ("entropy", Json::Bool(self.entropy)),
             ("metric", Json::num(self.metric)),
             ("total_bits", Json::num(self.total_bits)),
             ("bits_per_param", Json::num(self.bits_per_param)),
@@ -122,11 +128,17 @@ impl PolicyEntry {
             Json::Null => None,
             v => Some(v.usizes()?),
         };
+        // Absent in policies written before entropy coding existed.
+        let entropy = match j.opt("entropy") {
+            Some(v) => v.as_bool()?,
+            None => false,
+        };
         let e = PolicyEntry {
             bits: j.get("bits")?.as_usize()?,
             dtype: DataType::parse(j.get("dtype")?.as_str()?)?,
             block,
             stage_bits,
+            entropy,
             metric: j.get("metric")?.as_f64()?,
             total_bits: j.get("total_bits")?.as_f64()?,
             bits_per_param: j.get("bits_per_param")?.as_f64()?,
@@ -278,6 +290,7 @@ mod tests {
             dtype: DataType::Fp,
             block: Some(64),
             stage_bits,
+            entropy: false,
             metric,
             total_bits: bpp * 1e5,
             bits_per_param: bpp,
@@ -412,5 +425,30 @@ mod tests {
         assert_eq!(entry(4, Some(vec![16, 4]), 0.5, 9.0).key(), "fp:4:b64#pipe[16,4]");
         let base = entry(16, None, 0.6, 16.0);
         assert_eq!(base.key(), "fp:16:bnone");
+        let mut coded = entry(4, None, 0.5, 3.1);
+        coded.entropy = true;
+        assert_eq!(coded.key(), "fp:4:b64#ec");
+    }
+
+    #[test]
+    fn entropy_entries_round_trip_and_old_policies_default_uncoded() {
+        let mut p = policy();
+        // A coded twin sits left of its uncoded sibling on the frontier
+        // (fewer measured bits, same metric would be dominated — give it
+        // a frontier-consistent slot below the fp3 point).
+        let mut coded = entry(4, None, 0.30, 2.9);
+        coded.entropy = true;
+        p.entries.insert(0, coded);
+        assert!(p.validate().is_ok(), "{:?}", p.entries);
+        let parsed = TunedPolicy::from_json(&Json::parse(&p.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(parsed, p);
+        assert!(parsed.entries.first().map(|e| e.entropy).unwrap_or(false));
+        assert_eq!(parsed.entries.first().map(PolicyEntry::key), Some("fp:4:b64#ec".into()));
+        // A pre-entropy artifact (no "entropy" field at all) parses as
+        // uncoded rather than failing.
+        let legacy = policy().to_json().dump().replace("\"entropy\":false,", "");
+        assert!(!legacy.contains("entropy"), "field not stripped: {legacy}");
+        let parsed = TunedPolicy::from_json(&Json::parse(&legacy).unwrap()).unwrap();
+        assert_eq!(parsed, policy());
     }
 }

@@ -388,6 +388,7 @@ fn test_policy(param_count: usize) -> TunedPolicy {
         dtype: DataType::Fp,
         block: Some(64),
         stage_bits: None,
+        entropy: false,
         metric,
         total_bits: bpp * param_count as f64,
         bits_per_param: bpp,

@@ -1,8 +1,11 @@
-//! Deterministic fuzz harness for the serving surface's four parsers:
-//! the bin1 frame codec ([`kbitscale::server::frames`]), the line
+//! Deterministic fuzz harness for the serving surface's parsers: the
+//! bin1 frame codec ([`kbitscale::server::frames`]), the line
 //! protocol loop ([`kbitscale::server::pump`]), the artifact manifest
-//! parser ([`Manifest::load`]), and the packed k-bit bitstream decoders
-//! ([`PackedTensor`] / [`kbitscale::quant::fused`]).
+//! parser ([`Manifest::load`]), the packed k-bit bitstream decoders
+//! ([`PackedTensor`] / [`kbitscale::quant::fused`]), and the
+//! entropy-coded residency decoders ([`kbitscale::quant::entropy`]:
+//! Huffman tables from untrusted length lists, hostile
+//! [`EncodedTensor`] field combinations, corrupted coded streams).
 //!
 //! The invariant under test is uniform: **error, not panic**. Every
 //! input — structured-random, bit-mutated, truncated, or hostile
@@ -15,6 +18,7 @@ use std::io::Cursor;
 use std::path::PathBuf;
 
 use kbitscale::models::manifest::Manifest;
+use kbitscale::quant::entropy::{Coding, EncodedTensor, HuffTable, MAX_CODE_LEN, SEGMENT_LEN};
 use kbitscale::quant::{fused, DataType, PackedTensor, QuantSpec};
 use kbitscale::server::{frames, pump, Emit, EmitSink, MAX_REQUEST_LINE};
 use kbitscale::util::json::Json;
@@ -566,4 +570,197 @@ fn packed_tensor_random_field_fuzz() {
         let ranged = fused::decode_range(&p, 0, span, &mut head).is_ok();
         assert!(structural_ok || !ranged, "decode_range accepted a structurally invalid tensor");
     }
+}
+
+// ---------------------------------------------------------------------------
+// Entropy-coded bitstream decoders (quant::entropy)
+// ---------------------------------------------------------------------------
+
+/// A legitimate entropy-coded tensor spanning two segments (5000 = 4096 +
+/// 904), from normal data so the Huffman coding path actually engages.
+fn legit_encoded() -> (PackedTensor, EncodedTensor) {
+    let mut rng = Rng::new(SEED).fork(7);
+    let mut data = vec![0.0f32; 5000];
+    rng.fill_normal(&mut data, 1.0);
+    let spec = QuantSpec::new(DataType::Int, 4, Some(64));
+    let p = PackedTensor::quantize(&data, &spec).expect("quantize");
+    let e = EncodedTensor::encode(&p).expect("encode");
+    (p, e)
+}
+
+/// Every decode entry point over one encoded tensor; all must return, and
+/// decode must never accept what `validate()` rejects (bit-level stream
+/// corruption with intact structure may still decode — to an error or to
+/// wrong floats — but never to a panic).
+fn poke_encoded(t: &EncodedTensor) -> bool {
+    let structural_ok = t.validate().is_ok();
+    let cap = t.n.min(1 << 16);
+    let mut out = vec![0.0f32; cap];
+    if cap == t.n {
+        let decoded = t.dequantize_into(&mut out).is_ok();
+        assert!(
+            structural_ok || !decoded,
+            "decode accepted a structurally invalid encoded tensor"
+        );
+    }
+    let span = t.n.min(8);
+    let mut head = vec![0.0f32; span];
+    let ranged = t.decode_range(0, span, &mut head).is_ok();
+    assert!(
+        structural_ok || !ranged,
+        "decode_range accepted a structurally invalid encoded tensor"
+    );
+    structural_ok
+}
+
+#[test]
+fn encoded_tensor_round_trips_below_the_nominal_payload() {
+    let (p, e) = legit_encoded();
+    assert_eq!(e.segments.len(), 2, "fixture must span two segments");
+    assert!(poke_encoded(&e));
+    // Coding is lossless and never pays more than packed n*k.
+    assert!(e.payload_bits() <= e.nominal_payload_bits());
+    let mut packed = vec![0.0f32; p.n];
+    p.dequantize_into(&mut packed).expect("packed decode");
+    let mut coded = vec![0.0f32; e.n];
+    e.dequantize_into(&mut coded).expect("coded decode");
+    assert_eq!(packed, coded, "coded decode must be bit-identical to the packed twin");
+}
+
+#[test]
+fn encoded_tensor_hostile_fields_error_not_panic() {
+    let (_, base) = legit_encoded();
+
+    let hostile: Vec<(&str, EncodedTensor)> = vec![
+        ("element count inflated past the segments", {
+            let mut t = base.clone();
+            t.n *= 4;
+            t
+        }),
+        ("bits=0", EncodedTensor { bits: 0, ..base.clone() }),
+        ("bits=9", EncodedTensor { bits: 9, ..base.clone() }),
+        ("block=0", EncodedTensor { block: 0, ..base.clone() }),
+        ("absmax truncated", {
+            let mut t = base.clone();
+            t.absmax.truncate(2);
+            t
+        }),
+        ("means wrong length", {
+            let mut t = base.clone();
+            t.means = Some(vec![0.0; 2]);
+            t
+        }),
+        ("segment dropped", {
+            let mut t = base.clone();
+            t.segments.pop();
+            t
+        }),
+        ("segment length lies", {
+            let mut t = base.clone();
+            t.segments[0].len += 1;
+            t.segments[1].len -= 1;
+            t
+        }),
+        ("segment offset past the stream", {
+            let mut t = base.clone();
+            t.segments[1].bit_off = t.stream_bits + 1;
+            t
+        }),
+        ("segment references a missing table", {
+            let mut t = base.clone();
+            t.segments[0].coding = Coding::Table(99);
+            t
+        }),
+        ("stream_bits exceeds the words held", {
+            let mut t = base.clone();
+            t.stream_bits = t.stream.len() as u64 * 32 + 1;
+            t
+        }),
+        ("stream truncated under its stream_bits", {
+            let mut t = base.clone();
+            let keep = t.stream.len() / 2;
+            t.stream.truncate(keep);
+            t
+        }),
+    ];
+    for (what, t) in &hostile {
+        assert!(!poke_encoded(t), "hostile encoded tensor accepted: {what}");
+    }
+}
+
+#[test]
+fn encoded_tensor_random_field_fuzz() {
+    let (_, base) = legit_encoded();
+    let mut rng = Rng::new(SEED).fork(8);
+    for case in 0..300 {
+        let mut r = rng.fork(case);
+        let mut t = base.clone();
+        for _ in 0..1 + r.below(3) {
+            match r.below(8) {
+                0 => t.n = r.below(SEGMENT_LEN * 4),
+                1 => t.bits = r.below(12),
+                2 => t.block = r.below(512),
+                3 => t.absmax.truncate(r.below(t.absmax.len() + 1)),
+                4 => t.stream.truncate(r.below(t.stream.len() + 1)),
+                5 => t.stream_bits = r.next_u64() % (base.stream.len() as u64 * 32 + 64),
+                6 => {
+                    let i = r.below(t.segments.len().max(1));
+                    if let Some(s) = t.segments.get_mut(i) {
+                        match r.below(3) {
+                            0 => s.bit_off = r.next_u64() % (base.stream_bits + 64),
+                            1 => s.len = r.below(2 * SEGMENT_LEN),
+                            _ => s.coding = Coding::Table(r.below(4)),
+                        }
+                    }
+                }
+                _ => {
+                    if !t.stream.is_empty() {
+                        let bit = r.below(t.stream.len() * 32);
+                        t.stream[bit / 32] ^= 1 << (bit % 32);
+                    }
+                }
+            }
+        }
+        poke_encoded(&t);
+    }
+}
+
+/// Huffman tables built from untrusted code-length lists: the serialized
+/// form every encoded tensor carries. Malformed alphabets, over-long
+/// codes, and Kraft-violating lists are typed errors, never panics.
+#[test]
+fn huffman_length_lists_hostile_inputs_error_not_panic() {
+    // Legitimate tables round-trip through their serialized form.
+    let (_, e) = legit_encoded();
+    assert!(!e.tables.is_empty(), "normal data must engage the Huffman path");
+    for table in &e.tables {
+        let rebuilt = HuffTable::from_lengths(table.lengths()).expect("lengths round-trip");
+        assert_eq!(rebuilt.lengths(), table.lengths());
+    }
+
+    assert!(HuffTable::from_lengths(&[]).is_err(), "empty alphabet");
+    assert!(HuffTable::from_lengths(&[1]).is_err(), "one-symbol alphabet");
+    assert!(HuffTable::from_lengths(&[1, 1, 1]).is_err(), "non-power-of-two alphabet");
+    assert!(HuffTable::from_lengths(&[2; 512]).is_err(), "alphabet past 2^8");
+    assert!(HuffTable::from_lengths(&[0; 16]).is_err(), "no coded symbols");
+    assert!(
+        HuffTable::from_lengths(&[MAX_CODE_LEN as u8 + 1, 1, 0, 0]).is_err(),
+        "length past MAX_CODE_LEN"
+    );
+    assert!(HuffTable::from_lengths(&[1, 1, 1, 1]).is_err(), "Kraft over-subscription");
+
+    // Random length lists: accepted or rejected, never a panic.
+    let mut rng = Rng::new(SEED).fork(9);
+    let mut accepted = 0usize;
+    for case in 0..400 {
+        let mut r = rng.fork(case);
+        let n_sym = 1usize << (1 + r.below(4)); // 2, 4, 8, or 16 symbols
+        let lengths: Vec<u8> =
+            (0..n_sym).map(|_| r.below(MAX_CODE_LEN as usize + 3) as u8).collect();
+        if HuffTable::from_lengths(&lengths).is_ok() {
+            accepted += 1;
+        }
+    }
+    assert!(accepted > 0, "no random length list parsed: generator too hostile");
+    assert!(accepted < 400, "every random length list parsed: validation inert");
 }

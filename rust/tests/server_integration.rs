@@ -820,6 +820,70 @@ fn fused_variant_loads_scores_and_stays_packed() {
 }
 
 #[test]
+fn entropy_variant_scores_identically_and_measures_below_the_floor() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let reg = registry(&rt, &manifest);
+    let mut conn = Connection::new(&reg, None);
+
+    let coded = conn.handle(
+        &Json::parse(r#"{"op":"load","family":"gpt2like","tier":"t0","entropy":true}"#).unwrap(),
+    );
+    let key = coded.get("model").unwrap().as_str().unwrap().to_string();
+    assert!(key.ends_with("@fp:4:b64#ec"), "{key}");
+    let ec_bytes = coded.get("resident_bytes").unwrap().as_usize().unwrap();
+    let ec = conn.handle(&Json::parse(r#"{"op":"score","tokens":[1,5,9,12,3]}"#).unwrap());
+    let ec_ce = ec.get("ce").unwrap().as_f64().unwrap();
+    assert!(ec_ce.is_finite() && ec_ce > 0.0, "{ec:?}");
+    let info = conn.handle(&Json::parse(r#"{"op":"info"}"#).unwrap());
+    assert!(info.get("entropy_coded").unwrap().as_bool().unwrap(), "{info:?}");
+    let ec_total = info.get("measured_total_bits").unwrap().as_f64().unwrap();
+
+    // The packed twin of the same spec: coding is lossless, so the coded
+    // stream decodes to bit-identical f32 literals and the exact same ce
+    // — while the measured footprint lands strictly below the packed one.
+    let packed = conn
+        .handle(&Json::parse(r#"{"op":"load","family":"gpt2like","tier":"t0"}"#).unwrap());
+    assert_eq!(packed.get("models").unwrap().as_usize().unwrap(), 2, "twins coexist");
+    let pk = conn.handle(&Json::parse(r#"{"op":"score","tokens":[1,5,9,12,3]}"#).unwrap());
+    let pk_ce = pk.get("ce").unwrap().as_f64().unwrap();
+    assert_eq!(ec_ce, pk_ce, "lossless coding must not move the metric");
+    let pk_bytes = packed.get("resident_bytes").unwrap().as_usize().unwrap();
+    assert!(ec_bytes < pk_bytes, "coded {ec_bytes} B vs packed {pk_bytes} B");
+    let info = conn.handle(&Json::parse(r#"{"op":"info"}"#).unwrap());
+    assert!(!info.get("entropy_coded").unwrap().as_bool().unwrap());
+    let pk_total = info.get("measured_total_bits").unwrap().as_f64().unwrap();
+    assert!(ec_total < pk_total, "coded {ec_total} vs packed {pk_total} bits");
+
+    // stats: the coded variant reports its payload accounting — strictly
+    // under the nominal n*k floor (< 4.0 bits per 4-bit index here), and
+    // never under the Shannon bound a prefix code cannot beat.
+    let stats = conn.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
+    let models = stats.get("models").unwrap().as_arr().unwrap();
+    let find = |k: &str| {
+        models
+            .iter()
+            .find(|m| m.get("key").unwrap().as_str().unwrap() == k)
+            .unwrap_or_else(|| panic!("{k} missing from stats"))
+    };
+    let e = find(&key).get("entropy").unwrap();
+    let coded_bits = e.get("coded_payload_bits").unwrap().as_f64().unwrap();
+    let nominal = e.get("nominal_payload_bits").unwrap().as_f64().unwrap();
+    let bound = e.get("entropy_bound_bits").unwrap().as_f64().unwrap();
+    assert!(coded_bits < nominal, "coded {coded_bits} vs nominal {nominal} payload bits");
+    assert!(coded_bits >= bound, "coded {coded_bits} beat the Shannon bound {bound}");
+    // The packed twin carries no entropy accounting.
+    assert_eq!(*find("gpt2like_t0@fp:4:b64").get("entropy").unwrap(), Json::Null);
+
+    // A simulate-only (16-bit baseline) spec has no index stream to code.
+    let err = conn.handle(
+        &Json::parse(r#"{"op":"load","family":"gpt2like","tier":"t0","entropy":true,"bits":16}"#)
+            .unwrap(),
+    );
+    assert!(err.opt("error").is_some(), "baseline spec must not code: {err:?}");
+}
+
+#[test]
 fn stats_reports_policy_identity() {
     use kbitscale::tune::{PolicyEntry, TunedPolicy};
     let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
@@ -840,6 +904,7 @@ fn stats_reports_policy_identity() {
             dtype: DataType::Fp,
             block: Some(64),
             stage_bits: None,
+            entropy: false,
             metric: 0.5,
             total_bits: 4.25e5,
             bits_per_param: 4.25,

@@ -36,6 +36,7 @@ fn quick_cfg() -> TuneConfig {
         dtypes: vec![DataType::Fp],
         blocks: vec![Some(64)],
         stage_mixes: false,
+        entropy: false,
         suite: EvalSuite::Ppl,
         eval: EvalConfig { ppl_sequences: 4, zs_examples: 4 },
         threads: 2,
@@ -53,6 +54,7 @@ fn entry(
         dtype: DataType::Fp,
         block: Some(64),
         stage_bits,
+        entropy: false,
         metric,
         total_bits: bits_per_param * 1e5,
         bits_per_param,
@@ -119,6 +121,69 @@ fn search_emits_pareto_consistent_policy_on_the_zoo() {
             "round-trip changed the pick at budget {budget:?}"
         );
     }
+}
+
+#[test]
+fn entropy_search_puts_the_coded_twin_on_the_frontier_below_the_floor() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let rt = Runtime::cpu().unwrap();
+    let corpus = corpus(&manifest);
+    let loader = |f: &str, t: &str| -> anyhow::Result<Vec<(String, Tensor)>> {
+        Ok(init_params(manifest.tier(t)?, Family::get(f)?))
+    };
+    let targets = vec![TuneTarget::new("gpt2like", "t0")];
+    let mut cfg = quick_cfg();
+    cfg.bits = vec![4];
+    cfg.entropy = true;
+    let report =
+        tune::search(&rt, &manifest, &corpus, &loader, &targets, &cfg, None).unwrap();
+
+    // baseline + fp4 + its coded twin, all measured.
+    assert_eq!(report.points.len(), 3, "cells: {}", report.points.len());
+    assert_eq!(report.skipped, 0);
+    let point = |k: &str| {
+        report
+            .points
+            .iter()
+            .find(|p| p.candidate.key() == k)
+            .unwrap_or_else(|| panic!("{k} not measured"))
+    };
+    let packed = point("fp:4:b64");
+    let coded = point("fp:4:b64#ec");
+
+    // Lossless coding: the exact metric of the packed twin, with the
+    // *measured* total bits strictly below it — the coded 4-bit variant
+    // lands under the fixed-k floor packing can never cross.
+    assert_eq!(coded.metric, packed.metric, "entropy coding must be lossless");
+    assert!(
+        coded.total_bits < packed.total_bits,
+        "coded {} vs packed {} measured bits",
+        coded.total_bits,
+        packed.total_bits
+    );
+    assert!(
+        coded.bits_per_param < packed.bits_per_param,
+        "coded {} vs packed {} bits/param",
+        coded.bits_per_param,
+        packed.bits_per_param
+    );
+
+    // Equal metric at strictly fewer bits dominates: the coded twin is
+    // the frontier's 4-bit point, the packed spelling is not.
+    let policy = &report.policy;
+    policy.validate().expect("entropy search produced a dominated policy entry");
+    let keys: Vec<String> = policy.entries.iter().map(PolicyEntry::key).collect();
+    assert!(keys.iter().any(|k| k == "fp:4:b64#ec"), "frontier: {keys:?}");
+    assert!(!keys.iter().any(|k| k == "fp:4:b64"), "dominated twin kept: {keys:?}");
+
+    // The coded entry round-trips through the policy artifact and keeps
+    // its deploy shape (`entropy` survives serialization).
+    let json = policy.to_json();
+    let reloaded = TunedPolicy::from_json(&json).unwrap();
+    assert_eq!(&reloaded, policy);
+    let ec = reloaded.entries.iter().find(|e| e.key() == "fp:4:b64#ec").unwrap();
+    assert!(ec.entropy);
+    assert!(ec.plan_request().entropy);
 }
 
 #[test]

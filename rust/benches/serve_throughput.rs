@@ -40,6 +40,11 @@
 //!   a 3-worker fleet behind the `fleet::` router, under the **same
 //!   total byte budget** (split per worker), so the horizontal-scaling
 //!   win of the router tier is measured rather than asserted.
+//! * **precision governor** — bare-keyed scoring through a governed
+//!   fleet at the 16-bit steady state, then a synthetic p99 spike
+//!   triggers one live demote (pre-warm included in the measured tick
+//!   cost) and the same traffic is re-measured on the 4-bit target; an
+//!   immediate re-tick inside the cooldown must apply zero migrations.
 //!
 //! Init-only parameters are used (throughput does not depend on training),
 //! so this bench needs artifacts but no checkpoints.
@@ -599,6 +604,117 @@ fn main() -> anyhow::Result<()> {
                 snap.insert("fleet_3v1_speedup".to_string(), Json::Num(rps / base_rps.max(1e-9)));
             }
         }
+    }
+
+    // --- precision governor: live demote under synthetic pressure -------
+    println!();
+    {
+        use kbitscale::fleet::{Fleet, FleetConn, FleetOpts, ManualClock, WorkerSpec};
+        use kbitscale::tune::{PolicyEntry, TunedPolicy};
+        use std::sync::Arc;
+
+        let rt_gov: &'static Runtime = Box::leak(Box::new(Runtime::cpu()?));
+        let manifest_gov: &'static Manifest = Box::leak(Box::new(manifest.clone()));
+        let tier = manifest_gov.tier("t0")?;
+        let entry = |bits: usize, metric: f64, bpp: f64| PolicyEntry {
+            bits,
+            dtype: DataType::Fp,
+            block: Some(64),
+            stage_bits: None,
+            entropy: false,
+            metric,
+            total_bits: bpp * tier.param_count as f64,
+            bits_per_param: bpp,
+        };
+        let policy = TunedPolicy {
+            suite: "ppl".into(),
+            tuned_on: vec!["gpt2like_t0".into()],
+            entries: vec![entry(4, 0.55, 4.25), entry(16, 0.60, 16.0)],
+            classes: Default::default(),
+        };
+        let reg: &'static ModelRegistry<'static> = Box::leak(Box::new(ModelRegistry::new(
+            rt_gov,
+            manifest_gov,
+            make_loader(manifest_gov),
+        )));
+        reg.load("gpt2like", "t0", QuantSpec::new(DataType::Fp, 16, None))?;
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?.to_string();
+        let wo: &'static ServeOpts = Box::leak(Box::new(ServeOpts {
+            workers: 2,
+            flush: Duration::from_millis(1),
+            batching: true,
+            max_conns: None,
+            io_timeout: Some(Duration::from_secs(30)),
+        }));
+        std::thread::spawn(move || {
+            let _ = serve_listener(reg, listener, wo);
+        });
+
+        // Manual clock: the spike, the tick, and the cooldown re-tick are
+        // deterministic rather than wall-time dependent.
+        let clock = Arc::new(ManualClock::new(0));
+        let fleet = Fleet::new(
+            manifest_gov,
+            vec![WorkerSpec { addr, budget: None }],
+            Some(policy),
+            FleetOpts {
+                probe_interval: Duration::from_secs(60),
+                push_policy: false,
+                govern: true,
+                target_p99_ms: 50.0,
+                cooldown_ms: 1_000,
+                ..FleetOpts::default()
+            },
+        )
+        .with_clock(clock);
+        fleet.probe();
+        let mut conn = FleetConn::new(&fleet);
+        let req =
+            Json::parse(r#"{"op":"score","model":"gpt2like_t0","tokens":[1,5,9,2,7,4,8,3]}"#)?;
+        let mut governed_p50 = |n: usize| -> anyhow::Result<f64> {
+            let mut lats: Vec<f64> = Vec::with_capacity(n);
+            for _ in 0..n {
+                let t = Instant::now();
+                let resp = conn.handle(&req);
+                anyhow::ensure!(resp.opt("error").is_none(), "governed score failed: {resp:?}");
+                lats.push(t.elapsed().as_secs_f64() * 1e3);
+            }
+            lats.sort_by(|a, b| a.total_cmp(b));
+            Ok(lats[(lats.len() - 1) / 2])
+        };
+        let p50_steady = governed_p50(32)?;
+        // Synthetic spike at twice the target p99: one governed demote.
+        // The tick's wall time is the full cutover cost, 4-bit pre-warm
+        // load included (traffic only moves after the load lands).
+        for _ in 0..16 {
+            fleet.telemetry().record_router(100.0);
+        }
+        let t = Instant::now();
+        let decisions = fleet.govern_tick();
+        let demote_tick_ms = t.elapsed().as_secs_f64() * 1e3;
+        anyhow::ensure!(decisions.len() == 1, "expected one demote, got {decisions:?}");
+        let p50_demoted = governed_p50(32)?;
+        let flaps = fleet.govern_tick().len();
+        println!(
+            "governor: steady 16-bit p50 {p50_steady:.2} ms | demote tick (incl. pre-warm) \
+             {demote_tick_ms:.1} ms -> {} | demoted 4-bit p50 {p50_demoted:.2} ms | \
+             migrations on immediate re-tick (cooldown): {flaps}",
+            decisions[0].to
+        );
+        snap.insert(
+            "governor".to_string(),
+            Json::obj(vec![
+                ("p50_steady_ms", Json::Num(p50_steady)),
+                ("p50_demoted_ms", Json::Num(p50_demoted)),
+                ("demote_tick_ms", Json::Num(demote_tick_ms)),
+                ("migrations", Json::Num(decisions.len() as f64)),
+                ("flaps_in_cooldown", Json::Num(flaps as f64)),
+            ]),
+        );
+        // The fleet's own latency accounting for the governed traffic
+        // (the same block `{"op":"stats"}` reports).
+        snap.insert("latency".to_string(), fleet.telemetry().to_json());
     }
 
     if let Some(path) = json_path {

@@ -67,6 +67,8 @@ const LOCK_CLASSES: &[(&str, &str)] = &[
     ("param_cache", "coordinator.params"),
     ("params_cache", "coordinator.params"),
     ("CACHE", "quant.codebooks"),
+    ("window", "fleet.telemetry"),
+    ("govstate", "fleet.governor"),
 ];
 
 /// Receivers whose `.lock()` is not a Mutex (stdio handles).
@@ -772,6 +774,37 @@ mod tests {
         assert!(lint("quant/packing.rs", index).is_empty(), "the gate names one quant file");
         let unwrap = "fn f(v: Vec<u32>) { v.first().unwrap(); }";
         assert!(lint("quant/entropy.rs", unwrap).iter().any(|f| f.rule == RULE_PANIC));
+    }
+
+    #[test]
+    fn governor_and_telemetry_are_on_the_network_path() {
+        // fleet/governor.rs acts on worker responses and fleet/telemetry.rs
+        // aggregates untrusted request timings — both ride the fleet/
+        // prefix gate, so panic paths are findings there too.
+        let index = "fn f(v: &[u32], i: usize) -> u32 { v[i] }";
+        let unwrap = "fn f(v: Vec<u32>) { v.first().unwrap(); }";
+        for file in ["fleet/governor.rs", "fleet/telemetry.rs"] {
+            assert!(
+                lint(file, index).iter().any(|f| f.rule == RULE_PANIC),
+                "unchecked indexing in {file} must be flagged"
+            );
+            assert!(
+                lint(file, unwrap).iter().any(|f| f.rule == RULE_PANIC),
+                "unwrap in {file} must be flagged"
+            );
+        }
+        // Their mutexes are registered lock classes: single acquires
+        // pass, and the governor's state nesting under the telemetry
+        // window would be an undeclared edge.
+        let single = "fn f(&self) { let g = self.govstate.lock().unwrap(); }";
+        assert!(lint("fleet/governor.rs", single).iter().all(|f| f.rule != RULE_LOCK));
+        let nested = "fn f(&self) { let g = self.window.lock().unwrap(); let h = self.govstate.lock().unwrap(); }";
+        assert!(
+            lint("fleet/telemetry.rs", nested)
+                .iter()
+                .any(|f| f.rule == RULE_LOCK && f.msg.contains("fleet.telemetry")),
+            "telemetry -> governor nesting is not a declared edge"
+        );
     }
 
     #[test]

@@ -603,6 +603,9 @@ fn cmd_fleet(raw: &[String]) -> Result<()> {
             .opt("io-timeout-secs", Some("30"), "read/write timeout on client and worker sockets (0 = off)")
             .opt("probe-secs", Some("2"), "health/residency probe interval in seconds")
             .flag("no-push-policy", "report policy skew instead of healing it")
+            .flag("govern", "enable the live precision governor (promote/demote along the frontier)")
+            .opt("target-p99-ms", Some("250"), "governor p99 latency target in milliseconds")
+            .opt("cooldown-ms", Some("10000"), "governor per-model migration cooldown in milliseconds")
             .opt("tcp", Some("127.0.0.1:7979"), "router listen address"),
     );
     let args = spec.parse(raw)?;
@@ -669,10 +672,17 @@ fn cmd_fleet(raw: &[String]) -> Result<()> {
         listeners.push(listener);
     }
 
+    let target_p99_ms = args.f64("target-p99-ms")?;
+    if !target_p99_ms.is_finite() || target_p99_ms <= 0.0 {
+        bail!("--target-p99-ms must be a finite number > 0");
+    }
     let mut opts = crate::fleet::FleetOpts {
         io_timeout,
         probe_interval: std::time::Duration::from_secs(args.usize("probe-secs")?.max(1) as u64),
         push_policy: !args.flag("no-push-policy"),
+        govern: args.flag("govern"),
+        target_p99_ms,
+        cooldown_ms: args.usize("cooldown-ms")? as u64,
         ..crate::fleet::FleetOpts::default()
     };
     match args.usize("workers")? {
@@ -693,6 +703,14 @@ fn cmd_fleet(raw: &[String]) -> Result<()> {
         fleet.topology().len(),
         if fleet.has_policy() { "active" } else { "none" }
     );
+    let gov_cfg = fleet.governor().config();
+    if gov_cfg.enabled {
+        log::info!(
+            "fleet governor: target p99 {:.1} ms, cooldown {} ms",
+            gov_cfg.target_p99_ms,
+            gov_cfg.cooldown_ms
+        );
+    }
     std::thread::scope(|s| -> Result<()> {
         for (reg, listener) in registries.iter().zip(listeners) {
             let wo = &worker_opts;

@@ -1,0 +1,642 @@
+//! Live precision governor: a bitrate manager for the fleet.
+//!
+//! `TunedPolicy` is measured at tune time and — without this module —
+//! frozen at load time. The governor makes precision a *runtime*
+//! decision: it watches the fleet's sliding-window p99 latency
+//! ([`super::telemetry`]), per-worker headroom, and queue depth, and
+//! migrates traffic along the measured Pareto frontier — **demoting**
+//! a hot model to a lower-bit variant (3-bit, `#ec`) when p99 runs
+//! over target, **promoting** back up the frontier when latency is
+//! comfortably under target and some worker has headroom for the
+//! larger variant.
+//!
+//! Safety properties, by construction:
+//!
+//! * **No flapping.** Every applied migration stamps the model's
+//!   `last_change`; [`decide`] returns `None` for that model until
+//!   `cooldown_ms` has elapsed, so a promote can never be followed by
+//!   a demote of the same model inside one cooldown window. A
+//!   hysteresis dead band (`promote_ratio`) separates the demote
+//!   threshold (p99 > target) from the promote threshold
+//!   (p99 < target × ratio), so a p99 sitting *near* target moves
+//!   nothing.
+//! * **Load-then-route.** A migration first replays an existing-keyed
+//!   `{"op":"load"}` on the chosen worker (the same replay the
+//!   router's failover path uses) and only switches the routing
+//!   target after that load succeeds — traffic never scores through a
+//!   cold load, and a failed pre-warm leaves the old target serving.
+//! * **Bit identity.** The governor only changes *which* registry key
+//!   bare-model traffic resolves to; each key still loads through the
+//!   deterministic quantize path, so scores for a given key are
+//!   bit-identical to a statically loaded instance of that key.
+//!
+//! Decisions are kept in a bounded log and exposed (with targets and
+//! a telemetry snapshot) through `{"op":"governor"}` on the router.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::placement::place_load;
+use super::router::{load_request_for_key, split_model_key};
+use super::topology::{WorkerClient, WorkerView};
+use super::Fleet;
+use crate::models::manifest::TierManifest;
+use crate::tune::PolicyEntry;
+use crate::util::json::Json;
+
+/// Most recent decisions retained for `{"op":"governor"}` status.
+const LOG_CAP: usize = 64;
+
+/// Governor tuning knobs (set at fleet build from CLI flags, mutable
+/// at runtime via `{"op":"governor","config":...}`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GovernorConfig {
+    /// Master switch; a disabled governor observes but never migrates.
+    pub enabled: bool,
+    /// Demote when windowed p99 exceeds this (ms).
+    pub target_p99_ms: f64,
+    /// Promote only when p99 < `target_p99_ms * promote_ratio` — the
+    /// hysteresis dead band between the two thresholds.
+    pub promote_ratio: f64,
+    /// Minimum ms between migrations of the same model (anti-flap).
+    pub cooldown_ms: u64,
+    /// Minimum in-window samples before any decision (cold windows
+    /// carry no signal).
+    pub min_samples: usize,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> Self {
+        GovernorConfig {
+            enabled: false,
+            target_p99_ms: 250.0,
+            promote_ratio: 0.5,
+            cooldown_ms: 10_000,
+            min_samples: 8,
+        }
+    }
+}
+
+/// What [`decide`] saw for one model at one tick.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Observation {
+    pub now_ms: u64,
+    /// Windowed p99 of routed scoring traffic (ms).
+    pub p99_ms: f64,
+    /// Samples inside the window (decision basis size).
+    pub in_window: usize,
+    /// When this model last migrated, if ever.
+    pub last_change_ms: Option<u64>,
+    /// Index of the model's current target in the policy's frontier
+    /// entries (ascending bits-per-param).
+    pub current_idx: usize,
+    /// Largest single-worker packed-byte headroom in the fleet.
+    pub headroom: usize,
+}
+
+/// A migration verdict: the frontier-entry index to move to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Move up-frontier to `entries[idx]` (more bits, better metric).
+    Promote(usize),
+    /// Move down-frontier to `entries[idx]` (fewer bits, cheaper).
+    Demote(usize),
+}
+
+/// One applied (or attempted) migration, for the status log.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decision {
+    /// `"promote"`, `"demote"`, or `"prewarm-failed"`.
+    pub action: String,
+    /// Bare model key (`family_tier`) being governed.
+    pub model: String,
+    /// Full registry key traffic resolved to before.
+    pub from: String,
+    /// Full registry key traffic resolves to after.
+    pub to: String,
+    /// Worker the target variant was pre-warmed on.
+    pub worker: usize,
+    /// Human-readable trigger (thresholds and measured p99).
+    pub reason: String,
+    /// Governor-clock timestamp of the decision.
+    pub at_ms: u64,
+}
+
+impl Decision {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("action", Json::str(&self.action)),
+            ("model", Json::str(&self.model)),
+            ("from", Json::str(&self.from)),
+            ("to", Json::str(&self.to)),
+            ("worker", Json::num(self.worker as f64)),
+            ("reason", Json::str(&self.reason)),
+            ("at_ms", Json::num(self.at_ms as f64)),
+        ])
+    }
+}
+
+/// The pure decision function: everything time- and policy-dependent
+/// comes in through `cfg`/`obs`, so tests drive it with a simulated
+/// clock and synthetic pressure. `entries` is the frontier in
+/// ascending bits-per-param order (the [`crate::tune::TunedPolicy`]
+/// invariant).
+///
+/// Anti-flap is structural: any `last_change_ms` within
+/// `cooldown_ms` of `now_ms` returns `None` before either threshold
+/// is even consulted, so two migrations of one model can never land
+/// inside one cooldown window.
+pub fn decide(
+    cfg: &GovernorConfig,
+    obs: &Observation,
+    entries: &[PolicyEntry],
+    tier: &TierManifest,
+) -> Option<Verdict> {
+    if !cfg.enabled || obs.in_window < cfg.min_samples {
+        return None;
+    }
+    if let Some(last) = obs.last_change_ms {
+        if obs.now_ms < last.saturating_add(cfg.cooldown_ms) {
+            return None;
+        }
+    }
+    let applicable = |e: &PolicyEntry| match &e.stage_bits {
+        None => true,
+        Some(v) => v.len() == tier.stages.len(),
+    };
+    if obs.p99_ms > cfg.target_p99_ms {
+        // Under pressure: nearest applicable entry below the current
+        // one (smallest step down the frontier that sheds bytes).
+        return (0..obs.current_idx)
+            .rev()
+            .find(|&i| entries.get(i).is_some_and(&applicable))
+            .map(Verdict::Demote);
+    }
+    if obs.p99_ms < cfg.target_p99_ms * cfg.promote_ratio {
+        // Comfortable: next applicable entry up the frontier whose
+        // footprint fits the roomiest worker (load-then-route needs
+        // the bytes *before* traffic moves).
+        return (obs.current_idx + 1..entries.len())
+            .find(|&i| {
+                entries
+                    .get(i)
+                    .is_some_and(|e| applicable(e) && e.estimated_model_bytes(tier) <= obs.headroom)
+            })
+            .map(Verdict::Promote);
+    }
+    None
+}
+
+/// Full registry key the frontier entry resolves to for `model`
+/// (exactly the spelling `load_auto`/placement use).
+pub(crate) fn entry_key(model: &str, e: &PolicyEntry) -> Option<String> {
+    let spec = e.spec().ok()?;
+    Some(format!("{model}@{}{}", spec.key(), e.plan_request().suffix()))
+}
+
+/// Mutable governor state behind one mutex (lock class
+/// `fleet.governor`; never held across worker I/O).
+struct GovState {
+    config: GovernorConfig,
+    /// Per-model timestamp of the last applied migration (cooldown).
+    last_change: BTreeMap<String, u64>,
+    /// Routing targets: bare model key (or `model|class`) → full
+    /// registry key bare-keyed traffic resolves to.
+    targets: BTreeMap<String, String>,
+    /// Bounded recent-decision log, oldest first.
+    log: VecDeque<Decision>,
+}
+
+/// The fleet's precision governor: shared by the background prober
+/// (which calls [`Governor::tick`] every probe round) and every
+/// router connection (which consults [`Governor::target_for`] on
+/// bare-keyed scoring and serves `{"op":"governor"}`).
+pub struct Governor {
+    govstate: Mutex<GovState>,
+}
+
+impl Governor {
+    pub fn new(config: GovernorConfig) -> Governor {
+        Governor {
+            govstate: Mutex::new(GovState {
+                config,
+                last_change: BTreeMap::new(),
+                targets: BTreeMap::new(),
+                log: VecDeque::new(),
+            }),
+        }
+    }
+
+    /// Current config (a copy; mutation goes through [`Governor::configure`]).
+    pub fn config(&self) -> GovernorConfig {
+        self.govstate.lock().unwrap().config.clone()
+    }
+
+    /// Apply a partial config update (`None` fields keep their value).
+    /// Returns the resulting config.
+    pub fn configure(
+        &self,
+        enabled: Option<bool>,
+        target_p99_ms: Option<f64>,
+        cooldown_ms: Option<u64>,
+        promote_ratio: Option<f64>,
+        min_samples: Option<usize>,
+    ) -> GovernorConfig {
+        let mut g = self.govstate.lock().unwrap();
+        if let Some(v) = enabled {
+            g.config.enabled = v;
+        }
+        if let Some(v) = target_p99_ms {
+            g.config.target_p99_ms = v;
+        }
+        if let Some(v) = cooldown_ms {
+            g.config.cooldown_ms = v;
+        }
+        if let Some(v) = promote_ratio {
+            g.config.promote_ratio = v;
+        }
+        if let Some(v) = min_samples {
+            g.config.min_samples = v;
+        }
+        g.config.clone()
+    }
+
+    /// The full registry key bare-model traffic should resolve to, if
+    /// the governor has installed one. Class-tagged requests check
+    /// the `model|class` target first, then the model-wide one.
+    pub fn target_for(&self, model: &str, class: Option<&str>) -> Option<String> {
+        let g = self.govstate.lock().unwrap();
+        if let Some(c) = class {
+            if let Some(t) = g.targets.get(&format!("{model}|{c}")) {
+                return Some(t.clone());
+            }
+        }
+        g.targets.get(model).cloned()
+    }
+
+    /// Status for `{"op":"governor"}`: config, current targets, and
+    /// the recent-decision log (telemetry is appended by the router,
+    /// which owns the [`super::telemetry::FleetTelemetry`] handle).
+    pub fn status_json(&self) -> Json {
+        let g = self.govstate.lock().unwrap();
+        let targets: BTreeMap<String, Json> =
+            g.targets.iter().map(|(k, v)| (k.clone(), Json::str(v))).collect();
+        Json::obj(vec![
+            ("enabled", Json::Bool(g.config.enabled)),
+            ("target_p99_ms", Json::num(g.config.target_p99_ms)),
+            ("promote_ratio", Json::num(g.config.promote_ratio)),
+            ("cooldown_ms", Json::num(g.config.cooldown_ms as f64)),
+            ("min_samples", Json::num(g.config.min_samples as f64)),
+            ("targets", Json::Obj(targets)),
+            ("decisions", Json::Arr(g.log.iter().map(Decision::to_json).collect())),
+        ])
+    }
+
+    /// One governor round over every model with resident variants in
+    /// the fleet: observe, decide, pre-warm, and only then retarget.
+    /// Returns the migrations applied this round. Called by the
+    /// background prober after each probe; tests call it directly for
+    /// deterministic rounds.
+    pub fn tick(&self, fleet: &Fleet) -> Vec<Decision> {
+        let now = fleet.telemetry().now_ms();
+        let (cfg, last_change, targets) = {
+            let g = self.govstate.lock().unwrap();
+            (g.config.clone(), g.last_change.clone(), g.targets.clone())
+        };
+        if !cfg.enabled {
+            return Vec::new();
+        }
+        let Some(policy) = fleet.policy() else {
+            return Vec::new();
+        };
+        let router_snap = fleet.telemetry().router_snapshot();
+        let workers = fleet.topology().snapshot();
+        // Every bare model key with at least one resident variant is
+        // governed; explicit-keyed traffic is untouched either way.
+        let mut models: Vec<String> = workers
+            .iter()
+            .flat_map(|w| w.resident.iter())
+            .filter_map(|k| k.split_once('@').map(|(m, _)| m.to_string()))
+            .collect();
+        models.sort();
+        models.dedup();
+        let mut applied = Vec::new();
+        for model in models {
+            let Ok((_, tier_name)) = split_model_key(&fleet.manifest, &model) else {
+                continue;
+            };
+            let Ok(tier) = fleet.manifest.tier(&tier_name) else {
+                continue;
+            };
+            let keys: Vec<Option<String>> =
+                policy.entries.iter().map(|e| entry_key(&model, e)).collect();
+            // Current target: the installed one, else the best (highest
+            // frontier index) variant resident anywhere in the fleet.
+            let current_key = targets.get(&model).cloned().or_else(|| {
+                keys.iter()
+                    .rev()
+                    .flatten()
+                    .find(|k| workers.iter().any(|w| w.up && w.resident.contains(k.as_str())))
+                    .cloned()
+            });
+            let Some(current_key) = current_key else {
+                continue;
+            };
+            let Some(current_idx) =
+                keys.iter().position(|k| k.as_deref() == Some(current_key.as_str()))
+            else {
+                continue;
+            };
+            let headroom =
+                workers.iter().filter(|w| w.up).map(|w| w.headroom()).max().unwrap_or(0);
+            let obs = Observation {
+                now_ms: now,
+                p99_ms: router_snap.p99_ms,
+                in_window: router_snap.in_window,
+                last_change_ms: last_change.get(&model).copied(),
+                current_idx,
+                headroom,
+            };
+            let Some(verdict) = decide(&cfg, &obs, &policy.entries, tier) else {
+                continue;
+            };
+            let (to_idx, action, reason) = match verdict {
+                Verdict::Demote(i) => (
+                    i,
+                    "demote",
+                    format!(
+                        "p99 {:.1}ms > target {:.1}ms over {} samples",
+                        router_snap.p99_ms, cfg.target_p99_ms, router_snap.in_window
+                    ),
+                ),
+                Verdict::Promote(i) => (
+                    i,
+                    "promote",
+                    format!(
+                        "p99 {:.1}ms < {:.1}ms and headroom {} fits",
+                        router_snap.p99_ms,
+                        cfg.target_p99_ms * cfg.promote_ratio,
+                        headroom
+                    ),
+                ),
+            };
+            let Some(Some(to_key)) = keys.get(to_idx).cloned() else {
+                continue;
+            };
+            let est =
+                policy.entries.get(to_idx).map(|e| e.estimated_model_bytes(tier)).unwrap_or(0);
+            let Ok(worker_id) = place_load(&workers, &to_key, est) else {
+                continue;
+            };
+            match prewarm(fleet, &workers, worker_id, &to_key) {
+                Ok(()) => {
+                    let d = Decision {
+                        action: action.to_string(),
+                        model: model.clone(),
+                        from: current_key,
+                        to: to_key.clone(),
+                        worker: worker_id,
+                        reason,
+                        at_ms: now,
+                    };
+                    {
+                        let mut g = self.govstate.lock().unwrap();
+                        g.targets.insert(model.clone(), to_key.clone());
+                        g.last_change.insert(model.clone(), now);
+                        g.log.push_back(d.clone());
+                        while g.log.len() > LOG_CAP {
+                            g.log.pop_front();
+                        }
+                    }
+                    applied.push(d);
+                }
+                Err(err) => {
+                    // Load-then-route: a failed pre-warm changes
+                    // nothing — old target keeps serving, no cooldown
+                    // stamp, only a log entry for the operator.
+                    let d = Decision {
+                        action: "prewarm-failed".to_string(),
+                        model: model.clone(),
+                        from: current_key,
+                        to: to_key,
+                        worker: worker_id,
+                        reason: err.to_string(),
+                        at_ms: now,
+                    };
+                    let mut g = self.govstate.lock().unwrap();
+                    g.log.push_back(d);
+                    while g.log.len() > LOG_CAP {
+                        g.log.pop_front();
+                    }
+                }
+            }
+        }
+        applied
+    }
+}
+
+/// Replay an existing-keyed load of `key` on `worker_id` and record
+/// the new residency — the same key-replay seam the router's failover
+/// uses, so the variant that comes up is bit-identical to any other
+/// load of that key.
+fn prewarm(fleet: &Fleet, workers: &[WorkerView], worker_id: usize, key: &str) -> Result<()> {
+    let view = workers
+        .iter()
+        .find(|w| w.id == worker_id)
+        .ok_or_else(|| anyhow!("worker {worker_id} not in roster"))?;
+    if view.resident.contains(key) {
+        return Ok(()); // already warm: nothing to load
+    }
+    let req = load_request_for_key(&fleet.manifest, key)?;
+    let mut client = WorkerClient::connect(&view.addr, fleet.opts.io_timeout)?;
+    let resp = client.request(&req)?;
+    if let Some(err) = resp.opt("error") {
+        bail!("worker {} rejected pre-warm of {key}: {}", view.addr, err.dump());
+    }
+    fleet.topology().note_loaded(worker_id, key);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::manifest::{ParamInfo, StageManifest, StageParamRef, TierManifest};
+    use crate::quant::DataType;
+
+    fn entry(bits: usize, stage_bits: Option<Vec<usize>>, metric: f64, bpp: f64) -> PolicyEntry {
+        PolicyEntry {
+            bits,
+            dtype: DataType::Fp,
+            block: Some(64),
+            stage_bits,
+            entropy: false,
+            metric,
+            total_bits: bpp * 1e5,
+            bits_per_param: bpp,
+        }
+    }
+
+    fn tier(n_stages: usize) -> TierManifest {
+        let stages = (0..n_stages)
+            .map(|i| StageManifest {
+                name: format!("s{i}"),
+                hlo: format!("fwd_{i}.hlo.txt"),
+                outputs: if i + 1 == n_stages { 2 } else { 1 },
+                params: vec![StageParamRef { source: "embed".into(), layers: None }],
+            })
+            .collect();
+        TierManifest {
+            name: "t0".into(),
+            d_model: 32,
+            n_layer: 2,
+            n_head: 2,
+            d_ff: 128,
+            vocab: 512,
+            seq: 64,
+            batch_train: 8,
+            batch_eval: 16,
+            param_count: 100_000,
+            params: vec![ParamInfo { name: "embed".into(), shape: vec![512, 32] }],
+            quantized_params: vec![],
+            fwd_hlo: "fwd.hlo.txt".into(),
+            train_hlo: "train.hlo.txt".into(),
+            acts_hlo: None,
+            stages,
+        }
+    }
+
+    fn frontier() -> Vec<PolicyEntry> {
+        vec![
+            entry(3, None, 0.40, 3.25),
+            entry(4, None, 0.55, 4.25),
+            entry(16, None, 0.60, 16.0),
+        ]
+    }
+
+    fn cfg() -> GovernorConfig {
+        GovernorConfig {
+            enabled: true,
+            target_p99_ms: 100.0,
+            promote_ratio: 0.5,
+            cooldown_ms: 5_000,
+            min_samples: 4,
+        }
+    }
+
+    fn obs(now_ms: u64, p99_ms: f64, current_idx: usize, headroom: usize) -> Observation {
+        Observation {
+            now_ms,
+            p99_ms,
+            in_window: 16,
+            last_change_ms: None,
+            current_idx,
+            headroom,
+        }
+    }
+
+    /// Estimated bytes of the 16-bit entry on the test tier.
+    fn bytes16() -> usize {
+        entry(16, None, 0.60, 16.0).estimated_model_bytes(&tier(0))
+    }
+
+    #[test]
+    fn promotes_under_headroom_when_p99_comfortable() {
+        let v = decide(&cfg(), &obs(0, 10.0, 1, bytes16()), &frontier(), &tier(0));
+        assert_eq!(v, Some(Verdict::Promote(2)), "fast p99 + room → next entry up");
+        // Without headroom for the 16-bit entry, no promotion happens.
+        let v = decide(&cfg(), &obs(0, 10.0, 1, bytes16() - 1), &frontier(), &tier(0));
+        assert_eq!(v, None, "promotion must fit the roomiest worker");
+        // Already at the top of the frontier: nowhere to go.
+        let v = decide(&cfg(), &obs(0, 10.0, 2, usize::MAX / 2), &frontier(), &tier(0));
+        assert_eq!(v, None);
+    }
+
+    #[test]
+    fn demotes_under_p99_pressure() {
+        let v = decide(&cfg(), &obs(0, 500.0, 2, 0), &frontier(), &tier(0));
+        assert_eq!(v, Some(Verdict::Demote(1)), "pressure → nearest entry down");
+        // Already at the bottom: nothing below to demote to.
+        let v = decide(&cfg(), &obs(0, 500.0, 0, 0), &frontier(), &tier(0));
+        assert_eq!(v, None);
+    }
+
+    #[test]
+    fn hysteresis_dead_band_moves_nothing() {
+        // p99 between target*ratio (50) and target (100): hold.
+        for p99 in [50.0, 75.0, 100.0] {
+            let v = decide(&cfg(), &obs(0, p99, 1, usize::MAX / 2), &frontier(), &tier(0));
+            assert_eq!(v, None, "p99 {p99} is inside the dead band");
+        }
+    }
+
+    #[test]
+    fn cooldown_blocks_flapping_by_construction() {
+        let c = cfg();
+        // A migration at t=1000 silences both directions until t=6000.
+        for (p99, current) in [(500.0, 2), (10.0, 0)] {
+            let mut o = obs(1_500, p99, current, usize::MAX / 2);
+            o.last_change_ms = Some(1_000);
+            assert_eq!(decide(&c, &o, &frontier(), &tier(0)), None, "inside cooldown");
+            o.now_ms = 1_000 + c.cooldown_ms;
+            assert!(decide(&c, &o, &frontier(), &tier(0)).is_some(), "cooldown elapsed");
+        }
+    }
+
+    #[test]
+    fn gates_on_enabled_and_sample_count() {
+        let mut c = cfg();
+        c.enabled = false;
+        assert_eq!(decide(&c, &obs(0, 500.0, 2, 0), &frontier(), &tier(0)), None);
+        let c = cfg();
+        let mut o = obs(0, 500.0, 2, 0);
+        o.in_window = c.min_samples - 1;
+        assert_eq!(decide(&c, &o, &frontier(), &tier(0)), None, "cold window carries no signal");
+    }
+
+    #[test]
+    fn stage_mismatched_entries_are_skipped() {
+        let mut entries = frontier();
+        entries.insert(2, entry(4, Some(vec![16, 4]), 0.58, 9.0));
+        // Monolithic tier under pressure at the 16-bit entry (idx 3):
+        // the staged idx-2 entry must be skipped, landing on idx 1.
+        let v = decide(&cfg(), &obs(0, 500.0, 3, 0), &entries, &tier(0));
+        assert_eq!(v, Some(Verdict::Demote(1)));
+        // On a 2-stage tier the staged entry is a valid demote step.
+        let v = decide(&cfg(), &obs(0, 500.0, 3, 0), &entries, &tier(2));
+        assert_eq!(v, Some(Verdict::Demote(2)));
+    }
+
+    #[test]
+    fn class_targets_shadow_model_targets() {
+        let g = Governor::new(cfg());
+        {
+            let mut s = g.govstate.lock().unwrap();
+            s.targets.insert("m_t0".into(), "m_t0@fp:4:b64".into());
+            s.targets.insert("m_t0|chat".into(), "m_t0@fp:3:b64".into());
+        }
+        assert_eq!(g.target_for("m_t0", None).as_deref(), Some("m_t0@fp:4:b64"));
+        assert_eq!(g.target_for("m_t0", Some("chat")).as_deref(), Some("m_t0@fp:3:b64"));
+        assert_eq!(
+            g.target_for("m_t0", Some("batch")).as_deref(),
+            Some("m_t0@fp:4:b64"),
+            "unknown class falls back to the model-wide target"
+        );
+        assert_eq!(g.target_for("other", None), None);
+    }
+
+    #[test]
+    fn configure_is_partial_and_status_reflects_it() {
+        let g = Governor::new(GovernorConfig::default());
+        let c = g.configure(Some(true), Some(42.0), Some(1_234), None, None);
+        assert!(c.enabled);
+        assert_eq!(c.target_p99_ms, 42.0);
+        assert_eq!(c.cooldown_ms, 1_234);
+        assert_eq!(c.promote_ratio, GovernorConfig::default().promote_ratio, "untouched");
+        let j = g.status_json();
+        assert!(j.get("enabled").and_then(|v| v.as_bool()).unwrap());
+        assert_eq!(j.get("target_p99_ms").and_then(|v| v.as_f64()).unwrap(), 42.0);
+        assert!(j.get("decisions").and_then(|v| v.as_arr()).unwrap().is_empty());
+    }
+}

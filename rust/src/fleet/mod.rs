@@ -12,7 +12,7 @@
 //! cannot tell the router from a direct client, so any mix of routed and
 //! direct traffic stays valid.
 //!
-//! Three pieces, smallest state first:
+//! Five pieces, smallest state first:
 //!
 //! * [`topology`] — the worker roster: per-worker address + byte budget,
 //!   periodic `{"op":"ping"}`/`{"op":"stats"}` health and residency
@@ -24,6 +24,13 @@
 //!   tuned frontier pick, prefer workers where a frontier variant is
 //!   **already resident** (zero marginal bytes), and spill to the
 //!   next-best frontier entry when nothing fits anywhere.
+//! * [`telemetry`] — sliding-window p50/p99 latency histograms (router-
+//!   wide and per-worker) plus in-flight gauges, fed from the router's
+//!   request path and reported under `"latency"` in `{"op":"stats"}`.
+//! * [`governor`] — the live precision governor: watches telemetry and
+//!   headroom, and migrates bare-keyed traffic along the tuned Pareto
+//!   frontier (demote under p99 pressure, promote under headroom) with
+//!   pre-warm-before-cutover and a structural anti-flap cooldown.
 //! * [`router`] — the per-connection proxy loop: forwards ops to the
 //!   owning worker with retry-on-next-worker failover, scatters
 //!   multi-row `{"op":"score"}` requests across replicas and reassembles
@@ -44,16 +51,20 @@
 //! cached connection outvotes a probe-declared down mark), but
 //! fleet-wide `stats` reflects the prober's view.
 
+pub mod governor;
 pub mod placement;
 pub mod router;
+pub mod telemetry;
 pub mod topology;
 
+pub use governor::{Governor, GovernorConfig};
 pub use placement::{place_auto, place_load, replicas};
 pub use router::{serve_fleet, FleetConn};
+pub use telemetry::{Clock, FleetTelemetry, LatencySnapshot, ManualClock, WallClock};
 pub use topology::{Topology, WorkerClient, WorkerSpec, WorkerView};
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::models::manifest::Manifest;
@@ -85,6 +96,14 @@ pub struct FleetOpts {
     /// Stop accepting after this many client connections (tests and
     /// benches; `None` = serve forever).
     pub max_conns: Option<u64>,
+    /// Start with the precision governor enabled (`kbitscale fleet
+    /// --govern`); it can also be toggled live via `{"op":"governor"}`.
+    pub govern: bool,
+    /// Governor demote threshold: windowed p99 above this triggers a
+    /// down-frontier migration (`--target-p99-ms`).
+    pub target_p99_ms: f64,
+    /// Governor anti-flap cooldown between migrations of one model.
+    pub cooldown_ms: u64,
 }
 
 impl Default for FleetOpts {
@@ -95,6 +114,9 @@ impl Default for FleetOpts {
             probe_interval: Duration::from_secs(2),
             push_policy: true,
             max_conns: None,
+            govern: false,
+            target_p99_ms: 250.0,
+            cooldown_ms: 10_000,
         }
     }
 }
@@ -117,6 +139,12 @@ pub struct Fleet {
     pub opts: FleetOpts,
     /// Round-robin cursor spreading single-row scoring across replicas.
     rr: AtomicUsize,
+    /// Sliding-window latency + in-flight telemetry, fed by every
+    /// router connection, read by stats and the governor.
+    telemetry: FleetTelemetry,
+    /// The live precision governor (disabled unless
+    /// [`FleetOpts::govern`] or a runtime `{"op":"governor"}` enable).
+    governor: Governor,
 }
 
 impl Fleet {
@@ -126,19 +154,53 @@ impl Fleet {
         policy: Option<TunedPolicy>,
         opts: FleetOpts,
     ) -> Fleet {
+        let n_workers = workers.len();
         let topology = Topology::new(workers, opts.io_timeout);
+        let governor = Governor::new(GovernorConfig {
+            enabled: opts.govern,
+            target_p99_ms: opts.target_p99_ms,
+            cooldown_ms: opts.cooldown_ms,
+            ..GovernorConfig::default()
+        });
         Fleet {
             topology,
             manifest: manifest.clone(),
             policy: Mutex::new(policy),
             opts,
             rr: AtomicUsize::new(0),
+            telemetry: FleetTelemetry::new(n_workers, Arc::new(WallClock::new())),
+            governor,
         }
+    }
+
+    /// Rebuild telemetry on an injected clock (tests drive a
+    /// [`ManualClock`] so window eviction and governor cooldowns are
+    /// deterministic). Call before any samples are recorded.
+    pub fn with_clock(mut self, clock: Arc<dyn Clock>) -> Fleet {
+        self.telemetry = FleetTelemetry::new(self.topology.len(), clock);
+        self
     }
 
     /// The worker roster (health, budgets, residency).
     pub fn topology(&self) -> &Topology {
         &self.topology
+    }
+
+    /// Latency windows and in-flight gauges for this fleet.
+    pub fn telemetry(&self) -> &FleetTelemetry {
+        &self.telemetry
+    }
+
+    /// The precision governor (status, config, routing targets).
+    pub fn governor(&self) -> &Governor {
+        &self.governor
+    }
+
+    /// One governor round: observe telemetry, decide, pre-warm, and
+    /// retarget. Called by the background prober after each probe
+    /// round; tests call it directly for deterministic decisions.
+    pub fn govern_tick(&self) -> Vec<governor::Decision> {
+        self.governor.tick(self)
     }
 
     /// The router's current policy (startup `--policy`, or the last

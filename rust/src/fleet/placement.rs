@@ -219,6 +219,7 @@ mod tests {
                 entry(4, None, 0.55, 4.25),
                 entry(16, None, 0.60, 16.0),
             ],
+            classes: Default::default(),
         }
     }
 

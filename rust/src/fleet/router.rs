@@ -23,8 +23,13 @@
 //!   `{"done":true,"error":...}` line (already-emitted chunks stand, the
 //!   connection survives, and the next request fails over).
 //! * **`info`/`stats`/`models`/`policy`/`unload`** — aggregated
-//!   fleet-wide; `stats` additionally reports per-worker state and a
-//!   `"policy_skew"` flag from the workers' policy fingerprints.
+//!   fleet-wide; `stats` additionally reports per-worker state, a
+//!   `"policy_skew"` flag from the workers' policy fingerprints, and
+//!   the router's latency/in-flight telemetry.
+//! * **`governor`** — status/config of the fleet's precision governor
+//!   ([`super::governor`]); bare-keyed (and `"class"`-tagged) scoring
+//!   resolves through its installed targets, explicit variant keys
+//!   never do.
 
 use std::collections::{HashMap, HashSet};
 use std::io::BufReader;
@@ -73,10 +78,20 @@ impl<'f> FleetConn<'f> {
 
     fn dispatch(&mut self, req: &Json, sink: Option<&mut EmitSink<'_>>) -> Json {
         self.requests += 1;
-        match self.try_handle(req, sink) {
+        // Scoring ops feed the router-side latency window the governor
+        // watches; errors count too (a timing-out fleet should look
+        // slow, not idle).
+        let timed =
+            matches!(req.opt("op").and_then(|v| v.as_str().ok()), Some("score") | Some("choose"));
+        let started = timed.then(std::time::Instant::now);
+        let resp = match self.try_handle(req, sink) {
             Ok(resp) => resp,
             Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+        };
+        if let Some(t0) = started {
+            self.fleet.telemetry().record_router((t0.elapsed().as_secs_f64() * 1e3) as f32);
         }
+        resp
     }
 
     fn try_handle(&mut self, req: &Json, sink: Option<&mut EmitSink<'_>>) -> Result<Json> {
@@ -100,8 +115,9 @@ impl<'f> FleetConn<'f> {
             "tune" => self.op_tune(req),
             "score" => self.op_score(req, sink),
             "choose" => self.op_choose(req),
+            "governor" => self.op_governor(req),
             op => bail!(
-                "unknown op {op:?} (ping|info|models|stats|load|unload|score|choose|tune|policy)"
+                "unknown op {op:?} (ping|info|models|stats|governor|load|unload|score|choose|tune|policy)"
             ),
         }
     }
@@ -159,7 +175,16 @@ impl<'f> FleetConn<'f> {
     /// stale cached connection — safe to resend, every op routed through
     /// here is idempotent).
     fn request_worker(&mut self, id: usize, req: &Json) -> Result<Json> {
-        self.with_reconnect(id, &mut |c| c.request(req), &mut || true)
+        // Per-worker telemetry brackets every forwarded request: an
+        // in-flight gauge (queue-depth proxy) plus the round-trip into
+        // that worker's latency window.
+        let tel = self.fleet.telemetry();
+        tel.inflight_enter(id);
+        let t0 = std::time::Instant::now();
+        let r = self.with_reconnect(id, &mut |c| c.request(req), &mut || true);
+        tel.record_worker(id, (t0.elapsed().as_secs_f64() * 1e3) as f32);
+        tel.inflight_exit(id);
+        r
     }
 
     fn ensure_client(&mut self, id: usize) -> Result<()> {
@@ -257,6 +282,53 @@ impl<'f> FleetConn<'f> {
         Ok(self.current.as_ref().map(|(_, k)| k.clone()))
     }
 
+    /// Governor/class-aware key resolution for scoring. Only a **bare**
+    /// model key is ever rewritten — an explicit full variant key
+    /// (contains `@`) routes verbatim, so explicitly keyed scoring
+    /// stays bit-identical no matter what the governor is doing. A
+    /// bare key resolves, in order: the governor's installed target
+    /// (`model|class` first, then model-wide), then the policy's
+    /// per-class frontier for `"class"`-tagged requests, then the key
+    /// as given (worker-side default resolution).
+    fn resolve_governed(&self, req: &Json, key: Option<String>) -> Result<Option<String>> {
+        let Some(key) = key else { return Ok(None) };
+        if key.contains('@') {
+            return Ok(Some(key));
+        }
+        let class = match req.opt("class") {
+            Some(v) => Some(v.as_str()?.to_string()),
+            None => None,
+        };
+        if let Some(t) = self.fleet.governor().target_for(&key, class.as_deref()) {
+            return Ok(Some(t));
+        }
+        if let Some(c) = class.as_deref() {
+            if let Some(t) = self.class_frontier_key(&key, c)? {
+                return Ok(Some(t));
+            }
+        }
+        Ok(Some(key))
+    }
+
+    /// Resolve a class-tagged bare key against the policy's class
+    /// frontier: best entry that fits the roomiest up worker. `None`
+    /// when no policy is installed or it has no frontier for `class`
+    /// (the request then falls back to worker-side resolution, same
+    /// as an untagged one).
+    fn class_frontier_key(&self, model: &str, class: &str) -> Result<Option<String>> {
+        let Some(policy) = self.fleet.policy() else { return Ok(None) };
+        if !policy.classes.contains_key(class) {
+            return Ok(None);
+        }
+        let (_, tier_name) = split_model_key(&self.fleet.manifest, model)?;
+        let tier = self.fleet.manifest.tier(&tier_name)?;
+        let snap = self.fleet.topology().snapshot();
+        let headroom = snap.iter().filter(|w| w.up).map(WorkerView::headroom).max();
+        Ok(policy
+            .pick_for_class(Some(class), tier, headroom)
+            .and_then(|e| super::governor::entry_key(model, e)))
+    }
+
     // -- scoring ---------------------------------------------------------
 
     fn op_score(&mut self, req: &Json, sink: Option<&mut EmitSink<'_>>) -> Result<Json> {
@@ -264,6 +336,7 @@ impl<'f> FleetConn<'f> {
             bail!(r#"give "tokens" or "rows", not both"#);
         }
         let key = self.target_key(req)?;
+        let key = self.resolve_governed(req, key)?;
         let stream = match req.opt("stream") {
             Some(v) => v.as_bool()?,
             None => false,
@@ -294,6 +367,7 @@ impl<'f> FleetConn<'f> {
 
     fn op_choose(&mut self, req: &Json) -> Result<Json> {
         let key = self.target_key(req)?;
+        let key = self.resolve_governed(req, key)?;
         self.forward_scoring(req, key.as_deref(), false, None)
     }
 
@@ -979,7 +1053,42 @@ impl<'f> FleetConn<'f> {
             ("workers_total", Json::num(snap.len() as f64)),
             ("resident_bytes_total", Json::num(total)),
             ("policy_skew", Json::Bool(idents.len() > 1)),
+            // Router-side latency/in-flight telemetry — present whether
+            // or not the governor is enabled, so `stats` is enough to
+            // inspect fleet latency.
+            ("latency", self.fleet.telemetry().to_json()),
         ]))
+    }
+
+    /// `{"op":"governor"}`: status (config + targets + recent decisions
+    /// + live telemetry), with optional config fields applied first —
+    /// `"enable"`/`"disable"` (bool), `"target_p99_ms"`, `"cooldown_ms"`.
+    fn op_governor(&mut self, req: &Json) -> Result<Json> {
+        let enable = match (req.opt("enable"), req.opt("disable")) {
+            (Some(_), Some(_)) => bail!(r#"give "enable" or "disable", not both"#),
+            (Some(v), None) => Some(v.as_bool()?),
+            (None, Some(v)) => Some(!v.as_bool()?),
+            (None, None) => None,
+        };
+        let target_p99_ms = match req.opt("target_p99_ms") {
+            Some(v) => {
+                let t = v.as_f64()?;
+                if !t.is_finite() || t <= 0.0 {
+                    bail!("target_p99_ms must be a finite number > 0");
+                }
+                Some(t)
+            }
+            None => None,
+        };
+        let cooldown_ms = match req.opt("cooldown_ms") {
+            Some(v) => Some(v.as_usize()? as u64),
+            None => None,
+        };
+        if enable.is_some() || target_p99_ms.is_some() || cooldown_ms.is_some() {
+            self.fleet.governor().configure(enable, target_p99_ms, cooldown_ms, None, None);
+        }
+        let status = self.fleet.governor().status_json();
+        Ok(with_field(&status, "telemetry", self.fleet.telemetry().to_json()))
     }
 
     fn op_info(&mut self, req: &Json) -> Result<Json> {
@@ -1385,10 +1494,15 @@ pub fn serve_fleet(fleet: &Fleet, listener: TcpListener) -> Result<()> {
     let accept_err = std::thread::scope(|s| {
         let prober = s.spawn(|| {
             fleet.probe();
+            fleet.govern_tick();
             // Condvar sleep: a tripped latch ends the wait (and the
             // prober) immediately instead of after a polling slice.
             while !stop.wait_timeout(opts.probe_interval) {
                 fleet.probe();
+                // Governor rounds ride the probe cadence: decisions see
+                // a roster at most one probe old, and a disabled
+                // governor makes this a no-op.
+                fleet.govern_tick();
             }
         });
         let mut handles = Vec::with_capacity(workers);

@@ -1,0 +1,390 @@
+//! Fleet telemetry: sliding-window latency tracking and in-flight
+//! counters for the precision governor and `{"op":"stats"}`.
+//!
+//! Every router-handled `score`/`choose` request records one latency
+//! sample into a [`LatencyWindow`] (router-wide) and one into the
+//! window of the worker that served it, alongside a per-worker
+//! in-flight gauge (queue depth proxy). Windows are time-bounded
+//! (default 10 s) *and* sample-capped, so a traffic spike cannot grow
+//! them without bound; percentiles are nearest-rank over the samples
+//! still inside the window.
+//!
+//! Time never comes from the ambient wall clock directly: everything
+//! reads through the [`Clock`] trait so tests drive a [`ManualClock`]
+//! and governor decisions (cooldowns, window eviction) are exactly
+//! reproducible. Production uses [`WallClock`], a monotonic
+//! `Instant`-anchored millisecond counter.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Millisecond time source. Monotonic; the zero point is arbitrary
+/// (process start for [`WallClock`], whatever the test sets for
+/// [`ManualClock`]).
+pub trait Clock: Send + Sync {
+    /// Milliseconds since this clock's epoch.
+    fn now_ms(&self) -> u64;
+}
+
+/// Production clock: milliseconds since the clock was created,
+/// measured on the monotonic [`Instant`] timeline (immune to wall
+/// clock steps).
+pub struct WallClock {
+    start: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { start: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ms(&self) -> u64 {
+        self.start.elapsed().as_millis() as u64
+    }
+}
+
+/// Test clock: time advances only when the test says so, making
+/// window eviction and governor cooldowns deterministic.
+pub struct ManualClock {
+    ms: AtomicU64,
+}
+
+impl ManualClock {
+    pub fn new(start_ms: u64) -> ManualClock {
+        ManualClock { ms: AtomicU64::new(start_ms) }
+    }
+
+    /// Advance the clock by `delta_ms`.
+    pub fn advance(&self, delta_ms: u64) {
+        self.ms.fetch_add(delta_ms, Ordering::SeqCst);
+    }
+
+    /// Jump the clock to an absolute time.
+    pub fn set(&self, now_ms: u64) {
+        self.ms.store(now_ms, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now_ms(&self) -> u64 {
+        self.ms.load(Ordering::SeqCst)
+    }
+}
+
+/// Mutable interior of a [`LatencyWindow`]: timestamped samples in
+/// arrival order plus a lifetime counter.
+struct WindowState {
+    /// `(at_ms, latency_ms)` pairs, oldest first.
+    samples: VecDeque<(u64, f32)>,
+    /// Lifetime sample count (never evicted).
+    total: u64,
+}
+
+/// A sliding-window latency recorder: keeps the last `cap` samples no
+/// older than `window_ms`, and answers nearest-rank p50/p99 over
+/// whatever is still inside the window.
+pub struct LatencyWindow {
+    window: Mutex<WindowState>,
+    window_ms: u64,
+    cap: usize,
+}
+
+/// Point-in-time percentile summary of one [`LatencyWindow`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct LatencySnapshot {
+    /// Lifetime samples recorded (monotone; survives eviction).
+    pub count: u64,
+    /// Samples inside the window right now (the percentile basis).
+    pub in_window: usize,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    /// Window width the percentiles were computed over.
+    pub window_ms: u64,
+}
+
+impl LatencySnapshot {
+    /// The `latency` block shape used by `{"op":"stats"}` and
+    /// `{"op":"governor"}`.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("in_window", Json::num(self.in_window as f64)),
+            ("p50_ms", Json::num(self.p50_ms)),
+            ("p99_ms", Json::num(self.p99_ms)),
+            ("window_ms", Json::num(self.window_ms as f64)),
+        ])
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted slice; 0.0 on an
+/// empty window (callers gate on `in_window` before acting).
+fn percentile(sorted: &[f32], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+    let idx = rank.clamp(1, sorted.len()) - 1;
+    sorted.get(idx).copied().unwrap_or(0.0) as f64
+}
+
+impl LatencyWindow {
+    pub fn new(window_ms: u64, cap: usize) -> LatencyWindow {
+        LatencyWindow {
+            window: Mutex::new(WindowState { samples: VecDeque::new(), total: 0 }),
+            window_ms,
+            cap,
+        }
+    }
+
+    /// Record one latency sample observed at `now_ms`.
+    pub fn record(&self, now_ms: u64, latency_ms: f32) {
+        let mut w = self.window.lock().unwrap();
+        w.total += 1;
+        w.samples.push_back((now_ms, latency_ms));
+        while w.samples.len() > self.cap {
+            w.samples.pop_front();
+        }
+        let cutoff = now_ms.saturating_sub(self.window_ms);
+        while w.samples.front().map(|(at, _)| *at < cutoff).unwrap_or(false) {
+            w.samples.pop_front();
+        }
+    }
+
+    /// Percentiles over the samples still inside the window at
+    /// `now_ms`. Does not mutate the window (eviction happens on
+    /// record), so stale samples are filtered, not dropped.
+    pub fn snapshot(&self, now_ms: u64) -> LatencySnapshot {
+        let w = self.window.lock().unwrap();
+        let cutoff = now_ms.saturating_sub(self.window_ms);
+        let mut vals: Vec<f32> =
+            w.samples.iter().filter(|(at, _)| *at >= cutoff).map(|(_, v)| *v).collect();
+        vals.sort_by(f32::total_cmp);
+        LatencySnapshot {
+            count: w.total,
+            in_window: vals.len(),
+            p50_ms: percentile(&vals, 50.0),
+            p99_ms: percentile(&vals, 99.0),
+            window_ms: self.window_ms,
+        }
+    }
+}
+
+/// Default sliding-window width for fleet latency tracking.
+pub const DEFAULT_WINDOW_MS: u64 = 10_000;
+/// Default per-window sample cap (bounds memory under traffic spikes).
+pub const DEFAULT_WINDOW_CAP: usize = 4096;
+
+/// All latency/queue-depth state for one fleet: a router-wide window,
+/// one window per worker, and per-worker in-flight gauges. Shared by
+/// every router connection and the governor (all methods take
+/// `&self`).
+pub struct FleetTelemetry {
+    clock: Arc<dyn Clock>,
+    router: LatencyWindow,
+    workers: Vec<LatencyWindow>,
+    inflight: Vec<AtomicUsize>,
+}
+
+impl FleetTelemetry {
+    pub fn new(n_workers: usize, clock: Arc<dyn Clock>) -> FleetTelemetry {
+        FleetTelemetry {
+            clock,
+            router: LatencyWindow::new(DEFAULT_WINDOW_MS, DEFAULT_WINDOW_CAP),
+            workers: (0..n_workers)
+                .map(|_| LatencyWindow::new(DEFAULT_WINDOW_MS, DEFAULT_WINDOW_CAP))
+                .collect(),
+            inflight: (0..n_workers).map(|_| AtomicUsize::new(0)).collect(),
+        }
+    }
+
+    /// Current time on this fleet's clock (ms).
+    pub fn now_ms(&self) -> u64 {
+        self.clock.now_ms()
+    }
+
+    /// Record one router-level request latency.
+    pub fn record_router(&self, latency_ms: f32) {
+        self.router.record(self.clock.now_ms(), latency_ms);
+    }
+
+    /// Record one request latency attributed to worker `id` (out-of-
+    /// range ids are ignored — the roster is fixed at fleet build).
+    pub fn record_worker(&self, id: usize, latency_ms: f32) {
+        if let Some(w) = self.workers.get(id) {
+            w.record(self.clock.now_ms(), latency_ms);
+        }
+    }
+
+    /// Bump worker `id`'s in-flight gauge (a request was dispatched).
+    pub fn inflight_enter(&self, id: usize) {
+        if let Some(g) = self.inflight.get(id) {
+            g.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Drop worker `id`'s in-flight gauge (the request finished,
+    /// successfully or not).
+    pub fn inflight_exit(&self, id: usize) {
+        if let Some(g) = self.inflight.get(id) {
+            // Saturating decrement: a mismatched exit must not wrap.
+            let _ = g.fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                Some(v.saturating_sub(1))
+            });
+        }
+    }
+
+    /// Requests currently in flight against worker `id`.
+    pub fn inflight(&self, id: usize) -> usize {
+        self.inflight.get(id).map(|g| g.load(Ordering::SeqCst)).unwrap_or(0)
+    }
+
+    /// Router-wide latency summary.
+    pub fn router_snapshot(&self) -> LatencySnapshot {
+        self.router.snapshot(self.clock.now_ms())
+    }
+
+    /// Latency summary for worker `id` (None when out of range).
+    pub fn worker_snapshot(&self, id: usize) -> Option<LatencySnapshot> {
+        self.workers.get(id).map(|w| w.snapshot(self.clock.now_ms()))
+    }
+
+    /// The fleet-level `latency` block for `{"op":"stats"}`:
+    /// router-wide percentiles plus one entry per worker with its
+    /// in-flight depth.
+    pub fn to_json(&self) -> Json {
+        let workers: Vec<Json> = self
+            .workers
+            .iter()
+            .enumerate()
+            .map(|(id, w)| {
+                let snap = w.snapshot(self.clock.now_ms());
+                let mut obj = match snap.to_json() {
+                    Json::Obj(m) => m,
+                    _ => Default::default(),
+                };
+                obj.insert("worker".into(), Json::num(id as f64));
+                obj.insert("inflight".into(), Json::num(self.inflight(id) as f64));
+                Json::Obj(obj)
+            })
+            .collect();
+        Json::obj(vec![
+            ("router", self.router_snapshot().to_json()),
+            ("workers", Json::Arr(workers)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_are_nearest_rank() {
+        let w = LatencyWindow::new(1_000, 64);
+        for v in 1..=100 {
+            w.record(10, v as f32);
+        }
+        let s = w.snapshot(10);
+        assert_eq!(s.in_window, 100);
+        assert_eq!(s.count, 100);
+        assert_eq!(s.p50_ms, 50.0, "nearest-rank p50 of 1..=100 is the 50th value");
+        assert_eq!(s.p99_ms, 99.0, "nearest-rank p99 of 1..=100 is the 99th value");
+        // A single sample is every percentile.
+        let w = LatencyWindow::new(1_000, 64);
+        w.record(0, 7.5);
+        let s = w.snapshot(0);
+        assert_eq!((s.p50_ms, s.p99_ms), (7.5, 7.5));
+    }
+
+    #[test]
+    fn empty_window_reports_zeros() {
+        let w = LatencyWindow::new(1_000, 64);
+        let s = w.snapshot(123);
+        assert_eq!((s.count, s.in_window), (0, 0));
+        assert_eq!((s.p50_ms, s.p99_ms), (0.0, 0.0));
+    }
+
+    #[test]
+    fn old_samples_age_out_of_the_window() {
+        let w = LatencyWindow::new(1_000, 64);
+        w.record(0, 100.0);
+        w.record(500, 200.0);
+        w.record(1_600, 10.0);
+        // At t=1600 the cutoff is 600: only the last sample remains.
+        let s = w.snapshot(1_600);
+        assert_eq!(s.in_window, 1, "samples older than window_ms must not count");
+        assert_eq!(s.p99_ms, 10.0);
+        assert_eq!(s.count, 3, "lifetime count survives eviction");
+        // Snapshot filtering is time-based even without a record call.
+        let s = w.snapshot(3_000);
+        assert_eq!(s.in_window, 0);
+    }
+
+    #[test]
+    fn sample_cap_bounds_memory() {
+        let w = LatencyWindow::new(u64::MAX / 2, 8);
+        for v in 0..100 {
+            w.record(v, v as f32);
+        }
+        let s = w.snapshot(100);
+        assert_eq!(s.in_window, 8, "cap evicts oldest samples");
+        assert_eq!(s.count, 100);
+        assert_eq!(s.p50_ms, 95.0, "survivors are the newest samples");
+    }
+
+    #[test]
+    fn manual_clock_drives_fleet_telemetry() {
+        let clock = Arc::new(ManualClock::new(0));
+        let t = FleetTelemetry::new(2, clock.clone());
+        t.record_worker(0, 5.0);
+        t.record_worker(1, 50.0);
+        t.record_worker(9, 1.0); // out of range: ignored
+        t.record_router(30.0);
+        assert_eq!(t.worker_snapshot(0).map(|s| s.in_window), Some(1));
+        assert_eq!(t.worker_snapshot(9).map(|s| s.in_window), None);
+        assert_eq!(t.router_snapshot().in_window, 1);
+        // Advance past the window: everything ages out.
+        clock.advance(DEFAULT_WINDOW_MS + 1);
+        assert_eq!(t.router_snapshot().in_window, 0);
+        assert_eq!(t.worker_snapshot(1).map(|s| s.in_window), Some(0));
+    }
+
+    #[test]
+    fn inflight_gauges_saturate_at_zero() {
+        let t = FleetTelemetry::new(1, Arc::new(ManualClock::new(0)));
+        t.inflight_enter(0);
+        t.inflight_enter(0);
+        assert_eq!(t.inflight(0), 2);
+        t.inflight_exit(0);
+        t.inflight_exit(0);
+        t.inflight_exit(0); // extra exit must not wrap
+        assert_eq!(t.inflight(0), 0);
+        assert_eq!(t.inflight(42), 0, "out-of-range gauge reads as idle");
+    }
+
+    #[test]
+    fn telemetry_json_shape() {
+        let t = FleetTelemetry::new(2, Arc::new(ManualClock::new(0)));
+        t.record_worker(0, 5.0);
+        t.inflight_enter(1);
+        let j = t.to_json();
+        assert!(j.get("router").and_then(|r| r.get("p99_ms")).is_ok());
+        let workers = j.get("workers").and_then(|w| w.as_arr()).unwrap();
+        assert_eq!(workers.len(), 2);
+        let w1 = &workers[1];
+        assert_eq!(w1.get("inflight").and_then(|v| v.as_f64()).unwrap(), 1.0);
+        assert_eq!(w1.get("worker").and_then(|v| v.as_f64()).unwrap(), 1.0);
+    }
+}

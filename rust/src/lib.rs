@@ -31,9 +31,9 @@
 //! | [`eval`] | perplexity + zero-shot evaluation harness, scored through execution plans |
 //! | [`coordinator`] | sweep grid, scheduler, worker pool, results store |
 //! | [`server`] | LRU/TTL-governed packed-model registry (monolithic, pipeline-sharded, fused-native, and entropy-coded `#ec` variants, per-stage mixed precision) + sharded score cache + concurrent micro-batched JSON-lines serving with chunked streaming responses, negotiated binary score frames (`server::frames`), and tuned-policy auto-loading |
-//! | [`fleet`] | multi-node serving tier: worker roster with health/residency probes, policy-aware placement, and a line-protocol router with scatter/gather scoring, streamed chunk reassembly (JSON lines or pass-through binary frames), and retry-on-next-worker failover |
+//! | [`fleet`] | multi-node serving tier: worker roster with health/residency probes, policy-aware placement, a line-protocol router with scatter/gather scoring, streamed chunk reassembly (JSON lines or pass-through binary frames), and retry-on-next-worker failover, plus sliding-window latency telemetry (`fleet::telemetry`) and a live precision governor (`fleet::governor`: demote/promote bare-keyed traffic along the tuned frontier with pre-warm-before-cutover and anti-flap cooldown) |
 //! | [`scaling`] | scaling curves, Pareto frontiers, bit-level optimality, correlations |
-//! | [`tune`] | precision autotuner: candidate search over bits × block × dtype × per-stage widths (plus entropy-coded `#ec` twins scored at their measured bits), calibration eval, Pareto-frontier `TunedPolicy` artifacts |
+//! | [`tune`] | precision autotuner: candidate search over bits × block × dtype × per-stage widths (plus entropy-coded `#ec` twins scored at their measured bits), calibration eval, Pareto-frontier `TunedPolicy` artifacts with optional per-workload-class frontiers |
 //! | [`report`] | ASCII figures and CSV emission for every paper table/figure |
 //! | [`bench_support`] | shared harness for the `benches/` reproduction binaries |
 //! | [`analysis`] | in-tree static analysis (`kbitscale lint`): panic-path, unsafe-discipline, lock-order, and protocol-doc rules over a hand-rolled lexer |

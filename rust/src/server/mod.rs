@@ -53,6 +53,13 @@
 //!                                       chunked streaming: one line per
 //!                                       scored chunk, then a terminal
 //!                                       {"done":true,...} summary line
+//! → {"op":"score", ..., "class":"chat"} workload-class tag: auto-resolved
+//!                                       models pick from the policy's
+//!                                       per-class frontier entries when
+//!                                       present (unknown classes fall
+//!                                       back to the global frontier);
+//!                                       explicit "model" keys are never
+//!                                       rewritten
 //! → {"op":"choose", "context":[...], "choices":[[..],[..]]}
 //!                                       length-normalized best choice
 //! → {"op":"ping"}                       liveness probe: {"ok":true} plus
@@ -92,11 +99,22 @@
 //! → {"op":"stats"}                      governance: per-variant resident
 //!                                       bytes (per plan stage) / hits /
 //!                                       idle / pinned, budget, evictions,
-//!                                       cache counters; entropy-coded
-//!                                       variants also report coded vs
-//!                                       nominal payload bits and the
-//!                                       Shannon bound of their index
-//!                                       streams
+//!                                       cache counters, and a "latency"
+//!                                       block (sliding-window p50/p99 +
+//!                                       request counts for scoring ops);
+//!                                       entropy-coded variants also
+//!                                       report coded vs nominal payload
+//!                                       bits and the Shannon bound of
+//!                                       their index streams
+//! → {"op":"governor"}                   precision-governor status: on a
+//!                                       worker, {"governor":false} plus
+//!                                       its latency window; on a fleet
+//!                                       router, targets + recent
+//!                                       promote/demote decisions +
+//!                                       per-worker telemetry, with
+//!                                       "enable"/"disable",
+//!                                       "target_p99_ms", "cooldown_ms"
+//!                                       config fields accepted
 //! → {"op":"load", "auto":true}          policy-driven load: the active
 //!                                       tuned policy picks spec/stage_bits
 //!                                       under the byte-budget headroom
@@ -363,10 +381,21 @@ fn handle_request<'rt>(
     sink: Option<&mut EmitSink<'_>>,
 ) -> Json {
     core.requests += 1;
-    match try_handle(registry, batcher, core, req, sink) {
+    // Scoring ops feed the stats/governor latency window; metadata ops
+    // (ping, stats itself) stay out so probes don't dilute the signal.
+    let timed = matches!(
+        req.opt("op").and_then(|v| v.as_str().ok()),
+        Some("score") | Some("choose")
+    );
+    let started = timed.then(std::time::Instant::now);
+    let resp = match try_handle(registry, batcher, core, req, sink) {
         Ok(resp) => resp,
         Err(e) => Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+    };
+    if let Some(t0) = started {
+        registry.record_latency((t0.elapsed().as_secs_f64() * 1e3) as f32);
     }
+    resp
 }
 
 /// Resolve the model a request addresses: explicit `"model"` field, then
@@ -705,6 +734,10 @@ fn try_handle<'rt>(
             let (_, cache_hits, cache_misses, cache_rows) = cache_counters(registry);
             Ok(Json::obj(vec![
                 ("models", Json::Arr(variants)),
+                // Sliding-window request latency (score/choose ops) — the
+                // same histogram the fleet governor consumes, inspectable
+                // whether or not a governor is driving this worker.
+                ("latency", registry.latency_snapshot().to_json()),
                 ("resident_bytes_total", Json::num(registry.resident_bytes_total() as f64)),
                 (
                     "budget_bytes",
@@ -747,6 +780,16 @@ fn try_handle<'rt>(
                 ),
             ]))
         }
+        "governor" => {
+            // Workers do not run a governor — the fleet router does. A
+            // worker answers with `"governor": false` plus its local
+            // latency window so the op degrades gracefully when pointed
+            // at a single worker instead of a router.
+            Ok(Json::obj(vec![
+                ("governor", Json::Bool(false)),
+                ("latency", registry.latency_snapshot().to_json()),
+            ]))
+        }
         "unload" => {
             let key = req.get("model")?.as_str()?;
             let full = registry.unload(key)?;
@@ -772,7 +815,11 @@ fn try_handle<'rt>(
                     }
                 }
                 let (family, tier) = model_identity(registry, core, req)?;
-                let (h, entry) = registry.load_auto(&family, &tier)?;
+                let class = match req.opt("class") {
+                    Some(v) => Some(v.as_str()?.to_string()),
+                    None => None,
+                };
+                let (h, entry) = registry.load_auto_class(&family, &tier, class.as_deref())?;
                 core.current = Some(h.key());
                 return Ok(Json::obj(vec![
                     ("model", Json::str(h.key())),
@@ -1041,7 +1088,7 @@ fn try_handle<'rt>(
             )]))
         }
         op => bail!(
-            "unknown op {op:?} (ping|info|models|stats|load|unload|score|choose|tune|policy)"
+            "unknown op {op:?} (ping|info|models|stats|governor|load|unload|score|choose|tune|policy)"
         ),
     }
 }

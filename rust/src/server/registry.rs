@@ -46,6 +46,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::cache::ScoreCache;
 use crate::data::corpus::Corpus;
 use crate::eval::{EvalConfig, EvalResult, EvalSuite, Evaluator};
+use crate::fleet::telemetry::{Clock, LatencySnapshot, LatencyWindow, WallClock};
 use crate::models::manifest::{Manifest, TierManifest};
 use crate::quant::{self, EncodedParam, PackedParam, QuantSpec};
 use crate::runtime::native::{NativeModel, NativeParam};
@@ -544,6 +545,11 @@ pub struct ModelRegistry<'rt> {
     /// Reported by `{"op":"stats"}` so fleet-wide aggregation can name
     /// the artifact behind a policy-skew finding.
     policy_source: Mutex<Option<String>>,
+    /// Sliding-window scoring-request latency, reported in the
+    /// `{"op":"stats"}` `latency` block (inspectable with or without a
+    /// fleet governor in front of this worker).
+    latency: LatencyWindow,
+    latency_clock: WallClock,
 }
 
 impl<'rt> ModelRegistry<'rt> {
@@ -564,7 +570,23 @@ impl<'rt> ModelRegistry<'rt> {
             cache: None,
             policy: Mutex::new(None),
             policy_source: Mutex::new(None),
+            latency: LatencyWindow::new(
+                crate::fleet::telemetry::DEFAULT_WINDOW_MS,
+                crate::fleet::telemetry::DEFAULT_WINDOW_CAP,
+            ),
+            latency_clock: WallClock::new(),
         }
+    }
+
+    /// Record one scoring-request latency sample (the protocol layer
+    /// times `score`/`choose` handling).
+    pub fn record_latency(&self, latency_ms: f32) {
+        self.latency.record(self.latency_clock.now_ms(), latency_ms);
+    }
+
+    /// Percentile summary of recent scoring-request latency.
+    pub fn latency_snapshot(&self) -> LatencySnapshot {
+        self.latency.snapshot(self.latency_clock.now_ms())
     }
 
     /// Evict least-recently-used variants once total packed bytes exceed
@@ -668,6 +690,19 @@ impl<'rt> ModelRegistry<'rt> {
         family: &str,
         tier_name: &str,
     ) -> Result<(Arc<ModelHandle<'rt>>, PolicyEntry)> {
+        self.load_auto_class(family, tier_name, None)
+    }
+
+    /// [`ModelRegistry::load_auto`] resolved against a per-workload-class
+    /// frontier: when the active policy carries entries for `class`, the
+    /// resident probe and the fresh pick both use that class's frontier;
+    /// an unknown (or absent) class uses the global entries.
+    pub fn load_auto_class(
+        &self,
+        family: &str,
+        tier_name: &str,
+        class: Option<&str>,
+    ) -> Result<(Arc<ModelHandle<'rt>>, PolicyEntry)> {
         let policy = self.policy().ok_or_else(|| {
             anyhow!(
                 "no tuned policy active (start with --policy <file>, or install one \
@@ -680,6 +715,10 @@ impl<'rt> ModelRegistry<'rt> {
             None => true,
             Some(v) => v.len() == n_stages,
         };
+        let entries: &[PolicyEntry] = class
+            .and_then(|c| policy.classes.get(c))
+            .map(Vec::as_slice)
+            .unwrap_or(&policy.entries);
         // Best already-resident frontier entry (entries sort by metric
         // ascending, so scan in reverse). The probe must not touch
         // LRU/hit state — it may lose to a better fresh pick, and a
@@ -688,14 +727,14 @@ impl<'rt> ModelRegistry<'rt> {
         let model_key = format!("{family}_{tier_name}");
         let resident = {
             let map = self.models.lock().unwrap();
-            policy.entries.iter().rev().filter(|e| applicable(e)).find_map(|e| {
+            entries.iter().rev().filter(|e| applicable(e)).find_map(|e| {
                 let spec = e.spec().ok()?;
                 let key = format!("{model_key}@{}{}", spec.key(), e.plan_request().suffix());
                 map.get(&key).map(|r| (key, r.handle.clone(), e.clone()))
             })
         };
         let headroom = self.headroom();
-        let fresh = policy.pick(tier, headroom).cloned();
+        let fresh = policy.pick_for_class(class, tier, headroom).cloned();
         let entry = match (resident, fresh) {
             (Some((_, _, r)), Some(f))
                 if crate::util::order::nan_last_cmp(f.metric, r.metric).is_gt() =>
@@ -714,8 +753,7 @@ impl<'rt> ModelRegistry<'rt> {
                 // The hint must only cite entries pick() could ever
                 // choose for this tier (stage-count applicable), or an
                 // operator chases a byte figure that can never fit.
-                let smallest = policy
-                    .entries
+                let smallest = entries
                     .iter()
                     .filter(|e| applicable(e))
                     .map(|e| e.estimated_model_bytes(tier))

@@ -571,6 +571,40 @@ pub fn fit_curves(points: &[TunePoint]) -> Vec<Curve> {
 /// A config's footprint keeps its **largest** measured bits-per-param,
 /// so budget estimates stay conservative.
 pub fn frontier_policy(points: &[TunePoint], suite: &str) -> TunedPolicy {
+    let all: Vec<&TunePoint> = points.iter().collect();
+    let entries = distill_frontier(&all);
+    let mut tuned_on: Vec<String> =
+        points.iter().map(|p| format!("{}_{}", p.family, p.tier)).collect();
+    tuned_on.sort();
+    tuned_on.dedup();
+    // Per-workload-class frontiers: each model *family* is a workload
+    // class (families differ in data mix and architecture, the axes
+    // capability loss is sensitive to), so its points distill into a
+    // class-specific frontier. With a single family the class frontier
+    // would equal the global one, so it is omitted and the artifact
+    // stays byte-identical to a pre-class policy.
+    let mut by_family: BTreeMap<String, Vec<&TunePoint>> = BTreeMap::new();
+    for p in points {
+        by_family.entry(p.family.clone()).or_default().push(p);
+    }
+    let classes: BTreeMap<String, Vec<PolicyEntry>> = if by_family.len() >= 2 {
+        by_family
+            .into_iter()
+            .filter_map(|(family, pts)| {
+                let es = distill_frontier(&pts);
+                (!es.is_empty()).then_some((family, es))
+            })
+            .collect()
+    } else {
+        BTreeMap::new()
+    };
+    TunedPolicy { suite: suite.to_string(), tuned_on, entries, classes }
+}
+
+/// The frontier-distillation core shared by the global policy and each
+/// per-family class: per-model frontier extraction with mean-centered
+/// metrics, cross-model merge, and a final re-frontier pass.
+fn distill_frontier(points: &[&TunePoint]) -> Vec<PolicyEntry> {
     let entry_of = |p: &TunePoint| PolicyEntry {
         bits: p.candidate.spec.bits,
         dtype: p.candidate.spec.dtype,
@@ -583,9 +617,8 @@ pub fn frontier_policy(points: &[TunePoint], suite: &str) -> TunedPolicy {
     };
     let mut by_model: BTreeMap<String, Vec<&TunePoint>> = BTreeMap::new();
     for p in points {
-        by_model.entry(format!("{}_{}", p.family, p.tier)).or_default().push(p);
+        by_model.entry(format!("{}_{}", p.family, p.tier)).or_default().push(*p);
     }
-    let tuned_on: Vec<String> = by_model.keys().cloned().collect();
     struct Agg {
         centered_sum: f64,
         n: usize,
@@ -628,9 +661,7 @@ pub fn frontier_policy(points: &[TunePoint], suite: &str) -> TunedPolicy {
         })
         .collect();
     merged.sort_by(|a, b| nan_last_cmp(a.0, b.0).then(nan_last_cmp(b.1, a.1)));
-    let entries: Vec<PolicyEntry> =
-        scaling::pareto_frontier(&merged).into_iter().map(|(_, _, e)| e).collect();
-    TunedPolicy { suite: suite.to_string(), tuned_on, entries }
+    scaling::pareto_frontier(&merged).into_iter().map(|(_, _, e)| e).collect()
 }
 
 #[cfg(test)]

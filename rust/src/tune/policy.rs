@@ -15,6 +15,7 @@
 //! Pareto consistency on every load so a hand-edited file cannot smuggle
 //! a dominated entry back in.
 
+use std::collections::BTreeMap;
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
@@ -160,6 +161,60 @@ pub struct TunedPolicy {
     /// Frontier entries, sorted by `bits_per_param` ascending with
     /// strictly increasing metric (the Pareto invariant).
     pub entries: Vec<PolicyEntry>,
+    /// Optional per-workload-class frontiers (capability loss under
+    /// quantization is task-dependent): `{"op":"score"}` requests
+    /// tagged `"class":"name"` resolve against `classes["name"]` when
+    /// present, falling back to the global `entries` otherwise. Each
+    /// class frontier obeys the same Pareto invariant. Empty for
+    /// global-only policies — and omitted from the serialization, so
+    /// pre-class artifacts keep their fingerprint.
+    pub classes: BTreeMap<String, Vec<PolicyEntry>>,
+}
+
+/// The frontier-optimal entry of `entries` for `tier` under a byte
+/// budget — the shared selection core of [`TunedPolicy::pick`] and
+/// [`TunedPolicy::pick_for_class`].
+fn pick_from<'a>(
+    entries: &'a [PolicyEntry],
+    tier: &TierManifest,
+    budget_bytes: Option<usize>,
+) -> Option<&'a PolicyEntry> {
+    let n_stages = tier.stages.len();
+    entries
+        .iter()
+        .filter(|e| match &e.stage_bits {
+            None => true,
+            Some(v) => v.len() == n_stages,
+        })
+        .filter(|e| match budget_bytes {
+            None => true,
+            Some(b) => e.estimated_model_bytes(tier) <= b,
+        })
+        .max_by(|a, b| nan_last_cmp(a.metric, b.metric))
+}
+
+/// The Pareto-invariant check for one frontier (`label` names it in
+/// the error: the global frontier or a workload class).
+fn validate_entries(label: &str, entries: &[PolicyEntry]) -> Result<()> {
+    for w in entries.windows(2) {
+        let (a, b) = (&w[0], &w[1]);
+        if !(a.bits_per_param < b.bits_per_param) || !(a.metric < b.metric) {
+            bail!(
+                "{label} is not Pareto-consistent: {} ({:.3} bits/param, metric {:.4}) \
+                 vs {} ({:.3} bits/param, metric {:.4})",
+                a.key(),
+                a.bits_per_param,
+                a.metric,
+                b.key(),
+                b.bits_per_param,
+                b.metric
+            );
+        }
+    }
+    if entries.iter().any(|e| e.metric.is_nan() || !e.bits_per_param.is_finite()) {
+        bail!("{label} contains non-finite entries");
+    }
+    Ok(())
 }
 
 impl TunedPolicy {
@@ -169,42 +224,35 @@ impl TunedPolicy {
     /// not match the tier's declared stage count. Returns `None` when
     /// nothing fits.
     pub fn pick(&self, tier: &TierManifest, budget_bytes: Option<usize>) -> Option<&PolicyEntry> {
-        let n_stages = tier.stages.len();
-        self.entries
-            .iter()
-            .filter(|e| match &e.stage_bits {
-                None => true,
-                Some(v) => v.len() == n_stages,
-            })
-            .filter(|e| match budget_bytes {
-                None => true,
-                Some(b) => e.estimated_model_bytes(tier) <= b,
-            })
-            .max_by(|a, b| nan_last_cmp(a.metric, b.metric))
+        pick_from(&self.entries, tier, budget_bytes)
+    }
+
+    /// [`TunedPolicy::pick`] against a workload class's own frontier.
+    /// A class with no frontier of its own (or no class tag at all)
+    /// resolves against the global entries — tagging a request can
+    /// specialize the pick, never brick it.
+    pub fn pick_for_class(
+        &self,
+        class: Option<&str>,
+        tier: &TierManifest,
+        budget_bytes: Option<usize>,
+    ) -> Option<&PolicyEntry> {
+        let entries = class
+            .and_then(|c| self.classes.get(c))
+            .map(Vec::as_slice)
+            .unwrap_or(&self.entries);
+        pick_from(entries, tier, budget_bytes)
     }
 
     /// Check the Pareto invariant: entries sorted by `bits_per_param`
     /// ascending must have strictly increasing metric — otherwise some
     /// entry is dominated (same-or-more bits, same-or-less metric) and a
     /// budget exists at which `pick` could do strictly better smaller.
+    /// Every per-class frontier is held to the same invariant.
     pub fn validate(&self) -> Result<()> {
-        for w in self.entries.windows(2) {
-            let (a, b) = (&w[0], &w[1]);
-            if !(a.bits_per_param < b.bits_per_param) || !(a.metric < b.metric) {
-                bail!(
-                    "policy is not Pareto-consistent: {} ({:.3} bits/param, metric {:.4}) \
-                     vs {} ({:.3} bits/param, metric {:.4})",
-                    a.key(),
-                    a.bits_per_param,
-                    a.metric,
-                    b.key(),
-                    b.bits_per_param,
-                    b.metric
-                );
-            }
-        }
-        if self.entries.iter().any(|e| e.metric.is_nan() || !e.bits_per_param.is_finite()) {
-            bail!("policy contains non-finite entries");
+        validate_entries("policy", &self.entries)?;
+        for (class, entries) in &self.classes {
+            validate_entries(&format!("policy class {class:?}"), entries)?;
         }
         Ok(())
     }
@@ -221,7 +269,7 @@ impl TunedPolicy {
     }
 
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut pairs = vec![
             ("version", Json::num(1.0)),
             ("suite", Json::str(&self.suite)),
             (
@@ -232,13 +280,44 @@ impl TunedPolicy {
                 "entries",
                 Json::Arr(self.entries.iter().map(PolicyEntry::to_json).collect()),
             ),
-        ])
+        ];
+        // Emitted only when present: a global-only policy serializes
+        // exactly as it did before classes existed, keeping old
+        // artifacts' fingerprints (and fleet skew checks) stable.
+        if !self.classes.is_empty() {
+            let classes: BTreeMap<String, Json> = self
+                .classes
+                .iter()
+                .map(|(c, es)| {
+                    (c.clone(), Json::Arr(es.iter().map(PolicyEntry::to_json).collect()))
+                })
+                .collect();
+            pairs.push(("classes", Json::Obj(classes)));
+        }
+        Json::obj(pairs)
     }
 
     /// Parse a policy, re-checking the Pareto invariant — a hand-edited
     /// artifact (or a bad `{"op":"policy","set":...}`) must fail loudly,
     /// not serve dominated configs.
     pub fn from_json(j: &Json) -> Result<TunedPolicy> {
+        // Absent in policies written before per-class frontiers.
+        let classes = match j.opt("classes") {
+            None => BTreeMap::new(),
+            Some(v) => v
+                .as_obj()?
+                .iter()
+                .map(|(c, es)| {
+                    let entries = es
+                        .as_arr()
+                        .with_context(|| format!("class {c:?} frontier"))?
+                        .iter()
+                        .map(PolicyEntry::from_json)
+                        .collect::<Result<Vec<_>>>()?;
+                    Ok((c.clone(), entries))
+                })
+                .collect::<Result<BTreeMap<_, _>>>()?,
+        };
         let p = TunedPolicy {
             suite: j.get("suite")?.as_str()?.to_string(),
             tuned_on: j
@@ -253,6 +332,7 @@ impl TunedPolicy {
                 .iter()
                 .map(PolicyEntry::from_json)
                 .collect::<Result<Vec<_>>>()?,
+            classes,
         };
         p.validate()?;
         Ok(p)
@@ -336,6 +416,7 @@ mod tests {
                 entry(4, Some(vec![16, 4]), 0.58, 9.0),
                 entry(16, None, 0.60, 16.0),
             ],
+            classes: BTreeMap::new(),
         }
     }
 
@@ -450,5 +531,68 @@ mod tests {
         assert!(!legacy.contains("entropy"), "field not stripped: {legacy}");
         let parsed = TunedPolicy::from_json(&Json::parse(&legacy).unwrap()).unwrap();
         assert_eq!(parsed, policy());
+    }
+
+    /// The class-carrying fixture: `chat` has its own lower-bit-leaning
+    /// frontier, every other class falls back to the global entries.
+    fn classed_policy() -> TunedPolicy {
+        let mut p = policy();
+        p.classes.insert(
+            "chat".into(),
+            vec![entry(3, None, 0.45, 3.25), entry(4, None, 0.52, 4.25)],
+        );
+        p
+    }
+
+    #[test]
+    fn class_pick_uses_the_class_frontier_and_falls_back() {
+        let p = classed_policy();
+        let t = tier(0);
+        // Tagged with a known class: the class frontier's best pick.
+        assert_eq!(p.pick_for_class(Some("chat"), &t, None).unwrap().bits, 4);
+        assert_eq!(
+            p.pick_for_class(Some("chat"), &t, None).unwrap().metric,
+            0.52,
+            "class entry, not the global 4-bit entry"
+        );
+        // Unknown class / no class: the global frontier.
+        assert_eq!(p.pick_for_class(Some("batch"), &t, None).unwrap().bits, 16);
+        assert_eq!(p.pick_for_class(None, &t, None).unwrap().bits, 16);
+        // Budget pressure spills down the class frontier like the
+        // global one.
+        let bytes = |bpp: f64| (bpp * t.param_count as f64 / 8.0).ceil() as usize;
+        assert_eq!(p.pick_for_class(Some("chat"), &t, Some(bytes(3.25))).unwrap().bits, 3);
+        assert!(p.pick_for_class(Some("chat"), &t, Some(10)).is_none());
+    }
+
+    #[test]
+    fn classes_round_trip_and_are_validated() {
+        let p = classed_policy();
+        let parsed = TunedPolicy::from_json(&Json::parse(&p.to_json().dump()).unwrap()).unwrap();
+        assert_eq!(parsed, p);
+        // A dominated entry inside a class frontier fails validation
+        // just like one in the global frontier.
+        let mut bad = classed_policy();
+        if let Some(es) = bad.classes.get_mut("chat") {
+            es.push(entry(8, None, 0.1, 20.0));
+        }
+        let err = bad.validate().unwrap_err().to_string();
+        assert!(err.contains("chat"), "error should name the class: {err}");
+        assert!(TunedPolicy::from_json(&Json::parse(&bad.to_json().dump()).unwrap()).is_err());
+    }
+
+    #[test]
+    fn empty_classes_keep_legacy_serialization_and_fingerprint() {
+        let p = policy();
+        assert!(
+            !p.to_json().dump().contains("classes"),
+            "a global-only policy must serialize exactly as before classes existed"
+        );
+        // A classed policy changes the fingerprint (it *is* different
+        // content), and skew detection keys off exactly that.
+        assert_ne!(p.fingerprint(), classed_policy().fingerprint());
+        // Legacy artifact without the field parses to empty classes.
+        let parsed = TunedPolicy::from_json(&Json::parse(&p.to_json().dump()).unwrap()).unwrap();
+        assert!(parsed.classes.is_empty());
     }
 }

@@ -12,9 +12,10 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
 use std::time::Duration;
 
-use kbitscale::fleet::{serve_fleet, Fleet, FleetConn, FleetOpts, WorkerSpec};
+use kbitscale::fleet::{serve_fleet, Fleet, FleetConn, FleetOpts, ManualClock, WorkerSpec};
 use kbitscale::models::families::Family;
 use kbitscale::models::init::init_params;
 use kbitscale::models::manifest::Manifest;
@@ -397,6 +398,7 @@ fn test_policy(param_count: usize) -> TunedPolicy {
         suite: "ppl".into(),
         tuned_on: vec!["gpt2like_t0".into()],
         entries: vec![entry(4, 0.55, 4.25), entry(16, 0.60, 16.0)],
+        classes: Default::default(),
     }
 }
 
@@ -473,4 +475,250 @@ fn fleet_stats_detects_and_heals_policy_skew() {
     assert!(!resp.get("policy_skew").unwrap().as_bool().unwrap(), "{resp:?}");
     let stats = conn.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
     assert!(!stats.get("policy_skew").unwrap().as_bool().unwrap(), "{stats:?}");
+}
+
+#[test]
+fn governor_demotes_promotes_and_stays_bit_identical() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let policy = test_policy(manifest.tier("t0").unwrap().param_count);
+    let (reg_a, addr_a) = spawn_worker(None, None, None);
+    let (_reg_b, addr_b) = spawn_worker(None, None, None);
+    // Only the frontier-best 16-bit variant is resident at start — the
+    // governor's implicit initial target for the bare model key.
+    let key16 =
+        reg_a.load("gpt2like", "t0", QuantSpec::new(DataType::Fp, 16, None)).unwrap().key();
+
+    // Manual clock: window eviction and cooldowns advance only when the
+    // test says so, making every governor decision deterministic.
+    let clock = Arc::new(ManualClock::new(0));
+    let fleet = Fleet::new(
+        &manifest,
+        vec![WorkerSpec::parse(&addr_a).unwrap(), WorkerSpec::parse(&addr_b).unwrap()],
+        Some(policy),
+        FleetOpts {
+            io_timeout: Some(Duration::from_secs(10)),
+            probe_interval: Duration::from_secs(60),
+            push_policy: false,
+            govern: true,
+            target_p99_ms: 100.0,
+            cooldown_ms: 20_000,
+            ..FleetOpts::default()
+        },
+    )
+    .with_clock(clock.clone());
+    fleet.probe();
+    assert_eq!(fleet.topology().up_ids().len(), 2, "both workers must probe up");
+
+    // Cold window: below min_samples, the governor must not move.
+    assert!(fleet.govern_tick().is_empty(), "no samples -> no migrations");
+
+    // t=0: sustained p99 pressure -> one demote down the frontier, with
+    // the 4-bit target pre-warmed on a worker *before* traffic moves.
+    for _ in 0..16 {
+        fleet.telemetry().record_router(500.0);
+    }
+    let demote = fleet.govern_tick();
+    assert_eq!(demote.len(), 1, "{demote:?}");
+    assert_eq!(demote[0].action, "demote");
+    assert_eq!(demote[0].from, key16);
+    let key4 = demote[0].to.clone();
+    assert!(key4.ends_with("fp:4:b64"), "{demote:?}");
+    let holder = fleet
+        .topology()
+        .snapshot()
+        .iter()
+        .find(|w| w.resident.contains(&key4))
+        .expect("demote target must be pre-warmed before cutover")
+        .id;
+    assert_eq!(holder, demote[0].worker, "roster must record the pre-warm");
+
+    // Bare-keyed traffic now resolves to the demoted variant —
+    // bit-identical to scoring the explicit key on the pre-warmed worker,
+    // because the migration was an ordinary keyed load replay.
+    let mut conn = FleetConn::new(&fleet);
+    let bare = format!(r#"{{"op":"score","model":"gpt2like_t0","rows":{ROWS}}}"#);
+    let routed = conn.handle(&Json::parse(&bare).unwrap());
+    assert!(routed.opt("error").is_none(), "{routed:?}");
+    let holder_addr = [&addr_a, &addr_b][holder];
+    let (mut dr, mut dw) = connect(holder_addr);
+    let direct4 =
+        roundtrip(&mut dr, &mut dw, &format!(r#"{{"op":"score","model":"{key4}","rows":{ROWS}}}"#));
+    assert!(direct4.opt("error").is_none(), "{direct4:?}");
+    assert_eq!(
+        routed.get("rows").unwrap().dump(),
+        direct4.get("rows").unwrap().dump(),
+        "a governed demote must not change a single scored bit"
+    );
+    assert_eq!(
+        routed.get("nll").unwrap().as_f64().unwrap(),
+        direct4.get("nll").unwrap().as_f64().unwrap()
+    );
+
+    // t=11s: the pressure samples have aged out of the 10s window and
+    // the fleet measures fast again — but the cooldown still pins the
+    // target. Recovery inside the cooldown must not bounce the model.
+    clock.advance(11_000);
+    for _ in 0..16 {
+        fleet.telemetry().record_router(5.0);
+    }
+    assert!(fleet.govern_tick().is_empty(), "cooldown must block the promote");
+    assert_eq!(fleet.governor().target_for("gpt2like_t0", None).as_deref(), Some(key4.as_str()));
+
+    // t=20.5s: cooldown expired -> promote back up the frontier (the
+    // 16-bit variant is still resident on A, so pre-warm is a no-op).
+    clock.advance(9_500);
+    for _ in 0..16 {
+        fleet.telemetry().record_router(5.0);
+    }
+    let promote = fleet.govern_tick();
+    assert_eq!(promote.len(), 1, "{promote:?}");
+    assert_eq!(promote[0].action, "promote");
+    assert_eq!(promote[0].to, key16);
+    assert_eq!(fleet.governor().target_for("gpt2like_t0", None).as_deref(), Some(key16.as_str()));
+    let routed = conn.handle(&Json::parse(&bare).unwrap());
+    assert!(routed.opt("error").is_none(), "{routed:?}");
+    let (mut dr, mut dw) = connect(&addr_a);
+    let direct16 = roundtrip(
+        &mut dr,
+        &mut dw,
+        &format!(r#"{{"op":"score","model":"{key16}","rows":{ROWS}}}"#),
+    );
+    assert_eq!(
+        routed.get("rows").unwrap().dump(),
+        direct16.get("rows").unwrap().dump(),
+        "promoted routing must match the statically loaded 16-bit variant"
+    );
+
+    // {"op":"governor"} tells the whole story, and consecutive applied
+    // migrations are separated by at least one cooldown: zero flapping.
+    let status = conn.handle(&Json::parse(r#"{"op":"governor"}"#).unwrap());
+    assert!(status.get("enabled").unwrap().as_bool().unwrap(), "{status:?}");
+    let log = status.get("decisions").unwrap().as_arr().unwrap().to_vec();
+    assert_eq!(log.len(), 2, "{status:?}");
+    let at: Vec<usize> =
+        log.iter().map(|d| d.get("at_ms").unwrap().as_usize().unwrap()).collect();
+    assert!(
+        at.windows(2).all(|w| w[1] - w[0] >= 20_000),
+        "two migrations inside one cooldown window: {at:?}"
+    );
+    let router_tel = status.get("telemetry").unwrap().get("router").unwrap().clone();
+    assert!(router_tel.get("count").unwrap().as_usize().unwrap() >= 32, "{status:?}");
+
+    // Live toggle through the op: disabled governors ignore pressure,
+    // re-enabled ones resume governing.
+    let off = conn.handle(&Json::parse(r#"{"op":"governor","disable":true}"#).unwrap());
+    assert!(!off.get("enabled").unwrap().as_bool().unwrap(), "{off:?}");
+    clock.advance(30_000);
+    for _ in 0..16 {
+        fleet.telemetry().record_router(500.0);
+    }
+    assert!(fleet.govern_tick().is_empty(), "disabled governor must not migrate");
+    let on = conn.handle(&Json::parse(r#"{"op":"governor","enable":true}"#).unwrap());
+    assert!(on.get("enabled").unwrap().as_bool().unwrap(), "{on:?}");
+    assert_eq!(fleet.govern_tick().len(), 1, "re-enabled governor resumes governing");
+}
+
+#[test]
+fn class_tagged_scores_resolve_the_class_frontier() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let mut policy = test_policy(manifest.tier("t0").unwrap().param_count);
+    // Latency-sensitive "chat" traffic is pinned to the 4-bit entry.
+    policy.classes.insert("chat".to_string(), vec![policy.entries[0].clone()]);
+
+    let (reg_a, addr_a) = spawn_worker(None, None, None);
+    let key16 =
+        reg_a.load("gpt2like", "t0", QuantSpec::new(DataType::Fp, 16, None)).unwrap().key();
+    let fleet = fleet_for(&[&addr_a], Some(policy));
+    fleet.probe();
+    let mut conn = FleetConn::new(&fleet);
+
+    // Untagged and unknown-class bare scores fall through to the only
+    // resident variant (worker-side resolution), unchanged.
+    let (mut dr, mut dw) = connect(&addr_a);
+    let direct16 = roundtrip(
+        &mut dr,
+        &mut dw,
+        &format!(r#"{{"op":"score","model":"{key16}","rows":{ROWS}}}"#),
+    );
+    let bare = format!(r#"{{"op":"score","model":"gpt2like_t0","rows":{ROWS}}}"#);
+    let untagged = conn.handle(&Json::parse(&bare).unwrap());
+    assert!(untagged.opt("error").is_none(), "{untagged:?}");
+    assert_eq!(untagged.get("rows").unwrap().dump(), direct16.get("rows").unwrap().dump());
+    let unknown = conn.handle(
+        &Json::parse(&format!(
+            r#"{{"op":"score","model":"gpt2like_t0","class":"batch","rows":{ROWS}}}"#
+        ))
+        .unwrap(),
+    );
+    assert!(unknown.opt("error").is_none(), "{unknown:?}");
+    assert_eq!(
+        unknown.get("rows").unwrap().dump(),
+        direct16.get("rows").unwrap().dump(),
+        "a class without a frontier falls back to plain bare-key routing"
+    );
+
+    // A "chat"-tagged score resolves against the class frontier: the
+    // router replays the 4-bit load (load-then-route) and the response
+    // is bit-identical to scoring the explicit key directly.
+    let tagged = conn.handle(
+        &Json::parse(&format!(
+            r#"{{"op":"score","model":"gpt2like_t0","class":"chat","rows":{ROWS}}}"#
+        ))
+        .unwrap(),
+    );
+    assert!(tagged.opt("error").is_none(), "{tagged:?}");
+    let key4 = "gpt2like_t0@fp:4:b64";
+    assert!(
+        fleet.topology().snapshot()[0].resident.contains(key4),
+        "class routing must load the class pick before scoring"
+    );
+    let direct4 =
+        roundtrip(&mut dr, &mut dw, &format!(r#"{{"op":"score","model":"{key4}","rows":{ROWS}}}"#));
+    assert_eq!(
+        tagged.get("rows").unwrap().dump(),
+        direct4.get("rows").unwrap().dump(),
+        "class-frontier routing must be bit-identical to the explicit key"
+    );
+
+    // The fleet stats latency block reflects the routed scoring above,
+    // and per-worker stats carry their own latency block.
+    let stats = conn.handle(&Json::parse(r#"{"op":"stats"}"#).unwrap());
+    let router_lat = stats.get("latency").unwrap().get("router").unwrap();
+    assert!(router_lat.get("count").unwrap().as_usize().unwrap() >= 3, "{stats:?}");
+    let w0 = stats.get("workers").unwrap().as_arr().unwrap()[0].clone();
+    assert!(
+        w0.get("stats").unwrap().opt("latency").is_some(),
+        "worker stats must carry a latency block: {stats:?}"
+    );
+}
+
+#[test]
+fn probe_policy_push_carries_class_frontiers() {
+    let manifest = Manifest::load(std::path::Path::new("artifacts")).unwrap();
+    let mut policy = test_policy(manifest.tier("t0").unwrap().param_count);
+    policy.classes.insert("chat".to_string(), vec![policy.entries[0].clone()]);
+
+    // The worker starts policy-less; the prober's skew-heal push must
+    // deliver the classed policy, not a stripped global frontier.
+    let (reg_b, addr_b) = spawn_worker(None, None, None);
+    let fleet = Fleet::new(
+        &manifest,
+        vec![WorkerSpec::parse(&addr_b).unwrap()],
+        Some(policy.clone()),
+        FleetOpts {
+            io_timeout: Some(Duration::from_secs(10)),
+            probe_interval: Duration::from_secs(60),
+            push_policy: true,
+            ..FleetOpts::default()
+        },
+    );
+    fleet.probe();
+    let healed = reg_b.policy().expect("probe must push the policy to the bare worker");
+    assert_eq!(
+        healed.fingerprint(),
+        policy.fingerprint(),
+        "healed policy must round-trip class frontiers bit-for-bit"
+    );
+    assert_eq!(healed.classes.get("chat").map(Vec::len), Some(1));
+    assert_eq!(healed.classes.get("chat").and_then(|v| v.first()).map(|e| e.bits), Some(4));
 }

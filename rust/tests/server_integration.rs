@@ -909,6 +909,7 @@ fn stats_reports_policy_identity() {
             total_bits: 4.25e5,
             bits_per_param: 4.25,
         }],
+        classes: Default::default(),
     };
     let fp = policy.fingerprint();
     reg.set_policy_sourced(Some(policy), Some("runs/policy.json".into()));

@@ -199,6 +199,7 @@ fn auto_load_serves_the_policy_pick_for_the_budget() {
             entry(4, None, -1.5, 4.25),
             entry(16, None, -1.2, 16.0),
         ],
+        classes: Default::default(),
     };
     // Budget exactly the 4-bit entry's estimated footprint: the frontier
     // pick for this budget is 4-bit (16-bit does not fit, 3-bit is worse).
@@ -279,6 +280,7 @@ fn auto_load_picks_staged_entries_for_sharded_tiers() {
             entry(4, Some(stage_bits.clone()), -1.3, 9.0),
             entry(16, None, -1.2, 16.0),
         ],
+        classes: Default::default(),
     };
     // Budget fits the staged mix but not the full 16-bit baseline: the
     // frontier pick is the per-stage width vector.
@@ -347,6 +349,7 @@ fn tune_and_policy_ops_drive_the_loop_over_the_protocol() {
         suite: "ppl".into(),
         tuned_on: vec!["gpt2like_t0".into()],
         entries: vec![entry(3, None, -2.0, 3.25)],
+        classes: Default::default(),
     };
     let req = Json::obj(vec![("op", Json::str("policy")), ("set", hand.to_json())]);
     let swapped = conn.handle(&req);
@@ -362,6 +365,7 @@ fn tune_and_policy_ops_drive_the_loop_over_the_protocol() {
         suite: "ppl".into(),
         tuned_on: vec![],
         entries: vec![entry(4, None, -1.0, 4.25), entry(8, None, -2.0, 8.25)],
+        classes: Default::default(),
     };
     let req = Json::obj(vec![("op", Json::str("policy")), ("set", bad.to_json())]);
     let err = conn.handle(&req);
